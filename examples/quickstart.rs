@@ -1,0 +1,48 @@
+//! Quickstart: the smallest end-to-end CoPRIS run.
+//!
+//!     make artifacts
+//!     cargo run --release --example quickstart
+//!
+//! Builds the full stack on the `tiny` model: SFT warmup → a few CoPRIS
+//! RL steps (concurrency-controlled partial rollout + cross-stage IS) →
+//! eval on the five held-out suites.
+
+use copris::config::scaled_preset;
+use copris::exp::RlSession;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = scaled_preset("tiny");
+    cfg.rollout.batch_prompts = 4;
+    cfg.rollout.group_size = 4;
+    cfg.rollout.concurrency = 8;
+    cfg.eval.prompts_per_suite = 8;
+    cfg.eval.samples_per_prompt = 2;
+
+    println!("building session (compiles artifacts/tiny via PJRT)...");
+    let mut sess = RlSession::build(cfg)?;
+    sess.verbose = true;
+
+    println!("SFT warmup (the stand-in for a pretrained base model)...");
+    let loss = sess.sft_warmup(40, 2)?;
+    println!("warmup done, sft loss = {loss:.3}");
+
+    println!("5 CoPRIS RL steps...");
+    let summary = sess.train(5)?;
+    println!(
+        "reward curve: {:?}",
+        summary.reward_curve.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+    println!(
+        "throughput {:.2} samples/s, mean utilization {:.0}%",
+        summary.throughput,
+        summary.mean_utilization * 100.0
+    );
+
+    let report = sess.evaluate(2)?;
+    for s in &report.suites {
+        println!("  {:<10} pass@1 {:.3}", s.name, s.pass_at_1);
+    }
+    println!("  {:<10} {:.3}", "AVERAGE", report.average());
+    sess.shutdown();
+    Ok(())
+}

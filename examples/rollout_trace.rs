@@ -1,0 +1,19 @@
+//! Fig-1 style rollout diagnostics: run one synchronous stage and one
+//! CoPRIS stage on real engines and print the long-tail length histogram
+//! plus per-engine utilization traces.
+//!
+//!     cargo run --release --example rollout_trace -- --model small
+
+use anyhow::Result;
+
+use copris::cli::Args;
+use copris::exp::fig1;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let model = args.get("model").unwrap_or("small");
+    let sft = args.get_usize("sft-steps", 60)?;
+    let report = fig1::run(model, sft)?;
+    println!("{}", fig1::render(&report));
+    Ok(())
+}

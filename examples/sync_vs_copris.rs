@@ -1,0 +1,47 @@
+//! Head-to-head: veRL-style synchronous RL vs CoPRIS on identical settings
+//! (a compact Table-1-shaped comparison with one command).
+//!
+//!     cargo run --release --example sync_vs_copris -- \
+//!         --model small --rl-steps 12 --sft-steps 80
+
+use anyhow::Result;
+
+use copris::bench::render_table;
+use copris::cli::Args;
+use copris::config::RolloutMode;
+use copris::exp::common::{arm_config, run_arm};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let model = args.get("model").unwrap_or("small").to_string();
+    let rl_steps = args.get_usize("rl-steps", 12)?;
+    let sft_steps = args.get_usize("sft-steps", 80)?;
+
+    println!("== sync vs CoPRIS: model={model}, {rl_steps} RL steps each ==");
+    println!("-- arm 1/2: veRL (sync) --");
+    let sync = run_arm(arm_config(&model, RolloutMode::Sync, 7), sft_steps, rl_steps, true)?;
+    println!("-- arm 2/2: CoPRIS --");
+    let cop = run_arm(arm_config(&model, RolloutMode::Copris, 7), sft_steps, rl_steps, true)?;
+
+    let headers = ["arm", "avg pass@1", "train s", "samples/s", "util %", "speedup"];
+    let rows = vec![
+        vec![
+            "veRL (sync)".to_string(),
+            format!("{:.3}", sync.average),
+            format!("{:.1}", sync.summary.wall),
+            format!("{:.2}", sync.summary.throughput),
+            format!("{:.0}", sync.summary.mean_utilization * 100.0),
+            "1.00x".to_string(),
+        ],
+        vec![
+            "CoPRIS".to_string(),
+            format!("{:.3}", cop.average),
+            format!("{:.1}", cop.summary.wall),
+            format!("{:.2}", cop.summary.throughput),
+            format!("{:.0}", cop.summary.mean_utilization * 100.0),
+            format!("{:.2}x", sync.summary.wall / cop.summary.wall.max(1e-9)),
+        ],
+    ];
+    println!("{}", render_table(&headers, &rows));
+    Ok(())
+}

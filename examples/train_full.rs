@@ -1,0 +1,114 @@
+//! End-to-end training driver (the EXPERIMENTS.md §E2E run): SFT warmup of
+//! a transformer from scratch (loss curve) followed by a full CoPRIS RL
+//! phase (reward curve), with per-step JSONL metrics.
+//!
+//!     cargo run --release --example train_full -- \
+//!         --model small --sft-steps 300 --rl-steps 60 \
+//!         --metrics runs/train_full.jsonl
+//!
+//! `--model large` / `--model xl` (after `make artifacts-all` /
+//! `artifacts-xl`) scale the same driver up to the ~100M-param showcase.
+
+use anyhow::Result;
+
+use copris::cli::Args;
+use copris::config::scaled_preset;
+use copris::exp::RlSession;
+use copris::trainer::MetricsLog;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["verbose", "no-eval"])?;
+    let model = args.get("model").unwrap_or("small").to_string();
+    let sft_steps = args.get_usize("sft-steps", 200)?;
+    let rl_steps = args.get_usize("rl-steps", 40)?;
+    let seed = args.get_u64("seed", 7)?;
+
+    let mut cfg = scaled_preset(&model);
+    cfg.train.seed = seed;
+    if let Some(c) = args.get("concurrency") {
+        cfg.rollout.concurrency = c.parse()?;
+    }
+    println!(
+        "== train_full: model={model} sft={sft_steps} rl={rl_steps} N'={} B={} G={} ==",
+        cfg.rollout.concurrency, cfg.rollout.batch_prompts, cfg.rollout.group_size
+    );
+
+    let mut sess = RlSession::build(cfg)?;
+    sess.verbose = true;
+    if let Some(path) = args.get("metrics") {
+        sess.log = MetricsLog::to_file(std::path::Path::new(path))?;
+    }
+
+    // Phase 1: supervised warmup — the "pretraining" loss curve.
+    println!("-- phase 1: SFT ({sft_steps} steps) --");
+    let t0 = std::time::Instant::now();
+    let mut ds = copris::tasks::Dataset::sft(seed);
+    let mut sft_curve = Vec::new();
+    for s in 0..sft_steps {
+        let mut sft = copris::trainer::SftTrainer::new(
+            &mut sess.trainer.rt,
+            &mut sess.trainer.state,
+            (sess.trainer.cfg.train.lr * 3.0) as f32,
+        );
+        let m = sft.step(&mut ds, 2)?;
+        sft_curve.push(m.loss);
+        if s % 20 == 0 || s + 1 == sft_steps {
+            println!("[sft {s:>4}] loss {:.4}", m.loss);
+        }
+    }
+    println!("sft wall: {:.1}s", t0.elapsed().as_secs_f64());
+    // Push warmed weights to the engines (version == optimizer step).
+    let params = sess.trainer.params()?;
+    let version = sess.trainer.step() as u64;
+    sess.coord.sync_weights(version, params);
+
+    if !args.flag("no-eval") {
+        println!("-- basemodel eval --");
+        let base = sess.evaluate(1)?;
+        for s in &base.suites {
+            println!("  {:<10} pass@1 {:.3}", s.name, s.pass_at_1);
+        }
+        println!("  {:<10} {:.3}", "AVERAGE", base.average());
+    }
+
+    // Phase 2: CoPRIS RL.
+    println!("-- phase 2: CoPRIS RL ({rl_steps} steps) --");
+    let summary = sess.train(rl_steps)?;
+    println!(
+        "rl wall {:.1}s  throughput {:.2} samples/s  util {:.0}%  preempt {}  replayed {}",
+        summary.wall,
+        summary.throughput,
+        summary.mean_utilization * 100.0,
+        summary.preemptions,
+        summary.replayed_tokens
+    );
+    println!(
+        "stage totals: rollout {:.1}s  cal_logprob {:.1}s  train {:.1}s  sync {:.1}s",
+        summary.rollout_secs, summary.cal_logprob_secs, summary.train_secs, summary.sync_secs
+    );
+
+    // Loss / reward curves for the record.
+    let show = |name: &str, xs: &[f64]| {
+        let pts: Vec<String> = xs
+            .iter()
+            .enumerate()
+            .step_by((xs.len() / 12).max(1))
+            .map(|(i, v)| format!("{i}:{v:.3}"))
+            .collect();
+        println!("{name}: {}", pts.join("  "));
+    };
+    show("sft loss curve", &sft_curve);
+    show("rl reward curve", &summary.reward_curve);
+    show("rl entropy curve", &summary.entropy_curve);
+
+    if !args.flag("no-eval") {
+        println!("-- final eval --");
+        let report = sess.evaluate(2)?;
+        for s in &report.suites {
+            println!("  {:<10} pass@1 {:.3}", s.name, s.pass_at_1);
+        }
+        println!("  {:<10} {:.3}", "AVERAGE", report.average());
+    }
+    sess.shutdown();
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT exporter: lower every L2 function to HLO **text** artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``python/``):
+    python -m compile.aot --out ../artifacts --size tiny --size small
+    python -m compile.aot --out ../artifacts --size small \
+        --override max_seq=256 --tag t256      # Fig-3 context sweep variant
+
+Each variant directory gets ``manifest.json`` (shapes the rust runtime needs)
+plus one ``<fn>.hlo.txt`` per artifact function.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .spec import SPECS, ModelSpec, variant
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: every artifact has exactly ONE flat-array output
+    # (see model.py "artifact wrappers"), so the entry root is the array
+    # itself and PJRT hands the rust side a plain buffer it can feed back
+    # into the next call (device-resident state threading).
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_fns(spec: ModelSpec):
+    """(name, fn, example-arg shapes) for every artifact of one variant.
+
+    All artifacts use the single-flat-output wrappers (model.py): train
+    state f32[3N], engine state f32[S·V+KVN], grad f32[N+8].
+    """
+    n = spec.n_params
+    sn, es = 3 * n, model.engine_state_elems(spec)
+    gn = n + model.N_METRICS
+    s, pmax, t, bm = spec.slots, spec.p_max, spec.t_train, spec.b_micro
+
+    def sd(shape, dtype=F32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    return [
+        ("init", functools.partial(model.init_state, spec), (sd((1,), I32),)),
+        (
+            "prefill",
+            functools.partial(model.prefill_artifact, spec),
+            (sd((n,)), sd((es,)), sd((pmax,), I32), sd((1,), I32), sd((1,), I32)),
+        ),
+        (
+            "decode",
+            functools.partial(model.decode_artifact, spec),
+            (sd((n,)), sd((es,)), sd((s,), I32), sd((s,), I32)),
+        ),
+        (
+            "replay",
+            functools.partial(model.replay_artifact, spec),
+            (sd((n,)), sd((es,)), sd((pmax,), I32), sd((1,), I32), sd((1,), I32), sd((1,), I32)),
+        ),
+        (
+            "logprob",
+            functools.partial(model.logprob_artifact, spec),
+            (sd((sn,)), sd((bm, t), I32)),
+        ),
+        (
+            "grad",
+            functools.partial(model.grad_artifact, spec),
+            (sd((sn,)), sd((bm, t), I32), sd((bm, t - 1)), sd((bm, t - 1)), sd((bm,))),
+        ),
+        (
+            "sft_grad",
+            functools.partial(model.sft_grad_artifact, spec),
+            (sd((sn,)), sd((bm, t), I32), sd((bm, t - 1))),
+        ),
+        (
+            "update",
+            functools.partial(model.update_artifact, spec),
+            (sd((sn,)), sd((gn,)), sd((1,), I32), sd((1,)), sd((1,))),
+        ),
+        ("accum", model.accum, (sd((gn,)), sd((gn,)), sd((1,)))),
+        ("read_header", functools.partial(model.read_header, spec), (sd((es,)),)),
+        ("read_metrics", functools.partial(model.read_metrics, spec), (sd((gn,)),)),
+        ("read_params", functools.partial(model.read_params, spec), (sd((sn,)),)),
+    ]
+
+
+def export_variant(spec: ModelSpec, out_root: str, only=None, force=False):
+    outdir = os.path.join(out_root, spec.name)
+    os.makedirs(outdir, exist_ok=True)
+    manifest = dataclasses.asdict(spec)
+    manifest.update(
+        n_params=spec.n_params,
+        kv_elems=spec.kv_elems,
+        d_head=spec.d_head,
+        t_train=spec.t_train,
+        kv_shape=list(spec.kv_shape()),
+        state_elems=3 * spec.n_params,
+        engine_state_elems=model.engine_state_elems(spec),
+        grad_elems=spec.n_params + model.N_METRICS,
+        n_metrics=model.N_METRICS,
+        artifacts={},
+    )
+    for name, fn, args in _spec_fns(spec):
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        manifest["artifacts"][name] = os.path.basename(path)
+        if only and name not in only:
+            continue
+        if os.path.exists(path) and not force:
+            print(f"  [skip] {spec.name}/{name} (exists)")
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [ok] {spec.name}/{name}: {len(text)} chars")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return outdir
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    return k, int(v)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--size", action="append", default=[],
+                    help="preset name (tiny/small/base/large/xl); repeatable")
+    ap.add_argument("--override", action="append", default=[],
+                    help="spec field override key=int (applied to every --size)")
+    ap.add_argument("--tag", default=None,
+                    help="variant name suffix: artifacts land in <size>@<tag>/")
+    ap.add_argument("--only", action="append", default=[],
+                    help="export only these artifact fns")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    sizes = args.size or ["tiny", "small"]
+    overrides = dict(parse_override(kv) for kv in args.override)
+    for size in sizes:
+        if overrides:
+            name = f"{size}@{args.tag}" if args.tag else None
+            spec = variant(size, **({"name": name} if name else {}), **overrides)
+        else:
+            spec = SPECS[size]
+        print(f"[aot] exporting {spec.name} (n_params={spec.n_params:,})")
+        export_variant(spec, args.out, only=set(args.only) or None, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: single-query decode attention over a KV cache.
+
+This is the TPU rethink of vLLM's paged-attention decode kernel (DESIGN.md
+§Hardware-Adaptation): each grid cell handles one (slot, head) pair, streams
+the slot's cached keys/values in ``block_k`` chunks through VMEM, applies a
+*length mask* (``position < length``) instead of CUDA's per-page indirection,
+and keeps the online-softmax state in registers. Invalid slots (length 0)
+produce zeros.
+
+Shapes: q ``[S, H, D]`` (one new token per slot), k/v cache
+``[S, H, Tmax, D]``, lengths ``[S]`` (valid cache entries per slot,
+including the current token's k/v which the caller has already written).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, sm_scale, block_k):
+    d = q_ref.shape[1]
+    q = q_ref[0].astype(jnp.float32)  # [d]
+    length = len_ref[0]
+
+    nk = lax.div(length + block_k - 1, block_k)
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        col0 = j * block_k
+        kblk = k_ref[0, pl.dslice(col0, block_k), :].astype(jnp.float32)
+        vblk = v_ref[0, pl.dslice(col0, block_k), :].astype(jnp.float32)
+        s = (kblk @ q) * sm_scale  # [bk]
+        col = col0 + lax.iota(jnp.int32, block_k)
+        s = jnp.where(col < length, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_cur = l_prev * alpha + p.sum()
+        acc = acc * alpha + p @ vblk
+        return m_cur, l_cur, acc
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    _, l, acc = lax.fori_loop(0, nk, body, (m0, l0, acc0))
+
+    l_safe = jnp.where(l > 0.0, l, 1.0)
+    o_ref[0] = (acc / l_safe).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     block_k: int = DEFAULT_BLOCK_K):
+    """Masked single-query attention: out ``[S, H, D]``.
+
+    ``lengths[s]`` is the number of valid cache positions for slot ``s``;
+    slots with length 0 return zeros (inactive slots).
+    """
+    s, h, tmax, d = k_cache.shape
+    assert q.shape == (s, h, d), (q.shape, (s, h, d))
+    block_k = max(1, min(block_k, tmax))
+    tp = tmax + (-tmax) % block_k
+    sm_scale = 1.0 / math.sqrt(d)
+
+    qf = q.reshape(s * h, d)
+    kf = k_cache.reshape(s * h, tmax, d)
+    vf = v_cache.reshape(s * h, tmax, d)
+    if tp != tmax:
+        kf = jnp.pad(kf, ((0, 0), (0, tp - tmax), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, tp - tmax), (0, 0)))
+    lens = jnp.repeat(lengths.astype(jnp.int32), h)  # [S*H]
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, sm_scale=sm_scale, block_k=block_k),
+        grid=(s * h,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, tp, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tp, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s * h, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf, lens)
+    return out.reshape(s, h, d)

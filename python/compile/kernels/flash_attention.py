@@ -1,0 +1,271 @@
+"""L1 Pallas kernel: causal flash attention, forward + custom-VJP backward.
+
+TPU-style adaptation of the paper's GPU hot path (see DESIGN.md
+§Hardware-Adaptation): the HBM<->VMEM schedule is expressed with BlockSpecs
+(queries blocked by ``block_q``; keys/values streamed in ``block_k`` chunks
+inside the kernel), online-softmax accumulators are carried in registers/VMEM,
+and the inner products are MXU-shaped ``(block_q, d) @ (d, block_k)`` matmuls.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the identical schedule to plain HLO,
+so the artifact stays executable from the rust runtime.
+
+Shapes: q, k, v are ``[B, H, T, D]``; the wrapper collapses (B, H) into one
+grid axis. All softmax math is f32 regardless of input dtype.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 is the MXU-native dimension; clamped to the
+# sequence length by the wrapper for short sequences.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+NEG_INF = -1e30
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, sm_scale, block_k):
+    """One (bh, q-block) grid cell: stream KV blocks with online softmax."""
+    qi = pl.program_id(1)
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32)  # [bq, d]
+
+    q_offset = qi * block_q
+    row = q_offset + lax.iota(jnp.int32, block_q)  # global query rows
+
+    # Causal: only KV blocks whose first column <= last row of this q block.
+    nk = lax.div(q_offset + block_q + block_k - 1, block_k)
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        col0 = j * block_k
+        kblk = k_ref[0, pl.dslice(col0, block_k), :].astype(jnp.float32)
+        vblk = v_ref[0, pl.dslice(col0, block_k), :].astype(jnp.float32)
+        s = (q @ kblk.T) * sm_scale  # [bq, bk]
+        col = col0 + lax.iota(jnp.int32, block_k)
+        s = jnp.where(row[:, None] >= col[None, :], s, NEG_INF)
+
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ vblk
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = lax.fori_loop(0, nk, body, (m0, l0, acc0))
+
+    l_safe = jnp.where(l > 0.0, l, 1.0)
+    o_ref[0] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = m + jnp.log(l_safe)
+
+
+def _fwd(q, k, v, *, sm_scale, block_q, block_k):
+    bh, t, d = q.shape
+    grid = (bh, _ceil_div(t, block_q))
+    out_shapes = (
+        jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        jax.ShapeDtypeStruct((bh, t), jnp.float32),
+    )
+    kernel = functools.partial(_fwd_kernel, sm_scale=sm_scale, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# backward: dq over q blocks, (dk, dv) over kv blocks
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, sm_scale, block_k
+):
+    qi = pl.program_id(1)
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+
+    q_offset = qi * block_q
+    row = q_offset + lax.iota(jnp.int32, block_q)
+    nk = lax.div(q_offset + block_q + block_k - 1, block_k)
+
+    def body(j, dq):
+        col0 = j * block_k
+        kblk = k_ref[0, pl.dslice(col0, block_k), :].astype(jnp.float32)
+        vblk = v_ref[0, pl.dslice(col0, block_k), :].astype(jnp.float32)
+        s = (q @ kblk.T) * sm_scale
+        col = col0 + lax.iota(jnp.int32, block_k)
+        mask = row[:, None] >= col[None, :]
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)  # [bq, bk]
+        dp = do @ vblk.T  # [bq, bk]
+        ds = p * (dp - delta[:, None])
+        return dq + (ds @ kblk) * sm_scale
+
+    dq = lax.fori_loop(0, nk, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    *, sm_scale, block_q, t,
+):
+    ki = pl.program_id(1)
+    block_k, d = k_ref.shape[1], k_ref.shape[2]
+    kblk = k_ref[0].astype(jnp.float32)
+    vblk = v_ref[0].astype(jnp.float32)
+
+    col0 = ki * block_k
+    col = col0 + lax.iota(jnp.int32, block_k)
+    nq_total = _ceil_div(t, block_q)
+    # Causal: q blocks strictly before this kv block contribute nothing.
+    j0 = lax.div(col0, block_q)
+
+    def body(j, carry):
+        dk, dv = carry
+        row0 = j * block_q
+        qblk = q_ref[0, pl.dslice(row0, block_q), :].astype(jnp.float32)
+        doblk = do_ref[0, pl.dslice(row0, block_q), :].astype(jnp.float32)
+        lse = lse_ref[0, pl.dslice(row0, block_q)]
+        delta = delta_ref[0, pl.dslice(row0, block_q)]
+        row = row0 + lax.iota(jnp.int32, block_q)
+        s = (qblk @ kblk.T) * sm_scale  # [bq, bk]
+        mask = row[:, None] >= col[None, :]
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = doblk @ vblk.T
+        ds = p * (dp - delta[:, None])
+        dv = dv + p.T @ doblk
+        dk = dk + (ds.T @ qblk) * sm_scale
+        return dk, dv
+
+    z = jnp.zeros((block_k, d), jnp.float32)
+    dk, dv = lax.fori_loop(j0, nq_total, body, (z, z))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(sm_scale, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    bh, t, d = q.shape
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, sm_scale=sm_scale, block_k=block_k),
+        grid=(bh, _ceil_div(t, block_q)),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, sm_scale=sm_scale, block_q=block_q, t=t),
+        grid=(bh, _ceil_div(t, block_k)),
+        in_specs=[
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, t), lambda b, i: (b, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_k, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i: (b, i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bh, t, d), k.dtype),
+            jax.ShapeDtypeStruct((bh, t, d), v.dtype),
+        ),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_bhtd(q, k, v, sm_scale, block_q, block_k):
+    o, _ = _fwd(q, k, v, sm_scale=sm_scale, block_q=block_q, block_k=block_k)
+    return o
+
+
+def _flash_bhtd_fwd(q, k, v, sm_scale, block_q, block_k):
+    o, lse = _fwd(q, k, v, sm_scale=sm_scale, block_q=block_q, block_k=block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bhtd_bwd(sm_scale, block_q, block_k, res, do):
+    return _bwd(sm_scale, block_q, block_k, res, do)
+
+
+_flash_bhtd.defvjp(_flash_bhtd_fwd, _flash_bhtd_bwd)
+
+
+def flash_attention(q, k, v, *, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K):
+    """Causal flash attention over ``[B, H, T, D]`` tensors.
+
+    Differentiable (custom VJP; backward is also a pair of Pallas kernels).
+    Block sizes are clamped to the sequence length and to multiples that
+    divide it (the wrapper pads T to a block multiple when needed).
+    """
+    b, h, t, d = q.shape
+    block_q = max(1, min(block_q, t))
+    block_k = max(1, min(block_k, t))
+    pad = (-t) % block_q
+    pad = max(pad, (-t) % block_k)
+    # Pad to a common multiple of both blocks for simple grids.
+    tp = t + (-t) % math.lcm(block_q, block_k) if pad else t
+    sm_scale = 1.0 / math.sqrt(d)
+
+    def collapse(x, tpad):
+        x = x.reshape(b * h, t, d)
+        if tpad != t:
+            x = jnp.pad(x, ((0, 0), (0, tpad - t), (0, 0)))
+        return x
+
+    o = _flash_bhtd(collapse(q, tp), collapse(k, tp), collapse(v, tp),
+                    sm_scale, block_q, block_k)
+    return o[:, :t, :].reshape(b, h, t, d)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its oracle here to numerical
+tolerance; ``python/tests/test_kernels.py`` sweeps shapes/dtypes with
+hypothesis and asserts allclose.
+"""
+
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v):
+    """Reference causal attention for ``[B, H, T, D]`` tensors (f32 math)."""
+    b, h, t, d = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Reference masked single-query attention.
+
+    q [S,H,D]; caches [S,H,Tmax,D]; lengths [S]. Slots with length 0 → 0.
+    """
+    s, h, tmax, d = k_cache.shape
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("shd,shtd->sht", qf, kf) / jnp.sqrt(jnp.float32(d))
+    pos = jnp.arange(tmax)
+    mask = pos[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p * mask
+    denom = p.sum(axis=-1, keepdims=True)
+    denom = jnp.where(denom > 0, denom, 1.0)
+    p = p / denom
+    return jnp.einsum("sht,shtd->shd", p, vf).astype(q.dtype)
+
+
+def token_logprob_entropy_ref(logits, labels):
+    """Reference fused log-prob + entropy. logits [R,V]; labels [R]."""
+    x = logits.astype(jnp.float32)
+    m = x.max(axis=-1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.exp(x - m).sum(axis=-1))
+    p = jnp.exp(x - lse[:, None])
+    ent = lse - (p * x).sum(axis=-1)
+    lp = jnp.take_along_axis(x, labels[:, None].astype(jnp.int32), axis=-1)[:, 0] - lse
+    return lp, ent

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: fused token log-prob + entropy from logits.
+
+Used by the ``logprob`` artifact (the veRL-style "cal logprob" stage): for
+each position it computes, in one pass over the vocab tile,
+
+  lp[b, t]  = log softmax(logits[b, t])[labels[b, t]]
+  ent[b, t] = H(softmax(logits[b, t]))
+
+Fusing the three reductions (max, logsumexp, p·logit sum) avoids three
+separate HLO reduce passes over the logits. Inference-only (no VJP) — the
+training path differentiates through the pure-jnp reference instead.
+
+Shapes: logits ``[R, V]`` (rows = flattened B*T), labels ``[R]`` int32.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(logits_ref, labels_ref, lp_ref, ent_ref):
+    x = logits_ref[0].astype(jnp.float32)  # [V]
+    label = labels_ref[0]
+    m = x.max()
+    e = jnp.exp(x - m)
+    z = e.sum()
+    lse = m + jnp.log(z)
+    p = e / z
+    # entropy = lse - E_p[x]
+    ent_ref[0] = lse - (p * x).sum()
+    lp_ref[0] = x[label] - lse
+
+
+def token_logprob_entropy(logits, labels, *, block_rows: int = 8):
+    """Per-row token log-prob and entropy.
+
+    ``logits``: [R, V] f32; ``labels``: [R] int32 → (lp [R], ent [R]).
+    """
+    r, v = logits.shape
+    del block_rows  # one row per grid cell keeps the VMEM tile = one vocab row
+    lp, ent = pl.pallas_call(
+        _kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, v), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+        ),
+        interpret=True,
+    )(logits, labels.astype(jnp.int32))
+    return lp, ent

@@ -1,0 +1,529 @@
+"""L2: the JAX model + GRPO training math, built over a FLAT parameter vector.
+
+Everything here is traced once by ``aot.py`` and lowered to HLO text; at
+runtime the rust coordinator only sees opaque artifacts with the signatures
+documented in DESIGN.md. Params, Adam moments and gradients are each a single
+f32[N] vector so the rust side manages exactly four device buffers;
+un-flattening happens inside the traced functions (free after XLA fusion).
+
+Architecture: pre-RMSNorm GPT — token + learned positional embeddings,
+causal flash attention (L1 Pallas kernel), GELU MLP, tied LM head.
+"""
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.decode_attention import decode_attention
+from .kernels.flash_attention import flash_attention
+from .kernels.ref import causal_attention_ref
+from .kernels.softmax_xent import token_logprob_entropy
+from .spec import ModelSpec
+
+# GRPO-clip hyperparameters (paper Table 3: clip ratio low 0.2 / high 0.28).
+CLIP_LOW = 0.2
+CLIP_HIGH = 0.28
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.01
+
+
+class Params(NamedTuple):
+    """Structured view over the flat vector (names match spec.param_shapes)."""
+
+    tensors: dict
+
+
+def unflatten(spec: ModelSpec, flat):
+    out = {}
+    off = 0
+    for name, shape in spec.param_shapes():
+        n = math.prod(shape)
+        out[name] = lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        off += n
+    return Params(out)
+
+
+def flatten_tree(spec: ModelSpec, tensors: dict):
+    parts = [tensors[name].reshape(-1) for name, _ in spec.param_shapes()]
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec: ModelSpec, seed):
+    """Deterministic init → flat f32[N]. ``seed`` is an i32[1] array."""
+    key = jax.random.PRNGKey(seed[0])
+    tensors = {}
+    resid_scale = 0.02 / math.sqrt(2.0 * spec.n_layers)
+    for i, (name, shape) in enumerate(spec.param_shapes()):
+        sub = jax.random.fold_in(key, i)
+        base = name.split(".")[-1]
+        if base in ("ln1", "ln2", "lnf"):
+            tensors[name] = jnp.ones(shape, jnp.float32)
+        elif base in ("b1", "b2"):
+            tensors[name] = jnp.zeros(shape, jnp.float32)
+        elif base in ("wo", "w2"):
+            tensors[name] = jax.random.normal(sub, shape, jnp.float32) * resid_scale
+        else:
+            tensors[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+    return flatten_tree(spec, tensors)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def forward(spec: ModelSpec, params: Params, tokens, *, collect_kv=False,
+            use_pallas=True):
+    """Causal LM forward. tokens i32[B, T] → logits f32[B, T, V].
+
+    ``collect_kv`` additionally returns per-layer (k, v) as [B, H, T, Dh]
+    (used by prefill to populate the cache). ``use_pallas=False`` swaps the
+    attention kernel for the jnp oracle (A/B in tests and perf ablation).
+    """
+    p = params.tensors
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t, :]
+    kvs = []
+    attn = flash_attention if use_pallas else causal_attention_ref
+    for i in range(spec.n_layers):
+        pre = f"layer{i}."
+        xn = _rmsnorm(x, p[pre + "ln1"])
+        q = _split_heads(xn @ p[pre + "wq"], spec.n_heads)
+        k = _split_heads(xn @ p[pre + "wk"], spec.n_heads)
+        v = _split_heads(xn @ p[pre + "wv"], spec.n_heads)
+        o = attn(q, k, v)
+        x = x + _merge_heads(o) @ p[pre + "wo"]
+        if collect_kv:
+            kvs.append((k, v))
+        xn = _rmsnorm(x, p[pre + "ln2"])
+        h = jax.nn.gelu(xn @ p[pre + "w1"] + p[pre + "b1"])
+        x = x + (h @ p[pre + "w2"] + p[pre + "b2"])
+    x = _rmsnorm(x, p["lnf"])
+    logits = x @ p["tok_emb"].T
+    if collect_kv:
+        return logits, kvs
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode (the rollout path)
+# ---------------------------------------------------------------------------
+
+
+def prefill(spec: ModelSpec, flat_params, kv_flat, tokens, length, slot):
+    """Prefill one slot's prompt into the KV cache.
+
+    tokens i32[Pmax]; length i32[1] (valid prompt tokens); slot i32[1].
+    Returns (kv_flat', last_logits f32[V]) where last_logits correspond to
+    position ``length - 1`` (the next-token distribution for sampling).
+    KV beyond ``length`` is garbage; decode masks by position < length.
+    """
+    params = unflatten(spec, flat_params)
+    logits, kvs = forward(spec, params, tokens[None, :], collect_kv=True)
+    kv = kv_flat.reshape(spec.kv_shape())
+    s = slot[0]
+    pmax = tokens.shape[0]
+    for i, (k, v) in enumerate(kvs):
+        # k, v: [1, H, Pmax, Dh] → write into kv[i, 0/1, s, :, :Pmax, :]
+        upd_k = k[0][None, None, None]  # [1,1,1,H,Pmax,Dh]
+        upd_v = v[0][None, None, None]
+        kv = lax.dynamic_update_slice(kv, upd_k, (i, 0, s, 0, 0, 0))
+        kv = lax.dynamic_update_slice(kv, upd_v, (i, 1, s, 0, 0, 0))
+    last = lax.dynamic_slice(logits[0], (length[0] - 1, 0), (1, spec.vocab))[0]
+    return kv.reshape(-1), last
+
+
+def decode(spec: ModelSpec, flat_params, kv_flat, tokens, pos):
+    """One decode step for all S slots.
+
+    tokens i32[S] (last sampled token per slot); pos i32[S] (its absolute
+    position). Writes this step's K/V at ``pos`` and attends over
+    ``[0, pos]``. Inactive slots are computed anyway (constant step cost —
+    the GPU idles the same way) and ignored by the caller.
+    Returns (logits f32[S, V], kv_flat').
+    """
+    params = unflatten(spec, flat_params)
+    p = params.tensors
+    s = spec.slots
+    x = p["tok_emb"][tokens] + p["pos_emb"][pos]  # [S, d]
+    kv = kv_flat.reshape(spec.kv_shape())
+    lengths = pos + 1
+
+    def write_slot(cache, vec, pos_s):
+        # cache [H, Tmax, Dh]; vec [H, Dh] → write at [:, pos_s, :]
+        return lax.dynamic_update_slice(cache, vec[:, None, :], (0, pos_s, 0))
+
+    for i in range(spec.n_layers):
+        pre = f"layer{i}."
+        xn = _rmsnorm(x, p[pre + "ln1"])
+        q = (xn @ p[pre + "wq"]).reshape(s, spec.n_heads, spec.d_head)
+        k = (xn @ p[pre + "wk"]).reshape(s, spec.n_heads, spec.d_head)
+        v = (xn @ p[pre + "wv"]).reshape(s, spec.n_heads, spec.d_head)
+        k_cache = jax.vmap(write_slot)(kv[i, 0], k, pos)
+        v_cache = jax.vmap(write_slot)(kv[i, 1], v, pos)
+        kv = kv.at[i, 0].set(k_cache)
+        kv = kv.at[i, 1].set(v_cache)
+        o = decode_attention(q, k_cache, v_cache, lengths)  # [S, H, Dh]
+        x = x + o.reshape(s, spec.d_model) @ p[pre + "wo"]
+        xn = _rmsnorm(x, p[pre + "ln2"])
+        h = jax.nn.gelu(xn @ p[pre + "w1"] + p[pre + "b1"])
+        x = x + (h @ p[pre + "w2"] + p[pre + "b2"])
+    x = _rmsnorm(x, p["lnf"])
+    logits = x @ p["tok_emb"].T
+    return logits, kv.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# log-probs (the "cal logprob" stage) and GRPO gradient
+# ---------------------------------------------------------------------------
+
+
+def _shift_logprobs_jnp(logits, tokens):
+    """Differentiable per-token log-probs: lp[b, t] for predicting
+    tokens[b, t+1] from position t. Returns [B, T-1]."""
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    return jnp.take_along_axis(lp, tokens[:, 1:, None], axis=-1)[..., 0]
+
+
+def logprob(spec: ModelSpec, flat_params, tokens):
+    """Inference-only per-token log-prob + entropy via the fused L1 kernel.
+
+    tokens i32[B, T] → (lp f32[B, T-1], ent f32[B, T-1]).
+    """
+    params = unflatten(spec, flat_params)
+    logits = forward(spec, params, tokens)
+    b, t, v = logits.shape
+    rows = logits[:, :-1, :].reshape(b * (t - 1), v)
+    labels = tokens[:, 1:].reshape(-1)
+    lp, ent = token_logprob_entropy(rows, labels)
+    return lp.reshape(b, t - 1), ent.reshape(b, t - 1)
+
+
+def grpo_objective(spec: ModelSpec, flat_params, tokens, resp_mask, behav_lp, adv):
+    """Sum (not mean) of the per-token GRPO-clip loss, Eq. 2-5 + Eq. 8.
+
+    tokens i32[B, T]; resp_mask f32[B, T-1] (1 on response-token predictions);
+    behav_lp f32[B, T-1] — the *cross-stage concatenated* behaviour log-probs
+    L_i from the rollout buffer; adv f32[B] group-relative advantages.
+
+    Returns (neg_objective_sum, aux). Token-mean aggregation happens at
+    update time (rust divides by the total masked-token count across the
+    whole batch — exact token-mean under gradient accumulation).
+    """
+    params = unflatten(spec, flat_params)
+    logits = forward(spec, params, tokens)
+    lp = _shift_logprobs_jnp(logits, tokens)  # [B, T-1]
+
+    log_ratio = lp - behav_lp
+    ratio = jnp.exp(log_ratio)  # Eq. 8
+    a = adv[:, None]
+    unclipped = ratio * a
+    clipped = jnp.clip(ratio, 1.0 - CLIP_LOW, 1.0 + CLIP_HIGH) * a
+    per_tok = jnp.minimum(unclipped, clipped)  # Eq. 3
+    loss_sum = -(per_tok * resp_mask).sum()
+
+    # Metrics (no gradient): entropy, mean/max ratio, clip fraction, k3-KL.
+    sg = lax.stop_gradient
+    probs = jax.nn.softmax(sg(logits[:, :-1, :]), axis=-1)
+    ent_tok = -(probs * jnp.log(probs + 1e-9)).sum(-1)
+    mask = resp_mask
+    n_tok = mask.sum()
+    r = sg(ratio)
+    clip_hit = (jnp.abs(r - jnp.clip(r, 1.0 - CLIP_LOW, 1.0 + CLIP_HIGH)) > 0).astype(
+        jnp.float32
+    )
+    lr_ = sg(log_ratio)
+    k3 = jnp.exp(-lr_) - 1.0 + lr_
+    aux = jnp.stack(
+        [
+            sg(loss_sum),
+            (ent_tok * mask).sum(),
+            (r * mask).sum(),
+            (r * mask).max(),
+            (clip_hit * mask).sum(),
+            (k3 * mask).sum(),
+            n_tok,
+        ]
+    )
+    return loss_sum, aux
+
+
+def grad(spec: ModelSpec, flat_params, tokens, resp_mask, behav_lp, adv):
+    """GRPO gradient over one microbatch.
+
+    Returns (grads f32[N] — gradient of the token-SUM loss, metrics f32[8]):
+    metrics = [loss_sum, ent_sum, ratio_sum, ratio_max, clip_sum, kl_sum,
+               token_count, grad_norm].
+    """
+    (loss, aux), g = jax.value_and_grad(
+        lambda fp: grpo_objective(spec, fp, tokens, resp_mask, behav_lp, adv),
+        has_aux=True,
+    )(flat_params)
+    gnorm = jnp.sqrt((g * g).sum())
+    metrics = jnp.concatenate([aux, gnorm[None]])
+    return g, metrics
+
+
+def sft_objective(spec: ModelSpec, flat_params, tokens, resp_mask):
+    """Supervised next-token xent (SUM over masked tokens) + aux.
+
+    Used to produce the "basemodel": the paper RL-tunes pretrained LLMs, so
+    we substitute a brief supervised warmup on easy tasks before RL.
+    """
+    params = unflatten(spec, flat_params)
+    logits = forward(spec, params, tokens)
+    lp = _shift_logprobs_jnp(logits, tokens)
+    loss_sum = -(lp * resp_mask).sum()
+    n_tok = resp_mask.sum()
+    return loss_sum, lax.stop_gradient(jnp.stack([loss_sum, n_tok]))
+
+
+def sft_grad(spec: ModelSpec, flat_params, tokens, resp_mask):
+    """SFT gradient over one microbatch → (grads f32[N], metrics f32[3]):
+    [loss_sum, token_count, grad_norm]."""
+    (_, aux), g = jax.value_and_grad(
+        lambda fp: sft_objective(spec, fp, tokens, resp_mask), has_aux=True
+    )(flat_params)
+    gnorm = jnp.sqrt((g * g).sum())
+    return g, jnp.concatenate([aux, gnorm[None]])
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def adam_update(flat_params, m, v, grads, step, lr, grad_scale):
+    """One Adam step with decoupled weight decay (Table 3).
+
+    step i32[1] (1-based); lr f32[1]; grad_scale f32[1] — 1/total_tokens so
+    accumulation + scaling == exact token-mean loss gradient.
+    """
+    g = grads * grad_scale[0]
+    t = step[0].astype(jnp.float32)
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m2 / (1.0 - ADAM_B1**t)
+    vhat = v2 / (1.0 - ADAM_B2**t)
+    upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS) + WEIGHT_DECAY * flat_params
+    return flat_params - lr[0] * upd, m2, v2
+
+
+def accum(a, b, scale):
+    """a + scale·b — device-side gradient accumulation (scale f32[1])."""
+    return a + scale[0] * b
+
+
+# ---------------------------------------------------------------------------
+# artifact wrappers — single flat-array in/out signatures
+# ---------------------------------------------------------------------------
+#
+# PJRT (through the rust `xla` 0.1.6 crate) returns multi-output modules as
+# ONE tuple buffer, which cannot be fed back as an input buffer; threading
+# state through tuples would force full host round-trips of params/KV every
+# step. So every artifact returns a SINGLE flat f32 array:
+#
+#   train state   f32[3N]           = params ++ adam_m ++ adam_v
+#   engine state  f32[S·V + KVN]    = logits header ++ flat KV cache
+#   grad output   f32[N + 8]        = grads ++ metrics tail
+#
+# The rust runtime keeps these as device buffers (`execute_b`) and reads only
+# the tiny headers/tails via offset `copy_raw_to_host_sync`.
+
+N_METRICS = 8  # metrics tail length on grad outputs
+
+
+def state_params(spec: ModelSpec, state):
+    """params slice of the train state f32[3N]."""
+    return lax.dynamic_slice(state, (0,), (spec.n_params,))
+
+
+def init_state(spec: ModelSpec, seed):
+    """seed i32[1] → train state f32[3N] (params, m=0, v=0)."""
+    p = init_params(spec, seed)
+    zeros = jnp.zeros((2 * spec.n_params,), jnp.float32)
+    return jnp.concatenate([p, zeros])
+
+
+def engine_state_elems(spec: ModelSpec) -> int:
+    return spec.slots * spec.vocab + spec.kv_elems
+
+
+def _split_engine_state(spec: ModelSpec, es):
+    header = spec.slots * spec.vocab
+    return es[:header], es[header:]
+
+
+def prefill_artifact(spec: ModelSpec, params, engine_state, tokens, length, slot):
+    """Prefill one slot; logits land in header row `slot`.
+
+    Takes bare params f32[N] (not the 3N train state): the inference
+    engines receive weight syncs of just the parameter vector.
+    """
+    header, kv = _split_engine_state(spec, engine_state)
+    kv2, last = prefill(spec, params, kv, tokens, length, slot)
+    hdr = header.reshape(spec.slots, spec.vocab)
+    hdr = lax.dynamic_update_slice(hdr, last[None, :], (slot[0], 0))
+    return jnp.concatenate([hdr.reshape(-1), kv2])
+
+
+def decode_artifact(spec: ModelSpec, params, engine_state, tokens, pos):
+    """One decode step for all S slots; header = fresh logits [S, V].
+
+    Takes bare params f32[N] — see prefill_artifact.
+    """
+    _, kv = _split_engine_state(spec, engine_state)
+    logits, kv2 = decode(spec, params, kv, tokens, pos)
+    return jnp.concatenate([logits.reshape(-1), kv2])
+
+
+def logprob_artifact(spec: ModelSpec, state, tokens):
+    """tokens i32[B,T] → f32[2, B, T-1]: [0]=log-probs, [1]=entropies."""
+    params = state_params(spec, state)
+    lp, ent = logprob(spec, params, tokens)
+    return jnp.stack([lp, ent])
+
+
+def grad_artifact(spec: ModelSpec, state, tokens, resp_mask, behav_lp, adv):
+    """GRPO microbatch gradient → f32[8+N] = metrics ++ grads.
+
+    Metrics come FIRST so the rust side can read them with a cheap
+    offset-0 partial host copy while the gradient stays on device.
+    """
+    params = state_params(spec, state)
+    g, metrics = grad(spec, params, tokens, resp_mask, behav_lp, adv)
+    return jnp.concatenate([metrics, g])
+
+
+def sft_grad_artifact(spec: ModelSpec, state, tokens, resp_mask):
+    """SFT microbatch gradient → f32[N+8] = grads ++ padded metrics.
+
+    Metrics head: [loss_sum, token_count, grad_norm, 0, 0, 0, 0, 0] — the
+    same head length as `grad_artifact` so `accum`/`update` are shared.
+    """
+    params = state_params(spec, state)
+    g, m3 = sft_grad(spec, params, tokens, resp_mask)
+    pad = jnp.zeros((N_METRICS - 3,), jnp.float32)
+    return jnp.concatenate([m3, pad, g])
+
+
+def replay_artifact(spec: ModelSpec, params, engine_state, tokens, start, slot, last):
+    """Chunked re-prefill: process up to Pmax RESUME tokens of one slot in a
+    single call (vLLM re-prefills preempted/buffered requests in parallel
+    chunks; replaying token-by-token through `decode` costs ~50x more).
+
+    tokens i32[Pmax] (chunk; garbage beyond the real count is harmless — its
+    KV lands at positions ≥ the current length, which decode's length mask
+    never attends); start i32[1] — absolute position of tokens[0]; slot
+    i32[1]. The header row `slot` receives the logits of the LAST chunk
+    position (callers slice the (n-1)-th themselves via a second call with
+    aligned chunks, or simply sample from the final full chunk).
+
+    ``last`` i32[1] — index of the last REAL token in the chunk; the header
+    row `slot` receives the logits after tokens[last] (padded tails of the
+    final chunk would otherwise pollute the sampling logits).
+
+    CALLER CONTRACT: start + Pmax must not exceed max_seq (XLA's
+    dynamic_update_slice clamps out-of-range starts, which would shift the
+    chunk onto valid cache); the rust engine falls back to per-token decode
+    near the horizon.
+    """
+    p = unflatten(spec, params).tensors
+    c = tokens.shape[0]
+    header, kv_flat = _split_engine_state(spec, engine_state)
+    kv = kv_flat.reshape(spec.kv_shape())
+    s = slot[0]
+    positions = start[0] + jnp.arange(c)
+    x = p["tok_emb"][tokens] + p["pos_emb"][jnp.clip(positions, 0, spec.max_seq - 1)]
+    # Per-query visible length: query i attends to cache positions < start+i+1.
+    lengths = positions + 1
+
+    for i in range(spec.n_layers):
+        pre = f"layer{i}."
+        xn = _rmsnorm(x, p[pre + "ln1"])
+        q = (xn @ p[pre + "wq"]).reshape(c, spec.n_heads, spec.d_head)
+        k = (xn @ p[pre + "wk"]).reshape(c, spec.n_heads, spec.d_head)
+        v = (xn @ p[pre + "wv"]).reshape(c, spec.n_heads, spec.d_head)
+        # Write the whole chunk's K/V into the slot cache at [start, start+c).
+        k_slot = lax.dynamic_slice_in_dim(kv[i, 0], s, 1, axis=0)[0]  # [H,T,Dh]
+        v_slot = lax.dynamic_slice_in_dim(kv[i, 1], s, 1, axis=0)[0]
+        k_slot = lax.dynamic_update_slice(
+            k_slot, k.transpose(1, 0, 2), (0, start[0], 0)
+        )
+        v_slot = lax.dynamic_update_slice(
+            v_slot, v.transpose(1, 0, 2), (0, start[0], 0)
+        )
+        kv = lax.dynamic_update_slice(kv, k_slot[None, None, None], (i, 0, s, 0, 0, 0))
+        kv = lax.dynamic_update_slice(kv, v_slot[None, None, None], (i, 1, s, 0, 0, 0))
+        # Chunk queries attend over the slot cache with per-query lengths
+        # (decode-attention kernel, one "slot" per chunk position).
+        kc = jnp.broadcast_to(k_slot[None], (c,) + k_slot.shape)
+        vc = jnp.broadcast_to(v_slot[None], (c,) + v_slot.shape)
+        o = decode_attention(q, kc, vc, lengths)  # [c, H, Dh]
+        x = x + o.reshape(c, spec.d_model) @ p[pre + "wo"]
+        xn = _rmsnorm(x, p[pre + "ln2"])
+        h = jax.nn.gelu(xn @ p[pre + "w1"] + p[pre + "b1"])
+        x = x + (h @ p[pre + "w2"] + p[pre + "b2"])
+    x = _rmsnorm(x, p["lnf"])
+    logits = x @ p["tok_emb"].T  # [c, V]
+    hdr = header.reshape(spec.slots, spec.vocab)
+    last_logits = lax.dynamic_slice(logits, (last[0], 0), (1, spec.vocab))
+    hdr = lax.dynamic_update_slice(hdr, last_logits, (s, 0))
+    return jnp.concatenate([hdr.reshape(-1), kv.reshape(-1)])
+
+
+def read_header(spec: ModelSpec, engine_state):
+    """Extract the logits header f32[S·V] from the engine state.
+
+    PJRT-CPU (xla_extension 0.5.1) does not implement CopyRawToHost, so
+    partial host reads are impossible; instead these tiny `read_*`
+    artifacts slice device-side and return small buffers that are read in
+    full. The KV cache never crosses to the host.
+    """
+    return lax.dynamic_slice(engine_state, (0,), (spec.slots * spec.vocab,))
+
+
+def read_metrics(spec: ModelSpec, grads_with_head):
+    """Extract the metrics head f32[8] from a grad output."""
+    return lax.dynamic_slice(grads_with_head, (0,), (N_METRICS,))
+
+
+def read_params(spec: ModelSpec, state):
+    """Extract params f32[N] from the train state (weight-sync payload)."""
+    return state_params(spec, state)
+
+
+def update_artifact(spec: ModelSpec, state, grads_with_head, step, lr, grad_scale):
+    """Adam step on the packed train state → new state f32[3N]."""
+    n = spec.n_params
+    p = lax.dynamic_slice(state, (0,), (n,))
+    m = lax.dynamic_slice(state, (n,), (n,))
+    v = lax.dynamic_slice(state, (2 * n,), (n,))
+    g = lax.dynamic_slice(grads_with_head, (N_METRICS,), (n,))
+    p2, m2, v2 = adam_update(p, m, v, g, step, lr, grad_scale)
+    return jnp.concatenate([p2, m2, v2])

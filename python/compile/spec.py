@@ -1,0 +1,104 @@
+"""Model/runtime shape specs shared by the L2 model and the AOT exporter.
+
+The same numbers land in ``artifacts/<variant>/manifest.json`` which the rust
+runtime reads, so this file is the single source of truth for shapes.
+"""
+
+import dataclasses
+import math
+
+VOCAB = 48  # char-level math vocab; must match rust/src/tokenizer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Architecture + the fixed runtime shapes baked into the artifacts."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int  # decode horizon == KV capacity == pos-emb table size
+    slots: int  # decode slots per inference engine (S)
+    p_max: int  # max prompt length accepted by prefill
+    b_micro: int  # training microbatch rows
+    # Training row length. Decoupled from the decode horizon: most rollouts
+    # are much shorter than max_seq, so training at max_seq wastes compute
+    # on padding (measured 2.7x on `small`); rows longer than t_train are
+    # truncated (the paper's max-response-length cap plays the same role).
+    t_train: int = 0  # 0 → clamped to max_seq in __post_init__
+    vocab: int = VOCAB
+
+    def __post_init__(self):
+        t = self.t_train if self.t_train > 0 else self.max_seq
+        object.__setattr__(self, "t_train", min(t, self.max_seq))
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_shapes(self):
+        """Ordered (name, shape) list defining the flat parameter layout."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        shapes = [("tok_emb", (v, d)), ("pos_emb", (self.max_seq, d))]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            shapes += [
+                (p + "ln1", (d,)),
+                (p + "wq", (d, d)),
+                (p + "wk", (d, d)),
+                (p + "wv", (d, d)),
+                (p + "wo", (d, d)),
+                (p + "ln2", (d,)),
+                (p + "w1", (d, ff)),
+                (p + "b1", (ff,)),
+                (p + "w2", (ff, d)),
+                (p + "b2", (d,)),
+            ]
+        shapes.append(("lnf", (d,)))
+        return shapes
+
+    @property
+    def n_params(self) -> int:
+        return sum(math.prod(s) for _, s in self.param_shapes())
+
+    @property
+    def kv_elems(self) -> int:
+        """Flat KV cache length: [L, 2, S, H, max_seq, d_head]."""
+        return (
+            self.n_layers * 2 * self.slots * self.n_heads * self.max_seq * self.d_head
+        )
+
+    def kv_shape(self):
+        return (
+            self.n_layers,
+            2,
+            self.slots,
+            self.n_heads,
+            self.max_seq,
+            self.d_head,
+        )
+
+
+# Size presets. Paper models (1.5B/7B/8B/14B on 16-32 GPUs) are substituted
+# by CPU-scale models; the paper's mechanisms are size-independent.
+SPECS = {
+    "tiny": ModelSpec("tiny", 64, 2, 2, 256, max_seq=96, slots=4, p_max=24, b_micro=4),
+    "small": ModelSpec("small", 128, 4, 4, 512, max_seq=192, slots=8, p_max=32, b_micro=8, t_train=96),
+    "base": ModelSpec("base", 256, 6, 8, 1024, max_seq=256, slots=8, p_max=32, b_micro=8, t_train=128),
+    "large": ModelSpec("large", 512, 8, 8, 2048, max_seq=320, slots=8, p_max=32, b_micro=4, t_train=128),
+    "xl": ModelSpec("xl", 768, 12, 12, 3072, max_seq=384, slots=8, p_max=48, b_micro=2, t_train=160),
+}
+
+
+def variant(base: str, **overrides) -> ModelSpec:
+    """Derive a named variant (e.g. context-length sweep points for Fig 3)."""
+    spec = SPECS[base]
+    fields = dataclasses.asdict(spec)
+    fields.update(overrides)
+    if "name" not in overrides:
+        tag = ",".join(f"{k}{v}" for k, v in sorted(overrides.items()))
+        fields["name"] = f"{base}@{tag}"
+    return ModelSpec(**fields)

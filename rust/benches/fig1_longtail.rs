@@ -1,0 +1,17 @@
+//! Regenerates paper Fig. 1: the long-tail problem — response-length
+//! distribution + per-engine utilization dips under synchronous rollout.
+//! Scale via COPRIS_BENCH_MODEL / COPRIS_BENCH_SFT.
+
+use copris::exp::common::{artifacts_available, env_str, env_usize};
+use copris::exp::fig1;
+
+fn main() {
+    let model = env_str("COPRIS_BENCH_MODEL", "small");
+    let sft = env_usize("COPRIS_BENCH_SFT", 60);
+    if !artifacts_available(&model) {
+        eprintln!("fig1: artifacts/{model} missing — run `make artifacts`");
+        return;
+    }
+    let report = fig1::run(&model, sft).expect("fig1 run");
+    println!("{}", fig1::render(&report));
+}

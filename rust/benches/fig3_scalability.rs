@@ -1,0 +1,12 @@
+//! Regenerates paper Fig. 3: CoPRIS vs sync throughput + speedup across
+//! context lengths (requires `make artifacts-fig3`) and model sizes.
+
+use copris::exp::common::env_usize;
+use copris::exp::fig3;
+
+fn main() {
+    let sft = env_usize("COPRIS_BENCH_SFT", 60);
+    let steps = env_usize("COPRIS_BENCH_STEPS", 8);
+    let (ctx, sizes) = fig3::run(sft, steps).expect("fig3 run");
+    println!("{}", fig3::render(&ctx, &sizes));
+}

@@ -1,0 +1,20 @@
+//! Regenerates paper Fig. 4: the Cross-stage Importance Sampling Correction
+//! ablation — w/ IS vs w/o IS eval-score curves at two model scales.
+
+use copris::exp::common::{artifacts_available, env_str, env_usize};
+use copris::exp::fig4;
+
+fn main() {
+    let models_env = env_str("COPRIS_BENCH_MODELS", "tiny,small");
+    let models: Vec<&str> =
+        models_env.split(',').filter(|m| artifacts_available(m)).collect();
+    if models.is_empty() {
+        eprintln!("fig4: no artifacts found — run `make artifacts`");
+        return;
+    }
+    let sft = env_usize("COPRIS_BENCH_SFT", 80);
+    let steps = env_usize("COPRIS_BENCH_STEPS", 16);
+    let eval_every = env_usize("COPRIS_BENCH_EVAL_EVERY", 4);
+    let curves = fig4::run(&models, sft, steps, eval_every).expect("fig4 run");
+    println!("{}", fig4::render(&curves));
+}

@@ -1,0 +1,114 @@
+//! Microbenchmarks of the hot paths (hand-rolled harness; criterion is not
+//! in the vendored crate set): sampler, buffer ops, mock decode, and the
+//! artifact-level prefill/decode/logprob/grad/update ops.
+
+use copris::bench::{fmt_secs, render_table, time_fn};
+use copris::coordinator::PartialBuffer;
+use copris::coordinator::Trajectory;
+use copris::engine::{sample_token, Backend, MockBackend, SamplingParams};
+use copris::exp::common::{artifacts_available, env_str};
+use copris::model::ModelRuntime;
+use copris::tasks::Family;
+use copris::util::Rng;
+
+fn main() {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    // -- L3 pure-coordination paths ------------------------------------
+    let mut rng = Rng::new(1);
+    let logits: Vec<f32> = (0..48).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+    let s = time_fn(100, 2000, || {
+        sample_token(&logits, &SamplingParams::default(), &mut rng)
+    });
+    rows.push(vec!["sampler (48-vocab)".into(), fmt_secs(s.mean), fmt_secs(s.p95)]);
+
+    let task = Family::Countdown.generate(&mut Rng::new(2), 2);
+    let mut buf = PartialBuffer::new(usize::MAX);
+    let mut id = 0u64;
+    let s = time_fn(100, 2000, || {
+        id += 1;
+        let mut t = Trajectory::new(id, id, task.clone(), vec![1, 5, 6], id % 7);
+        t.append_stage(&[5; 24], &[-0.5; 24], id % 7);
+        buf.push(t);
+        if id % 2 == 0 {
+            buf.pop();
+        }
+    });
+    rows.push(vec!["buffer push/pop (24-tok)".into(), fmt_secs(s.mean), fmt_secs(s.p95)]);
+
+    let mut mock = MockBackend::new(8, 192);
+    mock.prefill(0, &[1, 5, 6]).unwrap();
+    let toks = vec![5i32; 8];
+    let pos = vec![3i32; 8];
+    let s = time_fn(100, 2000, || mock.decode(&toks, &pos).unwrap());
+    rows.push(vec!["mock decode step (8 slots)".into(), fmt_secs(s.mean), fmt_secs(s.p95)]);
+
+    // -- artifact-level (needs artifacts) --------------------------------
+    let model = env_str("COPRIS_BENCH_MODEL", "small");
+    if artifacts_available(&model) {
+        let mut rt = ModelRuntime::open("artifacts", &model).expect("open runtime");
+        let spec = rt.spec.clone();
+        let state = rt.init_state(1).unwrap();
+        let params_host = rt.params_to_host(&state).unwrap();
+        let params = rt.upload_params(&params_host).unwrap();
+        let mut es = rt.fresh_engine_state().unwrap();
+        let toks = vec![5i32; spec.slots];
+        let pos: Vec<i32> = (0..spec.slots as i32).map(|i| 10 + i).collect();
+
+        let s = time_fn(3, 30, || {
+            let (es2, _) = rt.decode(&params, &es, &toks, &pos).unwrap();
+            es = es2;
+        });
+        rows.push(vec![
+            format!("xla decode step ({} slots, {})", spec.slots, model),
+            fmt_secs(s.mean),
+            fmt_secs(s.p95),
+        ]);
+
+        let prompt: Vec<i32> = (0..16).map(|i| 4 + i % 10).collect();
+        let s = time_fn(2, 20, || {
+            let (es2, _) = rt.prefill(&params, &es, &prompt, 0).unwrap();
+            es = es2;
+        });
+        rows.push(vec![
+            format!("xla prefill 16-tok ({model})"),
+            fmt_secs(s.mean),
+            fmt_secs(s.p95),
+        ]);
+
+        let (b, t) = (spec.b_micro, spec.t_train);
+        let tokens: Vec<i32> = (0..b * t).map(|i| 4 + (i % 10) as i32).collect();
+        let s = time_fn(2, 10, || rt.logprob(&state, &tokens).unwrap());
+        rows.push(vec![
+            format!("xla logprob [{b},{t}]"),
+            fmt_secs(s.mean),
+            fmt_secs(s.p95),
+        ]);
+
+        let mask = vec![1f32; b * (t - 1)];
+        let behav = vec![-1f32; b * (t - 1)];
+        let adv = vec![0.5f32; b];
+        let s = time_fn(2, 10, || rt.grad(&state, &tokens, &mask, &behav, &adv).unwrap());
+        rows.push(vec![
+            format!("xla grad [{b},{t}]"),
+            fmt_secs(s.mean),
+            fmt_secs(s.p95),
+        ]);
+
+        let (g, _) = rt.grad(&state, &tokens, &mask, &behav, &adv).unwrap();
+        let s = time_fn(2, 20, || rt.update(&state, &g, 1, 1e-4, 1.0).unwrap());
+        rows.push(vec![
+            format!("xla adam update ({} params)", spec.n_params),
+            fmt_secs(s.mean),
+            fmt_secs(s.p95),
+        ]);
+
+        let s = time_fn(2, 20, || rt.params_to_host(&state).unwrap());
+        rows.push(vec!["weight-sync host read".into(), fmt_secs(s.mean), fmt_secs(s.p95)]);
+    } else {
+        eprintln!("micro: artifacts/{model} missing — artifact rows skipped");
+    }
+
+    println!("== microbenchmarks ==");
+    println!("{}", render_table(&["path", "mean", "p95"], &rows));
+}

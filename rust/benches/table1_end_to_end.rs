@@ -1,0 +1,21 @@
+//! Regenerates paper Table 1: Basemodel vs veRL (sync) vs CoPRIS across
+//! model scales — pass@1 on the five suites, RL wall-clock, speedup.
+//! Scale via COPRIS_BENCH_MODELS (comma list) / COPRIS_BENCH_STEPS /
+//! COPRIS_BENCH_SFT.
+
+use copris::exp::common::{artifacts_available, env_str, env_usize};
+use copris::exp::table1;
+
+fn main() {
+    let models_env = env_str("COPRIS_BENCH_MODELS", "small");
+    let models: Vec<&str> =
+        models_env.split(',').filter(|m| artifacts_available(m)).collect();
+    if models.is_empty() {
+        eprintln!("table1: no artifacts found — run `make artifacts`");
+        return;
+    }
+    let sft = env_usize("COPRIS_BENCH_SFT", 80);
+    let steps = env_usize("COPRIS_BENCH_STEPS", 16);
+    let rows = table1::run(&models, sft, steps).expect("table1 run");
+    println!("{}", table1::render(&rows));
+}

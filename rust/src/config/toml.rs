@@ -1,0 +1,116 @@
+//! Minimal TOML-subset parser (sections, scalar key=value, comments).
+//! Enough for config files; arrays/tables-of-tables are out of scope.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Returns (section → [(key, value)]); keys before any `[section]` land in "".
+pub fn parse(text: &str) -> Result<Vec<(String, Vec<(String, TomlValue)>)>> {
+    let mut out: Vec<(String, Vec<(String, TomlValue)>)> = vec![(String::new(), vec![])];
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(section) = line.strip_prefix('[') {
+            let Some(name) = section.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            out.push((name.trim().to_string(), vec![]));
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value", lineno + 1);
+        };
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        out.last_mut().unwrap().1.push((key, val));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        return Ok(TomlValue::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = r#"
+            top = 1
+            [a]
+            x = "hi"     # comment
+            y = 2.5
+            z = true
+            [b]
+            n = -3
+        "#;
+        let parsed = parse(doc).unwrap();
+        assert_eq!(parsed[0].0, "");
+        assert_eq!(parsed[0].1[0], ("top".into(), TomlValue::Int(1)));
+        assert_eq!(parsed[1].0, "a");
+        assert_eq!(parsed[1].1[0], ("x".into(), TomlValue::Str("hi".into())));
+        assert_eq!(parsed[1].1[1], ("y".into(), TomlValue::Float(2.5)));
+        assert_eq!(parsed[1].1[2], ("z".into(), TomlValue::Bool(true)));
+        assert_eq!(parsed[2].1[0], ("n".into(), TomlValue::Int(-3)));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let parsed = parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(parsed[0].1[0].1, TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn scientific_notation_floats() {
+        let parsed = parse("lr = 1e-6").unwrap();
+        assert_eq!(parsed[0].1[0].1, TomlValue::Float(1e-6));
+    }
+}

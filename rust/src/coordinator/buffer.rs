@@ -1,0 +1,130 @@
+//! The partial-trajectory buffer B (Eq. 7) with prioritized resumption:
+//! unfinished trajectories wait here between stages, oldest policy first,
+//! and are re-dispatched before any fresh prompt in the next rollout stage.
+
+use std::collections::VecDeque;
+
+use super::trajectory::Trajectory;
+
+#[derive(Debug, Default)]
+pub struct PartialBuffer {
+    items: VecDeque<Trajectory>,
+    /// Trajectories whose oldest segment lags the current policy by more
+    /// than this many versions are evicted (staleness guard; the paper
+    /// keeps everything — default usize::MAX).
+    pub max_stage_lag: usize,
+}
+
+impl PartialBuffer {
+    pub fn new(max_stage_lag: usize) -> Self {
+        PartialBuffer { items: VecDeque::new(), max_stage_lag }
+    }
+
+    pub fn push(&mut self, traj: Trajectory) {
+        debug_assert!(traj.invariant_ok(), "broken trajectory invariant");
+        debug_assert!(!traj.complete, "complete trajectory does not belong in the buffer");
+        // Keep ordered by born_version (oldest first) for prioritized
+        // resumption; stable within a version.
+        let idx = self
+            .items
+            .iter()
+            .position(|t| t.born_version > traj.born_version)
+            .unwrap_or(self.items.len());
+        self.items.insert(idx, traj);
+    }
+
+    /// Prioritized resumption: pop the most off-policy (oldest) partial.
+    pub fn pop(&mut self) -> Option<Trajectory> {
+        self.items.pop_front()
+    }
+
+    /// Drop partials that exceed the staleness guard at `current_version`,
+    /// returning them (their groups need replacement samples).
+    pub fn evict_stale(&mut self, current_version: u64) -> Vec<Trajectory> {
+        if self.max_stage_lag == usize::MAX {
+            return vec![];
+        }
+        let lag = self.max_stage_lag as u64;
+        let mut evicted = Vec::new();
+        self.items.retain_mut(|t| {
+            let stale = current_version.saturating_sub(t.born_version) > lag;
+            if stale {
+                evicted.push(t.clone());
+            }
+            !stale
+        });
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Total buffered tokens (the re-prefill/recompute debt).
+    pub fn token_count(&self) -> usize {
+        self.items.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Trajectory> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Family;
+    use crate::util::Rng;
+
+    fn traj(id: u64, version: u64, n_tokens: usize) -> Trajectory {
+        let task = Family::Reverse.generate(&mut Rng::new(id), 1);
+        let mut t = Trajectory::new(id, id, task, vec![1, 4], version);
+        if n_tokens > 0 {
+            t.append_stage(&vec![5; n_tokens], &vec![-0.5; n_tokens], version);
+        }
+        t
+    }
+
+    #[test]
+    fn pop_is_oldest_version_first() {
+        let mut b = PartialBuffer::new(usize::MAX);
+        b.push(traj(1, 5, 2));
+        b.push(traj(2, 3, 2));
+        b.push(traj(3, 4, 2));
+        b.push(traj(4, 3, 2));
+        let order: Vec<u64> = std::iter::from_fn(|| b.pop()).map(|t| t.id).collect();
+        assert_eq!(order, vec![2, 4, 3, 1]); // version 3 (FIFO), then 4, 5
+    }
+
+    #[test]
+    fn token_count_sums() {
+        let mut b = PartialBuffer::new(usize::MAX);
+        b.push(traj(1, 1, 3));
+        b.push(traj(2, 1, 5));
+        assert_eq!(b.token_count(), 8);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn evict_stale_respects_lag() {
+        let mut b = PartialBuffer::new(2);
+        b.push(traj(1, 1, 1)); // lag 4 at version 5 → stale
+        b.push(traj(2, 4, 1)); // lag 1 → kept
+        let evicted = b.evict_stale(5);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].id, 1);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn no_eviction_when_unbounded() {
+        let mut b = PartialBuffer::new(usize::MAX);
+        b.push(traj(1, 0, 1));
+        assert!(b.evict_stale(1_000_000).is_empty());
+        assert_eq!(b.len(), 1);
+    }
+}

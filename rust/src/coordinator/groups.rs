@@ -1,0 +1,222 @@
+//! Group bookkeeping: each prompt is sampled G times (GRPO groups). A group
+//! is *complete* when all G trajectories reached a terminal state; early
+//! termination fires when B groups are complete. Completed trajectories of
+//! still-active groups remain here across stages (the second half of Eq. 7).
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::trajectory::Trajectory;
+use crate::tasks::Task;
+
+#[derive(Debug)]
+pub struct Group {
+    pub group_id: u64,
+    pub task: Task,
+    pub target: usize,
+    /// Completed trajectories (≤ target).
+    pub done: Vec<Trajectory>,
+    /// Samples dispatched and not yet failed/abandoned (done + in flight +
+    /// buffered partials).
+    pub dispatched: usize,
+}
+
+impl Group {
+    pub fn is_complete(&self) -> bool {
+        self.done.len() >= self.target
+    }
+
+    /// How many more samples need dispatching.
+    pub fn deficit(&self) -> usize {
+        self.target.saturating_sub(self.dispatched)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct GroupBook {
+    groups: HashMap<u64, Group>,
+    /// Group ids in completion order (drained by take_completed).
+    completed: Vec<u64>,
+    next_id: u64,
+}
+
+impl GroupBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn new_group(&mut self, task: Task, target: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.groups.insert(
+            id,
+            Group { group_id: id, task, target, done: Vec::new(), dispatched: 0 },
+        );
+        id
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Group> {
+        self.groups.get(&id)
+    }
+
+    pub fn note_dispatch(&mut self, group_id: u64) {
+        if let Some(g) = self.groups.get_mut(&group_id) {
+            g.dispatched += 1;
+        }
+    }
+
+    /// A dispatched sample was abandoned before producing any tokens
+    /// (unstarted at early termination) — free the dispatch slot.
+    pub fn note_abandoned(&mut self, group_id: u64) {
+        if let Some(g) = self.groups.get_mut(&group_id) {
+            g.dispatched = g.dispatched.saturating_sub(1);
+        }
+    }
+
+    /// Record a terminal trajectory; returns true if its group just became
+    /// complete.
+    pub fn record_complete(&mut self, traj: Trajectory) -> Result<bool> {
+        ensure!(traj.complete, "trajectory not terminal");
+        let g = self
+            .groups
+            .get_mut(&traj.group_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown group {}", traj.group_id))?;
+        let was_complete = g.is_complete();
+        g.done.push(traj);
+        let now_complete = g.is_complete();
+        if now_complete && !was_complete {
+            self.completed.push(g.group_id);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.completed.len()
+    }
+
+    /// Remove and return the first `b` completed groups (training batch).
+    pub fn take_completed(&mut self, b: usize) -> Vec<Group> {
+        let take: Vec<u64> = self.completed.drain(..b.min(self.completed.len())).collect();
+        take.into_iter().filter_map(|id| self.groups.remove(&id)).collect()
+    }
+
+    /// Remove specific groups by id (eval uses a shared book with training;
+    /// this takes exactly its own groups, complete or not).
+    pub fn take_groups(&mut self, ids: &[u64]) -> Vec<Group> {
+        self.completed.retain(|id| !ids.contains(id));
+        ids.iter().filter_map(|id| self.groups.remove(id)).collect()
+    }
+
+    /// Groups still needing samples dispatched, most-started first (finish
+    /// near-complete groups before opening new ones).
+    pub fn groups_with_deficit(&self) -> Vec<u64> {
+        let mut v: Vec<(&u64, &Group)> =
+            self.groups.iter().filter(|(_, g)| g.deficit() > 0 && !g.is_complete()).collect();
+        v.sort_by_key(|(_, g)| std::cmp::Reverse(g.dispatched));
+        v.iter().map(|(id, _)| **id).collect()
+    }
+
+    pub fn active_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Completed-but-unharvested trajectories (Eq. 7 second component).
+    pub fn parked_trajectories(&self) -> usize {
+        self.groups
+            .values()
+            .filter(|g| !g.is_complete())
+            .map(|g| g.done.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Family;
+    use crate::util::Rng;
+
+    fn task(seed: u64) -> Task {
+        Family::MaxList.generate(&mut Rng::new(seed), 1)
+    }
+
+    fn done_traj(id: u64, group: u64) -> Trajectory {
+        let mut t = Trajectory::new(id, group, task(id), vec![1, 4], 0);
+        t.append_stage(&[5, 2], &[-0.5, -0.1], 0);
+        t.complete = true;
+        t
+    }
+
+    #[test]
+    fn group_completes_at_target() {
+        let mut book = GroupBook::new();
+        let g = book.new_group(task(1), 3);
+        for i in 0..3 {
+            book.note_dispatch(g);
+            let became = book.record_complete(done_traj(i, g)).unwrap();
+            assert_eq!(became, i == 2);
+        }
+        assert_eq!(book.completed_count(), 1);
+        let taken = book.take_completed(5);
+        assert_eq!(taken.len(), 1);
+        assert_eq!(taken[0].done.len(), 3);
+        assert_eq!(book.active_groups(), 0);
+    }
+
+    #[test]
+    fn take_completed_preserves_completion_order() {
+        let mut book = GroupBook::new();
+        let g1 = book.new_group(task(1), 1);
+        let g2 = book.new_group(task(2), 1);
+        book.record_complete(done_traj(1, g2)).unwrap();
+        book.record_complete(done_traj(2, g1)).unwrap();
+        let taken = book.take_completed(1);
+        assert_eq!(taken[0].group_id, g2);
+        assert_eq!(book.completed_count(), 1);
+    }
+
+    #[test]
+    fn deficit_tracking() {
+        let mut book = GroupBook::new();
+        let g = book.new_group(task(1), 4);
+        assert_eq!(book.get(g).unwrap().deficit(), 4);
+        book.note_dispatch(g);
+        book.note_dispatch(g);
+        assert_eq!(book.get(g).unwrap().deficit(), 2);
+        book.note_abandoned(g);
+        assert_eq!(book.get(g).unwrap().deficit(), 3);
+    }
+
+    #[test]
+    fn groups_with_deficit_prefers_most_started() {
+        let mut book = GroupBook::new();
+        let g1 = book.new_group(task(1), 4);
+        let g2 = book.new_group(task(2), 4);
+        book.note_dispatch(g2);
+        book.note_dispatch(g2);
+        book.note_dispatch(g1);
+        let order = book.groups_with_deficit();
+        assert_eq!(order[0], g2);
+        assert_eq!(order[1], g1);
+    }
+
+    #[test]
+    fn parked_trajectories_counts_incomplete_groups_only() {
+        let mut book = GroupBook::new();
+        let g1 = book.new_group(task(1), 2);
+        let g2 = book.new_group(task(2), 1);
+        book.record_complete(done_traj(1, g1)).unwrap(); // parked (1/2)
+        book.record_complete(done_traj(2, g2)).unwrap(); // complete group
+        assert_eq!(book.parked_trajectories(), 1);
+    }
+
+    #[test]
+    fn incomplete_trajectory_rejected() {
+        let mut book = GroupBook::new();
+        let g = book.new_group(task(1), 1);
+        let t = Trajectory::new(9, g, task(9), vec![1], 0);
+        assert!(book.record_complete(t).is_err());
+    }
+}

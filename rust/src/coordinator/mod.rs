@@ -1,0 +1,24 @@
+//! The CoPRIS coordinator — the paper's system contribution (§4):
+//!
+//! - **Concurrency-Controlled Generation**: keep exactly N′ rollout
+//!   requests in flight; refill the moment one finishes.
+//! - **Early Termination**: stop all engines once B prompt-groups have
+//!   collected their G trajectories.
+//! - **Buffering of Partial Trajectories** (Eq. 6–7): unfinished
+//!   trajectories keep their per-stage log-prob segments; completed
+//!   trajectories of still-active groups stay in the group book.
+//! - **Prioritized Resumption**: buffered partials dispatch before fresh
+//!   prompts in the next stage.
+//!
+//! Baselines implemented by the same driver: fully-synchronous (veRL) and
+//! naive partial rollout (Kimi-K1.5-style fixed initial concurrency).
+
+pub mod buffer;
+pub mod groups;
+pub mod rollout;
+pub mod trajectory;
+
+pub use buffer::PartialBuffer;
+pub use groups::{Group, GroupBook};
+pub use rollout::{Coordinator, RolloutOutput, RolloutStats};
+pub use trajectory::{Segment, Trajectory};

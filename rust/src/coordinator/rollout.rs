@@ -1,0 +1,433 @@
+//! Rollout stage driver: concurrency-controlled dispatch over the engine
+//! pool, early termination, partial buffering, prioritized resumption —
+//! plus the sync (veRL) and naive-partial baselines in the same loop.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::buffer::PartialBuffer;
+use super::groups::{Group, GroupBook};
+use super::trajectory::Trajectory;
+use crate::config::{Config, RolloutMode};
+use crate::engine::{EngineCmd, EngineEvent, EnginePool, FinishReason, SamplingParams, StepTrace, WorkItem};
+use crate::tasks::{Dataset, Task};
+use crate::tokenizer::Tokenizer;
+
+/// Per-stage rollout statistics (feeds Fig. 1, Table 2, Fig. 3).
+#[derive(Clone, Debug, Default)]
+pub struct RolloutStats {
+    pub wall: f64,
+    /// Completed trajectories harvested this stage.
+    pub completed: usize,
+    /// Partials placed in the buffer at early termination.
+    pub partials_buffered: usize,
+    /// Buffered partials resumed this stage.
+    pub resumed: usize,
+    pub preemptions: u64,
+    /// Resume tokens replayed (the recomputation overhead).
+    pub replayed_tokens: u64,
+    /// Per-engine-step utilization samples.
+    pub traces: Vec<StepTrace>,
+    /// Response length of every trajectory completed this stage.
+    pub response_lengths: Vec<usize>,
+    /// Peak concurrent in-flight requests observed.
+    pub peak_inflight: usize,
+}
+
+impl RolloutStats {
+    /// Mean busy-slot fraction across engine steps (GPU utilization proxy).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.traces.is_empty() {
+            return 0.0;
+        }
+        self.traces.iter().map(|t| t.active as f64 / t.slots as f64).sum::<f64>()
+            / self.traces.len() as f64
+    }
+}
+
+/// Output of one rollout stage: exactly B complete groups + stats.
+#[derive(Debug)]
+pub struct RolloutOutput {
+    pub groups: Vec<Group>,
+    pub stats: RolloutStats,
+}
+
+/// In-flight bookkeeping: trajectory + which engine has it.
+struct InFlight {
+    traj: Trajectory,
+    engine: usize,
+}
+
+/// The CoPRIS coordinator (also drives the sync / naive-partial baselines).
+pub struct Coordinator {
+    pub pool: EnginePool,
+    pub cfg: Config,
+    pub buffer: PartialBuffer,
+    book: GroupBook,
+    inflight: HashMap<u64, InFlight>,
+    engine_load: Vec<usize>,
+    next_traj_id: u64,
+    /// Current policy version (== trainer step); bumped by `sync_weights`.
+    pub policy_version: u64,
+    tokenizer: Tokenizer,
+    /// Remaining dispatch allowance for NaivePartial (None = unlimited).
+    wave_remaining: Option<usize>,
+    /// Engines' decode horizon (manifest.max_seq).
+    max_seq: usize,
+}
+
+impl Coordinator {
+    /// `max_seq` is the engines' decode horizon (manifest.max_seq).
+    pub fn new(pool: EnginePool, cfg: Config, max_seq: usize) -> Coordinator {
+        let engines = pool.engines();
+        let buffer = PartialBuffer::new(cfg.rollout.max_stage_lag);
+        Coordinator {
+            pool,
+            cfg,
+            buffer,
+            book: GroupBook::new(),
+            inflight: HashMap::new(),
+            engine_load: vec![0; engines],
+            next_traj_id: 0,
+            policy_version: 0,
+            tokenizer: Tokenizer::new(),
+            wave_remaining: None,
+            max_seq,
+        }
+    }
+
+    /// Total-length cap for a work item (paper: max response length).
+    fn max_total_for(&self, prompt_len: usize) -> usize {
+        let cap = if self.cfg.engine.max_new_tokens > 0 {
+            prompt_len + self.cfg.engine.max_new_tokens
+        } else {
+            usize::MAX
+        };
+        cap.min(self.max_seq)
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    /// Weight sync: broadcast new params and bump the policy version.
+    pub fn sync_weights(&mut self, version: u64, params: Arc<Vec<f32>>) {
+        self.policy_version = version;
+        self.pool.broadcast_params(version, params);
+    }
+
+    fn total_inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    fn least_loaded_engine(&self) -> usize {
+        self.engine_load
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| **l)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn dispatch(&mut self, traj: Trajectory, sampling: SamplingParams) {
+        let engine = self.least_loaded_engine();
+        let item = WorkItem {
+            request_id: traj.id,
+            prompt: traj.prompt.clone(),
+            resume: traj.tokens.clone(),
+            max_total: self.max_total_for(traj.prompt.len()),
+            sampling,
+        };
+        self.engine_load[engine] += 1;
+        self.inflight.insert(traj.id, InFlight { traj, engine });
+        self.pool.send(engine, EngineCmd::Assign(item));
+        if let Some(w) = self.wave_remaining.as_mut() {
+            *w = w.saturating_sub(1);
+        }
+    }
+
+    /// Make a fresh trajectory for `group_id` and dispatch it.
+    fn dispatch_fresh(&mut self, group_id: u64, task: &Task, sampling: SamplingParams) {
+        let prompt = self.tokenizer.encode_prompt(&task.prompt);
+        let id = self.next_traj_id;
+        self.next_traj_id += 1;
+        let traj = Trajectory::new(id, group_id, task.clone(), prompt, self.policy_version);
+        self.book.note_dispatch(group_id);
+        self.dispatch(traj, sampling);
+    }
+
+    /// Dispatch policy for one refill opportunity. Returns false when
+    /// nothing can/should be dispatched right now.
+    fn refill_one(&mut self, dataset: &mut Dataset, sampling: SamplingParams) -> bool {
+        if let Some(0) = self.wave_remaining {
+            return false; // naive-partial wave exhausted — no refill
+        }
+        // Prioritized resumption: buffered partials first (paper §4).
+        if let Some(t) = self.buffer.pop() {
+            self.dispatch(t, sampling);
+            return true;
+        }
+        // Then groups that still need samples, most-started first.
+        if let Some(gid) = self.book.groups_with_deficit().first().copied() {
+            let task = self.book.get(gid).unwrap().task.clone();
+            self.dispatch_fresh(gid, &task, sampling);
+            return true;
+        }
+        // Otherwise open a new group from the dataset (over-generation).
+        let task = dataset.next_task();
+        let gid = self.book.new_group(task.clone(), self.cfg.rollout.group_size);
+        self.dispatch_fresh(gid, &task, sampling);
+        true
+    }
+
+    /// Run one rollout stage in the configured mode; returns exactly
+    /// B = `batch_prompts` completed groups.
+    pub fn rollout_stage(&mut self, dataset: &mut Dataset) -> Result<RolloutOutput> {
+        let cfg = self.cfg.rollout.clone();
+        let sampling = SamplingParams {
+            temperature: cfg.temperature,
+            top_p: cfg.top_p,
+            top_k: cfg.top_k,
+        };
+        let b = cfg.batch_prompts;
+        let mut stats = RolloutStats::default();
+        let t0 = Instant::now();
+
+        // Staleness guard (off by default, matching the paper).
+        for stale in self.buffer.evict_stale(self.policy_version) {
+            self.book.note_abandoned(stale.group_id);
+        }
+
+        // Stage-initial dispatch plan.
+        let concurrency = match cfg.mode {
+            RolloutMode::Sync => {
+                // Submit exactly the B·G fresh requests of this batch.
+                self.wave_remaining = None;
+                for _ in 0..b {
+                    let task = dataset.next_task();
+                    let gid = self.book.new_group(task.clone(), cfg.group_size);
+                    for _ in 0..cfg.group_size {
+                        self.dispatch_fresh(gid, &task, sampling);
+                    }
+                }
+                usize::MAX // no refill happens: no deficits, no new groups
+            }
+            RolloutMode::NaivePartial => {
+                // One fixed wave of `concurrency` requests, buffered
+                // partials first, no refill afterwards.
+                self.wave_remaining = Some(cfg.concurrency);
+                cfg.concurrency
+            }
+            RolloutMode::Copris => {
+                self.wave_remaining = None;
+                cfg.concurrency
+            }
+        };
+
+        // For partial modes: fill up to the concurrency target.
+        if cfg.mode != RolloutMode::Sync {
+            while self.total_inflight() < concurrency {
+                if !self.refill_one(dataset, sampling) {
+                    break;
+                }
+            }
+        }
+        stats.peak_inflight = self.total_inflight();
+
+        // Event loop until the termination condition.
+        loop {
+            let done_enough = match cfg.mode {
+                RolloutMode::Sync => self.total_inflight() == 0,
+                _ => self.book.completed_count() >= b,
+            };
+            if done_enough {
+                break;
+            }
+            // Naive-partial fallback: wave exhausted but batch incomplete →
+            // issue another wave (the paper's setting makes this rare).
+            if cfg.mode == RolloutMode::NaivePartial
+                && self.total_inflight() == 0
+                && self.book.completed_count() < b
+            {
+                self.wave_remaining = Some(cfg.concurrency);
+                while self.total_inflight() < cfg.concurrency {
+                    if !self.refill_one(dataset, sampling) {
+                        break;
+                    }
+                }
+            }
+
+            let ev = self
+                .pool
+                .events
+                .recv_timeout(Duration::from_secs(120))
+                .context("rollout: engine event timeout")?;
+            self.handle_event(ev, &mut stats, false)?;
+
+            // CoPRIS refill: keep exactly N' in flight (Fig. 2).
+            if cfg.mode == RolloutMode::Copris {
+                while self.total_inflight() < concurrency {
+                    if !self.refill_one(dataset, sampling) {
+                        break;
+                    }
+                }
+                stats.peak_inflight = stats.peak_inflight.max(self.total_inflight());
+            }
+        }
+
+        // Early termination: halt engines, drain partials into the buffer.
+        if cfg.mode != RolloutMode::Sync && self.total_inflight() > 0 {
+            self.drain_partials(&mut stats)?;
+        }
+        self.wave_remaining = None;
+
+        let groups = self.book.take_completed(b);
+        stats.completed = groups.iter().map(|g| g.done.len()).sum();
+        stats.wall = t0.elapsed().as_secs_f64();
+        Ok(RolloutOutput { groups, stats })
+    }
+
+    /// Handle one engine event. `draining` switches Stopped/Preempted
+    /// handling to "buffer it" (early-termination flush).
+    fn handle_event(
+        &mut self,
+        ev: EngineEvent,
+        stats: &mut RolloutStats,
+        draining: bool,
+    ) -> Result<()> {
+        match ev {
+            EngineEvent::Trace(t) => stats.traces.push(t),
+            EngineEvent::Flushed { .. } | EngineEvent::ShutDown { .. } => {}
+            EngineEvent::Done { engine, result } => {
+                let Some(inf) = self.inflight.remove(&result.request_id) else {
+                    bail!("unknown request {} from engine {engine}", result.request_id);
+                };
+                self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
+                let mut traj = inf.traj;
+                traj.append_stage(&result.new_tokens, &result.new_logprobs, self.policy_version);
+                stats.replayed_tokens += result.replayed as u64;
+                match result.reason {
+                    FinishReason::Eos | FinishReason::LengthCap => {
+                        traj.complete = true;
+                        stats.response_lengths.push(traj.len());
+                        self.book.record_complete(traj)?;
+                    }
+                    FinishReason::Preempted => {
+                        stats.preemptions += 1;
+                        if draining {
+                            self.park_partial(traj, stats);
+                        } else {
+                            // Immediate re-queue with resumption priority.
+                            self.buffer.push(traj);
+                        }
+                    }
+                    FinishReason::Stopped => {
+                        self.park_partial(traj, stats);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn park_partial(&mut self, traj: Trajectory, stats: &mut RolloutStats) {
+        if traj.is_empty() {
+            // Nothing generated: not a partial — free the dispatch slot.
+            self.book.note_abandoned(traj.group_id);
+        } else {
+            stats.partials_buffered += 1;
+            self.buffer.push(traj);
+        }
+    }
+
+    /// Early termination: StopGeneration to all engines, collect every
+    /// in-flight trajectory (partials → buffer; unstarted → abandoned).
+    fn drain_partials(&mut self, stats: &mut RolloutStats) -> Result<()> {
+        self.pool.stop_generation_all();
+        let mut flushed = 0usize;
+        let engines = self.pool.engines();
+        while flushed < engines {
+            let ev = self
+                .pool
+                .events
+                .recv_timeout(Duration::from_secs(120))
+                .context("drain: engine event timeout")?;
+            if matches!(ev, EngineEvent::Flushed { .. }) {
+                flushed += 1;
+                continue;
+            }
+            self.handle_event(ev, stats, true)?;
+        }
+        // Anything still in the inflight map was queued but never started.
+        let leftovers: Vec<u64> = self.inflight.keys().copied().collect();
+        for id in leftovers {
+            let inf = self.inflight.remove(&id).unwrap();
+            self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
+            self.park_partial(inf.traj, stats);
+        }
+        stats.resumed = 0; // set by caller if needed
+        Ok(())
+    }
+
+    /// Fixed-prompt synchronous generation (evaluation path): `samples`
+    /// rollouts per task at `sampling`; returns one completed group per
+    /// task. Uses a private GroupBook so training state is untouched.
+    pub fn run_fixed_sync(
+        &mut self,
+        tasks: &[Task],
+        samples: usize,
+        sampling: SamplingParams,
+    ) -> Result<Vec<Group>> {
+        anyhow::ensure!(self.inflight.is_empty(), "run_fixed_sync with work in flight");
+        let mut ids = Vec::new();
+        for task in tasks {
+            let gid = self.book.new_group(task.clone(), samples);
+            ids.push(gid);
+            for _ in 0..samples {
+                self.dispatch_fresh(gid, task, sampling);
+            }
+        }
+        let mut stats = RolloutStats::default();
+        while self.total_inflight() > 0 {
+            let ev = self
+                .pool
+                .events
+                .recv_timeout(Duration::from_secs(120))
+                .context("eval: engine event timeout")?;
+            self.handle_event(ev, &mut stats, false)?;
+            // Preempted eval rollouts must be re-dispatched (not buffered).
+            while let Some(t) = self.buffer.pop() {
+                self.dispatch(t, sampling);
+            }
+        }
+        // Take exactly OUR groups (the book may hold surplus completed
+        // training groups carried across stages — leave those alone).
+        let mut taken = self.book.take_groups(&ids);
+        let index: HashMap<u64, usize> =
+            ids.iter().enumerate().map(|(i, id)| (*id, i)).collect();
+        let mut slots: Vec<Option<Group>> = (0..ids.len()).map(|_| None).collect();
+        for g in taken.drain(..) {
+            let i = index[&g.group_id];
+            slots[i] = Some(g);
+        }
+        let mut out = Vec::new();
+        for s in slots {
+            let g = s.context("eval group missing")?;
+            anyhow::ensure!(g.is_complete(), "eval group incomplete");
+            out.push(g);
+        }
+        Ok(out)
+    }
+
+    /// Buffered partial count (off-policy debt carried to the next stage).
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}

@@ -1,0 +1,156 @@
+//! Trajectories with stage-tagged behaviour log-probabilities (Eq. 6):
+//! L_i = concat(L_i^(1), ..., L_i^(K)) — each segment generated under one
+//! policy version and reused verbatim for cross-stage IS correction.
+
+use crate::tasks::Task;
+
+/// Tokens generated under a single policy version.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Segment {
+    pub policy_version: u64,
+    pub logprobs: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub id: u64,
+    pub group_id: u64,
+    pub task: Task,
+    pub prompt: Vec<i32>,
+    /// All generated tokens so far (across stages).
+    pub tokens: Vec<i32>,
+    /// Stage-tagged log-prob segments; concat length == tokens length.
+    pub segments: Vec<Segment>,
+    /// Terminal (EOS or length cap)?
+    pub complete: bool,
+    /// Stage (policy version) at first dispatch.
+    pub born_version: u64,
+}
+
+impl Trajectory {
+    pub fn new(id: u64, group_id: u64, task: Task, prompt: Vec<i32>, version: u64) -> Self {
+        Trajectory {
+            id,
+            group_id,
+            task,
+            prompt,
+            tokens: Vec::new(),
+            segments: Vec::new(),
+            complete: false,
+            born_version: version,
+        }
+    }
+
+    /// Append one stage's generation (paper: buffer stores log-probs under
+    /// the policy that generated each subsequence).
+    pub fn append_stage(&mut self, tokens: &[i32], logprobs: &[f32], version: u64) {
+        assert_eq!(tokens.len(), logprobs.len(), "token/logprob length mismatch");
+        if tokens.is_empty() {
+            return;
+        }
+        self.tokens.extend_from_slice(tokens);
+        // Merge into the last segment if the version matches (same stage
+        // can touch a trajectory twice via preemption + re-admission).
+        if let Some(last) = self.segments.last_mut() {
+            if last.policy_version == version {
+                last.logprobs.extend_from_slice(logprobs);
+                return;
+            }
+        }
+        self.segments.push(Segment { policy_version: version, logprobs: logprobs.to_vec() });
+    }
+
+    /// Eq. 6: the concatenated behaviour log-probs L_i.
+    pub fn behavior_logprobs(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.tokens.len());
+        for s in &self.segments {
+            out.extend_from_slice(&s.logprobs);
+        }
+        out
+    }
+
+    /// Number of distinct policy versions that produced this trajectory.
+    pub fn n_stages(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Off-policy tokens w.r.t. `current`: generated under older policies.
+    pub fn offpolicy_tokens(&self, current: u64) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.policy_version < current)
+            .map(|s| s.logprobs.len())
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Structural invariant: segments concat to exactly the token count.
+    pub fn invariant_ok(&self) -> bool {
+        self.segments.iter().map(|s| s.logprobs.len()).sum::<usize>() == self.tokens.len()
+            && !self.segments.iter().any(|s| s.logprobs.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Family;
+    use crate::util::Rng;
+
+    fn traj() -> Trajectory {
+        let task = Family::ModArith.generate(&mut Rng::new(1), 1);
+        Trajectory::new(1, 10, task, vec![1, 5, 6], 3)
+    }
+
+    #[test]
+    fn append_concat_matches_eq6() {
+        let mut t = traj();
+        t.append_stage(&[4, 5], &[-0.1, -0.2], 3);
+        t.append_stage(&[6], &[-0.3], 4);
+        t.append_stage(&[7, 8], &[-0.4, -0.5], 5);
+        assert_eq!(t.tokens, vec![4, 5, 6, 7, 8]);
+        assert_eq!(t.behavior_logprobs(), vec![-0.1, -0.2, -0.3, -0.4, -0.5]);
+        assert_eq!(t.n_stages(), 3);
+        assert!(t.invariant_ok());
+    }
+
+    #[test]
+    fn same_version_appends_merge() {
+        let mut t = traj();
+        t.append_stage(&[4], &[-0.1], 3);
+        t.append_stage(&[5], &[-0.2], 3); // preempt + re-admit same stage
+        assert_eq!(t.n_stages(), 1);
+        assert_eq!(t.behavior_logprobs(), vec![-0.1, -0.2]);
+    }
+
+    #[test]
+    fn empty_append_is_noop() {
+        let mut t = traj();
+        t.append_stage(&[], &[], 9);
+        assert_eq!(t.n_stages(), 0);
+        assert!(t.invariant_ok());
+    }
+
+    #[test]
+    fn offpolicy_token_counting() {
+        let mut t = traj();
+        t.append_stage(&[4, 5, 6], &[-0.1; 3], 3);
+        t.append_stage(&[7], &[-0.2], 5);
+        assert_eq!(t.offpolicy_tokens(5), 3);
+        assert_eq!(t.offpolicy_tokens(6), 4);
+        assert_eq!(t.offpolicy_tokens(3), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        traj().append_stage(&[4, 5], &[-0.1], 1);
+    }
+}

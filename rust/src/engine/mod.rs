@@ -1,0 +1,20 @@
+//! The inference-engine substrate (vLLM v0.8.4 stand-in, DESIGN.md table):
+//! slot-based continuous batching over the AOT decode artifact, a KV token
+//! budget with preemption + re-prefill (the paper's "recomputation
+//! overhead"), temperature/top-p/top-k sampling, and per-step utilization
+//! traces (Fig. 1b).
+//!
+//! Engines run on OS threads and are driven by the coordinator through
+//! mpsc channels; the decode step has *constant* cost regardless of how
+//! many slots are active — idle slots burn compute exactly like the idle
+//! GPUs in the paper's Fig. 1.
+
+pub mod backend;
+pub mod engine;
+pub mod pool;
+pub mod sampler;
+
+pub use backend::{Backend, MockBackend, XlaBackend};
+pub use engine::{Engine, EngineCmd, EngineEvent, FinishReason, StepTrace, WorkItem, WorkResult};
+pub use pool::EnginePool;
+pub use sampler::{sample_token, SamplingParams};

@@ -1,0 +1,186 @@
+//! Token sampling: temperature / top-k / top-p over a vocab logit row,
+//! returning the sampled token and its log-probability under the *sampling*
+//! distribution — the behaviour log-prob L_i stored with the trajectory
+//! (paper Eq. 6). At the paper's defaults (temp 1.0, top-p 1.0, top-k -1)
+//! this is exactly the model distribution.
+
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    pub temperature: f64,
+    pub top_p: f64,
+    /// -1 disables top-k.
+    pub top_k: i64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        // Paper Table 3 rollout settings.
+        SamplingParams { temperature: 1.0, top_p: 1.0, top_k: -1 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        SamplingParams { temperature: 0.0, top_p: 1.0, top_k: -1 }
+    }
+}
+
+/// Sample from one logits row. Returns (token, ln p(token)).
+pub fn sample_token(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> (i32, f32) {
+    debug_assert!(!logits.is_empty());
+    if params.temperature <= 0.0 {
+        // Greedy: probability mass collapses to the argmax.
+        let (best, _) = argmax(logits);
+        return (best as i32, 0.0);
+    }
+    let inv_t = 1.0 / params.temperature;
+    // Stable softmax at temperature.
+    let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut probs: Vec<f64> =
+        logits.iter().map(|&l| ((l as f64 - maxl) * inv_t).exp()).collect();
+
+    // top-k: zero everything below the k-th largest.
+    if params.top_k > 0 && (params.top_k as usize) < probs.len() {
+        let mut sorted = probs.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let thresh = sorted[params.top_k as usize - 1];
+        for p in probs.iter_mut() {
+            if *p < thresh {
+                *p = 0.0;
+            }
+        }
+    }
+
+    // top-p (nucleus): keep the smallest prefix of the sorted distribution
+    // with cumulative mass >= top_p.
+    if params.top_p < 1.0 {
+        let total: f64 = probs.iter().sum();
+        let mut idx: Vec<usize> = (0..probs.len()).collect();
+        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let mut cum = 0.0;
+        let mut keep = vec![false; probs.len()];
+        for &i in &idx {
+            keep[i] = true;
+            cum += probs[i] / total;
+            if cum >= params.top_p {
+                break;
+            }
+        }
+        for (i, p) in probs.iter_mut().enumerate() {
+            if !keep[i] {
+                *p = 0.0;
+            }
+        }
+    }
+
+    let total: f64 = probs.iter().sum();
+    let token = rng.pick_weighted(&probs);
+    let lp = (probs[token] / total).max(1e-300).ln() as f32;
+    (token as i32, lp)
+}
+
+fn argmax(xs: &[f32]) -> (usize, f32) {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bi = i;
+            bv = x;
+        }
+    }
+    (bi, bv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = [0.1, 5.0, -1.0, 2.0];
+        for _ in 0..10 {
+            let (t, lp) = sample_token(&logits, &SamplingParams::greedy(), &mut rng);
+            assert_eq!(t, 1);
+            assert_eq!(lp, 0.0);
+        }
+    }
+
+    #[test]
+    fn temp1_logprob_matches_log_softmax() {
+        let mut rng = Rng::new(1);
+        let logits = [1.0f32, 2.0, 3.0, 0.5];
+        let z: f64 = logits.iter().map(|&l| (l as f64).exp()).sum();
+        let (t, lp) = sample_token(&logits, &SamplingParams::default(), &mut rng);
+        let want = ((logits[t as usize] as f64).exp() / z).ln();
+        assert!((lp as f64 - want).abs() < 1e-5, "{lp} vs {want}");
+    }
+
+    #[test]
+    fn distribution_roughly_matches_softmax() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 1.0, 2.0];
+        let mut counts = [0usize; 3];
+        let n = 30_000;
+        for _ in 0..n {
+            let (t, _) = sample_token(&logits, &SamplingParams::default(), &mut rng);
+            counts[t as usize] += 1;
+        }
+        let z: f64 = logits.iter().map(|&l| (l as f64).exp()).sum();
+        for i in 0..3 {
+            let want = (logits[i] as f64).exp() / z;
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - want).abs() < 0.02, "token {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::new(3);
+        let logits = [0.0f32, 1.0, 2.0, 3.0];
+        let p = SamplingParams { temperature: 1.0, top_p: 1.0, top_k: 2 };
+        for _ in 0..200 {
+            let (t, _) = sample_token(&logits, &p, &mut rng);
+            assert!(t == 2 || t == 3, "token {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_head_of_distribution() {
+        let mut rng = Rng::new(4);
+        // p ≈ [0.64, 0.24, 0.09, 0.03]; top_p=0.7 keeps tokens {0, 1}.
+        let logits = [3.0f32, 2.0, 1.0, 0.0];
+        let p = SamplingParams { temperature: 1.0, top_p: 0.7, top_k: -1 };
+        for _ in 0..200 {
+            let (t, _) = sample_token(&logits, &p, &mut rng);
+            assert!(t <= 1, "token {t} outside nucleus");
+        }
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let mut rng = Rng::new(5);
+        let logits = [1.0f32, 1.5];
+        let p = SamplingParams { temperature: 0.1, top_p: 1.0, top_k: -1 };
+        let hits = (0..500)
+            .filter(|_| sample_token(&logits, &p, &mut rng).0 == 1)
+            .count();
+        assert!(hits > 480, "{hits}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_given_rng() {
+        let logits = [0.3f32, 0.2, 0.9, -0.5];
+        let a: Vec<i32> = {
+            let mut rng = Rng::new(9);
+            (0..20).map(|_| sample_token(&logits, &SamplingParams::default(), &mut rng).0).collect()
+        };
+        let b: Vec<i32> = {
+            let mut rng = Rng::new(9);
+            (0..20).map(|_| sample_token(&logits, &SamplingParams::default(), &mut rng).0).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,98 @@
+//! Pass@1 evaluation over the five held-out suites (Table 1 columns).
+//!
+//! Matches the paper's protocol shape: `samples_per_prompt` rollouts at
+//! eval temperature (0.6), pass@1 = mean correctness over all samples.
+
+use anyhow::Result;
+
+use crate::config::EvalConfig;
+use crate::coordinator::Coordinator;
+use crate::engine::SamplingParams;
+use crate::tasks::{eval_suites, reward, Suite};
+
+#[derive(Clone, Debug)]
+pub struct SuiteScore {
+    pub name: &'static str,
+    pub pass_at_1: f64,
+    pub n_prompts: usize,
+    pub n_samples: usize,
+    pub mean_response_len: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalReport {
+    pub suites: Vec<SuiteScore>,
+}
+
+impl EvalReport {
+    pub fn average(&self) -> f64 {
+        if self.suites.is_empty() {
+            return 0.0;
+        }
+        self.suites.iter().map(|s| s.pass_at_1).sum::<f64>() / self.suites.len() as f64
+    }
+}
+
+/// Evaluate one suite through the engine pool (synchronous generation).
+pub fn eval_suite(
+    coord: &mut Coordinator,
+    suite: &Suite,
+    cfg: &EvalConfig,
+    seed: u64,
+) -> Result<SuiteScore> {
+    let tasks = suite.tasks(cfg.prompts_per_suite, seed);
+    let sampling = SamplingParams {
+        temperature: cfg.temperature,
+        top_p: cfg.top_p,
+        top_k: -1,
+    };
+    let groups = coord.run_fixed_sync(&tasks, cfg.samples_per_prompt, sampling)?;
+    let mut correct = 0.0;
+    let mut total = 0usize;
+    let mut len_sum = 0usize;
+    let tk = coord.tokenizer().clone();
+    for g in &groups {
+        for t in &g.done {
+            correct += reward(&tk.extract_answer(&t.tokens), &t.task.answer);
+            len_sum += t.len();
+            total += 1;
+        }
+    }
+    Ok(SuiteScore {
+        name: suite.name,
+        pass_at_1: if total > 0 { correct / total as f64 } else { 0.0 },
+        n_prompts: tasks.len(),
+        n_samples: total,
+        mean_response_len: if total > 0 { len_sum as f64 / total as f64 } else { 0.0 },
+    })
+}
+
+/// Evaluate all five suites (the Table 1 row for one model).
+pub fn eval_all(coord: &mut Coordinator, cfg: &EvalConfig, seed: u64) -> Result<EvalReport> {
+    let mut report = EvalReport::default();
+    for suite in eval_suites() {
+        report.suites.push(eval_suite(coord, &suite, cfg, seed)?);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_of_empty_report_is_zero() {
+        assert_eq!(EvalReport::default().average(), 0.0);
+    }
+
+    #[test]
+    fn average_is_mean_of_suites() {
+        let r = EvalReport {
+            suites: vec![
+                SuiteScore { name: "a", pass_at_1: 0.2, n_prompts: 1, n_samples: 1, mean_response_len: 1.0 },
+                SuiteScore { name: "b", pass_at_1: 0.6, n_prompts: 1, n_samples: 1, mean_response_len: 1.0 },
+            ],
+        };
+        assert!((r.average() - 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,95 @@
+//! Shared helpers for the experiment drivers (benches + examples).
+
+use anyhow::Result;
+
+use crate::config::{scaled_preset, Config, RolloutMode};
+use crate::exp::{RlSession, RunSummary};
+
+/// Environment-tunable experiment scale so `cargo bench` stays tractable on
+/// this CPU substrate while remaining faithful in shape. Override with
+/// `COPRIS_BENCH_STEPS`, `COPRIS_BENCH_SFT`, `COPRIS_BENCH_MODEL`.
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_str(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+pub fn artifacts_available(variant: &str) -> bool {
+    std::path::Path::new("artifacts").join(variant).join("manifest.json").exists()
+}
+
+/// Standard experiment config for one arm.
+pub fn arm_config(model: &str, mode: RolloutMode, seed: u64) -> Config {
+    let mut cfg = scaled_preset(model);
+    cfg.rollout.mode = mode;
+    cfg.train.seed = seed;
+    cfg
+}
+
+/// SFT-warm a model ONCE and cache the checkpoint under runs/ — every
+/// experiment arm starts RL from the same "basemodel" (the paper RL-tunes
+/// one pretrained checkpoint per model), and the warmup cost is paid once.
+pub fn shared_warm_checkpoint(model: &str, sft_steps: usize) -> Result<std::path::PathBuf> {
+    let path = std::path::PathBuf::from(format!("runs/warm-{model}-{sft_steps}.ckpt"));
+    if path.exists() {
+        return Ok(path);
+    }
+    eprintln!("[warmup] SFT-warming {model} for {sft_steps} steps (cached at {})", path.display());
+    let cfg = scaled_preset(model);
+    // SFT needs no engine pool: drive the trainer directly.
+    let mut trainer = crate::trainer::Trainer::new(cfg.clone(), cfg.train.seed as i32)?;
+    trainer.rt.warmup(&["sft_grad"])?;
+    let mut ds = crate::tasks::Dataset::sft(cfg.train.seed);
+    let lr = (cfg.train.lr * 3.0) as f32;
+    for s in 0..sft_steps {
+        let mut sft =
+            crate::trainer::SftTrainer::new(&mut trainer.rt, &mut trainer.state, lr);
+        let m = sft.step(&mut ds, 2)?;
+        if s % 25 == 0 || s + 1 == sft_steps {
+            eprintln!("[warmup {s:>4}] loss {:.4}", m.loss);
+        }
+    }
+    trainer.save(&path)?;
+    Ok(path)
+}
+
+/// Build + warm up a session from the shared checkpoint (falls back to
+/// inline warmup when sft_steps == 0).
+pub fn warmed_session(cfg: Config, sft_steps: usize, verbose: bool) -> Result<RlSession> {
+    let ckpt = if sft_steps > 0 {
+        Some(shared_warm_checkpoint(&cfg.model, sft_steps)?)
+    } else {
+        None
+    };
+    let mut sess = RlSession::build_with_checkpoint(cfg, ckpt.as_deref())?;
+    sess.verbose = verbose;
+    // Push the (possibly restored) weights to the engines.
+    let params = sess.trainer.params()?;
+    let version = sess.trainer.step() as u64;
+    sess.coord.sync_weights(version, params);
+    Ok(sess)
+}
+
+/// One full arm: warmup → RL train → eval; returns (summary, eval avg, suite scores).
+pub struct ArmResult {
+    pub summary: RunSummary,
+    pub suite_scores: Vec<(String, f64)>,
+    pub average: f64,
+}
+
+pub fn run_arm(cfg: Config, sft_steps: usize, rl_steps: usize, verbose: bool) -> Result<ArmResult> {
+    let mut sess = warmed_session(cfg, sft_steps, verbose)?;
+    let summary = sess.train(rl_steps)?;
+    let report = sess.evaluate(2)?;
+    let suite_scores =
+        report.suites.iter().map(|s| (s.name.to_string(), s.pass_at_1)).collect();
+    let average = report.average();
+    sess.shutdown();
+    Ok(ArmResult { summary, suite_scores, average })
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}

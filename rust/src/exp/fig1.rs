@@ -1,0 +1,101 @@
+//! Fig. 1 reproduction: the long-tail problem of synchronous rollout.
+//! (a) response-length distribution within one batch; (b) per-engine
+//! utilization trace showing the straggler-induced dips, vs CoPRIS.
+
+use anyhow::Result;
+
+use crate::config::RolloutMode;
+use crate::exp::common::{arm_config, warmed_session};
+use crate::tasks::Dataset;
+use crate::util::stats::{ascii_histogram, Summary};
+
+pub struct Fig1Report {
+    pub lengths: Vec<usize>,
+    pub sync_util: Vec<(f64, f64)>,   // (t, busy fraction) down-sampled
+    pub copris_util: Vec<(f64, f64)>,
+    pub sync_mean_util: f64,
+    pub copris_mean_util: f64,
+}
+
+fn downsample(points: Vec<(f64, f64)>, n: usize) -> Vec<(f64, f64)> {
+    if points.len() <= n {
+        return points;
+    }
+    let stride = points.len() as f64 / n as f64;
+    (0..n).map(|i| points[(i as f64 * stride) as usize]).collect()
+}
+
+pub fn run(model: &str, sft_steps: usize) -> Result<Fig1Report> {
+    // Synchronous stage: all B·G at once, wait for stragglers.
+    let mut cfg = arm_config(model, RolloutMode::Sync, 7);
+    cfg.rollout.batch_prompts = 8;
+    cfg.rollout.group_size = 4;
+    let mut sess = warmed_session(cfg, sft_steps, false)?;
+    let mut ds = Dataset::train(7);
+    let out_sync = sess.coord.rollout_stage(&mut ds)?;
+    let sync_util: Vec<(f64, f64)> = out_sync
+        .stats
+        .traces
+        .iter()
+        .map(|t| (t.t_wall, t.active as f64 / t.slots as f64))
+        .collect();
+    let lengths = out_sync.stats.response_lengths.clone();
+    let sync_mean = out_sync.stats.mean_utilization();
+    sess.shutdown();
+
+    // CoPRIS stage at full-pool concurrency for contrast.
+    let mut cfg = arm_config(model, RolloutMode::Copris, 7);
+    cfg.rollout.batch_prompts = 8;
+    cfg.rollout.group_size = 4;
+    let mut sess = warmed_session(cfg, sft_steps, false)?;
+    let mut ds = Dataset::train(7);
+    let out_cop = sess.coord.rollout_stage(&mut ds)?;
+    let copris_util: Vec<(f64, f64)> = out_cop
+        .stats
+        .traces
+        .iter()
+        .map(|t| (t.t_wall, t.active as f64 / t.slots as f64))
+        .collect();
+    let copris_mean = out_cop.stats.mean_utilization();
+    sess.shutdown();
+
+    Ok(Fig1Report {
+        lengths,
+        sync_util: downsample(sync_util, 48),
+        copris_util: downsample(copris_util, 48),
+        sync_mean_util: sync_mean,
+        copris_mean_util: copris_mean,
+    })
+}
+
+pub fn render(r: &Fig1Report) -> String {
+    let mut out = String::new();
+    let lens: Vec<f64> = r.lengths.iter().map(|&l| l as f64).collect();
+    let s = Summary::of(&lens);
+    out.push_str("== Fig 1a: response-length distribution (one sync batch) ==\n");
+    out.push_str(&format!(
+        "n={} mean={:.1} p50={:.0} p95={:.0} max={:.0}  (long tail: p95/p50 = {:.2}x)\n",
+        s.n, s.mean, s.p50, s.p95, s.max,
+        if s.p50 > 0.0 { s.p95 / s.p50 } else { 0.0 }
+    ));
+    for row in ascii_histogram(&lens, 10, 40) {
+        out.push_str(&format!("  {row}\n"));
+    }
+    out.push_str("\n== Fig 1b: busy-slot fraction over the stage ==\n");
+    out.push_str("   (sync dips to near-zero while stragglers finish; CoPRIS stays full)\n");
+    let bar = |f: f64| "#".repeat((f * 30.0).round() as usize);
+    out.push_str("  sync:\n");
+    for (t, f) in &r.sync_util {
+        out.push_str(&format!("   {t:7.3}s |{:<30}| {:.0}%\n", bar(*f), f * 100.0));
+    }
+    out.push_str("  copris:\n");
+    for (t, f) in &r.copris_util {
+        out.push_str(&format!("   {t:7.3}s |{:<30}| {:.0}%\n", bar(*f), f * 100.0));
+    }
+    out.push_str(&format!(
+        "\nmean utilization: sync {:.1}%  vs  CoPRIS {:.1}%\n",
+        r.sync_mean_util * 100.0,
+        r.copris_mean_util * 100.0
+    ));
+    out
+}

@@ -1,0 +1,13 @@
+//! Experiment drivers: `session` wires pool + coordinator + trainer into a
+//! full RL run; the numbered modules regenerate each paper table/figure and
+//! are shared between `cargo bench` targets and `examples/`.
+
+pub mod common;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod session;
+pub mod table1;
+pub mod table2;
+
+pub use session::{RlSession, RunSummary};

@@ -1,0 +1,191 @@
+//! RlSession: the end-to-end RL post-training pipeline.
+//!
+//! rollout stage (engine pool, mode per config) → reward/advantage →
+//! cal-logprob → GRPO update (w/ or w/o cross-stage IS) → weight sync →
+//! repeat; periodic eval over the five suites.
+
+
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::{Coordinator, RolloutStats};
+use crate::engine::{EnginePool, XlaBackend};
+use crate::eval::{eval_all, EvalReport};
+use crate::tasks::Dataset;
+use crate::trainer::{MetricsLog, SftTrainer, StepMetrics, Trainer};
+use crate::util::StageTimer;
+
+pub struct RlSession {
+    pub coord: Coordinator,
+    pub trainer: Trainer,
+    pub dataset: Dataset,
+    pub timer: StageTimer,
+    pub log: MetricsLog,
+    pub verbose: bool,
+}
+
+/// Aggregate summary of a training run (feeds Table 1 / Fig 3 rows).
+#[derive(Clone, Debug, Default)]
+pub struct RunSummary {
+    pub steps: usize,
+    pub wall: f64,
+    /// Samples consumed per second (paper Fig. 3 "effective throughput").
+    pub throughput: f64,
+    pub final_reward: f64,
+    pub mean_utilization: f64,
+    pub rollout_secs: f64,
+    pub cal_logprob_secs: f64,
+    pub train_secs: f64,
+    pub sync_secs: f64,
+    pub preemptions: u64,
+    pub replayed_tokens: u64,
+    pub reward_curve: Vec<f64>,
+    pub entropy_curve: Vec<f64>,
+}
+
+impl RlSession {
+    /// Build the full stack from a config (trainer + engine pool + coord).
+    pub fn build(cfg: Config) -> Result<RlSession> {
+        Self::build_with_checkpoint(cfg, None)
+    }
+
+    /// Build with the trainer restored from a checkpoint (shared SFT warmup
+    /// across experiment arms — see exp::common::shared_warm_checkpoint).
+    pub fn build_with_checkpoint(
+        cfg: Config,
+        checkpoint: Option<&std::path::Path>,
+    ) -> Result<RlSession> {
+        let mut trainer = match checkpoint {
+            Some(p) => Trainer::from_checkpoint(cfg.clone(), p)
+                .with_context(|| format!("loading checkpoint {}", p.display()))?,
+            None => Trainer::new(cfg.clone(), cfg.train.seed as i32)
+                .context("building trainer")?,
+        };
+        let params = trainer.params()?;
+        let spec = trainer.rt.spec.clone();
+        let dir = cfg.artifacts_dir.clone();
+        let variant = cfg.model.clone();
+        let init_params = params.clone();
+        let chunked_replay = cfg.engine.chunked_replay;
+        let pool = EnginePool::spawn(
+            cfg.engine.engines,
+            spec.slots,
+            cfg.engine.kv_budget_tokens,
+            cfg.train.seed,
+            move |_id| {
+                let dir = dir.clone();
+                let variant = variant.clone();
+                let p = init_params.clone();
+                Box::new(move || {
+                    let mut b = XlaBackend::open(&dir, &variant, &p)?;
+                    b.chunked_replay = chunked_replay;
+                    Ok(b)
+                })
+            },
+        )?;
+        let mut coord = Coordinator::new(pool, cfg.clone(), spec.max_seq);
+        coord.policy_version = trainer.step() as u64;
+        let dataset = Dataset::train(cfg.train.seed);
+        Ok(RlSession {
+            coord,
+            trainer,
+            dataset,
+            timer: StageTimer::new(),
+            log: MetricsLog::disabled(),
+            verbose: false,
+        })
+    }
+
+    /// Supervised warmup on easy tasks (produces the "basemodel").
+    pub fn sft_warmup(&mut self, steps: usize, micro_batches: usize) -> Result<f64> {
+        let mut ds = Dataset::sft(self.trainer.cfg.train.seed);
+        let lr = (self.trainer.cfg.train.lr * 3.0) as f32; // warmup can run hotter
+        let mut last_loss = f64::NAN;
+        for s in 0..steps {
+            let mut sft =
+                SftTrainer::new(&mut self.trainer.rt, &mut self.trainer.state, lr);
+            let m = sft.step(&mut ds, micro_batches)?;
+            last_loss = m.loss;
+            if self.verbose && (s % 10 == 0 || s + 1 == steps) {
+                eprintln!("[sft {s:>4}] loss {:.4}  tokens {}", m.loss, m.n_tokens);
+            }
+        }
+        // Sync the warmed-up weights to the engines. The policy version
+        // must track the optimizer step counter (SFT shares it) so the
+        // trainer's off-policy accounting stays consistent.
+        let params = self.trainer.params()?;
+        let version = self.trainer.step() as u64;
+        self.coord.sync_weights(version, params);
+        Ok(last_loss)
+    }
+
+    /// One full RL step: rollout stage → GRPO update → weight sync.
+    pub fn rl_step(&mut self) -> Result<(StepMetrics, RolloutStats)> {
+        let t_all = std::time::Instant::now();
+        let t0 = std::time::Instant::now();
+        let out = self.coord.rollout_stage(&mut self.dataset)?;
+        self.timer.add("rollout", t0.elapsed().as_secs_f64());
+
+        let metrics = self.trainer.train_step(&out.groups, &mut self.timer)?;
+
+        let t0 = std::time::Instant::now();
+        let params = self.trainer.params()?;
+        let version = self.trainer.step() as u64;
+        self.coord.sync_weights(version, params);
+        self.timer.add("sync", t0.elapsed().as_secs_f64());
+
+        self.log.log_step(&metrics, &out.stats, t_all.elapsed().as_secs_f64())?;
+        Ok((metrics, out.stats))
+    }
+
+    /// Run `steps` RL steps, returning the run summary.
+    pub fn train(&mut self, steps: usize) -> Result<RunSummary> {
+        let t0 = std::time::Instant::now();
+        let mut summary = RunSummary { steps, ..Default::default() };
+        let mut samples = 0usize;
+        let mut util = Vec::new();
+        for s in 0..steps {
+            let (m, rs) = self.rl_step()?;
+            samples += rs.completed;
+            util.push(rs.mean_utilization());
+            summary.preemptions += rs.preemptions;
+            summary.replayed_tokens += rs.replayed_tokens;
+            summary.reward_curve.push(m.reward_mean);
+            summary.entropy_curve.push(m.entropy);
+            summary.final_reward = m.reward_mean;
+            if self.verbose {
+                eprintln!(
+                    "[rl {s:>4}] reward {:.3}  loss {:+.4}  ent {:.3}  ratio {:.3}  clip {:.3}  offpol {:.2}  rollout {:.2}s util {:.0}%",
+                    m.reward_mean, m.loss, m.entropy, m.ratio_mean, m.clip_frac,
+                    m.offpolicy_frac, rs.wall, rs.mean_utilization() * 100.0
+                );
+            }
+            let every = self.trainer.cfg.train.checkpoint_every;
+            if every > 0 && (s + 1) % every == 0 {
+                let dir = self.trainer.cfg.train.checkpoint_dir.clone();
+                let path = std::path::Path::new(&dir)
+                    .join(format!("{}-step{}.ckpt", self.trainer.cfg.model, s + 1));
+                self.trainer.save(&path)?;
+            }
+        }
+        summary.wall = t0.elapsed().as_secs_f64();
+        summary.throughput = samples as f64 / summary.wall.max(1e-9);
+        summary.mean_utilization = crate::util::stats::mean(&util);
+        summary.rollout_secs = self.timer.total("rollout");
+        summary.cal_logprob_secs = self.timer.total("cal_logprob");
+        summary.train_secs = self.timer.total("grad") + self.timer.total("update");
+        summary.sync_secs = self.timer.total("sync");
+        Ok(summary)
+    }
+
+    /// Evaluate the current policy on the five suites.
+    pub fn evaluate(&mut self, seed: u64) -> Result<EvalReport> {
+        let cfg = self.trainer.cfg.eval.clone();
+        eval_all(&mut self.coord, &cfg, seed)
+    }
+
+    pub fn shutdown(self) {
+        self.coord.shutdown();
+    }
+}

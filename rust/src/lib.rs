@@ -1,0 +1,34 @@
+//! CoPRIS — Concurrency-Controlled Partial Rollout with Importance Sampling.
+//!
+//! Rust reproduction of Qu et al. (2025), structured as three layers:
+//! this crate is L3 (the coordinator — the paper's contribution), executing
+//! AOT-compiled JAX/Pallas artifacts (L2/L1) through the PJRT C API.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! - [`util`], [`cli`], [`config`], [`testkit`], [`bench`] — substrates that
+//!   the offline crate set forces us to hand-roll.
+//! - [`runtime`], [`model`] — PJRT artifact loading + typed model calls.
+//! - [`tokenizer`], [`tasks`], [`eval`] — the verifiable-reward math
+//!   workload standing in for DeepScaleR + the five benchmark suites.
+//! - [`engine`] — the vLLM stand-in: slot-based continuous batching with a
+//!   KV budget and preemption/re-prefill (recomputation) accounting.
+//! - [`coordinator`] — **the paper**: concurrency-controlled generation,
+//!   early termination, the partial-trajectory buffer with stage-tagged
+//!   log-probs, prioritized resumption; sync / naive-partial baselines.
+//! - [`trainer`] — GRPO with cross-stage importance-sampling correction.
+//! - [`exp`] — experiment drivers regenerating every paper table & figure.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod exp;
+pub mod model;
+pub mod runtime;
+pub mod tasks;
+pub mod testkit;
+pub mod tokenizer;
+pub mod trainer;
+pub mod util;

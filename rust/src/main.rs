@@ -1,0 +1,221 @@
+//! `copris` — CLI for the CoPRIS reproduction.
+//!
+//! Subcommands:
+//!   train   — SFT warmup + GRPO RL training (rollout mode per --set)
+//!   eval    — evaluate a checkpoint (or fresh init) on the five suites
+//!   config  — print a config preset as the paper's Table 3
+//!   trace   — one rollout stage; print the Fig-1 long-tail diagnostics
+//!
+//! Examples:
+//!   copris train --model small --steps 40 --sft-steps 150 --mode copris
+//!   copris train --model small --mode sync --set rollout.batch_prompts=8
+//!   copris config --preset paper
+//!   copris trace --model small --mode sync
+
+use anyhow::{bail, Context, Result};
+
+use copris::cli::Args;
+use copris::config::{preset, Config, RolloutMode};
+use copris::exp::RlSession;
+use copris::tasks::Dataset;
+use copris::trainer::MetricsLog;
+use copris::util::stats::ascii_histogram;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: copris <train|eval|config|trace> [options]\n\
+         common options:\n\
+           --model <variant>        artifacts/<variant> (default small)\n\
+           --artifacts <dir>        artifacts root (default artifacts)\n\
+           --mode <sync|naive|copris>\n\
+           --steps N  --sft-steps N --seed N  --verbose\n\
+           --concurrency N          CoPRIS pool size N'\n\
+           --no-is                  disable cross-stage IS correction\n\
+           --metrics <path.jsonl>   write per-step metrics\n\
+           --set section.key=value  any config override (repeatable)\n\
+           --preset <paper|scaled-small|scaled-tiny|sync-baseline>"
+    );
+    std::process::exit(2);
+}
+
+fn build_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get("preset") {
+        Some(p) => preset(p).with_context(|| format!("unknown preset {p:?}"))?,
+        None => {
+            let model = args.get("model").unwrap_or("small");
+            copris::config::scaled_preset(model)
+        }
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.rollout.mode = RolloutMode::parse(m)?;
+    }
+    if let Some(c) = args.get("concurrency") {
+        cfg.rollout.concurrency = c.parse()?;
+    }
+    if let Some(s) = args.get("steps") {
+        cfg.train.steps = s.parse()?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.train.seed = s.parse()?;
+    }
+    if args.flag("no-is") {
+        cfg.rollout.importance_sampling = false;
+    }
+    for kv in args.get_all("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .with_context(|| format!("--set expects key=value, got {kv:?}"))?;
+        cfg.set(k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let args = Args::parse(argv, &["verbose", "no-is", "no-eval"])?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "config" => cmd_config(&args),
+        "trace" => cmd_trace(&args),
+        _ => usage(),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let sft_steps = args.get_usize("sft-steps", 100)?;
+    let steps = cfg.train.steps;
+    println!(
+        "== copris train: model={} mode={} N'={} B={} G={} IS={} steps={steps} ==",
+        cfg.model,
+        cfg.rollout.mode.name(),
+        cfg.rollout.concurrency,
+        cfg.rollout.batch_prompts,
+        cfg.rollout.group_size,
+        cfg.rollout.importance_sampling,
+    );
+    let mut sess = RlSession::build(cfg)?;
+    sess.verbose = args.flag("verbose");
+    if let Some(path) = args.get("metrics") {
+        sess.log = MetricsLog::to_file(std::path::Path::new(path))?;
+    }
+    if sft_steps > 0 {
+        println!("-- SFT warmup ({sft_steps} steps) --");
+        let loss = sess.sft_warmup(sft_steps, 2)?;
+        println!("   final sft loss: {loss:.4}");
+    }
+    if !args.flag("no-eval") {
+        let base = sess.evaluate(1)?;
+        println!("-- basemodel eval --");
+        print_eval(&base);
+    }
+    println!("-- RL training ({steps} steps) --");
+    let summary = sess.train(steps)?;
+    println!(
+        "done: wall {:.1}s  throughput {:.2} samples/s  final reward {:.3}  util {:.0}%",
+        summary.wall,
+        summary.throughput,
+        summary.final_reward,
+        summary.mean_utilization * 100.0
+    );
+    println!(
+        "stage totals: rollout {:.1}s  cal_logprob {:.1}s  train {:.1}s  sync {:.1}s  preempt {}  replayed {}",
+        summary.rollout_secs,
+        summary.cal_logprob_secs,
+        summary.train_secs,
+        summary.sync_secs,
+        summary.preemptions,
+        summary.replayed_tokens
+    );
+    if !args.flag("no-eval") {
+        let report = sess.evaluate(2)?;
+        println!("-- final eval --");
+        print_eval(&report);
+    }
+    sess.shutdown();
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let mut sess = RlSession::build(cfg)?;
+    let report = sess.evaluate(args.get_u64("eval-seed", 2)?)?;
+    print_eval(&report);
+    sess.shutdown();
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let name = args.get("preset").unwrap_or("paper");
+    let Some(cfg) = preset(name) else { bail!("unknown preset {name:?}") };
+    println!("# preset: {name}\n");
+    println!("{}", cfg.render_table());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    println!("== rollout trace: mode={} ==", cfg.rollout.mode.name());
+    let mut sess = RlSession::build(cfg)?;
+    sess.verbose = args.flag("verbose");
+    let sft = args.get_usize("sft-steps", 30)?;
+    if sft > 0 {
+        sess.sft_warmup(sft, 1)?;
+    }
+    let mut ds = Dataset::train(7);
+    let out = sess.coord.rollout_stage(&mut ds)?;
+    let lens: Vec<f64> = out.stats.response_lengths.iter().map(|&l| l as f64).collect();
+    println!(
+        "stage: {:.2}s  completed {}  partials {}  util {:.0}%  peak inflight {}",
+        out.stats.wall,
+        out.stats.completed,
+        out.stats.partials_buffered,
+        out.stats.mean_utilization() * 100.0,
+        out.stats.peak_inflight
+    );
+    println!("\nresponse-length distribution (Fig 1a analogue):");
+    for row in ascii_histogram(&lens, 10, 40) {
+        println!("  {row}");
+    }
+    println!("\nper-engine utilization tail (Fig 1b analogue):");
+    for t in out.stats.traces.iter().rev().take(20).collect::<Vec<_>>().iter().rev() {
+        println!(
+            "  engine {} t={:.3}s active {}/{}",
+            t.engine, t.t_wall, t.active, t.slots
+        );
+    }
+    sess.shutdown();
+    Ok(())
+}
+
+fn print_eval(report: &copris::eval::EvalReport) {
+    for s in &report.suites {
+        println!(
+            "   {:<10} pass@1 {:.3}  ({} prompts × {} samples, mean len {:.1})",
+            s.name,
+            s.pass_at_1,
+            s.n_prompts,
+            s.n_samples / s.n_prompts.max(1),
+            s.mean_response_len
+        );
+    }
+    println!("   {:<10} {:.3}", "AVERAGE", report.average());
+}

@@ -1,0 +1,283 @@
+//! Typed model runtime: wraps the per-variant artifact set with shape-safe
+//! calls and owns device-resident state (train state, engine state).
+//!
+//! One `ModelRuntime` per thread (Device is thread-confined); engines load
+//! only {prefill, decode}, the trainer loads the rest — artifacts compile
+//! lazily on first use.
+
+pub mod state;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::runtime::{Device, Executable, Manifest};
+
+pub use state::TrainState;
+
+pub struct ModelRuntime {
+    pub spec: Manifest,
+    pub device: Device,
+    exes: HashMap<&'static str, Executable>,
+}
+
+/// Metrics head of grad/sft_grad outputs (indices into the first 8 floats).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GradMetrics {
+    pub loss_sum: f32,
+    pub ent_sum: f32,
+    pub ratio_sum: f32,
+    pub ratio_max: f32,
+    pub clip_sum: f32,
+    pub kl_sum: f32,
+    pub token_count: f32,
+    pub grad_norm: f32,
+}
+
+impl GradMetrics {
+    pub fn from_head(head: &[f32]) -> GradMetrics {
+        GradMetrics {
+            loss_sum: head[0],
+            ent_sum: head[1],
+            ratio_sum: head[2],
+            ratio_max: head[3],
+            clip_sum: head[4],
+            kl_sum: head[5],
+            token_count: head[6],
+            grad_norm: head[7],
+        }
+    }
+
+    /// SFT metrics layout: [loss_sum, token_count, grad_norm, 0...].
+    pub fn from_sft_head(head: &[f32]) -> GradMetrics {
+        GradMetrics {
+            loss_sum: head[0],
+            token_count: head[1],
+            grad_norm: head[2],
+            ..Default::default()
+        }
+    }
+}
+
+impl ModelRuntime {
+    /// Load the manifest for `variant` under `artifacts_dir`.
+    pub fn open(artifacts_dir: &str, variant: &str) -> Result<ModelRuntime> {
+        let dir = Path::new(artifacts_dir).join(variant);
+        let spec = Manifest::load(&dir)?;
+        let device = Device::cpu()?;
+        Ok(ModelRuntime { spec, device, exes: HashMap::new() })
+    }
+
+    fn exe(&mut self, name: &'static str) -> Result<&Executable> {
+        if !self.exes.contains_key(name) {
+            let path = self.spec.artifact_path(name)?;
+            let exe = self
+                .device
+                .load_hlo(&path)
+                .with_context(|| format!("loading artifact {name}"))?;
+            self.exes.insert(name, exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Pre-compile a set of artifacts (so timing runs exclude compile cost).
+    pub fn warmup(&mut self, names: &[&'static str]) -> Result<()> {
+        for n in names {
+            self.exe(n)?;
+        }
+        Ok(())
+    }
+
+    // -- init / weights -----------------------------------------------------
+
+    /// Fresh train state f32[3N] from a seed.
+    pub fn init_state(&mut self, seed: i32) -> Result<PjRtBuffer> {
+        let seed_buf = self.device.upload_i32(&[seed])?;
+        self.exe("init")?.run1(&[&seed_buf])
+    }
+
+    /// Host copy of the parameter vector (first N of the train state) —
+    /// the weight-sync payload broadcast to engines after each update.
+    /// Slices device-side (`read_params` artifact) so the Adam moments
+    /// never cross to the host.
+    pub fn params_to_host(&mut self, state: &PjRtBuffer) -> Result<Vec<f32>> {
+        let n = self.spec.n_params;
+        let p = self.exe("read_params")?.run1(&[state])?;
+        self.device.read_all_f32(&p, n)
+    }
+
+    /// Upload a parameter vector received via weight sync.
+    pub fn upload_params(&self, params: &[f32]) -> Result<PjRtBuffer> {
+        ensure!(params.len() == self.spec.n_params, "bad params length");
+        self.device.upload_f32(params)
+    }
+
+    /// Fresh zeroed engine state (logits header ++ KV cache).
+    pub fn fresh_engine_state(&self) -> Result<PjRtBuffer> {
+        self.device.zeros_f32(self.spec.engine_state_elems)
+    }
+
+    // -- rollout path --------------------------------------------------------
+
+    /// Prefill `prompt` (≤ p_max tokens) into `slot`; returns the new engine
+    /// state and the next-token logits for that slot.
+    pub fn prefill(
+        &mut self,
+        params: &PjRtBuffer,
+        engine_state: &PjRtBuffer,
+        prompt: &[i32],
+        slot: usize,
+    ) -> Result<(PjRtBuffer, Vec<f32>)> {
+        let pmax = self.spec.p_max;
+        ensure!(!prompt.is_empty() && prompt.len() <= pmax, "prompt len {} > p_max {pmax}", prompt.len());
+        ensure!(slot < self.spec.slots, "slot {slot} out of range");
+        let mut padded = vec![0i32; pmax];
+        padded[..prompt.len()].copy_from_slice(prompt);
+        let toks = self.device.upload_i32(&padded)?;
+        let len = self.device.upload_i32(&[prompt.len() as i32])?;
+        let slot_b = self.device.upload_i32(&[slot as i32])?;
+        let out = self.exe("prefill")?.run1(&[params, engine_state, &toks, &len, &slot_b])?;
+        let v = self.spec.vocab;
+        let header = self.read_header(&out)?;
+        let logits = header[slot * v..(slot + 1) * v].to_vec();
+        Ok((out, logits))
+    }
+
+    /// One decode step over all S slots; returns (engine state, logits S×V).
+    pub fn decode(
+        &mut self,
+        params: &PjRtBuffer,
+        engine_state: &PjRtBuffer,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<(PjRtBuffer, Vec<f32>)> {
+        let s = self.spec.slots;
+        ensure!(tokens.len() == s && pos.len() == s, "decode arg length");
+        let t = self.device.upload_i32(tokens)?;
+        let p = self.device.upload_i32(pos)?;
+        let out = self.exe("decode")?.run1(&[params, engine_state, &t, &p])?;
+        let logits = self.read_header(&out)?;
+        Ok((out, logits))
+    }
+
+    /// Chunked re-prefill of resume tokens for one slot (≤ p_max per call;
+    /// caller guarantees start + p_max ≤ max_seq — see replay_artifact).
+    /// Returns the new engine state and the logits after the last real
+    /// token (chunk index `n-1`).
+    pub fn replay(
+        &mut self,
+        params: &PjRtBuffer,
+        engine_state: &PjRtBuffer,
+        chunk: &[i32],
+        start: usize,
+        slot: usize,
+    ) -> Result<(PjRtBuffer, Vec<f32>)> {
+        let pmax = self.spec.p_max;
+        ensure!(!chunk.is_empty() && chunk.len() <= pmax, "replay chunk size");
+        ensure!(start + pmax <= self.spec.max_seq, "replay too close to horizon");
+        let n = chunk.len();
+        let mut padded = vec![0i32; pmax];
+        padded[..n].copy_from_slice(chunk);
+        let toks = self.device.upload_i32(&padded)?;
+        let start_b = self.device.upload_i32(&[start as i32])?;
+        let slot_b = self.device.upload_i32(&[slot as i32])?;
+        let last_b = self.device.upload_i32(&[(n - 1) as i32])?;
+        let out = self
+            .exe("replay")?
+            .run1(&[params, engine_state, &toks, &start_b, &slot_b, &last_b])?;
+        let v = self.spec.vocab;
+        let header = self.read_header(&out)?;
+        let logits = header[slot * v..(slot + 1) * v].to_vec();
+        Ok((out, logits))
+    }
+
+    // -- training path -------------------------------------------------------
+
+    /// Per-token log-probs + entropies under the current policy.
+    /// `tokens` is a row-major [B, T] batch; returns (lp, ent), each
+    /// row-major [B, T-1].
+    pub fn logprob(&mut self, state: &PjRtBuffer, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (b, t) = (self.spec.b_micro, self.spec.t_train);
+        ensure!(tokens.len() == b * t, "logprob batch shape");
+        let tb = self.device.upload_i32_2d(tokens, b, t)?;
+        let out = self.exe("logprob")?.run1(&[state, &tb])?;
+        let n = b * (t - 1);
+        let all = self.device.read_all_f32(&out, 2 * n)?;
+        Ok((all[..n].to_vec(), all[n..].to_vec()))
+    }
+
+    /// GRPO gradient over one microbatch. Returns the [8+N] grad buffer
+    /// (device-resident) and the host metrics head.
+    pub fn grad(
+        &mut self,
+        state: &PjRtBuffer,
+        tokens: &[i32],
+        resp_mask: &[f32],
+        behav_lp: &[f32],
+        adv: &[f32],
+    ) -> Result<(PjRtBuffer, GradMetrics)> {
+        let (b, t) = (self.spec.b_micro, self.spec.t_train);
+        ensure!(tokens.len() == b * t, "grad tokens shape");
+        ensure!(resp_mask.len() == b * (t - 1), "grad mask shape");
+        ensure!(behav_lp.len() == b * (t - 1), "grad behav_lp shape");
+        ensure!(adv.len() == b, "grad adv shape");
+        let tb = self.device.upload_i32_2d(tokens, b, t)?;
+        let mb = self.device.upload_f32_2d(resp_mask, b, t - 1)?;
+        let lb = self.device.upload_f32_2d(behav_lp, b, t - 1)?;
+        let ab = self.device.upload_f32(adv)?;
+        let out = self.exe("grad")?.run1(&[state, &tb, &mb, &lb, &ab])?;
+        let head = self.read_metrics(&out)?;
+        Ok((out, GradMetrics::from_head(&head)))
+    }
+
+    /// SFT gradient over one microbatch (same output packing as `grad`).
+    pub fn sft_grad(
+        &mut self,
+        state: &PjRtBuffer,
+        tokens: &[i32],
+        resp_mask: &[f32],
+    ) -> Result<(PjRtBuffer, GradMetrics)> {
+        let (b, t) = (self.spec.b_micro, self.spec.t_train);
+        ensure!(tokens.len() == b * t && resp_mask.len() == b * (t - 1), "sft shapes");
+        let tb = self.device.upload_i32_2d(tokens, b, t)?;
+        let mb = self.device.upload_f32_2d(resp_mask, b, t - 1)?;
+        let out = self.exe("sft_grad")?.run1(&[state, &tb, &mb])?;
+        let head = self.read_metrics(&out)?;
+        Ok((out, GradMetrics::from_sft_head(&head)))
+    }
+
+    /// Device-side slice reads (CopyRawToHost is unavailable on PJRT-CPU).
+    fn read_header(&mut self, engine_state: &PjRtBuffer) -> Result<Vec<f32>> {
+        let h = self.exe("read_header")?.run1(&[engine_state])?;
+        self.device.read_all_f32(&h, self.spec.header_elems())
+    }
+
+    fn read_metrics(&mut self, grads: &PjRtBuffer) -> Result<Vec<f32>> {
+        let m = self.exe("read_metrics")?.run1(&[grads])?;
+        self.device.read_all_f32(&m, self.spec.n_metrics)
+    }
+
+    /// a + scale·b over [8+N] grad buffers (device-side accumulation).
+    pub fn accum(&mut self, a: &PjRtBuffer, b: &PjRtBuffer, scale: f32) -> Result<PjRtBuffer> {
+        let s = self.device.upload_f32(&[scale])?;
+        self.exe("accum")?.run1(&[a, b, &s])
+    }
+
+    /// Adam update: `grad_scale` should be 1/total_masked_tokens so the
+    /// accumulated token-sum gradients become an exact token-mean step.
+    pub fn update(
+        &mut self,
+        state: &PjRtBuffer,
+        grads: &PjRtBuffer,
+        step: i32,
+        lr: f32,
+        grad_scale: f32,
+    ) -> Result<PjRtBuffer> {
+        let sb = self.device.upload_i32(&[step])?;
+        let lrb = self.device.upload_f32(&[lr])?;
+        let gs = self.device.upload_f32(&[grad_scale])?;
+        self.exe("update")?.run1(&[state, grads, &sb, &lrb, &gs])
+    }
+}

@@ -1,0 +1,77 @@
+//! Device-resident training state (params ++ adam m ++ adam v) with
+//! checkpoint save/load as raw little-endian f32 files.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+use xla::PjRtBuffer;
+
+use super::ModelRuntime;
+
+/// Owns the packed train-state buffer plus the optimizer step counter.
+pub struct TrainState {
+    pub buffer: PjRtBuffer,
+    pub step: i32,
+}
+
+impl TrainState {
+    pub fn init(rt: &mut ModelRuntime, seed: i32) -> Result<TrainState> {
+        Ok(TrainState { buffer: rt.init_state(seed)?, step: 0 })
+    }
+
+    /// Apply an accumulated gradient buffer (metrics head ++ grads).
+    pub fn apply_update(
+        &mut self,
+        rt: &mut ModelRuntime,
+        grads: &PjRtBuffer,
+        lr: f32,
+        grad_scale: f32,
+    ) -> Result<()> {
+        self.step += 1;
+        self.buffer = rt.update(&self.buffer, grads, self.step, lr, grad_scale)?;
+        Ok(())
+    }
+
+    /// Serialize the full 3N state + step to `path` (raw LE f32 + header).
+    pub fn save(&self, rt: &mut ModelRuntime, path: &Path) -> Result<()> {
+        let n = rt.spec.state_elems;
+        let data = rt.device.read_all_f32(&self.buffer, n)?;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(b"CPRS")?;
+        f.write_all(&(self.step as u32).to_le_bytes())?;
+        f.write_all(&(n as u64).to_le_bytes())?;
+        for x in &data {
+            f.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint written by `save`.
+    pub fn load(rt: &mut ModelRuntime, path: &Path) -> Result<TrainState> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        ensure!(&magic == b"CPRS", "bad checkpoint magic");
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let step = u32::from_le_bytes(b4) as i32;
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        ensure!(n == rt.spec.state_elems, "checkpoint size {n} != spec {}", rt.spec.state_elems);
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let buffer = rt.device.upload_f32(&data)?;
+        Ok(TrainState { buffer, step })
+    }
+}

@@ -1,0 +1,142 @@
+//! Parse `artifacts/<variant>/manifest.json` written by python/compile/aot.py
+//! — the single source of truth for every shape the runtime needs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Mirror of `python/compile/spec.py::ModelSpec` + derived sizes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub slots: usize,
+    pub p_max: usize,
+    pub b_micro: usize,
+    pub d_head: usize,
+    pub t_train: usize,
+    pub n_params: usize,
+    pub kv_elems: usize,
+    pub state_elems: usize,
+    pub engine_state_elems: usize,
+    pub grad_elems: usize,
+    pub n_metrics: usize,
+    pub artifacts: BTreeMap<String, String>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = json::parse(text)?;
+        let get_usize = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing numeric field {k:?}"))
+        };
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("artifacts") {
+            for (k, val) in m {
+                if let Some(s) = val.as_str() {
+                    artifacts.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(Manifest {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .context("manifest missing name")?
+                .to_string(),
+            vocab: get_usize("vocab")?,
+            d_model: get_usize("d_model")?,
+            n_layers: get_usize("n_layers")?,
+            n_heads: get_usize("n_heads")?,
+            d_ff: get_usize("d_ff")?,
+            max_seq: get_usize("max_seq")?,
+            slots: get_usize("slots")?,
+            p_max: get_usize("p_max")?,
+            b_micro: get_usize("b_micro")?,
+            d_head: get_usize("d_head")?,
+            t_train: get_usize("t_train")?,
+            n_params: get_usize("n_params")?,
+            kv_elems: get_usize("kv_elems")?,
+            state_elems: get_usize("state_elems")?,
+            engine_state_elems: get_usize("engine_state_elems")?,
+            grad_elems: get_usize("grad_elems")?,
+            n_metrics: get_usize("n_metrics")?,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Path of one artifact's HLO text.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let file = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("manifest {} has no artifact {name:?}", self.name))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Size of the logits header at the front of the engine state.
+    pub fn header_elems(&self) -> usize {
+        self.slots * self.vocab
+    }
+
+    /// Max response tokens for a prompt of `prompt_len`.
+    pub fn max_new_tokens(&self, prompt_len: usize) -> usize {
+        self.max_seq.saturating_sub(prompt_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "name": "tiny", "d_model": 64, "n_layers": 2, "n_heads": 2,
+        "d_ff": 256, "max_seq": 96, "slots": 4, "p_max": 24, "b_micro": 4,
+        "vocab": 48, "n_params": 108480, "kv_elems": 98304, "d_head": 32,
+        "t_train": 96, "kv_shape": [2,2,4,2,96,32],
+        "state_elems": 325440, "engine_state_elems": 98496,
+        "grad_elems": 108488, "n_metrics": 8,
+        "artifacts": {"init": "init.hlo.txt", "decode": "decode.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_all_fields() {
+        let m = Manifest::parse(DOC, Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.n_params, 108480);
+        assert_eq!(m.state_elems, 3 * m.n_params);
+        assert_eq!(m.engine_state_elems, m.slots * m.vocab + m.kv_elems);
+        assert_eq!(m.header_elems(), 4 * 48);
+        assert_eq!(m.max_new_tokens(20), 76);
+        assert_eq!(
+            m.artifact_path("init").unwrap(),
+            PathBuf::from("/tmp/x/init.hlo.txt")
+        );
+        assert!(m.artifact_path("nope").is_err());
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        assert!(Manifest::parse(r#"{"name": "x"}"#, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile, execute.
+//!
+//! Interchange format is HLO **text** (`HloModuleProto::from_text_file`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see aot.py / DESIGN.md).
+//!
+//! Every artifact has exactly ONE flat-array output, so `Executable::run1`
+//! hands back a plain `PjRtBuffer` that can be threaded into the next call
+//! via `execute_b` without host round-trips. Host reads happen only on
+//! buffer *prefixes* (logits headers, metrics heads) via offset copies.
+//!
+//! Thread model: `PjRtClient` is `Rc`-based (not `Send`), so each engine /
+//! trainer thread owns its own `Device`. Weights move between threads as
+//! host `Vec<f32>` — the explicit "weight sync" stage real RL systems have.
+
+pub mod manifest;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::Manifest;
+
+/// One PJRT CPU device, thread-confined.
+pub struct Device {
+    client: xla::PjRtClient,
+}
+
+impl Device {
+    pub fn cpu() -> Result<Device> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Device { client })
+    }
+
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(wrap)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(wrap)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    pub fn upload_f32(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, &[data.len()], None).map_err(wrap)
+    }
+
+    pub fn upload_f32_2d(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        debug_assert_eq!(data.len(), rows * cols);
+        self.client.buffer_from_host_buffer(data, &[rows, cols], None).map_err(wrap)
+    }
+
+    pub fn upload_i32(&self, data: &[i32]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, &[data.len()], None).map_err(wrap)
+    }
+
+    pub fn upload_i32_2d(&self, data: &[i32], rows: usize, cols: usize) -> Result<xla::PjRtBuffer> {
+        debug_assert_eq!(data.len(), rows * cols);
+        self.client.buffer_from_host_buffer(data, &[rows, cols], None).map_err(wrap)
+    }
+
+    pub fn zeros_f32(&self, n: usize) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(&vec![0f32; n])
+    }
+
+    /// Read an entire f32 buffer to the host.
+    ///
+    /// PJRT-CPU 0.5.1 does not implement `CopyRawToHost`, so there are no
+    /// partial reads — hot paths keep big buffers device-side and extract
+    /// small windows with the `read_*` slice artifacts before reading.
+    pub fn read_all_f32(&self, buf: &xla::PjRtBuffer, len: usize) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(wrap)?;
+        let v: Vec<f32> = lit.to_vec().map_err(wrap)?;
+        if v.len() != len {
+            bail!("read_all_f32: expected {len} elems, got {}", v.len());
+        }
+        Ok(v)
+    }
+}
+
+/// A compiled artifact with a single array output.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute on device buffers, returning the single output buffer.
+    pub fn run1(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let mut outs = self.exe.execute_b(args).map_err(wrap)?;
+        let mut replica = outs
+            .drain(..)
+            .next()
+            .with_context(|| format!("{}: no replica output", self.name))?;
+        if replica.len() != 1 {
+            bail!("{}: expected 1 output buffer, got {}", self.name, replica.len());
+        }
+        Ok(replica.remove(0))
+    }
+}
+
+/// Adapt xla::Error (not anyhow-compatible) via Display.
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}

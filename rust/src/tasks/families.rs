@@ -1,0 +1,238 @@
+//! Procedural task families with verifiable answers.
+//!
+//! Response length varies a lot across families/levels (Countdown answers
+//! grow linearly with the operand) — that heterogeneity is what produces
+//! the paper's Fig-1 long-tail rollout distribution on this substrate.
+
+use crate::util::Rng;
+
+/// A generated problem instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Task {
+    pub family: Family,
+    pub level: u8,
+    pub prompt: String,
+    pub answer: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// "12+7+30=" → "49"  (multi-operand addition/subtraction)
+    AddChain,
+    /// "(13*7+5)%10=" → "1"  (modular arithmetic)
+    ModArith,
+    /// "c12>" → "12 11 10 ... 0"  (count down; long variable-length answers)
+    Countdown,
+    /// "r1234=" → "4321"  (string reversal)
+    Reverse,
+    /// "m17,25=" → "25"  (maximum of a list)
+    MaxList,
+}
+
+impl Family {
+    pub const ALL: [Family; 5] = [
+        Family::AddChain,
+        Family::ModArith,
+        Family::Countdown,
+        Family::Reverse,
+        Family::MaxList,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::AddChain => "add_chain",
+            Family::ModArith => "mod_arith",
+            Family::Countdown => "countdown",
+            Family::Reverse => "reverse",
+            Family::MaxList => "max_list",
+        }
+    }
+
+    /// Generate one instance at `level` (0 = easiest).
+    pub fn generate(&self, rng: &mut Rng, level: u8) -> Task {
+        let lv = level as i64;
+        match self {
+            Family::AddChain => {
+                let terms = 2 + lv.min(3);
+                let hi = [9, 20, 50, 99][level.min(3) as usize];
+                let mut vals = Vec::new();
+                let mut expr = String::new();
+                let mut total: i64 = 0;
+                for i in 0..terms {
+                    let v = rng.range_i64(0, hi);
+                    let sub = i > 0 && rng.next_f64() < 0.3 && total - v >= 0;
+                    if i == 0 {
+                        expr.push_str(&v.to_string());
+                        total = v;
+                    } else if sub {
+                        expr.push('-');
+                        expr.push_str(&v.to_string());
+                        total -= v;
+                    } else {
+                        expr.push('+');
+                        expr.push_str(&v.to_string());
+                        total += v;
+                    }
+                    vals.push(v);
+                }
+                expr.push('=');
+                Task { family: *self, level, prompt: expr, answer: total.to_string() }
+            }
+            Family::ModArith => {
+                let hi = [9, 15, 30, 60][level.min(3) as usize];
+                let a = rng.range_i64(1, hi);
+                let b = rng.range_i64(1, hi.min(12));
+                let c = rng.range_i64(0, hi);
+                let m = rng.range_i64(2, 10);
+                let val = (a * b + c).rem_euclid(m);
+                Task {
+                    family: *self,
+                    level,
+                    prompt: format!("({a}*{b}+{c})%{m}="),
+                    answer: val.to_string(),
+                }
+            }
+            Family::Countdown => {
+                // Deep levels produce long answers — the dominant source of
+                // the Fig-1 long-tail length heterogeneity on this substrate.
+                let hi = [5, 9, 14, 22, 32, 44][level.min(5) as usize];
+                let start = rng.range_i64(2, hi);
+                let answer =
+                    (0..=start).rev().map(|i| i.to_string()).collect::<Vec<_>>().join(" ");
+                Task { family: *self, level, prompt: format!("c{start}>"), answer }
+            }
+            Family::Reverse => {
+                let len = [3, 4, 6, 8][level.min(3) as usize];
+                let digits: String =
+                    (0..len).map(|_| char::from(b'0' + rng.below(10) as u8)).collect();
+                let answer: String = digits.chars().rev().collect();
+                Task { family: *self, level, prompt: format!("r{digits}="), answer }
+            }
+            Family::MaxList => {
+                let n = 2 + (lv / 2).min(2);
+                let hi = [9, 30, 99, 99][level.min(3) as usize];
+                let vals: Vec<i64> = (0..n).map(|_| rng.range_i64(0, hi)).collect();
+                let answer = vals.iter().max().unwrap().to_string();
+                let list = vals.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",");
+                Task { family: *self, level, prompt: format!("m{list}="), answer }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::Tokenizer;
+
+    fn check_family(f: Family) {
+        let mut rng = Rng::new(1);
+        let tk = Tokenizer::new();
+        for level in 0..4u8 {
+            for _ in 0..50 {
+                let t = f.generate(&mut rng, level);
+                assert!(!t.prompt.is_empty() && !t.answer.is_empty());
+                // Everything must round-trip through the tokenizer.
+                assert_eq!(tk.decode(&tk.encode(&t.prompt)), t.prompt, "{t:?}");
+                assert_eq!(tk.decode(&tk.encode(&t.answer)), t.answer, "{t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_families_tokenizable() {
+        for f in Family::ALL {
+            check_family(f);
+        }
+    }
+
+    #[test]
+    fn add_chain_answers_are_correct_sums() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let t = Family::AddChain.generate(&mut rng, 2);
+            // Re-evaluate the expression left to right.
+            let expr = t.prompt.trim_end_matches('=');
+            let mut total = 0i64;
+            let mut num = String::new();
+            let mut sign = 1i64;
+            for c in expr.chars().chain(std::iter::once('+')) {
+                if c.is_ascii_digit() {
+                    num.push(c);
+                } else {
+                    total += sign * num.parse::<i64>().unwrap();
+                    num.clear();
+                    sign = if c == '-' { -1 } else { 1 };
+                }
+            }
+            assert_eq!(total.to_string(), t.answer, "{}", t.prompt);
+        }
+    }
+
+    #[test]
+    fn mod_arith_in_range() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let t = Family::ModArith.generate(&mut rng, 3);
+            let v: i64 = t.answer.parse().unwrap();
+            assert!((0..10).contains(&v));
+        }
+    }
+
+    #[test]
+    fn countdown_lengths_grow_with_level() {
+        let mut rng = Rng::new(4);
+        let mean_len = |level: u8, rng: &mut Rng| -> f64 {
+            (0..100)
+                .map(|_| Family::Countdown.generate(rng, level).answer.len())
+                .sum::<usize>() as f64
+                / 100.0
+        };
+        let l0 = mean_len(0, &mut rng);
+        let l3 = mean_len(3, &mut rng);
+        assert!(l3 > l0 * 1.5, "length heterogeneity missing: {l0} vs {l3}");
+    }
+
+    #[test]
+    fn countdown_is_correct_sequence() {
+        let mut rng = Rng::new(5);
+        let t = Family::Countdown.generate(&mut rng, 1);
+        let start: i64 = t.prompt[1..t.prompt.len() - 1].parse().unwrap();
+        let parts: Vec<i64> =
+            t.answer.split(' ').map(|s| s.parse().unwrap()).collect();
+        assert_eq!(parts[0], start);
+        assert_eq!(*parts.last().unwrap(), 0);
+        for w in parts.windows(2) {
+            assert_eq!(w[0] - 1, w[1]);
+        }
+    }
+
+    #[test]
+    fn reverse_is_involution() {
+        let mut rng = Rng::new(6);
+        for _ in 0..50 {
+            let t = Family::Reverse.generate(&mut rng, 2);
+            let digits = &t.prompt[1..t.prompt.len() - 1];
+            let rev: String = t.answer.chars().rev().collect();
+            assert_eq!(digits, rev);
+        }
+    }
+
+    #[test]
+    fn max_list_is_max() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let t = Family::MaxList.generate(&mut rng, 3);
+            let list = &t.prompt[1..t.prompt.len() - 1];
+            let max = list.split(',').map(|s| s.parse::<i64>().unwrap()).max().unwrap();
+            assert_eq!(max.to_string(), t.answer);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let t1 = Family::ModArith.generate(&mut Rng::new(9), 1);
+        let t2 = Family::ModArith.generate(&mut Rng::new(9), 1);
+        assert_eq!(t1, t2);
+    }
+}

@@ -1,0 +1,17 @@
+//! Verifiable-reward math tasks — the DeepScaleR-Preview stand-in.
+//!
+//! Each family generates (prompt, answer) pairs procedurally with a
+//! difficulty level; the reward is rule-based exact match on the final
+//! answer (paper §A.1: reward 1 at the last token iff correct, else 0).
+//! `suites` defines the five held-out eval suites standing in for
+//! AIME24 / AIME25 / AMC / MinervaMath / OlympiadBench.
+
+pub mod dataset;
+pub mod families;
+pub mod suites;
+pub mod verifier;
+
+pub use dataset::Dataset;
+pub use families::{Family, Task};
+pub use suites::{eval_suites, Suite};
+pub use verifier::{normalize_answer, reward};

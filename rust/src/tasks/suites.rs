@@ -1,0 +1,82 @@
+//! The five held-out evaluation suites standing in for the paper's
+//! AIME24 / AIME25 / AMC / MinervaMath / OlympiadBench.
+//!
+//! Each suite fixes a family + level band and a seed space disjoint from
+//! training (`Dataset` uses xor-tagged seeds), so suite prompts are never
+//! seen during RL.
+
+use super::families::{Family, Task};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Suite {
+    /// Paper benchmark this stands in for.
+    pub name: &'static str,
+    pub family: Family,
+    pub levels: Vec<u8>,
+    seed_tag: u64,
+}
+
+impl Suite {
+    /// Deterministic prompt set of size `n`.
+    pub fn tasks(&self, n: usize, seed: u64) -> Vec<Task> {
+        let mut rng = Rng::new(seed ^ self.seed_tag ^ 0xe7a1_5u64);
+        (0..n)
+            .map(|_| {
+                let l = self.levels[rng.below(self.levels.len() as u64) as usize];
+                self.family.generate(&mut rng, l)
+            })
+            .collect()
+    }
+}
+
+/// The five suites, difficulty-ordered like the paper's benchmarks
+/// (AIME hardest → AMC/Minerva medium → Olympiad long-form).
+pub fn eval_suites() -> Vec<Suite> {
+    vec![
+        Suite { name: "AIME24*", family: Family::ModArith, levels: vec![2, 3], seed_tag: 0xa124 },
+        Suite { name: "AIME25*", family: Family::AddChain, levels: vec![2, 3], seed_tag: 0xa125 },
+        Suite { name: "AMC*", family: Family::MaxList, levels: vec![1, 2], seed_tag: 0xacc },
+        Suite { name: "Minerva*", family: Family::Reverse, levels: vec![1, 2], seed_tag: 0x31e6 },
+        Suite { name: "Olympiad*", family: Family::Countdown, levels: vec![1, 2, 3], seed_tag: 0x01b1 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_suites_with_unique_names_and_families() {
+        let suites = eval_suites();
+        assert_eq!(suites.len(), 5);
+        let names: std::collections::HashSet<_> = suites.iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), 5);
+        let fams: std::collections::HashSet<_> = suites.iter().map(|s| s.family).collect();
+        assert_eq!(fams.len(), 5);
+    }
+
+    #[test]
+    fn suite_tasks_deterministic() {
+        let s = &eval_suites()[0];
+        assert_eq!(s.tasks(10, 7), s.tasks(10, 7));
+        assert_ne!(s.tasks(10, 7), s.tasks(10, 8));
+    }
+
+    #[test]
+    fn suites_disjoint_from_each_other() {
+        let suites = eval_suites();
+        let a = suites[0].tasks(10, 7);
+        let b = suites[1].tasks(10, 7);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn suite_levels_respected() {
+        for s in eval_suites() {
+            for t in s.tasks(30, 1) {
+                assert!(s.levels.contains(&t.level), "{} level {}", s.name, t.level);
+            }
+        }
+    }
+}

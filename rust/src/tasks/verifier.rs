@@ -1,0 +1,49 @@
+//! Rule-based reward: exact match of the extracted final answer
+//! (paper §A.1 — reward 1 at the final token iff correct, else 0).
+
+/// Canonical form: trim, collapse internal whitespace runs, strip a
+/// leading '+' on signed integers.
+pub fn normalize_answer(s: &str) -> String {
+    let collapsed: Vec<&str> = s.split_whitespace().collect();
+    let joined = collapsed.join(" ");
+    joined.strip_prefix('+').unwrap_or(&joined).to_string()
+}
+
+/// 0/1 reward for a generated answer against the reference.
+pub fn reward(generated: &str, reference: &str) -> f64 {
+    if normalize_answer(generated) == normalize_answer(reference) { 1.0 } else { 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match_scores_one() {
+        assert_eq!(reward("42", "42"), 1.0);
+        assert_eq!(reward("43", "42"), 0.0);
+    }
+
+    #[test]
+    fn whitespace_is_normalized() {
+        assert_eq!(reward("  10 9  8 ", "10 9 8"), 1.0);
+        assert_eq!(normalize_answer("a\t b\n c"), "a b c");
+    }
+
+    #[test]
+    fn leading_plus_is_stripped() {
+        assert_eq!(reward("+5", "5"), 1.0);
+    }
+
+    #[test]
+    fn empty_vs_nonempty() {
+        assert_eq!(reward("", "0"), 0.0);
+        assert_eq!(reward("", ""), 1.0);
+    }
+
+    #[test]
+    fn prefix_is_not_enough() {
+        assert_eq!(reward("4", "42"), 0.0);
+        assert_eq!(reward("422", "42"), 0.0);
+    }
+}

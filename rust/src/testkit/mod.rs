@@ -1,0 +1,116 @@
+//! Property-testing mini-framework (proptest is not in the vendored crate
+//! set) + shared test helpers.
+//!
+//! `prop_check` runs `cases` random trials from a seeded generator; on
+//! failure it reports the case index and root seed so the run is exactly
+//! reproducible (override via env `COPRIS_PROP_SEED`).
+
+use crate::util::Rng;
+
+/// Number of cases per property (kept modest; engines are in the loop).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run a property over generated inputs; panics with a reproducible report
+/// on the first failure.
+pub fn prop_check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    generate: impl Fn(&mut Rng) -> T,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    let seed = std::env::var("COPRIS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.fork(case as u64);
+        let input = generate(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (seed {seed}):\n  \
+                 input: {input:?}\n  {msg}\n  \
+                 reproduce with COPRIS_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers returning Result<(), String>.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {}  ({a:?} vs {b:?})",
+                stringify!($a),
+                stringify!($b)
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        prop_check(
+            "sum-commutes",
+            32,
+            |rng| (rng.range_i64(-100, 100), rng.range_i64(-100, 100)),
+            |(a, b)| {
+                counter.set(counter.get() + 1);
+                if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+            },
+        );
+        count += counter.get();
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn failing_property_panics_with_seed() {
+        prop_check("always-fails", 4, |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generation_is_deterministic_across_runs() {
+        let collect = || {
+            let mut v = Vec::new();
+            prop_check(
+                "collect",
+                8,
+                |rng| rng.next_u64(),
+                |x| {
+                    // Properties must not mutate, so we copy out via ptr trick:
+                    // simplest is to recompute; here we just check determinism
+                    // by re-deriving in the second closure call.
+                    let _ = x;
+                    Ok(())
+                },
+            );
+            // Re-derive the same stream manually.
+            let mut root = Rng::new(0xC0FFEE);
+            for case in 0..8u64 {
+                let mut rng = root.fork(case);
+                v.push(rng.next_u64());
+            }
+            v
+        };
+        assert_eq!(collect(), collect());
+    }
+}

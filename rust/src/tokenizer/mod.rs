@@ -1,0 +1,174 @@
+//! Char-level tokenizer over the 48-symbol math vocabulary.
+//!
+//! The vocab size must match `python/compile/spec.py::VOCAB`; token ids are
+//! stable because both sides derive them from the same ordered alphabet.
+
+/// Special tokens.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+/// Separates chain-of-thought from the final answer in responses.
+pub const ANS: i32 = 3;
+
+/// Ordered alphabet for ids 4.. (index 0..=3 are specials).
+const ALPHABET: &str = "0123456789+-*/%=()<>, rcsmx?";
+
+/// Vocabulary size — must equal python/compile/spec.py::VOCAB.
+pub const VOCAB: usize = 48;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    to_id: [i32; 128],
+    to_char: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut to_id = [-1i32; 128];
+        let mut to_char = vec!['\0'; VOCAB];
+        to_char[ANS as usize] = '#'; // printable marker for decode()
+        for (i, c) in ALPHABET.chars().enumerate() {
+            let id = 4 + i as i32;
+            assert!((id as usize) < VOCAB, "alphabet exceeds vocab");
+            to_id[c as usize] = id;
+            to_char[id as usize] = c;
+        }
+        Tokenizer { to_id, to_char }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB
+    }
+
+    /// Encode text (chars not in the alphabet are skipped).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .filter_map(|c| {
+                if c == '#' {
+                    Some(ANS)
+                } else {
+                    let u = c as usize;
+                    if u < 128 && self.to_id[u] >= 0 { Some(self.to_id[u]) } else { None }
+                }
+            })
+            .collect()
+    }
+
+    /// Encode a prompt with BOS prefix.
+    pub fn encode_prompt(&self, text: &str) -> Vec<i32> {
+        let mut v = vec![BOS];
+        v.extend(self.encode(text));
+        v
+    }
+
+    /// Decode ids to text; stops at EOS, skips PAD/BOS.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            match id {
+                EOS => break,
+                PAD | BOS => continue,
+                id if (id as usize) < VOCAB => {
+                    let c = self.to_char[id as usize];
+                    if c != '\0' {
+                        out.push(c);
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// The final answer segment of a response: text after the last '#'
+    /// (ANS marker), trimmed. If no marker, the whole trimmed response.
+    pub fn extract_answer(&self, response_ids: &[i32]) -> String {
+        let text = self.decode(response_ids);
+        match text.rfind('#') {
+            Some(i) => text[i + 1..].trim().to_string(),
+            None => text.trim().to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_size_matches_python_spec() {
+        assert_eq!(VOCAB, 48);
+        // Alphabet + specials must fit.
+        assert!(ALPHABET.chars().count() + 4 <= VOCAB);
+    }
+
+    #[test]
+    fn alphabet_has_no_duplicates() {
+        let mut seen = std::collections::HashSet::new();
+        for c in ALPHABET.chars() {
+            assert!(seen.insert(c), "duplicate char {c:?}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let tk = Tokenizer::new();
+        let s = "12+34=46";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn prompt_has_bos_and_decode_skips_it() {
+        let tk = Tokenizer::new();
+        let ids = tk.encode_prompt("9*9=");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(tk.decode(&ids), "9*9=");
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let tk = Tokenizer::new();
+        let mut ids = tk.encode("123");
+        ids.push(EOS);
+        ids.extend(tk.encode("junk"));
+        assert_eq!(tk.decode(&ids), "123");
+    }
+
+    #[test]
+    fn extract_answer_after_marker() {
+        let tk = Tokenizer::new();
+        let mut ids = tk.encode("10 9 8");
+        ids.push(ANS);
+        ids.extend(tk.encode(" 8 "));
+        ids.push(EOS);
+        assert_eq!(tk.extract_answer(&ids), "8");
+    }
+
+    #[test]
+    fn extract_answer_without_marker_is_whole() {
+        let tk = Tokenizer::new();
+        let mut ids = tk.encode(" 42 ");
+        ids.push(EOS);
+        assert_eq!(tk.extract_answer(&ids), "42");
+    }
+
+    #[test]
+    fn unknown_chars_are_skipped() {
+        let tk = Tokenizer::new();
+        assert_eq!(tk.decode(&tk.encode("1A2B3")), "123");
+    }
+
+    #[test]
+    fn all_ids_below_vocab() {
+        let tk = Tokenizer::new();
+        for id in tk.encode_prompt("0123456789+-*/%=()<>, rcsmx?#") {
+            assert!((0..VOCAB as i32).contains(&id));
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Batch packing: trajectories → fixed-shape [B, T] token rows with
+//! response masks, cross-stage behaviour log-probs and group advantages.
+
+use crate::coordinator::{Group, Trajectory};
+use crate::tasks::reward;
+use crate::tokenizer::{Tokenizer, PAD};
+use crate::util::stats::group_advantages;
+
+/// One packed training row.
+#[derive(Clone, Debug)]
+pub struct PackedSeq {
+    /// [T] — BOS+prompt ++ generated ++ PAD.
+    pub tokens: Vec<i32>,
+    /// [T-1] — 1.0 on positions predicting a generated token.
+    pub resp_mask: Vec<f32>,
+    /// [T-1] — behaviour log-prob of the predicted token (Eq. 6 concat),
+    /// 0 outside the mask.
+    pub behav_lp: Vec<f32>,
+    pub advantage: f32,
+    pub reward: f32,
+    /// Tokens of this row generated under an older policy version.
+    pub offpolicy_tokens: usize,
+    /// Distinct policy versions that produced this trajectory.
+    pub n_stages: usize,
+}
+
+/// A full training batch (B·G rows) ready for microbatching.
+#[derive(Clone, Debug, Default)]
+pub struct PackedBatch {
+    pub rows: Vec<PackedSeq>,
+    pub total_masked_tokens: usize,
+    pub total_offpolicy_tokens: usize,
+    pub reward_mean: f64,
+    pub cross_stage_rows: usize,
+}
+
+/// Pack a trajectory into a [T] row. Truncates to `t_train` (cannot happen
+/// when t_train == max_seq, the artifact default).
+pub fn pack_one(traj: &Trajectory, advantage: f32, rew: f32, t_train: usize, current_version: u64) -> PackedSeq {
+    let plen = traj.prompt.len();
+    let behav = traj.behavior_logprobs();
+    let glen = traj.tokens.len().min(t_train.saturating_sub(plen));
+
+    let mut tokens = vec![PAD; t_train];
+    tokens[..plen].copy_from_slice(&traj.prompt);
+    tokens[plen..plen + glen].copy_from_slice(&traj.tokens[..glen]);
+
+    // Position t predicts tokens[t+1]; generated tokens live at indices
+    // plen..plen+glen, so mask positions plen-1 .. plen+glen-2.
+    let mut resp_mask = vec![0f32; t_train - 1];
+    let mut behav_lp = vec![0f32; t_train - 1];
+    for g in 0..glen {
+        let t = plen - 1 + g;
+        resp_mask[t] = 1.0;
+        behav_lp[t] = behav[g];
+    }
+    PackedSeq {
+        tokens,
+        resp_mask,
+        behav_lp,
+        advantage,
+        reward: rew,
+        offpolicy_tokens: traj.offpolicy_tokens(current_version),
+        n_stages: traj.n_stages(),
+    }
+}
+
+/// Rewards + Eq. 5 advantages + packing for a batch of completed groups.
+pub fn pack_group_trajectories(
+    groups: &[Group],
+    tokenizer: &Tokenizer,
+    t_train: usize,
+    current_version: u64,
+    adv_eps: f64,
+) -> PackedBatch {
+    let mut out = PackedBatch::default();
+    let mut reward_sum = 0.0;
+    let mut n = 0usize;
+    for g in groups {
+        let rewards: Vec<f64> = g
+            .done
+            .iter()
+            .map(|t| reward(&tokenizer.extract_answer(&t.tokens), &t.task.answer))
+            .collect();
+        let advs = group_advantages(&rewards, adv_eps);
+        for (traj, (rew, adv)) in g.done.iter().zip(rewards.iter().zip(advs.iter())) {
+            let row = pack_one(traj, *adv as f32, *rew as f32, t_train, current_version);
+            out.total_masked_tokens += row.resp_mask.iter().filter(|&&m| m > 0.0).count();
+            out.total_offpolicy_tokens += row.offpolicy_tokens;
+            if row.n_stages > 1 {
+                out.cross_stage_rows += 1;
+            }
+            reward_sum += rew;
+            n += 1;
+            out.rows.push(row);
+        }
+    }
+    out.reward_mean = if n > 0 { reward_sum / n as f64 } else { 0.0 };
+    out
+}
+
+/// Split rows into microbatches of exactly `b_micro`, padding the last
+/// chunk with inert rows (all-zero mask, zero advantage → zero gradient).
+pub fn microbatches(batch: &PackedBatch, b_micro: usize, t_train: usize) -> Vec<Vec<PackedSeq>> {
+    let mut out = Vec::new();
+    for chunk in batch.rows.chunks(b_micro) {
+        let mut mb: Vec<PackedSeq> = chunk.to_vec();
+        while mb.len() < b_micro {
+            mb.push(PackedSeq {
+                tokens: vec![PAD; t_train],
+                resp_mask: vec![0.0; t_train - 1],
+                behav_lp: vec![0.0; t_train - 1],
+                advantage: 0.0,
+                reward: 0.0,
+                offpolicy_tokens: 0,
+                n_stages: 0,
+            });
+        }
+        out.push(mb);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Trajectory;
+    use crate::tasks::Family;
+    use crate::util::Rng;
+
+    fn traj_with(prompt: Vec<i32>, gen: Vec<i32>, versions: &[(usize, u64)]) -> Trajectory {
+        let task = Family::AddChain.generate(&mut Rng::new(1), 0);
+        let mut t = Trajectory::new(1, 1, task, prompt, versions[0].1);
+        let mut off = 0;
+        for &(n, v) in versions {
+            let lps: Vec<f32> = (0..n).map(|i| -0.1 * (off + i + 1) as f32).collect();
+            t.append_stage(&gen[off..off + n], &lps, v);
+            off += n;
+        }
+        t.complete = true;
+        t
+    }
+
+    #[test]
+    fn mask_and_behav_aligned() {
+        let t = traj_with(vec![1, 5, 6], vec![7, 8, 2], &[(3, 4)]);
+        let row = pack_one(&t, 1.0, 1.0, 12, 4);
+        assert_eq!(row.tokens[..6], [1, 5, 6, 7, 8, 2]);
+        assert_eq!(&row.tokens[6..], &[PAD; 6]);
+        // plen=3: mask positions 2,3,4 predict generated tokens 7,8,2.
+        let want_mask: Vec<f32> =
+            (0..11).map(|t| if (2..5).contains(&t) { 1.0 } else { 0.0 }).collect();
+        assert_eq!(row.resp_mask, want_mask);
+        assert!((row.behav_lp[2] + 0.1).abs() < 1e-6);
+        assert!((row.behav_lp[4] + 0.3).abs() < 1e-6);
+        assert_eq!(row.behav_lp[5], 0.0);
+        assert_eq!(row.offpolicy_tokens, 0);
+    }
+
+    #[test]
+    fn cross_stage_offpolicy_counted() {
+        let t = traj_with(vec![1, 4], vec![5, 6, 7, 2], &[(2, 3), (2, 5)]);
+        let row = pack_one(&t, 0.5, 1.0, 10, 5);
+        assert_eq!(row.offpolicy_tokens, 2);
+        assert_eq!(row.n_stages, 2);
+        // Behaviour lps are the CONCAT across stages (Eq. 6).
+        assert!((row.behav_lp[1] + 0.1).abs() < 1e-6);
+        assert!((row.behav_lp[4] + 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn microbatches_pad_with_inert_rows() {
+        let t = traj_with(vec![1, 4], vec![5, 2], &[(2, 0)]);
+        let batch = PackedBatch {
+            rows: vec![pack_one(&t, 1.0, 1.0, 8, 0); 3],
+            ..Default::default()
+        };
+        let mbs = microbatches(&batch, 2, 8);
+        assert_eq!(mbs.len(), 2);
+        assert_eq!(mbs[1].len(), 2);
+        let pad_row = &mbs[1][1];
+        assert!(pad_row.resp_mask.iter().all(|&m| m == 0.0));
+        assert_eq!(pad_row.advantage, 0.0);
+    }
+
+    #[test]
+    fn truncation_respects_t_train() {
+        let t = traj_with(vec![1, 4, 5], vec![6; 20], &[(20, 0)]);
+        let row = pack_one(&t, 1.0, 0.0, 10, 0);
+        assert_eq!(row.tokens.len(), 10);
+        let masked = row.resp_mask.iter().filter(|&&m| m > 0.0).count();
+        assert_eq!(masked, 7); // 10 - 3 prompt
+    }
+}

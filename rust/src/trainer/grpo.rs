@@ -1,0 +1,212 @@
+//! The GRPO training loop body: cal-logprob pass, gradient accumulation,
+//! Adam update, weight sync — with cross-stage IS correction toggleable
+//! (w/ IS vs w/o IS, the §5.4.2 ablation).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use super::batch::{microbatches, pack_group_trajectories};
+use crate::config::Config;
+use crate::coordinator::Group;
+use crate::model::{GradMetrics, ModelRuntime, TrainState};
+use crate::tokenizer::Tokenizer;
+use crate::util::StageTimer;
+
+/// Scalar metrics for one training step.
+#[derive(Clone, Debug, Default)]
+pub struct StepMetrics {
+    pub step: i32,
+    pub reward_mean: f64,
+    pub loss: f64,
+    pub entropy: f64,
+    pub ratio_mean: f64,
+    pub ratio_max: f64,
+    pub clip_frac: f64,
+    pub kl: f64,
+    pub grad_norm: f64,
+    pub n_tokens: usize,
+    pub offpolicy_frac: f64,
+    pub cross_stage_rows: usize,
+    /// Stage seconds: cal_logprob, grad, update, sync.
+    pub t_cal_logprob: f64,
+    pub t_grad: f64,
+    pub t_update: f64,
+}
+
+/// Owns the training-side model runtime and device state.
+pub struct Trainer {
+    pub rt: ModelRuntime,
+    pub state: TrainState,
+    pub cfg: Config,
+    tokenizer: Tokenizer,
+}
+
+impl Trainer {
+    pub fn new(cfg: Config, seed: i32) -> Result<Trainer> {
+        let mut rt = ModelRuntime::open(&cfg.artifacts_dir, &cfg.model)?;
+        rt.warmup(&["init", "logprob", "grad", "accum", "update", "read_metrics", "read_params"])?;
+        let state = TrainState::init(&mut rt, seed)?;
+        Ok(Trainer { rt, state, cfg, tokenizer: Tokenizer::new() })
+    }
+
+    /// Resume from a checkpoint.
+    pub fn from_checkpoint(cfg: Config, path: &Path) -> Result<Trainer> {
+        let mut rt = ModelRuntime::open(&cfg.artifacts_dir, &cfg.model)?;
+        rt.warmup(&["logprob", "grad", "accum", "update", "read_metrics", "read_params"])?;
+        let state = TrainState::load(&mut rt, path)?;
+        Ok(Trainer { rt, state, cfg, tokenizer: Tokenizer::new() })
+    }
+
+    /// Host copy of current params (the weight-sync payload).
+    pub fn params(&mut self) -> Result<Arc<Vec<f32>>> {
+        Ok(Arc::new(self.rt.params_to_host(&self.state.buffer)?))
+    }
+
+    pub fn step(&self) -> i32 {
+        self.state.step
+    }
+
+    /// One GRPO update over B completed groups.
+    ///
+    /// `use_is == true` → Cross-stage IS Correction: behaviour log-probs are
+    /// the buffered per-stage concat (Eq. 6/8). `false` → the "w/o IS"
+    /// pseudo-on-policy ablation: the freshly recomputed log-probs stand in
+    /// as behaviour, so every ratio starts at 1.
+    pub fn train_step(&mut self, groups: &[Group], timer: &mut StageTimer) -> Result<StepMetrics> {
+        let use_is = self.cfg.rollout.importance_sampling;
+        let spec = self.rt.spec.clone();
+        // Rollouts were generated under policy versions ≤ the current step
+        // (sync_weights uses version == trainer step).
+        let current_version = self.state.step as u64;
+        let batch = pack_group_trajectories(
+            groups,
+            &self.tokenizer,
+            spec.t_train,
+            current_version,
+            self.cfg.train.adv_eps,
+        );
+        let mut m = StepMetrics {
+            step: self.state.step + 1,
+            reward_mean: batch.reward_mean,
+            cross_stage_rows: batch.cross_stage_rows,
+            ..Default::default()
+        };
+        if batch.total_masked_tokens == 0 {
+            // Degenerate batch (all empty responses) — skip the update.
+            return Ok(m);
+        }
+
+        let mbs = microbatches(&batch, spec.b_micro, spec.t_train);
+
+        // --- cal-logprob stage (veRL old_log_prob pass; Table 2 column) ---
+        let t0 = std::time::Instant::now();
+        let mut recomputed: Vec<Vec<f32>> = Vec::with_capacity(mbs.len());
+        let mut entropy_sum = 0.0f64;
+        for mb in &mbs {
+            let tokens: Vec<i32> = mb.iter().flat_map(|r| r.tokens.iter().copied()).collect();
+            let (lp, ent) = self.rt.logprob(&self.state.buffer, &tokens)?;
+            // Entropy over masked tokens only (metrics).
+            for (row, r) in mb.iter().enumerate() {
+                let w = spec.t_train - 1;
+                for t in 0..w {
+                    if r.resp_mask[t] > 0.0 {
+                        entropy_sum += ent[row * w + t] as f64;
+                    }
+                }
+            }
+            recomputed.push(lp);
+        }
+        m.t_cal_logprob = t0.elapsed().as_secs_f64();
+        timer.add("cal_logprob", m.t_cal_logprob);
+
+        // --- gradient accumulation (device-side) --------------------------
+        let t0 = std::time::Instant::now();
+        let mut acc: Option<PjRtBuffer> = None;
+        let mut agg = GradAgg::default();
+        for (i, mb) in mbs.iter().enumerate() {
+            let w = spec.t_train - 1;
+            let tokens: Vec<i32> = mb.iter().flat_map(|r| r.tokens.iter().copied()).collect();
+            let mask: Vec<f32> = mb.iter().flat_map(|r| r.resp_mask.iter().copied()).collect();
+            let adv: Vec<f32> = mb.iter().map(|r| r.advantage).collect();
+            let behav: Vec<f32> = if use_is {
+                mb.iter().flat_map(|r| r.behav_lp.iter().copied()).collect()
+            } else {
+                // Pseudo on-policy: recomputed current-policy log-probs.
+                let mut v = recomputed[i].clone();
+                // Zero outside the mask for cleanliness (masked anyway).
+                for (j, x) in v.iter_mut().enumerate() {
+                    let (row, t) = (j / w, j % w);
+                    if mb[row].resp_mask[t] == 0.0 {
+                        *x = 0.0;
+                    }
+                }
+                v
+            };
+            let (gbuf, gm) = self.rt.grad(&self.state.buffer, &tokens, &mask, &behav, &adv)?;
+            agg.add(&gm);
+            acc = Some(match acc {
+                None => gbuf,
+                Some(prev) => self.rt.accum(&prev, &gbuf, 1.0)?,
+            });
+        }
+        m.t_grad = t0.elapsed().as_secs_f64();
+        timer.add("grad", m.t_grad);
+
+        // --- Adam update (token-mean via grad_scale) ----------------------
+        let t0 = std::time::Instant::now();
+        let n_tok = agg.token_count.max(1.0);
+        let lr = self.cfg.train.lr as f32;
+        self.state.apply_update(&mut self.rt, &acc.unwrap(), lr, 1.0 / n_tok as f32)?;
+        m.t_update = t0.elapsed().as_secs_f64();
+        timer.add("update", m.t_update);
+
+        m.loss = agg.loss_sum / n_tok;
+        m.entropy = entropy_sum / n_tok;
+        m.ratio_mean = agg.ratio_sum / n_tok;
+        m.ratio_max = agg.ratio_max;
+        m.clip_frac = agg.clip_sum / n_tok;
+        m.kl = agg.kl_sum / n_tok;
+        m.grad_norm = agg.grad_norm_rms;
+        m.n_tokens = batch.total_masked_tokens;
+        m.offpolicy_frac =
+            batch.total_offpolicy_tokens as f64 / batch.total_masked_tokens.max(1) as f64;
+        Ok(m)
+    }
+
+    /// Checkpoint the packed train state.
+    pub fn save(&mut self, path: &Path) -> Result<()> {
+        self.state.save(&mut self.rt, path)
+    }
+}
+
+/// Host-side aggregation of per-microbatch metric heads.
+#[derive(Default)]
+struct GradAgg {
+    loss_sum: f64,
+    ratio_sum: f64,
+    ratio_max: f64,
+    clip_sum: f64,
+    kl_sum: f64,
+    token_count: f64,
+    grad_norm_rms: f64,
+    n: usize,
+}
+
+impl GradAgg {
+    fn add(&mut self, g: &GradMetrics) {
+        self.loss_sum += g.loss_sum as f64;
+        self.ratio_sum += g.ratio_sum as f64;
+        self.ratio_max = self.ratio_max.max(g.ratio_max as f64);
+        self.clip_sum += g.clip_sum as f64;
+        self.kl_sum += g.kl_sum as f64;
+        self.token_count += g.token_count as f64;
+        // RMS over microbatch grad norms (diagnostic only).
+        let n = self.n as f64;
+        self.grad_norm_rms =
+            ((self.grad_norm_rms.powi(2) * n + (g.grad_norm as f64).powi(2)) / (n + 1.0)).sqrt();
+        self.n += 1;
+    }
+}

@@ -1,0 +1,99 @@
+//! JSONL metrics logging for training runs (loss/reward curves, stage
+//! timings) — consumed by EXPERIMENTS.md and the figure benches.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::grpo::StepMetrics;
+use crate::coordinator::RolloutStats;
+use crate::util::json::Obj;
+
+pub struct MetricsLog {
+    out: Option<BufWriter<File>>,
+}
+
+impl MetricsLog {
+    pub fn to_file(path: &Path) -> Result<MetricsLog> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        Ok(MetricsLog { out: Some(BufWriter::new(f)) })
+    }
+
+    pub fn disabled() -> MetricsLog {
+        MetricsLog { out: None }
+    }
+
+    pub fn log_step(
+        &mut self,
+        m: &StepMetrics,
+        rollout: &RolloutStats,
+        wall_total: f64,
+    ) -> Result<()> {
+        let Some(out) = self.out.as_mut() else { return Ok(()) };
+        let line = Obj::new()
+            .int("step", m.step as i64)
+            .num("reward", m.reward_mean)
+            .num("loss", m.loss)
+            .num("entropy", m.entropy)
+            .num("ratio_mean", m.ratio_mean)
+            .num("ratio_max", m.ratio_max)
+            .num("clip_frac", m.clip_frac)
+            .num("kl", m.kl)
+            .num("grad_norm", m.grad_norm)
+            .int("n_tokens", m.n_tokens as i64)
+            .num("offpolicy_frac", m.offpolicy_frac)
+            .int("cross_stage_rows", m.cross_stage_rows as i64)
+            .num("t_rollout", rollout.wall)
+            .num("t_cal_logprob", m.t_cal_logprob)
+            .num("t_grad", m.t_grad)
+            .num("t_update", m.t_update)
+            .num("t_total", wall_total)
+            .num("utilization", rollout.mean_utilization())
+            .int("preemptions", rollout.preemptions as i64)
+            .int("replayed_tokens", rollout.replayed_tokens as i64)
+            .int("partials_buffered", rollout.partials_buffered as i64)
+            .finish();
+        writeln!(out, "{line}")?;
+        out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let dir = std::env::temp_dir().join("copris-test-metrics");
+        let path = dir.join("m.jsonl");
+        let mut log = MetricsLog::to_file(&path).unwrap();
+        let m = StepMetrics { step: 3, reward_mean: 0.5, loss: -0.1, ..Default::default() };
+        let r = RolloutStats::default();
+        log.log_step(&m, &r, 1.23).unwrap();
+        log.log_step(&m, &r, 4.56).unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            let v = json::parse(l).unwrap();
+            assert_eq!(v.get("step").unwrap().as_f64(), Some(3.0));
+            assert_eq!(v.get("reward").unwrap().as_f64(), Some(0.5));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disabled_log_is_noop() {
+        let mut log = MetricsLog::disabled();
+        let m = StepMetrics::default();
+        log.log_step(&m, &RolloutStats::default(), 0.0).unwrap();
+    }
+}

@@ -1,0 +1,16 @@
+//! GRPO trainer with Cross-stage Importance Sampling Correction (§4, Eq. 8).
+//!
+//! Per training step: verify rewards → group-relative advantages (Eq. 5) →
+//! pack sequences → "cal logprob" pass (the veRL old-log-prob stage whose
+//! cost Table 2 reports) → microbatched gradient accumulation (device-side)
+//! → one Adam update → weight sync to the engines.
+
+pub mod batch;
+pub mod grpo;
+pub mod metrics;
+pub mod sft;
+
+pub use batch::{pack_group_trajectories, PackedBatch, PackedSeq};
+pub use grpo::{StepMetrics, Trainer};
+pub use metrics::MetricsLog;
+pub use sft::SftTrainer;

@@ -1,0 +1,123 @@
+//! Supervised warmup trainer ("basemodel" stage): the paper RL-tunes
+//! pretrained LLMs, so before GRPO we teach the task format with plain
+//! next-token cross-entropy on easy-level tasks. Also serves as the
+//! e2e loss-curve driver (examples/train_full.rs).
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::model::{ModelRuntime, TrainState};
+use crate::tasks::{Dataset, Task};
+use crate::tokenizer::{Tokenizer, EOS, PAD};
+
+pub struct SftTrainer<'a> {
+    pub rt: &'a mut ModelRuntime,
+    pub state: &'a mut TrainState,
+    pub lr: f32,
+    tokenizer: Tokenizer,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SftMetrics {
+    pub step: i32,
+    pub loss: f64,
+    pub n_tokens: usize,
+    pub grad_norm: f64,
+}
+
+impl<'a> SftTrainer<'a> {
+    pub fn new(rt: &'a mut ModelRuntime, state: &'a mut TrainState, lr: f32) -> SftTrainer<'a> {
+        SftTrainer { rt, state, lr, tokenizer: Tokenizer::new() }
+    }
+
+    /// Pack (prompt, answer) into one [T] row + [T-1] answer mask.
+    pub fn pack(&self, task: &Task, t_train: usize) -> (Vec<i32>, Vec<f32>) {
+        let mut seq = self.tokenizer.encode_prompt(&task.prompt);
+        let plen = seq.len();
+        seq.extend(self.tokenizer.encode(&task.answer));
+        seq.push(EOS);
+        seq.truncate(t_train);
+        let alen = seq.len() - plen.min(seq.len());
+        let mut tokens = vec![PAD; t_train];
+        tokens[..seq.len()].copy_from_slice(&seq);
+        let mut mask = vec![0f32; t_train - 1];
+        for t in plen.saturating_sub(1)..plen + alen - 1 {
+            mask[t] = 1.0;
+        }
+        (tokens, mask)
+    }
+
+    /// One SFT step over `steps_batches` microbatches drawn from `dataset`.
+    pub fn step(&mut self, dataset: &mut Dataset, micro_batches: usize) -> Result<SftMetrics> {
+        let spec = self.rt.spec.clone();
+        let (b, t) = (spec.b_micro, spec.t_train);
+        let mut acc: Option<PjRtBuffer> = None;
+        let mut loss_sum = 0f64;
+        let mut tok_sum = 0f64;
+        let mut gn = 0f64;
+        for _ in 0..micro_batches {
+            let mut tokens = Vec::with_capacity(b * t);
+            let mut mask = Vec::with_capacity(b * (t - 1));
+            for _ in 0..b {
+                let task = dataset.next_task();
+                let (tk, mk) = self.pack(&task, t);
+                tokens.extend(tk);
+                mask.extend(mk);
+            }
+            let (gbuf, gm) = self.rt.sft_grad(&self.state.buffer, &tokens, &mask)?;
+            loss_sum += gm.loss_sum as f64;
+            tok_sum += gm.token_count as f64;
+            gn = gn.max(gm.grad_norm as f64);
+            acc = Some(match acc {
+                None => gbuf,
+                Some(prev) => self.rt.accum(&prev, &gbuf, 1.0)?,
+            });
+        }
+        let scale = 1.0 / tok_sum.max(1.0) as f32;
+        self.state.apply_update(self.rt, &acc.unwrap(), self.lr, scale)?;
+        Ok(SftMetrics {
+            step: self.state.step,
+            loss: loss_sum / tok_sum.max(1.0),
+            n_tokens: tok_sum as usize,
+            grad_norm: gn,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Family;
+    use crate::util::Rng;
+
+    // Packing is testable without a runtime; training itself is covered by
+    // the artifact-backed integration tests.
+    struct Fake;
+
+    #[test]
+    fn pack_masks_answer_and_eos() {
+        let task = Family::Reverse.generate(&mut Rng::new(3), 0);
+        let tk = Tokenizer::new();
+        let prompt = tk.encode_prompt(&task.prompt);
+        let answer = tk.encode(&task.answer);
+        // Reproduce pack() logic without a ModelRuntime.
+        let t_train = 32;
+        let mut seq = prompt.clone();
+        seq.extend(answer.iter());
+        seq.push(EOS);
+        let plen = prompt.len();
+        let alen = seq.len() - plen;
+
+        // Mask positions plen-1 .. plen+alen-2 predict the answer + EOS.
+        let lo = plen - 1;
+        let hi = plen + alen - 1;
+        assert_eq!(hi - lo, alen);
+        assert!(hi <= t_train - 1);
+        // The predicted tokens are exactly answer ++ EOS.
+        let predicted: Vec<i32> = (lo..hi).map(|t| seq[t + 1]).collect();
+        let mut want = answer.clone();
+        want.push(EOS);
+        assert_eq!(predicted, want);
+        let _ = Fake;
+    }
+}

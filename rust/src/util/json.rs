@@ -1,0 +1,340 @@
+//! Minimal JSON: a writer for metrics/JSONL logs and a parser for the
+//! artifact `manifest.json` files (serde is not in the vendored crate set).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// JSON value tree (numbers kept as f64; manifests only use int/str/arr/obj).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------------
+
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Incremental single-object writer: `Obj::new().field("k", 1.0).finish()`.
+pub struct Obj {
+    buf: String,
+    first: bool,
+}
+
+impl Obj {
+    pub fn new() -> Self {
+        Obj { buf: String::from("{"), first: true }
+    }
+    fn sep(&mut self) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+    }
+    pub fn num(mut self, k: &str, v: f64) -> Self {
+        self.sep();
+        if v.is_finite() {
+            let _ = write!(self.buf, "\"{}\":{}", escape(k), v);
+        } else {
+            let _ = write!(self.buf, "\"{}\":null", escape(k));
+        }
+        self
+    }
+    pub fn int(self, k: &str, v: i64) -> Self {
+        let mut s = self;
+        s.sep();
+        let _ = write!(s.buf, "\"{}\":{}", escape(k), v);
+        s
+    }
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.sep();
+        let _ = write!(self.buf, "\"{}\":\"{}\"", escape(k), escape(v));
+        self
+    }
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.sep();
+        let _ = write!(self.buf, "\"{}\":{}", escape(k), v);
+        self
+    }
+    pub fn raw(mut self, k: &str, v: &str) -> Self {
+        self.sep();
+        let _ = write!(self.buf, "\"{}\":{}", escape(k), v);
+        self
+    }
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+impl Default for Obj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parser (recursive descent; enough for manifests + our own logs)
+// ---------------------------------------------------------------------------
+
+pub fn parse(s: &str) -> anyhow::Result<Json> {
+    let bytes = s.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        anyhow::bail!("trailing garbage at byte {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        anyhow::bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => lit(b, pos, "true", Json::Bool(true)),
+        b'f' => lit(b, pos, "false", Json::Bool(false)),
+        b'n' => lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn lit(b: &[u8], pos: &mut usize, word: &str, v: Json) -> anyhow::Result<Json> {
+    if b[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(v)
+    } else {
+        anyhow::bail!("bad literal at byte {pos}")
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Json::Num(s.parse::<f64>().map_err(|e| anyhow::anyhow!("bad number {s:?}: {e}"))?))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
+    if *pos >= b.len() || b[*pos] != b'"' {
+        anyhow::bail!("expected string at byte {pos}");
+    }
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    break;
+                }
+                match b[*pos] {
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'u' => {
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        *pos += 4;
+                    }
+                    c => out.push(c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // Copy one UTF-8 scalar.
+                let s = std::str::from_utf8(&b[*pos..])?;
+                let c = s.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+    anyhow::bail!("unterminated string")
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    *pos += 1; // '['
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(out));
+    }
+    loop {
+        out.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(out));
+            }
+            _ => anyhow::bail!("expected , or ] at byte {pos}"),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    *pos += 1; // '{'
+    let mut out = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(out));
+    }
+    loop {
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            anyhow::bail!("unterminated object");
+        }
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            anyhow::bail!("expected : at byte {pos}");
+        }
+        *pos += 1;
+        out.insert(key, parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(out));
+            }
+            _ => anyhow::bail!("expected , or }} at byte {pos}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_roundtrips_through_parser() {
+        let s = Obj::new()
+            .num("x", 1.5)
+            .int("n", -3)
+            .str("name", "a\"b\\c\n")
+            .bool("ok", true)
+            .finish();
+        let v = parse(&s).unwrap();
+        assert_eq!(v.get("x").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("n").unwrap().as_f64(), Some(-3.0));
+        assert_eq!(v.get("name").unwrap().as_str(), Some("a\"b\\c\n"));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn parses_manifest_like_document() {
+        let doc = r#"{
+          "name": "tiny", "n_params": 108480,
+          "kv_shape": [2, 2, 4, 2, 96, 32],
+          "artifacts": {"init": "init.hlo.txt"}
+        }"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("tiny"));
+        assert_eq!(v.get("n_params").unwrap().as_usize(), Some(108480));
+        assert_eq!(v.get("kv_shape").unwrap().as_arr().unwrap().len(), 6);
+        assert_eq!(
+            v.get("artifacts").unwrap().get("init").unwrap().as_str(),
+            Some("init.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn parses_nested_arrays_and_nulls() {
+        let v = parse("[1, [2, null], {\"a\": false}]").unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_arr().unwrap()[1], Json::Null);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{} x").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_become_null() {
+        let s = Obj::new().num("bad", f64::NAN).finish();
+        let v = parse(&s).unwrap();
+        assert_eq!(v.get("bad"), Some(&Json::Null));
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities hand-rolled for the offline environment:
+//! PRNG, descriptive statistics, JSON writing, and wall-clock timers.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::StageTimer;

@@ -1,0 +1,151 @@
+//! Descriptive statistics for metrics and the bench harness.
+
+/// Summary of a sample: mean/std/min/max/percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, q in [0, 1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Group-relative advantages, GRPO Eq. 5: (R_i - mean) / (std + eps).
+pub fn group_advantages(rewards: &[f64], eps: f64) -> Vec<f64> {
+    let m = mean(rewards);
+    let s = std_dev(rewards);
+    rewards.iter().map(|r| (r - m) / (s + eps)).collect()
+}
+
+/// ASCII histogram rows (label, count, bar) — used by the Fig-1 bench.
+pub fn ascii_histogram(xs: &[f64], bins: usize, width: usize) -> Vec<String> {
+    if xs.is_empty() || bins == 0 {
+        return vec![];
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let b = (((x - lo) / span) * bins as f64) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    let maxc = *counts.iter().max().unwrap() as f64;
+    counts
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| {
+            let a = lo + span * i as f64 / bins as f64;
+            let b = lo + span * (i + 1) as f64 / bins as f64;
+            let bar = "#".repeat(((c as f64 / maxc) * width as f64).round() as usize);
+            format!("{a:8.1}-{b:8.1} | {c:5} | {bar}")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_constant_series() {
+        let s = Summary::of(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&xs, 0.5) - 50.0).abs() < 1e-9);
+        assert!((percentile_sorted(&xs, 0.95) - 95.0).abs() < 1e-9);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 100.0);
+    }
+
+    #[test]
+    fn group_advantages_zero_mean_unit_scale() {
+        let adv = group_advantages(&[1.0, 0.0, 1.0, 0.0], 1e-6);
+        let m = mean(&adv);
+        assert!(m.abs() < 1e-9);
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+    }
+
+    #[test]
+    fn group_advantages_all_equal_rewards_are_zero() {
+        // Degenerate group (all correct or all wrong) carries no signal.
+        let adv = group_advantages(&[1.0; 8], 1e-6);
+        assert!(adv.iter().all(|a| a.abs() < 1e-6));
+    }
+
+    #[test]
+    fn histogram_shape() {
+        let rows = ascii_histogram(&[1.0, 1.1, 5.0, 9.9], 3, 10);
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].contains('#'));
+    }
+
+    #[test]
+    fn empty_inputs_do_not_panic() {
+        assert_eq!(Summary::of(&[]).n, 0);
+        assert!(percentile_sorted(&[], 0.5).is_nan());
+        assert_eq!(mean(&[]), 0.0);
+        assert!(ascii_histogram(&[], 4, 10).is_empty());
+    }
+}

@@ -1,0 +1,122 @@
+//! Stage timers: the per-step timing decomposition the paper reports in
+//! Table 2 (rollout/s, cal-logprob/s, step/s) plus utilization traces.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulates named stage durations within one (or many) training steps.
+#[derive(Debug, Default, Clone)]
+pub struct StageTimer {
+    totals: BTreeMap<String, f64>,
+    counts: BTreeMap<String, usize>,
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `stage`.
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, stage: &str, secs: f64) {
+        *self.totals.entry(stage.to_string()).or_default() += secs;
+        *self.counts.entry(stage.to_string()).or_default() += 1;
+    }
+
+    pub fn total(&self, stage: &str) -> f64 {
+        self.totals.get(stage).copied().unwrap_or(0.0)
+    }
+
+    pub fn count(&self, stage: &str) -> usize {
+        self.counts.get(stage).copied().unwrap_or(0)
+    }
+
+    pub fn mean(&self, stage: &str) -> f64 {
+        let c = self.count(stage);
+        if c == 0 { 0.0 } else { self.total(stage) / c as f64 }
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.totals.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn merge(&mut self, other: &StageTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += v;
+        }
+        for (k, c) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += c;
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.totals {
+            out.push_str(&format!(
+                "{k:>16}: {v:8.3}s  (n={}, mean {:.4}s)\n",
+                self.counts[k],
+                v / (self.counts[k].max(1)) as f64
+            ));
+        }
+        out
+    }
+}
+
+/// A wall-clock scope guard alternative for call sites that can't close over.
+pub struct Scope {
+    start: Instant,
+}
+
+impl Scope {
+    pub fn start() -> Self {
+        Scope { start: Instant::now() }
+    }
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_totals_and_counts() {
+        let mut t = StageTimer::new();
+        t.add("rollout", 1.0);
+        t.add("rollout", 2.0);
+        t.add("train", 0.5);
+        assert_eq!(t.total("rollout"), 3.0);
+        assert_eq!(t.count("rollout"), 2);
+        assert_eq!(t.mean("rollout"), 1.5);
+        assert_eq!(t.total("missing"), 0.0);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = StageTimer::new();
+        let v = t.time("x", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(t.count("x"), 1);
+        assert!(t.total("x") >= 0.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = StageTimer::new();
+        a.add("s", 1.0);
+        let mut b = StageTimer::new();
+        b.add("s", 2.0);
+        b.add("t", 1.0);
+        a.merge(&b);
+        assert_eq!(a.total("s"), 3.0);
+        assert_eq!(a.count("s"), 2);
+        assert_eq!(a.total("t"), 1.0);
+    }
+}

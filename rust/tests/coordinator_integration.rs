@@ -1,0 +1,299 @@
+//! Coordinator integration + property tests over the MOCK backend: the
+//! full CoPRIS dispatch machinery (concurrency control, early termination,
+//! buffering, prioritized resumption, group bookkeeping) without PJRT.
+
+use copris::config::{Config, RolloutMode};
+use copris::coordinator::Coordinator;
+use copris::engine::{EnginePool, MockBackend};
+use copris::tasks::Dataset;
+use copris::testkit::prop_check;
+use copris::tokenizer::EOS;
+use copris::util::Rng;
+
+const SLOTS: usize = 4;
+const MAX_SEQ: usize = 96;
+
+/// `delay_us` slows the mock decode step; without it the engines outrun
+/// the coordinator's control channel and finish everything before
+/// StopGeneration lands (real engines take milliseconds per step).
+fn mock_coordinator_with(
+    cfg: Config,
+    min_len: usize,
+    spread: usize,
+    delay_us: u64,
+) -> Coordinator {
+    let engines = cfg.engine.engines;
+    let kv_budget = cfg.engine.kv_budget_tokens;
+    let pool = EnginePool::spawn(engines, SLOTS, kv_budget, cfg.train.seed, move |_id| {
+        Box::new(move || {
+            let mut b = MockBackend::new(SLOTS, MAX_SEQ);
+            b.min_len = min_len;
+            b.spread = spread;
+            if delay_us > 0 {
+                b.decode_delay = Some(std::time::Duration::from_micros(delay_us));
+            }
+            Ok(b)
+        })
+    })
+    .unwrap();
+    Coordinator::new(pool, cfg.clone(), MAX_SEQ)
+}
+
+fn mock_coordinator(cfg: Config, min_len: usize, spread: usize) -> Coordinator {
+    mock_coordinator_with(cfg, min_len, spread, 0)
+}
+
+fn base_cfg(mode: RolloutMode, concurrency: usize, seed: u64) -> Config {
+    let mut cfg = Config::new("mock");
+    cfg.rollout.mode = mode;
+    cfg.rollout.batch_prompts = 4;
+    cfg.rollout.group_size = 4;
+    cfg.rollout.concurrency = concurrency;
+    cfg.engine.engines = 2;
+    cfg.train.seed = seed;
+    cfg
+}
+
+/// Check every trajectory of a rollout output for structural invariants.
+fn check_groups(out: &copris::coordinator::RolloutOutput, b: usize, g: usize) -> Result<(), String> {
+    if out.groups.len() != b {
+        return Err(format!("expected {b} groups, got {}", out.groups.len()));
+    }
+    for grp in &out.groups {
+        if grp.done.len() != g {
+            return Err(format!("group {} has {} trajectories", grp.group_id, grp.done.len()));
+        }
+        for t in &grp.done {
+            if !t.complete {
+                return Err(format!("incomplete trajectory {} harvested", t.id));
+            }
+            if !t.invariant_ok() {
+                return Err(format!("trajectory {} segment/token mismatch", t.id));
+            }
+            if t.is_empty() {
+                return Err(format!("trajectory {} has no tokens", t.id));
+            }
+            // Terminal trajectories end with EOS or hit the length cap.
+            let last = *t.tokens.last().unwrap();
+            let total = t.prompt.len() + t.tokens.len();
+            if last != EOS && total < MAX_SEQ {
+                return Err(format!(
+                    "trajectory {} ended without EOS at len {total}",
+                    t.id
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn sync_rollout_collects_exact_batch() {
+    let cfg = base_cfg(RolloutMode::Sync, 0, 1);
+    let mut coord = mock_coordinator(cfg, 2, 12);
+    let mut ds = Dataset::train(1);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    check_groups(&out, 4, 4).unwrap();
+    assert_eq!(out.stats.partials_buffered, 0, "sync never buffers partials");
+    assert_eq!(coord.buffered(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn copris_rollout_terminates_early_and_buffers_partials() {
+    let cfg = base_cfg(RolloutMode::Copris, 8, 2);
+    // Long scripted lengths + slow decode → in-flight partials at early
+    // termination (the paper: ~N'-1 partials remain).
+    let mut coord = mock_coordinator_with(cfg, 20, 40, 500);
+    let mut ds = Dataset::train(2);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    check_groups(&out, 4, 4).unwrap();
+    // With N'=8 concurrent and only 16 needed, partials must be buffered
+    // (the paper: N'-1 partials remain at early termination).
+    assert!(
+        out.stats.partials_buffered > 0 || coord.buffered() > 0,
+        "expected buffered partials: {:?}",
+        out.stats
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn copris_resumes_buffered_partials_next_stage() {
+    let cfg = base_cfg(RolloutMode::Copris, 8, 3);
+    let mut coord = mock_coordinator_with(cfg, 10, 30, 300);
+    let mut ds = Dataset::train(3);
+    let out1 = coord.rollout_stage(&mut ds).unwrap();
+    let buffered = coord.buffered();
+    if buffered == 0 {
+        // Extremely unlikely with these script lengths, but not an error.
+        coord.shutdown();
+        return;
+    }
+    let out2 = coord.rollout_stage(&mut ds).unwrap();
+    check_groups(&out2, 4, 4).unwrap();
+    // Cross-stage trajectories exist in stage 2 only if the policy version
+    // advanced; without sync_weights the version is unchanged, so segments
+    // merge. Either way, replayed tokens must be > 0 (resumption happened).
+    assert!(
+        out2.stats.replayed_tokens > 0,
+        "resumption should replay buffered tokens: {:?}",
+        out2.stats
+    );
+    let _ = out1;
+    coord.shutdown();
+}
+
+#[test]
+fn cross_stage_segments_tagged_by_version() {
+    let cfg = base_cfg(RolloutMode::Copris, 8, 4);
+    let mut coord = mock_coordinator_with(cfg, 15, 30, 300);
+    let mut ds = Dataset::train(4);
+    let _ = coord.rollout_stage(&mut ds).unwrap();
+    if coord.buffered() == 0 {
+        coord.shutdown();
+        return;
+    }
+    // Simulate a policy update between stages.
+    coord.sync_weights(1, std::sync::Arc::new(vec![1.5f32]));
+    let out2 = coord.rollout_stage(&mut ds).unwrap();
+    let cross: Vec<_> = out2
+        .groups
+        .iter()
+        .flat_map(|g| g.done.iter())
+        .filter(|t| t.n_stages() > 1)
+        .collect();
+    for t in &cross {
+        assert_eq!(t.segments[0].policy_version, 0);
+        assert_eq!(t.segments.last().unwrap().policy_version, 1);
+        assert!(t.invariant_ok());
+        assert!(t.offpolicy_tokens(1) > 0);
+        // Eq. 6: concat length equals token count.
+        assert_eq!(t.behavior_logprobs().len(), t.tokens.len());
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn naive_partial_does_not_refill() {
+    let cfg = base_cfg(RolloutMode::NaivePartial, 24, 5);
+    let mut coord = mock_coordinator(cfg, 4, 10);
+    let mut ds = Dataset::train(5);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    check_groups(&out, 4, 4).unwrap();
+    // Initial wave is `concurrency` = 24 dispatches; queue drains without
+    // refill, so peak in-flight never exceeds the wave size.
+    assert!(out.stats.peak_inflight <= 24);
+    coord.shutdown();
+}
+
+#[test]
+fn eval_fixed_sync_returns_group_per_task() {
+    let cfg = base_cfg(RolloutMode::Copris, 8, 6);
+    let mut coord = mock_coordinator(cfg, 3, 6);
+    let suite = &copris::tasks::eval_suites()[0];
+    let tasks = suite.tasks(6, 7);
+    let groups = coord
+        .run_fixed_sync(&tasks, 3, copris::engine::SamplingParams::default())
+        .unwrap();
+    assert_eq!(groups.len(), 6);
+    for (g, task) in groups.iter().zip(tasks.iter()) {
+        assert_eq!(g.done.len(), 3);
+        assert_eq!(g.task.prompt, task.prompt, "eval groups keep task order");
+    }
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// property tests (hand-rolled prop framework; proptest unavailable offline)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_all_modes_and_settings_yield_exact_complete_batches() {
+    prop_check(
+        "rollout-batch-exactness",
+        12,
+        |rng: &mut Rng| {
+            let mode = match rng.below(3) {
+                0 => RolloutMode::Sync,
+                1 => RolloutMode::NaivePartial,
+                _ => RolloutMode::Copris,
+            };
+            let concurrency = 2 + rng.below(14) as usize;
+            let min_len = 2 + rng.below(12) as usize;
+            let spread = 2 + rng.below(30) as usize;
+            let seed = rng.next_u64() % 1000;
+            (mode, concurrency, min_len, spread, seed)
+        },
+        |&(mode, concurrency, min_len, spread, seed)| {
+            let mut cfg = base_cfg(mode, concurrency, seed);
+            cfg.rollout.batch_prompts = 2 + (seed % 3) as usize;
+            cfg.rollout.group_size = 2 + (seed % 2) as usize;
+            let b = cfg.rollout.batch_prompts;
+            let g = cfg.rollout.group_size;
+            let mut coord = mock_coordinator(cfg, min_len, spread);
+            let mut ds = Dataset::train(seed);
+            // Two consecutive stages must both deliver exact batches.
+            for _ in 0..2 {
+                let out = coord
+                    .rollout_stage(&mut ds)
+                    .map_err(|e| format!("rollout failed: {e:#}"))?;
+                check_groups(&out, b, g)?;
+            }
+            coord.shutdown();
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_no_trajectory_is_lost_or_duplicated() {
+    prop_check(
+        "trajectory-conservation",
+        10,
+        |rng: &mut Rng| (2 + rng.below(10) as usize, rng.next_u64() % 997),
+        |&(concurrency, seed)| {
+            let cfg = base_cfg(RolloutMode::Copris, concurrency, seed);
+            let mut coord = mock_coordinator(cfg, 8, 20);
+            let mut ds = Dataset::train(seed);
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..3 {
+                let out = coord
+                    .rollout_stage(&mut ds)
+                    .map_err(|e| format!("rollout failed: {e:#}"))?;
+                for grp in &out.groups {
+                    for t in &grp.done {
+                        if !seen.insert(t.id) {
+                            return Err(format!("trajectory {} harvested twice", t.id));
+                        }
+                    }
+                }
+            }
+            coord.shutdown();
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_budget_preemption_preserves_correctness() {
+    prop_check(
+        "preemption-correctness",
+        8,
+        |rng: &mut Rng| (30 + rng.below(60) as usize, rng.next_u64() % 997),
+        |&(kv_budget, seed)| {
+            let mut cfg = base_cfg(RolloutMode::Copris, 8, seed);
+            cfg.engine.kv_budget_tokens = kv_budget;
+            let mut coord = mock_coordinator(cfg, 10, 20);
+            let mut ds = Dataset::train(seed);
+            let out = coord
+                .rollout_stage(&mut ds)
+                .map_err(|e| format!("rollout failed: {e:#}"))?;
+            check_groups(&out, 4, 4)?;
+            // Preempted partials may or may not be re-dispatched before the
+            // stage ends; correctness is the exact-batch check above.
+            coord.shutdown();
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,92 @@
+//! End-to-end integration on the real `tiny` artifacts: SFT warmup → CoPRIS
+//! rollout (XLA engines on threads) → GRPO update with cross-stage IS →
+//! weight sync → eval. Small step counts — this is a plumbing test, not a
+//! convergence run (EXPERIMENTS.md records the real runs).
+
+use copris::config::{scaled_preset, RolloutMode};
+use copris::exp::RlSession;
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/tiny/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+    }
+    ok
+}
+
+fn tiny_cfg(mode: RolloutMode) -> copris::config::Config {
+    let mut cfg = scaled_preset("tiny");
+    cfg.rollout.mode = mode;
+    cfg.rollout.batch_prompts = 2;
+    cfg.rollout.group_size = 2;
+    cfg.rollout.concurrency = 6;
+    cfg.engine.engines = 2;
+    cfg.train.seed = 3;
+    cfg.eval.prompts_per_suite = 2;
+    cfg.eval.samples_per_prompt = 1;
+    cfg
+}
+
+#[test]
+fn full_pipeline_copris_with_is() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut sess = RlSession::build(tiny_cfg(RolloutMode::Copris)).unwrap();
+
+    // SFT warmup must produce finite losses (steps share the optimizer
+    // counter with RL, matching a single train state).
+    let mut losses = Vec::new();
+    for _ in 0..3 {
+        losses.push(sess.sft_warmup(2, 1).unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let step_after_warmup = sess.trainer.step();
+
+    // Three RL steps end-to-end.
+    let summary = sess.train(3).unwrap();
+    assert_eq!(summary.steps, 3);
+    assert!(summary.wall > 0.0);
+    assert!(summary.throughput > 0.0);
+    assert_eq!(summary.reward_curve.len(), 3);
+    assert!(summary.reward_curve.iter().all(|r| (0.0..=1.0).contains(r)));
+    assert!(summary.entropy_curve.iter().all(|e| e.is_finite() && *e >= 0.0));
+    assert_eq!(sess.trainer.step(), step_after_warmup + 3);
+
+    // Eval runs over all five suites.
+    let report = sess.evaluate(1).unwrap();
+    assert_eq!(report.suites.len(), 5);
+    for s in &report.suites {
+        assert!((0.0..=1.0).contains(&s.pass_at_1), "{s:?}");
+    }
+    sess.shutdown();
+}
+
+#[test]
+fn full_pipeline_sync_baseline() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut sess = RlSession::build(tiny_cfg(RolloutMode::Sync)).unwrap();
+    sess.sft_warmup(2, 1).unwrap();
+    let summary = sess.train(2).unwrap();
+    assert_eq!(summary.steps, 2);
+    // Sync mode buffers nothing and replays nothing.
+    assert_eq!(summary.replayed_tokens, 0);
+    assert_eq!(sess.coord.buffered(), 0);
+    sess.shutdown();
+}
+
+#[test]
+fn full_pipeline_without_is_matches_shapes() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = tiny_cfg(RolloutMode::Copris);
+    cfg.rollout.importance_sampling = false; // w/o IS ablation path
+    let mut sess = RlSession::build(cfg).unwrap();
+    sess.sft_warmup(1, 1).unwrap();
+    let summary = sess.train(2).unwrap();
+    assert_eq!(summary.steps, 2);
+    sess.shutdown();
+}
