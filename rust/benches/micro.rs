@@ -1,26 +1,92 @@
 //! Microbenchmarks of the hot paths (hand-rolled harness; criterion is not
-//! in the vendored crate set): sampler, buffer ops, mock decode, and the
-//! artifact-level prefill/decode/logprob/grad/update ops.
+//! in the vendored crate set): sampler, buffer ops, mock decode, engine
+//! step, event delivery, and the artifact-level prefill/decode/logprob/
+//! grad/update ops.
+//!
+//! Layers touched by the zero-allocation decode-path PR carry explicit
+//! before/after row pairs: the "seed-path" rows reproduce the pre-rewrite
+//! cost model in-binary (allocating sampler via `sampler::reference`, a
+//! local replica of the old per-row-allocating mock decode, per-event
+//! channel sends, prompt deep-copy dispatch) so the speedup is measured
+//! on the same machine in the same run — `scripts/bench_micro.sh` records
+//! the table to `BENCH_micro.json` and `EXPERIMENTS.md §Perf` tracks it.
 
 use copris::bench::{fmt_secs, render_table, time_fn};
 use copris::coordinator::PartialBuffer;
 use copris::coordinator::Trajectory;
-use copris::engine::{sample_token, Backend, MockBackend, SamplingParams};
+use copris::engine::sampler::reference::sample_token_ref;
+use copris::engine::{
+    sample_token_with, Backend, Engine, EngineEvent, MockBackend, SamplerScratch,
+    SamplingParams, StepTrace, WorkItem,
+};
 use copris::exp::common::{artifacts_available, env_str};
 use copris::model::ModelRuntime;
 use copris::tasks::Family;
+use copris::util::json::Obj;
+use copris::util::stats::Summary;
 use copris::util::Rng;
 
+/// In-binary replica of the seed `MockBackend::decode`: fresh S×V output
+/// vec + one freshly allocated row per slot per step. Kept here (not in the
+/// library) purely as the "before" cost model.
+fn seed_mock_decode(
+    script: &mut [(u64, usize)],
+    vocab: usize,
+    min_len: usize,
+    spread: usize,
+) -> Vec<f32> {
+    let slots = script.len();
+    let mut out = Vec::with_capacity(slots * vocab);
+    for s in 0..slots {
+        let (h, count) = script[s];
+        let scripted = min_len + (h % spread as u64) as usize;
+        let step = count + 1;
+        let mut row = vec![-20.0f32; vocab];
+        if step >= scripted {
+            row[2] = 10.0; // EOS
+        } else {
+            let tok = 4 + ((h >> (step % 48)) % 10) as usize;
+            row[tok] = 10.0;
+            row[(tok + 1) % 14] = 6.0;
+        }
+        out.extend(row);
+        script[s].1 = count + 1;
+    }
+    out
+}
+
 fn main() {
-    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut rows: Vec<(String, Summary)> = Vec::new();
+    fn push(rows: &mut Vec<(String, Summary)>, name: &str, s: Summary) {
+        rows.push((name.to_string(), s));
+    }
 
     // -- L3 pure-coordination paths ------------------------------------
-    let mut rng = Rng::new(1);
     let logits: Vec<f32> = (0..48).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+
+    let mut rng = Rng::new(1);
     let s = time_fn(100, 2000, || {
-        sample_token(&logits, &SamplingParams::default(), &mut rng)
+        sample_token_ref(&logits, &SamplingParams::default(), &mut rng)
     });
-    rows.push(vec!["sampler (48-vocab)".into(), fmt_secs(s.mean), fmt_secs(s.p95)]);
+    push(&mut rows, "sampler seed-path (48-vocab, default)", s);
+
+    let mut rng = Rng::new(1);
+    let mut scratch = SamplerScratch::new();
+    let s = time_fn(100, 2000, || {
+        sample_token_with(&logits, &SamplingParams::default(), &mut rng, &mut scratch)
+    });
+    push(&mut rows, "sampler scratch (48-vocab, default)", s);
+
+    let filtered = SamplingParams { temperature: 1.0, top_p: 0.9, top_k: 8 };
+    let mut rng = Rng::new(1);
+    let s = time_fn(100, 2000, || sample_token_ref(&logits, &filtered, &mut rng));
+    push(&mut rows, "sampler seed-path (48-vocab, top-k8 top-p0.9)", s);
+
+    let mut rng = Rng::new(1);
+    let s = time_fn(100, 2000, || {
+        sample_token_with(&logits, &filtered, &mut rng, &mut scratch)
+    });
+    push(&mut rows, "sampler scratch (48-vocab, top-k8 top-p0.9)", s);
 
     let task = Family::Countdown.generate(&mut Rng::new(2), 2);
     let mut buf = PartialBuffer::new(usize::MAX);
@@ -34,14 +100,82 @@ fn main() {
             buf.pop();
         }
     });
-    rows.push(vec!["buffer push/pop (24-tok)".into(), fmt_secs(s.mean), fmt_secs(s.p95)]);
+    push(&mut rows, "buffer push/pop (24-tok)", s);
 
+    // Prompt hand-off at dispatch: deep copy (seed) vs Arc clone.
+    let prompt_vec: Vec<i32> = (0..256).map(|i| 4 + i % 10).collect();
+    let s = time_fn(100, 2000, || std::hint::black_box(prompt_vec.clone()));
+    push(&mut rows, "dispatch prompt deep-copy (256-tok, seed-path)", s);
+    let prompt_arc: std::sync::Arc<[i32]> = prompt_vec.clone().into();
+    let s = time_fn(100, 2000, || std::hint::black_box(prompt_arc.clone()));
+    push(&mut rows, "dispatch prompt arc-clone (256-tok)", s);
+
+    // Mock decode step: seed replica (row alloc per slot) vs decode_into.
     let mut mock = MockBackend::new(8, 192);
     mock.prefill(0, &[1, 5, 6]).unwrap();
+    let mut seed_script = vec![(0x9e3779b97f4a7c15u64, 0usize); 8];
+    let s = time_fn(100, 2000, || {
+        std::hint::black_box(seed_mock_decode(&mut seed_script, 48, 2, 12))
+    });
+    push(&mut rows, "mock decode step seed-path (8 slots)", s);
+
     let toks = vec![5i32; 8];
     let pos = vec![3i32; 8];
-    let s = time_fn(100, 2000, || mock.decode(&toks, &pos).unwrap());
-    rows.push(vec!["mock decode step (8 slots)".into(), fmt_secs(s.mean), fmt_secs(s.p95)]);
+    let mut logits_buf = Vec::new();
+    let s = time_fn(100, 2000, || mock.decode_into(&toks, &pos, &mut logits_buf).unwrap());
+    push(&mut rows, "mock decode step into (8 slots)", s);
+
+    // Full engine scheduler iteration at steady state (4 busy slots):
+    // admit check + decode_into + 4 sampler calls + trace, no allocation.
+    let mut be = MockBackend::new(4, 8192);
+    be.min_len = 5000; // never finishes inside the bench window
+    be.spread = 1;
+    let mut eng = Engine::new(0, be, 0, 1);
+    for i in 0..4u64 {
+        eng.submit(WorkItem {
+            request_id: i,
+            prompt: vec![1, i as i32 + 4, 9].into(),
+            resume: vec![],
+            max_total: 8192,
+            sampling: SamplingParams::default(),
+        })
+        .unwrap();
+    }
+    let mut ev: Vec<EngineEvent> = Vec::with_capacity(16);
+    let s = time_fn(100, 2000, || {
+        eng.step(&mut ev).unwrap();
+        ev.clear();
+    });
+    push(&mut rows, "engine steady decode step (4 slots, mock)", s);
+
+    // Event delivery: one mpsc send per event (seed) vs one Batch send.
+    let trace = StepTrace {
+        engine: 0,
+        t_wall: 0.0,
+        dur: 0.0,
+        active: 4,
+        slots: 4,
+        kv_tokens: 128,
+        preemptions: 0,
+    };
+    let (tx, rx) = std::sync::mpsc::channel::<EngineEvent>();
+    let s = time_fn(100, 2000, || {
+        for _ in 0..3 {
+            tx.send(EngineEvent::Trace(trace.clone())).unwrap();
+        }
+        while rx.try_recv().is_ok() {}
+    });
+    push(&mut rows, "event flush per-event (3 events, seed-path)", s);
+    let s = time_fn(100, 2000, || {
+        let batch = vec![
+            EngineEvent::Trace(trace.clone()),
+            EngineEvent::Trace(trace.clone()),
+            EngineEvent::Trace(trace.clone()),
+        ];
+        tx.send(EngineEvent::Batch(batch)).unwrap();
+        while rx.try_recv().is_ok() {}
+    });
+    push(&mut rows, "event flush batched (3 events)", s);
 
     // -- artifact-level (needs artifacts) --------------------------------
     let model = env_str("COPRIS_BENCH_MODEL", "small");
@@ -59,56 +193,70 @@ fn main() {
             let (es2, _) = rt.decode(&params, &es, &toks, &pos).unwrap();
             es = es2;
         });
-        rows.push(vec![
-            format!("xla decode step ({} slots, {})", spec.slots, model),
-            fmt_secs(s.mean),
-            fmt_secs(s.p95),
-        ]);
+        push(&mut rows, &format!("xla decode step ({} slots, {})", spec.slots, model), s);
+
+        let mut dev_logits = Vec::new();
+        let s = time_fn(3, 30, || {
+            let es2 = rt.decode_into(&params, &es, &toks, &pos, &mut dev_logits).unwrap();
+            es = es2;
+        });
+        push(&mut rows, &format!("xla decode step into ({} slots, {})", spec.slots, model), s);
 
         let prompt: Vec<i32> = (0..16).map(|i| 4 + i % 10).collect();
         let s = time_fn(2, 20, || {
             let (es2, _) = rt.prefill(&params, &es, &prompt, 0).unwrap();
             es = es2;
         });
-        rows.push(vec![
-            format!("xla prefill 16-tok ({model})"),
-            fmt_secs(s.mean),
-            fmt_secs(s.p95),
-        ]);
+        push(&mut rows, &format!("xla prefill 16-tok ({model})"), s);
 
         let (b, t) = (spec.b_micro, spec.t_train);
         let tokens: Vec<i32> = (0..b * t).map(|i| 4 + (i % 10) as i32).collect();
         let s = time_fn(2, 10, || rt.logprob(&state, &tokens).unwrap());
-        rows.push(vec![
-            format!("xla logprob [{b},{t}]"),
-            fmt_secs(s.mean),
-            fmt_secs(s.p95),
-        ]);
+        push(&mut rows, &format!("xla logprob [{b},{t}]"), s);
 
         let mask = vec![1f32; b * (t - 1)];
         let behav = vec![-1f32; b * (t - 1)];
         let adv = vec![0.5f32; b];
         let s = time_fn(2, 10, || rt.grad(&state, &tokens, &mask, &behav, &adv).unwrap());
-        rows.push(vec![
-            format!("xla grad [{b},{t}]"),
-            fmt_secs(s.mean),
-            fmt_secs(s.p95),
-        ]);
+        push(&mut rows, &format!("xla grad [{b},{t}]"), s);
 
         let (g, _) = rt.grad(&state, &tokens, &mask, &behav, &adv).unwrap();
         let s = time_fn(2, 20, || rt.update(&state, &g, 1, 1e-4, 1.0).unwrap());
-        rows.push(vec![
-            format!("xla adam update ({} params)", spec.n_params),
-            fmt_secs(s.mean),
-            fmt_secs(s.p95),
-        ]);
+        push(&mut rows, &format!("xla adam update ({} params)", spec.n_params), s);
 
         let s = time_fn(2, 20, || rt.params_to_host(&state).unwrap());
-        rows.push(vec!["weight-sync host read".into(), fmt_secs(s.mean), fmt_secs(s.p95)]);
+        push(&mut rows, "weight-sync host read", s);
     } else {
         eprintln!("micro: artifacts/{model} missing — artifact rows skipped");
     }
 
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(name, s)| vec![name.clone(), fmt_secs(s.mean), fmt_secs(s.p95)])
+        .collect();
     println!("== microbenchmarks ==");
-    println!("{}", render_table(&["path", "mean", "p95"], &rows));
+    println!("{}", render_table(&["path", "mean", "p95"], &table_rows));
+
+    // Machine-readable output for scripts/bench_micro.sh → BENCH_micro.json.
+    if let Ok(path) = std::env::var("COPRIS_BENCH_JSON") {
+        let entries: Vec<String> = rows
+            .iter()
+            .map(|(name, s)| {
+                Obj::new()
+                    .str("path", name)
+                    .num("mean_s", s.mean)
+                    .num("p50_s", s.p50)
+                    .num("p95_s", s.p95)
+                    .int("iters", s.n as i64)
+                    .finish()
+            })
+            .collect();
+        let doc = Obj::new()
+            .str("bench", "micro")
+            .str("generated_by", "scripts/bench_micro.sh")
+            .raw("rows", &format!("[{}]", entries.join(",")))
+            .finish();
+        std::fs::write(&path, doc + "\n").expect("write BENCH json");
+        eprintln!("micro: wrote {path}");
+    }
 }

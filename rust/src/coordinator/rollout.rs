@@ -136,6 +136,8 @@ impl Coordinator {
         let engine = self.least_loaded_engine();
         let item = WorkItem {
             request_id: traj.id,
+            // Arc clone — re-dispatching a buffered partial shares the
+            // prompt with the trajectory instead of deep-copying it.
             prompt: traj.prompt.clone(),
             resume: traj.tokens.clone(),
             max_total: self.max_total_for(traj.prompt.len()),
@@ -290,17 +292,28 @@ impl Coordinator {
         Ok(RolloutOutput { groups, stats })
     }
 
-    /// Handle one engine event. `draining` switches Stopped/Preempted
-    /// handling to "buffer it" (early-termination flush).
+    /// Handle one engine event (recursing into `Batch` — engines deliver a
+    /// whole step's events in one channel send). `draining` switches
+    /// Stopped/Preempted handling to "buffer it" (early-termination flush).
+    /// Returns the number of `Flushed` markers seen, so `drain_partials`
+    /// can count engine flushes even when they arrive inside a batch.
     fn handle_event(
         &mut self,
         ev: EngineEvent,
         stats: &mut RolloutStats,
         draining: bool,
-    ) -> Result<()> {
+    ) -> Result<usize> {
         match ev {
+            EngineEvent::Batch(evs) => {
+                let mut flushed = 0;
+                for e in evs {
+                    flushed += self.handle_event(e, stats, draining)?;
+                }
+                return Ok(flushed);
+            }
             EngineEvent::Trace(t) => stats.traces.push(t),
-            EngineEvent::Flushed { .. } | EngineEvent::ShutDown { .. } => {}
+            EngineEvent::Flushed { .. } => return Ok(1),
+            EngineEvent::ShutDown { .. } => {}
             EngineEvent::Done { engine, result } => {
                 let Some(inf) = self.inflight.remove(&result.request_id) else {
                     bail!("unknown request {} from engine {engine}", result.request_id);
@@ -330,7 +343,7 @@ impl Coordinator {
                 }
             }
         }
-        Ok(())
+        Ok(0)
     }
 
     fn park_partial(&mut self, traj: Trajectory, stats: &mut RolloutStats) {
@@ -355,11 +368,7 @@ impl Coordinator {
                 .events
                 .recv_timeout(Duration::from_secs(120))
                 .context("drain: engine event timeout")?;
-            if matches!(ev, EngineEvent::Flushed { .. }) {
-                flushed += 1;
-                continue;
-            }
-            self.handle_event(ev, stats, true)?;
+            flushed += self.handle_event(ev, stats, true)?;
         }
         // Anything still in the inflight map was queued but never started.
         let leftovers: Vec<u64> = self.inflight.keys().copied().collect();

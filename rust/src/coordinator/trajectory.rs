@@ -16,7 +16,9 @@ pub struct Trajectory {
     pub id: u64,
     pub group_id: u64,
     pub task: Task,
-    pub prompt: Vec<i32>,
+    /// Shared with every `WorkItem` dispatched for this trajectory — an
+    /// `Arc` so buffered-partial re-dispatch never deep-copies the prompt.
+    pub prompt: std::sync::Arc<[i32]>,
     /// All generated tokens so far (across stages).
     pub tokens: Vec<i32>,
     /// Stage-tagged log-prob segments; concat length == tokens length.
@@ -33,7 +35,7 @@ impl Trajectory {
             id,
             group_id,
             task,
-            prompt,
+            prompt: prompt.into(),
             tokens: Vec::new(),
             segments: Vec::new(),
             complete: false,

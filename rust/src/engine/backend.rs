@@ -21,7 +21,18 @@ pub trait Backend {
     /// Prefill `prompt` into `slot`; returns next-token logits [V].
     fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>>;
     /// One decode step over all slots; returns logits [S*V] row-major.
+    /// Cold-path convenience — the engine's hot loop uses `decode_into`.
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>>;
+    /// One decode step writing logits [S*V] into a caller-owned buffer
+    /// that is reused across steps (resized on first use, then constant
+    /// capacity). Backends override this to avoid re-allocating the S×V
+    /// output every step; the default falls back to `decode`.
+    fn decode_into(&mut self, tokens: &[i32], pos: &[i32], out: &mut Vec<f32>) -> Result<()> {
+        let logits = self.decode(tokens, pos)?;
+        out.clear();
+        out.extend_from_slice(&logits);
+        Ok(())
+    }
     /// Chunked re-prefill of ≤ p_max resume tokens for one slot (vLLM-style
     /// parallel recompute). Returns Some(next-token logits) when supported;
     /// None → the engine falls back to per-token decode replay.
@@ -90,9 +101,15 @@ impl Backend for XlaBackend {
     }
 
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
-        let (es, logits) = self.rt.decode(&self.params, &self.engine_state, tokens, pos)?;
+        let mut out = Vec::new();
+        self.decode_into(tokens, pos, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&mut self, tokens: &[i32], pos: &[i32], out: &mut Vec<f32>) -> Result<()> {
+        let es = self.rt.decode_into(&self.params, &self.engine_state, tokens, pos, out)?;
         self.engine_state = es;
-        Ok(logits)
+        Ok(())
     }
 
     fn replay(&mut self, slot: usize, chunk: &[i32], start: usize) -> Result<Option<Vec<f32>>> {
@@ -167,8 +184,11 @@ impl MockBackend {
         self.min_len + (h % self.spread as u64) as usize
     }
 
-    fn logits_for(&self, h: u64, step: usize, scripted: usize) -> Vec<f32> {
-        let mut row = vec![-20.0f32; self.vocab];
+    /// Write one scripted logit row in place (the decode hot path —
+    /// no allocation).
+    fn logits_for_into(&self, h: u64, step: usize, scripted: usize, row: &mut [f32]) {
+        debug_assert_eq!(row.len(), self.vocab);
+        row.fill(-20.0);
         if step >= scripted {
             row[tokenizer::EOS as usize] = 10.0;
         } else {
@@ -178,6 +198,11 @@ impl MockBackend {
             // A second mode with some mass keeps sampling non-trivial.
             row[(tok + 1) % 14] = 6.0;
         }
+    }
+
+    fn logits_for(&self, h: u64, step: usize, scripted: usize) -> Vec<f32> {
+        let mut row = vec![0f32; self.vocab];
+        self.logits_for_into(h, step, scripted, &mut row);
         row
     }
 }
@@ -210,19 +235,31 @@ impl Backend for MockBackend {
     }
 
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.decode_into(tokens, pos, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&mut self, tokens: &[i32], pos: &[i32], out: &mut Vec<f32>) -> Result<()> {
         let _ = (tokens, pos);
         if let Some(d) = self.decode_delay {
             std::thread::sleep(d);
         }
         self.decode_calls += 1;
-        let mut out = Vec::with_capacity(self.slots * self.vocab);
+        let v = self.vocab;
+        let n = self.slots * v;
+        if out.len() != n {
+            out.clear();
+            out.resize(n, 0.0); // first step only; every element is
+                                // overwritten by logits_for_into below
+        }
         for s in 0..self.slots {
             let (h, count) = self.slot_script[s];
             let scripted = self.min_len + (h % self.spread as u64) as usize;
-            out.extend(self.logits_for(h, count + 1, scripted));
+            self.logits_for_into(h, count + 1, scripted, &mut out[s * v..(s + 1) * v]);
             self.slot_script[s].1 = count + 1;
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -266,6 +303,30 @@ mod tests {
             logits = be.decode(&[0], &[0]).unwrap();
         }
         assert_eq!(produced, scripted);
+    }
+
+    /// `decode_into` must produce exactly the rows `decode` produced (same
+    /// script state sequence) while reusing the caller's buffer.
+    #[test]
+    fn decode_into_matches_decode_bitwise() {
+        let mut a = MockBackend::new(3, 96);
+        let mut b = MockBackend::new(3, 96);
+        for s in 0..3 {
+            a.prefill(s, &[1, s as i32 + 4]).unwrap();
+            b.prefill(s, &[1, s as i32 + 4]).unwrap();
+        }
+        let toks = [0i32; 3];
+        let pos = [0i32; 3];
+        let mut buf = Vec::new();
+        for step in 0..20 {
+            let want = a.decode(&toks, &pos).unwrap();
+            let cap_before = if step > 0 { buf.capacity() } else { 0 };
+            b.decode_into(&toks, &pos, &mut buf).unwrap();
+            assert_eq!(want, buf, "step {step} diverged");
+            if step > 0 {
+                assert_eq!(buf.capacity(), cap_before, "buffer regrew at step {step}");
+            }
+        }
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! `Engine` is synchronous and backend-generic so the full coordinator
 //! stack is testable with `MockBackend`; `pool.rs` wraps it in a thread and
 //! channels for production use.
+//!
+//! The decode step is the innermost loop of the whole system, so it is
+//! steady-state allocation-free and O(1) in its bookkeeping: `tokens`/`pos`
+//! staging and the S×V logits buffer persist across steps
+//! (`Backend::decode_into`), sampling runs through a persistent
+//! [`SamplerScratch`], per-slot output vectors are pre-reserved at
+//! admission, and `busy`/`kv_tokens` are incremental counters maintained on
+//! admit/finish/preempt instead of O(S) slot scans per query.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -12,7 +20,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use super::backend::Backend;
-use super::sampler::{sample_token, SamplingParams};
+use super::sampler::{sample_token_with, SamplerScratch, SamplingParams};
 use crate::tokenizer;
 use crate::util::Rng;
 
@@ -20,10 +28,13 @@ use crate::util::Rng;
 /// of a buffered partial trajectory; the engine replays them through decode
 /// to rebuild KV state — the *recomputation cost* of off-policy partials
 /// the paper's §5.4.1 ablates.
+///
+/// The prompt is shared (`Arc`) with the coordinator's `Trajectory`, so
+/// re-dispatching a buffered partial never deep-copies the prompt.
 #[derive(Clone, Debug)]
 pub struct WorkItem {
     pub request_id: u64,
-    pub prompt: Vec<i32>,
+    pub prompt: std::sync::Arc<[i32]>,
     pub resume: Vec<i32>,
     /// Cap on total sequence length (prompt + replay + new tokens).
     pub max_total: usize,
@@ -86,6 +97,9 @@ pub enum EngineEvent {
     /// All slots flushed after StopGeneration.
     Flushed { engine: usize },
     ShutDown { engine: usize },
+    /// One step's events delivered in a single channel send (see
+    /// `pool::flush`); the coordinator unpacks in `handle_event`.
+    Batch(Vec<EngineEvent>),
 }
 
 /// Commands from the coordinator (used by the threaded pool).
@@ -129,6 +143,16 @@ pub struct Engine<B: Backend> {
     pub decode_steps: u64,
     /// Cumulative replayed (recomputed) tokens.
     pub replayed_tokens: u64,
+    // -- incremental bookkeeping (invariants maintained by occupy/vacate) --
+    /// Busy slot count (== slots.iter().filter(Busy).count()).
+    busy_count: usize,
+    /// KV tokens resident (== Σ busy slots (pos + 1)).
+    kv_resident: usize,
+    // -- persistent step scratch (no per-step heap allocation) --------------
+    step_tokens: Vec<i32>,
+    step_pos: Vec<i32>,
+    logits_buf: Vec<f32>,
+    scratch: SamplerScratch,
 }
 
 impl<B: Backend> Engine<B> {
@@ -150,6 +174,12 @@ impl<B: Backend> Engine<B> {
             t0: Instant::now(),
             decode_steps: 0,
             replayed_tokens: 0,
+            busy_count: 0,
+            kv_resident: 0,
+            step_tokens: vec![0; s],
+            step_pos: vec![0; s],
+            logits_buf: Vec::new(),
+            scratch: SamplerScratch::new(),
         }
     }
 
@@ -158,7 +188,7 @@ impl<B: Backend> Engine<B> {
     }
 
     pub fn busy(&self) -> usize {
-        self.slots.iter().filter(|s| matches!(s, SlotState::Busy(_))).count()
+        self.busy_count
     }
 
     pub fn queued(&self) -> usize {
@@ -166,15 +196,40 @@ impl<B: Backend> Engine<B> {
     }
 
     pub fn free_slots(&self) -> usize {
-        self.slots.len() - self.busy()
+        self.slots.len() - self.busy_count
     }
 
     pub fn has_work(&self) -> bool {
-        self.busy() > 0 || !self.pending.is_empty()
+        self.busy_count > 0 || !self.pending.is_empty()
     }
 
     pub fn preemptions(&self) -> u64 {
         self.preemptions
+    }
+
+    /// Tokens resident in the KV cache across busy slots (O(1) counter).
+    pub fn kv_tokens(&self) -> usize {
+        self.kv_resident
+    }
+
+    /// Install `b` into slot `i`, maintaining the incremental counters.
+    fn occupy(&mut self, i: usize, b: Box<BusySlot>) {
+        debug_assert!(matches!(self.slots[i], SlotState::Idle));
+        self.busy_count += 1;
+        self.kv_resident += b.pos as usize + 1;
+        self.slots[i] = SlotState::Busy(b);
+    }
+
+    /// Clear slot `i`, maintaining the incremental counters.
+    fn vacate(&mut self, i: usize) -> Option<Box<BusySlot>> {
+        match std::mem::replace(&mut self.slots[i], SlotState::Idle) {
+            SlotState::Busy(b) => {
+                self.busy_count -= 1;
+                self.kv_resident -= b.pos as usize + 1;
+                Some(b)
+            }
+            SlotState::Idle => None,
+        }
     }
 
     /// Queue a work item (admitted to a slot on the next step).
@@ -196,7 +251,7 @@ impl<B: Backend> Engine<B> {
     /// trajectories — the coordinator re-queues them as fresh work).
     pub fn stop_generation(&mut self, events: &mut Vec<EngineEvent>) -> Vec<WorkItem> {
         for i in 0..self.slots.len() {
-            if let SlotState::Busy(b) = std::mem::replace(&mut self.slots[i], SlotState::Idle) {
+            if let Some(b) = self.vacate(i) {
                 events.push(EngineEvent::Done {
                     engine: self.id,
                     result: finish(*b, FinishReason::Stopped),
@@ -209,33 +264,39 @@ impl<B: Backend> Engine<B> {
     }
 
     /// One scheduler iteration: admit pending work, enforce the KV budget,
-    /// run one decode step, process sampled tokens.
+    /// run one decode step, process sampled tokens. Steady state (all slots
+    /// mid-generation) performs no heap allocation in engine/sampler code.
     pub fn step(&mut self, events: &mut Vec<EngineEvent>) -> Result<()> {
         self.admit(events)?;
         self.enforce_kv_budget(events);
-        if self.busy() == 0 {
+        if self.busy_count == 0 {
             return Ok(());
         }
 
         let s = self.slots.len();
         let v = self.backend.vocab();
-        let mut tokens = vec![0i32; s];
-        let mut pos = vec![0i32; s];
         for (i, slot) in self.slots.iter().enumerate() {
-            if let SlotState::Busy(b) = slot {
-                tokens[i] = b.next_token;
-                pos[i] = b.pos;
+            match slot {
+                SlotState::Busy(b) => {
+                    self.step_tokens[i] = b.next_token;
+                    self.step_pos[i] = b.pos;
+                }
+                SlotState::Idle => {
+                    self.step_tokens[i] = 0;
+                    self.step_pos[i] = 0;
+                }
             }
         }
 
         let t_step = Instant::now();
-        let logits = self.backend.decode(&tokens, &pos)?;
+        self.backend.decode_into(&self.step_tokens, &self.step_pos, &mut self.logits_buf)?;
         let dur = t_step.elapsed().as_secs_f64();
         self.decode_steps += 1;
 
         for i in 0..s {
             let SlotState::Busy(b) = &mut self.slots[i] else { continue };
             b.pos += 1;
+            self.kv_resident += 1;
             if b.replay_fed < b.item.resume.len() {
                 // We just fed resume[replay_fed]; keep replaying.
                 b.replay_fed += 1;
@@ -247,8 +308,9 @@ impl<B: Backend> Engine<B> {
                 // Replay complete: this step's logits sample the first new
                 // token (fall through).
             }
-            let row = &logits[i * v..(i + 1) * v];
-            let (tok, lp) = sample_token(row, &b.item.sampling, &mut self.rng);
+            let row = &self.logits_buf[i * v..(i + 1) * v];
+            let (tok, lp) =
+                sample_token_with(row, &b.item.sampling, &mut self.rng, &mut self.scratch);
             b.generated.push(tok);
             b.logprobs.push(lp);
             let total_len = b.item.prompt.len() + b.item.resume.len() + b.generated.len();
@@ -261,11 +323,7 @@ impl<B: Backend> Engine<B> {
             };
             match reason {
                 Some(r) => {
-                    let SlotState::Busy(b) =
-                        std::mem::replace(&mut self.slots[i], SlotState::Idle)
-                    else {
-                        unreachable!()
-                    };
+                    let b = self.vacate(i).expect("busy slot");
                     events.push(EngineEvent::Done { engine: self.id, result: finish(*b, r) });
                 }
                 None => b.next_token = tok,
@@ -276,23 +334,12 @@ impl<B: Backend> Engine<B> {
             engine: self.id,
             t_wall: self.t0.elapsed().as_secs_f64(),
             dur,
-            active: self.busy(),
+            active: self.busy_count,
             slots: s,
-            kv_tokens: self.kv_tokens(),
+            kv_tokens: self.kv_resident,
             preemptions: self.preemptions,
         }));
         Ok(())
-    }
-
-    /// Tokens resident in the KV cache across busy slots.
-    pub fn kv_tokens(&self) -> usize {
-        self.slots
-            .iter()
-            .map(|s| match s {
-                SlotState::Busy(b) => b.pos as usize + 1,
-                SlotState::Idle => 0,
-            })
-            .sum()
     }
 
     fn admit(&mut self, events: &mut Vec<EngineEvent>) -> Result<()> {
@@ -322,9 +369,12 @@ impl<B: Backend> Engine<B> {
                 continue;
             }
             let logits = self.backend.prefill(i, &item.prompt)?;
+            // Reserve the worst-case output length up front so the decode
+            // loop's push() never reallocates mid-generation.
+            let out_cap = item.max_total.saturating_sub(plen);
             let mut busy = BusySlot {
-                generated: Vec::new(),
-                logprobs: Vec::new(),
+                generated: Vec::with_capacity(out_cap),
+                logprobs: Vec::with_capacity(out_cap),
                 replay_fed: 0,
                 next_token: 0,
                 pos: plen as i32,
@@ -333,7 +383,12 @@ impl<B: Backend> Engine<B> {
             };
             if busy.item.resume.is_empty() {
                 // Sample the first new token from the prefill logits.
-                let (tok, lp) = sample_token(&logits, &busy.item.sampling, &mut self.rng);
+                let (tok, lp) = sample_token_with(
+                    &logits,
+                    &busy.item.sampling,
+                    &mut self.rng,
+                    &mut self.scratch,
+                );
                 busy.generated.push(tok);
                 busy.logprobs.push(lp);
                 if tok == tokenizer::EOS {
@@ -375,8 +430,12 @@ impl<B: Backend> Engine<B> {
                 if fed == resume.len() {
                     // Replay complete: sample the next new token now.
                     let logits = last_logits.expect("non-empty resume");
-                    let (tok, lp) =
-                        sample_token(&logits, &busy.item.sampling, &mut self.rng);
+                    let (tok, lp) = sample_token_with(
+                        &logits,
+                        &busy.item.sampling,
+                        &mut self.rng,
+                        &mut self.scratch,
+                    );
                     busy.generated.push(tok);
                     busy.logprobs.push(lp);
                     let total = plen + resume.len() + 1;
@@ -399,17 +458,20 @@ impl<B: Backend> Engine<B> {
                     busy.next_token = resume[fed];
                 }
             }
-            self.slots[i] = SlotState::Busy(Box::new(busy));
+            self.occupy(i, Box::new(busy));
         }
         Ok(())
     }
 
     /// Preempt latest-admitted slots (LIFO, like vLLM) while over budget.
+    /// O(S) victim scan per eviction against O(1) counters — the old
+    /// version rescanned every slot for `kv_tokens()`/`busy()` on every
+    /// loop iteration (O(S²) per enforcement pass).
     fn enforce_kv_budget(&mut self, events: &mut Vec<EngineEvent>) {
         if self.kv_budget == 0 {
             return;
         }
-        while self.kv_tokens() > self.kv_budget && self.busy() > 1 {
+        while self.kv_resident > self.kv_budget && self.busy_count > 1 {
             let victim = self
                 .slots
                 .iter()
@@ -421,9 +483,7 @@ impl<B: Backend> Engine<B> {
                 .max_by_key(|&(_, seq)| seq)
                 .map(|(i, _)| i)
                 .unwrap();
-            if let SlotState::Busy(b) =
-                std::mem::replace(&mut self.slots[victim], SlotState::Idle)
-            {
+            if let Some(b) = self.vacate(victim) {
                 self.preemptions += 1;
                 events.push(EngineEvent::Done {
                     engine: self.id,
@@ -452,7 +512,7 @@ mod tests {
     fn item(id: u64, prompt: Vec<i32>) -> WorkItem {
         WorkItem {
             request_id: id,
-            prompt,
+            prompt: prompt.into(),
             resume: vec![],
             max_total: 96,
             sampling: SamplingParams::greedy(),
@@ -477,6 +537,20 @@ mod tests {
             }
         }
         out
+    }
+
+    /// Recompute the counters from first principles (test-only O(S) scan).
+    fn scan_counters(eng: &Engine<MockBackend>) -> (usize, usize) {
+        let busy = eng.slots.iter().filter(|s| matches!(s, SlotState::Busy(_))).count();
+        let kv = eng
+            .slots
+            .iter()
+            .map(|s| match s {
+                SlotState::Busy(b) => b.pos as usize + 1,
+                SlotState::Idle => 0,
+            })
+            .sum();
+        (busy, kv)
     }
 
     #[test]
@@ -567,6 +641,7 @@ mod tests {
         }
         assert!(matches!(ev.last(), Some(EngineEvent::Flushed { .. })));
         assert_eq!(eng.busy(), 0);
+        assert_eq!(eng.kv_tokens(), 0);
     }
 
     #[test]
@@ -627,6 +702,35 @@ mod tests {
         // single long sequence may legitimately exceed the budget alone —
         // the last slot is never preempted).
         assert!(eng.busy() <= 2, "busy {}", eng.busy());
+    }
+
+    /// The incremental busy/kv counters must agree with a from-scratch slot
+    /// scan at every point of a run that exercises admission, decode,
+    /// finish, preemption, and stop_generation.
+    #[test]
+    fn incremental_counters_match_slot_scans() {
+        let mut be = MockBackend::new(4, 96);
+        be.min_len = 30;
+        be.spread = 6;
+        let mut eng = Engine::new(0, be, 40, 9); // budget tight enough to preempt
+        for i in 0..8 {
+            eng.submit(item(i, vec![1, i as i32 + 4, 9])).unwrap();
+        }
+        let mut ev = Vec::new();
+        for _ in 0..60 {
+            eng.step(&mut ev).unwrap();
+            let (busy, kv) = scan_counters(&eng);
+            assert_eq!(eng.busy(), busy, "busy counter drifted");
+            assert_eq!(eng.kv_tokens(), kv, "kv counter drifted");
+            ev.clear();
+            if !eng.has_work() {
+                break;
+            }
+        }
+        eng.stop_generation(&mut ev);
+        let (busy, kv) = scan_counters(&eng);
+        assert_eq!((eng.busy(), eng.kv_tokens()), (busy, kv));
+        assert_eq!((busy, kv), (0, 0));
     }
 
     #[test]

@@ -17,4 +17,4 @@ pub mod sampler;
 pub use backend::{Backend, MockBackend, XlaBackend};
 pub use engine::{Engine, EngineCmd, EngineEvent, FinishReason, StepTrace, WorkItem, WorkResult};
 pub use pool::EnginePool;
-pub use sampler::{sample_token, SamplingParams};
+pub use sampler::{sample_token, sample_token_with, SamplerScratch, SamplingParams};

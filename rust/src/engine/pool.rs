@@ -175,9 +175,20 @@ fn handle_cmd<B: Backend>(
     }
 }
 
+/// One channel send per flush: a lone event ships as-is; a step that
+/// produced several (Done + Trace, flush bursts) ships a single
+/// `EngineEvent::Batch` — every mpsc `send` is a heap-allocated queue node
+/// plus a wakeup, so per-event sends made the coordinator channel a
+/// per-step O(events) cost. The coordinator unpacks in `handle_event`.
 fn flush(tx: &Sender<EngineEvent>, events: &mut Vec<EngineEvent>) {
-    for e in events.drain(..) {
-        let _ = tx.send(e);
+    match events.len() {
+        0 => {}
+        1 => {
+            let _ = tx.send(events.pop().unwrap());
+        }
+        _ => {
+            let _ = tx.send(EngineEvent::Batch(std::mem::take(events)));
+        }
     }
 }
 
@@ -187,6 +198,7 @@ mod tests {
     use crate::engine::backend::MockBackend;
     use crate::engine::engine::{FinishReason, WorkItem};
     use crate::engine::sampler::SamplingParams;
+    use std::collections::VecDeque;
     use std::time::Duration;
 
     fn mock_pool(engines: usize, slots: usize) -> EnginePool {
@@ -199,10 +211,28 @@ mod tests {
     fn item(id: u64) -> WorkItem {
         WorkItem {
             request_id: id,
-            prompt: vec![1, (id % 20) as i32 + 4, 9],
+            prompt: vec![1, (id % 20) as i32 + 4, 9].into(),
             resume: vec![],
             max_total: 96,
             sampling: SamplingParams::default(),
+        }
+    }
+
+    /// Receive the next event, transparently flattening `Batch` sends.
+    fn next_event(
+        rx: &Receiver<EngineEvent>,
+        queue: &mut VecDeque<EngineEvent>,
+        timeout: Duration,
+    ) -> Option<EngineEvent> {
+        loop {
+            if let Some(e) = queue.pop_front() {
+                return Some(e);
+            }
+            match rx.recv_timeout(timeout) {
+                Ok(EngineEvent::Batch(evs)) => queue.extend(evs),
+                Ok(e) => return Some(e),
+                Err(_) => return None,
+            }
         }
     }
 
@@ -213,18 +243,49 @@ mod tests {
             pool.send((i % 2) as usize, EngineCmd::Assign(item(i)));
         }
         let mut done = 0;
+        let mut queue = VecDeque::new();
         let deadline = std::time::Instant::now() + Duration::from_secs(20);
         while done < 10 && std::time::Instant::now() < deadline {
-            match pool.events.recv_timeout(Duration::from_secs(5)) {
-                Ok(EngineEvent::Done { result, .. }) => {
+            match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
+                Some(EngineEvent::Done { result, .. }) => {
                     assert!(result.reason.is_complete());
                     done += 1;
+                }
+                Some(_) => {}
+                None => panic!("event wait timed out"),
+            }
+        }
+        assert_eq!(done, 10);
+        pool.shutdown();
+    }
+
+    /// A step that finishes work emits Done + Trace — those must arrive in
+    /// ONE channel send (a Batch), not one send per event.
+    #[test]
+    fn multi_event_steps_arrive_batched() {
+        let pool = mock_pool(1, 2);
+        pool.send(0, EngineCmd::Assign(item(3)));
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let mut saw_batched_done = false;
+        while std::time::Instant::now() < deadline && !saw_batched_done {
+            match pool.events.recv_timeout(Duration::from_secs(5)) {
+                Ok(EngineEvent::Batch(evs)) => {
+                    assert!(evs.len() >= 2, "degenerate batch");
+                    assert!(
+                        !evs.iter().any(|e| matches!(e, EngineEvent::Batch(_))),
+                        "nested batch"
+                    );
+                    saw_batched_done |=
+                        evs.iter().any(|e| matches!(e, EngineEvent::Done { .. }));
+                }
+                Ok(EngineEvent::Done { .. }) => {
+                    panic!("Done delivered outside a Batch alongside its Trace")
                 }
                 Ok(_) => {}
                 Err(e) => panic!("event wait: {e}"),
             }
         }
-        assert_eq!(done, 10);
+        assert!(saw_batched_done, "never saw a batched Done event");
         pool.shutdown();
     }
 
@@ -245,17 +306,18 @@ mod tests {
         std::thread::sleep(Duration::from_millis(100));
         pool.stop_generation_all();
         let mut partials = 0;
+        let mut queue = VecDeque::new();
         let deadline = std::time::Instant::now() + Duration::from_secs(10);
         loop {
-            match pool.events.recv_timeout(Duration::from_secs(5)) {
-                Ok(EngineEvent::Done { result, .. }) => {
+            match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
+                Some(EngineEvent::Done { result, .. }) => {
                     if result.reason == FinishReason::Stopped {
                         partials += 1;
                     }
                 }
-                Ok(EngineEvent::Flushed { .. }) => break,
-                Ok(_) => {}
-                Err(_) => break,
+                Some(EngineEvent::Flushed { .. }) => break,
+                Some(_) => {}
+                None => break,
             }
             if std::time::Instant::now() > deadline {
                 break;
@@ -271,10 +333,12 @@ mod tests {
         pool.broadcast_params(1, std::sync::Arc::new(vec![2.5f32]));
         // Indirect check: engines keep working after a sync.
         pool.send(0, EngineCmd::Assign(item(5)));
+        let mut queue = VecDeque::new();
         let deadline = std::time::Instant::now() + Duration::from_secs(10);
         let mut ok = false;
         while std::time::Instant::now() < deadline {
-            if let Ok(EngineEvent::Done { .. }) = pool.events.recv_timeout(Duration::from_secs(5))
+            if let Some(EngineEvent::Done { .. }) =
+                next_event(&pool.events, &mut queue, Duration::from_secs(5))
             {
                 ok = true;
                 break;

@@ -3,6 +3,14 @@
 //! distribution — the behaviour log-prob L_i stored with the trajectory
 //! (paper Eq. 6). At the paper's defaults (temp 1.0, top-p 1.0, top-k -1)
 //! this is exactly the model distribution.
+//!
+//! The hot path (`sample_token_with`) is steady-state allocation-free: all
+//! working storage lives in a caller-owned [`SamplerScratch`] that sizes
+//! itself to the vocab on first use and is reused for every subsequent
+//! call. Top-k uses in-place partial selection (`select_nth_unstable_by`)
+//! instead of a full sorted clone; top-p sorts a reusable index array
+//! in-place (unstable sort with an index tiebreak — identical order to the
+//! stable sort it replaces, without the stable sort's temp buffer).
 
 use crate::util::Rng;
 
@@ -27,29 +35,80 @@ impl SamplingParams {
     }
 }
 
-/// Sample from one logits row. Returns (token, ln p(token)).
-pub fn sample_token(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> (i32, f32) {
+/// Reusable sampling workspace. One per engine (the engine's decode loop is
+/// single-threaded); sized lazily to the largest vocab seen, then constant.
+#[derive(Default)]
+pub struct SamplerScratch {
+    /// Unnormalized probabilities exp((l - max) / T), zeroed outside the
+    /// top-k / top-p support.
+    probs: Vec<f64>,
+    /// Index array for the top-p nucleus sort.
+    idx: Vec<u32>,
+    /// Value copy consumed by top-k partial selection.
+    sel: Vec<f64>,
+}
+
+impl SamplerScratch {
+    pub fn new() -> SamplerScratch {
+        SamplerScratch::default()
+    }
+
+    /// Current workspace capacity (scratch-reuse assertions in tests).
+    pub fn capacity(&self) -> usize {
+        self.probs.capacity()
+    }
+}
+
+/// Sample from one logits row using caller-owned scratch storage.
+/// Returns (token, ln p(token)). Behaviour is bit-identical to the
+/// straightforward allocating implementation (`reference::sample_token_ref`)
+/// for the same `Rng` stream: identical token picks, identical log-prob
+/// bits, identical RNG consumption (one `next_f64` per non-greedy call).
+pub fn sample_token_with(
+    logits: &[f32],
+    params: &SamplingParams,
+    rng: &mut Rng,
+    scratch: &mut SamplerScratch,
+) -> (i32, f32) {
     debug_assert!(!logits.is_empty());
     if params.temperature <= 0.0 {
         // Greedy: probability mass collapses to the argmax.
         let (best, _) = argmax(logits);
         return (best as i32, 0.0);
     }
+    let n = logits.len();
     let inv_t = 1.0 / params.temperature;
-    // Stable softmax at temperature.
+    // Stable softmax at temperature. The subtract/multiply/exp sequence and
+    // the left-to-right total accumulation match the reference bit-for-bit.
     let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-    let mut probs: Vec<f64> =
-        logits.iter().map(|&l| ((l as f64 - maxl) * inv_t).exp()).collect();
+    scratch.probs.clear();
+    scratch.probs.extend(logits.iter().map(|&l| ((l as f64 - maxl) * inv_t).exp()));
+    let probs = &mut scratch.probs[..];
 
-    // top-k: zero everything below the k-th largest.
-    if params.top_k > 0 && (params.top_k as usize) < probs.len() {
-        let mut sorted = probs.clone();
-        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
-        let thresh = sorted[params.top_k as usize - 1];
+    // top-k: keep exactly the k largest (stable order among ties — the
+    // first tokens in index order win), zero the rest. Partial selection
+    // finds the k-th largest value without sorting the whole vocab.
+    if params.top_k > 0 && (params.top_k as usize) < n {
+        let k = params.top_k as usize;
+        scratch.sel.clear();
+        scratch.sel.extend_from_slice(probs);
+        let (_, kth, _) = scratch
+            .sel
+            .select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+        let thresh = *kth;
+        // At most k-1 entries are strictly greater than the k-th largest;
+        // fill the remaining slots from the ties in index order.
+        let greater = probs.iter().filter(|&&p| p > thresh).count();
+        let mut tie_quota = k - greater;
         for p in probs.iter_mut() {
-            if *p < thresh {
-                *p = 0.0;
+            if *p > thresh {
+                continue;
             }
+            if *p == thresh && tie_quota > 0 {
+                tie_quota -= 1;
+                continue;
+            }
+            *p = 0.0;
         }
     }
 
@@ -57,28 +116,58 @@ pub fn sample_token(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> (
     // with cumulative mass >= top_p.
     if params.top_p < 1.0 {
         let total: f64 = probs.iter().sum();
-        let mut idx: Vec<usize> = (0..probs.len()).collect();
-        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        scratch.idx.clear();
+        scratch.idx.extend(0..n as u32);
+        // Unstable in-place sort with an explicit index tiebreak reproduces
+        // the stable by-probability order without a merge-sort temp buffer.
+        scratch.idx.sort_unstable_by(|&a, &b| {
+            probs[b as usize]
+                .partial_cmp(&probs[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
         let mut cum = 0.0;
-        let mut keep = vec![false; probs.len()];
-        for &i in &idx {
-            keep[i] = true;
-            cum += probs[i] / total;
+        let mut cut = n;
+        for (rank, &i) in scratch.idx.iter().enumerate() {
+            cum += probs[i as usize] / total;
             if cum >= params.top_p {
+                cut = rank + 1;
                 break;
             }
         }
-        for (i, p) in probs.iter_mut().enumerate() {
-            if !keep[i] {
-                *p = 0.0;
-            }
+        for &i in &scratch.idx[cut..] {
+            probs[i as usize] = 0.0;
         }
     }
 
+    // The final total over the (masked) support is accumulated left to
+    // right — the same order `pick_weighted` used — so the threshold walk
+    // sees bit-identical values.
     let total: f64 = probs.iter().sum();
-    let token = rng.pick_weighted(&probs);
+    let token = pick_weighted_total(rng, probs, total);
     let lp = (probs[token] / total).max(1e-300).ln() as f32;
     (token as i32, lp)
+}
+
+/// Convenience wrapper for cold paths and tests: same behaviour as
+/// [`sample_token_with`] with a throwaway scratch.
+pub fn sample_token(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> (i32, f32) {
+    let mut scratch = SamplerScratch::new();
+    sample_token_with(logits, params, rng, &mut scratch)
+}
+
+/// `Rng::pick_weighted` with the total precomputed by the caller (the
+/// sampler already has it); identical threshold walk, one fewer pass.
+#[inline]
+fn pick_weighted_total(rng: &mut Rng, weights: &[f64], total: f64) -> usize {
+    let mut x = rng.next_f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        x -= w;
+        if x <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
 }
 
 fn argmax(xs: &[f32]) -> (usize, f32) {
@@ -91,6 +180,79 @@ fn argmax(xs: &[f32]) -> (usize, f32) {
         }
     }
     (bi, bv)
+}
+
+pub mod reference {
+    //! The straightforward allocating sampler (pre-scratch seed code, with
+    //! the sanctioned exact-k tie fix). Kept as the differential oracle for
+    //! the golden-determinism tests and the "before" rows of
+    //! `benches/micro.rs` — NOT used on any production path.
+
+    use super::{argmax, SamplingParams};
+    use crate::util::Rng;
+
+    /// Allocating reference implementation of [`super::sample_token_with`].
+    pub fn sample_token_ref(
+        logits: &[f32],
+        params: &SamplingParams,
+        rng: &mut Rng,
+    ) -> (i32, f32) {
+        debug_assert!(!logits.is_empty());
+        if params.temperature <= 0.0 {
+            let (best, _) = argmax(logits);
+            return (best as i32, 0.0);
+        }
+        let inv_t = 1.0 / params.temperature;
+        let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut probs: Vec<f64> =
+            logits.iter().map(|&l| ((l as f64 - maxl) * inv_t).exp()).collect();
+
+        // top-k: keep exactly k (stable order among ties).
+        if params.top_k > 0 && (params.top_k as usize) < probs.len() {
+            let k = params.top_k as usize;
+            let mut sorted = probs.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let thresh = sorted[k - 1];
+            let greater = probs.iter().filter(|&&p| p > thresh).count();
+            let mut tie_quota = k - greater;
+            for p in probs.iter_mut() {
+                if *p > thresh {
+                    continue;
+                }
+                if *p == thresh && tie_quota > 0 {
+                    tie_quota -= 1;
+                    continue;
+                }
+                *p = 0.0;
+            }
+        }
+
+        // top-p (nucleus).
+        if params.top_p < 1.0 {
+            let total: f64 = probs.iter().sum();
+            let mut idx: Vec<usize> = (0..probs.len()).collect();
+            idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            let mut cum = 0.0;
+            let mut keep = vec![false; probs.len()];
+            for &i in &idx {
+                keep[i] = true;
+                cum += probs[i] / total;
+                if cum >= params.top_p {
+                    break;
+                }
+            }
+            for (i, p) in probs.iter_mut().enumerate() {
+                if !keep[i] {
+                    *p = 0.0;
+                }
+            }
+        }
+
+        let total: f64 = probs.iter().sum();
+        let token = rng.pick_weighted(&probs);
+        let lp = (probs[token] / total).max(1e-300).ln() as f32;
+        (token as i32, lp)
+    }
 }
 
 #[cfg(test)]
@@ -124,8 +286,10 @@ mod tests {
         let logits = [0.0f32, 1.0, 2.0];
         let mut counts = [0usize; 3];
         let n = 30_000;
+        let mut scratch = SamplerScratch::new();
         for _ in 0..n {
-            let (t, _) = sample_token(&logits, &SamplingParams::default(), &mut rng);
+            let (t, _) =
+                sample_token_with(&logits, &SamplingParams::default(), &mut rng, &mut scratch);
             counts[t as usize] += 1;
         }
         let z: f64 = logits.iter().map(|&l| (l as f64).exp()).sum();
@@ -144,6 +308,35 @@ mod tests {
         for _ in 0..200 {
             let (t, _) = sample_token(&logits, &p, &mut rng);
             assert!(t == 2 || t == 3, "token {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn top_k_with_ties_keeps_exactly_k() {
+        // Four-way tie at the top: the old `*p < thresh` filter kept all
+        // four; exact-k keeps the FIRST two in index order.
+        let mut rng = Rng::new(11);
+        let logits = [1.0f32, 1.0, 1.0, 1.0, 0.0];
+        let p = SamplingParams { temperature: 1.0, top_p: 1.0, top_k: 2 };
+        let mut scratch = SamplerScratch::new();
+        for _ in 0..400 {
+            let (t, lp) = sample_token_with(&logits, &p, &mut rng, &mut scratch);
+            assert!(t == 0 || t == 1, "token {t} outside exact top-2 (tie leak)");
+            // Two equal survivors → p = 1/2 each.
+            assert!((lp - 0.5f32.ln()).abs() < 1e-6, "lp {lp}");
+        }
+    }
+
+    #[test]
+    fn top_k_ties_below_threshold_are_dropped() {
+        // k-th largest is part of a tie that STARTS inside the top-k: keep
+        // greater values plus ties in index order until the quota fills.
+        let mut rng = Rng::new(12);
+        let logits = [2.0f32, 1.0, 1.0, 1.0];
+        let p = SamplingParams { temperature: 1.0, top_p: 1.0, top_k: 2 };
+        for _ in 0..400 {
+            let (t, _) = sample_token(&logits, &p, &mut rng);
+            assert!(t == 0 || t == 1, "token {t}: tie quota leaked past k");
         }
     }
 
@@ -182,5 +375,60 @@ mod tests {
             (0..20).map(|_| sample_token(&logits, &SamplingParams::default(), &mut rng).0).collect()
         };
         assert_eq!(a, b);
+    }
+
+    /// The tentpole contract: the scratch path is bit-identical to the
+    /// allocating reference — same tokens, same log-prob BITS, same RNG
+    /// consumption — across temperatures, top-k, top-p, and shared scratch.
+    #[test]
+    fn scratch_path_matches_reference_bitwise() {
+        let mut gen = Rng::new(77);
+        let mut scratch = SamplerScratch::new();
+        let param_grid = [
+            SamplingParams::default(),
+            SamplingParams { temperature: 0.7, top_p: 1.0, top_k: -1 },
+            SamplingParams { temperature: 1.0, top_p: 0.9, top_k: -1 },
+            SamplingParams { temperature: 1.0, top_p: 1.0, top_k: 8 },
+            SamplingParams { temperature: 1.3, top_p: 0.8, top_k: 12 },
+            SamplingParams { temperature: 0.5, top_p: 0.95, top_k: 3 },
+        ];
+        for case in 0..500 {
+            let n = 2 + (gen.below(63) as usize);
+            let logits: Vec<f32> =
+                (0..n).map(|_| (gen.next_f64() * 8.0 - 4.0) as f32).collect();
+            let params = param_grid[case % param_grid.len()];
+            let mut rng_a = Rng::new(1000 + case as u64);
+            let mut rng_b = rng_a.clone();
+            let (ta, lpa) = reference::sample_token_ref(&logits, &params, &mut rng_a);
+            let (tb, lpb) = sample_token_with(&logits, &params, &mut rng_b, &mut scratch);
+            assert_eq!(ta, tb, "case {case}: token diverged ({params:?})");
+            assert_eq!(
+                lpa.to_bits(),
+                lpb.to_bits(),
+                "case {case}: logprob bits diverged ({params:?})"
+            );
+            assert_eq!(
+                rng_a.next_u64(),
+                rng_b.next_u64(),
+                "case {case}: rng stream diverged"
+            );
+        }
+    }
+
+    /// Scratch capacity stabilizes after the first call at the max vocab —
+    /// later calls never regrow it (the alloc-free contract's mechanism).
+    #[test]
+    fn scratch_capacity_is_stable_after_warmup() {
+        let mut rng = Rng::new(6);
+        let mut scratch = SamplerScratch::new();
+        let logits: Vec<f32> = (0..48).map(|i| (i % 7) as f32 * 0.4).collect();
+        let p = SamplingParams { temperature: 1.0, top_p: 0.9, top_k: 8 };
+        sample_token_with(&logits, &p, &mut rng, &mut scratch);
+        let cap = scratch.capacity();
+        assert!(cap >= 48);
+        for _ in 0..200 {
+            sample_token_with(&logits, &p, &mut rng, &mut scratch);
+            assert_eq!(scratch.capacity(), cap, "scratch regrew in steady state");
+        }
     }
 }

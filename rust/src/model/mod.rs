@@ -21,6 +21,18 @@ pub struct ModelRuntime {
     pub spec: Manifest,
     pub device: Device,
     exes: HashMap<&'static str, Executable>,
+    /// Cached device uploads of small i32 scalars (slot ids, prompt
+    /// lengths, chunk end offsets). These repeat from tiny bounded value
+    /// sets — slot < S, len ≤ p_max — so each value is uploaded once and
+    /// reused; PJRT input buffers are immutable and non-donated here,
+    /// exactly like the long-lived `params` buffer. Replay `start`
+    /// positions are deliberately NOT cached (cardinality up to max_seq
+    /// would grow the cache unboundedly over a run).
+    i32_cache: HashMap<i32, PjRtBuffer>,
+    /// Reusable host staging for padded token rows (prefill/replay).
+    pad_scratch: Vec<i32>,
+    /// Reusable host copy of the logits header (prefill/replay row reads).
+    hdr_scratch: Vec<f32>,
 }
 
 /// Metrics head of grad/sft_grad outputs (indices into the first 8 floats).
@@ -67,7 +79,23 @@ impl ModelRuntime {
         let dir = Path::new(artifacts_dir).join(variant);
         let spec = Manifest::load(&dir)?;
         let device = Device::cpu()?;
-        Ok(ModelRuntime { spec, device, exes: HashMap::new() })
+        Ok(ModelRuntime {
+            spec,
+            device,
+            exes: HashMap::new(),
+            i32_cache: HashMap::new(),
+            pad_scratch: Vec::new(),
+            hdr_scratch: Vec::new(),
+        })
+    }
+
+    /// Ensure the device upload of scalar `v` is cached (see `i32_cache`).
+    fn ensure_i32(&mut self, v: i32) -> Result<()> {
+        if !self.i32_cache.contains_key(&v) {
+            let b = self.device.upload_i32(&[v])?;
+            self.i32_cache.insert(v, b);
+        }
+        Ok(())
     }
 
     fn exe(&mut self, name: &'static str) -> Result<&Executable> {
@@ -133,19 +161,30 @@ impl ModelRuntime {
         let pmax = self.spec.p_max;
         ensure!(!prompt.is_empty() && prompt.len() <= pmax, "prompt len {} > p_max {pmax}", prompt.len());
         ensure!(slot < self.spec.slots, "slot {slot} out of range");
-        let mut padded = vec![0i32; pmax];
-        padded[..prompt.len()].copy_from_slice(prompt);
-        let toks = self.device.upload_i32(&padded)?;
-        let len = self.device.upload_i32(&[prompt.len() as i32])?;
-        let slot_b = self.device.upload_i32(&[slot as i32])?;
-        let out = self.exe("prefill")?.run1(&[params, engine_state, &toks, &len, &slot_b])?;
+        self.pad_scratch.clear();
+        self.pad_scratch.resize(pmax, 0);
+        self.pad_scratch[..prompt.len()].copy_from_slice(prompt);
+        let toks = self.device.upload_i32(&self.pad_scratch)?;
+        self.ensure_i32(prompt.len() as i32)?;
+        self.ensure_i32(slot as i32)?;
+        self.exe("prefill")?;
+        let out = {
+            let exe = &self.exes["prefill"];
+            let len = &self.i32_cache[&(prompt.len() as i32)];
+            let slot_b = &self.i32_cache[&(slot as i32)];
+            exe.run1(&[params, engine_state, &toks, len, slot_b])?
+        };
         let v = self.spec.vocab;
-        let header = self.read_header(&out)?;
-        let logits = header[slot * v..(slot + 1) * v].to_vec();
+        // The read_header artifact returns the full S×V header — PJRT-CPU
+        // has no partial host reads (see Device::read_all_f32), so idle
+        // rows come along; only the requested row is copied out.
+        self.read_header_scratch(&out)?;
+        let logits = self.hdr_scratch[slot * v..(slot + 1) * v].to_vec();
         Ok((out, logits))
     }
 
     /// One decode step over all S slots; returns (engine state, logits S×V).
+    /// Cold-path convenience — per-step callers use `decode_into`.
     pub fn decode(
         &mut self,
         params: &PjRtBuffer,
@@ -153,13 +192,35 @@ impl ModelRuntime {
         tokens: &[i32],
         pos: &[i32],
     ) -> Result<(PjRtBuffer, Vec<f32>)> {
+        let mut logits = Vec::new();
+        let es = self.decode_into(params, engine_state, tokens, pos, &mut logits)?;
+        Ok((es, logits))
+    }
+
+    /// One decode step writing the S×V logits into a caller-owned buffer
+    /// reused across steps; returns the new engine state.
+    ///
+    /// PJRT 0.5.1 exposes no host→device in-place write, so the token/pos
+    /// rows still pass through `buffer_from_host_buffer` each step — what
+    /// this path eliminates is the per-step host churn: the logits Vec
+    /// (S×V floats) is reused instead of reallocated, and small scalar
+    /// arguments elsewhere in the rollout path come from `i32_cache`.
+    pub fn decode_into(
+        &mut self,
+        params: &PjRtBuffer,
+        engine_state: &PjRtBuffer,
+        tokens: &[i32],
+        pos: &[i32],
+        logits: &mut Vec<f32>,
+    ) -> Result<PjRtBuffer> {
         let s = self.spec.slots;
         ensure!(tokens.len() == s && pos.len() == s, "decode arg length");
         let t = self.device.upload_i32(tokens)?;
         let p = self.device.upload_i32(pos)?;
         let out = self.exe("decode")?.run1(&[params, engine_state, &t, &p])?;
-        let logits = self.read_header(&out)?;
-        Ok((out, logits))
+        let h = self.exe("read_header")?.run1(&[&out])?;
+        self.device.read_all_f32_into(&h, self.spec.header_elems(), logits)?;
+        Ok(out)
     }
 
     /// Chunked re-prefill of resume tokens for one slot (≤ p_max per call;
@@ -178,18 +239,26 @@ impl ModelRuntime {
         ensure!(!chunk.is_empty() && chunk.len() <= pmax, "replay chunk size");
         ensure!(start + pmax <= self.spec.max_seq, "replay too close to horizon");
         let n = chunk.len();
-        let mut padded = vec![0i32; pmax];
-        padded[..n].copy_from_slice(chunk);
-        let toks = self.device.upload_i32(&padded)?;
+        self.pad_scratch.clear();
+        self.pad_scratch.resize(pmax, 0);
+        self.pad_scratch[..n].copy_from_slice(chunk);
+        let toks = self.device.upload_i32(&self.pad_scratch)?;
+        // `start` is uploaded fresh: its value set spans max_seq (see
+        // i32_cache docs), and replay only runs at partial-resumption
+        // admits — not the per-step hot path.
         let start_b = self.device.upload_i32(&[start as i32])?;
-        let slot_b = self.device.upload_i32(&[slot as i32])?;
-        let last_b = self.device.upload_i32(&[(n - 1) as i32])?;
-        let out = self
-            .exe("replay")?
-            .run1(&[params, engine_state, &toks, &start_b, &slot_b, &last_b])?;
+        self.ensure_i32(slot as i32)?;
+        self.ensure_i32((n - 1) as i32)?;
+        self.exe("replay")?;
+        let out = {
+            let exe = &self.exes["replay"];
+            let slot_b = &self.i32_cache[&(slot as i32)];
+            let last_b = &self.i32_cache[&((n - 1) as i32)];
+            exe.run1(&[params, engine_state, &toks, &start_b, slot_b, last_b])?
+        };
         let v = self.spec.vocab;
-        let header = self.read_header(&out)?;
-        let logits = header[slot * v..(slot + 1) * v].to_vec();
+        self.read_header_scratch(&out)?;
+        let logits = self.hdr_scratch[slot * v..(slot + 1) * v].to_vec();
         Ok((out, logits))
     }
 
@@ -249,9 +318,10 @@ impl ModelRuntime {
     }
 
     /// Device-side slice reads (CopyRawToHost is unavailable on PJRT-CPU).
-    fn read_header(&mut self, engine_state: &PjRtBuffer) -> Result<Vec<f32>> {
+    /// The header lands in `hdr_scratch`, reused across calls.
+    fn read_header_scratch(&mut self, engine_state: &PjRtBuffer) -> Result<()> {
         let h = self.exe("read_header")?.run1(&[engine_state])?;
-        self.device.read_all_f32(&h, self.spec.header_elems())
+        self.device.read_all_f32_into(&h, self.spec.header_elems(), &mut self.hdr_scratch)
     }
 
     fn read_metrics(&mut self, grads: &PjRtBuffer) -> Result<Vec<f32>> {

@@ -80,6 +80,27 @@ impl Device {
         }
         Ok(v)
     }
+
+    /// `read_all_f32` into a caller-owned buffer reused across calls.
+    /// The xla 0.5.1 literal API only exposes an owning `to_vec`, so the
+    /// transfer itself still materializes once; this variant removes the
+    /// *second* buffer that per-step callers (decode logits) would
+    /// otherwise reallocate every iteration.
+    pub fn read_all_f32_into(
+        &self,
+        buf: &xla::PjRtBuffer,
+        len: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let lit = buf.to_literal_sync().map_err(wrap)?;
+        let v: Vec<f32> = lit.to_vec().map_err(wrap)?;
+        if v.len() != len {
+            bail!("read_all_f32_into: expected {len} elems, got {}", v.len());
+        }
+        out.clear();
+        out.extend_from_slice(&v);
+        Ok(())
+    }
 }
 
 /// A compiled artifact with a single array output.

@@ -1,0 +1,97 @@
+//! Counting-allocator proof of the zero-allocation decode hot path: once
+//! slots are mid-generation (scratches sized, output vectors reserved at
+//! admission), `Engine::step` over `MockBackend` must perform ZERO heap
+//! allocations — softmax sampling, top-k/top-p filtering, logits delivery,
+//! and busy/kv bookkeeping all run in reused storage.
+//!
+//! Single test fn on purpose: the counter is process-global, so scenarios
+//! run sequentially inside it (libtest would otherwise interleave them).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use copris::engine::{Engine, EngineEvent, MockBackend, SamplingParams, WorkItem};
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Drive `steps` steady-state decode steps and return the allocation count.
+fn count_steady_state_allocs(sampling: SamplingParams, steps: usize) -> u64 {
+    const SLOTS: usize = 4;
+    const MAX_SEQ: usize = 192;
+    let mut be = MockBackend::new(SLOTS, MAX_SEQ);
+    // Long scripted outputs: no slot reaches EOS during the measured
+    // window, so every step is pure decode (the steady state).
+    be.min_len = 150;
+    be.spread = 1;
+    let mut eng = Engine::new(0, be, 0, 1);
+    for i in 0..SLOTS as u64 {
+        eng.submit(WorkItem {
+            request_id: i,
+            prompt: vec![1, i as i32 + 4, 9].into(),
+            resume: vec![],
+            max_total: MAX_SEQ,
+            sampling,
+        })
+        .unwrap();
+    }
+    // Warmup: admission (prefill + per-slot output reservation) and first
+    // decode steps size every scratch — logits buffer, sampler workspace,
+    // token/pos staging, events vec.
+    let mut ev: Vec<EngineEvent> = Vec::with_capacity(64);
+    for _ in 0..10 {
+        eng.step(&mut ev).unwrap();
+        ev.clear();
+    }
+    assert_eq!(eng.busy(), SLOTS, "warmup must leave all slots mid-generation");
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..steps {
+        eng.step(&mut ev).unwrap();
+        ev.clear();
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    assert_eq!(eng.busy(), SLOTS, "no slot may finish inside the window");
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_decode_steps_do_not_allocate() {
+    // Softmax-only sampling (paper defaults) ...
+    let n = count_steady_state_allocs(SamplingParams::default(), 100);
+    assert_eq!(n, 0, "default-params decode steps allocated {n} times");
+    // ... and the full top-k partial-selection + top-p nucleus path.
+    let p = SamplingParams { temperature: 0.9, top_p: 0.9, top_k: 8 };
+    let n = count_steady_state_allocs(p, 100);
+    assert_eq!(n, 0, "top-k/top-p decode steps allocated {n} times");
+}

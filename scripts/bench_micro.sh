@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Run the micro bench and record BENCH_micro.json at the repo root —
+# the repo's perf trajectory file (EXPERIMENTS.md §Perf tracks the table).
+#
+# The L3 coordination rows (sampler, buffer ops, mock decode, engine step,
+# event flush, dispatch clone) need no artifacts; the xla rows appear
+# automatically when artifacts/<model>/ exists (COPRIS_BENCH_MODEL).
+set -euo pipefail
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$ROOT"
+
+MANIFEST=""
+for c in Cargo.toml rust/Cargo.toml; do
+  if [ -f "$c" ]; then
+    MANIFEST="$c"
+    break
+  fi
+done
+if [ -z "$MANIFEST" ]; then
+  echo "bench_micro: no Cargo.toml found under $ROOT" >&2
+  exit 1
+fi
+
+export COPRIS_BENCH_JSON="$ROOT/BENCH_micro.json"
+# The bench targets are harness=false binaries: `cargo bench --bench micro`
+# runs micro.rs::main(), which prints the table and writes the JSON.
+cargo bench --manifest-path "$MANIFEST" --bench micro "$@"
+echo "bench_micro: wrote $COPRIS_BENCH_JSON"
