@@ -1,0 +1,61 @@
+//! Serial vs stage-pipelined CoPRIS, end-to-end wall clock at equal batch
+//! count on the mock backend (table1-style arm for the pipelining PR).
+//! The mock's per-step decode delay stands in for GPU decode time; the
+//! simulated trainer window stands in for cal-logprob → grad → update.
+//! Scale via COPRIS_BENCH_STEPS / COPRIS_BENCH_TRAIN_MS /
+//! COPRIS_BENCH_DECODE_US.
+
+use std::time::Duration;
+
+use copris::bench::render_table;
+use copris::exp::common::env_usize;
+use copris::exp::pipesim::{run, PipeSimOpts};
+
+fn main() {
+    let mut opts = PipeSimOpts::default();
+    opts.steps = env_usize("COPRIS_BENCH_STEPS", 8);
+    opts.train_secs = env_usize("COPRIS_BENCH_TRAIN_MS", 60) as f64 / 1e3;
+    opts.decode_delay =
+        Duration::from_micros(env_usize("COPRIS_BENCH_DECODE_US", 1000) as u64);
+
+    println!(
+        "== pipeline_overlap: serial vs stage-pipelined CoPRIS (mock backend) ==\n\
+         {} steps, B={} G={} N'={}, decode {:?}/step, simulated train {:.0}ms/step\n",
+        opts.steps,
+        opts.cfg.rollout.batch_prompts,
+        opts.cfg.rollout.group_size,
+        opts.cfg.rollout.concurrency,
+        opts.decode_delay,
+        opts.train_secs * 1e3,
+    );
+
+    let (serial, _) = run(&opts, false).expect("serial arm");
+    let (piped, _) = run(&opts, true).expect("pipelined arm");
+
+    let headers = [
+        "Arm", "Wall s", "Groups", "Samples", "Rollout s", "Overlap s",
+        "Lagged trajs", "Resumed", "Speedup",
+    ];
+    let row = |name: &str, s: &copris::exp::pipesim::PipeSimSummary, speedup: f64| {
+        vec![
+            name.to_string(),
+            format!("{:.2}", s.wall),
+            s.groups.to_string(),
+            s.samples.to_string(),
+            format!("{:.2}", s.rollout_secs),
+            format!("{:.2}", s.overlap_secs),
+            s.lagged_trajectories.to_string(),
+            s.resumed.to_string(),
+            if speedup > 0.0 { format!("{speedup:.2}x") } else { "-".into() },
+        ]
+    };
+    let rows = vec![
+        row("serial copris", &serial, 0.0),
+        row("pipelined copris", &piped, serial.wall / piped.wall.max(1e-9)),
+    ];
+    println!("{}", render_table(&headers, &rows));
+    println!(
+        "\nexpected shape: pipelined wall ≈ max(rollout, train) per step instead of\n\
+         rollout + train; mid-flight syncs surface as lagged (multi-segment) trajectories."
+    );
+}

@@ -57,6 +57,13 @@ pub fn preset(name: &str) -> Option<Config> {
             c.rollout.mode = RolloutMode::Sync;
             Some(c)
         }
+        // CoPRIS with stage-pipelined execution: stage t+1 generates while
+        // the stage-t update computes; weights sync mid-flight.
+        "pipelined-small" => {
+            let mut c = scaled_preset("small");
+            c.rollout.pipeline = true;
+            Some(c)
+        }
         _ => None,
     }
 }
@@ -88,6 +95,9 @@ mod tests {
         assert!(preset("paper").is_some());
         assert!(preset("scaled-small").is_some());
         assert!(preset("sync-baseline").unwrap().rollout.mode == RolloutMode::Sync);
+        let pipe = preset("pipelined-small").unwrap();
+        assert!(pipe.rollout.pipeline);
+        assert_eq!(pipe.rollout.mode, RolloutMode::Copris);
         assert!(preset("nope").is_none());
     }
 }

@@ -56,6 +56,12 @@ pub struct RolloutConfig {
     /// Cap on buffered-partial reuse: trajectories older than this many
     /// stages are discarded (staleness guard; paper keeps all).
     pub max_stage_lag: usize,
+    /// Stage-pipelined execution: begin stage t+1's rollout before the
+    /// stage-t update and pump it between trainer microbatches, syncing
+    /// weights mid-flight (in-flight trajectories gain another version
+    /// segment — handled by the cross-stage IS machinery). Off = serial
+    /// rollout → train → sync, matching the paper.
+    pub pipeline: bool,
 }
 
 impl Default for RolloutConfig {
@@ -70,6 +76,7 @@ impl Default for RolloutConfig {
             top_k: -1,
             importance_sampling: true,
             max_stage_lag: usize::MAX,
+            pipeline: false,
         }
     }
 }
@@ -193,6 +200,7 @@ impl Config {
                 self.rollout.importance_sampling = parse_bool()?
             }
             ("rollout", "max_stage_lag") => self.rollout.max_stage_lag = parse_usize()?,
+            ("rollout", "pipeline") => self.rollout.pipeline = parse_bool()?,
             ("engine", "engines") => self.engine.engines = parse_usize()?,
             ("engine", "kv_budget_tokens") => self.engine.kv_budget_tokens = parse_usize()?,
             ("engine", "max_new_tokens") => self.engine.max_new_tokens = parse_usize()?,
@@ -261,6 +269,7 @@ impl Config {
         s.push_str("| **CoPRIS Specific Configuration** | |\n");
         s.push_str(&format!("| Concurrency pool size (N') | {} |\n", r.concurrency));
         s.push_str(&format!("| Importance sampling | {} |\n", r.importance_sampling));
+        s.push_str(&format!("| Stage pipelining | {} |\n", r.pipeline));
         s.push_str("| **Training Configuration** | |\n");
         s.push_str(&format!("| Global batch size | {} |\n", r.batch_prompts));
         s.push_str("| Optimizer | Adam |\n");
@@ -293,10 +302,19 @@ mod tests {
         c.set("rollout.mode", "sync").unwrap();
         c.set("train.lr", "1e-6").unwrap();
         c.set("rollout.importance_sampling", "off").unwrap();
+        c.set("rollout.pipeline", "true").unwrap();
         assert_eq!(c.rollout.concurrency, 32);
         assert_eq!(c.rollout.mode, RolloutMode::Sync);
         assert_eq!(c.train.lr, 1e-6);
         assert!(!c.rollout.importance_sampling);
+        assert!(c.rollout.pipeline);
+    }
+
+    #[test]
+    fn pipeline_defaults_off_and_renders() {
+        let c = Config::new("tiny");
+        assert!(!c.rollout.pipeline);
+        assert!(c.render_table().contains("Stage pipelining"));
     }
 
     #[test]

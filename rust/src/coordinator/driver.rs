@@ -1,0 +1,144 @@
+//! The reentrant stage state machine. A [`StageDriver`] is the per-stage
+//! control block the [`Coordinator`](super::Coordinator) polls through
+//! `begin_stage` / `pump` / `stage_is_done` / `finish_stage`: dispatch
+//! policy, refill, early termination and drain are explicit states driven
+//! by non-blocking pool event reads, so a stage can be advanced
+//! incrementally — the substrate for stage-pipelined execution
+//! (`rollout.pipeline`), where the next stage's rollout is pumped between
+//! trainer microbatches while the update for the previous one computes.
+//!
+//! Sync (veRL), NaivePartial (Kimi-K1.5), CoPRIS and the fixed-prompt eval
+//! path are all parameterizations of this one driver ([`StagePolicy`]);
+//! none of them has its own event loop anymore.
+
+use std::time::{Duration, Instant};
+
+use crate::engine::SamplingParams;
+
+use super::rollout::RolloutStats;
+
+/// Watchdog: a stage with work in flight that sees no engine event for this
+/// long is considered wedged (matches the pre-refactor 120 s recv timeout).
+pub const EVENT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// What a stage is trying to deliver.
+#[derive(Clone, Debug)]
+pub enum StageGoal {
+    /// Training stage: `b` complete groups, tasks drawn from the dataset.
+    Batch { b: usize },
+    /// Eval stage: fixed task list dispatched upfront, runs until idle.
+    /// Owns exactly its own trajectories — never touches the shared
+    /// partial buffer (`run_fixed_sync` tracks its group ids itself).
+    Fixed,
+}
+
+/// Dispatch-policy parameters. The three rollout modes and eval differ
+/// only in these values:
+///
+/// | mode         | target  | continuous | use_buffer | drain | until_idle | inline_preempt |
+/// |--------------|---------|------------|------------|-------|------------|----------------|
+/// | Sync         | None    | —          | no         | no    | yes        | no             |
+/// | NaivePartial | Some(N')| no (waves) | yes        | yes   | no         | no             |
+/// | Copris       | Some(N')| yes        | yes        | yes   | no         | no             |
+/// | eval (fixed) | None    | —          | no         | no    | yes        | yes            |
+#[derive(Clone, Copy, Debug)]
+pub struct StagePolicy {
+    /// In-flight refill target N' (None → dispatch-once, no refill).
+    pub target: Option<usize>,
+    /// Refill after every event (CoPRIS) vs only when a wave exhausts
+    /// with the batch incomplete (NaivePartial re-wave fallback).
+    pub continuous: bool,
+    /// Prioritized resumption: pop buffered partials when refilling.
+    pub use_buffer: bool,
+    /// Early-terminate + drain partials into the buffer once the goal is
+    /// met with work still in flight.
+    pub drain: bool,
+    /// Goal test: wait for in-flight work to hit zero (Sync, eval) instead
+    /// of counting completed groups.
+    pub until_idle: bool,
+    /// Re-dispatch preempted trajectories inline instead of parking them
+    /// in the shared buffer. Eval stages set this so carried-over TRAINING
+    /// partials are never popped (and generated) under an eval run.
+    pub inline_preempt: bool,
+}
+
+/// Explicit stage phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StagePhase {
+    /// Event loop: goal not met yet.
+    Running,
+    /// StopGeneration broadcast; waiting for every engine's Flushed marker.
+    Draining,
+    /// Goal met, engines quiesced — `finish_stage` may harvest.
+    Done,
+}
+
+/// Per-stage control block (one per active stage, owned by the
+/// coordinator). Holds everything the pre-refactor blocking loop kept on
+/// its call stack, so the stage survives returning to the caller.
+pub struct StageDriver {
+    pub goal: StageGoal,
+    pub policy: StagePolicy,
+    pub sampling: SamplingParams,
+    pub phase: StagePhase,
+    pub stats: RolloutStats,
+    /// Stage start (wall-clock accounting).
+    pub t0: Instant,
+    /// Flushed markers seen while draining.
+    pub flushed: usize,
+    /// NaivePartial wave allowance (None = unlimited). Decremented on
+    /// every dispatch; `Some(0)` blocks refill until the next re-wave.
+    pub wave_remaining: Option<usize>,
+    /// Last engine event seen (wedge watchdog).
+    pub last_event: Instant,
+    /// When the stage reached `Done` (wall-clock + overlap accounting:
+    /// time between Done and `finish_stage` is idle, not stage work).
+    pub done_at: Option<Instant>,
+}
+
+impl StageDriver {
+    pub fn new(goal: StageGoal, policy: StagePolicy, sampling: SamplingParams) -> StageDriver {
+        let now = Instant::now();
+        StageDriver {
+            goal,
+            policy,
+            sampling,
+            phase: StagePhase::Running,
+            stats: RolloutStats::default(),
+            t0: now,
+            flushed: 0,
+            wave_remaining: None,
+            last_event: now,
+            done_at: None,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == StagePhase::Done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_driver_starts_running() {
+        let d = StageDriver::new(
+            StageGoal::Batch { b: 4 },
+            StagePolicy {
+                target: Some(8),
+                continuous: true,
+                use_buffer: true,
+                drain: true,
+                until_idle: false,
+                inline_preempt: false,
+            },
+            SamplingParams::default(),
+        );
+        assert_eq!(d.phase, StagePhase::Running);
+        assert!(!d.is_done());
+        assert_eq!(d.flushed, 0);
+        assert!(d.wave_remaining.is_none());
+    }
+}

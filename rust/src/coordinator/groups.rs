@@ -110,11 +110,13 @@ impl GroupBook {
     }
 
     /// Groups still needing samples dispatched, most-started first (finish
-    /// near-complete groups before opening new ones).
+    /// near-complete groups before opening new ones). Ties break by group
+    /// id so dispatch order never depends on HashMap iteration order —
+    /// required for the golden driver-equivalence tests.
     pub fn groups_with_deficit(&self) -> Vec<u64> {
         let mut v: Vec<(&u64, &Group)> =
             self.groups.iter().filter(|(_, g)| g.deficit() > 0 && !g.is_complete()).collect();
-        v.sort_by_key(|(_, g)| std::cmp::Reverse(g.dispatched));
+        v.sort_by_key(|(id, g)| (std::cmp::Reverse(g.dispatched), **id));
         v.iter().map(|(id, _)| **id).collect()
     }
 

@@ -12,13 +12,23 @@
 //!
 //! Baselines implemented by the same driver: fully-synchronous (veRL) and
 //! naive partial rollout (Kimi-K1.5-style fixed initial concurrency).
+//!
+//! Since the stage-pipelining PR, stage execution is a reentrant state
+//! machine ([`driver::StageDriver`]) polled via non-blocking pool reads —
+//! `begin_stage` / `pump` / `finish_stage` — so a stage can overlap trainer
+//! compute (`rollout.pipeline`). The pre-refactor blocking coordinator is
+//! frozen in [`reference`] as the golden-equivalence oracle.
 
 pub mod buffer;
+pub mod driver;
 pub mod groups;
+pub mod reference;
 pub mod rollout;
 pub mod trajectory;
 
 pub use buffer::PartialBuffer;
+pub use driver::{StageDriver, StageGoal, StagePhase, StagePolicy};
 pub use groups::{Group, GroupBook};
+pub use reference::ReferenceCoordinator;
 pub use rollout::{Coordinator, RolloutOutput, RolloutStats};
 pub use trajectory::{Segment, Trajectory};

@@ -1,0 +1,376 @@
+//! **Frozen pre-refactor coordinator** — the monolithic blocking
+//! `rollout_stage` exactly as it stood before the reentrant
+//! [`StageDriver`](super::driver::StageDriver) rewrite, kept verbatim as a
+//! golden oracle: `tests/rollout_golden.rs` runs this and the state-machine
+//! driver side by side on the mock backend and asserts bit-identical
+//! sync/naive/copris stage outputs (same pattern as the sampler's
+//! allocating reference in `engine/sampler.rs`).
+//!
+//! Known bugs preserved on purpose (they ARE the pre-refactor behaviour;
+//! both are fixed in the live driver and pinned by tests):
+//! - `run_fixed_sync` re-dispatches *any* buffered partial, stealing
+//!   carried-over training partials into the eval run.
+//! - `RolloutStats::resumed` is never incremented.
+//!
+//! Do not "fix" or modernise this file — its value is that it does not
+//! change.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::buffer::PartialBuffer;
+use super::groups::{Group, GroupBook};
+use super::rollout::{RolloutOutput, RolloutStats};
+use super::trajectory::Trajectory;
+use crate::config::{Config, RolloutMode};
+use crate::engine::{EngineCmd, EngineEvent, EnginePool, FinishReason, SamplingParams, WorkItem};
+use crate::tasks::{Dataset, Task};
+use crate::tokenizer::Tokenizer;
+
+/// In-flight bookkeeping: trajectory + which engine has it.
+struct InFlight {
+    traj: Trajectory,
+    engine: usize,
+}
+
+/// The pre-refactor blocking coordinator (test oracle only).
+pub struct ReferenceCoordinator {
+    pub pool: EnginePool,
+    pub cfg: Config,
+    pub buffer: PartialBuffer,
+    book: GroupBook,
+    inflight: HashMap<u64, InFlight>,
+    engine_load: Vec<usize>,
+    next_traj_id: u64,
+    pub policy_version: u64,
+    tokenizer: Tokenizer,
+    wave_remaining: Option<usize>,
+    max_seq: usize,
+}
+
+impl ReferenceCoordinator {
+    pub fn new(pool: EnginePool, cfg: Config, max_seq: usize) -> ReferenceCoordinator {
+        let engines = pool.engines();
+        let buffer = PartialBuffer::new(cfg.rollout.max_stage_lag);
+        ReferenceCoordinator {
+            pool,
+            cfg,
+            buffer,
+            book: GroupBook::new(),
+            inflight: HashMap::new(),
+            engine_load: vec![0; engines],
+            next_traj_id: 0,
+            policy_version: 0,
+            tokenizer: Tokenizer::new(),
+            wave_remaining: None,
+            max_seq,
+        }
+    }
+
+    fn max_total_for(&self, prompt_len: usize) -> usize {
+        let cap = if self.cfg.engine.max_new_tokens > 0 {
+            prompt_len + self.cfg.engine.max_new_tokens
+        } else {
+            usize::MAX
+        };
+        cap.min(self.max_seq)
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    pub fn sync_weights(&mut self, version: u64, params: Arc<Vec<f32>>) {
+        self.policy_version = version;
+        self.pool.broadcast_params(version, params);
+    }
+
+    fn total_inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    fn least_loaded_engine(&self) -> usize {
+        self.engine_load
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| **l)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn dispatch(&mut self, traj: Trajectory, sampling: SamplingParams) {
+        let engine = self.least_loaded_engine();
+        let item = WorkItem {
+            request_id: traj.id,
+            prompt: traj.prompt.clone(),
+            resume: traj.tokens.clone(),
+            max_total: self.max_total_for(traj.prompt.len()),
+            sampling,
+        };
+        self.engine_load[engine] += 1;
+        self.inflight.insert(traj.id, InFlight { traj, engine });
+        self.pool.send(engine, EngineCmd::Assign(item));
+        if let Some(w) = self.wave_remaining.as_mut() {
+            *w = w.saturating_sub(1);
+        }
+    }
+
+    fn dispatch_fresh(&mut self, group_id: u64, task: &Task, sampling: SamplingParams) {
+        let prompt = self.tokenizer.encode_prompt(&task.prompt);
+        let id = self.next_traj_id;
+        self.next_traj_id += 1;
+        let traj = Trajectory::new(id, group_id, task.clone(), prompt, self.policy_version);
+        self.book.note_dispatch(group_id);
+        self.dispatch(traj, sampling);
+    }
+
+    fn refill_one(&mut self, dataset: &mut Dataset, sampling: SamplingParams) -> bool {
+        if let Some(0) = self.wave_remaining {
+            return false;
+        }
+        if let Some(t) = self.buffer.pop() {
+            self.dispatch(t, sampling);
+            return true;
+        }
+        if let Some(gid) = self.book.groups_with_deficit().first().copied() {
+            let task = self.book.get(gid).unwrap().task.clone();
+            self.dispatch_fresh(gid, &task, sampling);
+            return true;
+        }
+        let task = dataset.next_task();
+        let gid = self.book.new_group(task.clone(), self.cfg.rollout.group_size);
+        self.dispatch_fresh(gid, &task, sampling);
+        true
+    }
+
+    /// One blocking rollout stage in the configured mode (pre-refactor).
+    pub fn rollout_stage(&mut self, dataset: &mut Dataset) -> Result<RolloutOutput> {
+        let cfg = self.cfg.rollout.clone();
+        let sampling = SamplingParams {
+            temperature: cfg.temperature,
+            top_p: cfg.top_p,
+            top_k: cfg.top_k,
+        };
+        let b = cfg.batch_prompts;
+        let mut stats = RolloutStats::default();
+        let t0 = Instant::now();
+
+        for stale in self.buffer.evict_stale(self.policy_version) {
+            self.book.note_abandoned(stale.group_id);
+        }
+
+        let concurrency = match cfg.mode {
+            RolloutMode::Sync => {
+                self.wave_remaining = None;
+                for _ in 0..b {
+                    let task = dataset.next_task();
+                    let gid = self.book.new_group(task.clone(), cfg.group_size);
+                    for _ in 0..cfg.group_size {
+                        self.dispatch_fresh(gid, &task, sampling);
+                    }
+                }
+                usize::MAX
+            }
+            RolloutMode::NaivePartial => {
+                self.wave_remaining = Some(cfg.concurrency);
+                cfg.concurrency
+            }
+            RolloutMode::Copris => {
+                self.wave_remaining = None;
+                cfg.concurrency
+            }
+        };
+
+        if cfg.mode != RolloutMode::Sync {
+            while self.total_inflight() < concurrency {
+                if !self.refill_one(dataset, sampling) {
+                    break;
+                }
+            }
+        }
+        stats.peak_inflight = self.total_inflight();
+
+        loop {
+            let done_enough = match cfg.mode {
+                RolloutMode::Sync => self.total_inflight() == 0,
+                _ => self.book.completed_count() >= b,
+            };
+            if done_enough {
+                break;
+            }
+            if cfg.mode == RolloutMode::NaivePartial
+                && self.total_inflight() == 0
+                && self.book.completed_count() < b
+            {
+                self.wave_remaining = Some(cfg.concurrency);
+                while self.total_inflight() < cfg.concurrency {
+                    if !self.refill_one(dataset, sampling) {
+                        break;
+                    }
+                }
+            }
+
+            let ev = self
+                .pool
+                .events
+                .recv_timeout(Duration::from_secs(120))
+                .context("rollout: engine event timeout")?;
+            self.handle_event(ev, &mut stats, false)?;
+
+            if cfg.mode == RolloutMode::Copris {
+                while self.total_inflight() < concurrency {
+                    if !self.refill_one(dataset, sampling) {
+                        break;
+                    }
+                }
+                stats.peak_inflight = stats.peak_inflight.max(self.total_inflight());
+            }
+        }
+
+        if cfg.mode != RolloutMode::Sync && self.total_inflight() > 0 {
+            self.drain_partials(&mut stats)?;
+        }
+        self.wave_remaining = None;
+
+        let groups = self.book.take_completed(b);
+        stats.completed = groups.iter().map(|g| g.done.len()).sum();
+        stats.wall = t0.elapsed().as_secs_f64();
+        Ok(RolloutOutput { groups, stats })
+    }
+
+    fn handle_event(
+        &mut self,
+        ev: EngineEvent,
+        stats: &mut RolloutStats,
+        draining: bool,
+    ) -> Result<usize> {
+        match ev {
+            EngineEvent::Batch(evs) => {
+                let mut flushed = 0;
+                for e in evs {
+                    flushed += self.handle_event(e, stats, draining)?;
+                }
+                return Ok(flushed);
+            }
+            EngineEvent::Trace(t) => stats.traces.push(t),
+            EngineEvent::Flushed { .. } => return Ok(1),
+            EngineEvent::ShutDown { .. } => {}
+            EngineEvent::Done { engine, result } => {
+                let Some(inf) = self.inflight.remove(&result.request_id) else {
+                    bail!("unknown request {} from engine {engine}", result.request_id);
+                };
+                self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
+                let mut traj = inf.traj;
+                traj.append_stage(&result.new_tokens, &result.new_logprobs, self.policy_version);
+                stats.replayed_tokens += result.replayed as u64;
+                match result.reason {
+                    FinishReason::Eos | FinishReason::LengthCap => {
+                        traj.complete = true;
+                        stats.response_lengths.push(traj.len());
+                        self.book.record_complete(traj)?;
+                    }
+                    FinishReason::Preempted => {
+                        stats.preemptions += 1;
+                        if draining {
+                            self.park_partial(traj, stats);
+                        } else {
+                            self.buffer.push(traj);
+                        }
+                    }
+                    FinishReason::Stopped => {
+                        self.park_partial(traj, stats);
+                    }
+                }
+            }
+        }
+        Ok(0)
+    }
+
+    fn park_partial(&mut self, traj: Trajectory, stats: &mut RolloutStats) {
+        if traj.is_empty() {
+            self.book.note_abandoned(traj.group_id);
+        } else {
+            stats.partials_buffered += 1;
+            self.buffer.push(traj);
+        }
+    }
+
+    fn drain_partials(&mut self, stats: &mut RolloutStats) -> Result<()> {
+        self.pool.stop_generation_all();
+        let mut flushed = 0usize;
+        let engines = self.pool.engines();
+        while flushed < engines {
+            let ev = self
+                .pool
+                .events
+                .recv_timeout(Duration::from_secs(120))
+                .context("drain: engine event timeout")?;
+            flushed += self.handle_event(ev, stats, true)?;
+        }
+        let leftovers: Vec<u64> = self.inflight.keys().copied().collect();
+        for id in leftovers {
+            let inf = self.inflight.remove(&id).unwrap();
+            self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
+            self.park_partial(inf.traj, stats);
+        }
+        stats.resumed = 0; // the pre-refactor "set by caller" that nobody set
+        Ok(())
+    }
+
+    /// Pre-refactor eval path — including the bug where buffered TRAINING
+    /// partials are popped and generated under the eval run.
+    pub fn run_fixed_sync(
+        &mut self,
+        tasks: &[Task],
+        samples: usize,
+        sampling: SamplingParams,
+    ) -> Result<Vec<Group>> {
+        anyhow::ensure!(self.inflight.is_empty(), "run_fixed_sync with work in flight");
+        let mut ids = Vec::new();
+        for task in tasks {
+            let gid = self.book.new_group(task.clone(), samples);
+            ids.push(gid);
+            for _ in 0..samples {
+                self.dispatch_fresh(gid, task, sampling);
+            }
+        }
+        let mut stats = RolloutStats::default();
+        while self.total_inflight() > 0 {
+            let ev = self
+                .pool
+                .events
+                .recv_timeout(Duration::from_secs(120))
+                .context("eval: engine event timeout")?;
+            self.handle_event(ev, &mut stats, false)?;
+            while let Some(t) = self.buffer.pop() {
+                self.dispatch(t, sampling);
+            }
+        }
+        let mut taken = self.book.take_groups(&ids);
+        let index: HashMap<u64, usize> =
+            ids.iter().enumerate().map(|(i, id)| (*id, i)).collect();
+        let mut slots: Vec<Option<Group>> = (0..ids.len()).map(|_| None).collect();
+        for g in taken.drain(..) {
+            let i = index[&g.group_id];
+            slots[i] = Some(g);
+        }
+        let mut out = Vec::new();
+        for s in slots {
+            let g = s.context("eval group missing")?;
+            anyhow::ensure!(g.is_complete(), "eval group incomplete");
+            out.push(g);
+        }
+        Ok(out)
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}

@@ -1,20 +1,40 @@
-//! Rollout stage driver: concurrency-controlled dispatch over the engine
-//! pool, early termination, partial buffering, prioritized resumption —
-//! plus the sync (veRL) and naive-partial baselines in the same loop.
+//! The CoPRIS coordinator over the reentrant stage state machine
+//! ([`StageDriver`]): concurrency-controlled dispatch over the engine
+//! pool, early termination, partial buffering, prioritized resumption.
+//!
+//! A stage is advanced with `begin_stage` → `pump(deadline)` (repeatedly,
+//! never blocking past the deadline) → `finish_stage`. The blocking
+//! `rollout_stage` / `run_fixed_sync` entry points are thin wrappers that
+//! pump to completion, so serial callers are unchanged while
+//! stage-pipelined callers (`rollout.pipeline`) interleave pumps with
+//! trainer work and sync weights mid-flight — in-flight trajectories just
+//! gain another version segment (`append_stage` + cross-stage IS already
+//! model exactly that).
+//!
+//! Sync (veRL) and naive-partial baselines, CoPRIS, and fixed-prompt eval
+//! are all policy parameterizations of the one driver (see
+//! [`StagePolicy`]). The pre-refactor blocking loop survives verbatim in
+//! [`super::reference::ReferenceCoordinator`] as the golden oracle.
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::sync::mpsc::RecvTimeoutError;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::buffer::PartialBuffer;
+use super::driver::{StageDriver, StageGoal, StagePhase, StagePolicy, EVENT_TIMEOUT};
 use super::groups::{Group, GroupBook};
 use super::trajectory::Trajectory;
 use crate::config::{Config, RolloutMode};
 use crate::engine::{EngineCmd, EngineEvent, EnginePool, FinishReason, SamplingParams, StepTrace, WorkItem};
 use crate::tasks::{Dataset, Task};
 use crate::tokenizer::Tokenizer;
+
+/// Deadline chunk used by the blocking wrappers; the in-driver watchdog
+/// ([`EVENT_TIMEOUT`]) catches wedged engines long before this elapses.
+const PUMP_CHUNK: Duration = Duration::from_secs(3600);
 
 /// Per-stage rollout statistics (feeds Fig. 1, Table 2, Fig. 3).
 #[derive(Clone, Debug, Default)]
@@ -24,7 +44,7 @@ pub struct RolloutStats {
     pub completed: usize,
     /// Partials placed in the buffer at early termination.
     pub partials_buffered: usize,
-    /// Buffered partials resumed this stage.
+    /// Buffered partials resumed (popped and re-dispatched) this stage.
     pub resumed: usize,
     pub preemptions: u64,
     /// Resume tokens replayed (the recomputation overhead).
@@ -33,8 +53,17 @@ pub struct RolloutStats {
     pub traces: Vec<StepTrace>,
     /// Response length of every trajectory completed this stage.
     pub response_lengths: Vec<usize>,
-    /// Peak concurrent in-flight requests observed.
+    /// Peak concurrent in-flight requests observed (updated on every
+    /// refill wave, including naive-partial re-waves).
     pub peak_inflight: usize,
+    /// Seconds of this stage's lifetime that overlapped trainer compute
+    /// (stage-pipelined mode; 0.0 when serial). Clamped to `wall`.
+    pub overlap_secs: f64,
+    /// Histogram of harvested-trajectory version lag (last segment's
+    /// policy version − born version); bucket 4 is "4+". Serial runs put
+    /// everything resumed across one sync in bucket 1; pipelined runs
+    /// surface lag > 0 from mid-flight weight syncs.
+    pub version_lag_hist: [usize; 5],
 }
 
 impl RolloutStats {
@@ -45,6 +74,11 @@ impl RolloutStats {
         }
         self.traces.iter().map(|t| t.active as f64 / t.slots as f64).sum::<f64>()
             / self.traces.len() as f64
+    }
+
+    /// Harvested trajectories that span more than one policy version.
+    pub fn lagged_trajectories(&self) -> usize {
+        self.version_lag_hist[1..].iter().sum()
     }
 }
 
@@ -61,7 +95,8 @@ struct InFlight {
     engine: usize,
 }
 
-/// The CoPRIS coordinator (also drives the sync / naive-partial baselines).
+/// The CoPRIS coordinator (also drives the sync / naive-partial baselines
+/// and fixed-prompt eval, all through the one [`StageDriver`]).
 pub struct Coordinator {
     pub pool: EnginePool,
     pub cfg: Config,
@@ -73,10 +108,10 @@ pub struct Coordinator {
     /// Current policy version (== trainer step); bumped by `sync_weights`.
     pub policy_version: u64,
     tokenizer: Tokenizer,
-    /// Remaining dispatch allowance for NaivePartial (None = unlimited).
-    wave_remaining: Option<usize>,
     /// Engines' decode horizon (manifest.max_seq).
     max_seq: usize,
+    /// Active stage control block (None between stages).
+    driver: Option<StageDriver>,
 }
 
 impl Coordinator {
@@ -94,8 +129,8 @@ impl Coordinator {
             next_traj_id: 0,
             policy_version: 0,
             tokenizer: Tokenizer::new(),
-            wave_remaining: None,
             max_seq,
+            driver: None,
         }
     }
 
@@ -114,6 +149,9 @@ impl Coordinator {
     }
 
     /// Weight sync: broadcast new params and bump the policy version.
+    /// Legal mid-stage (stage-pipelined mode): trajectories completing
+    /// afterwards are tagged with the new version, giving them another
+    /// IS segment.
     pub fn sync_weights(&mut self, version: u64, params: Arc<Vec<f32>>) {
         self.policy_version = version;
         self.pool.broadcast_params(version, params);
@@ -121,6 +159,16 @@ impl Coordinator {
 
     fn total_inflight(&self) -> usize {
         self.inflight.len()
+    }
+
+    /// Active stage control block (panics when no stage is active — every
+    /// caller is behind a `driver.is_some()` guard).
+    fn drv(&self) -> &StageDriver {
+        self.driver.as_ref().expect("no active rollout stage")
+    }
+
+    fn drv_mut(&mut self) -> &mut StageDriver {
+        self.driver.as_mut().expect("no active rollout stage")
     }
 
     fn least_loaded_engine(&self) -> usize {
@@ -146,8 +194,10 @@ impl Coordinator {
         self.engine_load[engine] += 1;
         self.inflight.insert(traj.id, InFlight { traj, engine });
         self.pool.send(engine, EngineCmd::Assign(item));
-        if let Some(w) = self.wave_remaining.as_mut() {
-            *w = w.saturating_sub(1);
+        if let Some(d) = self.driver.as_mut() {
+            if let Some(w) = d.wave_remaining.as_mut() {
+                *w = w.saturating_sub(1);
+            }
         }
     }
 
@@ -163,14 +213,17 @@ impl Coordinator {
 
     /// Dispatch policy for one refill opportunity. Returns false when
     /// nothing can/should be dispatched right now.
-    fn refill_one(&mut self, dataset: &mut Dataset, sampling: SamplingParams) -> bool {
-        if let Some(0) = self.wave_remaining {
+    fn refill_one(&mut self, dataset: Option<&mut Dataset>, sampling: SamplingParams) -> bool {
+        if let Some(0) = self.drv().wave_remaining {
             return false; // naive-partial wave exhausted — no refill
         }
         // Prioritized resumption: buffered partials first (paper §4).
-        if let Some(t) = self.buffer.pop() {
-            self.dispatch(t, sampling);
-            return true;
+        if self.drv().policy.use_buffer {
+            if let Some(t) = self.buffer.pop() {
+                self.drv_mut().stats.resumed += 1;
+                self.dispatch(t, sampling);
+                return true;
+            }
         }
         // Then groups that still need samples, most-started first.
         if let Some(gid) = self.book.groups_with_deficit().first().copied() {
@@ -179,139 +232,354 @@ impl Coordinator {
             return true;
         }
         // Otherwise open a new group from the dataset (over-generation).
-        let task = dataset.next_task();
+        let Some(ds) = dataset else { return false };
+        let task = ds.next_task();
         let gid = self.book.new_group(task.clone(), self.cfg.rollout.group_size);
         self.dispatch_fresh(gid, &task, sampling);
         true
     }
 
-    /// Run one rollout stage in the configured mode; returns exactly
-    /// B = `batch_prompts` completed groups.
-    pub fn rollout_stage(&mut self, dataset: &mut Dataset) -> Result<RolloutOutput> {
+    /// Refill up to `target` in flight and record the peak.
+    fn fill_to_target(
+        &mut self,
+        dataset: &mut Option<&mut Dataset>,
+        sampling: SamplingParams,
+        target: usize,
+    ) {
+        while self.total_inflight() < target {
+            if !self.refill_one(dataset.as_deref_mut(), sampling) {
+                break;
+            }
+        }
+        let n = self.total_inflight();
+        let d = self.drv_mut();
+        d.stats.peak_inflight = d.stats.peak_inflight.max(n);
+    }
+
+    // -- stage state machine ------------------------------------------------
+
+    /// Begin a training stage in the configured rollout mode: staleness
+    /// guard, policy selection, stage-initial dispatch. Non-blocking —
+    /// follow with `pump` until done, then `finish_stage`.
+    pub fn begin_stage(&mut self, dataset: &mut Dataset) -> Result<()> {
+        ensure!(self.driver.is_none(), "rollout stage already active");
         let cfg = self.cfg.rollout.clone();
         let sampling = SamplingParams {
             temperature: cfg.temperature,
             top_p: cfg.top_p,
             top_k: cfg.top_k,
         };
-        let b = cfg.batch_prompts;
-        let mut stats = RolloutStats::default();
-        let t0 = Instant::now();
 
         // Staleness guard (off by default, matching the paper).
         for stale in self.buffer.evict_stale(self.policy_version) {
             self.book.note_abandoned(stale.group_id);
         }
 
+        let policy = match cfg.mode {
+            // Fully synchronous: B·G fresh requests, wait for all.
+            RolloutMode::Sync => StagePolicy {
+                target: None,
+                continuous: false,
+                use_buffer: false,
+                drain: false,
+                until_idle: true,
+                inline_preempt: false,
+            },
+            // One fixed wave, buffered partials first, no refill; re-wave
+            // only if the wave exhausts with the batch incomplete.
+            RolloutMode::NaivePartial => StagePolicy {
+                target: Some(cfg.concurrency),
+                continuous: false,
+                use_buffer: true,
+                drain: true,
+                until_idle: false,
+                inline_preempt: false,
+            },
+            // CoPRIS: keep exactly N' in flight (Fig. 2).
+            RolloutMode::Copris => StagePolicy {
+                target: Some(cfg.concurrency),
+                continuous: true,
+                use_buffer: true,
+                drain: true,
+                until_idle: false,
+                inline_preempt: false,
+            },
+        };
+        let mut driver =
+            StageDriver::new(StageGoal::Batch { b: cfg.batch_prompts }, policy, sampling);
+        if cfg.mode == RolloutMode::NaivePartial {
+            driver.wave_remaining = Some(cfg.concurrency);
+        }
+        self.driver = Some(driver);
+
         // Stage-initial dispatch plan.
-        let concurrency = match cfg.mode {
+        match cfg.mode {
             RolloutMode::Sync => {
-                // Submit exactly the B·G fresh requests of this batch.
-                self.wave_remaining = None;
-                for _ in 0..b {
+                for _ in 0..cfg.batch_prompts {
                     let task = dataset.next_task();
                     let gid = self.book.new_group(task.clone(), cfg.group_size);
                     for _ in 0..cfg.group_size {
                         self.dispatch_fresh(gid, &task, sampling);
                     }
                 }
-                usize::MAX // no refill happens: no deficits, no new groups
+                let n = self.total_inflight();
+                self.drv_mut().stats.peak_inflight = n;
             }
-            RolloutMode::NaivePartial => {
-                // One fixed wave of `concurrency` requests, buffered
-                // partials first, no refill afterwards.
-                self.wave_remaining = Some(cfg.concurrency);
-                cfg.concurrency
-            }
-            RolloutMode::Copris => {
-                self.wave_remaining = None;
-                cfg.concurrency
-            }
-        };
-
-        // For partial modes: fill up to the concurrency target.
-        if cfg.mode != RolloutMode::Sync {
-            while self.total_inflight() < concurrency {
-                if !self.refill_one(dataset, sampling) {
-                    break;
-                }
+            RolloutMode::NaivePartial | RolloutMode::Copris => {
+                let mut ds = Some(dataset);
+                self.fill_to_target(&mut ds, sampling, cfg.concurrency);
             }
         }
-        stats.peak_inflight = self.total_inflight();
+        Ok(())
+    }
 
-        // Event loop until the termination condition.
+    /// Is a stage (training or eval) currently active?
+    pub fn stage_active(&self) -> bool {
+        self.driver.is_some()
+    }
+
+    /// Has the active stage met its goal and quiesced (ready to finish)?
+    pub fn stage_is_done(&self) -> bool {
+        self.driver.as_ref().is_some_and(|d| d.is_done())
+    }
+
+    /// Credit trainer-overlap seconds to the active stage's stats
+    /// (stage-pipelined accounting; no-op between stages). Clamped to the
+    /// stage's actual active time — a stage that reached Done early in the
+    /// update window is not credited for the rest of it. Returns the
+    /// seconds actually credited.
+    pub fn note_overlap(&mut self, secs: f64) -> f64 {
+        let Some(d) = self.driver.as_mut() else { return 0.0 };
+        let active = d
+            .done_at
+            .unwrap_or_else(Instant::now)
+            .duration_since(d.t0)
+            .as_secs_f64();
+        let room = (active - d.stats.overlap_secs).max(0.0);
+        let credit = secs.min(room);
+        d.stats.overlap_secs += credit;
+        credit
+    }
+
+    /// Advance the active training stage without blocking past `deadline`:
+    /// process pool events, refill per policy, early-terminate and drain
+    /// when the goal is met. Returns Ok(true) once the stage is done
+    /// (call `finish_stage` to harvest). With `deadline <= now` this
+    /// drains already-queued events only — the stage-pipelined caller's
+    /// between-microbatch pump.
+    pub fn pump(&mut self, dataset: &mut Dataset, deadline: Instant) -> Result<bool> {
+        self.pump_inner(Some(dataset), deadline)
+    }
+
+    fn pump_inner(&mut self, mut dataset: Option<&mut Dataset>, deadline: Instant) -> Result<bool> {
+        ensure!(self.driver.is_some(), "pump with no active rollout stage");
         loop {
-            let done_enough = match cfg.mode {
-                RolloutMode::Sync => self.total_inflight() == 0,
-                _ => self.book.completed_count() >= b,
-            };
-            if done_enough {
-                break;
-            }
-            // Naive-partial fallback: wave exhausted but batch incomplete →
-            // issue another wave (the paper's setting makes this rare).
-            if cfg.mode == RolloutMode::NaivePartial
-                && self.total_inflight() == 0
-                && self.book.completed_count() < b
-            {
-                self.wave_remaining = Some(cfg.concurrency);
-                while self.total_inflight() < cfg.concurrency {
-                    if !self.refill_one(dataset, sampling) {
-                        break;
+            match self.drv().phase {
+                StagePhase::Done => return Ok(true),
+                StagePhase::Running => {
+                    if self.goal_met() {
+                        if self.drv().policy.drain && self.total_inflight() > 0 {
+                            // Early termination: halt engines, then collect
+                            // partials in the Draining phase.
+                            self.pool.stop_generation_all();
+                            let d = self.drv_mut();
+                            d.phase = StagePhase::Draining;
+                            d.flushed = 0;
+                            continue;
+                        }
+                        let d = self.drv_mut();
+                        d.phase = StagePhase::Done;
+                        d.done_at = Some(Instant::now());
+                        return Ok(true);
+                    }
+                    // Naive-partial fallback: wave exhausted but batch
+                    // incomplete → issue another wave (rare in the paper's
+                    // setting).
+                    let policy = self.drv().policy;
+                    if let Some(target) = policy.target {
+                        if !policy.continuous && self.total_inflight() == 0 {
+                            let sampling = self.drv().sampling;
+                            self.drv_mut().wave_remaining = Some(target);
+                            self.fill_to_target(&mut dataset, sampling, target);
+                        }
+                    }
+                    match self.next_event(deadline)? {
+                        Some(ev) => {
+                            self.handle_event(ev, false)?;
+                            // CoPRIS refill: keep exactly N' in flight.
+                            let policy = self.drv().policy;
+                            if policy.continuous {
+                                if let Some(target) = policy.target {
+                                    let sampling = self.drv().sampling;
+                                    self.fill_to_target(&mut dataset, sampling, target);
+                                }
+                            }
+                        }
+                        None => return Ok(false), // deadline reached
                     }
                 }
-            }
-
-            let ev = self
-                .pool
-                .events
-                .recv_timeout(Duration::from_secs(120))
-                .context("rollout: engine event timeout")?;
-            self.handle_event(ev, &mut stats, false)?;
-
-            // CoPRIS refill: keep exactly N' in flight (Fig. 2).
-            if cfg.mode == RolloutMode::Copris {
-                while self.total_inflight() < concurrency {
-                    if !self.refill_one(dataset, sampling) {
-                        break;
+                StagePhase::Draining => {
+                    while self.drv().flushed < self.pool.engines() {
+                        match self.next_event(deadline)? {
+                            Some(ev) => {
+                                let f = self.handle_event(ev, true)?;
+                                self.drv_mut().flushed += f;
+                            }
+                            None => return Ok(false),
+                        }
                     }
+                    // Anything still in the inflight map was queued but
+                    // never started (engines drop unstarted queue items on
+                    // StopGeneration).
+                    let mut leftovers: Vec<u64> = self.inflight.keys().copied().collect();
+                    leftovers.sort_unstable();
+                    for id in leftovers {
+                        let inf = self.inflight.remove(&id).unwrap();
+                        self.engine_load[inf.engine] =
+                            self.engine_load[inf.engine].saturating_sub(1);
+                        self.park_partial(inf.traj);
+                    }
+                    let d = self.drv_mut();
+                    d.phase = StagePhase::Done;
+                    d.done_at = Some(Instant::now());
+                    return Ok(true);
                 }
-                stats.peak_inflight = stats.peak_inflight.max(self.total_inflight());
             }
         }
+    }
 
-        // Early termination: halt engines, drain partials into the buffer.
-        if cfg.mode != RolloutMode::Sync && self.total_inflight() > 0 {
-            self.drain_partials(&mut stats)?;
+    /// Stage termination test under the active policy.
+    fn goal_met(&self) -> bool {
+        let d = self.drv();
+        if d.policy.until_idle {
+            return self.total_inflight() == 0;
         }
-        self.wave_remaining = None;
+        match &d.goal {
+            StageGoal::Batch { b } => self.book.completed_count() >= *b,
+            StageGoal::Fixed => self.total_inflight() == 0,
+        }
+    }
 
+    /// Next pool event: non-blocking if `deadline` has passed, otherwise
+    /// waits up to the deadline, bounded by the wedge watchdog.
+    fn next_event(&mut self, deadline: Instant) -> Result<Option<EngineEvent>> {
+        if let Some(ev) = self.pool.try_next() {
+            self.drv_mut().last_event = Instant::now();
+            return Ok(Some(ev));
+        }
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let idle = now.duration_since(self.drv().last_event);
+            if idle >= EVENT_TIMEOUT {
+                bail!(
+                    "rollout: engine event timeout ({}s without events)",
+                    EVENT_TIMEOUT.as_secs()
+                );
+            }
+            let wait = (EVENT_TIMEOUT - idle).min(deadline - now);
+            match self.pool.next_before(now + wait) {
+                Ok(ev) => {
+                    self.drv_mut().last_event = Instant::now();
+                    return Ok(Some(ev));
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("rollout: engine pool disconnected")
+                }
+            }
+        }
+    }
+
+    /// Harvest a finished training stage: exactly B completed groups +
+    /// stats (wall, version-lag histogram, overlap clamp).
+    pub fn finish_stage(&mut self) -> Result<RolloutOutput> {
+        ensure!(
+            self.driver.as_ref().is_some_and(|d| d.is_done()),
+            "finish_stage before the stage is done"
+        );
+        let drv = self.driver.take().unwrap();
+        let StageGoal::Batch { b } = drv.goal else {
+            bail!("finish_stage on a fixed (eval) stage");
+        };
+        let mut stats = drv.stats;
         let groups = self.book.take_completed(b);
         stats.completed = groups.iter().map(|g| g.done.len()).sum();
-        stats.wall = t0.elapsed().as_secs_f64();
+        for g in &groups {
+            for t in &g.done {
+                let lag = t
+                    .segments
+                    .last()
+                    .map(|s| s.policy_version.saturating_sub(t.born_version))
+                    .unwrap_or(0) as usize;
+                stats.version_lag_hist[lag.min(stats.version_lag_hist.len() - 1)] += 1;
+            }
+        }
+        // Wall ends when the stage quiesced, not when the (possibly later)
+        // harvest happens — a pipelined stage sits Done-but-unharvested
+        // until the next step picks it up.
+        let end = drv.done_at.unwrap_or_else(Instant::now);
+        stats.wall = end.duration_since(drv.t0).as_secs_f64();
+        stats.overlap_secs = stats.overlap_secs.min(stats.wall);
         Ok(RolloutOutput { groups, stats })
+    }
+
+    /// Pump the active stage to completion and harvest it (blocking).
+    pub fn run_stage_to_completion(&mut self, dataset: &mut Dataset) -> Result<RolloutOutput> {
+        while !self.pump(dataset, Instant::now() + PUMP_CHUNK)? {}
+        self.finish_stage()
+    }
+
+    /// Abort the active stage without harvesting: early-terminate the
+    /// engines, drain partials into the buffer, keep completed groups in
+    /// the book for the next stage. Nothing is lost — partials resume
+    /// later under cross-stage IS, exactly like any early termination.
+    /// Used before eval in pipelined runs: far cheaper than running the
+    /// stage to completion just to idle the engines.
+    pub fn abort_stage(&mut self) -> Result<()> {
+        ensure!(self.driver.is_some(), "abort_stage with no active stage");
+        if self.drv().phase == StagePhase::Running {
+            if self.total_inflight() > 0 {
+                self.pool.stop_generation_all();
+                let d = self.drv_mut();
+                d.phase = StagePhase::Draining;
+                d.flushed = 0;
+            } else {
+                let d = self.drv_mut();
+                d.phase = StagePhase::Done;
+                d.done_at = Some(Instant::now());
+            }
+        }
+        while !self.pump_inner(None, Instant::now() + PUMP_CHUNK)? {}
+        self.driver = None;
+        Ok(())
+    }
+
+    /// Run one rollout stage in the configured mode; returns exactly
+    /// B = `batch_prompts` completed groups. (Blocking wrapper over the
+    /// state machine — the serial path.)
+    pub fn rollout_stage(&mut self, dataset: &mut Dataset) -> Result<RolloutOutput> {
+        self.begin_stage(dataset)?;
+        self.run_stage_to_completion(dataset)
     }
 
     /// Handle one engine event (recursing into `Batch` — engines deliver a
     /// whole step's events in one channel send). `draining` switches
     /// Stopped/Preempted handling to "buffer it" (early-termination flush).
-    /// Returns the number of `Flushed` markers seen, so `drain_partials`
+    /// Returns the number of `Flushed` markers seen, so the Draining phase
     /// can count engine flushes even when they arrive inside a batch.
-    fn handle_event(
-        &mut self,
-        ev: EngineEvent,
-        stats: &mut RolloutStats,
-        draining: bool,
-    ) -> Result<usize> {
+    fn handle_event(&mut self, ev: EngineEvent, draining: bool) -> Result<usize> {
         match ev {
             EngineEvent::Batch(evs) => {
                 let mut flushed = 0;
                 for e in evs {
-                    flushed += self.handle_event(e, stats, draining)?;
+                    flushed += self.handle_event(e, draining)?;
                 }
                 return Ok(flushed);
             }
-            EngineEvent::Trace(t) => stats.traces.push(t),
+            EngineEvent::Trace(t) => self.drv_mut().stats.traces.push(t),
             EngineEvent::Flushed { .. } => return Ok(1),
             EngineEvent::ShutDown { .. } => {}
             EngineEvent::Done { engine, result } => {
@@ -321,24 +589,30 @@ impl Coordinator {
                 self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
                 let mut traj = inf.traj;
                 traj.append_stage(&result.new_tokens, &result.new_logprobs, self.policy_version);
-                stats.replayed_tokens += result.replayed as u64;
+                self.drv_mut().stats.replayed_tokens += result.replayed as u64;
                 match result.reason {
                     FinishReason::Eos | FinishReason::LengthCap => {
                         traj.complete = true;
-                        stats.response_lengths.push(traj.len());
+                        self.drv_mut().stats.response_lengths.push(traj.len());
                         self.book.record_complete(traj)?;
                     }
                     FinishReason::Preempted => {
-                        stats.preemptions += 1;
+                        self.drv_mut().stats.preemptions += 1;
                         if draining {
-                            self.park_partial(traj, stats);
+                            self.park_partial(traj);
+                        } else if self.drv().policy.inline_preempt {
+                            // Eval stages own their trajectories: immediate
+                            // re-dispatch, never through the shared buffer
+                            // (which holds carried-over TRAINING partials).
+                            let sampling = self.drv().sampling;
+                            self.dispatch(traj, sampling);
                         } else {
                             // Immediate re-queue with resumption priority.
                             self.buffer.push(traj);
                         }
                     }
                     FinishReason::Stopped => {
-                        self.park_partial(traj, stats);
+                        self.park_partial(traj);
                     }
                 }
             }
@@ -346,51 +620,38 @@ impl Coordinator {
         Ok(0)
     }
 
-    fn park_partial(&mut self, traj: Trajectory, stats: &mut RolloutStats) {
+    fn park_partial(&mut self, traj: Trajectory) {
         if traj.is_empty() {
             // Nothing generated: not a partial — free the dispatch slot.
             self.book.note_abandoned(traj.group_id);
         } else {
-            stats.partials_buffered += 1;
+            self.drv_mut().stats.partials_buffered += 1;
             self.buffer.push(traj);
         }
     }
 
-    /// Early termination: StopGeneration to all engines, collect every
-    /// in-flight trajectory (partials → buffer; unstarted → abandoned).
-    fn drain_partials(&mut self, stats: &mut RolloutStats) -> Result<()> {
-        self.pool.stop_generation_all();
-        let mut flushed = 0usize;
-        let engines = self.pool.engines();
-        while flushed < engines {
-            let ev = self
-                .pool
-                .events
-                .recv_timeout(Duration::from_secs(120))
-                .context("drain: engine event timeout")?;
-            flushed += self.handle_event(ev, stats, true)?;
-        }
-        // Anything still in the inflight map was queued but never started.
-        let leftovers: Vec<u64> = self.inflight.keys().copied().collect();
-        for id in leftovers {
-            let inf = self.inflight.remove(&id).unwrap();
-            self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
-            self.park_partial(inf.traj, stats);
-        }
-        stats.resumed = 0; // set by caller if needed
-        Ok(())
-    }
-
     /// Fixed-prompt synchronous generation (evaluation path): `samples`
     /// rollouts per task at `sampling`; returns one completed group per
-    /// task. Uses a private GroupBook so training state is untouched.
+    /// task, in task order. Runs as a `StageGoal::Fixed` stage on the same
+    /// driver, with inline preemption re-dispatch so buffered TRAINING
+    /// partials are never generated under eval.
     pub fn run_fixed_sync(
         &mut self,
         tasks: &[Task],
         samples: usize,
         sampling: SamplingParams,
     ) -> Result<Vec<Group>> {
-        anyhow::ensure!(self.inflight.is_empty(), "run_fixed_sync with work in flight");
+        ensure!(self.driver.is_none(), "run_fixed_sync with a stage active");
+        ensure!(self.inflight.is_empty(), "run_fixed_sync with work in flight");
+        let policy = StagePolicy {
+            target: None,
+            continuous: false,
+            use_buffer: false,
+            drain: false,
+            until_idle: true,
+            inline_preempt: true,
+        };
+        self.driver = Some(StageDriver::new(StageGoal::Fixed, policy, sampling));
         let mut ids = Vec::new();
         for task in tasks {
             let gid = self.book.new_group(task.clone(), samples);
@@ -399,19 +660,9 @@ impl Coordinator {
                 self.dispatch_fresh(gid, task, sampling);
             }
         }
-        let mut stats = RolloutStats::default();
-        while self.total_inflight() > 0 {
-            let ev = self
-                .pool
-                .events
-                .recv_timeout(Duration::from_secs(120))
-                .context("eval: engine event timeout")?;
-            self.handle_event(ev, &mut stats, false)?;
-            // Preempted eval rollouts must be re-dispatched (not buffered).
-            while let Some(t) = self.buffer.pop() {
-                self.dispatch(t, sampling);
-            }
-        }
+        while !self.pump_inner(None, Instant::now() + PUMP_CHUNK)? {}
+        self.driver = None;
+
         // Take exactly OUR groups (the book may hold surplus completed
         // training groups carried across stages — leave those alone).
         let mut taken = self.book.take_groups(&ids);
@@ -425,7 +676,7 @@ impl Coordinator {
         let mut out = Vec::new();
         for s in slots {
             let g = s.context("eval group missing")?;
-            anyhow::ensure!(g.is_complete(), "eval group incomplete");
+            ensure!(g.is_complete(), "eval group incomplete");
             out.push(g);
         }
         Ok(out)

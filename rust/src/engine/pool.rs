@@ -63,6 +63,30 @@ impl EnginePool {
         self.senders.len()
     }
 
+    /// Non-blocking poll: the next queued event, if one is already
+    /// waiting. The stage driver's fast path — a pipelined caller drains
+    /// whatever accumulated during trainer work without ever parking.
+    pub fn try_next(&self) -> Option<EngineEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Bounded wait: the next event, blocking no later than `deadline`
+    /// (past deadlines degrade to a non-blocking poll). `Disconnected`
+    /// means every engine thread is gone — callers should bail, not spin.
+    pub fn next_before(
+        &self,
+        deadline: std::time::Instant,
+    ) -> Result<EngineEvent, std::sync::mpsc::RecvTimeoutError> {
+        let now = std::time::Instant::now();
+        if deadline <= now {
+            return self.events.try_recv().map_err(|e| match e {
+                TryRecvError::Empty => std::sync::mpsc::RecvTimeoutError::Timeout,
+                TryRecvError::Disconnected => std::sync::mpsc::RecvTimeoutError::Disconnected,
+            });
+        }
+        self.events.recv_timeout(deadline - now)
+    }
+
     pub fn total_slots(&self) -> usize {
         self.engines() * self.slots_per_engine
     }
@@ -324,6 +348,33 @@ mod tests {
             }
         }
         assert_eq!(partials, 2);
+        pool.shutdown();
+    }
+
+    /// The stage driver's poll API: empty-channel polls return promptly,
+    /// bounded waits deliver events.
+    #[test]
+    fn try_next_and_next_before_poll_without_blocking() {
+        let pool = mock_pool(1, 2);
+        assert!(pool.try_next().is_none());
+        let t0 = std::time::Instant::now();
+        assert!(pool.next_before(t0).is_err()); // past deadline → non-blocking poll
+        assert!(t0.elapsed() < Duration::from_millis(100), "past-deadline poll blocked");
+        pool.send(0, EngineCmd::Assign(item(9)));
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let mut saw_done = false;
+        while std::time::Instant::now() < deadline && !saw_done {
+            match pool.next_before(deadline) {
+                Ok(EngineEvent::Batch(evs)) => {
+                    saw_done = evs.iter().any(|e| matches!(e, EngineEvent::Done { .. }))
+                }
+                Ok(EngineEvent::Done { .. }) => saw_done = true,
+                Ok(_) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(e) => panic!("pool died: {e}"),
+            }
+        }
+        assert!(saw_done, "bounded wait never saw the Done event");
         pool.shutdown();
     }
 

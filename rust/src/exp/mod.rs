@@ -6,6 +6,7 @@ pub mod common;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;
+pub mod pipesim;
 pub mod session;
 pub mod table1;
 pub mod table2;

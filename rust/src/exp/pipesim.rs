@@ -1,0 +1,172 @@
+//! Serial vs stage-pipelined CoPRIS on the mock backend: isolates the
+//! coordinator-level overlap win from trainer math (no artifacts, no PJRT).
+//! The "trainer" is a simulated compute window (sleep + weight sync) so the
+//! comparison measures exactly what the pipeline changes: whether the
+//! engines generate through the update or sit idle.
+//!
+//! Shared by the `pipeline_overlap` bench target and the pipelined-mode
+//! integration tests.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::coordinator::{Coordinator, RolloutOutput};
+use crate::engine::{EnginePool, MockBackend};
+use crate::tasks::Dataset;
+
+/// Mock decode horizon (matches the coordinator integration tests).
+pub const MOCK_MAX_SEQ: usize = 96;
+
+#[derive(Clone, Debug)]
+pub struct PipeSimOpts {
+    /// Rollout/engine settings (mode should be Copris; `pipeline` is taken
+    /// from the `pipeline` argument of [`run`], not from here).
+    pub cfg: Config,
+    /// RL steps to simulate.
+    pub steps: usize,
+    /// Simulated per-step trainer compute (the window the pipelined run
+    /// overlaps).
+    pub train_secs: f64,
+    /// Mock decode slots per engine.
+    pub slots: usize,
+    /// Scripted response length = min_len + hash % spread.
+    pub min_len: usize,
+    pub spread: usize,
+    /// Per-decode-step latency — the "non-trivial decode delay" that makes
+    /// overlap measurable.
+    pub decode_delay: Duration,
+}
+
+impl Default for PipeSimOpts {
+    fn default() -> Self {
+        let mut cfg = Config::new("mock");
+        cfg.rollout.batch_prompts = 2;
+        cfg.rollout.group_size = 2;
+        cfg.rollout.concurrency = 8;
+        cfg.engine.engines = 1;
+        cfg.train.seed = 11;
+        PipeSimOpts {
+            cfg,
+            steps: 6,
+            train_secs: 0.06,
+            slots: 4,
+            min_len: 20,
+            spread: 20,
+            decode_delay: Duration::from_millis(1),
+        }
+    }
+}
+
+/// Aggregate result of one simulated run.
+#[derive(Clone, Debug, Default)]
+pub struct PipeSimSummary {
+    pub wall: f64,
+    /// Trajectories harvested for training across all steps.
+    pub samples: usize,
+    /// Harvested groups across all steps (== steps × B on success).
+    pub groups: usize,
+    pub rollout_secs: f64,
+    pub overlap_secs: f64,
+    /// Harvested trajectories spanning more than one policy version.
+    pub lagged_trajectories: usize,
+    pub partials_buffered: usize,
+    pub resumed: usize,
+}
+
+fn spawn_coordinator(o: &PipeSimOpts) -> Result<Coordinator> {
+    let slots = o.slots;
+    let (min_len, spread, delay) = (o.min_len, o.spread, o.decode_delay);
+    let pool = EnginePool::spawn(
+        o.cfg.engine.engines,
+        slots,
+        o.cfg.engine.kv_budget_tokens,
+        o.cfg.train.seed,
+        move |_id| {
+            Box::new(move || {
+                let mut b = MockBackend::new(slots, MOCK_MAX_SEQ);
+                b.min_len = min_len;
+                b.spread = spread;
+                b.decode_delay = Some(delay);
+                Ok(b)
+            })
+        },
+    )?;
+    Ok(Coordinator::new(pool, o.cfg.clone(), MOCK_MAX_SEQ))
+}
+
+/// Run `o.steps` simulated RL steps, serial or stage-pipelined, and return
+/// the summary plus every harvested stage output (for invariant checks).
+pub fn run(o: &PipeSimOpts, pipeline: bool) -> Result<(PipeSimSummary, Vec<RolloutOutput>)> {
+    let mut coord = spawn_coordinator(o)?;
+    let mut ds = Dataset::train(o.cfg.train.seed);
+    let mut outs: Vec<RolloutOutput> = Vec::new();
+    let mut version = 0u64;
+    let t_run = Instant::now();
+
+    // Simulated trainer update: compute window + weight sync. The mock
+    // backend shifts its script on set_params, so syncs are observable.
+    let mut train_and_sync = |coord: &mut Coordinator,
+                              ds: &mut Dataset,
+                              pumped: bool|
+     -> Result<()> {
+        let t0 = Instant::now();
+        if pumped {
+            // Pipelined: pump the in-flight stage between "microbatches".
+            while t0.elapsed().as_secs_f64() < o.train_secs {
+                if coord.stage_active() {
+                    coord.pump(ds, Instant::now())?;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        } else {
+            std::thread::sleep(Duration::from_secs_f64(o.train_secs));
+        }
+        version += 1;
+        coord.sync_weights(version, Arc::new(vec![version as f32 * 0.5 + 1.0]));
+        Ok(())
+    };
+
+    if pipeline {
+        for _ in 0..o.steps {
+            // Harvest the stage left in flight by the previous iteration
+            // (first iteration: serial rollout).
+            let out = if coord.stage_active() {
+                coord.run_stage_to_completion(&mut ds)?
+            } else {
+                coord.rollout_stage(&mut ds)?
+            };
+            // Begin the next stage, then "train" while it generates; it
+            // stays in flight across the loop boundary (mirrors
+            // RlSession::rl_step_pipelined). The final begun stage is
+            // abandoned at shutdown — only its dispatches are wasted, so
+            // the serial-vs-pipelined comparison stays N stages vs N.
+            coord.begin_stage(&mut ds)?;
+            let t_train = Instant::now();
+            train_and_sync(&mut coord, &mut ds, true)?;
+            coord.note_overlap(t_train.elapsed().as_secs_f64());
+            outs.push(out);
+        }
+    } else {
+        for _ in 0..o.steps {
+            let out = coord.rollout_stage(&mut ds)?;
+            train_and_sync(&mut coord, &mut ds, false)?;
+            outs.push(out);
+        }
+    }
+
+    let mut s = PipeSimSummary { wall: t_run.elapsed().as_secs_f64(), ..Default::default() };
+    for out in &outs {
+        s.groups += out.groups.len();
+        s.samples += out.stats.completed;
+        s.rollout_secs += out.stats.wall;
+        s.overlap_secs += out.stats.overlap_secs;
+        s.lagged_trajectories += out.stats.lagged_trajectories();
+        s.partials_buffered += out.stats.partials_buffered;
+        s.resumed += out.stats.resumed;
+    }
+    coord.shutdown();
+    Ok((s, outs))
+}

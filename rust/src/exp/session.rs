@@ -1,15 +1,22 @@
 //! RlSession: the end-to-end RL post-training pipeline.
 //!
-//! rollout stage (engine pool, mode per config) → reward/advantage →
-//! cal-logprob → GRPO update (w/ or w/o cross-stage IS) → weight sync →
-//! repeat; periodic eval over the five suites.
-
-
+//! Serial (`rollout.pipeline = false`, the paper): rollout stage → reward/
+//! advantage → cal-logprob → GRPO update (w/ or w/o cross-stage IS) →
+//! weight sync → repeat; periodic eval over the five suites.
+//!
+//! Stage-pipelined (`rollout.pipeline = true`): stage t+1's rollout BEGINS
+//! under policy v_t before the stage-t update runs, is pumped between
+//! trainer microbatches (the engines generate on their own threads the
+//! whole time), and weights sync mid-flight when the update lands —
+//! in-flight trajectories simply gain another version segment, which the
+//! cross-stage IS correction already models. The stage stays in flight
+//! across the step boundary; the next step (or an eval's `abort_stage`)
+//! picks it up.
 
 use anyhow::{Context, Result};
 
 use crate::config::Config;
-use crate::coordinator::{Coordinator, RolloutStats};
+use crate::coordinator::{Coordinator, RolloutOutput, RolloutStats};
 use crate::engine::{EnginePool, XlaBackend};
 use crate::eval::{eval_all, EvalReport};
 use crate::tasks::Dataset;
@@ -40,6 +47,10 @@ pub struct RunSummary {
     pub sync_secs: f64,
     pub preemptions: u64,
     pub replayed_tokens: u64,
+    /// Rollout seconds that overlapped trainer compute (pipelined mode).
+    pub overlap_secs: f64,
+    /// Harvested trajectories spanning more than one policy version.
+    pub lagged_trajectories: usize,
     pub reward_curve: Vec<f64>,
     pub entropy_curve: Vec<f64>,
 }
@@ -120,11 +131,31 @@ impl RlSession {
         Ok(last_loss)
     }
 
-    /// One full RL step: rollout stage → GRPO update → weight sync.
+    /// One full RL step. Serial: rollout stage → GRPO update → weight
+    /// sync. Pipelined (`rollout.pipeline`): train on the already-rolled
+    /// batch while the next stage generates.
     pub fn rl_step(&mut self) -> Result<(StepMetrics, RolloutStats)> {
+        if self.trainer.cfg.rollout.pipeline {
+            self.rl_step_pipelined()
+        } else {
+            self.rl_step_serial()
+        }
+    }
+
+    /// Harvest this step's batch: the in-flight stage begun last step
+    /// (pipelined), or a fresh serial stage.
+    fn harvest_batch(&mut self) -> Result<RolloutOutput> {
+        if self.coord.stage_active() {
+            self.coord.run_stage_to_completion(&mut self.dataset)
+        } else {
+            self.coord.rollout_stage(&mut self.dataset)
+        }
+    }
+
+    fn rl_step_serial(&mut self) -> Result<(StepMetrics, RolloutStats)> {
         let t_all = std::time::Instant::now();
         let t0 = std::time::Instant::now();
-        let out = self.coord.rollout_stage(&mut self.dataset)?;
+        let out = self.harvest_batch()?;
         self.timer.add("rollout", t0.elapsed().as_secs_f64());
 
         let metrics = self.trainer.train_step(&out.groups, &mut self.timer)?;
@@ -135,6 +166,61 @@ impl RlSession {
         self.coord.sync_weights(version, params);
         self.timer.add("sync", t0.elapsed().as_secs_f64());
 
+        self.log.log_step(&metrics, &out.stats, t_all.elapsed().as_secs_f64())?;
+        Ok((metrics, out.stats))
+    }
+
+    /// Stage-pipelined step: the engines never sit idle through the
+    /// cal-logprob → grad → update → sync chain. Stage t+1 runs under
+    /// policy v_t until the update lands, then under v_{t+1} — its mixed-
+    /// version trajectories are exactly what cross-stage IS corrects.
+    fn rl_step_pipelined(&mut self) -> Result<(StepMetrics, RolloutStats)> {
+        let t_all = std::time::Instant::now();
+
+        // 1. This step's batch: the stage left in flight by the previous
+        //    step, pumped through that step's update (first step: rolled
+        //    out serially). Only this non-overlapped remainder counts as
+        //    rollout wall for the step.
+        let t0 = std::time::Instant::now();
+        let out = self.harvest_batch()?;
+        self.timer.add("rollout", t0.elapsed().as_secs_f64());
+
+        // 2. Begin stage t+1 under the current policy BEFORE training, so
+        //    the engines keep generating through the whole update.
+        self.coord.begin_stage(&mut self.dataset)?;
+
+        // 3. Train on stage t, pumping the in-flight stage between device
+        //    microbatch calls (refill + early termination service; the
+        //    engine threads decode regardless).
+        let t_train = std::time::Instant::now();
+        let mut metrics = {
+            let coord = &mut self.coord;
+            let dataset = &mut self.dataset;
+            let mut pump = || -> Result<()> {
+                if coord.stage_active() {
+                    coord.pump(dataset, std::time::Instant::now())?;
+                }
+                Ok(())
+            };
+            self.trainer.train_step_hooked(&out.groups, &mut self.timer, &mut pump)?
+        };
+
+        // 4. Weight sync mid-flight: in-flight trajectories gain another
+        //    version segment from here on.
+        let t0 = std::time::Instant::now();
+        let params = self.trainer.params()?;
+        let version = self.trainer.step() as u64;
+        self.coord.sync_weights(version, params);
+        self.timer.add("sync", t0.elapsed().as_secs_f64());
+
+        // Clamped by the coordinator to the stage's actual active time.
+        metrics.t_overlap = self.coord.note_overlap(t_train.elapsed().as_secs_f64());
+
+        // Stage t+1 stays in flight across the step boundary — the next
+        // rl_step harvests it (an intervening evaluate aborts it into the
+        // partial buffer instead). After the final step it is abandoned at
+        // shutdown, costing only its dispatches, not a full stage
+        // completion.
         self.log.log_step(&metrics, &out.stats, t_all.elapsed().as_secs_f64())?;
         Ok((metrics, out.stats))
     }
@@ -151,6 +237,8 @@ impl RlSession {
             util.push(rs.mean_utilization());
             summary.preemptions += rs.preemptions;
             summary.replayed_tokens += rs.replayed_tokens;
+            summary.overlap_secs += rs.overlap_secs;
+            summary.lagged_trajectories += rs.lagged_trajectories();
             summary.reward_curve.push(m.reward_mean);
             summary.entropy_curve.push(m.entropy);
             summary.final_reward = m.reward_mean;
@@ -179,8 +267,14 @@ impl RlSession {
         Ok(summary)
     }
 
-    /// Evaluate the current policy on the five suites.
+    /// Evaluate the current policy on the five suites. In pipelined runs
+    /// a mid-flight stage is aborted first (partials drain into the buffer
+    /// and resume under cross-stage IS when training continues), so eval
+    /// always sees idle engines.
     pub fn evaluate(&mut self, seed: u64) -> Result<EvalReport> {
+        if self.coord.stage_active() {
+            self.coord.abort_stage()?;
+        }
         let cfg = self.trainer.cfg.eval.clone();
         eval_all(&mut self.coord, &cfg, seed)
     }

@@ -38,9 +38,11 @@ fn usage() -> ! {
            --steps N  --sft-steps N --seed N  --verbose\n\
            --concurrency N          CoPRIS pool size N'\n\
            --no-is                  disable cross-stage IS correction\n\
+           --pipeline               stage-pipelined execution (overlap\n\
+                                    next rollout with the update)\n\
            --metrics <path.jsonl>   write per-step metrics\n\
            --set section.key=value  any config override (repeatable)\n\
-           --preset <paper|scaled-small|scaled-tiny|sync-baseline>"
+           --preset <paper|scaled-small|scaled-tiny|sync-baseline|pipelined-small>"
     );
     std::process::exit(2);
 }
@@ -74,6 +76,9 @@ fn build_config(args: &Args) -> Result<Config> {
     if args.flag("no-is") {
         cfg.rollout.importance_sampling = false;
     }
+    if args.flag("pipeline") {
+        cfg.rollout.pipeline = true;
+    }
     for kv in args.get_all("set") {
         let (k, v) = kv
             .split_once('=')
@@ -88,7 +93,7 @@ fn run() -> Result<()> {
     if argv.is_empty() {
         usage();
     }
-    let args = Args::parse(argv, &["verbose", "no-is", "no-eval"])?;
+    let args = Args::parse(argv, &["verbose", "no-is", "no-eval", "pipeline"])?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("");
     match cmd {
         "train" => cmd_train(&args),
@@ -104,13 +109,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let sft_steps = args.get_usize("sft-steps", 100)?;
     let steps = cfg.train.steps;
     println!(
-        "== copris train: model={} mode={} N'={} B={} G={} IS={} steps={steps} ==",
+        "== copris train: model={} mode={} N'={} B={} G={} IS={} pipeline={} steps={steps} ==",
         cfg.model,
         cfg.rollout.mode.name(),
         cfg.rollout.concurrency,
         cfg.rollout.batch_prompts,
         cfg.rollout.group_size,
         cfg.rollout.importance_sampling,
+        cfg.rollout.pipeline,
     );
     let mut sess = RlSession::build(cfg)?;
     sess.verbose = args.flag("verbose");
@@ -137,13 +143,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         summary.mean_utilization * 100.0
     );
     println!(
-        "stage totals: rollout {:.1}s  cal_logprob {:.1}s  train {:.1}s  sync {:.1}s  preempt {}  replayed {}",
+        "stage totals: rollout {:.1}s  cal_logprob {:.1}s  train {:.1}s  sync {:.1}s  preempt {}  replayed {}  overlap {:.1}s  lagged {}",
         summary.rollout_secs,
         summary.cal_logprob_secs,
         summary.train_secs,
         summary.sync_secs,
         summary.preemptions,
-        summary.replayed_tokens
+        summary.replayed_tokens,
+        summary.overlap_secs,
+        summary.lagged_trajectories
     );
     if !args.flag("no-eval") {
         let report = sess.evaluate(2)?;

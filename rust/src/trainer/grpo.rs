@@ -34,6 +34,10 @@ pub struct StepMetrics {
     pub t_cal_logprob: f64,
     pub t_grad: f64,
     pub t_update: f64,
+    /// Trainer seconds actually overlapped by an in-flight rollout stage
+    /// (stage-pipelined mode; clamped to stage-active time by the
+    /// coordinator, set by the session, 0.0 when serial).
+    pub t_overlap: f64,
 }
 
 /// Owns the training-side model runtime and device state.
@@ -76,6 +80,20 @@ impl Trainer {
     /// pseudo-on-policy ablation: the freshly recomputed log-probs stand in
     /// as behaviour, so every ratio starts at 1.
     pub fn train_step(&mut self, groups: &[Group], timer: &mut StageTimer) -> Result<StepMetrics> {
+        let mut noop = || -> Result<()> { Ok(()) };
+        self.train_step_hooked(groups, timer, &mut noop)
+    }
+
+    /// `train_step` with a between-microbatch hook: `pump` runs after every
+    /// device call of the cal-logprob and gradient loops, so a
+    /// stage-pipelined caller can service the overlapped rollout stage
+    /// (refill, early termination) while the update computes.
+    pub fn train_step_hooked(
+        &mut self,
+        groups: &[Group],
+        timer: &mut StageTimer,
+        pump: &mut dyn FnMut() -> Result<()>,
+    ) -> Result<StepMetrics> {
         let use_is = self.cfg.rollout.importance_sampling;
         let spec = self.rt.spec.clone();
         // Rollouts were generated under policy versions ≤ the current step
@@ -118,6 +136,7 @@ impl Trainer {
                 }
             }
             recomputed.push(lp);
+            pump()?;
         }
         m.t_cal_logprob = t0.elapsed().as_secs_f64();
         timer.add("cal_logprob", m.t_cal_logprob);
@@ -151,6 +170,7 @@ impl Trainer {
                 None => gbuf,
                 Some(prev) => self.rt.accum(&prev, &gbuf, 1.0)?,
             });
+            pump()?;
         }
         m.t_grad = t0.elapsed().as_secs_f64();
         timer.add("grad", m.t_grad);

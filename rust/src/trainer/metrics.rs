@@ -57,6 +57,10 @@ impl MetricsLog {
             .int("preemptions", rollout.preemptions as i64)
             .int("replayed_tokens", rollout.replayed_tokens as i64)
             .int("partials_buffered", rollout.partials_buffered as i64)
+            .int("resumed", rollout.resumed as i64)
+            .num("t_overlap", m.t_overlap)
+            .num("overlap_secs", rollout.overlap_secs)
+            .int("lagged_trajs", rollout.lagged_trajectories() as i64)
             .finish();
         writeln!(out, "{line}")?;
         out.flush()?;

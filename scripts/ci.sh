@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# Tier-1 verification (what .github/workflows/ci.yml runs):
+#   cargo build --release --all-targets && cargo test -q
+# --all-targets keeps benches/examples/bins compiling so they cannot rot.
+#
+# Optional: `scripts/ci.sh --bench` additionally runs the micro bench and
+# refreshes BENCH_micro.json (the repo's perf trajectory file).
+set -euo pipefail
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$ROOT"
+
+MANIFEST=""
+for c in Cargo.toml rust/Cargo.toml; do
+  if [ -f "$c" ]; then
+    MANIFEST="$c"
+    break
+  fi
+done
+if [ -z "$MANIFEST" ]; then
+  echo "ci: no Cargo.toml found under $ROOT" >&2
+  exit 1
+fi
+
+echo "== tier-1: cargo build --release --all-targets =="
+cargo build --release --all-targets --manifest-path "$MANIFEST"
+echo "== tier-1: cargo test -q =="
+cargo test -q --manifest-path "$MANIFEST"
+
+if [ "${1:-}" = "--bench" ]; then
+  echo "== micro bench → BENCH_micro.json =="
+  "$ROOT/scripts/bench_micro.sh"
+fi
+
+echo "ci: OK"
