@@ -138,6 +138,7 @@ fn main() {
             resume: vec![],
             max_total: 8192,
             sampling: SamplingParams::default(),
+            retain: None,
         })
         .unwrap();
     }

@@ -1,0 +1,272 @@
+//! Resume-affinity bench: replay-only vs KV-retention CoPRIS on the mock
+//! backend — measures the replay tokens avoided and the stage wall-clock
+//! effect of resuming buffered partials from retained KV instead of
+//! re-prefilling them (the paper's §5.4.1 recomputation overhead, which
+//! APRIL/Laminar identify as the dominant partial-rollout cost).
+//!
+//! Arms (greedy sampling, so the replay-comparable arms — all except
+//! `retained + stale-kv`, which continues the old-params script across
+//! syncs BY DESIGN — generate identical token streams, pinned by
+//! tests/retained_golden.rs; their wall delta is exactly the replay decode
+//! steps avoided × the per-step decode delay):
+//!
+//!   replay-only            retention off; every resume re-prefills.
+//!   retained               retention on, no syncs between stages — the
+//!                          pipelined regime, where stage t+1 resumes
+//!                          BEFORE the stage-t sync lands.
+//!   replay-only + sync     baseline with a weight sync after every stage
+//!                          (the serial rollout → train → sync loop).
+//!   retained + sync        retention on, sync each stage: invalidation
+//!                          drops every retained slot, so hits ≈ 0 and the
+//!                          arm degrades to the replay baseline — the
+//!                          sanity row.
+//!   retained + stale-kv    `retain_kv_across_sync`: hits survive the sync
+//!                          by continuing from stale KV (extra off-policy
+//!                          staleness traded for zero recompute).
+//!
+//! Scale via COPRIS_BENCH_STAGES / COPRIS_BENCH_DECODE_US. With
+//! COPRIS_BENCH_JSON set, rows are APPENDED to the existing
+//! BENCH_micro.json (scripts/bench_micro.sh runs micro first, then this).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use copris::bench::{fmt_secs, render_table};
+use copris::config::{Config, RolloutMode};
+use copris::coordinator::Coordinator;
+use copris::engine::{EnginePool, MockBackend};
+use copris::exp::common::env_usize;
+use copris::tasks::Dataset;
+use copris::util::json::Obj;
+
+const MAX_SEQ: usize = 96;
+
+#[derive(Clone, Debug, Default)]
+struct ArmResult {
+    wall: f64,
+    stage_secs: f64,
+    completed: usize,
+    resumed: usize,
+    replayed_tokens: u64,
+    replay_tokens_saved: u64,
+    retained_hits: usize,
+    retained_misses: usize,
+}
+
+struct ArmOpts {
+    retain: bool,
+    across_sync: bool,
+    sync_each_stage: bool,
+    stages: usize,
+    decode_us: u64,
+}
+
+fn run_arm(o: &ArmOpts) -> ArmResult {
+    let mut cfg = Config::new("mock");
+    cfg.rollout.mode = RolloutMode::Copris;
+    cfg.rollout.batch_prompts = 3;
+    cfg.rollout.group_size = 2;
+    // Over-generation well past B·G so every stage ends with a fat tail of
+    // in-flight partials — the material the resume path works on.
+    cfg.rollout.concurrency = 10;
+    cfg.rollout.temperature = 0.0; // greedy: identical streams across arms
+    cfg.rollout.retain_kv = o.retain;
+    cfg.rollout.retain_kv_across_sync = o.across_sync;
+    cfg.engine.engines = 2;
+    cfg.train.seed = 11;
+    let slots = 4;
+    let decode = Duration::from_micros(o.decode_us);
+    let pool = EnginePool::spawn(
+        cfg.engine.engines,
+        slots,
+        cfg.engine.kv_budget_tokens,
+        cfg.train.seed,
+        move |_id| {
+            Box::new(move || {
+                let mut b = MockBackend::new(slots, MAX_SEQ);
+                // Long scripts: partials carry a meaty prefix to resume.
+                b.min_len = 24;
+                b.spread = 24;
+                b.decode_delay = Some(decode);
+                Ok(b)
+            })
+        },
+    )
+    .expect("spawn pool");
+    let mut coord = Coordinator::new(pool, cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+
+    let mut r = ArmResult::default();
+    let t0 = Instant::now();
+    for stage in 0..o.stages {
+        let out = coord.rollout_stage(&mut ds).expect("stage");
+        r.stage_secs += out.stats.wall;
+        r.completed += out.stats.completed;
+        r.resumed += out.stats.resumed;
+        r.replayed_tokens += out.stats.replayed_tokens;
+        r.replay_tokens_saved += out.stats.replay_tokens_saved;
+        r.retained_hits += out.stats.retained_hits;
+        r.retained_misses += out.stats.retained_misses;
+        if o.sync_each_stage {
+            let v = stage as u64 + 1;
+            coord.sync_weights(v, Arc::new(vec![v as f32 * 0.5 + 1.0]));
+        }
+    }
+    r.wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    r
+}
+
+/// Split a `…,"rows":[ {row},{row},… ]}` document into (prefix up to and
+/// including the `[`, row-object strings). Row objects are flat — every
+/// writer in this repo emits them with no nested braces and no braces
+/// inside strings — so a depth counter over `{`/`}` is sufficient.
+fn split_rows(doc: &str) -> Option<(&str, Vec<String>)> {
+    let body = doc.strip_suffix("]}")?;
+    let key = "\"rows\":[";
+    let idx = body.rfind(key)?;
+    let head_end = idx + key.len();
+    let rows_text = &body[head_end..];
+    let mut rows = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in rows_text.char_indices() {
+        match c {
+            '{' => {
+                if depth == 0 {
+                    start = i;
+                }
+                depth += 1;
+            }
+            '}' if depth > 0 => {
+                depth -= 1;
+                if depth == 0 {
+                    rows.push(rows_text[start..=i].to_string());
+                }
+            }
+            _ => {}
+        }
+    }
+    Some((&doc[..head_end], rows))
+}
+
+/// Merge rows into `BENCH_micro.json` (written by the micro bench, whose
+/// `rows` array is always the final key, so the document ends with `]}`).
+/// Idempotent: any previous `resume_affinity` rows are replaced, so running
+/// this bench standalone (or repeatedly) never accumulates duplicates.
+/// Falls back to a standalone document when the file is missing or not in
+/// the expected shape.
+fn append_bench_rows(path: &str, rows: &[String]) {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let doc = match split_rows(existing.trim_end()) {
+        Some((head, old_rows)) => {
+            let mut all: Vec<String> = old_rows
+                .into_iter()
+                .filter(|r| !r.contains("\"path\":\"resume_affinity"))
+                .collect();
+            all.extend(rows.iter().cloned());
+            format!("{head}{}]}}\n", all.join(","))
+        }
+        None => {
+            Obj::new()
+                .str("bench", "resume_affinity")
+                .str("generated_by", "scripts/bench_micro.sh")
+                .raw("rows", &format!("[{}]", rows.join(",")))
+                .finish()
+                + "\n"
+        }
+    };
+    std::fs::write(path, doc).expect("write BENCH json");
+    eprintln!("resume_affinity: merged {} rows into {path}", rows.len());
+}
+
+fn main() {
+    let stages = env_usize("COPRIS_BENCH_STAGES", 6);
+    let decode_us = env_usize("COPRIS_BENCH_DECODE_US", 800) as u64;
+
+    println!(
+        "== resume_affinity: replay-only vs KV-retention CoPRIS (mock backend) ==\n\
+         {stages} stages, B=3 G=2 N'=10, 2 engines × 4 slots, decode {decode_us}µs/step\n"
+    );
+
+    let arms: Vec<(&str, ArmOpts)> = vec![
+        (
+            "replay-only",
+            ArmOpts { retain: false, across_sync: false, sync_each_stage: false, stages, decode_us },
+        ),
+        (
+            "retained",
+            ArmOpts { retain: true, across_sync: false, sync_each_stage: false, stages, decode_us },
+        ),
+        (
+            "replay-only + sync",
+            ArmOpts { retain: false, across_sync: false, sync_each_stage: true, stages, decode_us },
+        ),
+        (
+            "retained + sync",
+            ArmOpts { retain: true, across_sync: false, sync_each_stage: true, stages, decode_us },
+        ),
+        (
+            "retained + stale-kv",
+            ArmOpts { retain: true, across_sync: true, sync_each_stage: true, stages, decode_us },
+        ),
+    ];
+
+    let mut results: Vec<(&str, ArmResult)> = Vec::new();
+    for (name, opts) in &arms {
+        results.push((*name, run_arm(opts)));
+    }
+
+    let baseline_stage = results[0].1.stage_secs;
+    let headers = [
+        "Arm", "Stage s (sum)", "Speedup", "Completed", "Resumed",
+        "Replayed tok", "Saved tok", "KV hits", "KV misses",
+    ];
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(name, r)| {
+            vec![
+                name.to_string(),
+                format!("{:.3}", r.stage_secs),
+                format!("{:.2}x", baseline_stage / r.stage_secs.max(1e-9)),
+                r.completed.to_string(),
+                r.resumed.to_string(),
+                r.replayed_tokens.to_string(),
+                r.replay_tokens_saved.to_string(),
+                r.retained_hits.to_string(),
+                r.retained_misses.to_string(),
+            ]
+        })
+        .collect();
+    println!("{}", render_table(&headers, &rows));
+    println!(
+        "\nexpected shape: the `retained` arm shows replayed tok → 0 with saved tok > 0\n\
+         and stage wall ≤ replay-only (the avoided replay decode steps × {decode_us}µs);\n\
+         `retained + sync` degrades to the replay baseline (invalidation);\n\
+         `retained + stale-kv` keeps the savings across syncs at the cost of extra\n\
+         off-policy staleness (IS-corrected via per-segment behaviour log-probs).\n\
+         mean stage wall: {}",
+        fmt_secs(results[1].1.stage_secs / stages.max(1) as f64),
+    );
+
+    // Machine-readable rows appended to BENCH_micro.json.
+    if let Ok(path) = std::env::var("COPRIS_BENCH_JSON") {
+        let entries: Vec<String> = results
+            .iter()
+            .map(|(name, r)| {
+                Obj::new()
+                    .str("path", &format!("resume_affinity {name} (stage wall)"))
+                    .num("mean_s", r.stage_secs / stages.max(1) as f64)
+                    .num("p50_s", r.stage_secs / stages.max(1) as f64)
+                    .num("p95_s", r.stage_secs / stages.max(1) as f64)
+                    .int("iters", stages as i64)
+                    .int("replayed_tokens", r.replayed_tokens as i64)
+                    .int("replay_tokens_saved", r.replay_tokens_saved as i64)
+                    .int("retained_hits", r.retained_hits as i64)
+                    .int("retained_misses", r.retained_misses as i64)
+                    .finish()
+            })
+            .collect();
+        append_bench_rows(&path, &entries);
+    }
+}

@@ -19,6 +19,7 @@ pub enum RolloutMode {
 }
 
 impl RolloutMode {
+    /// Parse a CLI/TOML mode name (`sync`/`verl`, `naive`, `copris`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "sync" | "verl" => RolloutMode::Sync,
@@ -27,6 +28,7 @@ impl RolloutMode {
             _ => bail!("unknown rollout mode {s:?} (sync|naive|copris)"),
         })
     }
+    /// Canonical mode name (round-trips through [`RolloutMode::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             RolloutMode::Sync => "sync",
@@ -39,6 +41,7 @@ impl RolloutMode {
 /// Rollout-stage configuration (paper Table 3, "Rollout Configuration").
 #[derive(Clone, Debug)]
 pub struct RolloutConfig {
+    /// Which rollout driver runs the stage.
     pub mode: RolloutMode,
     /// Training batch size B: prompts per step (paper: 64).
     pub batch_prompts: usize,
@@ -47,9 +50,11 @@ pub struct RolloutConfig {
     /// Concurrency pool size N' (paper: 1024). For `Sync` this is ignored;
     /// for `NaivePartial` it is the *initial* concurrency.
     pub concurrency: usize,
-    /// Sampling temperature / top-p / top-k (paper: 1.0 / 1.0 / -1).
+    /// Sampling temperature (paper: 1.0).
     pub temperature: f64,
+    /// Sampling top-p (paper: 1.0).
     pub top_p: f64,
+    /// Sampling top-k; -1 disables (paper: -1).
     pub top_k: i64,
     /// Cross-stage importance sampling correction on/off (§5.4.2 ablation).
     pub importance_sampling: bool,
@@ -62,6 +67,24 @@ pub struct RolloutConfig {
     /// segment — handled by the cross-stage IS machinery). Off = serial
     /// rollout → train → sync, matching the paper.
     pub pipeline: bool,
+    /// KV retention + affinity resume routing (on by default): partials
+    /// flushed at early termination / `abort_stage` keep their KV resident
+    /// in the engine, and their resumption is routed back to that engine to
+    /// skip re-prefill entirely. Bit-identical to the replay path (pinned
+    /// by `rust/tests/retained_golden.rs`); fallback to replay on slot
+    /// eviction, sync invalidation, or load imbalance is automatic.
+    pub retain_kv: bool,
+    /// Keep retained KV valid across weight syncs (off by default). Off: a
+    /// sync invalidates every retained slot, so resumes re-prefill under
+    /// the new policy exactly like the replay-only baseline. On: resumes
+    /// continue from KV computed under the OLD policy — extra off-policy
+    /// staleness, traded for zero recompute; the stale prefix's behaviour
+    /// log-probs are already per-segment, so cross-stage IS still applies.
+    pub retain_kv_across_sync: bool,
+    /// Affinity routing gives up when the home engine's in-flight load
+    /// exceeds the least-loaded engine's by more than this (the resume then
+    /// dispatches least-loaded and the remote retained slot is released).
+    pub affinity_max_imbalance: usize,
 }
 
 impl Default for RolloutConfig {
@@ -77,6 +100,9 @@ impl Default for RolloutConfig {
             importance_sampling: true,
             max_stage_lag: usize::MAX,
             pipeline: false,
+            retain_kv: true,
+            retain_kv_across_sync: false,
+            affinity_max_imbalance: 4,
         }
     }
 }
@@ -111,14 +137,17 @@ impl Default for EngineConfig {
 /// Training configuration (paper Table 3, "Training Configuration").
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// RL steps to run.
     pub steps: usize,
     /// Learning rate (paper: 1e-6 at 1.5B+; scaled default for our sizes).
     pub lr: f64,
     /// Group-advantage epsilon (Eq. 5 denominator guard).
     pub adv_eps: f64,
+    /// Master seed (trainer init, dataset, engine RNGs).
     pub seed: u64,
     /// Checkpoint every N steps (0 = never).
     pub checkpoint_every: usize,
+    /// Directory checkpoints are written to.
     pub checkpoint_dir: String,
 }
 
@@ -140,8 +169,9 @@ impl Default for TrainConfig {
 pub struct EvalConfig {
     /// Samples per eval prompt (paper: 32; scaled).
     pub samples_per_prompt: usize,
-    /// Eval temperature / top-p (paper: 0.6 / 1.0).
+    /// Eval temperature (paper: 0.6).
     pub temperature: f64,
+    /// Eval top-p (paper: 1.0).
     pub top_p: f64,
     /// Prompts per suite.
     pub prompts_per_suite: usize,
@@ -158,14 +188,20 @@ impl Default for EvalConfig {
 pub struct Config {
     /// Artifact variant directory name under `artifacts/` (e.g. "small").
     pub model: String,
+    /// Root directory holding the AOT artifact variants.
     pub artifacts_dir: String,
+    /// Rollout-stage settings.
     pub rollout: RolloutConfig,
+    /// Engine-pool settings.
     pub engine: EngineConfig,
+    /// Training settings.
     pub train: TrainConfig,
+    /// Evaluation settings.
     pub eval: EvalConfig,
 }
 
 impl Config {
+    /// Default config for an artifact variant.
     pub fn new(model: &str) -> Self {
         Config {
             model: model.to_string(),
@@ -201,6 +237,13 @@ impl Config {
             }
             ("rollout", "max_stage_lag") => self.rollout.max_stage_lag = parse_usize()?,
             ("rollout", "pipeline") => self.rollout.pipeline = parse_bool()?,
+            ("rollout", "retain_kv") => self.rollout.retain_kv = parse_bool()?,
+            ("rollout", "retain_kv_across_sync") => {
+                self.rollout.retain_kv_across_sync = parse_bool()?
+            }
+            ("rollout", "affinity_max_imbalance") => {
+                self.rollout.affinity_max_imbalance = parse_usize()?
+            }
             ("engine", "engines") => self.engine.engines = parse_usize()?,
             ("engine", "kv_budget_tokens") => self.engine.kv_budget_tokens = parse_usize()?,
             ("engine", "max_new_tokens") => self.engine.max_new_tokens = parse_usize()?,
@@ -239,6 +282,7 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Load a config from a TOML file on disk.
     pub fn from_toml_file(path: &str) -> Result<Config> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         Config::from_toml_str(&text)
@@ -270,6 +314,8 @@ impl Config {
         s.push_str(&format!("| Concurrency pool size (N') | {} |\n", r.concurrency));
         s.push_str(&format!("| Importance sampling | {} |\n", r.importance_sampling));
         s.push_str(&format!("| Stage pipelining | {} |\n", r.pipeline));
+        s.push_str(&format!("| KV retention (affinity resume) | {} |\n", r.retain_kv));
+        s.push_str(&format!("| Retain KV across sync | {} |\n", r.retain_kv_across_sync));
         s.push_str("| **Training Configuration** | |\n");
         s.push_str(&format!("| Global batch size | {} |\n", r.batch_prompts));
         s.push_str("| Optimizer | Adam |\n");
@@ -315,6 +361,27 @@ mod tests {
         let c = Config::new("tiny");
         assert!(!c.rollout.pipeline);
         assert!(c.render_table().contains("Stage pipelining"));
+    }
+
+    #[test]
+    fn retention_defaults_and_overrides() {
+        let mut c = Config::new("tiny");
+        // Defaults: retention on, never across syncs (golden-equivalent).
+        assert!(c.rollout.retain_kv);
+        assert!(!c.rollout.retain_kv_across_sync);
+        assert!(c.rollout.affinity_max_imbalance > 0);
+        assert!(c.render_table().contains("KV retention"));
+        c.set("rollout.retain_kv", "off").unwrap();
+        c.set("rollout.retain_kv_across_sync", "true").unwrap();
+        c.set("rollout.affinity_max_imbalance", "9").unwrap();
+        assert!(!c.rollout.retain_kv);
+        assert!(c.rollout.retain_kv_across_sync);
+        assert_eq!(c.rollout.affinity_max_imbalance, 9);
+        // TOML path hits the same setters.
+        let doc = "[rollout]\nretain_kv = false\nretain_kv_across_sync = true\n";
+        let c2 = Config::from_toml_str(doc).unwrap();
+        assert!(!c2.rollout.retain_kv);
+        assert!(c2.rollout.retain_kv_across_sync);
     }
 
     #[test]

@@ -3,11 +3,16 @@
 
 use anyhow::{bail, Result};
 
+/// A scalar TOML value (the subset the config schema needs).
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// A double-quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
 }
 

@@ -6,6 +6,12 @@ use std::collections::VecDeque;
 
 use super::trajectory::Trajectory;
 
+/// The buffer B of unfinished trajectories, ordered oldest-policy-first.
+///
+/// When a buffered partial's KV is retained in an engine, the coordinator
+/// tracks that (engine, token) affinity in its own map keyed by trajectory
+/// id (`Coordinator::retained_at`) — the buffer itself stays a pure
+/// trajectory store so the frozen reference coordinator can share it.
 #[derive(Debug, Default)]
 pub struct PartialBuffer {
     items: VecDeque<Trajectory>,
@@ -16,10 +22,13 @@ pub struct PartialBuffer {
 }
 
 impl PartialBuffer {
+    /// Empty buffer with the given staleness guard.
     pub fn new(max_stage_lag: usize) -> Self {
         PartialBuffer { items: VecDeque::new(), max_stage_lag }
     }
 
+    /// Insert a partial, keeping oldest-born-version-first order (stable
+    /// within a version).
     pub fn push(&mut self, traj: Trajectory) {
         debug_assert!(traj.invariant_ok(), "broken trajectory invariant");
         debug_assert!(!traj.complete, "complete trajectory does not belong in the buffer");
@@ -56,19 +65,23 @@ impl PartialBuffer {
         evicted
     }
 
+    /// Buffered partial count.
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// Is the buffer empty?
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
 
-    /// Total buffered tokens (the re-prefill/recompute debt).
+    /// Total buffered tokens (the re-prefill/recompute debt — what a
+    /// retained-KV resume avoids paying).
     pub fn token_count(&self) -> usize {
         self.items.iter().map(|t| t.len()).sum()
     }
 
+    /// Iterate buffered partials oldest-policy-first.
     pub fn iter(&self) -> impl Iterator<Item = &Trajectory> {
         self.items.iter()
     }

@@ -25,7 +25,10 @@ pub const EVENT_TIMEOUT: Duration = Duration::from_secs(120);
 #[derive(Clone, Debug)]
 pub enum StageGoal {
     /// Training stage: `b` complete groups, tasks drawn from the dataset.
-    Batch { b: usize },
+    Batch {
+        /// Complete prompt-groups required (the paper's B).
+        b: usize,
+    },
     /// Eval stage: fixed task list dispatched upfront, runs until idle.
     /// Owns exactly its own trajectories — never touches the shared
     /// partial buffer (`run_fixed_sync` tracks its group ids itself).
@@ -77,10 +80,15 @@ pub enum StagePhase {
 /// coordinator). Holds everything the pre-refactor blocking loop kept on
 /// its call stack, so the stage survives returning to the caller.
 pub struct StageDriver {
+    /// What the stage delivers (training batch vs fixed eval set).
     pub goal: StageGoal,
+    /// Dispatch-policy parameters (see the mode table above).
     pub policy: StagePolicy,
+    /// Sampling parameters every dispatch of this stage uses.
     pub sampling: SamplingParams,
+    /// Current phase of the state machine.
     pub phase: StagePhase,
+    /// Statistics accumulated so far this stage.
     pub stats: RolloutStats,
     /// Stage start (wall-clock accounting).
     pub t0: Instant,
@@ -97,6 +105,7 @@ pub struct StageDriver {
 }
 
 impl StageDriver {
+    /// Fresh control block in the `Running` phase.
     pub fn new(goal: StageGoal, policy: StagePolicy, sampling: SamplingParams) -> StageDriver {
         let now = Instant::now();
         StageDriver {
@@ -113,6 +122,7 @@ impl StageDriver {
         }
     }
 
+    /// Has the stage met its goal and quiesced?
     pub fn is_done(&self) -> bool {
         self.phase == StagePhase::Done
     }

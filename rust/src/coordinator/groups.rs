@@ -10,10 +10,14 @@ use anyhow::{ensure, Result};
 use super::trajectory::Trajectory;
 use crate::tasks::Task;
 
+/// One GRPO prompt-group: G samples of the same task.
 #[derive(Debug)]
 pub struct Group {
+    /// Group id (allocation order in the book).
     pub group_id: u64,
+    /// The shared task all G samples answer.
     pub task: Task,
+    /// Samples required for completion (G).
     pub target: usize,
     /// Completed trajectories (≤ target).
     pub done: Vec<Trajectory>,
@@ -23,6 +27,7 @@ pub struct Group {
 }
 
 impl Group {
+    /// Has the group collected all G terminal samples?
     pub fn is_complete(&self) -> bool {
         self.done.len() >= self.target
     }
@@ -33,6 +38,8 @@ impl Group {
     }
 }
 
+/// Registry of every live group: open, complete-but-unharvested, and the
+/// completion order the training batch is drawn in.
 #[derive(Debug, Default)]
 pub struct GroupBook {
     groups: HashMap<u64, Group>,
@@ -42,10 +49,12 @@ pub struct GroupBook {
 }
 
 impl GroupBook {
+    /// Empty book.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Open a new group for `task` needing `target` samples; returns its id.
     pub fn new_group(&mut self, task: Task, target: usize) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
@@ -56,10 +65,12 @@ impl GroupBook {
         id
     }
 
+    /// Look up a live group.
     pub fn get(&self, id: u64) -> Option<&Group> {
         self.groups.get(&id)
     }
 
+    /// Record one sample dispatched for `group_id`.
     pub fn note_dispatch(&mut self, group_id: u64) {
         if let Some(g) = self.groups.get_mut(&group_id) {
             g.dispatched += 1;
@@ -92,6 +103,7 @@ impl GroupBook {
         Ok(false)
     }
 
+    /// Complete-but-unharvested group count (the early-termination test).
     pub fn completed_count(&self) -> usize {
         self.completed.len()
     }
@@ -120,6 +132,7 @@ impl GroupBook {
         v.iter().map(|(id, _)| **id).collect()
     }
 
+    /// Live group count (open + complete-but-unharvested).
     pub fn active_groups(&self) -> usize {
         self.groups.len()
     }

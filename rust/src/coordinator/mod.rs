@@ -8,7 +8,11 @@
 //!   trajectories keep their per-stage log-prob segments; completed
 //!   trajectories of still-active groups stay in the group book.
 //! - **Prioritized Resumption**: buffered partials dispatch before fresh
-//!   prompts in the next stage.
+//!   prompts in the next stage — with **affinity-aware resume routing**:
+//!   when a partial's KV is still retained on the engine that generated it
+//!   (`rollout.retain_kv`), the resume is routed back there and skips
+//!   re-prefill entirely, falling back to replay on eviction, weight-sync
+//!   invalidation, or load imbalance (`rollout.affinity_max_imbalance`).
 //!
 //! Baselines implemented by the same driver: fully-synchronous (veRL) and
 //! naive partial rollout (Kimi-K1.5-style fixed initial concurrency).

@@ -13,7 +13,14 @@
 //! - `RolloutStats::resumed` is never incremented.
 //!
 //! Do not "fix" or modernise this file — its value is that it does not
-//! change.
+//! change. The only sanctioned edits are mechanical API-compat shims when
+//! a shared type grows (each behaviour-preserving, marked `API-compat`):
+//! `WorkItem::retain: None` (never uses the retention fast path),
+//! `broadcast_params(.., true)` (always invalidates retained KV — there is
+//! none), and an ignore arm for `EngineEvent::RetainedDropped` (never
+//! received: this coordinator never retains).
+
+#![allow(missing_docs)] // frozen pre-refactor code — not part of the doc pass
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -85,7 +92,7 @@ impl ReferenceCoordinator {
 
     pub fn sync_weights(&mut self, version: u64, params: Arc<Vec<f32>>) {
         self.policy_version = version;
-        self.pool.broadcast_params(version, params);
+        self.pool.broadcast_params(version, params, true); // API-compat
     }
 
     fn total_inflight(&self) -> usize {
@@ -109,6 +116,7 @@ impl ReferenceCoordinator {
             resume: traj.tokens.clone(),
             max_total: self.max_total_for(traj.prompt.len()),
             sampling,
+            retain: None, // API-compat: the reference always replays
         };
         self.engine_load[engine] += 1;
         self.inflight.insert(traj.id, InFlight { traj, engine });
@@ -258,6 +266,7 @@ impl ReferenceCoordinator {
             EngineEvent::Trace(t) => stats.traces.push(t),
             EngineEvent::Flushed { .. } => return Ok(1),
             EngineEvent::ShutDown { .. } => {}
+            EngineEvent::RetainedDropped { .. } => {} // API-compat: never retains
             EngineEvent::Done { engine, result } => {
                 let Some(inf) = self.inflight.remove(&result.request_id) else {
                     bail!("unknown request {} from engine {engine}", result.request_id);

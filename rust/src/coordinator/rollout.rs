@@ -39,6 +39,7 @@ const PUMP_CHUNK: Duration = Duration::from_secs(3600);
 /// Per-stage rollout statistics (feeds Fig. 1, Table 2, Fig. 3).
 #[derive(Clone, Debug, Default)]
 pub struct RolloutStats {
+    /// Stage wall-clock seconds (start → quiesce, not harvest).
     pub wall: f64,
     /// Completed trajectories harvested this stage.
     pub completed: usize,
@@ -46,9 +47,19 @@ pub struct RolloutStats {
     pub partials_buffered: usize,
     /// Buffered partials resumed (popped and re-dispatched) this stage.
     pub resumed: usize,
+    /// Live-slot preemptions under KV pressure.
     pub preemptions: u64,
     /// Resume tokens replayed (the recomputation overhead).
     pub replayed_tokens: u64,
+    /// Resumes served from retained KV (affinity hits: the whole resume
+    /// prefix skipped replay).
+    pub retained_hits: usize,
+    /// Affinity-routed resumes that fell back to replay (retained slot
+    /// evicted or invalidated between stop and resume).
+    pub retained_misses: usize,
+    /// Resume tokens NOT recomputed thanks to retained-KV hits — the
+    /// replay work the affinity fast path avoided.
+    pub replay_tokens_saved: u64,
     /// Per-engine-step utilization samples.
     pub traces: Vec<StepTrace>,
     /// Response length of every trajectory completed this stage.
@@ -85,25 +96,52 @@ impl RolloutStats {
 /// Output of one rollout stage: exactly B complete groups + stats.
 #[derive(Debug)]
 pub struct RolloutOutput {
+    /// The B completed prompt-groups (training batch).
     pub groups: Vec<Group>,
+    /// Stage statistics.
     pub stats: RolloutStats,
 }
 
-/// In-flight bookkeeping: trajectory + which engine has it.
+/// In-flight bookkeeping: trajectory + which engine has it + the
+/// retained-KV affinity hint the dispatch carried, if any (hit/miss
+/// accounting, and affinity restoration when a hinted dispatch is dropped
+/// unstarted at stage end — the retained slot is still valid then).
 struct InFlight {
     traj: Trajectory,
     engine: usize,
+    retain: Option<u64>,
+    /// Policy version at dispatch — the leftover affinity restore is
+    /// suppressed when a sync has invalidated retention since then.
+    version: u64,
+}
+
+/// Where a buffered partial's KV is retained: the engine that generated it
+/// and the retention token its `Stopped` flush returned. This is the
+/// coordinator half of the retention ledger — a routing HINT, never a
+/// correctness dependency (stale hints fall back to replay in-engine).
+#[derive(Clone, Copy, Debug)]
+struct RetainedRef {
+    engine: usize,
+    token: u64,
 }
 
 /// The CoPRIS coordinator (also drives the sync / naive-partial baselines
 /// and fixed-prompt eval, all through the one [`StageDriver`]).
 pub struct Coordinator {
+    /// The engine pool this coordinator dispatches to.
     pub pool: EnginePool,
+    /// Full run configuration (rollout policy knobs live under
+    /// `cfg.rollout`).
     pub cfg: Config,
+    /// Buffer of unfinished partial trajectories (Eq. 7).
     pub buffer: PartialBuffer,
     book: GroupBook,
     inflight: HashMap<u64, InFlight>,
     engine_load: Vec<usize>,
+    /// Affinity map: buffered-partial trajectory id → retained slot. An
+    /// entry exists iff the partial's last `Stopped` flush retained KV and
+    /// no sync/eviction/route has cleared it since.
+    retained_at: HashMap<u64, RetainedRef>,
     next_traj_id: u64,
     /// Current policy version (== trainer step); bumped by `sync_weights`.
     pub policy_version: u64,
@@ -126,6 +164,7 @@ impl Coordinator {
             book: GroupBook::new(),
             inflight: HashMap::new(),
             engine_load: vec![0; engines],
+            retained_at: HashMap::new(),
             next_traj_id: 0,
             policy_version: 0,
             tokenizer: Tokenizer::new(),
@@ -144,6 +183,7 @@ impl Coordinator {
         cap.min(self.max_seq)
     }
 
+    /// The tokenizer shared with dispatch (prompt encoding).
     pub fn tokenizer(&self) -> &Tokenizer {
         &self.tokenizer
     }
@@ -152,9 +192,19 @@ impl Coordinator {
     /// Legal mid-stage (stage-pipelined mode): trajectories completing
     /// afterwards are tagged with the new version, giving them another
     /// IS segment.
+    ///
+    /// Unless `rollout.retain_kv_across_sync` is set, the sync invalidates
+    /// all retained KV — both the engines' ledgers and this coordinator's
+    /// affinity map — because retained prefixes were computed under the old
+    /// params; subsequent resumes re-prefill under the new policy, exactly
+    /// like the replay-only baseline.
     pub fn sync_weights(&mut self, version: u64, params: Arc<Vec<f32>>) {
         self.policy_version = version;
-        self.pool.broadcast_params(version, params);
+        let invalidate = !self.cfg.rollout.retain_kv_across_sync;
+        if invalidate {
+            self.retained_at.clear();
+        }
+        self.pool.broadcast_params(version, params, invalidate);
     }
 
     fn total_inflight(&self) -> usize {
@@ -180,8 +230,30 @@ impl Coordinator {
             .unwrap_or(0)
     }
 
+    /// Affinity-aware routing: a trajectory whose KV is retained on its
+    /// home engine goes back there (with the retention token as the resume
+    /// hint) unless that engine's load exceeds the least-loaded engine by
+    /// more than `rollout.affinity_max_imbalance` — then the retained slot
+    /// is released remotely and the dispatch falls back to least-loaded.
+    /// Returns `(engine, retain_hint)`.
+    fn route(&mut self, traj: &Trajectory) -> (usize, Option<u64>) {
+        let least = self.least_loaded_engine();
+        let Some(r) = self.retained_at.remove(&traj.id) else { return (least, None) };
+        let max_imbalance = self.cfg.rollout.affinity_max_imbalance;
+        if self.cfg.rollout.retain_kv
+            && self.engine_load[r.engine] <= self.engine_load[least] + max_imbalance
+        {
+            return (r.engine, Some(r.token));
+        }
+        // Imbalance fallback: generate wherever is least loaded, and free
+        // the remote retained slot so it stops charging that engine's KV.
+        self.pool
+            .send(r.engine, EngineCmd::ReleaseRetained { request_id: traj.id, token: r.token });
+        (least, None)
+    }
+
     fn dispatch(&mut self, traj: Trajectory, sampling: SamplingParams) {
-        let engine = self.least_loaded_engine();
+        let (engine, retain) = self.route(&traj);
         let item = WorkItem {
             request_id: traj.id,
             // Arc clone — re-dispatching a buffered partial shares the
@@ -190,9 +262,11 @@ impl Coordinator {
             resume: traj.tokens.clone(),
             max_total: self.max_total_for(traj.prompt.len()),
             sampling,
+            retain,
         };
         self.engine_load[engine] += 1;
-        self.inflight.insert(traj.id, InFlight { traj, engine });
+        let version = self.policy_version;
+        self.inflight.insert(traj.id, InFlight { traj, engine, retain, version });
         self.pool.send(engine, EngineCmd::Assign(item));
         if let Some(d) = self.driver.as_mut() {
             if let Some(w) = d.wave_remaining.as_mut() {
@@ -270,8 +344,15 @@ impl Coordinator {
             top_k: cfg.top_k,
         };
 
-        // Staleness guard (off by default, matching the paper).
+        // Staleness guard (off by default, matching the paper). Evicted
+        // partials will never resume — free their retained slots too.
         for stale in self.buffer.evict_stale(self.policy_version) {
+            if let Some(r) = self.retained_at.remove(&stale.id) {
+                self.pool.send(
+                    r.engine,
+                    EngineCmd::ReleaseRetained { request_id: stale.id, token: r.token },
+                );
+            }
             self.book.note_abandoned(stale.group_id);
         }
 
@@ -379,9 +460,10 @@ impl Coordinator {
                 StagePhase::Running => {
                     if self.goal_met() {
                         if self.drv().policy.drain && self.total_inflight() > 0 {
-                            // Early termination: halt engines, then collect
-                            // partials in the Draining phase.
-                            self.pool.stop_generation_all();
+                            // Early termination: halt engines (retaining
+                            // flushed slots' KV when configured), then
+                            // collect partials in the Draining phase.
+                            self.pool.stop_generation_all_with(self.cfg.rollout.retain_kv);
                             let d = self.drv_mut();
                             d.phase = StagePhase::Draining;
                             d.flushed = 0;
@@ -437,7 +519,32 @@ impl Coordinator {
                         let inf = self.inflight.remove(&id).unwrap();
                         self.engine_load[inf.engine] =
                             self.engine_load[inf.engine].saturating_sub(1);
-                        self.park_partial(inf.traj);
+                        let parked = self.park_partial(inf.traj);
+                        // A hinted dispatch dropped unstarted still has its
+                        // retained slot resident (only BUSY slots flush on
+                        // StopGeneration) and the trajectory is unchanged —
+                        // restore the affinity entry so the slot is neither
+                        // orphaned (charging KV forever) nor replayed past.
+                        // EXCEPT when a mid-flight sync invalidated
+                        // retention since the dispatch: the engine-side
+                        // slot is already gone, and resurrecting the entry
+                        // would contradict the invalidation policy. (If
+                        // the engine evicted it for other reasons, the
+                        // restored hint is stale and falls back to replay
+                        // in-engine — harmless.)
+                        if let Some(token) = inf.retain {
+                            let invalidated = !self.cfg.rollout.retain_kv_across_sync
+                                && self.policy_version != inf.version;
+                            if parked && !invalidated {
+                                self.retained_at
+                                    .insert(id, RetainedRef { engine: inf.engine, token });
+                            } else if !invalidated {
+                                self.pool.send(
+                                    inf.engine,
+                                    EngineCmd::ReleaseRetained { request_id: id, token },
+                                );
+                            }
+                        }
                     }
                     let d = self.drv_mut();
                     d.phase = StagePhase::Done;
@@ -542,7 +649,7 @@ impl Coordinator {
         ensure!(self.driver.is_some(), "abort_stage with no active stage");
         if self.drv().phase == StagePhase::Running {
             if self.total_inflight() > 0 {
-                self.pool.stop_generation_all();
+                self.pool.stop_generation_all_with(self.cfg.rollout.retain_kv);
                 let d = self.drv_mut();
                 d.phase = StagePhase::Draining;
                 d.flushed = 0;
@@ -582,14 +689,46 @@ impl Coordinator {
             EngineEvent::Trace(t) => self.drv_mut().stats.traces.push(t),
             EngineEvent::Flushed { .. } => return Ok(1),
             EngineEvent::ShutDown { .. } => {}
+            EngineEvent::RetainedDropped { engine, request_id } => {
+                // The engine evicted/released that retained slot; stop
+                // routing the partial by affinity. Only clear an entry that
+                // still points AT that engine: a delayed drop from an old
+                // home engine (imbalance fallback → ReleaseRetained → the
+                // partial re-retained elsewhere meanwhile) must not erase
+                // the newer entry. Same-engine drops can never be stale —
+                // each engine's events arrive in emission order, so its
+                // drop is always processed before any later retention it
+                // grants for the same request. (Entries already gone —
+                // coordinator-initiated releases — are a harmless no-op.)
+                if self.retained_at.get(&request_id).is_some_and(|r| r.engine == engine) {
+                    self.retained_at.remove(&request_id);
+                }
+            }
             EngineEvent::Done { engine, result } => {
                 let Some(inf) = self.inflight.remove(&result.request_id) else {
                     bail!("unknown request {} from engine {engine}", result.request_id);
                 };
                 self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
                 let mut traj = inf.traj;
+                // Resume length BEFORE this assignment's tokens append —
+                // exactly what a replay would have recomputed.
+                let resumed_len = traj.len() as u64;
                 traj.append_stage(&result.new_tokens, &result.new_logprobs, self.policy_version);
                 self.drv_mut().stats.replayed_tokens += result.replayed as u64;
+                if inf.retain.is_some() {
+                    let d = self.drv_mut();
+                    // A hit only counts when the resumed assignment actually
+                    // produced tokens: a same-step preemption of a retained
+                    // resume consumes the KV without generating anything, so
+                    // its prefix will be replayed after all — crediting it
+                    // as "saved" would double-book those tokens.
+                    if result.resumed_from_kv && !result.new_tokens.is_empty() {
+                        d.stats.retained_hits += 1;
+                        d.stats.replay_tokens_saved += resumed_len;
+                    } else {
+                        d.stats.retained_misses += 1;
+                    }
+                }
                 match result.reason {
                     FinishReason::Eos | FinishReason::LengthCap => {
                         traj.complete = true;
@@ -612,7 +751,25 @@ impl Coordinator {
                         }
                     }
                     FinishReason::Stopped => {
-                        self.park_partial(traj);
+                        let id = traj.id;
+                        let parked = self.park_partial(traj);
+                        if let Some(token) = result.retained {
+                            if parked {
+                                // Remember where the KV lives so the next
+                                // dispatch can route the resume home.
+                                self.retained_at
+                                    .insert(id, RetainedRef { engine, token });
+                            } else {
+                                // Abandoned (empty) partial — the engine
+                                // retained for nothing; free the slot.
+                                // (Unreachable in practice: retention
+                                // requires ≥ 1 generated token.)
+                                self.pool.send(
+                                    engine,
+                                    EngineCmd::ReleaseRetained { request_id: id, token },
+                                );
+                            }
+                        }
                     }
                 }
             }
@@ -620,13 +777,17 @@ impl Coordinator {
         Ok(0)
     }
 
-    fn park_partial(&mut self, traj: Trajectory) {
+    /// Park a flushed/preempted partial in the buffer; returns false when
+    /// it was empty and abandoned instead (dispatch slot freed).
+    fn park_partial(&mut self, traj: Trajectory) -> bool {
         if traj.is_empty() {
             // Nothing generated: not a partial — free the dispatch slot.
             self.book.note_abandoned(traj.group_id);
+            false
         } else {
             self.drv_mut().stats.partials_buffered += 1;
             self.buffer.push(traj);
+            true
         }
     }
 
@@ -687,6 +848,13 @@ impl Coordinator {
         self.buffer.len()
     }
 
+    /// Buffered partials whose KV is still retained on some engine (test /
+    /// diagnostics: the affinity map size).
+    pub fn retained_partials(&self) -> usize {
+        self.retained_at.len()
+    }
+
+    /// Shut the engine pool down (joins every engine thread).
     pub fn shutdown(self) {
         self.pool.shutdown();
     }

@@ -7,14 +7,21 @@ use crate::tasks::Task;
 /// Tokens generated under a single policy version.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Segment {
+    /// Policy version (trainer step) the tokens were sampled under.
     pub policy_version: u64,
+    /// Behaviour log-prob of each token in this segment.
     pub logprobs: Vec<f32>,
 }
 
+/// One rollout trajectory: a prompt plus tokens accumulated across one or
+/// more stages, each stage's log-probs kept as a version-tagged [`Segment`].
 #[derive(Clone, Debug)]
 pub struct Trajectory {
+    /// Unique id (the engine request id).
     pub id: u64,
+    /// GRPO group this sample belongs to.
     pub group_id: u64,
+    /// The task being solved (prompt text + verifiable answer).
     pub task: Task,
     /// Shared with every `WorkItem` dispatched for this trajectory — an
     /// `Arc` so buffered-partial re-dispatch never deep-copies the prompt.
@@ -30,6 +37,7 @@ pub struct Trajectory {
 }
 
 impl Trajectory {
+    /// Fresh trajectory born at `version` with no generated tokens yet.
     pub fn new(id: u64, group_id: u64, task: Task, prompt: Vec<i32>, version: u64) -> Self {
         Trajectory {
             id,
@@ -85,10 +93,12 @@ impl Trajectory {
             .sum()
     }
 
+    /// Generated token count (across all stages; prompt excluded).
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
 
+    /// Has nothing been generated yet?
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
     }

@@ -11,10 +11,13 @@ use crate::tokenizer;
 /// Abstracts prefill/decode so the engine loop and the whole coordinator
 /// stack are testable without PJRT (see `MockBackend`).
 pub trait Backend {
+    /// Concurrent decode slots this backend batches over.
     fn slots(&self) -> usize;
+    /// Vocabulary size (logit-row width).
     fn vocab(&self) -> usize;
     /// Decode horizon: max absolute sequence length (prompt + response).
     fn max_seq(&self) -> usize;
+    /// Max prompt (and replay-chunk) length per prefill call.
     fn p_max(&self) -> usize;
     /// Weight sync: install a new parameter vector.
     fn set_params(&mut self, params: &[f32]) -> Result<()>;
@@ -38,6 +41,34 @@ pub trait Backend {
     /// None → the engine falls back to per-token decode replay.
     fn replay(&mut self, _slot: usize, _chunk: &[i32], _start: usize) -> Result<Option<Vec<f32>>> {
         Ok(None)
+    }
+    /// KV retention: keep `slot`'s resident KV valid after the sequence is
+    /// flushed, so a later [`Backend::resume_retained`] can continue
+    /// decoding from it with zero replay. Returns `Ok(false)` when the
+    /// backend cannot guarantee retention (the engine then flushes plainly
+    /// and the resume takes the replay path).
+    ///
+    /// Contract the engine upholds while a slot is retained: lockstep
+    /// decode steps stage the slot at its *pending feed position* with a
+    /// dummy token, and the resume's first real feed lands on that same
+    /// position — so a backend whose decode writes-then-attends at the fed
+    /// position never exposes the dummy write (it is overwritten before it
+    /// can be attended). Positions `< pos` are never written while
+    /// retained.
+    fn retain_slot(&mut self, _slot: usize) -> Result<bool> {
+        Ok(false)
+    }
+    /// Re-activate a slot previously accepted by [`Backend::retain_slot`]:
+    /// restore whatever per-slot decode state the backend keeps outside
+    /// the KV itself (the mock restores its script cursor; the PJRT
+    /// backend's state is entirely device-resident, so this is a no-op).
+    fn resume_retained(&mut self, _slot: usize) -> Result<()> {
+        Ok(())
+    }
+    /// Drop retained state for `slot` (eviction/invalidation). Must be
+    /// safe to call for slots that were never retained.
+    fn release_retained(&mut self, _slot: usize) -> Result<()> {
+        Ok(())
     }
 }
 
@@ -70,6 +101,7 @@ impl XlaBackend {
         Ok(XlaBackend { rt, params: params_buf, engine_state, chunked_replay: false })
     }
 
+    /// The loaded artifact manifest (slots, vocab, max_seq, …).
     pub fn spec(&self) -> &crate::runtime::Manifest {
         &self.rt.spec
     }
@@ -121,6 +153,26 @@ impl Backend for XlaBackend {
         self.engine_state = es;
         Ok(Some(logits))
     }
+
+    // KV retention: the per-slot KV lives inside the device-resident
+    // `engine_state` buffer and nothing host-side needs saving, so
+    // retention is free. Validity rests on the engine's retained-slot
+    // position discipline (see `Backend::retain_slot`): while retained,
+    // lockstep decodes only write the slot's pending feed position, which
+    // the resume overwrites before attending to it; the retained prefix at
+    // positions `< pos` is never touched. That write-then-attend contract
+    // is verified against the real kernel by the artifact-gated
+    // `xla_retained_resume_matches_uninterrupted_stream` test in
+    // rust/tests/e2e_tiny.rs (mock-backed golden tests cannot cover it).
+    fn retain_slot(&mut self, _slot: usize) -> Result<bool> {
+        Ok(true)
+    }
+    fn resume_retained(&mut self, _slot: usize) -> Result<()> {
+        Ok(())
+    }
+    fn release_retained(&mut self, _slot: usize) -> Result<()> {
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -138,18 +190,32 @@ pub struct MockBackend {
     p_max: usize,
     /// Per-slot: (prompt_hash, generated_count) driving the script.
     slot_script: Vec<(u64, usize)>,
+    /// Retained-slot script stash: the mock's "KV" is its script cursor,
+    /// which `decode_into` advances for every slot every step — `retain`
+    /// snapshots it and `resume_retained` restores it. Keyed by slot.
+    /// Crucially the stash keeps the hash computed under the epoch the
+    /// sequence was generated with, so resuming retained state across a
+    /// weight sync continues the OLD script — exactly the stale-KV
+    /// semantics a real backend has.
+    retained_script: std::collections::HashMap<usize, (u64, usize)>,
+    /// Epoch derived from the last `set_params` (shifts every script).
     pub params_epoch: u64,
     /// Scripted length = min_len + hash % spread.
     pub min_len: usize,
+    /// Scripted length spread (see `min_len`).
     pub spread: usize,
-    /// Count of decode/prefill calls (cost accounting in tests).
+    /// Count of decode calls (cost accounting in tests).
     pub decode_calls: usize,
+    /// Count of prefill calls (cost accounting in tests).
     pub prefill_calls: usize,
+    /// Count of retained-slot resumes (fast-path assertions in tests).
+    pub resume_retained_calls: usize,
     /// Artificial per-decode latency (tests that need slow engines).
     pub decode_delay: Option<std::time::Duration>,
 }
 
 impl MockBackend {
+    /// Build a mock with `slots` decode slots and a `max_seq` horizon.
     pub fn new(slots: usize, max_seq: usize) -> MockBackend {
         MockBackend {
             slots,
@@ -157,11 +223,13 @@ impl MockBackend {
             max_seq,
             p_max: 24,
             slot_script: vec![(0, 0); slots],
+            retained_script: std::collections::HashMap::new(),
             params_epoch: 0,
             min_len: 2,
             spread: 12,
             decode_calls: 0,
             prefill_calls: 0,
+            resume_retained_calls: 0,
             decode_delay: None,
         }
     }
@@ -261,6 +329,29 @@ impl Backend for MockBackend {
         }
         Ok(())
     }
+
+    fn retain_slot(&mut self, slot: usize) -> Result<bool> {
+        // Snapshot the script cursor — the lockstep decode keeps advancing
+        // `slot_script` for every slot, so the live cursor drifts while the
+        // slot is retained and the stash is the source of truth.
+        self.retained_script.insert(slot, self.slot_script[slot]);
+        Ok(true)
+    }
+
+    fn resume_retained(&mut self, slot: usize) -> Result<()> {
+        let (h, count) = self
+            .retained_script
+            .remove(&slot)
+            .ok_or_else(|| anyhow::anyhow!("slot {slot} has no retained script"))?;
+        self.slot_script[slot] = (h, count);
+        self.resume_retained_calls += 1;
+        Ok(())
+    }
+
+    fn release_retained(&mut self, slot: usize) -> Result<()> {
+        self.retained_script.remove(&slot);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -327,6 +418,30 @@ mod tests {
                 assert_eq!(buf.capacity(), cap_before, "buffer regrew at step {step}");
             }
         }
+    }
+
+    /// The retention stash must survive both cursor drift (lockstep decode
+    /// advances every slot) and a weight sync (epoch shift): resuming
+    /// restores exactly the cursor captured at retain time — the mock
+    /// analogue of stale KV staying bound to the params that produced it.
+    #[test]
+    fn retained_script_survives_drift_and_syncs() {
+        let mut be = MockBackend::new(2, 96);
+        be.min_len = 10;
+        be.spread = 1;
+        be.prefill(0, &[1, 7, 7]).unwrap();
+        let stash = be.slot_script[0];
+        be.retain_slot(0).unwrap();
+        let mut buf = Vec::new();
+        for _ in 0..5 {
+            be.decode_into(&[0, 0], &[0, 0], &mut buf).unwrap();
+        }
+        assert_ne!(be.slot_script[0], stash, "live cursor should drift");
+        be.set_params(&[2.0]).unwrap(); // epoch shift
+        be.resume_retained(0).unwrap();
+        assert_eq!(be.slot_script[0], stash, "stash restores the old script");
+        assert_eq!(be.resume_retained_calls, 1);
+        assert!(be.resume_retained(0).is_err(), "stash is consumed on resume");
     }
 
     #[test]

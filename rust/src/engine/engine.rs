@@ -1,6 +1,7 @@
 //! The engine proper: S decode slots driven in lockstep (continuous
-//! batching), an admission queue, KV-budget preemption, and partial-result
-//! flushing for early termination.
+//! batching), an admission queue, KV-budget preemption, partial-result
+//! flushing for early termination, and a KV-retention ledger for
+//! affinity-resumed partials.
 //!
 //! `Engine` is synchronous and backend-generic so the full coordinator
 //! stack is testable with `MockBackend`; `pool.rs` wraps it in a thread and
@@ -13,6 +14,27 @@
 //! [`SamplerScratch`], per-slot output vectors are pre-reserved at
 //! admission, and `busy`/`kv_tokens` are incremental counters maintained on
 //! admit/finish/preempt instead of O(S) slot scans per query.
+//!
+//! # KV retention (the resume-affinity fast path)
+//!
+//! Early termination normally discards a flushed slot's KV, so resuming the
+//! buffered partial later re-prefills every generated token (the paper's
+//! recomputation overhead, §5.4.1). With retention, `stop_generation`
+//! leaves the slot in `SlotState::Retained`: the KV stays resident (still
+//! charged against `kv_budget`), the `Stopped` result carries a retention
+//! token, and a future [`WorkItem`] presenting that token resumes decoding
+//! directly from the retained state — zero replayed tokens. The ledger is
+//! strictly best-effort:
+//!
+//! - retained slots are evicted LIFO under KV-budget pressure (before any
+//!   live sequence is preempted — they are a cache, not work) and when the
+//!   admission queue needs a slot;
+//! - a weight sync invalidates all retained state unless the coordinator
+//!   opts into cross-sync retention (`SetParams::invalidate_retained`);
+//! - a resume whose token no longer names a live retained entry — or whose
+//!   backend-side restore fails — silently falls back to the ordinary
+//!   replay path, so correctness never depends on the coordinator's
+//!   affinity map (or the backend's ledger) being current.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -27,20 +49,33 @@ use crate::util::Rng;
 /// A unit of generation work. `resume` carries previously generated tokens
 /// of a buffered partial trajectory; the engine replays them through decode
 /// to rebuild KV state — the *recomputation cost* of off-policy partials
-/// the paper's §5.4.1 ablates.
+/// the paper's §5.4.1 ablates — unless `retain` names a live retained slot,
+/// in which case the resident KV is reused and nothing is replayed.
 ///
 /// The prompt is shared (`Arc`) with the coordinator's `Trajectory`, so
 /// re-dispatching a buffered partial never deep-copies the prompt.
 #[derive(Clone, Debug)]
 pub struct WorkItem {
+    /// Coordinator-side trajectory id; echoed back in [`WorkResult`].
     pub request_id: u64,
+    /// Prompt tokens (shared with the coordinator's trajectory).
     pub prompt: std::sync::Arc<[i32]>,
+    /// Previously generated tokens to rebuild KV state for (empty for
+    /// fresh work).
     pub resume: Vec<i32>,
     /// Cap on total sequence length (prompt + replay + new tokens).
     pub max_total: usize,
+    /// Sampling parameters for this request.
     pub sampling: SamplingParams,
+    /// Affinity hint: a retention token from a previous `Stopped` flush on
+    /// THIS engine ([`WorkResult::retained`]). When it still names a live
+    /// retained slot matching `request_id` and `resume.len()`, the engine
+    /// resumes from resident KV with zero replay; otherwise it silently
+    /// falls back to the replay path. `None` = plain dispatch.
+    pub retain: Option<u64>,
 }
 
+/// Why a slot's result was reported back to the coordinator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
     /// Sampled EOS — trajectory complete.
@@ -65,17 +100,30 @@ impl FinishReason {
 /// resume tokens — the coordinator owns the full trajectory).
 #[derive(Clone, Debug)]
 pub struct WorkResult {
+    /// The [`WorkItem::request_id`] this result answers.
     pub request_id: u64,
+    /// Tokens generated under this assignment (excludes replayed prefix).
     pub new_tokens: Vec<i32>,
+    /// Behaviour log-prob of each new token (same length as `new_tokens`).
     pub new_logprobs: Vec<f32>,
+    /// Why the slot was released.
     pub reason: FinishReason,
-    /// Resume tokens replayed before new generation began (recompute cost).
+    /// Resume tokens actually recomputed before new generation began (the
+    /// recompute cost; 0 when the resume was served from retained KV).
     pub replayed: usize,
+    /// Set on `Stopped` flushes whose KV stayed resident in the engine:
+    /// the retention token the coordinator must echo in
+    /// [`WorkItem::retain`] to resume from the retained slot.
+    pub retained: Option<u64>,
+    /// True when this assignment resumed from retained KV (affinity hit —
+    /// the whole `resume` prefix was NOT replayed).
+    pub resumed_from_kv: bool,
 }
 
 /// Per-decode-step utilization sample (Fig. 1b data).
 #[derive(Clone, Debug)]
 pub struct StepTrace {
+    /// Engine id the sample came from.
     pub engine: usize,
     /// Seconds since engine start.
     pub t_wall: f64,
@@ -83,20 +131,45 @@ pub struct StepTrace {
     pub dur: f64,
     /// Busy slots this step.
     pub active: usize,
+    /// Total decode slots.
     pub slots: usize,
-    /// KV tokens resident after this step.
+    /// KV tokens resident after this step (live + retained).
     pub kv_tokens: usize,
     /// Cumulative preemption count.
     pub preemptions: u64,
 }
 
+/// Events flowing from engine threads back to the coordinator.
 #[derive(Clone, Debug)]
 pub enum EngineEvent {
-    Done { engine: usize, result: WorkResult },
+    /// A slot finished (terminal, preempted, or flushed).
+    Done {
+        /// Engine id that produced the result.
+        engine: usize,
+        /// The slot's output.
+        result: WorkResult,
+    },
+    /// Per-step utilization sample.
     Trace(StepTrace),
     /// All slots flushed after StopGeneration.
-    Flushed { engine: usize },
-    ShutDown { engine: usize },
+    Flushed {
+        /// Engine id that finished flushing.
+        engine: usize,
+    },
+    /// Engine thread exited.
+    ShutDown {
+        /// Engine id that shut down.
+        engine: usize,
+    },
+    /// A retained slot was dropped (budget/admission eviction or explicit
+    /// release) — the coordinator clears its affinity entry so future
+    /// resumes of that request dispatch by load instead of affinity.
+    RetainedDropped {
+        /// Engine id that dropped the retained slot.
+        engine: usize,
+        /// Request whose retained KV is gone.
+        request_id: u64,
+    },
     /// One step's events delivered in a single channel send (see
     /// `pool::flush`); the coordinator unpacks in `handle_event`.
     Batch(Vec<EngineEvent>),
@@ -104,9 +177,35 @@ pub enum EngineEvent {
 
 /// Commands from the coordinator (used by the threaded pool).
 pub enum EngineCmd {
+    /// Queue a work item for admission.
     Assign(WorkItem),
-    SetParams { version: u64, params: std::sync::Arc<Vec<f32>> },
-    StopGeneration,
+    /// Weight sync: install a new parameter vector.
+    SetParams {
+        /// Policy version the params correspond to (trainer step).
+        version: u64,
+        /// The full parameter vector (shared across engines).
+        params: std::sync::Arc<Vec<f32>>,
+        /// Drop all retained KV first: retained prefixes were computed
+        /// under the OLD params, so unless the coordinator explicitly
+        /// opts into stale-KV continuation (`rollout.retain_kv_across_sync`)
+        /// they must not survive the sync.
+        invalidate_retained: bool,
+    },
+    /// Early termination: flush every busy slot as a partial; when `retain`
+    /// is set, leave each flushed slot's KV resident for affinity resume.
+    StopGeneration {
+        /// Retain flushed slots' KV (see [`Engine::stop_generation`]).
+        retain: bool,
+    },
+    /// Drop one retained slot (the coordinator decided the partial will
+    /// resume elsewhere, or never).
+    ReleaseRetained {
+        /// Request whose retained slot should be freed.
+        request_id: u64,
+        /// Retention token (stale tokens are ignored).
+        token: u64,
+    },
+    /// Terminate the engine thread.
     Shutdown,
 }
 
@@ -114,8 +213,14 @@ struct BusySlot {
     item: WorkItem,
     generated: Vec<i32>,
     logprobs: Vec<f32>,
-    /// Resume tokens fed so far.
+    /// Resume tokens fed so far (mechanical replay cursor; starts at
+    /// `resume.len()` for retained-KV resumes, which feed nothing).
     replay_fed: usize,
+    /// Resume tokens actually recomputed this assignment (the true replay
+    /// cost — 0 for retained-KV resumes).
+    replayed: usize,
+    /// This assignment began from a retained slot (metrics).
+    resumed_from_kv: bool,
     /// Token to feed at the next decode step, at position `pos`.
     next_token: i32,
     pos: i32,
@@ -123,30 +228,65 @@ struct BusySlot {
     admitted_seq: u64,
 }
 
+/// Ledger entry for a flushed slot whose KV stayed resident. Everything a
+/// later resume needs to continue decoding without replay: the pending
+/// next-token feed and its position, plus the validation triple
+/// (request id, token, generated length) the resume item must match.
+struct RetainedSlot {
+    request_id: u64,
+    /// Monotonic retention token; the coordinator must echo it in
+    /// [`WorkItem::retain`] (guards against slot reuse between stop and
+    /// resume).
+    token: u64,
+    /// Pending feed position (the KV holds positions `0..pos`).
+    pos: i32,
+    /// Last sampled token — not yet fed; the resume's first decode feeds
+    /// it at `pos`, exactly where the busy slot left off.
+    next_token: i32,
+    /// Total generated tokens at flush time (`resume.len() + new`); a
+    /// resume item must present exactly this many resume tokens.
+    generated_len: usize,
+    /// Original admission order (LIFO eviction among retained slots).
+    admitted_seq: u64,
+}
+
 enum SlotState {
     Idle,
     Busy(Box<BusySlot>),
+    Retained(RetainedSlot),
 }
 
+/// One inference engine: S decode slots over a [`Backend`], an admission
+/// queue, KV budget enforcement, and the retention ledger.
 pub struct Engine<B: Backend> {
+    /// Engine id (stamped on every event).
     pub id: usize,
     backend: B,
     slots: Vec<SlotState>,
     pending: VecDeque<WorkItem>,
     rng: Rng,
-    /// KV token budget (0 = unlimited). Exceeding it preempts LIFO.
+    /// KV token budget (0 = unlimited). Exceeding it evicts retained slots
+    /// first, then preempts live slots LIFO.
     pub kv_budget: usize,
     admission_counter: u64,
+    retain_counter: u64,
     preemptions: u64,
     t0: Instant,
     /// Cumulative decode steps (cost accounting).
     pub decode_steps: u64,
     /// Cumulative replayed (recomputed) tokens.
     pub replayed_tokens: u64,
+    /// Cumulative resumes served from retained KV (affinity hits).
+    pub retained_resumes: u64,
+    /// Cumulative retained-slot drops (budget/admission eviction, release,
+    /// weight-sync invalidation).
+    pub retained_evictions: u64,
     // -- incremental bookkeeping (invariants maintained by occupy/vacate) --
     /// Busy slot count (== slots.iter().filter(Busy).count()).
     busy_count: usize,
-    /// KV tokens resident (== Σ busy slots (pos + 1)).
+    /// Retained slot count (== slots.iter().filter(Retained).count()).
+    retained_count: usize,
+    /// KV tokens resident (== Σ busy (pos + 1) + Σ retained (pos + 1)).
     kv_resident: usize,
     // -- persistent step scratch (no per-step heap allocation) --------------
     step_tokens: Vec<i32>,
@@ -156,6 +296,8 @@ pub struct Engine<B: Backend> {
 }
 
 impl<B: Backend> Engine<B> {
+    /// Build an engine with `kv_budget` tokens of KV (0 = unlimited) and a
+    /// per-engine-derived RNG seed.
     pub fn new(id: usize, backend: B, kv_budget: usize, seed: u64) -> Engine<B> {
         let s = backend.slots();
         let mut slots = Vec::with_capacity(s);
@@ -170,11 +312,15 @@ impl<B: Backend> Engine<B> {
             rng: Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             kv_budget,
             admission_counter: 0,
+            retain_counter: 0,
             preemptions: 0,
             t0: Instant::now(),
             decode_steps: 0,
             replayed_tokens: 0,
+            retained_resumes: 0,
+            retained_evictions: 0,
             busy_count: 0,
+            retained_count: 0,
             kv_resident: 0,
             step_tokens: vec![0; s],
             step_pos: vec![0; s],
@@ -183,31 +329,44 @@ impl<B: Backend> Engine<B> {
         }
     }
 
+    /// The generation backend (test inspection).
     pub fn backend(&self) -> &B {
         &self.backend
     }
 
+    /// Actively decoding slots (O(1) counter).
     pub fn busy(&self) -> usize {
         self.busy_count
     }
 
+    /// Slots holding retained KV for flushed partials (O(1) counter).
+    pub fn retained(&self) -> usize {
+        self.retained_count
+    }
+
+    /// Work items waiting for admission.
     pub fn queued(&self) -> usize {
         self.pending.len()
     }
 
+    /// Slots neither busy nor retained.
     pub fn free_slots(&self) -> usize {
-        self.slots.len() - self.busy_count
+        self.slots.len() - self.busy_count - self.retained_count
     }
 
+    /// Is there anything to decode or admit? (Retained slots alone are not
+    /// work — the engine idles on its command channel with KV parked.)
     pub fn has_work(&self) -> bool {
         self.busy_count > 0 || !self.pending.is_empty()
     }
 
+    /// Cumulative live-slot preemptions.
     pub fn preemptions(&self) -> u64 {
         self.preemptions
     }
 
-    /// Tokens resident in the KV cache across busy slots (O(1) counter).
+    /// Tokens resident in the KV cache across busy AND retained slots
+    /// (O(1) counter).
     pub fn kv_tokens(&self) -> usize {
         self.kv_resident
     }
@@ -220,7 +379,7 @@ impl<B: Backend> Engine<B> {
         self.slots[i] = SlotState::Busy(b);
     }
 
-    /// Clear slot `i`, maintaining the incremental counters.
+    /// Clear a busy slot `i`, maintaining the incremental counters.
     fn vacate(&mut self, i: usize) -> Option<Box<BusySlot>> {
         match std::mem::replace(&mut self.slots[i], SlotState::Idle) {
             SlotState::Busy(b) => {
@@ -228,7 +387,53 @@ impl<B: Backend> Engine<B> {
                 self.kv_resident -= b.pos as usize + 1;
                 Some(b)
             }
-            SlotState::Idle => None,
+            other => {
+                self.slots[i] = other;
+                None
+            }
+        }
+    }
+
+    /// Drop retained slot `i` back to Idle, releasing its KV charge and
+    /// telling the coordinator (so stale affinity entries get cleared).
+    fn drop_retained_slot(&mut self, i: usize, events: &mut Vec<EngineEvent>) {
+        let SlotState::Retained(_) = self.slots[i] else { return };
+        let SlotState::Retained(rs) = std::mem::replace(&mut self.slots[i], SlotState::Idle)
+        else {
+            unreachable!()
+        };
+        self.retained_count -= 1;
+        self.kv_resident -= rs.pos as usize + 1;
+        self.retained_evictions += 1;
+        let _ = self.backend.release_retained(i);
+        events.push(EngineEvent::RetainedDropped { engine: self.id, request_id: rs.request_id });
+    }
+
+    /// Drop ALL retained slots (weight-sync invalidation: the retained KV
+    /// prefixes were computed under the old params).
+    pub fn invalidate_retained(&mut self, events: &mut Vec<EngineEvent>) {
+        for i in 0..self.slots.len() {
+            if matches!(self.slots[i], SlotState::Retained(_)) {
+                self.drop_retained_slot(i, events);
+            }
+        }
+    }
+
+    /// Explicit coordinator-side release of one retained slot (the partial
+    /// is resuming on another engine, or was evicted from the buffer).
+    /// Stale (request, token) pairs are ignored.
+    pub fn release_retained_request(
+        &mut self,
+        request_id: u64,
+        token: u64,
+        events: &mut Vec<EngineEvent>,
+    ) {
+        let found = self.slots.iter().position(|s| {
+            matches!(s, SlotState::Retained(rs)
+                if rs.request_id == request_id && rs.token == token)
+        });
+        if let Some(i) = found {
+            self.drop_retained_slot(i, events);
         }
     }
 
@@ -249,9 +454,45 @@ impl<B: Backend> Engine<B> {
     /// Early termination: flush every busy slot as a partial and drop the
     /// admission queue back to the caller (unstarted items are NOT partial
     /// trajectories — the coordinator re-queues them as fresh work).
-    pub fn stop_generation(&mut self, events: &mut Vec<EngineEvent>) -> Vec<WorkItem> {
+    ///
+    /// With `retain`, a flushed slot that is fully caught up (its replay —
+    /// if any — finished and it generated at least one token) keeps its KV
+    /// resident as `SlotState::Retained`; its `Stopped` result carries
+    /// the retention token ([`WorkResult::retained`]). Slots stopped
+    /// mid-replay flush plainly — their KV covers only part of the resume
+    /// prefix, which the simple (token, length) validation cannot describe.
+    pub fn stop_generation(
+        &mut self,
+        events: &mut Vec<EngineEvent>,
+        retain: bool,
+    ) -> Vec<WorkItem> {
         for i in 0..self.slots.len() {
-            if let Some(b) = self.vacate(i) {
+            // All busy/kv counter maintenance goes through vacate(); the
+            // retain branch re-installs the identical KV charge below.
+            let Some(b) = self.vacate(i) else { continue };
+            let caught_up = b.replay_fed >= b.item.resume.len() && !b.generated.is_empty();
+            let can_retain =
+                retain && caught_up && self.backend.retain_slot(i).unwrap_or(false);
+            if can_retain {
+                self.retain_counter += 1;
+                let token = self.retain_counter;
+                let rs = RetainedSlot {
+                    request_id: b.item.request_id,
+                    token,
+                    pos: b.pos,
+                    next_token: b.next_token,
+                    generated_len: b.item.resume.len() + b.generated.len(),
+                    admitted_seq: b.admitted_seq,
+                };
+                // The retained slot keeps the vacated slot's exact KV
+                // residency charged against the budget.
+                self.retained_count += 1;
+                self.kv_resident += rs.pos as usize + 1;
+                let mut result = finish(*b, FinishReason::Stopped);
+                result.retained = Some(token);
+                events.push(EngineEvent::Done { engine: self.id, result });
+                self.slots[i] = SlotState::Retained(rs);
+            } else {
                 events.push(EngineEvent::Done {
                     engine: self.id,
                     result: finish(*b, FinishReason::Stopped),
@@ -285,6 +526,14 @@ impl<B: Backend> Engine<B> {
                     self.step_tokens[i] = 0;
                     self.step_pos[i] = 0;
                 }
+                SlotState::Retained(rs) => {
+                    // Park the lane on the pending feed position: whatever
+                    // the lockstep decode writes there is overwritten by
+                    // the resume's first real feed before it is ever
+                    // attended (see `Backend::retain_slot`'s contract).
+                    self.step_tokens[i] = 0;
+                    self.step_pos[i] = rs.pos;
+                }
             }
         }
 
@@ -300,6 +549,7 @@ impl<B: Backend> Engine<B> {
             if b.replay_fed < b.item.resume.len() {
                 // We just fed resume[replay_fed]; keep replaying.
                 b.replay_fed += 1;
+                b.replayed += 1;
                 self.replayed_tokens += 1;
                 if b.replay_fed < b.item.resume.len() {
                     b.next_token = b.item.resume[b.replay_fed];
@@ -342,14 +592,134 @@ impl<B: Backend> Engine<B> {
         Ok(())
     }
 
-    fn admit(&mut self, events: &mut Vec<EngineEvent>) -> Result<()> {
-        for i in 0..self.slots.len() {
-            if self.pending.is_empty() {
-                break;
+    /// First retained slot matching an affinity hint exactly: same request,
+    /// same retention token, and a resume prefix of exactly the retained
+    /// generated length (the trajectory cannot have grown in between, but
+    /// the triple check makes the fast path impossible to hit by accident).
+    fn find_retained(&self, item: &WorkItem) -> Option<usize> {
+        let token = item.retain?;
+        self.slots.iter().position(|s| {
+            matches!(s, SlotState::Retained(rs)
+                if rs.token == token
+                    && rs.request_id == item.request_id
+                    && rs.generated_len == item.resume.len())
+        })
+    }
+
+    /// Most recently admitted retained slot (LIFO eviction victim).
+    fn latest_retained(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                SlotState::Retained(rs) => Some((i, rs.admitted_seq)),
+                _ => None,
+            })
+            .max_by_key(|&(_, seq)| seq)
+            .map(|(i, _)| i)
+    }
+
+    /// Re-activate retained slot `i` for `item`: the pending next-token
+    /// feed picks up exactly where the flushed slot left off, so the token
+    /// stream is bit-identical to an uninterrupted run (and to the replay
+    /// path) — with zero recompute.
+    ///
+    /// Strictly best-effort, like every other retention path: if the
+    /// backend fails to restore the slot, the retained state is dropped
+    /// and the item is handed back for ordinary replay admission — a
+    /// retention problem must never kill the engine thread (`step` errors
+    /// are fatal to it).
+    fn admit_from_retained(&mut self, i: usize, item: WorkItem) -> Option<WorkItem> {
+        let SlotState::Retained(rs) = std::mem::replace(&mut self.slots[i], SlotState::Idle)
+        else {
+            unreachable!("admit_from_retained on a non-retained slot");
+        };
+        // Release the retained charge first so the counters stay consistent
+        // on every exit path; `occupy` re-adds the identical pos+1.
+        self.retained_count -= 1;
+        self.kv_resident -= rs.pos as usize + 1;
+        if let Err(e) = self.backend.resume_retained(i) {
+            self.retained_evictions += 1;
+            let _ = self.backend.release_retained(i);
+            eprintln!(
+                "engine-{}: resume_retained failed ({e:#}); falling back to replay",
+                self.id
+            );
+            return Some(item);
+        }
+        self.admission_counter += 1;
+        // Only NEW tokens land in `generated`; reserve the worst case so
+        // the decode loop's push() never reallocates mid-generation.
+        let out_cap = item.max_total.saturating_sub(item.prompt.len() + item.resume.len());
+        let busy = BusySlot {
+            generated: Vec::with_capacity(out_cap),
+            logprobs: Vec::with_capacity(out_cap),
+            replay_fed: item.resume.len(),
+            replayed: 0,
+            resumed_from_kv: true,
+            next_token: rs.next_token,
+            pos: rs.pos,
+            admitted_seq: self.admission_counter,
+            item,
+        };
+        self.retained_resumes += 1;
+        self.occupy(i, Box::new(busy));
+        None
+    }
+
+    /// Admission-pressure eviction victim: LIFO among retained slots, but
+    /// slots a queued item's hint still targets are spared when possible —
+    /// evicting one of those forces the imminent resume to replay its
+    /// whole prefix, the exact cost retention exists to avoid. If every
+    /// retained slot is targeted, plain LIFO applies: queued work must
+    /// still never starve behind parked KV.
+    fn admission_eviction_victim(&self) -> Option<usize> {
+        let mut untargeted: Option<(usize, u64)> = None;
+        let mut any: Option<(usize, u64)> = None;
+        for (i, s) in self.slots.iter().enumerate() {
+            let SlotState::Retained(rs) = s else { continue };
+            let seq = rs.admitted_seq;
+            if any.map_or(true, |(_, b)| seq > b) {
+                any = Some((i, seq));
             }
-            if matches!(self.slots[i], SlotState::Busy(_)) {
+            let targeted = self.pending.iter().any(|it| {
+                it.retain == Some(rs.token) && it.request_id == rs.request_id
+            });
+            if !targeted && untargeted.map_or(true, |(_, b)| seq > b) {
+                untargeted = Some((i, seq));
+            }
+        }
+        untargeted.or(any).map(|(i, _)| i)
+    }
+
+    fn admit(&mut self, events: &mut Vec<EngineEvent>) -> Result<()> {
+        loop {
+            let Some(front) = self.pending.front() else { break };
+            // 1. Affinity fast path: the hint names a live retained slot.
+            if let Some(i) = self.find_retained(front) {
+                let item = self.pending.pop_front().unwrap();
+                if let Some(item) = self.admit_from_retained(i, item) {
+                    // Backend restore failed; the retained state is gone —
+                    // requeue at the front for ordinary replay admission.
+                    self.pending.push_front(item);
+                }
                 continue;
             }
+            // 2. Ordinary admission into the first idle slot; if none is
+            //    idle but retained slots exist, evict one (LIFO, sparing
+            //    slots that queued hints still target) — queued work must
+            //    never starve behind parked KV.
+            let idle = self.slots.iter().position(|s| matches!(s, SlotState::Idle));
+            let i = match idle {
+                Some(i) => i,
+                None => match self.admission_eviction_victim() {
+                    Some(victim) => {
+                        self.drop_retained_slot(victim, events);
+                        continue;
+                    }
+                    None => break, // every slot busy — wait for a finish
+                },
+            };
             let item = self.pending.pop_front().unwrap();
             self.admission_counter += 1;
             let seq = self.admission_counter;
@@ -364,6 +734,8 @@ impl<B: Backend> Engine<B> {
                         new_logprobs: vec![],
                         reason: FinishReason::LengthCap,
                         replayed: 0,
+                        retained: None,
+                        resumed_from_kv: false,
                     },
                 });
                 continue;
@@ -376,6 +748,8 @@ impl<B: Backend> Engine<B> {
                 generated: Vec::with_capacity(out_cap),
                 logprobs: Vec::with_capacity(out_cap),
                 replay_fed: 0,
+                replayed: 0,
+                resumed_from_kv: false,
                 next_token: 0,
                 pos: plen as i32,
                 admitted_seq: seq,
@@ -426,6 +800,7 @@ impl<B: Backend> Engine<B> {
                 }
                 self.replayed_tokens += fed as u64;
                 busy.replay_fed = fed;
+                busy.replayed = fed;
                 busy.pos = (plen + fed) as i32;
                 if fed == resume.len() {
                     // Replay complete: sample the next new token now.
@@ -463,13 +838,16 @@ impl<B: Backend> Engine<B> {
         Ok(())
     }
 
-    /// Preempt latest-admitted slots (LIFO, like vLLM) while over budget.
-    /// O(S) victim scan per eviction against O(1) counters — the old
-    /// version rescanned every slot for `kv_tokens()`/`busy()` on every
-    /// loop iteration (O(S²) per enforcement pass).
+    /// Enforce the KV budget. Retained slots are a cache: they are evicted
+    /// first (LIFO) — only then are live slots preempted (LIFO, like vLLM).
+    /// O(S) victim scan per eviction against O(1) counters.
     fn enforce_kv_budget(&mut self, events: &mut Vec<EngineEvent>) {
         if self.kv_budget == 0 {
             return;
+        }
+        while self.kv_resident > self.kv_budget && self.retained_count > 0 {
+            let victim = self.latest_retained().unwrap();
+            self.drop_retained_slot(victim, events);
         }
         while self.kv_resident > self.kv_budget && self.busy_count > 1 {
             let victim = self
@@ -478,7 +856,7 @@ impl<B: Backend> Engine<B> {
                 .enumerate()
                 .filter_map(|(i, s)| match s {
                     SlotState::Busy(b) => Some((i, b.admitted_seq)),
-                    SlotState::Idle => None,
+                    _ => None,
                 })
                 .max_by_key(|&(_, seq)| seq)
                 .map(|(i, _)| i)
@@ -500,7 +878,9 @@ fn finish(b: BusySlot, reason: FinishReason) -> WorkResult {
         new_tokens: b.generated,
         new_logprobs: b.logprobs,
         reason,
-        replayed: b.replay_fed,
+        replayed: b.replayed,
+        retained: None,
+        resumed_from_kv: b.resumed_from_kv,
     }
 }
 
@@ -516,6 +896,7 @@ mod tests {
             resume: vec![],
             max_total: 96,
             sampling: SamplingParams::greedy(),
+            retain: None,
         }
     }
 
@@ -540,17 +921,20 @@ mod tests {
     }
 
     /// Recompute the counters from first principles (test-only O(S) scan).
-    fn scan_counters(eng: &Engine<MockBackend>) -> (usize, usize) {
+    fn scan_counters(eng: &Engine<MockBackend>) -> (usize, usize, usize) {
         let busy = eng.slots.iter().filter(|s| matches!(s, SlotState::Busy(_))).count();
+        let retained =
+            eng.slots.iter().filter(|s| matches!(s, SlotState::Retained(_))).count();
         let kv = eng
             .slots
             .iter()
             .map(|s| match s {
                 SlotState::Busy(b) => b.pos as usize + 1,
+                SlotState::Retained(rs) => rs.pos as usize + 1,
                 SlotState::Idle => 0,
             })
             .sum();
-        (busy, kv)
+        (busy, retained, kv)
     }
 
     #[test]
@@ -624,7 +1008,7 @@ mod tests {
             eng.step(&mut ev).unwrap();
         }
         ev.clear();
-        let unstarted = eng.stop_generation(&mut ev);
+        let unstarted = eng.stop_generation(&mut ev, false);
         assert!(unstarted.is_empty());
         let partials: Vec<&WorkResult> = ev
             .iter()
@@ -636,11 +1020,13 @@ mod tests {
         assert_eq!(partials.len(), 2);
         for p in partials {
             assert_eq!(p.reason, FinishReason::Stopped);
+            assert!(p.retained.is_none(), "retain=false must not retain");
             assert!(!p.new_tokens.is_empty());
             assert!(p.new_tokens.len() < 40);
         }
         assert!(matches!(ev.last(), Some(EngineEvent::Flushed { .. })));
         assert_eq!(eng.busy(), 0);
+        assert_eq!(eng.retained(), 0);
         assert_eq!(eng.kv_tokens(), 0);
     }
 
@@ -654,7 +1040,7 @@ mod tests {
         let mut ev = Vec::new();
         eng.step(&mut ev).unwrap(); // admits exactly 1
         ev.clear();
-        let unstarted = eng.stop_generation(&mut ev);
+        let unstarted = eng.stop_generation(&mut ev, false);
         assert_eq!(unstarted.len(), 4);
     }
 
@@ -669,6 +1055,7 @@ mod tests {
         let results = run_to_completion(&mut eng, 200);
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].replayed, 3);
+        assert!(!results[0].resumed_from_kv);
         assert!(!results[0].new_tokens.is_empty());
         assert_eq!(eng.replayed_tokens, 3);
     }
@@ -704,9 +1091,10 @@ mod tests {
         assert!(eng.busy() <= 2, "busy {}", eng.busy());
     }
 
-    /// The incremental busy/kv counters must agree with a from-scratch slot
-    /// scan at every point of a run that exercises admission, decode,
-    /// finish, preemption, and stop_generation.
+    /// The incremental busy/retained/kv counters must agree with a
+    /// from-scratch slot scan at every point of a run that exercises
+    /// admission, decode, finish, preemption, retention, and
+    /// stop_generation.
     #[test]
     fn incremental_counters_match_slot_scans() {
         let mut be = MockBackend::new(4, 96);
@@ -719,18 +1107,27 @@ mod tests {
         let mut ev = Vec::new();
         for _ in 0..60 {
             eng.step(&mut ev).unwrap();
-            let (busy, kv) = scan_counters(&eng);
+            let (busy, retained, kv) = scan_counters(&eng);
             assert_eq!(eng.busy(), busy, "busy counter drifted");
+            assert_eq!(eng.retained(), retained, "retained counter drifted");
             assert_eq!(eng.kv_tokens(), kv, "kv counter drifted");
             ev.clear();
             if !eng.has_work() {
                 break;
             }
         }
-        eng.stop_generation(&mut ev);
-        let (busy, kv) = scan_counters(&eng);
-        assert_eq!((eng.busy(), eng.kv_tokens()), (busy, kv));
-        assert_eq!((busy, kv), (0, 0));
+        eng.stop_generation(&mut ev, true);
+        let (busy, retained, kv) = scan_counters(&eng);
+        assert_eq!(
+            (eng.busy(), eng.retained(), eng.kv_tokens()),
+            (busy, retained, kv)
+        );
+        assert_eq!(busy, 0);
+        // Retained slots (if any) still charge KV.
+        assert_eq!(kv > 0, retained > 0);
+        ev.clear();
+        eng.invalidate_retained(&mut ev);
+        assert_eq!((eng.retained(), eng.kv_tokens()), (0, 0));
     }
 
     #[test]
@@ -770,5 +1167,320 @@ mod tests {
         let be = MockBackend::new(1, 96); // p_max = 24
         let mut eng = Engine::new(0, be, 0, 1);
         assert!(eng.submit(item(1, vec![1; 25])).is_err());
+    }
+
+    // -- KV retention -------------------------------------------------------
+
+    /// Full stream of one request run uninterrupted on a fresh engine
+    /// (tokens ++ logprob bits) — the oracle every retention test compares
+    /// against. The mock script is positional, so any resume strategy that
+    /// is correct must reproduce exactly this stream.
+    fn uninterrupted_stream(prompt: &[i32]) -> (Vec<i32>, Vec<u32>) {
+        let mut be = MockBackend::new(1, 96);
+        be.min_len = 20;
+        be.spread = 1;
+        let mut eng = Engine::new(9, be, 0, 1);
+        eng.submit(item(1, prompt.to_vec())).unwrap();
+        let results = run_to_completion(&mut eng, 200);
+        assert_eq!(results.len(), 1);
+        assert!(results[0].reason.is_complete());
+        (
+            results[0].new_tokens.clone(),
+            results[0].new_logprobs.iter().map(|l| l.to_bits()).collect(),
+        )
+    }
+
+    fn retention_engine() -> Engine<MockBackend> {
+        let mut be = MockBackend::new(1, 96);
+        be.min_len = 20;
+        be.spread = 1; // 20-token scripts: long enough to stop mid-way
+        Engine::new(9, be, 0, 1)
+    }
+
+    /// Stop a running request mid-generation with retention; returns the
+    /// flushed partial (with its token) after asserting the slot retained.
+    fn stop_retaining(eng: &mut Engine<MockBackend>, steps: usize) -> WorkResult {
+        let mut ev = Vec::new();
+        for _ in 0..steps {
+            eng.step(&mut ev).unwrap();
+        }
+        ev.clear();
+        eng.stop_generation(&mut ev, true);
+        let partial = ev
+            .iter()
+            .find_map(|e| match e {
+                EngineEvent::Done { result, .. } => Some(result.clone()),
+                _ => None,
+            })
+            .expect("flushed partial");
+        assert_eq!(partial.reason, FinishReason::Stopped);
+        assert_eq!(eng.retained(), 1);
+        partial
+    }
+
+    /// The tentpole contract at engine level: a retained-KV resume replays
+    /// nothing and produces the bit-identical stream an uninterrupted run
+    /// (and therefore the replay path) produces.
+    #[test]
+    fn retained_resume_is_bit_identical_with_zero_replay() {
+        let prompt = vec![1, 8, 8];
+        let (want_toks, want_lps) = uninterrupted_stream(&prompt);
+
+        let mut eng = retention_engine();
+        eng.submit(item(1, prompt.clone())).unwrap();
+        let partial = stop_retaining(&mut eng, 5);
+        let token = partial.retained.expect("caught-up slot must retain");
+        assert!(!partial.new_tokens.is_empty());
+        assert!(eng.kv_tokens() > 0, "retained KV stays resident");
+
+        // Resume with the affinity hint.
+        let mut it = item(1, prompt);
+        it.resume = partial.new_tokens.clone();
+        it.retain = Some(token);
+        eng.submit(it).unwrap();
+        let results = run_to_completion(&mut eng, 200);
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert!(r.resumed_from_kv, "hint matched — must resume from KV");
+        assert_eq!(r.replayed, 0, "retained resume replays nothing");
+        assert_eq!(eng.replayed_tokens, 0);
+        assert_eq!(eng.retained_resumes, 1);
+        assert_eq!(eng.retained(), 0);
+
+        let full_toks: Vec<i32> =
+            partial.new_tokens.iter().chain(r.new_tokens.iter()).copied().collect();
+        let full_lps: Vec<u32> = partial
+            .new_logprobs
+            .iter()
+            .chain(r.new_logprobs.iter())
+            .map(|l| l.to_bits())
+            .collect();
+        assert_eq!(full_toks, want_toks, "token stream diverged from oracle");
+        assert_eq!(full_lps, want_lps, "logprob bits diverged from oracle");
+    }
+
+    /// A stale hint (slot evicted in between) falls back to replay and
+    /// still reproduces the oracle stream.
+    #[test]
+    fn stale_hint_falls_back_to_replay_bit_identically() {
+        let prompt_a = vec![1, 8, 8];
+        let (want_toks, want_lps) = uninterrupted_stream(&prompt_a);
+
+        let mut eng = retention_engine();
+        eng.submit(item(1, prompt_a.clone())).unwrap();
+        let partial = stop_retaining(&mut eng, 5);
+        let token = partial.retained.unwrap();
+
+        // Fresh work on the single-slot engine evicts the retained slot
+        // (admission must never starve behind parked KV).
+        let mut ev = Vec::new();
+        eng.submit(item(2, vec![1, 4, 4])).unwrap();
+        eng.step(&mut ev).unwrap();
+        assert_eq!(eng.retained(), 0, "admission pressure evicts retained KV");
+        assert!(
+            ev.iter().any(|e| matches!(
+                e,
+                EngineEvent::RetainedDropped { request_id: 1, .. }
+            )),
+            "eviction must notify the coordinator"
+        );
+        assert_eq!(eng.retained_evictions, 1);
+        let _ = run_to_completion(&mut eng, 300); // drain request 2
+
+        // Resume request 1 with the now-stale hint: replay fallback.
+        let mut it = item(1, prompt_a);
+        it.resume = partial.new_tokens.clone();
+        it.retain = Some(token);
+        eng.submit(it).unwrap();
+        let results = run_to_completion(&mut eng, 300);
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert!(!r.resumed_from_kv);
+        assert_eq!(r.replayed, partial.new_tokens.len());
+
+        let full_toks: Vec<i32> =
+            partial.new_tokens.iter().chain(r.new_tokens.iter()).copied().collect();
+        let full_lps: Vec<u32> = partial
+            .new_logprobs
+            .iter()
+            .chain(r.new_logprobs.iter())
+            .map(|l| l.to_bits())
+            .collect();
+        assert_eq!(full_toks, want_toks);
+        assert_eq!(full_lps, want_lps);
+    }
+
+    /// Weight-sync invalidation: after `invalidate_retained` the hint is
+    /// stale and the resume replays (under whatever params are current).
+    #[test]
+    fn invalidation_clears_retention_and_resume_replays() {
+        let prompt = vec![1, 8, 8];
+        let mut eng = retention_engine();
+        eng.submit(item(1, prompt.clone())).unwrap();
+        let partial = stop_retaining(&mut eng, 5);
+        let token = partial.retained.unwrap();
+
+        let mut ev = Vec::new();
+        eng.invalidate_retained(&mut ev);
+        assert_eq!(eng.retained(), 0);
+        assert_eq!(eng.kv_tokens(), 0);
+        assert!(ev
+            .iter()
+            .any(|e| matches!(e, EngineEvent::RetainedDropped { request_id: 1, .. })));
+
+        let mut it = item(1, prompt);
+        it.resume = partial.new_tokens.clone();
+        it.retain = Some(token);
+        eng.submit(it).unwrap();
+        let results = run_to_completion(&mut eng, 300);
+        assert!(!results[0].resumed_from_kv);
+        assert_eq!(results[0].replayed, partial.new_tokens.len());
+    }
+
+    /// Under KV pressure, retained slots are evicted before any live slot
+    /// is preempted.
+    #[test]
+    fn budget_evicts_retained_before_live() {
+        let mut be = MockBackend::new(2, 96);
+        be.min_len = 40;
+        be.spread = 1;
+        let mut eng = Engine::new(0, be, 25, 1); // tight budget, 2 slots
+        eng.submit(item(1, vec![1, 8, 8])).unwrap();
+        let mut ev = Vec::new();
+        for _ in 0..5 {
+            eng.step(&mut ev).unwrap();
+        }
+        ev.clear();
+        eng.stop_generation(&mut ev, true);
+        assert_eq!(eng.retained(), 1);
+
+        // A long-running live sequence pushes kv over budget; the retained
+        // slot must fall before the live one is touched.
+        eng.submit(item(2, vec![1, 9, 9])).unwrap();
+        let mut dropped = false;
+        let mut preempted = false;
+        for _ in 0..40 {
+            let mut ev = Vec::new();
+            eng.step(&mut ev).unwrap();
+            for e in &ev {
+                match e {
+                    EngineEvent::RetainedDropped { request_id: 1, .. } => dropped = true,
+                    EngineEvent::Done { result, .. }
+                        if result.reason == FinishReason::Preempted =>
+                    {
+                        preempted = true
+                    }
+                    _ => {}
+                }
+            }
+            if !eng.has_work() {
+                break;
+            }
+        }
+        assert!(dropped, "retained slot must be evicted under budget pressure");
+        assert!(!preempted, "live slot preempted while retained KV was parked");
+        assert_eq!(eng.retained(), 0);
+    }
+
+    /// `ReleaseRetained` semantics: a matching (request, token) drops the
+    /// slot; stale tokens are ignored.
+    #[test]
+    fn release_retained_request_validates_token() {
+        let prompt = vec![1, 8, 8];
+        let mut eng = retention_engine();
+        eng.submit(item(1, prompt)).unwrap();
+        let partial = stop_retaining(&mut eng, 5);
+        let token = partial.retained.unwrap();
+
+        let mut ev = Vec::new();
+        eng.release_retained_request(1, token + 99, &mut ev); // stale token
+        assert_eq!(eng.retained(), 1);
+        assert!(ev.is_empty());
+        eng.release_retained_request(1, token, &mut ev);
+        assert_eq!(eng.retained(), 0);
+        assert_eq!(eng.kv_tokens(), 0);
+        assert_eq!(ev.len(), 1);
+    }
+
+    /// Admission-pressure eviction spares retained slots that a queued
+    /// item's hint still targets: with both slots retained and the queue
+    /// holding [fresh, hinted-resume], the fresh item must evict the
+    /// UNtargeted slot (even though the targeted one is LIFO-latest) so
+    /// the resume still lands on its retained KV.
+    #[test]
+    fn admission_eviction_spares_hint_targeted_slots() {
+        let mut be = MockBackend::new(2, 96);
+        be.min_len = 20;
+        be.spread = 1;
+        let mut eng = Engine::new(0, be, 0, 1);
+        eng.submit(item(1, vec![1, 8, 8])).unwrap();
+        eng.submit(item(2, vec![1, 4, 4])).unwrap();
+        let mut ev = Vec::new();
+        for _ in 0..5 {
+            eng.step(&mut ev).unwrap();
+        }
+        ev.clear();
+        eng.stop_generation(&mut ev, true);
+        assert_eq!(eng.retained(), 2);
+        // Request 2 admitted after request 1 → its slot is LIFO-latest,
+        // i.e. the default eviction victim.
+        let p2 = ev
+            .iter()
+            .find_map(|e| match e {
+                EngineEvent::Done { result, .. } if result.request_id == 2 => {
+                    Some(result.clone())
+                }
+                _ => None,
+            })
+            .expect("request 2 partial");
+        let tok2 = p2.retained.expect("retained token");
+
+        eng.submit(item(3, vec![1, 9, 9])).unwrap(); // fresh, needs a slot
+        let mut resume = item(2, vec![1, 4, 4]);
+        resume.resume = p2.new_tokens.clone();
+        resume.retain = Some(tok2);
+        eng.submit(resume).unwrap();
+
+        ev.clear();
+        eng.step(&mut ev).unwrap();
+        assert!(
+            ev.iter().any(|e| matches!(
+                e,
+                EngineEvent::RetainedDropped { request_id: 1, .. }
+            )),
+            "the UNtargeted slot (request 1) must be the eviction victim"
+        );
+        assert_eq!(eng.retained_resumes, 1, "hinted resume must hit its slot");
+        assert_eq!(eng.retained(), 0);
+        assert_eq!(eng.busy(), 2);
+    }
+
+    /// Mid-replay slots (KV covering only part of the resume prefix) must
+    /// NOT retain — the (token, length) validation cannot describe them.
+    #[test]
+    fn mid_replay_slots_flush_without_retention() {
+        let mut be = MockBackend::new(1, 96);
+        be.min_len = 40;
+        be.spread = 1;
+        let mut eng = Engine::new(0, be, 0, 1);
+        let mut it = item(1, vec![1, 8, 8]);
+        it.resume = vec![5; 30]; // long replay: still replaying after 4 steps
+        eng.submit(it).unwrap();
+        let mut ev = Vec::new();
+        for _ in 0..4 {
+            eng.step(&mut ev).unwrap();
+        }
+        ev.clear();
+        eng.stop_generation(&mut ev, true);
+        let partial = ev
+            .iter()
+            .find_map(|e| match e {
+                EngineEvent::Done { result, .. } => Some(result),
+                _ => None,
+            })
+            .unwrap();
+        assert!(partial.retained.is_none(), "mid-replay slot must not retain");
+        assert_eq!(eng.retained(), 0);
+        assert_eq!(eng.kv_tokens(), 0);
     }
 }

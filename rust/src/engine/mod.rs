@@ -1,8 +1,10 @@
 //! The inference-engine substrate (vLLM v0.8.4 stand-in, DESIGN.md table):
 //! slot-based continuous batching over the AOT decode artifact, a KV token
 //! budget with preemption + re-prefill (the paper's "recomputation
-//! overhead"), temperature/top-p/top-k sampling, and per-step utilization
-//! traces (Fig. 1b).
+//! overhead"), KV retention for affinity-resumed partials (the fast path
+//! that skips that recomputation — see `engine::Engine`'s module docs),
+//! temperature/top-p/top-k sampling, and per-step utilization traces
+//! (Fig. 1b).
 //!
 //! Engines run on OS threads and are driven by the coordinator through
 //! mpsc channels; the decode step has *constant* cost regardless of how

@@ -11,10 +11,15 @@ use anyhow::Result;
 use super::backend::Backend;
 use super::engine::{Engine, EngineCmd, EngineEvent};
 
+/// Handle to a set of engine threads: per-engine command channels in, one
+/// shared event channel out.
 pub struct EnginePool {
     senders: Vec<Sender<EngineCmd>>,
+    /// Shared event stream from every engine (prefer the `try_next` /
+    /// `next_before` polls over raw `recv`).
     pub events: Receiver<EngineEvent>,
     handles: Vec<JoinHandle<()>>,
+    /// Decode slots per engine (capacity accounting).
     pub slots_per_engine: usize,
 }
 
@@ -59,6 +64,7 @@ impl EnginePool {
         Ok(EnginePool { senders, events: ev_rx, handles, slots_per_engine })
     }
 
+    /// Number of engine threads.
     pub fn engines(&self) -> usize {
         self.senders.len()
     }
@@ -87,29 +93,52 @@ impl EnginePool {
         self.events.recv_timeout(deadline - now)
     }
 
+    /// Total decode slots across the pool.
     pub fn total_slots(&self) -> usize {
         self.engines() * self.slots_per_engine
     }
 
+    /// Send one command to one engine.
     pub fn send(&self, engine: usize, cmd: EngineCmd) {
         // A dead engine thread surfaces via missing Flushed/Done events;
         // send errors here are secondary.
         let _ = self.senders[engine].send(cmd);
     }
 
-    /// Weight sync to every engine.
-    pub fn broadcast_params(&self, version: u64, params: std::sync::Arc<Vec<f32>>) {
+    /// Weight sync to every engine. `invalidate_retained` drops all
+    /// retained KV first (the default policy: retained prefixes are stale
+    /// w.r.t. the new params); pass `false` only when the coordinator has
+    /// opted into cross-sync retention (`rollout.retain_kv_across_sync`).
+    pub fn broadcast_params(
+        &self,
+        version: u64,
+        params: std::sync::Arc<Vec<f32>>,
+        invalidate_retained: bool,
+    ) {
         for s in &self.senders {
-            let _ = s.send(EngineCmd::SetParams { version, params: params.clone() });
+            let _ = s.send(EngineCmd::SetParams {
+                version,
+                params: params.clone(),
+                invalidate_retained,
+            });
         }
     }
 
+    /// Early-terminate every engine without retaining KV (the replay-only
+    /// baseline path; the frozen reference coordinator uses this).
     pub fn stop_generation_all(&self) {
+        self.stop_generation_all_with(false);
+    }
+
+    /// Early-terminate every engine; with `retain`, flushed slots keep
+    /// their KV resident for affinity resume (see `Engine::stop_generation`).
+    pub fn stop_generation_all_with(&self, retain: bool) {
         for s in &self.senders {
-            let _ = s.send(EngineCmd::StopGeneration);
+            let _ = s.send(EngineCmd::StopGeneration { retain });
         }
     }
 
+    /// Join every engine thread after sending Shutdown.
     pub fn shutdown(self) {
         for s in &self.senders {
             let _ = s.send(EngineCmd::Shutdown);
@@ -181,18 +210,28 @@ fn handle_cmd<B: Backend>(
             }
             false
         }
-        EngineCmd::SetParams { params, .. } => {
+        EngineCmd::SetParams { params, invalidate_retained, .. } => {
+            if invalidate_retained {
+                // Retained KV was computed under the old params — drop it
+                // BEFORE installing the new ones so no resume can observe
+                // a stale prefix under the new policy.
+                engine.invalidate_retained(events);
+            }
             if let Err(e) = engine.set_params(&params) {
                 eprintln!("engine-{}: weight sync failed: {e:#}", engine.id);
             }
             false
         }
-        EngineCmd::StopGeneration => {
+        EngineCmd::StopGeneration { retain } => {
             // Unstarted queue items are re-announced as requeued work via
             // Done events with empty content? No — they were never started;
             // the coordinator tracks its own dispatch list and simply
             // re-queues anything not seen in a Done event after Flushed.
-            let _unstarted = engine.stop_generation(events);
+            let _unstarted = engine.stop_generation(events, retain);
+            false
+        }
+        EngineCmd::ReleaseRetained { request_id, token } => {
+            engine.release_retained_request(request_id, token, events);
             false
         }
         EngineCmd::Shutdown => true,
@@ -239,6 +278,7 @@ mod tests {
             resume: vec![],
             max_total: 96,
             sampling: SamplingParams::default(),
+            retain: None,
         }
     }
 
@@ -378,10 +418,66 @@ mod tests {
         pool.shutdown();
     }
 
+    /// Threaded retention roundtrip: retain on stop, resume by token, and
+    /// get a zero-replay `resumed_from_kv` completion back.
+    #[test]
+    fn retained_stop_then_resume_roundtrip() {
+        let pool = EnginePool::spawn(1, 2, 0, 7, |_id| {
+            Box::new(move || {
+                let mut b = MockBackend::new(2, 96);
+                b.min_len = 40; // long script → guaranteed partial at stop
+                b.spread = 1;
+                b.decode_delay = Some(Duration::from_millis(2));
+                Ok(b)
+            })
+        })
+        .unwrap();
+        pool.send(0, EngineCmd::Assign(item(1)));
+        std::thread::sleep(Duration::from_millis(60));
+        pool.stop_generation_all_with(true);
+
+        let mut queue = VecDeque::new();
+        let mut partial: Option<crate::engine::WorkResult> = None;
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while std::time::Instant::now() < deadline {
+            match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
+                Some(EngineEvent::Done { result, .. })
+                    if result.reason == FinishReason::Stopped =>
+                {
+                    partial = Some(result)
+                }
+                Some(EngineEvent::Flushed { .. }) => break,
+                Some(_) => {}
+                None => break,
+            }
+        }
+        let partial = partial.expect("flushed partial");
+        let token = partial.retained.expect("retained token on stop(retain)");
+
+        let mut it = item(1);
+        it.resume = partial.new_tokens.clone();
+        it.retain = Some(token);
+        pool.send(0, EngineCmd::Assign(it));
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        loop {
+            assert!(std::time::Instant::now() < deadline, "resume timed out");
+            match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
+                Some(EngineEvent::Done { result, .. }) if result.reason.is_complete() => {
+                    assert!(result.resumed_from_kv, "hinted resume must hit retained KV");
+                    assert_eq!(result.replayed, 0);
+                    break;
+                }
+                Some(_) => {}
+                None => {}
+            }
+        }
+        pool.shutdown();
+    }
+
     #[test]
     fn broadcast_params_reaches_engines() {
         let pool = mock_pool(2, 2);
-        pool.broadcast_params(1, std::sync::Arc::new(vec![2.5f32]));
+        pool.broadcast_params(1, std::sync::Arc::new(vec![2.5f32]), true);
         // Indirect check: engines keep working after a sync.
         pool.send(0, EngineCmd::Assign(item(5)));
         let mut queue = VecDeque::new();

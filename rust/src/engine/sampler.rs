@@ -14,9 +14,12 @@
 
 use crate::util::Rng;
 
+/// Sampling hyperparameters for one generation request.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SamplingParams {
+    /// Softmax temperature; ≤ 0 means greedy argmax.
     pub temperature: f64,
+    /// Nucleus mass; 1.0 disables top-p.
     pub top_p: f64,
     /// -1 disables top-k.
     pub top_k: i64,
@@ -30,6 +33,7 @@ impl Default for SamplingParams {
 }
 
 impl SamplingParams {
+    /// Greedy decoding (temperature 0): deterministic argmax, no RNG use.
     pub fn greedy() -> Self {
         SamplingParams { temperature: 0.0, top_p: 1.0, top_k: -1 }
     }
@@ -49,6 +53,7 @@ pub struct SamplerScratch {
 }
 
 impl SamplerScratch {
+    /// Fresh (empty) workspace; sizes itself on first use.
     pub fn new() -> SamplerScratch {
         SamplerScratch::default()
     }

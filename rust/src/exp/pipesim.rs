@@ -72,8 +72,18 @@ pub struct PipeSimSummary {
     pub overlap_secs: f64,
     /// Harvested trajectories spanning more than one policy version.
     pub lagged_trajectories: usize,
+    /// Partials parked in the buffer across all stages.
     pub partials_buffered: usize,
+    /// Buffered partials popped and re-dispatched across all stages.
     pub resumed: usize,
+    /// Resume tokens replayed (recompute cost) across all stages.
+    pub replayed_tokens: u64,
+    /// Resumes served from retained KV (affinity hits).
+    pub retained_hits: usize,
+    /// Affinity-routed resumes that fell back to replay.
+    pub retained_misses: usize,
+    /// Resume tokens never recomputed thanks to retained-KV hits.
+    pub replay_tokens_saved: u64,
 }
 
 fn spawn_coordinator(o: &PipeSimOpts) -> Result<Coordinator> {
@@ -166,6 +176,10 @@ pub fn run(o: &PipeSimOpts, pipeline: bool) -> Result<(PipeSimSummary, Vec<Rollo
         s.lagged_trajectories += out.stats.lagged_trajectories();
         s.partials_buffered += out.stats.partials_buffered;
         s.resumed += out.stats.resumed;
+        s.replayed_tokens += out.stats.replayed_tokens;
+        s.retained_hits += out.stats.retained_hits;
+        s.retained_misses += out.stats.retained_misses;
+        s.replay_tokens_saved += out.stats.replay_tokens_saved;
     }
     coord.shutdown();
     Ok((s, outs))

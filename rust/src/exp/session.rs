@@ -47,6 +47,12 @@ pub struct RunSummary {
     pub sync_secs: f64,
     pub preemptions: u64,
     pub replayed_tokens: u64,
+    /// Resumes served from retained KV across the run (affinity hits).
+    pub retained_hits: usize,
+    /// Affinity-routed resumes that fell back to replay.
+    pub retained_misses: usize,
+    /// Resume tokens never recomputed thanks to retained-KV hits.
+    pub replay_tokens_saved: u64,
     /// Rollout seconds that overlapped trainer compute (pipelined mode).
     pub overlap_secs: f64,
     /// Harvested trajectories spanning more than one policy version.
@@ -237,6 +243,9 @@ impl RlSession {
             util.push(rs.mean_utilization());
             summary.preemptions += rs.preemptions;
             summary.replayed_tokens += rs.replayed_tokens;
+            summary.retained_hits += rs.retained_hits;
+            summary.retained_misses += rs.retained_misses;
+            summary.replay_tokens_saved += rs.replay_tokens_saved;
             summary.overlap_secs += rs.overlap_secs;
             summary.lagged_trajectories += rs.lagged_trajectories();
             summary.reward_curve.push(m.reward_mean);

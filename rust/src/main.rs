@@ -40,6 +40,11 @@ fn usage() -> ! {
            --no-is                  disable cross-stage IS correction\n\
            --pipeline               stage-pipelined execution (overlap\n\
                                     next rollout with the update)\n\
+           --no-retain-kv           disable KV retention + affinity resume\n\
+                                    routing (always re-prefill resumes)\n\
+           --retain-kv-across-sync  keep retained KV valid across weight\n\
+                                    syncs (stale-KV continuation; extra\n\
+                                    off-policy staleness, zero recompute)\n\
            --metrics <path.jsonl>   write per-step metrics\n\
            --set section.key=value  any config override (repeatable)\n\
            --preset <paper|scaled-small|scaled-tiny|sync-baseline|pipelined-small>"
@@ -79,6 +84,12 @@ fn build_config(args: &Args) -> Result<Config> {
     if args.flag("pipeline") {
         cfg.rollout.pipeline = true;
     }
+    if args.flag("no-retain-kv") {
+        cfg.rollout.retain_kv = false;
+    }
+    if args.flag("retain-kv-across-sync") {
+        cfg.rollout.retain_kv_across_sync = true;
+    }
     for kv in args.get_all("set") {
         let (k, v) = kv
             .split_once('=')
@@ -93,7 +104,10 @@ fn run() -> Result<()> {
     if argv.is_empty() {
         usage();
     }
-    let args = Args::parse(argv, &["verbose", "no-is", "no-eval", "pipeline"])?;
+    let args = Args::parse(
+        argv,
+        &["verbose", "no-is", "no-eval", "pipeline", "no-retain-kv", "retain-kv-across-sync"],
+    )?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("");
     match cmd {
         "train" => cmd_train(&args),
@@ -152,6 +166,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         summary.replayed_tokens,
         summary.overlap_secs,
         summary.lagged_trajectories
+    );
+    println!(
+        "kv retention: hits {}  misses {}  replay tokens saved {}",
+        summary.retained_hits, summary.retained_misses, summary.replay_tokens_saved
     );
     if !args.flag("no-eval") {
         let report = sess.evaluate(2)?;

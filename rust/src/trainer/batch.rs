@@ -16,7 +16,9 @@ pub struct PackedSeq {
     /// [T-1] — behaviour log-prob of the predicted token (Eq. 6 concat),
     /// 0 outside the mask.
     pub behav_lp: Vec<f32>,
+    /// Group-relative advantage (Eq. 5), broadcast over the row.
     pub advantage: f32,
+    /// Verifiable reward of this trajectory.
     pub reward: f32,
     /// Tokens of this row generated under an older policy version.
     pub offpolicy_tokens: usize,
@@ -27,10 +29,15 @@ pub struct PackedSeq {
 /// A full training batch (B·G rows) ready for microbatching.
 #[derive(Clone, Debug, Default)]
 pub struct PackedBatch {
+    /// Packed rows, one per trajectory.
     pub rows: Vec<PackedSeq>,
+    /// Masked (response) tokens across all rows.
     pub total_masked_tokens: usize,
+    /// Masked tokens generated under an older policy version.
     pub total_offpolicy_tokens: usize,
+    /// Mean reward over all rows.
     pub reward_mean: f64,
+    /// Rows spanning more than one policy version.
     pub cross_stage_rows: usize,
 }
 

@@ -18,21 +18,35 @@ use crate::util::StageTimer;
 /// Scalar metrics for one training step.
 #[derive(Clone, Debug, Default)]
 pub struct StepMetrics {
+    /// Optimizer step this update produced.
     pub step: i32,
+    /// Mean verifiable reward over the batch.
     pub reward_mean: f64,
+    /// Token-mean policy loss.
     pub loss: f64,
+    /// Token-mean policy entropy (masked positions).
     pub entropy: f64,
+    /// Token-mean IS ratio.
     pub ratio_mean: f64,
+    /// Max IS ratio seen in the batch.
     pub ratio_max: f64,
+    /// Fraction of tokens hitting the PPO clip.
     pub clip_frac: f64,
+    /// Token-mean approximate KL to the behaviour policy.
     pub kl: f64,
+    /// RMS of per-microbatch gradient norms (diagnostic).
     pub grad_norm: f64,
+    /// Masked (response) tokens in the batch.
     pub n_tokens: usize,
+    /// Fraction of masked tokens generated under an older policy version.
     pub offpolicy_frac: f64,
+    /// Rows whose trajectory spans more than one policy version.
     pub cross_stage_rows: usize,
-    /// Stage seconds: cal_logprob, grad, update, sync.
+    /// Cal-logprob stage seconds (the veRL old-log-prob pass).
     pub t_cal_logprob: f64,
+    /// Gradient accumulation stage seconds.
     pub t_grad: f64,
+    /// Adam update stage seconds.
     pub t_update: f64,
     /// Trainer seconds actually overlapped by an in-flight rollout stage
     /// (stage-pipelined mode; clamped to stage-active time by the
@@ -42,13 +56,17 @@ pub struct StepMetrics {
 
 /// Owns the training-side model runtime and device state.
 pub struct Trainer {
+    /// Artifact runtime the training calls execute on.
     pub rt: ModelRuntime,
+    /// Device-resident packed train state (params + Adam moments + step).
     pub state: TrainState,
+    /// Run configuration.
     pub cfg: Config,
     tokenizer: Tokenizer,
 }
 
 impl Trainer {
+    /// Fresh trainer with randomly initialised state.
     pub fn new(cfg: Config, seed: i32) -> Result<Trainer> {
         let mut rt = ModelRuntime::open(&cfg.artifacts_dir, &cfg.model)?;
         rt.warmup(&["init", "logprob", "grad", "accum", "update", "read_metrics", "read_params"])?;
@@ -69,6 +87,7 @@ impl Trainer {
         Ok(Arc::new(self.rt.params_to_host(&self.state.buffer)?))
     }
 
+    /// Current optimizer step (doubles as the policy version).
     pub fn step(&self) -> i32 {
         self.state.step
     }

@@ -1,5 +1,9 @@
 //! JSONL metrics logging for training runs (loss/reward curves, stage
-//! timings) — consumed by EXPERIMENTS.md and the figure benches.
+//! timings, replay/retention accounting) — consumed by EXPERIMENTS.md and
+//! the figure benches. One JSON object per training step; replay cost
+//! (`replayed_tokens`) and the retention fast path's effect
+//! (`retained_hits`/`retained_misses`/`replay_tokens_saved`) are both
+//! logged so resume-affinity bench deltas are auditable per step.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -11,11 +15,13 @@ use super::grpo::StepMetrics;
 use crate::coordinator::RolloutStats;
 use crate::util::json::Obj;
 
+/// Per-step JSONL metrics sink (or a no-op when disabled).
 pub struct MetricsLog {
     out: Option<BufWriter<File>>,
 }
 
 impl MetricsLog {
+    /// Log to `path`, creating parent directories as needed.
     pub fn to_file(path: &Path) -> Result<MetricsLog> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -24,10 +30,12 @@ impl MetricsLog {
         Ok(MetricsLog { out: Some(BufWriter::new(f)) })
     }
 
+    /// A sink that drops everything (the default for ad-hoc sessions).
     pub fn disabled() -> MetricsLog {
         MetricsLog { out: None }
     }
 
+    /// Append one step's metrics as a single JSON line.
     pub fn log_step(
         &mut self,
         m: &StepMetrics,
@@ -58,6 +66,9 @@ impl MetricsLog {
             .int("replayed_tokens", rollout.replayed_tokens as i64)
             .int("partials_buffered", rollout.partials_buffered as i64)
             .int("resumed", rollout.resumed as i64)
+            .int("retained_hits", rollout.retained_hits as i64)
+            .int("retained_misses", rollout.retained_misses as i64)
+            .int("replay_tokens_saved", rollout.replay_tokens_saved as i64)
             .num("t_overlap", m.t_overlap)
             .num("overlap_secs", rollout.overlap_secs)
             .int("lagged_trajs", rollout.lagged_trajectories() as i64)

@@ -10,22 +10,32 @@ use crate::model::{ModelRuntime, TrainState};
 use crate::tasks::{Dataset, Task};
 use crate::tokenizer::{Tokenizer, EOS, PAD};
 
+/// Borrowed-view SFT trainer over the shared runtime and train state.
 pub struct SftTrainer<'a> {
+    /// Artifact runtime (shared with the GRPO trainer).
     pub rt: &'a mut ModelRuntime,
+    /// Device train state (shared step counter with GRPO).
     pub state: &'a mut TrainState,
+    /// SFT learning rate.
     pub lr: f32,
     tokenizer: Tokenizer,
 }
 
+/// Scalar metrics for one SFT step.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SftMetrics {
+    /// Optimizer step this update produced.
     pub step: i32,
+    /// Token-mean cross-entropy loss.
     pub loss: f64,
+    /// Masked (answer) tokens in the step.
     pub n_tokens: usize,
+    /// RMS gradient norm (diagnostic).
     pub grad_norm: f64,
 }
 
 impl<'a> SftTrainer<'a> {
+    /// Borrow the runtime + state for a run of SFT steps.
     pub fn new(rt: &'a mut ModelRuntime, state: &'a mut TrainState, lr: f32) -> SftTrainer<'a> {
         SftTrainer { rt, state, lr, tokenizer: Tokenizer::new() }
     }

@@ -61,6 +61,7 @@ fn count_steady_state_allocs(sampling: SamplingParams, steps: usize) -> u64 {
             resume: vec![],
             max_total: MAX_SEQ,
             sampling,
+            retain: None,
         })
         .unwrap();
     }

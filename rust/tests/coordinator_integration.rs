@@ -134,10 +134,13 @@ fn copris_resumes_buffered_partials_next_stage() {
     check_groups(&out2, 4, 4).unwrap();
     // Cross-stage trajectories exist in stage 2 only if the policy version
     // advanced; without sync_weights the version is unchanged, so segments
-    // merge. Either way, replayed tokens must be > 0 (resumption happened).
+    // merge. Either way, resumption must be visible in the accounting:
+    // as replayed tokens (replay path) or as replay tokens saved
+    // (retained-KV affinity hits — on by default).
+    assert!(out2.stats.resumed > 0, "buffer pops not counted: {:?}", out2.stats);
     assert!(
-        out2.stats.replayed_tokens > 0,
-        "resumption should replay buffered tokens: {:?}",
+        out2.stats.replayed_tokens + out2.stats.replay_tokens_saved > 0,
+        "resumption cost/saving invisible: {:?}",
         out2.stats
     );
     let _ = out1;

@@ -4,7 +4,11 @@
 //! convergence run (EXPERIMENTS.md records the real runs).
 
 use copris::config::{scaled_preset, RolloutMode};
+use copris::engine::{
+    Backend, Engine, EngineEvent, FinishReason, SamplingParams, WorkItem, WorkResult, XlaBackend,
+};
 use copris::exp::RlSession;
+use copris::model::ModelRuntime;
 
 fn have_artifacts() -> bool {
     let ok = std::path::Path::new("artifacts/tiny/manifest.json").exists();
@@ -75,6 +79,119 @@ fn full_pipeline_sync_baseline() {
     assert_eq!(summary.replayed_tokens, 0);
     assert_eq!(sess.coord.buffered(), 0);
     sess.shutdown();
+}
+
+/// Single-threaded XLA engine over the tiny artifacts with deterministic
+/// (seeded) init params — both arms of the retention test build identical
+/// engines.
+fn xla_engine() -> Engine<XlaBackend> {
+    let mut rt = ModelRuntime::open("artifacts", "tiny").unwrap();
+    let state = rt.init_state(3).unwrap();
+    let params = rt.params_to_host(&state).unwrap();
+    drop(rt);
+    let be = XlaBackend::open("artifacts", "tiny", &params).unwrap();
+    Engine::new(0, be, 0, 7)
+}
+
+fn drive_to_terminal(eng: &mut Engine<XlaBackend>, max_steps: usize) -> WorkResult {
+    let mut ev = Vec::new();
+    for _ in 0..max_steps {
+        eng.step(&mut ev).unwrap();
+        for e in ev.drain(..) {
+            if let EngineEvent::Done { result, .. } = e {
+                if result.reason.is_complete() {
+                    return result;
+                }
+            }
+        }
+    }
+    panic!("no terminal result within {max_steps} steps");
+}
+
+/// The real-backend half of the retention contract: `XlaBackend` claims
+/// retention is free because the per-slot KV is device-resident and the
+/// engine's parked-position discipline keeps it intact (a write-then-attend
+/// kernel never exposes the dummy write at the pending feed position). The
+/// mock-backed golden tests cannot verify that claim — this artifact-gated
+/// test does: a greedy run stopped mid-way and resumed from retained KV
+/// must reproduce the uninterrupted run's token stream exactly, with zero
+/// replayed tokens.
+#[test]
+fn xla_retained_resume_matches_uninterrupted_stream() {
+    if !have_artifacts() {
+        return;
+    }
+    let prompt: Vec<i32> = vec![1, 5, 6];
+    let sampling = SamplingParams::greedy();
+    let item = |id: u64, prompt: &[i32], resume: Vec<i32>, retain: Option<u64>, cap: usize| {
+        WorkItem {
+            request_id: id,
+            prompt: prompt.to_vec().into(),
+            resume,
+            max_total: cap,
+            sampling,
+            retain,
+        }
+    };
+
+    // Oracle: the uninterrupted greedy run (identical init params).
+    let mut control = xla_engine();
+    let cap = control.backend().max_seq().min(prompt.len() + 24);
+    control.submit(item(1, &prompt, vec![], None, cap)).unwrap();
+    let want = drive_to_terminal(&mut control, 200);
+
+    // Retained arm: stop after a few decode steps, resume from the slot.
+    let mut eng = xla_engine();
+    eng.submit(item(1, &prompt, vec![], None, cap)).unwrap();
+    let mut ev = Vec::new();
+    for _ in 0..4 {
+        eng.step(&mut ev).unwrap();
+    }
+    ev.clear();
+    eng.stop_generation(&mut ev, true);
+    let partial = ev.iter().find_map(|e| match e {
+        EngineEvent::Done { result, .. } if result.reason == FinishReason::Stopped => {
+            Some(result.clone())
+        }
+        _ => None,
+    });
+    let Some(partial) = partial else {
+        // The (random-init) model terminated within 4 steps — nothing to
+        // retain this run; the mock-backed tests still pin the machinery.
+        eprintln!("skipping: run completed before the stop landed");
+        return;
+    };
+    let token = partial.retained.expect("caught-up XLA slot must retain");
+    assert!(eng.kv_tokens() > 0, "retained KV must stay charged");
+
+    // THE risky phase of the contract: run a full unrelated request while
+    // the slot is parked. Every lockstep decode step stages the retained
+    // slot at its pending feed position with a dummy token — a kernel that
+    // attends that dummy write (or otherwise disturbs the parked lane)
+    // corrupts the retained prefix, and the resume below catches it.
+    if eng.backend().slots() >= 2 {
+        let other: Vec<i32> = vec![1, 9, 4];
+        let other_cap = eng.backend().max_seq().min(other.len() + 24);
+        eng.submit(item(2, &other, vec![], None, other_cap)).unwrap();
+        let _ = drive_to_terminal(&mut eng, 200);
+        assert_eq!(eng.retained(), 1, "parked slot must survive other work");
+    } else {
+        eprintln!("single-slot artifact: parked-lane decode stress skipped");
+    }
+
+    eng.submit(item(1, &prompt, partial.new_tokens.clone(), Some(token), cap)).unwrap();
+    let done = drive_to_terminal(&mut eng, 200);
+    assert!(done.resumed_from_kv, "hinted resume must hit retained KV");
+    assert_eq!(done.replayed, 0, "retained resume must replay nothing");
+
+    let full: Vec<i32> =
+        partial.new_tokens.iter().chain(done.new_tokens.iter()).copied().collect();
+    assert_eq!(
+        full, want.new_tokens,
+        "retained-KV resume diverged from the uninterrupted XLA run — \
+         the backend's write-then-attend retention contract is violated"
+    );
+    assert_eq!(done.reason, want.reason);
 }
 
 #[test]

@@ -26,6 +26,7 @@ fn run_engine_single_slot(
             resume: vec![],
             max_total: MAX_SEQ,
             sampling,
+            retain: None,
         })
         .unwrap();
     }
@@ -120,6 +121,7 @@ fn multi_slot_runs_are_bitwise_reproducible() {
                 resume: vec![],
                 max_total: MAX_SEQ,
                 sampling: SamplingParams::default(),
+                retain: None,
             })
             .unwrap();
         }

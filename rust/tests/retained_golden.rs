@@ -1,0 +1,387 @@
+//! Golden equivalence for the KV-retention resume path.
+//!
+//! The contract: whether a buffered partial resumes via retained KV
+//! (affinity hit, zero replay) or via chunked/per-token replay, the
+//! harvested trajectories are BIT-IDENTICAL — same tokens, same behaviour
+//! log-prob bits. Determinism setup mirrors `rollout_golden.rs`: greedy
+//! sampling (no RNG), 1 engine × 1 slot (completion order == dispatch
+//! order), positional mock scripts (a partial cut at any timing-dependent
+//! position resumes to the same final stream). See that file's header for
+//! why multi-slot partial-mode arms must NOT be added to bit-identical
+//! reference comparisons.
+//!
+//! Covered here:
+//! - retained resume vs the frozen replay-only `ReferenceCoordinator`
+//!   (bit-identical, with the fast path PROVEN taken: hits > 0, zero
+//!   replayed tokens in the live arm);
+//! - weight-sync invalidation: between stages (bit-identical to the
+//!   reference, hits drop to zero) AND with the stage driver active — the
+//!   pipelined "mid-flight" regime, including the abort/leftover-restore
+//!   interaction (invariants only there: pre-sync admissions are
+//!   legitimately timing-dependent);
+//! - `rollout.retain_kv_across_sync`: stale-KV continuation stays on the
+//!   fast path across a sync and keeps every trajectory invariant intact;
+//! - eviction pressure (tight KV budget, retained-on vs retained-off live
+//!   drivers) degrades gracefully to replay with identical outputs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use copris::config::{Config, RolloutMode};
+use copris::coordinator::{Coordinator, ReferenceCoordinator, RolloutOutput};
+use copris::engine::{EnginePool, MockBackend};
+use copris::tasks::Dataset;
+
+const MAX_SEQ: usize = 96;
+
+fn spawn_pool(
+    engines: usize,
+    slots: usize,
+    kv_budget: usize,
+    seed: u64,
+    min_len: usize,
+    spread: usize,
+    delay_us: u64,
+) -> EnginePool {
+    EnginePool::spawn(engines, slots, kv_budget, seed, move |_id| {
+        Box::new(move || {
+            let mut b = MockBackend::new(slots, MAX_SEQ);
+            b.min_len = min_len;
+            b.spread = spread;
+            if delay_us > 0 {
+                b.decode_delay = Some(Duration::from_micros(delay_us));
+            }
+            Ok(b)
+        })
+    })
+    .unwrap()
+}
+
+/// Greedy single-file CoPRIS config with over-generation, so every stage
+/// early-terminates with a partial in flight (which the live driver
+/// retains and the next stage resumes).
+fn retained_cfg() -> Config {
+    let mut cfg = Config::new("mock");
+    cfg.rollout.mode = RolloutMode::Copris;
+    cfg.rollout.batch_prompts = 3;
+    cfg.rollout.group_size = 2;
+    cfg.rollout.concurrency = 4; // > B·G needed per stage → always in flight
+    cfg.rollout.temperature = 0.0; // greedy → streams scripted, no RNG
+    cfg.engine.engines = 1;
+    cfg.train.seed = 5;
+    cfg
+}
+
+/// Canonical stage fingerprint, invariant to completion order and
+/// trajectory ids (same as rollout_golden.rs).
+type Fingerprint = Vec<(String, usize, Vec<(Vec<i32>, Vec<u32>)>)>;
+
+fn fingerprint(out: &RolloutOutput) -> Fingerprint {
+    let mut groups: Vec<_> = out
+        .groups
+        .iter()
+        .map(|g| {
+            let mut streams: Vec<(Vec<i32>, Vec<u32>)> = g
+                .done
+                .iter()
+                .map(|t| {
+                    (
+                        t.tokens.clone(),
+                        t.behavior_logprobs().iter().map(|l| l.to_bits()).collect(),
+                    )
+                })
+                .collect();
+            streams.sort();
+            (g.task.prompt.clone(), g.target, streams)
+        })
+        .collect();
+    groups.sort();
+    groups
+}
+
+/// THE acceptance check: retained-KV resume (live driver, retention on by
+/// default) is bit-identical to the frozen replay-only reference across
+/// multiple stages — and the fast path really ran: the live arm resumed
+/// every buffered partial from retained KV (zero replayed tokens), while
+/// the reference paid the replay cost for the same resumes.
+#[test]
+fn retained_resume_matches_replay_reference_bitwise() {
+    let cfg = retained_cfg();
+    assert!(cfg.rollout.retain_kv, "retention must be the default");
+    let mut live = Coordinator::new(
+        spawn_pool(1, 1, 0, cfg.train.seed, 4, 6, 200),
+        cfg.clone(),
+        MAX_SEQ,
+    );
+    let mut reference = ReferenceCoordinator::new(
+        spawn_pool(1, 1, 0, cfg.train.seed, 4, 6, 200),
+        cfg.clone(),
+        MAX_SEQ,
+    );
+    let mut ds_live = Dataset::train(cfg.train.seed);
+    let mut ds_ref = Dataset::train(cfg.train.seed);
+    let mut hits = 0usize;
+    let mut saved = 0u64;
+    let mut live_replayed = 0u64;
+    let mut ref_replayed = 0u64;
+    for stage in 0..3 {
+        let a = live.rollout_stage(&mut ds_live).unwrap();
+        let b = reference.rollout_stage(&mut ds_ref).unwrap();
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "retained resume diverged from replay reference at stage {stage}"
+        );
+        hits += a.stats.retained_hits;
+        saved += a.stats.replay_tokens_saved;
+        live_replayed += a.stats.replayed_tokens;
+        ref_replayed += b.stats.replayed_tokens;
+        assert_eq!(a.stats.retained_misses, 0, "no evictions/syncs → no misses");
+    }
+    // The fast path must actually have been exercised: stage 1 retains its
+    // flushed slot, stage 2 pops that partial first (oldest version) and
+    // the hint admits it straight into the retained slot.
+    assert!(hits > 0, "no retained-KV hits across 3 stages");
+    assert!(saved > 0, "hits with zero tokens saved");
+    assert_eq!(
+        live_replayed, 0,
+        "retained arm replayed tokens despite affinity hits everywhere"
+    );
+    assert!(
+        ref_replayed > 0,
+        "reference arm should have paid replay for the same resumes"
+    );
+    live.shutdown();
+    reference.shutdown();
+}
+
+/// Mid-flight weight sync: retention must be invalidated (default
+/// `retain_kv_across_sync = false`), the resume falls back to replay under
+/// the new params, and outputs stay bit-identical to the replay-only
+/// reference performing the same sync.
+#[test]
+fn weight_sync_invalidates_retention_bitwise() {
+    let cfg = retained_cfg();
+    let mut live = Coordinator::new(
+        spawn_pool(1, 1, 0, cfg.train.seed, 4, 6, 200),
+        cfg.clone(),
+        MAX_SEQ,
+    );
+    let mut reference = ReferenceCoordinator::new(
+        spawn_pool(1, 1, 0, cfg.train.seed, 4, 6, 200),
+        cfg.clone(),
+        MAX_SEQ,
+    );
+    let mut ds_live = Dataset::train(cfg.train.seed);
+    let mut ds_ref = Dataset::train(cfg.train.seed);
+
+    let a1 = live.rollout_stage(&mut ds_live).unwrap();
+    let b1 = reference.rollout_stage(&mut ds_ref).unwrap();
+    assert_eq!(fingerprint(&a1), fingerprint(&b1), "stage 1");
+    assert!(live.buffered() > 0, "over-generation must leave partials");
+    assert!(live.retained_partials() > 0, "stage end must retain the partial");
+
+    // The sync drops engine-side retained KV and the coordinator's
+    // affinity map alike.
+    let params = Arc::new(vec![1.5f32]);
+    live.sync_weights(1, params.clone());
+    reference.sync_weights(1, params);
+    assert_eq!(live.retained_partials(), 0, "sync must clear the affinity map");
+
+    let a2 = live.rollout_stage(&mut ds_live).unwrap();
+    let b2 = reference.rollout_stage(&mut ds_ref).unwrap();
+    assert_eq!(
+        fingerprint(&a2),
+        fingerprint(&b2),
+        "post-sync resume diverged from replay reference"
+    );
+    assert_eq!(a2.stats.retained_hits, 0, "invalidated retention produced hits");
+    assert_eq!(a2.stats.replay_tokens_saved, 0);
+    assert!(
+        a2.stats.replayed_tokens > 0,
+        "post-sync resume must pay replay: {:?}",
+        a2.stats
+    );
+    live.shutdown();
+    reference.shutdown();
+}
+
+/// MID-FLIGHT invalidation: a sync while the stage driver is ACTIVE (the
+/// pipelined regime — `sync_weights` lands between `begin_stage` and the
+/// stage's completion) must clear the affinity map immediately and must
+/// not be resurrected by the drain's leftover restore (which is guarded on
+/// the dispatch-time policy version); the stage still delivers exactly B
+/// invariant-correct groups either way. Timing-dependent quantities (how
+/// many pre-sync hinted dispatches the engine admitted before SetParams
+/// arrived — those are legitimate FIFO-ordered hits) are deliberately not
+/// asserted.
+#[test]
+fn midflight_sync_invalidates_under_active_stage() {
+    let cfg = retained_cfg();
+    let mut coord = Coordinator::new(
+        spawn_pool(1, 1, 0, cfg.train.seed, 8, 8, 400),
+        cfg.clone(),
+        MAX_SEQ,
+    );
+    let mut ds = Dataset::train(cfg.train.seed);
+    let _ = coord.rollout_stage(&mut ds).unwrap(); // leaves a retained partial
+
+    let check = |out: &RolloutOutput| {
+        assert_eq!(out.groups.len(), 3);
+        for grp in &out.groups {
+            for t in &grp.done {
+                assert!(t.complete && t.invariant_ok());
+                let mut prev = t.born_version;
+                for s in &t.segments {
+                    assert!(s.policy_version >= prev, "non-decreasing versions");
+                    prev = s.policy_version;
+                }
+            }
+        }
+    };
+
+    // Sync with the driver active: the hinted resume is already dispatched.
+    coord.begin_stage(&mut ds).unwrap();
+    coord.sync_weights(1, Arc::new(vec![1.5f32]));
+    assert_eq!(
+        coord.retained_partials(),
+        0,
+        "mid-flight sync must clear the affinity map"
+    );
+    check(&coord.run_stage_to_completion(&mut ds).unwrap());
+
+    // Abort path: begin → mid-flight sync → abort. Depending on timing the
+    // in-flight hinted Assign was either unstarted (the version-guarded
+    // leftover restore must NOT resurrect its invalidated hint) or already
+    // admitted and re-flushed under the new version (legitimate fresh
+    // retention). Both outcomes must leave a coordinator that resumes
+    // every partial into a correct next stage.
+    coord.begin_stage(&mut ds).unwrap();
+    coord.sync_weights(2, Arc::new(vec![2.5f32]));
+    coord.abort_stage().unwrap();
+    assert!(
+        coord.retained_partials() <= coord.buffered(),
+        "affinity entries without a buffered partial"
+    );
+    check(&coord.rollout_stage(&mut ds).unwrap());
+    coord.shutdown();
+}
+
+/// `retain_kv_across_sync = true`: the resume stays on the retained-KV
+/// fast path ACROSS the sync (continuing from state computed under the old
+/// params — the deliberate off-policy trade). Outputs are not compared to
+/// the replay reference (they differ by design: replay re-prefills under
+/// the NEW params); instead every structural invariant is checked and the
+/// fast path is proven taken.
+#[test]
+fn retain_across_sync_continues_from_stale_kv() {
+    let mut cfg = retained_cfg();
+    cfg.rollout.retain_kv_across_sync = true;
+    let mut coord = Coordinator::new(
+        spawn_pool(1, 1, 0, cfg.train.seed, 4, 6, 200),
+        cfg.clone(),
+        MAX_SEQ,
+    );
+    let mut ds = Dataset::train(cfg.train.seed);
+    let _ = coord.rollout_stage(&mut ds).unwrap();
+    if coord.retained_partials() == 0 {
+        // Vanishingly unlikely with over-generation; not an error.
+        coord.shutdown();
+        return;
+    }
+    coord.sync_weights(1, Arc::new(vec![1.5f32]));
+    assert!(
+        coord.retained_partials() > 0,
+        "across-sync retention must survive the sync"
+    );
+    let out2 = coord.rollout_stage(&mut ds).unwrap();
+    assert!(
+        out2.stats.retained_hits > 0,
+        "across-sync resume should hit retained KV: {:?}",
+        out2.stats
+    );
+    for grp in &out2.groups {
+        for t in &grp.done {
+            assert!(t.complete && t.invariant_ok());
+            assert_eq!(t.behavior_logprobs().len(), t.tokens.len(), "Eq. 6 concat");
+            let mut prev = t.born_version;
+            for s in &t.segments {
+                assert!(s.policy_version >= prev, "non-decreasing segment versions");
+                prev = s.policy_version;
+            }
+        }
+    }
+    coord.shutdown();
+}
+
+/// Eviction pressure: an eval between stages floods the single slot with
+/// fresh eval work, which DETERMINISTICALLY evicts the retained slot
+/// (queued work never starves behind parked KV), the engine's
+/// `RetainedDropped` clears the coordinator's affinity map mid-eval, and
+/// the post-eval resume falls back to replay — bit-identical to a live
+/// driver that never retained. (Budget-pressure eviction ordering —
+/// retained before live, LIFO — is pinned deterministically by the engine
+/// unit tests; the frozen reference is not used here because its
+/// drain-leftover parking order is HashMap-dependent under multi-partial
+/// drains — see rollout_golden.rs's header.)
+#[test]
+fn eviction_pressure_degrades_to_replay_bitwise() {
+    let cfg_on = retained_cfg();
+    let mut cfg_off = cfg_on.clone();
+    cfg_off.rollout.retain_kv = false;
+
+    let mut on = Coordinator::new(
+        spawn_pool(1, 1, 0, cfg_on.train.seed, 4, 6, 200),
+        cfg_on.clone(),
+        MAX_SEQ,
+    );
+    let mut off = Coordinator::new(
+        spawn_pool(1, 1, 0, cfg_on.train.seed, 4, 6, 200),
+        cfg_off,
+        MAX_SEQ,
+    );
+    let mut ds_on = Dataset::train(cfg_on.train.seed);
+    let mut ds_off = Dataset::train(cfg_on.train.seed);
+
+    let a1 = on.rollout_stage(&mut ds_on).unwrap();
+    let b1 = off.rollout_stage(&mut ds_off).unwrap();
+    assert_eq!(fingerprint(&a1), fingerprint(&b1), "stage 1");
+    assert!(on.retained_partials() > 0, "stage end must retain the partial");
+
+    // Eval work floods the slot → the retained slot is evicted to admit
+    // it; the drop event clears the affinity entry during the eval pump.
+    let suite = &copris::tasks::eval_suites()[0];
+    let tasks = suite.tasks(2, 9);
+    let sampling = copris::engine::SamplingParams::greedy();
+    let ga = on.run_fixed_sync(&tasks, 2, sampling).unwrap();
+    let gb = off.run_fixed_sync(&tasks, 2, sampling).unwrap();
+    assert_eq!(ga.len(), gb.len());
+    assert_eq!(
+        on.retained_partials(),
+        0,
+        "eval admission pressure must evict retained KV and clear affinity"
+    );
+    assert_eq!(on.buffered(), off.buffered(), "eval must not touch the buffer");
+
+    // Post-eval resume: no hint survives → plain replay, identical output.
+    let a2 = on.rollout_stage(&mut ds_on).unwrap();
+    let b2 = off.rollout_stage(&mut ds_off).unwrap();
+    assert_eq!(
+        fingerprint(&a2),
+        fingerprint(&b2),
+        "post-eviction resume diverged from the replay-only driver"
+    );
+    assert_eq!(a2.stats.retained_hits, 0, "evicted retention produced hits");
+    assert!(
+        a2.stats.replayed_tokens > 0,
+        "post-eviction resume must pay replay: {:?}",
+        a2.stats
+    );
+    for grp in &a2.groups {
+        for t in &grp.done {
+            assert!(t.complete && t.invariant_ok());
+        }
+    }
+    on.shutdown();
+    off.shutdown();
+}

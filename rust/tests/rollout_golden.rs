@@ -225,9 +225,14 @@ fn reference_eval_steals_training_partials() {
 
 /// Satellite fix: `RolloutStats::resumed` counts buffer pops (it was
 /// never incremented before — "set by caller" that no caller set).
+/// KV retention is disabled here so the companion `replayed_tokens`
+/// assertion exercises the replay accounting it was written for (with
+/// retention on, resumes hit retained KV and the cost moves to
+/// `replay_tokens_saved` — pinned by tests/retained_golden.rs).
 #[test]
 fn resumed_counts_buffer_pops() {
-    let cfg = partial_heavy_cfg();
+    let mut cfg = partial_heavy_cfg();
+    cfg.rollout.retain_kv = false;
     let mut coord = Coordinator::new(spawn_pool(1, 4, 7, 15, 30, 300), cfg, MAX_SEQ);
     let mut ds = Dataset::train(7);
     let out1 = coord.rollout_stage(&mut ds).unwrap();

@@ -23,6 +23,9 @@ fi
 
 export COPRIS_BENCH_JSON="$ROOT/BENCH_micro.json"
 # The bench targets are harness=false binaries: `cargo bench --bench micro`
-# runs micro.rs::main(), which prints the table and writes the JSON.
+# runs micro.rs::main(), which prints the table and writes the JSON fresh.
 cargo bench --manifest-path "$MANIFEST" --bench micro "$@"
+# resume_affinity APPENDS its rows to the same file (micro writes `rows`
+# last, so the bench splices before the closing bracket).
+cargo bench --manifest-path "$MANIFEST" --bench resume_affinity
 echo "bench_micro: wrote $COPRIS_BENCH_JSON"

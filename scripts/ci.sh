@@ -1,10 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verification (what .github/workflows/ci.yml runs):
-#   cargo build --release --all-targets && cargo test -q
-# --all-targets keeps benches/examples/bins compiling so they cannot rot.
+#   cargo build --release --all-targets && cargo doc && cargo test -q
+# --all-targets keeps benches/examples/bins compiling so they cannot rot;
+# the rustdoc step runs with warnings-as-errors so crate docs (missing_docs
+# in the documented module trees, broken intra-doc links — the anchors
+# docs/ARCHITECTURE.md points at) cannot rot either.
 #
-# Optional: `scripts/ci.sh --bench` additionally runs the micro bench and
-# refreshes BENCH_micro.json (the repo's perf trajectory file).
+# Modes:
+#   scripts/ci.sh            full tier-1 (build + doc + test)
+#   scripts/ci.sh --docs     rustdoc gate only (the CI `rustdoc` job)
+#   scripts/ci.sh --bench    full tier-1, then refresh BENCH_micro.json
 set -euo pipefail
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$ROOT"
@@ -21,13 +26,25 @@ if [ -z "$MANIFEST" ]; then
   exit 1
 fi
 
+run_docs() {
+  echo "== tier-1: cargo doc --no-deps (rustdoc warnings are errors) =="
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --manifest-path "$MANIFEST"
+}
+
+if [ "${1:-}" = "--docs" ]; then
+  run_docs
+  echo "ci: docs OK"
+  exit 0
+fi
+
 echo "== tier-1: cargo build --release --all-targets =="
 cargo build --release --all-targets --manifest-path "$MANIFEST"
+run_docs
 echo "== tier-1: cargo test -q =="
 cargo test -q --manifest-path "$MANIFEST"
 
 if [ "${1:-}" = "--bench" ]; then
-  echo "== micro bench → BENCH_micro.json =="
+  echo "== micro + resume_affinity benches → BENCH_micro.json =="
   "$ROOT/scripts/bench_micro.sh"
 fi
 
