@@ -139,6 +139,7 @@ fn main() {
             max_total: 8192,
             sampling: SamplingParams::default(),
             retain: None,
+            prefix: None,
         })
         .unwrap();
     }
@@ -157,6 +158,10 @@ fn main() {
         active: 4,
         slots: 4,
         kv_tokens: 128,
+        kv_blocks: 8,
+        kv_frag: 0.0,
+        prefix_tokens_shared: 0,
+        cow_copies: 0,
         preemptions: 0,
     };
     let (tx, rx) = std::sync::mpsc::channel::<EngineEvent>();

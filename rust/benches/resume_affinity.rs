@@ -31,7 +31,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use copris::bench::{fmt_secs, render_table};
+use copris::bench::{fmt_secs, merge_bench_rows, render_table};
 use copris::config::{Config, RolloutMode};
 use copris::coordinator::Coordinator;
 use copris::engine::{EnginePool, MockBackend};
@@ -76,10 +76,10 @@ fn run_arm(o: &ArmOpts) -> ArmResult {
     cfg.train.seed = 11;
     let slots = 4;
     let decode = Duration::from_micros(o.decode_us);
-    let pool = EnginePool::spawn(
+    let pool = EnginePool::spawn_kv(
         cfg.engine.engines,
         slots,
-        cfg.engine.kv_budget_tokens,
+        cfg.engine.kv_cache_config(),
         cfg.train.seed,
         move |_id| {
             Box::new(move || {
@@ -115,69 +115,6 @@ fn run_arm(o: &ArmOpts) -> ArmResult {
     r.wall = t0.elapsed().as_secs_f64();
     coord.shutdown();
     r
-}
-
-/// Split a `…,"rows":[ {row},{row},… ]}` document into (prefix up to and
-/// including the `[`, row-object strings). Row objects are flat — every
-/// writer in this repo emits them with no nested braces and no braces
-/// inside strings — so a depth counter over `{`/`}` is sufficient.
-fn split_rows(doc: &str) -> Option<(&str, Vec<String>)> {
-    let body = doc.strip_suffix("]}")?;
-    let key = "\"rows\":[";
-    let idx = body.rfind(key)?;
-    let head_end = idx + key.len();
-    let rows_text = &body[head_end..];
-    let mut rows = Vec::new();
-    let mut depth = 0usize;
-    let mut start = 0usize;
-    for (i, c) in rows_text.char_indices() {
-        match c {
-            '{' => {
-                if depth == 0 {
-                    start = i;
-                }
-                depth += 1;
-            }
-            '}' if depth > 0 => {
-                depth -= 1;
-                if depth == 0 {
-                    rows.push(rows_text[start..=i].to_string());
-                }
-            }
-            _ => {}
-        }
-    }
-    Some((&doc[..head_end], rows))
-}
-
-/// Merge rows into `BENCH_micro.json` (written by the micro bench, whose
-/// `rows` array is always the final key, so the document ends with `]}`).
-/// Idempotent: any previous `resume_affinity` rows are replaced, so running
-/// this bench standalone (or repeatedly) never accumulates duplicates.
-/// Falls back to a standalone document when the file is missing or not in
-/// the expected shape.
-fn append_bench_rows(path: &str, rows: &[String]) {
-    let existing = std::fs::read_to_string(path).unwrap_or_default();
-    let doc = match split_rows(existing.trim_end()) {
-        Some((head, old_rows)) => {
-            let mut all: Vec<String> = old_rows
-                .into_iter()
-                .filter(|r| !r.contains("\"path\":\"resume_affinity"))
-                .collect();
-            all.extend(rows.iter().cloned());
-            format!("{head}{}]}}\n", all.join(","))
-        }
-        None => {
-            Obj::new()
-                .str("bench", "resume_affinity")
-                .str("generated_by", "scripts/bench_micro.sh")
-                .raw("rows", &format!("[{}]", rows.join(",")))
-                .finish()
-                + "\n"
-        }
-    };
-    std::fs::write(path, doc).expect("write BENCH json");
-    eprintln!("resume_affinity: merged {} rows into {path}", rows.len());
 }
 
 fn main() {
@@ -267,6 +204,6 @@ fn main() {
                     .finish()
             })
             .collect();
-        append_bench_rows(&path, &entries);
+        merge_bench_rows(&path, "resume_affinity", "resume_affinity", &entries);
     }
 }

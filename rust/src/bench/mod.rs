@@ -54,6 +54,69 @@ pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
     out
 }
 
+/// Split a `…,"rows":[ {row},{row},… ]}` document into (prefix up to and
+/// including the `[`, row-object strings). Row objects are flat — every
+/// writer in this repo emits them with no nested braces and no braces
+/// inside strings — so a depth counter over `{`/`}` is sufficient.
+pub fn split_rows(doc: &str) -> Option<(&str, Vec<String>)> {
+    let body = doc.strip_suffix("]}")?;
+    let key = "\"rows\":[";
+    let idx = body.rfind(key)?;
+    let head_end = idx + key.len();
+    let rows_text = &body[head_end..];
+    let mut rows = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in rows_text.char_indices() {
+        match c {
+            '{' => {
+                if depth == 0 {
+                    start = i;
+                }
+                depth += 1;
+            }
+            '}' if depth > 0 => {
+                depth -= 1;
+                if depth == 0 {
+                    rows.push(rows_text[start..=i].to_string());
+                }
+            }
+            _ => {}
+        }
+    }
+    Some((&doc[..head_end], rows))
+}
+
+/// Merge `rows` into the BENCH_micro.json at `path` (the micro bench
+/// writes `rows` as the final key, so the document ends with `]}`).
+/// Idempotent: any previous rows whose `"path"` value starts with
+/// `row_prefix` are replaced, so running a bench standalone (or
+/// repeatedly) never accumulates duplicates. Falls back to a standalone
+/// `bench`-named document when the file is missing or not in the expected
+/// shape.
+pub fn merge_bench_rows(path: &str, bench: &str, row_prefix: &str, rows: &[String]) {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let marker = format!("\"path\":\"{row_prefix}");
+    let doc = match split_rows(existing.trim_end()) {
+        Some((head, old_rows)) => {
+            let mut all: Vec<String> =
+                old_rows.into_iter().filter(|r| !r.contains(&marker)).collect();
+            all.extend(rows.iter().cloned());
+            format!("{head}{}]}}\n", all.join(","))
+        }
+        None => {
+            crate::util::json::Obj::new()
+                .str("bench", bench)
+                .str("generated_by", "scripts/bench_micro.sh")
+                .raw("rows", &format!("[{}]", rows.join(",")))
+                .finish()
+                + "\n"
+        }
+    };
+    std::fs::write(path, doc).expect("write BENCH json");
+    eprintln!("{bench}: merged {} rows into {path}", rows.len());
+}
+
 /// Format seconds compactly (µs/ms/s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -98,5 +161,43 @@ mod tests {
         assert!(fmt_secs(5e-6).ends_with("µs"));
         assert!(fmt_secs(5e-3).ends_with("ms"));
         assert!(fmt_secs(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn split_rows_roundtrips() {
+        let doc = r#"{"bench":"micro","rows":[{"path":"a","mean_s":1},{"path":"b","mean_s":2}]}"#;
+        let (head, rows) = split_rows(doc).unwrap();
+        assert!(head.ends_with("\"rows\":["));
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].contains("\"path\":\"a\""));
+        assert!(split_rows("not json").is_none());
+        let empty = r#"{"bench":"micro","rows":[]}"#;
+        let (_, rows) = split_rows(empty).unwrap();
+        assert!(rows.is_empty());
+    }
+
+    /// merge_bench_rows must be idempotent: re-merging rows with the same
+    /// prefix replaces, never accumulates; rows of other benches survive.
+    #[test]
+    fn merge_bench_rows_is_idempotent() {
+        let dir = std::env::temp_dir().join("copris-test-bench-merge");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH.json");
+        let p = path.to_str().unwrap();
+        std::fs::write(
+            &path,
+            "{\"bench\":\"micro\",\"rows\":[{\"path\":\"sampler\",\"mean_s\":1}]}\n",
+        )
+        .unwrap();
+        let row = |name: &str, v: i64| format!("{{\"path\":\"kvb {name}\",\"mean_s\":{v}}}");
+        merge_bench_rows(p, "kvb", "kvb ", &[row("x", 1), row("y", 2)]);
+        merge_bench_rows(p, "kvb", "kvb ", &[row("x", 3)]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let (_, rows) = split_rows(text.trim_end()).unwrap();
+        assert_eq!(rows.len(), 2, "{text}");
+        assert!(rows.iter().any(|r| r.contains("\"path\":\"sampler\"")), "{text}");
+        assert!(rows.iter().any(|r| r.contains("\"path\":\"kvb x\"") && r.contains(":3")), "{text}");
+        assert!(!rows.iter().any(|r| r.contains("\"path\":\"kvb y\"")), "{text}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

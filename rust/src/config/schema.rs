@@ -112,10 +112,32 @@ impl Default for RolloutConfig {
 pub struct EngineConfig {
     /// Number of engine threads ("GPUs").
     pub engines: usize,
-    /// KV token budget per engine; admitted requests beyond it trigger
-    /// preemption + re-prefill (the paper's recomputation overhead).
-    /// 0 = unlimited.
+    /// DEPRECATED: token-denominated KV budget per engine. Since the paged
+    /// KV-cache subsystem the budget is blocks-denominated
+    /// (`kv_budget_blocks`); a non-zero value here is converted with
+    /// ceil(tokens / kv_block_size) when `kv_budget_blocks` is 0, so old
+    /// TOML/CLI configs keep working (a one-line warning is printed when
+    /// set through `Config::set`). 0 = unlimited.
     pub kv_budget_tokens: usize,
+    /// KV budget per engine in blocks of `kv_block_size` tokens
+    /// (0 = unlimited, or fall back to the deprecated `kv_budget_tokens`).
+    /// Exceeding it sheds residency cheapest-first: shared-prefix registry
+    /// entries, retained slots, then live preemption + re-prefill (the
+    /// paper's recomputation overhead); fresh admission backpressures.
+    pub kv_budget_blocks: usize,
+    /// Tokens per KV block (vLLM-style paging granularity).
+    pub kv_block_size: usize,
+    /// Share a GRPO group's prompt-prefix KV blocks across its G samples
+    /// (refcounted, copy-on-write; default on). No backend call changes:
+    /// in deterministic configurations (greedy sampling, or a single
+    /// engine with an unconstrained budget) token/logprob streams are
+    /// bit-identical either way — pinned by
+    /// `rust/tests/retained_golden.rs`. The knob also routes a group's
+    /// samples to its home engine and changes budget-gated admission
+    /// timing, so stochastic multi-engine runs may sample in a different
+    /// order (same per-trajectory distribution, like any scheduling
+    /// knob).
+    pub prefix_sharing: bool,
     /// Max new tokens per response (paper: 15360; scaled by model max_seq).
     pub max_new_tokens: usize,
     /// Resume buffered partials via the chunked `replay` artifact instead
@@ -128,8 +150,37 @@ impl Default for EngineConfig {
         EngineConfig {
             engines: 2,
             kv_budget_tokens: 0,
+            kv_budget_blocks: 0,
+            kv_block_size: crate::engine::DEFAULT_BLOCK_SIZE,
+            prefix_sharing: true,
             max_new_tokens: 0,
             chunked_replay: false,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The effective blocks-denominated budget: `kv_budget_blocks` when
+    /// set, else the deprecated `kv_budget_tokens` converted with
+    /// ceil(tokens / kv_block_size) — resolved lazily so TOML/CLI key
+    /// order cannot change the result. 0 = unlimited.
+    pub fn budget_blocks(&self) -> usize {
+        if self.kv_budget_blocks > 0 {
+            self.kv_budget_blocks
+        } else if self.kv_budget_tokens > 0 {
+            self.kv_budget_tokens.div_ceil(self.kv_block_size.max(1))
+        } else {
+            0
+        }
+    }
+
+    /// The paged-KV configuration the engine pool runs with
+    /// (`EnginePool::spawn_kv`).
+    pub fn kv_cache_config(&self) -> crate::engine::KvCacheConfig {
+        crate::engine::KvCacheConfig {
+            block_size: self.kv_block_size.max(1),
+            budget_blocks: self.budget_blocks(),
+            prefix_sharing: self.prefix_sharing,
         }
     }
 }
@@ -245,7 +296,26 @@ impl Config {
                 self.rollout.affinity_max_imbalance = parse_usize()?
             }
             ("engine", "engines") => self.engine.engines = parse_usize()?,
-            ("engine", "kv_budget_tokens") => self.engine.kv_budget_tokens = parse_usize()?,
+            ("engine", "kv_budget_tokens") => {
+                self.engine.kv_budget_tokens = parse_usize()?;
+                if self.engine.kv_budget_tokens > 0 {
+                    eprintln!(
+                        "config: engine.kv_budget_tokens is deprecated — the KV budget is \
+                         blocks-denominated now; {} tokens will run as \
+                         ceil(tokens / engine.kv_block_size) blocks (set \
+                         engine.kv_budget_blocks to silence this)",
+                        self.engine.kv_budget_tokens
+                    );
+                }
+            }
+            ("engine", "kv_budget_blocks") => self.engine.kv_budget_blocks = parse_usize()?,
+            ("engine", "kv_block_size") => {
+                self.engine.kv_block_size = parse_usize()?;
+                if self.engine.kv_block_size == 0 {
+                    bail!("engine.kv_block_size must be >= 1");
+                }
+            }
+            ("engine", "prefix_sharing") => self.engine.prefix_sharing = parse_bool()?,
             ("engine", "max_new_tokens") => self.engine.max_new_tokens = parse_usize()?,
             ("engine", "chunked_replay") => self.engine.chunked_replay = parse_bool()?,
             ("train", "steps") => self.train.steps = parse_usize()?,
@@ -316,6 +386,20 @@ impl Config {
         s.push_str(&format!("| Stage pipelining | {} |\n", r.pipeline));
         s.push_str(&format!("| KV retention (affinity resume) | {} |\n", r.retain_kv));
         s.push_str(&format!("| Retain KV across sync | {} |\n", r.retain_kv_across_sync));
+        let eng = &self.engine;
+        s.push_str("| **Engine / Paged KV Cache** | |\n");
+        s.push_str(&format!("| Engines | {} |\n", eng.engines));
+        s.push_str(&format!("| KV block size (tokens) | {} |\n", eng.kv_block_size));
+        // Both denominations, so legacy token-budget configs can audit the
+        // conversion (blocks = ceil(tokens / block size)).
+        let blocks = eng.budget_blocks();
+        let budget = if blocks == 0 {
+            "unlimited".to_string()
+        } else {
+            format!("{} blocks ({} tokens)", blocks, blocks * eng.kv_block_size)
+        };
+        s.push_str(&format!("| KV budget | {budget} |\n"));
+        s.push_str(&format!("| Prompt prefix sharing (COW) | {} |\n", eng.prefix_sharing));
         s.push_str("| **Training Configuration** | |\n");
         s.push_str(&format!("| Global batch size | {} |\n", r.batch_prompts));
         s.push_str("| Optimizer | Adam |\n");
@@ -382,6 +466,50 @@ mod tests {
         let c2 = Config::from_toml_str(doc).unwrap();
         assert!(!c2.rollout.retain_kv);
         assert!(c2.rollout.retain_kv_across_sync);
+    }
+
+    #[test]
+    fn paged_kv_defaults_and_overrides() {
+        let mut c = Config::new("tiny");
+        assert_eq!(c.engine.kv_block_size, crate::engine::DEFAULT_BLOCK_SIZE);
+        assert!(c.engine.prefix_sharing, "prefix sharing is the default");
+        assert_eq!(c.engine.budget_blocks(), 0, "default budget unlimited");
+        c.set("engine.kv_block_size", "8").unwrap();
+        c.set("engine.kv_budget_blocks", "12").unwrap();
+        c.set("engine.prefix_sharing", "off").unwrap();
+        assert_eq!(c.engine.budget_blocks(), 12);
+        let kv = c.engine.kv_cache_config();
+        assert_eq!(kv.block_size, 8);
+        assert_eq!(kv.budget_blocks, 12);
+        assert!(!kv.prefix_sharing);
+        assert!(c.set("engine.kv_block_size", "0").is_err());
+    }
+
+    /// Back-compat: old token-denominated budgets parse and convert with
+    /// ceil(tokens / block size), regardless of key order, and the Table-3
+    /// echo prints both denominations.
+    #[test]
+    fn legacy_token_budget_converts_to_blocks() {
+        let mut c = Config::new("tiny");
+        c.set("engine.kv_budget_tokens", "100").unwrap();
+        assert_eq!(c.engine.budget_blocks(), 7, "ceil(100/16)");
+        // Block size set AFTER the token budget still applies (lazy
+        // resolution).
+        c.set("engine.kv_block_size", "32").unwrap();
+        assert_eq!(c.engine.budget_blocks(), 4, "ceil(100/32)");
+        // An explicit blocks budget wins over the legacy tokens value.
+        c.set("engine.kv_budget_blocks", "9").unwrap();
+        assert_eq!(c.engine.budget_blocks(), 9);
+        // TOML path hits the same setters.
+        let doc = "[engine]\nkv_budget_tokens = 48\n";
+        let c2 = Config::from_toml_str(doc).unwrap();
+        assert_eq!(c2.engine.budget_blocks(), 3);
+        let table = c2.render_table();
+        assert!(table.contains("3 blocks (48 tokens)"), "{table}");
+        assert!(table.contains("KV block size"), "{table}");
+        assert!(table.contains("Prompt prefix sharing"), "{table}");
+        let unlimited = Config::new("tiny").render_table();
+        assert!(unlimited.contains("| KV budget | unlimited |"), "{unlimited}");
     }
 
     #[test]

@@ -2,6 +2,13 @@
 //! is *complete* when all G trajectories reached a terminal state; early
 //! termination fires when B groups are complete. Completed trajectories of
 //! still-active groups remain here across stages (the second half of Eq. 7).
+//!
+//! The group id doubles as the **shared-prefix handle**
+//! ([`crate::engine::WorkItem::prefix`]): all G samples carry it, so the
+//! engine's paged KV cache charges the group's prompt-prefix blocks once.
+//! [`GroupBook::record_complete`] returning `true` (the group just
+//! completed) is the coordinator's signal to release the engines' prefix
+//! registry entries for that id.
 
 use std::collections::HashMap;
 

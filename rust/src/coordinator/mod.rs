@@ -13,6 +13,12 @@
 //!   (`rollout.retain_kv`), the resume is routed back there and skips
 //!   re-prefill entirely, falling back to replay on eviction, weight-sync
 //!   invalidation, or load imbalance (`rollout.affinity_max_imbalance`).
+//! - **Shared-prefix group dispatch** (`engine.prefix_sharing`): every
+//!   sample of a GRPO group carries the group id as a prefix handle and is
+//!   routed to the group's home engine, so the engines' paged KV cache
+//!   (`engine::kvcache`) charges the prompt-prefix blocks once per group
+//!   (refcounted, copy-on-write); resumes route by block residency, and
+//!   the registry entry is released when the group completes.
 //!
 //! Baselines implemented by the same driver: fully-synchronous (veRL) and
 //! naive partial rollout (Kimi-K1.5-style fixed initial concurrency).

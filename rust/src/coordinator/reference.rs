@@ -117,6 +117,7 @@ impl ReferenceCoordinator {
             max_total: self.max_total_for(traj.prompt.len()),
             sampling,
             retain: None, // API-compat: the reference always replays
+            prefix: None, // API-compat: the reference never shares prefixes
         };
         self.engine_load[engine] += 1;
         self.inflight.insert(traj.id, InFlight { traj, engine });

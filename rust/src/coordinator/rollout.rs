@@ -60,6 +60,17 @@ pub struct RolloutStats {
     /// Resume tokens NOT recomputed thanks to retained-KV hits — the
     /// replay work the affinity fast path avoided.
     pub replay_tokens_saved: u64,
+    /// Peak KV blocks in use on any one engine during the stage (the
+    /// paged residency the blocks-denominated budget governs; shared
+    /// blocks count once).
+    pub kv_blocks_peak: usize,
+    /// Prompt tokens attached from a shared group prefix instead of
+    /// freshly charged, across all engines this stage.
+    pub prefix_tokens_shared: u64,
+    /// Copy-on-write block copies across all engines this stage (the cost
+    /// side of prefix sharing: one partial-tail copy per diverging
+    /// sample).
+    pub cow_copies: u64,
     /// Per-engine-step utilization samples.
     pub traces: Vec<StepTrace>,
     /// Response length of every trajectory completed this stage.
@@ -90,6 +101,24 @@ impl RolloutStats {
     /// Harvested trajectories that span more than one policy version.
     pub fn lagged_trajectories(&self) -> usize {
         self.version_lag_hist[1..].iter().sum()
+    }
+
+    /// Mean internal fragmentation of the engines' KV block chains across
+    /// the stage's step traces (0.0 when nothing was resident).
+    pub fn mean_kv_frag(&self) -> f64 {
+        let mut n = 0usize;
+        let mut sum = 0.0f64;
+        for t in &self.traces {
+            if t.kv_blocks > 0 {
+                n += 1;
+                sum += t.kv_frag;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
     }
 }
 
@@ -142,6 +171,23 @@ pub struct Coordinator {
     /// entry exists iff the partial's last `Stopped` flush retained KV and
     /// no sync/eviction/route has cleared it since.
     retained_at: HashMap<u64, RetainedRef>,
+    /// Engines that received dispatches for a group, in first-dispatch
+    /// order — `[0]` is the group's HOME engine, where its prompt blocks
+    /// were first registered; later samples (and resumed partials of the
+    /// group) prefer it so the prefix refcount actually shares —
+    /// block-residency routing, with the same imbalance guard as
+    /// retained-KV affinity. Usually one entry; more under imbalance
+    /// spill. On group completion every listed engine gets
+    /// `EngineCmd::ReleasePrefix` so registry entries don't linger until
+    /// the next weight sync. Only populated when `engine.prefix_sharing`
+    /// is on.
+    prefix_homes: HashMap<u64, Vec<usize>>,
+    /// Latest cumulative (prefix_tokens_shared, cow_copies) observed per
+    /// engine (from step traces)…
+    kv_seen: Vec<(u64, u64)>,
+    /// …and the snapshot taken at `begin_stage`, so `finish_stage` can
+    /// report per-stage deltas of the engines' lifetime counters.
+    kv_base: Vec<(u64, u64)>,
     next_traj_id: u64,
     /// Current policy version (== trainer step); bumped by `sync_weights`.
     pub policy_version: u64,
@@ -165,6 +211,9 @@ impl Coordinator {
             inflight: HashMap::new(),
             engine_load: vec![0; engines],
             retained_at: HashMap::new(),
+            prefix_homes: HashMap::new(),
+            kv_seen: vec![(0, 0); engines],
+            kv_base: vec![(0, 0); engines],
             next_traj_id: 0,
             policy_version: 0,
             tokenizer: Tokenizer::new(),
@@ -230,30 +279,60 @@ impl Coordinator {
             .unwrap_or(0)
     }
 
-    /// Affinity-aware routing: a trajectory whose KV is retained on its
-    /// home engine goes back there (with the retention token as the resume
-    /// hint) unless that engine's load exceeds the least-loaded engine by
-    /// more than `rollout.affinity_max_imbalance` — then the retained slot
-    /// is released remotely and the dispatch falls back to least-loaded.
+    /// Residency-aware routing, best residency first:
+    /// 1. a trajectory whose KV is retained on its home engine goes back
+    ///    there (with the retention token as the resume hint) — zero
+    ///    replay;
+    /// 2. otherwise a trajectory whose GROUP has prompt blocks registered
+    ///    on a home engine goes there, so the prompt prefix actually
+    ///    shares (block-residency routing — resumes route by where blocks
+    ///    live, not only by whole-slot retention);
+    /// 3. otherwise least-loaded.
+    /// Both residency routes yield when the target engine's load exceeds
+    /// the least-loaded engine's by more than
+    /// `rollout.affinity_max_imbalance`; an abandoned retained slot is
+    /// released remotely so it stops charging that engine's KV.
     /// Returns `(engine, retain_hint)`.
     fn route(&mut self, traj: &Trajectory) -> (usize, Option<u64>) {
         let least = self.least_loaded_engine();
-        let Some(r) = self.retained_at.remove(&traj.id) else { return (least, None) };
         let max_imbalance = self.cfg.rollout.affinity_max_imbalance;
-        if self.cfg.rollout.retain_kv
-            && self.engine_load[r.engine] <= self.engine_load[least] + max_imbalance
-        {
-            return (r.engine, Some(r.token));
+        if let Some(r) = self.retained_at.remove(&traj.id) {
+            if self.cfg.rollout.retain_kv
+                && self.engine_load[r.engine] <= self.engine_load[least] + max_imbalance
+            {
+                return (r.engine, Some(r.token));
+            }
+            // Imbalance fallback: free the remote retained slot so it
+            // stops charging that engine's KV, then fall through to the
+            // block-residency / least-loaded routes.
+            self.pool.send(
+                r.engine,
+                EngineCmd::ReleaseRetained { request_id: traj.id, token: r.token },
+            );
         }
-        // Imbalance fallback: generate wherever is least loaded, and free
-        // the remote retained slot so it stops charging that engine's KV.
-        self.pool
-            .send(r.engine, EngineCmd::ReleaseRetained { request_id: traj.id, token: r.token });
+        if self.cfg.engine.prefix_sharing {
+            let home = self.prefix_homes.get(&traj.group_id).and_then(|h| h.first()).copied();
+            if let Some(home) = home {
+                if self.engine_load[home] <= self.engine_load[least] + max_imbalance {
+                    return (home, None);
+                }
+            }
+        }
         (least, None)
     }
 
     fn dispatch(&mut self, traj: Trajectory, sampling: SamplingParams) {
         let (engine, retain) = self.route(&traj);
+        // Shared-prefix handle: every sample of a group carries the group
+        // id, so the engine charges the prompt blocks once per group.
+        let prefix = if self.cfg.engine.prefix_sharing { Some(traj.group_id) } else { None };
+        if prefix.is_some() {
+            // First entry == the group's home engine (route() reads [0]).
+            let homes = self.prefix_homes.entry(traj.group_id).or_default();
+            if !homes.contains(&engine) {
+                homes.push(engine);
+            }
+        }
         let item = WorkItem {
             request_id: traj.id,
             // Arc clone — re-dispatching a buffered partial shares the
@@ -263,6 +342,7 @@ impl Coordinator {
             max_total: self.max_total_for(traj.prompt.len()),
             sampling,
             retain,
+            prefix,
         };
         self.engine_load[engine] += 1;
         let version = self.policy_version;
@@ -337,6 +417,9 @@ impl Coordinator {
     /// follow with `pump` until done, then `finish_stage`.
     pub fn begin_stage(&mut self, dataset: &mut Dataset) -> Result<()> {
         ensure!(self.driver.is_none(), "rollout stage already active");
+        // Paged-KV delta baseline: engine counters are cumulative, stage
+        // stats report the difference from here.
+        self.kv_base.clone_from(&self.kv_seen);
         let cfg = self.cfg.rollout.clone();
         let sampling = SamplingParams {
             temperature: cfg.temperature,
@@ -630,6 +713,19 @@ impl Coordinator {
         let end = drv.done_at.unwrap_or_else(Instant::now);
         stats.wall = end.duration_since(drv.t0).as_secs_f64();
         stats.overlap_secs = stats.overlap_secs.min(stats.wall);
+        // Per-stage paged-KV deltas of the engines' cumulative counters.
+        stats.prefix_tokens_shared = self
+            .kv_seen
+            .iter()
+            .zip(&self.kv_base)
+            .map(|(s, b)| s.0.saturating_sub(b.0))
+            .sum();
+        stats.cow_copies = self
+            .kv_seen
+            .iter()
+            .zip(&self.kv_base)
+            .map(|(s, b)| s.1.saturating_sub(b.1))
+            .sum();
         Ok(RolloutOutput { groups, stats })
     }
 
@@ -686,7 +782,18 @@ impl Coordinator {
                 }
                 return Ok(flushed);
             }
-            EngineEvent::Trace(t) => self.drv_mut().stats.traces.push(t),
+            EngineEvent::Trace(t) => {
+                // The engine's prefix/COW counters are cumulative over its
+                // lifetime; remember the latest so finish_stage can report
+                // per-stage deltas against the begin_stage snapshot.
+                if let Some(seen) = self.kv_seen.get_mut(t.engine) {
+                    seen.0 = seen.0.max(t.prefix_tokens_shared);
+                    seen.1 = seen.1.max(t.cow_copies);
+                }
+                let d = self.drv_mut();
+                d.stats.kv_blocks_peak = d.stats.kv_blocks_peak.max(t.kv_blocks);
+                d.stats.traces.push(t);
+            }
             EngineEvent::Flushed { .. } => return Ok(1),
             EngineEvent::ShutDown { .. } => {}
             EngineEvent::RetainedDropped { engine, request_id } => {
@@ -732,8 +839,21 @@ impl Coordinator {
                 match result.reason {
                     FinishReason::Eos | FinishReason::LengthCap => {
                         traj.complete = true;
+                        let gid = traj.group_id;
                         self.drv_mut().stats.response_lengths.push(traj.len());
-                        self.book.record_complete(traj)?;
+                        let group_complete = self.book.record_complete(traj)?;
+                        if group_complete {
+                            // No more samples will attach this group's
+                            // prompt blocks: release its registry entries
+                            // (engines that never saw the group — or
+                            // already pressure-evicted the entry — ignore
+                            // the command).
+                            if let Some(homes) = self.prefix_homes.remove(&gid) {
+                                for e in homes {
+                                    self.pool.send(e, EngineCmd::ReleasePrefix { key: gid });
+                                }
+                            }
+                        }
                     }
                     FinishReason::Preempted => {
                         self.drv_mut().stats.preemptions += 1;

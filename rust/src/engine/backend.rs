@@ -70,6 +70,24 @@ pub trait Backend {
     fn release_retained(&mut self, _slot: usize) -> Result<()> {
         Ok(())
     }
+    /// Mirror `slot`'s logical KV block chain (see `engine::kvcache`) to
+    /// the backend: `blocks` covers `len_tokens` resident tokens in
+    /// `block_size`-token pages. Called only when the chain *changes*
+    /// (admission, a fresh block at a boundary, a copy-on-write tail
+    /// replacement, or a free — an empty table). The default ignores it;
+    /// `MockBackend` enforces the mapping invariants bit-exactly,
+    /// `XlaBackend` keeps a device-side table staged for a future paged
+    /// decode artifact (the current slot-contiguous AOT kernel implies the
+    /// identity layout, so nothing is re-addressed yet).
+    fn set_block_table(
+        &mut self,
+        _slot: usize,
+        _blocks: &[u32],
+        _len_tokens: usize,
+        _block_size: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -82,6 +100,12 @@ pub struct XlaBackend {
     rt: ModelRuntime,
     params: PjRtBuffer,
     engine_state: PjRtBuffer,
+    /// Device-side KV block table per slot (host mirror). The engine keeps
+    /// the authoritative paged accounting (`engine::kvcache`); this table
+    /// is the per-slot chain a paged decode artifact would consume. The
+    /// current slot-contiguous AOT kernel addresses KV by (slot, position)
+    /// directly, so the table is tracked-but-not-yet-consumed.
+    block_tables: Vec<Vec<u32>>,
     /// Use the chunked `replay` artifact for resumption instead of
     /// per-token decode. MEASURED SLOWER on this substrate (see
     /// EXPERIMENTS.md §Perf): per-token replay rides along in batched
@@ -98,12 +122,25 @@ impl XlaBackend {
         rt.warmup(&["prefill", "decode", "read_header"])?;
         let params_buf = rt.upload_params(params)?;
         let engine_state = rt.fresh_engine_state()?;
-        Ok(XlaBackend { rt, params: params_buf, engine_state, chunked_replay: false })
+        let slots = rt.spec.slots;
+        Ok(XlaBackend {
+            rt,
+            params: params_buf,
+            engine_state,
+            block_tables: vec![Vec::new(); slots],
+            chunked_replay: false,
+        })
     }
 
     /// The loaded artifact manifest (slots, vocab, max_seq, …).
     pub fn spec(&self) -> &crate::runtime::Manifest {
         &self.rt.spec
+    }
+
+    /// The device-side block table currently installed for `slot`
+    /// (diagnostics / artifact-gated tests).
+    pub fn block_table(&self, slot: usize) -> &[u32] {
+        &self.block_tables[slot]
     }
 }
 
@@ -173,6 +210,23 @@ impl Backend for XlaBackend {
     fn release_retained(&mut self, _slot: usize) -> Result<()> {
         Ok(())
     }
+
+    // Paged KV: keep the per-slot block table resident device-side (host
+    // mirror until a paged decode artifact consumes it). The buffer is
+    // reused across installs so the decode hot path stays allocation-free
+    // once per-slot capacity has warmed up.
+    fn set_block_table(
+        &mut self,
+        slot: usize,
+        blocks: &[u32],
+        _len_tokens: usize,
+        _block_size: usize,
+    ) -> Result<()> {
+        let t = &mut self.block_tables[slot];
+        t.clear();
+        t.extend_from_slice(blocks);
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -198,6 +252,15 @@ pub struct MockBackend {
     /// weight sync continues the OLD script — exactly the stale-KV
     /// semantics a real backend has.
     retained_script: std::collections::HashMap<usize, (u64, usize)>,
+    /// Per-slot installed KV block table (paged-KV enforcement state).
+    blk_tables: Vec<Vec<u32>>,
+    /// Resident token count the last install of each slot claimed.
+    blk_lens: Vec<usize>,
+    /// Block size learned from the first install (0 = none yet); installs
+    /// must never change it.
+    blk_size: usize,
+    /// Count of block-table installs (paged-KV assertions in tests).
+    pub block_table_installs: u64,
     /// Epoch derived from the last `set_params` (shifts every script).
     pub params_epoch: u64,
     /// Scripted length = min_len + hash % spread.
@@ -224,6 +287,10 @@ impl MockBackend {
             p_max: 24,
             slot_script: vec![(0, 0); slots],
             retained_script: std::collections::HashMap::new(),
+            blk_tables: vec![Vec::new(); slots],
+            blk_lens: vec![0; slots],
+            blk_size: 0,
+            block_table_installs: 0,
             params_epoch: 0,
             min_len: 2,
             spread: 12,
@@ -352,6 +419,85 @@ impl Backend for MockBackend {
         self.retained_script.remove(&slot);
         Ok(())
     }
+
+    /// Paged-KV enforcement: the mock validates every install bit-exactly
+    /// against the block-mapping contract before accepting it. A violation
+    /// is a hard error (fatal to the engine thread, so tests fail loudly):
+    /// - the block size is constant across all installs;
+    /// - a non-empty table covers exactly ceil(len / block_size) blocks,
+    ///   with no block id appearing twice in one chain;
+    /// - relative to the slot's previous table, an install is either a
+    ///   reset (empty), a fresh install after a reset, or append-only
+    ///   growth where at most the previous *partial* tail block was
+    ///   replaced (the copy-on-write rule) — the shared prefix of full
+    ///   blocks is immutable.
+    fn set_block_table(
+        &mut self,
+        slot: usize,
+        blocks: &[u32],
+        len_tokens: usize,
+        block_size: usize,
+    ) -> Result<()> {
+        use anyhow::ensure;
+        ensure!(block_size >= 1, "block_size 0");
+        if self.blk_size == 0 {
+            self.blk_size = block_size;
+        }
+        ensure!(
+            self.blk_size == block_size,
+            "block size changed mid-run: {} -> {block_size}",
+            self.blk_size
+        );
+        if blocks.is_empty() {
+            ensure!(len_tokens == 0, "empty table claims {len_tokens} tokens");
+        } else {
+            ensure!(len_tokens > 0, "non-empty table with 0 tokens");
+            let want = len_tokens.div_ceil(block_size);
+            ensure!(
+                blocks.len() == want,
+                "table covers {} blocks, {len_tokens} tokens need {want}"
+            );
+            // No chain may reference a block twice (O(n²) over short
+            // chains; no allocation — hot-path installs stay alloc-free).
+            for (i, &b) in blocks.iter().enumerate() {
+                ensure!(
+                    !blocks[..i].contains(&b),
+                    "block {b} appears twice in slot {slot}'s chain"
+                );
+            }
+            let prev = &self.blk_tables[slot];
+            if !prev.is_empty() {
+                let prev_len = self.blk_lens[slot];
+                ensure!(
+                    len_tokens >= prev_len,
+                    "slot {slot} table shrank: {prev_len} -> {len_tokens} tokens"
+                );
+                ensure!(blocks.len() >= prev.len(), "slot {slot} chain shrank");
+                let frozen = prev.len() - 1;
+                ensure!(
+                    blocks[..frozen] == prev[..frozen],
+                    "slot {slot}: shared full-block prefix mutated"
+                );
+                let tail_replaced = blocks[frozen] != prev[frozen];
+                ensure!(
+                    !tail_replaced || prev_len % block_size != 0,
+                    "slot {slot}: full (immutable) tail block replaced"
+                );
+            }
+        }
+        let t = &mut self.blk_tables[slot];
+        if t.capacity() < blocks.len() {
+            // First growth per slot; pre-reserve the horizon so later
+            // installs never reallocate (alloc-free steady state).
+            let cap = self.max_seq.div_ceil(block_size) + 1;
+            t.reserve(cap.max(blocks.len()) - t.len());
+        }
+        t.clear();
+        t.extend_from_slice(blocks);
+        self.blk_lens[slot] = len_tokens;
+        self.block_table_installs += 1;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -442,6 +588,36 @@ mod tests {
         assert_eq!(be.slot_script[0], stash, "stash restores the old script");
         assert_eq!(be.resume_retained_calls, 1);
         assert!(be.resume_retained(0).is_err(), "stash is consumed on resume");
+    }
+
+    /// The mock's bit-exact block-mapping enforcement: legal lifecycles
+    /// (install → append-grow → COW of a partial tail → reset) pass;
+    /// ceil-coverage violations, duplicate blocks, full-tail mutation, and
+    /// block-size drift are hard errors.
+    #[test]
+    fn mock_enforces_block_table_contract() {
+        let mut be = MockBackend::new(2, 96);
+        // Fresh install: 5 tokens over blocks of 4 → 2 blocks.
+        be.set_block_table(0, &[7, 3], 5, 4).unwrap();
+        // Within-block growth + one appended block.
+        be.set_block_table(0, &[7, 3, 9], 9, 4).unwrap();
+        // COW: the last block was partial (9 % 4 != 0) → replaceable.
+        be.set_block_table(0, &[7, 3, 11], 10, 4).unwrap();
+        // Reset, then a fresh chain.
+        be.set_block_table(0, &[], 0, 4).unwrap();
+        be.set_block_table(0, &[1], 4, 4).unwrap();
+        assert_eq!(be.block_table_installs, 5);
+
+        // Violations:
+        assert!(be.set_block_table(1, &[2, 2], 8, 4).is_err(), "duplicate block");
+        assert!(be.set_block_table(1, &[2], 5, 4).is_err(), "under-covered len");
+        assert!(be.set_block_table(1, &[2], 4, 8).is_err(), "block size drift");
+        be.set_block_table(1, &[2], 4, 4).unwrap(); // 4 tokens: FULL block
+        assert!(
+            be.set_block_table(1, &[5, 6], 5, 4).is_err(),
+            "full tail block is immutable (COW applies to partial tails only)"
+        );
+        assert!(be.set_block_table(1, &[2], 3, 4).is_err(), "table shrank");
     }
 
     #[test]

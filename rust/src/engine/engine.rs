@@ -1,6 +1,6 @@
 //! The engine proper: S decode slots driven in lockstep (continuous
-//! batching), an admission queue, KV-budget preemption, partial-result
-//! flushing for early termination, and a KV-retention ledger for
+//! batching), an admission queue, paged KV-budget enforcement, partial-
+//! result flushing for early termination, and a KV-retention ledger for
 //! affinity-resumed partials.
 //!
 //! `Engine` is synchronous and backend-generic so the full coordinator
@@ -11,26 +11,46 @@
 //! steady-state allocation-free and O(1) in its bookkeeping: `tokens`/`pos`
 //! staging and the S×V logits buffer persist across steps
 //! (`Backend::decode_into`), sampling runs through a persistent
-//! [`SamplerScratch`], per-slot output vectors are pre-reserved at
-//! admission, and `busy`/`kv_tokens` are incremental counters maintained on
-//! admit/finish/preempt instead of O(S) slot scans per query.
+//! [`SamplerScratch`], per-slot output vectors and block chains are
+//! pre-reserved at admission, and `busy`/`kv_tokens`/block counters are
+//! incremental, maintained on admit/finish/preempt instead of O(S) slot
+//! scans per query.
+//!
+//! # Paged KV (the block economy)
+//!
+//! KV residency is charged in fixed-size refcounted blocks
+//! ([`kvcache`](super::kvcache)): every busy or retained slot owns a
+//! [`PageTable`] chain, the budget (`KvCacheConfig::budget_blocks`) is
+//! enforced against [`BlockAllocator::blocks_in_use`], and a group's
+//! shared prompt prefix is allocated once — later samples presenting the
+//! same [`WorkItem::prefix`] handle attach the registered blocks with a
+//! refcount bump ([`PrefixCache`]) and copy the partial tail only on their
+//! first divergent write (COW). Under budget pressure the engine sheds
+//! residency cheapest-first: prefix-registry entries (pure cache), then
+//! retained slots (LIFO), then live preemption (LIFO, never the last
+//! slot); fresh admission backpressures cleanly when the budget has no
+//! headroom instead of admit-then-preempt thrashing. Eviction frees only
+//! refs that drop to zero, so evicting a retained partial whose prefix is
+//! still live for siblings costs near nothing.
 //!
 //! # KV retention (the resume-affinity fast path)
 //!
 //! Early termination normally discards a flushed slot's KV, so resuming the
 //! buffered partial later re-prefills every generated token (the paper's
 //! recomputation overhead, §5.4.1). With retention, `stop_generation`
-//! leaves the slot in `SlotState::Retained`: the KV stays resident (still
-//! charged against `kv_budget`), the `Stopped` result carries a retention
-//! token, and a future [`WorkItem`] presenting that token resumes decoding
-//! directly from the retained state — zero replayed tokens. The ledger is
-//! strictly best-effort:
+//! leaves the slot in `SlotState::Retained`: the KV (its block chain)
+//! stays resident, the `Stopped` result carries a retention token, and a
+//! future [`WorkItem`] presenting that token resumes decoding directly
+//! from the retained state — zero replayed tokens. The ledger is strictly
+//! best-effort:
 //!
-//! - retained slots are evicted LIFO under KV-budget pressure (before any
-//!   live sequence is preempted — they are a cache, not work) and when the
-//!   admission queue needs a slot;
-//! - a weight sync invalidates all retained state unless the coordinator
-//!   opts into cross-sync retention (`SetParams::invalidate_retained`);
+//! - retained slots are evicted LIFO under KV-budget pressure (after
+//!   prefix-registry entries, before any live sequence is preempted —
+//!   they are a cache, not work) and when the admission queue needs a
+//!   slot;
+//! - a weight sync invalidates all retained state — retained slots AND
+//!   the prefix registry — unless the coordinator opts into cross-sync
+//!   retention (`SetParams::invalidate_retained`);
 //! - a resume whose token no longer names a live retained entry — or whose
 //!   backend-side restore fails — silently falls back to the ordinary
 //!   replay path, so correctness never depends on the coordinator's
@@ -42,6 +62,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use super::backend::Backend;
+use super::kvcache::{BlockAllocator, KvCacheConfig, PageTable, PrefixCache, DEFAULT_BLOCK_SIZE};
 use super::sampler::{sample_token_with, SamplerScratch, SamplingParams};
 use crate::tokenizer;
 use crate::util::Rng;
@@ -73,6 +94,19 @@ pub struct WorkItem {
     /// resumes from resident KV with zero replay; otherwise it silently
     /// falls back to the replay path. `None` = plain dispatch.
     pub retain: Option<u64>,
+    /// Shared prompt-prefix handle (the coordinator's GRPO group id): all
+    /// samples of one group carry the same handle and the same prompt, so
+    /// the engine charges the prompt's KV blocks once per group
+    /// ([`PrefixCache`]) instead of once per sample. At the engine level
+    /// this is purely an accounting optimization: for the same admission
+    /// schedule, token/logprob streams are bit-identical with the handle
+    /// absent (no backend call changes). Note the coordinator-level knob
+    /// (`engine.prefix_sharing`) also affects *scheduling* — group-home
+    /// routing and budget-gated admission timing — so, like any
+    /// scheduling knob, toggling it can reorder sampling across engines
+    /// in stochastic multi-engine runs. `None` = private prompt
+    /// residency.
+    pub prefix: Option<u64>,
 }
 
 /// Why a slot's result was reported back to the coordinator.
@@ -120,7 +154,8 @@ pub struct WorkResult {
     pub resumed_from_kv: bool,
 }
 
-/// Per-decode-step utilization sample (Fig. 1b data).
+/// Per-decode-step utilization sample (Fig. 1b data, plus the paged-KV
+/// gauges).
 #[derive(Clone, Debug)]
 pub struct StepTrace {
     /// Engine id the sample came from.
@@ -133,8 +168,23 @@ pub struct StepTrace {
     pub active: usize,
     /// Total decode slots.
     pub slots: usize,
-    /// KV tokens resident after this step (live + retained).
+    /// KV tokens resident after this step (live + retained; shared prompt
+    /// prefixes count once per *sequence* — the logical view).
     pub kv_tokens: usize,
+    /// KV blocks in use after this step (live + retained + prefix
+    /// registry; shared blocks count ONCE — the physical residency the
+    /// budget is enforced against).
+    pub kv_blocks: usize,
+    /// Internal fragmentation of the slots' block chains: the fraction of
+    /// allocated block capacity (per-sequence view) not covering a
+    /// resident token. 0.0 when nothing is resident.
+    pub kv_frag: f64,
+    /// Cumulative prompt tokens attached from a shared prefix instead of
+    /// freshly charged (engine lifetime; the coordinator differences
+    /// per-stage deltas).
+    pub prefix_tokens_shared: u64,
+    /// Cumulative copy-on-write block copies (engine lifetime).
+    pub cow_copies: u64,
     /// Cumulative preemption count.
     pub preemptions: u64,
 }
@@ -185,10 +235,11 @@ pub enum EngineCmd {
         version: u64,
         /// The full parameter vector (shared across engines).
         params: std::sync::Arc<Vec<f32>>,
-        /// Drop all retained KV first: retained prefixes were computed
-        /// under the OLD params, so unless the coordinator explicitly
-        /// opts into stale-KV continuation (`rollout.retain_kv_across_sync`)
-        /// they must not survive the sync.
+        /// Drop all retained KV (and the shared-prefix registry) first:
+        /// retained prefixes were computed under the OLD params, so unless
+        /// the coordinator explicitly opts into stale-KV continuation
+        /// (`rollout.retain_kv_across_sync`) they must not survive the
+        /// sync.
         invalidate_retained: bool,
     },
     /// Early termination: flush every busy slot as a partial; when `retain`
@@ -204,6 +255,13 @@ pub enum EngineCmd {
         request_id: u64,
         /// Retention token (stale tokens are ignored).
         token: u64,
+    },
+    /// Release one shared-prefix registry entry (the coordinator observed
+    /// the group complete — no more samples will attach it). Unknown keys
+    /// are ignored: the engine may have pressure-evicted the entry already.
+    ReleasePrefix {
+        /// The [`WorkItem::prefix`] handle whose registry entry to free.
+        key: u64,
     },
     /// Terminate the engine thread.
     Shutdown,
@@ -224,14 +282,18 @@ struct BusySlot {
     /// Token to feed at the next decode step, at position `pos`.
     next_token: i32,
     pos: i32,
+    /// KV block chain covering the slot's resident tokens (always exactly
+    /// `pos + 1` tokens).
+    pages: PageTable,
     /// Admission order (LIFO preemption victim selection, like vLLM).
     admitted_seq: u64,
 }
 
 /// Ledger entry for a flushed slot whose KV stayed resident. Everything a
 /// later resume needs to continue decoding without replay: the pending
-/// next-token feed and its position, plus the validation triple
-/// (request id, token, generated length) the resume item must match.
+/// next-token feed and its position, the retained block chain, plus the
+/// validation triple (request id, token, generated length) the resume item
+/// must match.
 struct RetainedSlot {
     request_id: u64,
     /// Monotonic retention token; the coordinator must echo it in
@@ -246,6 +308,10 @@ struct RetainedSlot {
     /// Total generated tokens at flush time (`resume.len() + new`); a
     /// resume item must present exactly this many resume tokens.
     generated_len: usize,
+    /// The retained KV's block chain — still charged against the budget,
+    /// but shared prefix blocks cost nothing extra while siblings (or the
+    /// registry) keep them live.
+    pages: PageTable,
     /// Original admission order (LIFO eviction among retained slots).
     admitted_seq: u64,
 }
@@ -257,7 +323,8 @@ enum SlotState {
 }
 
 /// One inference engine: S decode slots over a [`Backend`], an admission
-/// queue, KV budget enforcement, and the retention ledger.
+/// queue, paged KV-budget enforcement, the shared-prefix registry, and the
+/// retention ledger.
 pub struct Engine<B: Backend> {
     /// Engine id (stamped on every event).
     pub id: usize,
@@ -265,9 +332,19 @@ pub struct Engine<B: Backend> {
     slots: Vec<SlotState>,
     pending: VecDeque<WorkItem>,
     rng: Rng,
-    /// KV token budget (0 = unlimited). Exceeding it evicts retained slots
-    /// first, then preempts live slots LIFO.
-    pub kv_budget: usize,
+    /// Paged-KV configuration: block size, blocks-denominated budget
+    /// (0 = unlimited), prefix sharing.
+    kv_cfg: KvCacheConfig,
+    /// The block arena every page table and registry entry draws from.
+    /// Unbounded (budget is enforced by eviction, matching the old soft
+    /// token-budget semantics) and pre-reserved for the slot horizon so
+    /// steady-state decode never allocates.
+    kv: BlockAllocator,
+    /// Shared prompt-prefix registry (see [`WorkItem::prefix`]).
+    prefix_cache: PrefixCache,
+    /// Cumulative prompt tokens attached from a shared prefix instead of
+    /// freshly charged.
+    pub prefix_tokens_shared: u64,
     admission_counter: u64,
     retain_counter: u64,
     preemptions: u64,
@@ -286,7 +363,8 @@ pub struct Engine<B: Backend> {
     busy_count: usize,
     /// Retained slot count (== slots.iter().filter(Retained).count()).
     retained_count: usize,
-    /// KV tokens resident (== Σ busy (pos + 1) + Σ retained (pos + 1)).
+    /// KV tokens resident (== Σ busy (pos + 1) + Σ retained (pos + 1) ==
+    /// Σ page-table tokens; shared blocks count per sequence here).
     kv_resident: usize,
     // -- persistent step scratch (no per-step heap allocation) --------------
     step_tokens: Vec<i32>,
@@ -296,21 +374,42 @@ pub struct Engine<B: Backend> {
 }
 
 impl<B: Backend> Engine<B> {
-    /// Build an engine with `kv_budget` tokens of KV (0 = unlimited) and a
+    /// Back-compat constructor: a TOKEN-denominated budget (0 = unlimited)
+    /// converted to blocks of [`DEFAULT_BLOCK_SIZE`] via
+    /// [`KvCacheConfig::from_token_budget`]. New call sites should use
+    /// [`Engine::with_kv`].
+    pub fn new(id: usize, backend: B, kv_budget_tokens: usize, seed: u64) -> Engine<B> {
+        Self::with_kv(
+            id,
+            backend,
+            KvCacheConfig::from_token_budget(kv_budget_tokens, DEFAULT_BLOCK_SIZE),
+            seed,
+        )
+    }
+
+    /// Build an engine with an explicit paged-KV configuration and a
     /// per-engine-derived RNG seed.
-    pub fn new(id: usize, backend: B, kv_budget: usize, seed: u64) -> Engine<B> {
+    pub fn with_kv(id: usize, backend: B, kv_cfg: KvCacheConfig, seed: u64) -> Engine<B> {
         let s = backend.slots();
         let mut slots = Vec::with_capacity(s);
         for _ in 0..s {
             slots.push(SlotState::Idle);
         }
+        let mut kv = BlockAllocator::new(kv_cfg.block_size, 0);
+        // Pre-reserve the full slot horizon plus registry slack so block
+        // allocation on the decode hot path never grows the arena.
+        let per_slot = backend.max_seq().div_ceil(kv_cfg.block_size) + 1;
+        kv.reserve_arena(s * (per_slot + 2));
         Engine {
             id,
             backend,
             slots,
             pending: VecDeque::new(),
             rng: Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
-            kv_budget,
+            kv_cfg,
+            kv,
+            prefix_cache: PrefixCache::new(),
+            prefix_tokens_shared: 0,
             admission_counter: 0,
             retain_counter: 0,
             preemptions: 0,
@@ -366,20 +465,51 @@ impl<B: Backend> Engine<B> {
     }
 
     /// Tokens resident in the KV cache across busy AND retained slots
-    /// (O(1) counter).
+    /// (O(1) counter; the logical per-sequence view — shared prompt
+    /// prefixes count once per sequence).
     pub fn kv_tokens(&self) -> usize {
         self.kv_resident
+    }
+
+    /// KV blocks in use (live + retained + prefix registry; shared blocks
+    /// count once — the physical residency the budget governs).
+    pub fn kv_blocks(&self) -> usize {
+        self.kv.blocks_in_use()
+    }
+
+    /// Cumulative copy-on-write block copies.
+    pub fn cow_copies(&self) -> u64 {
+        self.kv.cow_copies()
+    }
+
+    /// Tokens per KV block.
+    pub fn kv_block_size(&self) -> usize {
+        self.kv_cfg.block_size
+    }
+
+    /// KV budget in blocks (0 = unlimited).
+    pub fn kv_budget_blocks(&self) -> usize {
+        self.kv_cfg.budget_blocks
+    }
+
+    /// Live shared-prefix registry entries (test inspection).
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix_cache.len()
     }
 
     /// Install `b` into slot `i`, maintaining the incremental counters.
     fn occupy(&mut self, i: usize, b: Box<BusySlot>) {
         debug_assert!(matches!(self.slots[i], SlotState::Idle));
+        debug_assert_eq!(b.pages.tokens(), b.pos as usize + 1, "page/pos drift");
         self.busy_count += 1;
         self.kv_resident += b.pos as usize + 1;
         self.slots[i] = SlotState::Busy(b);
     }
 
-    /// Clear a busy slot `i`, maintaining the incremental counters.
+    /// Clear a busy slot `i`, maintaining the incremental counters. The
+    /// returned slot still owns its block chain — the caller either frees
+    /// it ([`Engine::free_slot_kv`]) or moves it into a retained ledger
+    /// entry.
     fn vacate(&mut self, i: usize) -> Option<Box<BusySlot>> {
         match std::mem::replace(&mut self.slots[i], SlotState::Idle) {
             SlotState::Busy(b) => {
@@ -394,29 +524,47 @@ impl<B: Backend> Engine<B> {
         }
     }
 
-    /// Drop retained slot `i` back to Idle, releasing its KV charge and
-    /// telling the coordinator (so stale affinity entries get cleared).
+    /// Release a vacated slot's block chain and reset the backend-side
+    /// block table for slot `i`.
+    fn free_slot_kv(&mut self, i: usize, pages: &mut PageTable) {
+        pages.release_all(&mut self.kv);
+        let _ = self.backend.set_block_table(i, &[], 0, self.kv_cfg.block_size);
+    }
+
+    /// Drop retained slot `i` back to Idle, releasing its block refs (only
+    /// refs that drop to zero actually free residency — a retained partial
+    /// whose prefix is still live costs near nothing to evict) and telling
+    /// the coordinator (so stale affinity entries get cleared).
     fn drop_retained_slot(&mut self, i: usize, events: &mut Vec<EngineEvent>) {
         let SlotState::Retained(_) = self.slots[i] else { return };
-        let SlotState::Retained(rs) = std::mem::replace(&mut self.slots[i], SlotState::Idle)
+        let SlotState::Retained(mut rs) = std::mem::replace(&mut self.slots[i], SlotState::Idle)
         else {
             unreachable!()
         };
         self.retained_count -= 1;
         self.kv_resident -= rs.pos as usize + 1;
         self.retained_evictions += 1;
+        self.free_slot_kv(i, &mut rs.pages);
         let _ = self.backend.release_retained(i);
         events.push(EngineEvent::RetainedDropped { engine: self.id, request_id: rs.request_id });
     }
 
-    /// Drop ALL retained slots (weight-sync invalidation: the retained KV
-    /// prefixes were computed under the old params).
+    /// Drop ALL retained slots and the shared-prefix registry (weight-sync
+    /// invalidation: every retained prefix was computed under the old
+    /// params).
     pub fn invalidate_retained(&mut self, events: &mut Vec<EngineEvent>) {
         for i in 0..self.slots.len() {
             if matches!(self.slots[i], SlotState::Retained(_)) {
                 self.drop_retained_slot(i, events);
             }
         }
+        self.prefix_cache.clear(&mut self.kv);
+    }
+
+    /// Release one shared-prefix registry entry (coordinator observed the
+    /// group complete). Unknown keys are ignored.
+    pub fn release_prefix(&mut self, key: u64) {
+        self.prefix_cache.remove(key, &mut self.kv);
     }
 
     /// Explicit coordinator-side release of one retained slot (the partial
@@ -457,10 +605,11 @@ impl<B: Backend> Engine<B> {
     ///
     /// With `retain`, a flushed slot that is fully caught up (its replay —
     /// if any — finished and it generated at least one token) keeps its KV
-    /// resident as `SlotState::Retained`; its `Stopped` result carries
-    /// the retention token ([`WorkResult::retained`]). Slots stopped
-    /// mid-replay flush plainly — their KV covers only part of the resume
-    /// prefix, which the simple (token, length) validation cannot describe.
+    /// block chain resident as `SlotState::Retained`; its `Stopped` result
+    /// carries the retention token ([`WorkResult::retained`]). Slots
+    /// stopped mid-replay flush plainly — their KV covers only part of the
+    /// resume prefix, which the simple (token, length) validation cannot
+    /// describe.
     pub fn stop_generation(
         &mut self,
         events: &mut Vec<EngineEvent>,
@@ -469,7 +618,7 @@ impl<B: Backend> Engine<B> {
         for i in 0..self.slots.len() {
             // All busy/kv counter maintenance goes through vacate(); the
             // retain branch re-installs the identical KV charge below.
-            let Some(b) = self.vacate(i) else { continue };
+            let Some(mut b) = self.vacate(i) else { continue };
             let caught_up = b.replay_fed >= b.item.resume.len() && !b.generated.is_empty();
             let can_retain =
                 retain && caught_up && self.backend.retain_slot(i).unwrap_or(false);
@@ -482,10 +631,12 @@ impl<B: Backend> Engine<B> {
                     pos: b.pos,
                     next_token: b.next_token,
                     generated_len: b.item.resume.len() + b.generated.len(),
+                    pages: std::mem::take(&mut b.pages),
                     admitted_seq: b.admitted_seq,
                 };
                 // The retained slot keeps the vacated slot's exact KV
-                // residency charged against the budget.
+                // residency (tokens AND block refs) charged against the
+                // budget.
                 self.retained_count += 1;
                 self.kv_resident += rs.pos as usize + 1;
                 let mut result = finish(*b, FinishReason::Stopped);
@@ -493,6 +644,7 @@ impl<B: Backend> Engine<B> {
                 events.push(EngineEvent::Done { engine: self.id, result });
                 self.slots[i] = SlotState::Retained(rs);
             } else {
+                self.free_slot_kv(i, &mut b.pages);
                 events.push(EngineEvent::Done {
                     engine: self.id,
                     result: finish(*b, FinishReason::Stopped),
@@ -516,6 +668,7 @@ impl<B: Backend> Engine<B> {
 
         let s = self.slots.len();
         let v = self.backend.vocab();
+        let bs = self.kv_cfg.block_size;
         for (i, slot) in self.slots.iter().enumerate() {
             match slot {
                 SlotState::Busy(b) => {
@@ -546,6 +699,16 @@ impl<B: Backend> Engine<B> {
             let SlotState::Busy(b) = &mut self.slots[i] else { continue };
             b.pos += 1;
             self.kv_resident += 1;
+            // Charge the new position's block: a fresh block at a boundary,
+            // a COW copy when the tail is shared — either re-installs the
+            // backend block table; the common within-block case is free.
+            let changed = b
+                .pages
+                .append_one(&mut self.kv)
+                .expect("engine block arena is unbounded");
+            if changed {
+                self.backend.set_block_table(i, b.pages.block_ids(), b.pages.tokens(), bs)?;
+            }
             if b.replay_fed < b.item.resume.len() {
                 // We just fed resume[replay_fed]; keep replaying.
                 b.replay_fed += 1;
@@ -573,13 +736,31 @@ impl<B: Backend> Engine<B> {
             };
             match reason {
                 Some(r) => {
-                    let b = self.vacate(i).expect("busy slot");
+                    let mut b = self.vacate(i).expect("busy slot");
+                    self.free_slot_kv(i, &mut b.pages);
                     events.push(EngineEvent::Done { engine: self.id, result: finish(*b, r) });
                 }
                 None => b.next_token = tok,
             }
         }
 
+        // Per-sequence block-chain total (shared blocks count per chain)
+        // for the fragmentation gauge — scanned AFTER the processing loop
+        // so it is consistent with `kv_resident` at trace time (a slot
+        // that finished this step contributes to neither).
+        let mut page_blocks = 0usize;
+        for slot in &self.slots {
+            match slot {
+                SlotState::Busy(b) => page_blocks += b.pages.num_blocks(),
+                SlotState::Retained(rs) => page_blocks += rs.pages.num_blocks(),
+                SlotState::Idle => {}
+            }
+        }
+        let kv_frag = if page_blocks == 0 {
+            0.0
+        } else {
+            (1.0 - self.kv_resident as f64 / (page_blocks * bs) as f64).max(0.0)
+        };
         events.push(EngineEvent::Trace(StepTrace {
             engine: self.id,
             t_wall: self.t0.elapsed().as_secs_f64(),
@@ -587,6 +768,10 @@ impl<B: Backend> Engine<B> {
             active: self.busy_count,
             slots: s,
             kv_tokens: self.kv_resident,
+            kv_blocks: self.kv.blocks_in_use(),
+            kv_frag,
+            prefix_tokens_shared: self.prefix_tokens_shared,
+            cow_copies: self.kv.cow_copies(),
             preemptions: self.preemptions,
         }));
         Ok(())
@@ -622,7 +807,8 @@ impl<B: Backend> Engine<B> {
     /// Re-activate retained slot `i` for `item`: the pending next-token
     /// feed picks up exactly where the flushed slot left off, so the token
     /// stream is bit-identical to an uninterrupted run (and to the replay
-    /// path) — with zero recompute.
+    /// path) — with zero recompute. The retained block chain transfers to
+    /// the busy slot as-is: no blocks are charged or freed.
     ///
     /// Strictly best-effort, like every other retention path: if the
     /// backend fails to restore the slot, the retained state is dropped
@@ -630,7 +816,8 @@ impl<B: Backend> Engine<B> {
     /// retention problem must never kill the engine thread (`step` errors
     /// are fatal to it).
     fn admit_from_retained(&mut self, i: usize, item: WorkItem) -> Option<WorkItem> {
-        let SlotState::Retained(rs) = std::mem::replace(&mut self.slots[i], SlotState::Idle)
+        let SlotState::Retained(mut rs) =
+            std::mem::replace(&mut self.slots[i], SlotState::Idle)
         else {
             unreachable!("admit_from_retained on a non-retained slot");
         };
@@ -640,6 +827,7 @@ impl<B: Backend> Engine<B> {
         self.kv_resident -= rs.pos as usize + 1;
         if let Err(e) = self.backend.resume_retained(i) {
             self.retained_evictions += 1;
+            self.free_slot_kv(i, &mut rs.pages);
             let _ = self.backend.release_retained(i);
             eprintln!(
                 "engine-{}: resume_retained failed ({e:#}); falling back to replay",
@@ -659,6 +847,7 @@ impl<B: Backend> Engine<B> {
             resumed_from_kv: true,
             next_token: rs.next_token,
             pos: rs.pos,
+            pages: std::mem::take(&mut rs.pages),
             admitted_seq: self.admission_counter,
             item,
         };
@@ -692,10 +881,109 @@ impl<B: Backend> Engine<B> {
         untargeted.or(any).map(|(i, _)| i)
     }
 
+    /// Block-budget admission gate: make headroom for a fresh/replay
+    /// admission (a `plen`-token prompt plus `resume_len` tokens to
+    /// rebuild — the chain reaches `plen + resume_len + 1` tokens whether
+    /// replay is chunked at admission or per-token over later steps) by
+    /// evicting caches (prefix registry entries first — sparing the one
+    /// this admission is about to attach — then retained slots, sparing
+    /// hint-targeted ones), and report whether admission may proceed.
+    /// `false` = clean backpressure: the item stays queued until running
+    /// work frees blocks. An idle engine always admits (a single sequence
+    /// may legitimately exceed the whole budget — mirroring "the last live
+    /// slot is never preempted").
+    fn ensure_block_headroom(
+        &mut self,
+        plen: usize,
+        resume_len: usize,
+        prefix_key: Option<u64>,
+        events: &mut Vec<EngineEvent>,
+    ) -> bool {
+        let budget = self.kv_cfg.budget_blocks;
+        if budget == 0 {
+            return true;
+        }
+        let shared_hit = self.kv_cfg.prefix_sharing
+            && prefix_key
+                .and_then(|k| self.prefix_cache.get(k))
+                .map_or(false, |e| e.tokens == plen);
+        let total = plen + resume_len + 1;
+        // A shared admission attaches the registered prefix, keeping its
+        // FULL blocks shared; the partial prompt tail (if any) is COW'd,
+        // so it counts on the private side along with the resume/feed
+        // growth.
+        let needed = if shared_hit {
+            self.kv
+                .blocks_for(total)
+                .saturating_sub(plen / self.kv_cfg.block_size)
+                .max(1)
+        } else {
+            self.kv.blocks_for(total)
+        };
+        if self.kv.blocks_in_use() + needed > budget {
+            // Feasibility pre-check before sacrificing any cache: an UPPER
+            // bound on what evicting every registry entry and retained
+            // slot could possibly free (refs shared with busy chains free
+            // nothing, so the true yield is ≤ this). If even that cannot
+            // make room, backpressure WITHOUT destroying the zero-replay
+            // caches — the admission must wait for busy slots to drain
+            // either way.
+            let max_freeable: usize = self.prefix_cache.total_blocks()
+                + self
+                    .slots
+                    .iter()
+                    .map(|s| match s {
+                        SlotState::Retained(rs) => rs.pages.num_blocks(),
+                        _ => 0,
+                    })
+                    .sum::<usize>();
+            if self.kv.blocks_in_use().saturating_sub(max_freeable) + needed > budget {
+                return self.busy_count == 0;
+            }
+        }
+        loop {
+            if self.kv.blocks_in_use() + needed <= budget {
+                return true;
+            }
+            if let Some(key) = self.prefix_cache.eviction_victim(&self.kv, prefix_key) {
+                self.prefix_cache.remove(key, &mut self.kv);
+                continue;
+            }
+            if self.retained_count > 0 {
+                if let Some(victim) = self.admission_eviction_victim() {
+                    self.drop_retained_slot(victim, events);
+                    continue;
+                }
+            }
+            return self.busy_count == 0;
+        }
+    }
+
     fn admit(&mut self, events: &mut Vec<EngineEvent>) -> Result<()> {
         loop {
             let Some(front) = self.pending.front() else { break };
+            // 0. Degenerate item: no room to generate anything — report an
+            //    empty LengthCap without consuming a slot or any blocks
+            //    (and before the budget gate, so it cannot trigger cache
+            //    eviction on its behalf).
+            if front.prompt.len() >= front.max_total {
+                let item = self.pending.pop_front().unwrap();
+                events.push(EngineEvent::Done {
+                    engine: self.id,
+                    result: WorkResult {
+                        request_id: item.request_id,
+                        new_tokens: vec![],
+                        new_logprobs: vec![],
+                        reason: FinishReason::LengthCap,
+                        replayed: 0,
+                        retained: None,
+                        resumed_from_kv: false,
+                    },
+                });
+                continue;
+            }
             // 1. Affinity fast path: the hint names a live retained slot.
+            //    No blocks are charged — the chain transfers as-is.
             if let Some(i) = self.find_retained(front) {
                 let item = self.pending.pop_front().unwrap();
                 if let Some(item) = self.admit_from_retained(i, item) {
@@ -705,10 +993,26 @@ impl<B: Backend> Engine<B> {
                 }
                 continue;
             }
-            // 2. Ordinary admission into the first idle slot; if none is
-            //    idle but retained slots exist, evict one (LIFO, sparing
-            //    slots that queued hints still target) — queued work must
-            //    never starve behind parked KV.
+            // 2. Is a slot even obtainable? (Idle, or a retained slot that
+            //    COULD be evicted.) If every slot is busy, stop — without
+            //    letting the budget gate below shed caches for an
+            //    admission that has no slot to go to.
+            if self.free_slots() == 0 && self.retained_count == 0 {
+                break; // every slot busy — wait for a finish
+            }
+            // 3. Block-budget gate, BEFORE any slot-scarcity eviction:
+            //    backpressure cleanly when the budget has no headroom
+            //    (head-of-line: the queue stays FIFO), so an infeasible
+            //    admission never costs a retained slot.
+            let (front_plen, front_resume, front_prefix) =
+                (front.prompt.len(), front.resume.len(), front.prefix);
+            if !self.ensure_block_headroom(front_plen, front_resume, front_prefix, events) {
+                break;
+            }
+            // 4. Slot resolution: first idle slot (the gate's evictions may
+            //    have opened one), else evict a retained slot (LIFO,
+            //    sparing slots that queued hints still target) — queued
+            //    work must never starve behind parked KV.
             let idle = self.slots.iter().position(|s| matches!(s, SlotState::Idle));
             let i = match idle {
                 Some(i) => i,
@@ -724,23 +1028,39 @@ impl<B: Backend> Engine<B> {
             self.admission_counter += 1;
             let seq = self.admission_counter;
             let plen = item.prompt.len();
-            if plen >= item.max_total {
-                // No room to generate anything: report an empty LengthCap.
-                events.push(EngineEvent::Done {
-                    engine: self.id,
-                    result: WorkResult {
-                        request_id: item.request_id,
-                        new_tokens: vec![],
-                        new_logprobs: vec![],
-                        reason: FinishReason::LengthCap,
-                        replayed: 0,
-                        retained: None,
-                        resumed_from_kv: false,
-                    },
-                });
-                continue;
-            }
             let logits = self.backend.prefill(i, &item.prompt)?;
+            // Page-table setup: attach the group's registered prompt
+            // prefix when the handle matches (refcount bump, zero fresh
+            // residency), or allocate the prompt blocks and register them
+            // for the siblings still to come. Registration happens at
+            // exactly `plen` tokens, so registry chains are prompt-pure —
+            // the owner's own first append COWs the partial tail like any
+            // other sibling.
+            let bs = self.kv_cfg.block_size;
+            let mut pages = PageTable::new();
+            pages.reserve(self.kv.blocks_for(item.max_total) + 1);
+            let mut shared_tokens = 0usize;
+            if self.kv_cfg.prefix_sharing {
+                if let Some(key) = item.prefix {
+                    if let Some(e) = self.prefix_cache.get(key) {
+                        if e.tokens == plen {
+                            pages.attach_shared(e.blocks(), e.tokens, &mut self.kv);
+                            shared_tokens = plen;
+                        }
+                    }
+                }
+            }
+            if shared_tokens == 0 {
+                pages
+                    .grow_to(plen, &mut self.kv)
+                    .expect("engine block arena is unbounded");
+                if self.kv_cfg.prefix_sharing {
+                    if let Some(key) = item.prefix {
+                        self.prefix_cache.insert(key, pages.block_ids(), plen, &mut self.kv);
+                    }
+                }
+            }
+            self.prefix_tokens_shared += shared_tokens as u64;
             // Reserve the worst-case output length up front so the decode
             // loop's push() never reallocates mid-generation.
             let out_cap = item.max_total.saturating_sub(plen);
@@ -752,10 +1072,22 @@ impl<B: Backend> Engine<B> {
                 resumed_from_kv: false,
                 next_token: 0,
                 pos: plen as i32,
+                pages,
                 admitted_seq: seq,
                 item,
             };
             if busy.item.resume.is_empty() {
+                // Cover the pending feed position (pos = plen): the first
+                // divergent write — COWs a shared partial tail.
+                busy.pages
+                    .grow_to(plen + 1, &mut self.kv)
+                    .expect("engine block arena is unbounded");
+                self.backend.set_block_table(
+                    i,
+                    busy.pages.block_ids(),
+                    busy.pages.tokens(),
+                    bs,
+                )?;
                 // Sample the first new token from the prefill logits.
                 let (tok, lp) = sample_token_with(
                     &logits,
@@ -766,6 +1098,7 @@ impl<B: Backend> Engine<B> {
                 busy.generated.push(tok);
                 busy.logprobs.push(lp);
                 if tok == tokenizer::EOS {
+                    self.free_slot_kv(i, &mut busy.pages);
                     events.push(EngineEvent::Done {
                         engine: self.id,
                         result: finish(busy, FinishReason::Eos),
@@ -773,6 +1106,7 @@ impl<B: Backend> Engine<B> {
                     continue;
                 }
                 if plen + 1 >= busy.item.max_total {
+                    self.free_slot_kv(i, &mut busy.pages);
                     events.push(EngineEvent::Done {
                         engine: self.id,
                         result: finish(busy, FinishReason::LengthCap),
@@ -802,6 +1136,18 @@ impl<B: Backend> Engine<B> {
                 busy.replay_fed = fed;
                 busy.replayed = fed;
                 busy.pos = (plen + fed) as i32;
+                // Cover the replayed region plus the pending feed position
+                // (pos = plen + fed). The first append past a shared
+                // prompt tail COWs it.
+                busy.pages
+                    .grow_to(plen + fed + 1, &mut self.kv)
+                    .expect("engine block arena is unbounded");
+                self.backend.set_block_table(
+                    i,
+                    busy.pages.block_ids(),
+                    busy.pages.tokens(),
+                    bs,
+                )?;
                 if fed == resume.len() {
                     // Replay complete: sample the next new token now.
                     let logits = last_logits.expect("non-empty resume");
@@ -815,6 +1161,7 @@ impl<B: Backend> Engine<B> {
                     busy.logprobs.push(lp);
                     let total = plen + resume.len() + 1;
                     if tok == tokenizer::EOS {
+                        self.free_slot_kv(i, &mut busy.pages);
                         events.push(EngineEvent::Done {
                             engine: self.id,
                             result: finish(busy, FinishReason::Eos),
@@ -822,6 +1169,7 @@ impl<B: Backend> Engine<B> {
                         continue;
                     }
                     if total >= busy.item.max_total {
+                        self.free_slot_kv(i, &mut busy.pages);
                         events.push(EngineEvent::Done {
                             engine: self.id,
                             result: finish(busy, FinishReason::LengthCap),
@@ -838,18 +1186,29 @@ impl<B: Backend> Engine<B> {
         Ok(())
     }
 
-    /// Enforce the KV budget. Retained slots are a cache: they are evicted
-    /// first (LIFO) — only then are live slots preempted (LIFO, like vLLM).
-    /// O(S) victim scan per eviction against O(1) counters.
+    /// Enforce the KV budget in BLOCKS. Residency is shed cheapest-first:
+    /// shared-prefix registry entries (pure cache — live sharers keep
+    /// their blocks), then retained slots (LIFO — a cache of work), then
+    /// live slots are preempted (LIFO, like vLLM; never the last one).
+    /// Each eviction removes one entry, so the loops terminate even when
+    /// shared refs mean an eviction frees zero blocks.
     fn enforce_kv_budget(&mut self, events: &mut Vec<EngineEvent>) {
-        if self.kv_budget == 0 {
+        let budget = self.kv_cfg.budget_blocks;
+        if budget == 0 {
             return;
         }
-        while self.kv_resident > self.kv_budget && self.retained_count > 0 {
+        while self.kv.blocks_in_use() > budget && !self.prefix_cache.is_empty() {
+            let key = self
+                .prefix_cache
+                .eviction_victim(&self.kv, None)
+                .expect("non-empty cache has a victim");
+            self.prefix_cache.remove(key, &mut self.kv);
+        }
+        while self.kv.blocks_in_use() > budget && self.retained_count > 0 {
             let victim = self.latest_retained().unwrap();
             self.drop_retained_slot(victim, events);
         }
-        while self.kv_resident > self.kv_budget && self.busy_count > 1 {
+        while self.kv.blocks_in_use() > budget && self.busy_count > 1 {
             let victim = self
                 .slots
                 .iter()
@@ -861,7 +1220,8 @@ impl<B: Backend> Engine<B> {
                 .max_by_key(|&(_, seq)| seq)
                 .map(|(i, _)| i)
                 .unwrap();
-            if let Some(b) = self.vacate(victim) {
+            if let Some(mut b) = self.vacate(victim) {
+                self.free_slot_kv(victim, &mut b.pages);
                 self.preemptions += 1;
                 events.push(EngineEvent::Done {
                     engine: self.id,
@@ -897,6 +1257,7 @@ mod tests {
             max_total: 96,
             sampling: SamplingParams::greedy(),
             retain: None,
+            prefix: None,
         }
     }
 
@@ -920,8 +1281,11 @@ mod tests {
         out
     }
 
-    /// Recompute the counters from first principles (test-only O(S) scan).
-    fn scan_counters(eng: &Engine<MockBackend>) -> (usize, usize, usize) {
+    /// Recompute the counters from first principles (test-only O(S) scan):
+    /// busy/retained slot counts, resident tokens, and the per-chain block
+    /// total that must equal the allocator's in-use count when nothing is
+    /// shared (no prefix handles, empty registry).
+    fn scan_counters(eng: &Engine<MockBackend>) -> (usize, usize, usize, usize) {
         let busy = eng.slots.iter().filter(|s| matches!(s, SlotState::Busy(_))).count();
         let retained =
             eng.slots.iter().filter(|s| matches!(s, SlotState::Retained(_))).count();
@@ -934,7 +1298,16 @@ mod tests {
                 SlotState::Idle => 0,
             })
             .sum();
-        (busy, retained, kv)
+        let blocks = eng
+            .slots
+            .iter()
+            .map(|s| match s {
+                SlotState::Busy(b) => b.pages.num_blocks(),
+                SlotState::Retained(rs) => rs.pages.num_blocks(),
+                SlotState::Idle => 0,
+            })
+            .sum();
+        (busy, retained, kv, blocks)
     }
 
     #[test]
@@ -952,6 +1325,9 @@ mod tests {
         assert_eq!(r.new_tokens.len(), want_len + 1);
         assert_eq!(*r.new_tokens.last().unwrap(), tokenizer::EOS);
         assert_eq!(r.new_logprobs.len(), r.new_tokens.len());
+        // All KV (tokens and blocks) released at completion.
+        assert_eq!(eng.kv_tokens(), 0);
+        assert_eq!(eng.kv_blocks(), 0);
     }
 
     #[test]
@@ -1028,6 +1404,7 @@ mod tests {
         assert_eq!(eng.busy(), 0);
         assert_eq!(eng.retained(), 0);
         assert_eq!(eng.kv_tokens(), 0);
+        assert_eq!(eng.kv_blocks(), 0);
     }
 
     #[test]
@@ -1060,12 +1437,19 @@ mod tests {
         assert_eq!(eng.replayed_tokens, 3);
     }
 
+    /// Block-budget pressure: a tight budget first backpressures fresh
+    /// admission (queued work stays queued — no admit-then-preempt
+    /// thrash), then preempts the LIFO-latest live slot once the admitted
+    /// sequences outgrow the budget. The last live slot is never touched.
     #[test]
-    fn kv_budget_triggers_lifo_preemption() {
+    fn kv_budget_triggers_backpressure_then_lifo_preemption() {
         let mut be = MockBackend::new(4, 96);
         be.min_len = 60;
         be.spread = 1; // long outputs to build KV pressure
-        let mut eng = Engine::new(0, be, 30, 1); // tight budget
+        // 30 tokens -> 2 blocks of 16: room to admit exactly 2 short
+        // prompts (1 block each).
+        let mut eng = Engine::new(0, be, 30, 1);
+        assert_eq!(eng.kv_budget_blocks(), 2);
         for i in 0..4 {
             eng.submit(item(i, vec![1, i as i32 + 4, 9, 9])).unwrap();
         }
@@ -1083,51 +1467,56 @@ mod tests {
         }
         assert!(!preempted.is_empty(), "tight budget must preempt");
         assert!(eng.preemptions() as usize >= preempted.len());
-        // LIFO: the latest admissions (higher ids) are evicted first.
-        assert!(preempted.contains(&3) || preempted.contains(&2), "{preempted:?}");
+        // LIFO among the ADMITTED slots: requests 2/3 were backpressured
+        // at admission, so the latest admitted (request 1) is the victim.
+        assert!(preempted.contains(&1), "{preempted:?}");
+        assert_eq!(eng.queued(), 2, "budget headroom gate must hold 2/3 back");
         // Under a tight budget the engine converges to few busy slots (a
         // single long sequence may legitimately exceed the budget alone —
         // the last slot is never preempted).
         assert!(eng.busy() <= 2, "busy {}", eng.busy());
     }
 
-    /// The incremental busy/retained/kv counters must agree with a
-    /// from-scratch slot scan at every point of a run that exercises
-    /// admission, decode, finish, preemption, retention, and
-    /// stop_generation.
+    /// The incremental busy/retained/kv counters — and the allocator's
+    /// block count — must agree with a from-scratch slot scan at every
+    /// point of a run that exercises admission, decode, finish,
+    /// backpressure, preemption, retention, and stop_generation. (No
+    /// prefix handles here, so chain blocks are all distinct and the
+    /// allocator count equals the per-slot sum.)
     #[test]
     fn incremental_counters_match_slot_scans() {
         let mut be = MockBackend::new(4, 96);
         be.min_len = 30;
         be.spread = 6;
-        let mut eng = Engine::new(0, be, 40, 9); // budget tight enough to preempt
+        let mut eng = Engine::new(0, be, 40, 9); // 3 blocks: tight
         for i in 0..8 {
             eng.submit(item(i, vec![1, i as i32 + 4, 9])).unwrap();
         }
         let mut ev = Vec::new();
         for _ in 0..60 {
             eng.step(&mut ev).unwrap();
-            let (busy, retained, kv) = scan_counters(&eng);
+            let (busy, retained, kv, blocks) = scan_counters(&eng);
             assert_eq!(eng.busy(), busy, "busy counter drifted");
             assert_eq!(eng.retained(), retained, "retained counter drifted");
-            assert_eq!(eng.kv_tokens(), kv, "kv counter drifted");
+            assert_eq!(eng.kv_tokens(), kv, "kv token counter drifted");
+            assert_eq!(eng.kv_blocks(), blocks, "block counter drifted");
             ev.clear();
             if !eng.has_work() {
                 break;
             }
         }
         eng.stop_generation(&mut ev, true);
-        let (busy, retained, kv) = scan_counters(&eng);
+        let (busy, retained, kv, blocks) = scan_counters(&eng);
         assert_eq!(
-            (eng.busy(), eng.retained(), eng.kv_tokens()),
-            (busy, retained, kv)
+            (eng.busy(), eng.retained(), eng.kv_tokens(), eng.kv_blocks()),
+            (busy, retained, kv, blocks)
         );
         assert_eq!(busy, 0);
         // Retained slots (if any) still charge KV.
         assert_eq!(kv > 0, retained > 0);
         ev.clear();
         eng.invalidate_retained(&mut ev);
-        assert_eq!((eng.retained(), eng.kv_tokens()), (0, 0));
+        assert_eq!((eng.retained(), eng.kv_tokens(), eng.kv_blocks()), (0, 0, 0));
     }
 
     #[test]
@@ -1141,10 +1530,11 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].reason, FinishReason::Eos);
         assert_eq!(results[0].new_tokens, vec![tokenizer::EOS]);
+        assert_eq!(eng.kv_blocks(), 0, "prefill-EOS path must free its blocks");
     }
 
     #[test]
-    fn trace_reports_active_slots() {
+    fn trace_reports_active_slots_and_block_gauges() {
         let be = MockBackend::new(4, 96);
         let mut eng = Engine::new(0, be, 0, 1);
         eng.submit(item(1, vec![1, 4])).unwrap();
@@ -1160,6 +1550,9 @@ mod tests {
         assert_eq!(trace.slots, 4);
         assert!(trace.active <= 1); // may have finished already
         assert!(trace.dur >= 0.0);
+        assert!(trace.kv_blocks <= 2, "3-token prompt fits 1-2 blocks");
+        assert!((0.0..=1.0).contains(&trace.kv_frag));
+        assert_eq!(trace.prefix_tokens_shared, 0);
     }
 
     #[test]
@@ -1167,6 +1560,236 @@ mod tests {
         let be = MockBackend::new(1, 96); // p_max = 24
         let mut eng = Engine::new(0, be, 0, 1);
         assert!(eng.submit(item(1, vec![1; 25])).is_err());
+    }
+
+    // -- paged KV / prefix sharing ------------------------------------------
+
+    fn sharing_engine(slots: usize, block_size: usize, sharing: bool) -> Engine<MockBackend> {
+        let mut be = MockBackend::new(slots, 96);
+        be.min_len = 20;
+        be.spread = 1;
+        let kv = KvCacheConfig { block_size, budget_blocks: 0, prefix_sharing: sharing };
+        Engine::with_kv(0, be, kv, 1)
+    }
+
+    /// THE tentpole accounting contract: a group of G=4 samples sharing a
+    /// block-aligned prompt holds exactly ONE refcounted copy of the
+    /// prompt-prefix blocks — 1 shared block + G private tails = G+1
+    /// blocks, vs 2·G without sharing.
+    #[test]
+    fn group_prefix_blocks_are_shared_once() {
+        let g = 4u64;
+        let prompt = vec![1, 7, 7, 9]; // 4 tokens == exactly 1 block of 4
+
+        let mut on = sharing_engine(4, 4, true);
+        for i in 0..g {
+            let mut it = item(i, prompt.clone());
+            it.prefix = Some(42);
+            on.submit(it).unwrap();
+        }
+        let mut ev = Vec::new();
+        on.step(&mut ev).unwrap();
+        assert_eq!(on.busy(), 4);
+        assert_eq!(on.prefix_entries(), 1, "one registry entry per group");
+        // 3 later siblings each attached the 4-token prompt.
+        assert_eq!(on.prefix_tokens_shared, 12);
+        // 1 shared prompt block + 4 private continuation blocks.
+        assert_eq!(on.kv_blocks(), 5);
+        assert_eq!(on.cow_copies(), 0, "block-aligned prompt never COWs");
+
+        let mut off = sharing_engine(4, 4, false);
+        for i in 0..g {
+            let mut it = item(i, prompt.clone());
+            it.prefix = Some(42); // handle present but sharing disabled
+            off.submit(it).unwrap();
+        }
+        let mut ev = Vec::new();
+        off.step(&mut ev).unwrap();
+        assert_eq!(off.prefix_entries(), 0);
+        assert_eq!(off.prefix_tokens_shared, 0);
+        assert_eq!(off.kv_blocks(), 8, "private copies: 2 blocks x 4 samples");
+    }
+
+    /// Non-aligned prompts share the partial tail block until the first
+    /// divergent write copies it (COW) — once per group member, and the
+    /// registry's prompt-pure original is never mutated.
+    #[test]
+    fn partial_prompt_tail_is_copied_on_first_write() {
+        let g = 3u64;
+        let prompt = vec![1, 7, 9]; // 3 tokens: 1 partial block of 4
+        let mut eng = sharing_engine(4, 4, true);
+        for i in 0..g {
+            let mut it = item(i, prompt.clone());
+            it.prefix = Some(7);
+            eng.submit(it).unwrap();
+        }
+        let mut ev = Vec::new();
+        eng.step(&mut ev).unwrap();
+        // Every member's first append past the shared partial tail COWs.
+        assert_eq!(eng.cow_copies(), g);
+        assert_eq!(eng.prefix_tokens_shared, (g - 1) * 3);
+        // Registry keeps the prompt-pure original; each member owns a
+        // COW'd tail plus the fresh block its first decode step opened
+        // (5 resident tokens = 2 blocks of 4 per chain).
+        assert_eq!(eng.kv_blocks(), 1 + 2 * g as usize);
+    }
+
+    /// Sharing is accounting-only: token and logprob streams are
+    /// bit-identical with sharing on vs off.
+    #[test]
+    fn sharing_streams_are_bit_identical_to_private_baseline() {
+        let collect = |sharing: bool| -> Vec<(u64, Vec<i32>, Vec<u32>)> {
+            let mut eng = sharing_engine(2, 4, sharing);
+            // Two groups with distinct prompts (and therefore distinct
+            // scripts), two samples each.
+            for i in 0..4 {
+                let (prompt, key) =
+                    if i < 2 { (vec![1, 8, 8], 9) } else { (vec![1, 5, 6, 7], 10) };
+                let mut it = item(i, prompt);
+                it.prefix = Some(key);
+                eng.submit(it).unwrap();
+            }
+            let mut out: Vec<(u64, Vec<i32>, Vec<u32>)> = run_to_completion(&mut eng, 400)
+                .into_iter()
+                .map(|r| {
+                    (
+                        r.request_id,
+                        r.new_tokens,
+                        r.new_logprobs.iter().map(|l| l.to_bits()).collect(),
+                    )
+                })
+                .collect();
+            out.sort();
+            out
+        };
+        let a = collect(true);
+        let b = collect(false);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a, b, "prefix sharing changed a stream");
+    }
+
+    /// `ReleasePrefix` frees the registry entry (and its blocks once no
+    /// live chain shares them); unknown keys are ignored.
+    #[test]
+    fn release_prefix_frees_registry_refs() {
+        let mut eng = sharing_engine(2, 4, true);
+        let mut it = item(1, vec![1, 5, 5, 5]);
+        it.prefix = Some(3);
+        eng.submit(it).unwrap();
+        let mut ev = Vec::new();
+        eng.step(&mut ev).unwrap();
+        assert_eq!(eng.prefix_entries(), 1);
+        let blocks_before = eng.kv_blocks();
+        eng.release_prefix(99); // unknown key: no-op
+        assert_eq!(eng.prefix_entries(), 1);
+        eng.release_prefix(3);
+        assert_eq!(eng.prefix_entries(), 0);
+        // The live chain still holds the (formerly shared) prompt block.
+        assert_eq!(eng.kv_blocks(), blocks_before);
+        let _ = run_to_completion(&mut eng, 200);
+        assert_eq!(eng.kv_blocks(), 0, "all refs released at completion");
+    }
+
+    /// Admission backpressure under a bounded budget: the second item
+    /// waits cleanly in the queue while the first runs, then admits once
+    /// the first completes and frees its blocks. Nothing deadlocks and
+    /// nothing thrashes.
+    #[test]
+    fn budget_backpressure_defers_admission_without_thrash() {
+        let mut be = MockBackend::new(2, 96);
+        be.min_len = 8;
+        be.spread = 1;
+        let kv = KvCacheConfig { block_size: 16, budget_blocks: 1, prefix_sharing: true };
+        let mut eng = Engine::with_kv(0, be, kv, 1);
+        eng.submit(item(1, vec![1, 4, 4])).unwrap();
+        eng.submit(item(2, vec![1, 5, 5])).unwrap();
+        let mut ev = Vec::new();
+        eng.step(&mut ev).unwrap();
+        assert_eq!(eng.busy(), 1, "budget admits exactly one");
+        assert_eq!(eng.queued(), 1, "second item backpressured, not dropped");
+        let results = run_to_completion(&mut eng, 300);
+        assert_eq!(results.len(), 2, "backpressured item admitted after free");
+        assert!(results.iter().all(|r| r.reason.is_complete()));
+        assert_eq!(eng.preemptions(), 0, "backpressure must not thrash via preemption");
+    }
+
+    /// An INFEASIBLE admission (even evicting every cache could not make
+    /// room) must backpressure without touching the caches: destroying
+    /// the retained slot would force a full replay later while the item
+    /// still cannot admit.
+    #[test]
+    fn infeasible_admission_spares_caches() {
+        let mut be = MockBackend::new(4, 96);
+        be.min_len = 30;
+        be.spread = 1;
+        let kv = KvCacheConfig { block_size: 4, budget_blocks: 6, prefix_sharing: true };
+        let mut eng = Engine::with_kv(0, be, kv, 1);
+        // Retain req1 mid-generation: 2 blocks parked.
+        eng.submit(item(1, vec![1, 8, 8, 8])).unwrap();
+        let mut ev = Vec::new();
+        for _ in 0..2 {
+            eng.step(&mut ev).unwrap();
+        }
+        ev.clear();
+        eng.stop_generation(&mut ev, true);
+        assert_eq!(eng.retained(), 1);
+        assert_eq!(eng.kv_blocks(), 2);
+
+        // Two fresh 4-token prompts fill the budget to exactly 6 blocks;
+        // an 8-token prompt then needs 3 blocks — infeasible even if the
+        // retained 2 blocks were freed (6 - 2 + 3 > 6).
+        eng.submit(item(2, vec![1, 4, 4, 4])).unwrap();
+        eng.submit(item(3, vec![1, 5, 5, 5])).unwrap();
+        eng.submit(item(4, vec![1, 9, 9, 9, 9, 9, 9, 9])).unwrap();
+        ev.clear();
+        eng.step(&mut ev).unwrap();
+        assert_eq!(eng.busy(), 2, "feasible admissions proceed");
+        assert_eq!(eng.queued(), 1, "infeasible admission backpressures");
+        assert_eq!(eng.retained(), 1, "retained cache must be spared");
+        assert!(
+            !ev.iter().any(|e| matches!(e, EngineEvent::RetainedDropped { .. })),
+            "no cache eviction for an admission that cannot proceed"
+        );
+    }
+
+    /// Budget pressure evicts prefix-registry entries before retained
+    /// slots: the registry is the cheapest cache to shed.
+    #[test]
+    fn budget_evicts_prefix_registry_before_retained() {
+        let mut be = MockBackend::new(2, 96);
+        be.min_len = 30;
+        be.spread = 1;
+        let kv = KvCacheConfig { block_size: 4, budget_blocks: 6, prefix_sharing: true };
+        let mut eng = Engine::with_kv(0, be, kv, 1);
+        // One retained partial + its registry entry.
+        let mut it = item(1, vec![1, 8, 8, 8]);
+        it.prefix = Some(5);
+        eng.submit(it).unwrap();
+        let mut ev = Vec::new();
+        for _ in 0..4 {
+            eng.step(&mut ev).unwrap();
+        }
+        ev.clear();
+        eng.stop_generation(&mut ev, true);
+        assert_eq!(eng.retained(), 1);
+        assert_eq!(eng.prefix_entries(), 1);
+
+        // A long-running fresh sequence pushes blocks over budget: the
+        // registry entry must fall before the retained slot.
+        eng.submit(item(2, vec![1, 9, 9, 9])).unwrap();
+        for _ in 0..20 {
+            let mut ev = Vec::new();
+            eng.step(&mut ev).unwrap();
+            if eng.prefix_entries() == 0 {
+                break;
+            }
+            assert_eq!(
+                eng.retained(),
+                1,
+                "retained slot dropped while the registry still had entries"
+            );
+        }
+        assert_eq!(eng.prefix_entries(), 0, "registry entry must be shed first");
     }
 
     // -- KV retention -------------------------------------------------------
@@ -1232,6 +1855,7 @@ mod tests {
         let token = partial.retained.expect("caught-up slot must retain");
         assert!(!partial.new_tokens.is_empty());
         assert!(eng.kv_tokens() > 0, "retained KV stays resident");
+        assert!(eng.kv_blocks() > 0, "retained blocks stay charged");
 
         // Resume with the affinity hint.
         let mut it = item(1, prompt);
@@ -1324,6 +1948,7 @@ mod tests {
         eng.invalidate_retained(&mut ev);
         assert_eq!(eng.retained(), 0);
         assert_eq!(eng.kv_tokens(), 0);
+        assert_eq!(eng.kv_blocks(), 0);
         assert!(ev
             .iter()
             .any(|e| matches!(e, EngineEvent::RetainedDropped { request_id: 1, .. })));
@@ -1344,7 +1969,7 @@ mod tests {
         let mut be = MockBackend::new(2, 96);
         be.min_len = 40;
         be.spread = 1;
-        let mut eng = Engine::new(0, be, 25, 1); // tight budget, 2 slots
+        let mut eng = Engine::new(0, be, 25, 1); // 2 blocks of 16: tight
         eng.submit(item(1, vec![1, 8, 8])).unwrap();
         let mut ev = Vec::new();
         for _ in 0..5 {
@@ -1354,8 +1979,8 @@ mod tests {
         eng.stop_generation(&mut ev, true);
         assert_eq!(eng.retained(), 1);
 
-        // A long-running live sequence pushes kv over budget; the retained
-        // slot must fall before the live one is touched.
+        // A long-running live sequence pushes blocks over budget; the
+        // retained slot must fall before the live one is touched.
         eng.submit(item(2, vec![1, 9, 9])).unwrap();
         let mut dropped = false;
         let mut preempted = false;
@@ -1399,6 +2024,7 @@ mod tests {
         eng.release_retained_request(1, token, &mut ev);
         assert_eq!(eng.retained(), 0);
         assert_eq!(eng.kv_tokens(), 0);
+        assert_eq!(eng.kv_blocks(), 0);
         assert_eq!(ev.len(), 1);
     }
 
@@ -1482,5 +2108,6 @@ mod tests {
         assert!(partial.retained.is_none(), "mid-replay slot must not retain");
         assert_eq!(eng.retained(), 0);
         assert_eq!(eng.kv_tokens(), 0);
+        assert_eq!(eng.kv_blocks(), 0);
     }
 }

@@ -1,0 +1,329 @@
+//! The fixed-size block allocator: a free-list arena with per-block
+//! refcounts. Blocks are the unit the engine's KV budget is denominated
+//! in; sharing (prompt prefixes, retained partials whose prefix is still
+//! live) is expressed as refcounts > 1, and a block's residency is charged
+//! exactly once no matter how many sequences reference it.
+//!
+//! Invariants (pinned by the property tests below and re-checked by the
+//! engine's counter-consistency test):
+//! - `blocks_in_use() == |{b : refcount(b) > 0}|`;
+//! - the free list holds exactly the arena slots with refcount 0, each
+//!   once (no double free — `release` on a free block is a checked no-op);
+//! - a bounded allocator never hands out more than `capacity` blocks
+//!   (`alloc` returns `None` → the engine backpressures admission);
+//! - an unbounded allocator (`capacity == 0`) grows its arena on demand
+//!   (growth can be pre-reserved via [`BlockAllocator::reserve_arena`] so
+//!   the decode hot path stays allocation-free).
+
+/// Identifier of one fixed-size KV block (index into the arena).
+pub type BlockId = u32;
+
+/// Free-list block arena with refcounts. See the module docs for the
+/// invariants.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_size: usize,
+    /// Per-block reference count (0 = on the free list).
+    refcounts: Vec<u32>,
+    /// LIFO free list of arena slots with refcount 0.
+    free: Vec<BlockId>,
+    /// Blocks with refcount > 0.
+    in_use: usize,
+    /// Cumulative copy-on-write block copies (see [`super::PageTable`]).
+    cow_copies: u64,
+    /// Hard arena cap in blocks (0 = unbounded, grow on demand).
+    capacity: usize,
+}
+
+impl BlockAllocator {
+    /// New allocator with `block_size` tokens per block and a hard arena
+    /// cap of `capacity_blocks` (0 = unbounded).
+    pub fn new(block_size: usize, capacity_blocks: usize) -> BlockAllocator {
+        assert!(block_size >= 1, "block_size must be >= 1");
+        BlockAllocator {
+            block_size,
+            refcounts: Vec::new(),
+            free: Vec::new(),
+            in_use: 0,
+            cow_copies: 0,
+            capacity: capacity_blocks,
+        }
+    }
+
+    /// Tokens per block.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Hard arena cap in blocks (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Blocks currently referenced by at least one page table or cache
+    /// entry — the number the KV budget is enforced against.
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Total arena slots ever created (in use + free).
+    pub fn arena_size(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    /// Cumulative copy-on-write block copies.
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// Blocks needed to hold `tokens` tokens (ceil division).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Pre-grow the free list so the next `blocks` allocations perform no
+    /// heap allocation (decode-hot-path discipline; unbounded arenas only).
+    pub fn reserve_arena(&mut self, blocks: usize) {
+        let want = self.refcounts.len() + blocks;
+        self.refcounts.reserve(blocks);
+        if self.free.capacity() < want {
+            self.free.reserve(want - self.free.len());
+        }
+        while self.refcounts.len() < want {
+            let id = self.refcounts.len() as BlockId;
+            self.refcounts.push(0);
+            self.free.push(id);
+        }
+    }
+
+    /// Allocate one block with refcount 1. `None` when a bounded arena is
+    /// exhausted — the caller's clean-backpressure signal.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        if let Some(b) = self.free.pop() {
+            debug_assert_eq!(self.refcounts[b as usize], 0);
+            self.refcounts[b as usize] = 1;
+            self.in_use += 1;
+            return Some(b);
+        }
+        if self.capacity != 0 && self.refcounts.len() >= self.capacity {
+            return None;
+        }
+        let id = self.refcounts.len() as BlockId;
+        self.refcounts.push(1);
+        // Keep the free list's CAPACITY tracking the arena size (it can
+        // hold at most one entry per arena slot), so later releases never
+        // reallocate mid-decode — growth cost is paid here, on the cold
+        // arena-growth path.
+        let arena = self.refcounts.len();
+        if self.free.capacity() < arena {
+            self.free.reserve(arena - self.free.len());
+        }
+        self.in_use += 1;
+        Some(id)
+    }
+
+    /// Add one reference to a live block (prefix attach, registry insert).
+    pub fn retain(&mut self, b: BlockId) {
+        debug_assert!(self.refcounts[b as usize] > 0, "retain of a free block");
+        self.refcounts[b as usize] += 1;
+    }
+
+    /// Drop one reference; returns true when the block's refcount reached
+    /// zero and it went back on the free list. Releasing an already-free
+    /// block is a checked no-op (debug assert; `false` in release builds)
+    /// — the no-double-free invariant.
+    pub fn release(&mut self, b: BlockId) -> bool {
+        let rc = &mut self.refcounts[b as usize];
+        debug_assert!(*rc > 0, "double free of block {b}");
+        if *rc == 0 {
+            return false;
+        }
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(b);
+            self.in_use -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current refcount of `b`.
+    pub fn ref_count(&self, b: BlockId) -> u32 {
+        self.refcounts[b as usize]
+    }
+
+    /// Record one copy-on-write block copy (called by
+    /// [`super::PageTable::append_one`]).
+    pub(crate) fn note_cow(&mut self) {
+        self.cow_copies += 1;
+    }
+
+    /// Recompute every invariant from scratch (tests only).
+    #[cfg(test)]
+    pub fn check_invariants(&self) {
+        let live = self.refcounts.iter().filter(|&&r| r > 0).count();
+        assert_eq!(live, self.in_use, "in_use counter drifted");
+        assert_eq!(
+            self.free.len() + self.in_use,
+            self.refcounts.len(),
+            "free list + live != arena"
+        );
+        let mut seen = vec![false; self.refcounts.len()];
+        for &b in &self.free {
+            assert_eq!(self.refcounts[b as usize], 0, "live block on free list");
+            assert!(!seen[b as usize], "block {b} on free list twice");
+            seen[b as usize] = true;
+        }
+        if self.capacity != 0 {
+            assert!(self.refcounts.len() <= self.capacity, "arena exceeded capacity");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop_check;
+    use crate::util::Rng;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = BlockAllocator::new(16, 4);
+        let b0 = a.alloc().unwrap();
+        let b1 = a.alloc().unwrap();
+        assert_ne!(b0, b1);
+        assert_eq!(a.blocks_in_use(), 2);
+        assert!(a.release(b0));
+        assert_eq!(a.blocks_in_use(), 1);
+        // LIFO reuse.
+        assert_eq!(a.alloc().unwrap(), b0);
+        assert!(a.release(b0));
+        assert!(a.release(b1));
+        assert_eq!(a.blocks_in_use(), 0);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn refcounts_share_and_release_in_order() {
+        let mut a = BlockAllocator::new(8, 0);
+        let b = a.alloc().unwrap();
+        a.retain(b);
+        a.retain(b);
+        assert_eq!(a.ref_count(b), 3);
+        assert!(!a.release(b));
+        assert!(!a.release(b));
+        assert_eq!(a.blocks_in_use(), 1, "shared block charged once");
+        assert!(a.release(b), "last ref frees");
+        assert_eq!(a.blocks_in_use(), 0);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn bounded_arena_exhausts_cleanly() {
+        let mut a = BlockAllocator::new(16, 2);
+        let b0 = a.alloc().unwrap();
+        let _b1 = a.alloc().unwrap();
+        assert!(a.alloc().is_none(), "capacity must cap the arena");
+        a.release(b0);
+        assert!(a.alloc().is_some(), "freed capacity is reusable");
+        a.check_invariants();
+    }
+
+    #[test]
+    fn release_of_free_block_is_a_noop_in_release_builds() {
+        let mut a = BlockAllocator::new(16, 0);
+        let b = a.alloc().unwrap();
+        assert!(a.release(b));
+        // Double free: debug builds assert; release builds must not
+        // corrupt the free list. Run the check only without debug asserts.
+        if !cfg!(debug_assertions) {
+            assert!(!a.release(b));
+            a.check_invariants();
+        }
+    }
+
+    #[test]
+    fn reserve_arena_pregrows_free_list() {
+        let mut a = BlockAllocator::new(16, 0);
+        a.reserve_arena(8);
+        assert_eq!(a.arena_size(), 8);
+        assert_eq!(a.blocks_in_use(), 0);
+        for _ in 0..8 {
+            assert!(a.alloc().is_some());
+        }
+        a.check_invariants();
+    }
+
+    #[test]
+    fn blocks_for_is_ceil() {
+        let a = BlockAllocator::new(16, 0);
+        assert_eq!(a.blocks_for(0), 0);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(16), 1);
+        assert_eq!(a.blocks_for(17), 2);
+    }
+
+    /// Property: arbitrary interleavings of alloc/retain/release keep every
+    /// structural invariant intact — no double free, no free-list
+    /// duplicates, in_use exact, bounded arenas never over-allocate.
+    #[test]
+    fn prop_random_op_sequences_keep_invariants() {
+        prop_check(
+            "block-allocator-invariants",
+            16,
+            |rng: &mut Rng| {
+                let capacity = if rng.below(2) == 0 { 0 } else { 2 + rng.below(14) as usize };
+                let ops = 40 + rng.below(160) as usize;
+                (capacity, ops, rng.next_u64())
+            },
+            |&(capacity, ops, seed)| {
+                let mut rng = Rng::new(seed);
+                let mut a = BlockAllocator::new(4, capacity);
+                // Model state: outstanding refs per block, as a multiset.
+                let mut refs: Vec<BlockId> = Vec::new();
+                for _ in 0..ops {
+                    match rng.below(3) {
+                        0 => {
+                            if let Some(b) = a.alloc() {
+                                refs.push(b);
+                            } else if capacity == 0 {
+                                return Err("unbounded alloc returned None".into());
+                            }
+                        }
+                        1 => {
+                            if !refs.is_empty() {
+                                let b = refs[rng.below(refs.len() as u64) as usize];
+                                a.retain(b);
+                                refs.push(b);
+                            }
+                        }
+                        _ => {
+                            if !refs.is_empty() {
+                                let i = rng.below(refs.len() as u64) as usize;
+                                let b = refs.swap_remove(i);
+                                let freed = a.release(b);
+                                let still_referenced = refs.contains(&b);
+                                if freed == still_referenced {
+                                    return Err(format!(
+                                        "block {b}: freed={freed} but model still_referenced={still_referenced}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    a.check_invariants();
+                    let model_in_use =
+                        refs.iter().collect::<std::collections::HashSet<_>>().len();
+                    if a.blocks_in_use() != model_in_use {
+                        return Err(format!(
+                            "in_use {} != model {model_in_use}",
+                            a.blocks_in_use()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,127 @@
+//! Paged KV-cache subsystem: a fixed-size block allocator with refcounted
+//! copy-on-write sharing (the vLLM block-manager idea, scaled to this
+//! substrate).
+//!
+//! Before this subsystem the engine charged KV residency as a flat
+//! per-slot token count: the G samples of a GRPO group each "held" a
+//! private copy of the identical prompt prefix, and a retained partial was
+//! evicted whole even when most of its KV was a prefix still resident for
+//! live siblings. The block layer replaces that with vLLM-style paging:
+//!
+//! - [`BlockAllocator`] — a free-list arena of fixed-size blocks
+//!   (`block_size` tokens each) with per-block refcounts; the engine's KV
+//!   budget is denominated in blocks (`engine.kv_budget_blocks`).
+//! - [`PageTable`] — one per sequence (busy or retained slot): the chain
+//!   of block refs covering its resident tokens. Appending a token inside
+//!   a *shared* partial block first copies it ([`PageTable::append_one`],
+//!   the copy-on-write rule), so a shared block is never mutated.
+//! - [`PrefixCache`] — the engine's registry of shared prompt prefixes,
+//!   keyed by the coordinator's group handle ([`super::WorkItem::prefix`]):
+//!   the first admission of a group allocates the prompt blocks once and
+//!   registers them; every later sibling attaches the same blocks with a
+//!   refcount bump instead of charging fresh residency.
+//!
+//! # What is (and is not) virtualized
+//!
+//! The backends in this repo keep *physically* slot-contiguous KV (the AOT
+//! decode artifact has no paged-attention kernel, and the mock's "KV" is a
+//! script cursor), so prefill still executes per slot. What the block layer
+//! virtualizes is the **residency economy**: admission, the KV budget,
+//! preemption, retention, and eviction are all charged in refcounted
+//! blocks, so a group's shared prefix counts once, a retained partial
+//! whose prefix is still live costs near nothing, and more rollouts fit a
+//! given budget. [`super::Backend::set_block_table`] mirrors the logical
+//! block chain to the backend — the mock enforces the mapping invariants
+//! bit-exactly, the PJRT backend keeps a device-side table staged for a
+//! future paged decode artifact.
+//!
+//! Everything here is synchronous, allocation-free on the decode hot path
+//! (block chains and the free list are pre-reserved), and exhaustively
+//! covered by property-style tests (`allocator.rs`, `pages.rs`).
+
+pub mod allocator;
+pub mod pages;
+
+pub use allocator::{BlockAllocator, BlockId};
+pub use pages::{PageTable, PrefixCache};
+
+/// Default tokens per KV block (vLLM's default; `engine.kv_block_size`).
+pub const DEFAULT_BLOCK_SIZE: usize = 16;
+
+/// Engine-side KV-cache configuration: how residency is paged, budgeted
+/// and shared. Assembled from [`crate::config::EngineConfig`] via
+/// `kv_cache_config()`; the token-denominated legacy budget converts with
+/// [`KvCacheConfig::from_token_budget`].
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Tokens per block (must be ≥ 1).
+    pub block_size: usize,
+    /// KV budget in blocks (0 = unlimited). Enforced softly, like the old
+    /// token budget: caches (prefix registry entries, retained slots) are
+    /// evicted first, then live slots are preempted LIFO; admission of
+    /// fresh work backpressures cleanly instead of thrashing.
+    pub budget_blocks: usize,
+    /// Honor [`super::WorkItem::prefix`] handles: share a group's prompt
+    /// blocks across its samples via the [`PrefixCache`].
+    pub prefix_sharing: bool,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig {
+            block_size: DEFAULT_BLOCK_SIZE,
+            budget_blocks: 0,
+            prefix_sharing: true,
+        }
+    }
+}
+
+impl KvCacheConfig {
+    /// Unlimited budget, default block size, sharing on.
+    pub fn unlimited() -> Self {
+        Self::default()
+    }
+
+    /// Back-compat conversion from the old token-denominated budget
+    /// (`engine.kv_budget_tokens`): ceil(tokens / block_size) blocks, so a
+    /// legacy budget never becomes *tighter* than it was.
+    pub fn from_token_budget(tokens: usize, block_size: usize) -> Self {
+        let bs = block_size.max(1);
+        KvCacheConfig {
+            block_size: bs,
+            budget_blocks: tokens.div_ceil(bs), // 0 stays 0 (unlimited)
+            prefix_sharing: true,
+        }
+    }
+
+    /// The budget expressed back in tokens (0 = unlimited) — the "both
+    /// forms" half of the Table-3 config echo.
+    pub fn budget_tokens(&self) -> usize {
+        self.budget_blocks * self.block_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_budget_converts_with_ceil() {
+        let kv = KvCacheConfig::from_token_budget(30, 16);
+        assert_eq!(kv.budget_blocks, 2);
+        assert_eq!(kv.budget_tokens(), 32);
+        let kv = KvCacheConfig::from_token_budget(32, 16);
+        assert_eq!(kv.budget_blocks, 2);
+        let kv = KvCacheConfig::from_token_budget(0, 16);
+        assert_eq!(kv.budget_blocks, 0, "0 stays unlimited");
+        assert_eq!(kv.budget_tokens(), 0);
+    }
+
+    #[test]
+    fn defaults_share_with_unlimited_budget() {
+        let kv = KvCacheConfig::default();
+        assert_eq!(kv.block_size, DEFAULT_BLOCK_SIZE);
+        assert_eq!(kv.budget_blocks, 0);
+        assert!(kv.prefix_sharing);
+    }
+}

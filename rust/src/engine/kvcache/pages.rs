@@ -1,0 +1,450 @@
+//! Per-sequence page tables (block chains) with copy-on-write appends,
+//! and the engine's shared prompt-prefix registry.
+//!
+//! A [`PageTable`] owns one reference to each block in its chain; the
+//! chain covers `tokens()` resident tokens. Appending a token either lands
+//! inside the (exclusively owned) last partial block, opens a fresh block
+//! at a block boundary, or — when the last partial block is *shared*
+//! (refcount > 1) — copies it first ([`PageTable::append_one`]). A shared
+//! block is therefore never written through: the COW rule the property
+//! tests pin.
+//!
+//! A [`PrefixCache`] entry holds its own +1 reference on every block of a
+//! registered prompt prefix, so the prefix stays attachable while the
+//! group's remaining samples trickle in — even if the sample that
+//! allocated it already finished. Entries are pure cache: the coordinator
+//! releases them when a group completes (`EngineCmd::ReleasePrefix`), and
+//! the engine evicts them first under KV-budget pressure.
+
+use std::collections::HashMap;
+
+use super::allocator::{BlockAllocator, BlockId};
+
+/// One sequence's chain of KV-block references plus its resident token
+/// count. Every block id in the chain is distinct, and the table holds
+/// exactly one allocator reference per entry.
+#[derive(Debug, Default)]
+pub struct PageTable {
+    blocks: Vec<BlockId>,
+    tokens: usize,
+}
+
+impl PageTable {
+    /// Empty table (no blocks, no tokens).
+    pub fn new() -> PageTable {
+        PageTable::default()
+    }
+
+    /// Resident tokens covered by the chain.
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// The block chain, in position order.
+    pub fn block_ids(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Chain length in blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.tokens == 0
+    }
+
+    /// Pre-reserve chain capacity so decode-time appends never reallocate
+    /// (hot-path discipline; call at admission with the worst case).
+    pub fn reserve(&mut self, blocks: usize) {
+        if self.blocks.capacity() < blocks {
+            self.blocks.reserve(blocks - self.blocks.len());
+        }
+    }
+
+    /// Append one resident token. Returns `Some(changed)` where `changed`
+    /// is true when the block chain changed (fresh block at a boundary, or
+    /// a copy-on-write replacement of a shared partial tail) — the signal
+    /// to re-install the backend block table. `None` = the (bounded)
+    /// allocator is exhausted; the table is left unchanged.
+    pub fn append_one(&mut self, alloc: &mut BlockAllocator) -> Option<bool> {
+        let bs = alloc.block_size();
+        let changed = if self.tokens % bs == 0 {
+            // Block boundary: open a fresh, exclusively owned block.
+            let b = alloc.alloc()?;
+            self.blocks.push(b);
+            true
+        } else {
+            let last = *self.blocks.last().expect("partial block must exist");
+            if alloc.ref_count(last) > 1 {
+                // COW: the partial tail is shared (prompt-prefix attach or
+                // registry ref) — copy it before the divergent write. The
+                // shared original is never mutated.
+                let nb = alloc.alloc()?;
+                alloc.release(last);
+                *self.blocks.last_mut().unwrap() = nb;
+                alloc.note_cow();
+                true
+            } else {
+                false
+            }
+        };
+        self.tokens += 1;
+        Some(changed)
+    }
+
+    /// Grow the chain to cover `tokens` resident tokens (admission /
+    /// replay cold path). `None` on allocator exhaustion — partially grown
+    /// state remains valid (release it via [`PageTable::release_all`]).
+    pub fn grow_to(&mut self, tokens: usize, alloc: &mut BlockAllocator) -> Option<()> {
+        while self.tokens < tokens {
+            self.append_one(alloc)?;
+        }
+        Some(())
+    }
+
+    /// Attach a shared prefix to an empty table: one retained reference
+    /// per donor block, covering `tokens` resident tokens. The caller
+    /// guarantees `donor` covers exactly `tokens` (registry entries do by
+    /// construction).
+    pub fn attach_shared(
+        &mut self,
+        donor: &[BlockId],
+        tokens: usize,
+        alloc: &mut BlockAllocator,
+    ) {
+        debug_assert!(self.is_empty() && self.blocks.is_empty(), "attach to non-empty table");
+        debug_assert_eq!(donor.len(), alloc.blocks_for(tokens), "donor/token mismatch");
+        for &b in donor {
+            alloc.retain(b);
+            self.blocks.push(b);
+        }
+        self.tokens = tokens;
+    }
+
+    /// Release every block reference and reset to empty.
+    pub fn release_all(&mut self, alloc: &mut BlockAllocator) {
+        for &b in &self.blocks {
+            alloc.release(b);
+        }
+        self.blocks.clear();
+        self.tokens = 0;
+    }
+}
+
+/// One registered shared prompt prefix: the block chain covering exactly
+/// `tokens` prompt tokens, with one registry-owned reference per block.
+#[derive(Debug)]
+pub struct PrefixEntry {
+    blocks: Vec<BlockId>,
+    /// Prompt tokens the chain covers (== the registering prompt length).
+    pub tokens: usize,
+    /// Registration order (deterministic eviction).
+    seq: u64,
+}
+
+impl PrefixEntry {
+    /// The registered block chain.
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+}
+
+/// Registry of shared prompt prefixes, keyed by the coordinator's group
+/// handle. Holds its own block references (see the module docs).
+#[derive(Debug, Default)]
+pub struct PrefixCache {
+    entries: HashMap<u64, PrefixEntry>,
+    seq: u64,
+}
+
+impl PrefixCache {
+    /// Empty registry.
+    pub fn new() -> PrefixCache {
+        PrefixCache::default()
+    }
+
+    /// Registered prefix count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the registry empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up a registered prefix.
+    pub fn get(&self, key: u64) -> Option<&PrefixEntry> {
+        self.entries.get(&key)
+    }
+
+    /// Total block references held across all entries (an upper bound on
+    /// what clearing the registry could free — shared refs free nothing).
+    pub fn total_blocks(&self) -> usize {
+        self.entries.values().map(|e| e.blocks.len()).sum()
+    }
+
+    /// Register `blocks` (covering `tokens` prompt tokens) under `key`,
+    /// retaining one reference per block. An existing entry under the same
+    /// key is released first.
+    pub fn insert(
+        &mut self,
+        key: u64,
+        blocks: &[BlockId],
+        tokens: usize,
+        alloc: &mut BlockAllocator,
+    ) {
+        // Retain the new refs BEFORE releasing a displaced entry, so an
+        // overlapping chain can never transiently drop to refcount 0.
+        for &b in blocks {
+            alloc.retain(b);
+        }
+        self.remove(key, alloc);
+        self.seq += 1;
+        self.entries.insert(
+            key,
+            PrefixEntry { blocks: blocks.to_vec(), tokens, seq: self.seq },
+        );
+    }
+
+    /// Release the entry under `key` (refcount drop on each block);
+    /// returns whether an entry existed. Safe for unknown keys — the
+    /// coordinator's `ReleasePrefix` may race an engine-side eviction.
+    pub fn remove(&mut self, key: u64, alloc: &mut BlockAllocator) -> bool {
+        let Some(e) = self.entries.remove(&key) else { return false };
+        for &b in &e.blocks {
+            alloc.release(b);
+        }
+        true
+    }
+
+    /// Deterministic eviction victim under KV pressure: prefer entries no
+    /// live sequence still shares (every block refcount == 1, so eviction
+    /// actually frees blocks), oldest first; otherwise the oldest entry
+    /// outright. `exclude` guards the prefix an imminent admission is
+    /// about to attach.
+    pub fn eviction_victim(
+        &self,
+        alloc: &BlockAllocator,
+        exclude: Option<u64>,
+    ) -> Option<u64> {
+        let mut registry_only: Option<(u64, u64)> = None;
+        let mut any: Option<(u64, u64)> = None;
+        for (&key, e) in &self.entries {
+            if Some(key) == exclude {
+                continue;
+            }
+            if any.map_or(true, |(_, s)| e.seq < s) {
+                any = Some((key, e.seq));
+            }
+            let unshared = e.blocks.iter().all(|&b| alloc.ref_count(b) == 1);
+            if unshared && registry_only.map_or(true, |(_, s)| e.seq < s) {
+                registry_only = Some((key, e.seq));
+            }
+        }
+        registry_only.or(any).map(|(k, _)| k)
+    }
+
+    /// Release every entry (weight-sync invalidation: registered prefixes
+    /// were computed under the old params).
+    pub fn clear(&mut self, alloc: &mut BlockAllocator) {
+        for (_, e) in self.entries.drain() {
+            for &b in &e.blocks {
+                alloc.release(b);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop_check;
+    use crate::util::Rng;
+
+    fn alloc4() -> BlockAllocator {
+        BlockAllocator::new(4, 0)
+    }
+
+    #[test]
+    fn append_opens_blocks_at_boundaries() {
+        let mut a = alloc4();
+        let mut p = PageTable::new();
+        for t in 1..=9 {
+            assert_eq!(p.append_one(&mut a), Some(t % 4 == 1), "token {t}");
+            assert_eq!(p.tokens(), t);
+        }
+        assert_eq!(p.num_blocks(), 3); // ceil(9/4)
+        assert_eq!(a.blocks_in_use(), 3);
+        p.release_all(&mut a);
+        assert_eq!(a.blocks_in_use(), 0);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn attach_shares_and_cow_copies_partial_tail() {
+        let mut a = alloc4();
+        // Donor: 6 tokens = 1 full block + 1 partial tail.
+        let mut donor = PageTable::new();
+        donor.grow_to(6, &mut a).unwrap();
+        let donor_blocks = donor.block_ids().to_vec();
+        assert_eq!(a.blocks_in_use(), 2);
+
+        let mut sib = PageTable::new();
+        sib.attach_shared(&donor_blocks, 6, &mut a);
+        assert_eq!(a.blocks_in_use(), 2, "attach charges nothing new");
+        assert_eq!(a.ref_count(donor_blocks[0]), 2);
+        assert_eq!(a.ref_count(donor_blocks[1]), 2);
+
+        // First divergent write: the shared partial tail must be COPIED,
+        // never mutated — the donor chain is untouched.
+        assert_eq!(sib.append_one(&mut a), Some(true));
+        assert_eq!(a.cow_copies(), 1);
+        assert_eq!(sib.tokens(), 7);
+        assert_eq!(sib.block_ids()[0], donor_blocks[0], "full block stays shared");
+        assert_ne!(sib.block_ids()[1], donor_blocks[1], "tail copied on write");
+        assert_eq!(donor.block_ids(), &donor_blocks[..], "donor never mutated");
+        assert_eq!(a.ref_count(donor_blocks[1]), 1, "sibling dropped its tail ref");
+        assert_eq!(a.blocks_in_use(), 3);
+
+        // Donor keeps appending into its (again exclusive) tail: no COW.
+        assert_eq!(donor.append_one(&mut a), Some(false));
+        assert_eq!(a.cow_copies(), 1);
+
+        sib.release_all(&mut a);
+        donor.release_all(&mut a);
+        assert_eq!(a.blocks_in_use(), 0);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn block_aligned_attach_needs_no_cow() {
+        let mut a = alloc4();
+        let mut donor = PageTable::new();
+        donor.grow_to(8, &mut a).unwrap(); // exactly 2 blocks
+        let blocks = donor.block_ids().to_vec();
+        let mut sib = PageTable::new();
+        sib.attach_shared(&blocks, 8, &mut a);
+        assert_eq!(sib.append_one(&mut a), Some(true), "boundary opens a fresh block");
+        assert_eq!(a.cow_copies(), 0, "aligned prefix never COWs");
+        assert_eq!(a.blocks_in_use(), 3);
+        sib.release_all(&mut a);
+        donor.release_all(&mut a);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn bounded_exhaustion_leaves_table_valid() {
+        let mut a = BlockAllocator::new(4, 2);
+        let mut p = PageTable::new();
+        assert!(p.grow_to(8, &mut a).is_some());
+        assert_eq!(p.append_one(&mut a), None, "arena exhausted");
+        assert_eq!(p.tokens(), 8, "failed append must not charge");
+        p.release_all(&mut a);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn prefix_cache_holds_its_own_refs() {
+        let mut a = alloc4();
+        let mut owner = PageTable::new();
+        owner.grow_to(4, &mut a).unwrap();
+        let mut cache = PrefixCache::new();
+        cache.insert(7, owner.block_ids(), 4, &mut a);
+        assert_eq!(a.ref_count(owner.block_ids()[0]), 2);
+
+        // The owner finishing does NOT free the registered prefix.
+        owner.release_all(&mut a);
+        assert_eq!(a.blocks_in_use(), 1, "registry keeps the prefix resident");
+
+        // A later sibling can still attach it.
+        let entry = cache.get(7).expect("entry");
+        let donor = entry.blocks().to_vec();
+        let mut sib = PageTable::new();
+        sib.attach_shared(&donor, 4, &mut a);
+        assert!(cache.remove(7, &mut a));
+        assert!(!cache.remove(7, &mut a), "double release is a no-op");
+        assert_eq!(a.blocks_in_use(), 1, "sibling still holds the prefix");
+        sib.release_all(&mut a);
+        assert_eq!(a.blocks_in_use(), 0);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn eviction_prefers_unshared_entries_and_honors_exclude() {
+        let mut a = alloc4();
+        let mut cache = PrefixCache::new();
+        let mut p1 = PageTable::new();
+        p1.grow_to(4, &mut a).unwrap();
+        cache.insert(1, p1.block_ids(), 4, &mut a);
+        let mut p2 = PageTable::new();
+        p2.grow_to(4, &mut a).unwrap();
+        cache.insert(2, p2.block_ids(), 4, &mut a);
+        // Entry 2's blocks drop to registry-only refs; entry 1 stays shared.
+        p2.release_all(&mut a);
+        assert_eq!(cache.eviction_victim(&a, None), Some(2));
+        assert_eq!(cache.eviction_victim(&a, Some(2)), Some(1));
+        cache.clear(&mut a);
+        p1.release_all(&mut a);
+        assert_eq!(a.blocks_in_use(), 0);
+        a.check_invariants();
+    }
+
+    /// Property: random share/append/release interleavings never mutate a
+    /// shared chain (donor chains stay identical while shared) and keep
+    /// allocator invariants intact.
+    #[test]
+    fn prop_cow_never_mutates_shared_chains() {
+        prop_check(
+            "pagetable-cow-isolation",
+            12,
+            |rng: &mut Rng| (2 + rng.below(5) as usize, 1 + rng.below(11) as usize, rng.next_u64()),
+            |&(bs, prefix_tokens, seed)| {
+                let mut rng = Rng::new(seed);
+                let mut a = BlockAllocator::new(bs, 0);
+                let mut donor = PageTable::new();
+                donor.grow_to(prefix_tokens, &mut a).unwrap();
+                let frozen = donor.block_ids().to_vec();
+                let mut sibs: Vec<PageTable> = Vec::new();
+                for _ in 0..(10 + rng.below(30)) {
+                    match rng.below(3) {
+                        0 => {
+                            let mut s = PageTable::new();
+                            s.attach_shared(&frozen, prefix_tokens, &mut a);
+                            sibs.push(s);
+                        }
+                        1 => {
+                            if !sibs.is_empty() {
+                                let i = rng.below(sibs.len() as u64) as usize;
+                                if sibs[i].append_one(&mut a).is_none() {
+                                    return Err("unbounded append failed".into());
+                                }
+                            }
+                        }
+                        _ => {
+                            if !sibs.is_empty() {
+                                let i = rng.below(sibs.len() as u64) as usize;
+                                let mut s = sibs.swap_remove(i);
+                                s.release_all(&mut a);
+                            }
+                        }
+                    }
+                    if donor.block_ids() != &frozen[..] {
+                        return Err("donor chain mutated by sibling activity".into());
+                    }
+                    a.check_invariants();
+                }
+                for s in &mut sibs {
+                    s.release_all(&mut a);
+                }
+                donor.release_all(&mut a);
+                if a.blocks_in_use() != 0 {
+                    return Err(format!("{} blocks leaked", a.blocks_in_use()));
+                }
+                Ok(())
+            },
+        );
+    }
+}

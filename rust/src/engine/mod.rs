@@ -1,6 +1,8 @@
 //! The inference-engine substrate (vLLM v0.8.4 stand-in, DESIGN.md table):
-//! slot-based continuous batching over the AOT decode artifact, a KV token
-//! budget with preemption + re-prefill (the paper's "recomputation
+//! slot-based continuous batching over the AOT decode artifact, a paged
+//! KV-cache block manager ([`kvcache`]: refcounted blocks, blocks-
+//! denominated budget, copy-on-write prompt-prefix sharing across GRPO
+//! groups) with preemption + re-prefill (the paper's "recomputation
 //! overhead"), KV retention for affinity-resumed partials (the fast path
 //! that skips that recomputation — see `engine::Engine`'s module docs),
 //! temperature/top-p/top-k sampling, and per-step utilization traces
@@ -13,10 +15,12 @@
 
 pub mod backend;
 pub mod engine;
+pub mod kvcache;
 pub mod pool;
 pub mod sampler;
 
 pub use backend::{Backend, MockBackend, XlaBackend};
 pub use engine::{Engine, EngineCmd, EngineEvent, FinishReason, StepTrace, WorkItem, WorkResult};
+pub use kvcache::{BlockAllocator, BlockId, KvCacheConfig, PageTable, PrefixCache, DEFAULT_BLOCK_SIZE};
 pub use pool::EnginePool;
 pub use sampler::{sample_token, sample_token_with, SamplerScratch, SamplingParams};

@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use super::backend::Backend;
 use super::engine::{Engine, EngineCmd, EngineEvent};
+use super::kvcache::{KvCacheConfig, DEFAULT_BLOCK_SIZE};
 
 /// Handle to a set of engine threads: per-engine command channels in, one
 /// shared event channel out.
@@ -24,12 +25,37 @@ pub struct EnginePool {
 }
 
 impl EnginePool {
-    /// Spawn `n` engines. `factory(engine_id)` runs INSIDE each engine
-    /// thread and builds its (thread-confined) backend.
+    /// Back-compat spawn: a TOKEN-denominated KV budget (0 = unlimited),
+    /// converted to blocks of [`DEFAULT_BLOCK_SIZE`]. New call sites
+    /// should pass an explicit [`KvCacheConfig`] via
+    /// [`EnginePool::spawn_kv`] (e.g. `cfg.engine.kv_cache_config()`).
     pub fn spawn<B, F>(
         n: usize,
         slots_per_engine: usize,
-        kv_budget: usize,
+        kv_budget_tokens: usize,
+        seed: u64,
+        factory: F,
+    ) -> Result<EnginePool>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Box<dyn FnOnce() -> Result<B> + Send> + Sync,
+    {
+        Self::spawn_kv(
+            n,
+            slots_per_engine,
+            KvCacheConfig::from_token_budget(kv_budget_tokens, DEFAULT_BLOCK_SIZE),
+            seed,
+            factory,
+        )
+    }
+
+    /// Spawn `n` engines with an explicit paged-KV configuration.
+    /// `factory(engine_id)` runs INSIDE each engine thread and builds its
+    /// (thread-confined) backend.
+    pub fn spawn_kv<B, F>(
+        n: usize,
+        slots_per_engine: usize,
+        kv: KvCacheConfig,
         seed: u64,
         factory: F,
     ) -> Result<EnginePool>
@@ -55,7 +81,7 @@ impl EnginePool {
                             return;
                         }
                     };
-                    let engine = Engine::new(id, backend, kv_budget, seed);
+                    let engine = Engine::with_kv(id, backend, kv, seed);
                     run_loop(engine, cmd_rx, tx);
                 })?;
             senders.push(cmd_tx);
@@ -234,6 +260,10 @@ fn handle_cmd<B: Backend>(
             engine.release_retained_request(request_id, token, events);
             false
         }
+        EngineCmd::ReleasePrefix { key } => {
+            engine.release_prefix(key);
+            false
+        }
         EngineCmd::Shutdown => true,
     }
 }
@@ -279,6 +309,7 @@ mod tests {
             max_total: 96,
             sampling: SamplingParams::default(),
             retain: None,
+            prefix: None,
         }
     }
 

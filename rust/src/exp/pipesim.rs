@@ -89,10 +89,10 @@ pub struct PipeSimSummary {
 fn spawn_coordinator(o: &PipeSimOpts) -> Result<Coordinator> {
     let slots = o.slots;
     let (min_len, spread, delay) = (o.min_len, o.spread, o.decode_delay);
-    let pool = EnginePool::spawn(
+    let pool = EnginePool::spawn_kv(
         o.cfg.engine.engines,
         slots,
-        o.cfg.engine.kv_budget_tokens,
+        o.cfg.engine.kv_cache_config(),
         o.cfg.train.seed,
         move |_id| {
             Box::new(move || {

@@ -53,6 +53,13 @@ pub struct RunSummary {
     pub retained_misses: usize,
     /// Resume tokens never recomputed thanks to retained-KV hits.
     pub replay_tokens_saved: u64,
+    /// Peak KV blocks in use on any one engine across the run (paged KV).
+    pub kv_blocks_peak: usize,
+    /// Prompt tokens attached from shared group prefixes instead of
+    /// freshly charged (paged KV; run total).
+    pub prefix_tokens_shared: u64,
+    /// Copy-on-write block copies (paged KV; run total).
+    pub cow_copies: u64,
     /// Rollout seconds that overlapped trainer compute (pipelined mode).
     pub overlap_secs: f64,
     /// Harvested trajectories spanning more than one policy version.
@@ -85,10 +92,10 @@ impl RlSession {
         let variant = cfg.model.clone();
         let init_params = params.clone();
         let chunked_replay = cfg.engine.chunked_replay;
-        let pool = EnginePool::spawn(
+        let pool = EnginePool::spawn_kv(
             cfg.engine.engines,
             spec.slots,
-            cfg.engine.kv_budget_tokens,
+            cfg.engine.kv_cache_config(),
             cfg.train.seed,
             move |_id| {
                 let dir = dir.clone();
@@ -246,6 +253,9 @@ impl RlSession {
             summary.retained_hits += rs.retained_hits;
             summary.retained_misses += rs.retained_misses;
             summary.replay_tokens_saved += rs.replay_tokens_saved;
+            summary.kv_blocks_peak = summary.kv_blocks_peak.max(rs.kv_blocks_peak);
+            summary.prefix_tokens_shared += rs.prefix_tokens_shared;
+            summary.cow_copies += rs.cow_copies;
             summary.overlap_secs += rs.overlap_secs;
             summary.lagged_trajectories += rs.lagged_trajectories();
             summary.reward_curve.push(m.reward_mean);

@@ -34,7 +34,9 @@ fn run_one(
     let mut cfg = arm_config(model, mode, 7);
     cfg.rollout.concurrency = concurrency;
     // KV budget at 70% of per-engine capacity → high N' pays the paper's
-    // memory-pressure preemption + re-prefill recomputation.
+    // memory-pressure preemption + re-prefill recomputation. Stated in
+    // tokens on purpose: this arm exercises the deprecated-field
+    // conversion path (blocks = ceil(tokens / engine.kv_block_size)).
     let manifest = crate::runtime::Manifest::load(
         std::path::Path::new(&cfg.artifacts_dir).join(model).as_path(),
     )?;

@@ -45,6 +45,11 @@ fn usage() -> ! {
            --retain-kv-across-sync  keep retained KV valid across weight\n\
                                     syncs (stale-KV continuation; extra\n\
                                     off-policy staleness, zero recompute)\n\
+           --no-prefix-sharing      disable paged-KV prompt-prefix sharing\n\
+                                    across GRPO groups (private blocks per\n\
+                                    sample)\n\
+           --kv-block-size N        tokens per KV block (default 16); KV\n\
+                                    budget via --set engine.kv_budget_blocks\n\
            --metrics <path.jsonl>   write per-step metrics\n\
            --set section.key=value  any config override (repeatable)\n\
            --preset <paper|scaled-small|scaled-tiny|sync-baseline|pipelined-small>"
@@ -90,6 +95,12 @@ fn build_config(args: &Args) -> Result<Config> {
     if args.flag("retain-kv-across-sync") {
         cfg.rollout.retain_kv_across_sync = true;
     }
+    if args.flag("no-prefix-sharing") {
+        cfg.engine.prefix_sharing = false;
+    }
+    if let Some(bs) = args.get("kv-block-size") {
+        cfg.set("engine.kv_block_size", bs)?;
+    }
     for kv in args.get_all("set") {
         let (k, v) = kv
             .split_once('=')
@@ -106,7 +117,15 @@ fn run() -> Result<()> {
     }
     let args = Args::parse(
         argv,
-        &["verbose", "no-is", "no-eval", "pipeline", "no-retain-kv", "retain-kv-across-sync"],
+        &[
+            "verbose",
+            "no-is",
+            "no-eval",
+            "pipeline",
+            "no-retain-kv",
+            "retain-kv-across-sync",
+            "no-prefix-sharing",
+        ],
     )?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("");
     match cmd {
@@ -170,6 +189,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "kv retention: hits {}  misses {}  replay tokens saved {}",
         summary.retained_hits, summary.retained_misses, summary.replay_tokens_saved
+    );
+    println!(
+        "paged kv: peak blocks {}  prefix tokens shared {}  cow copies {}",
+        summary.kv_blocks_peak, summary.prefix_tokens_shared, summary.cow_copies
     );
     if !args.flag("no-eval") {
         let report = sess.evaluate(2)?;

@@ -1,9 +1,11 @@
 //! JSONL metrics logging for training runs (loss/reward curves, stage
-//! timings, replay/retention accounting) — consumed by EXPERIMENTS.md and
-//! the figure benches. One JSON object per training step; replay cost
-//! (`replayed_tokens`) and the retention fast path's effect
-//! (`retained_hits`/`retained_misses`/`replay_tokens_saved`) are both
-//! logged so resume-affinity bench deltas are auditable per step.
+//! timings, replay/retention accounting, paged-KV gauges) — consumed by
+//! EXPERIMENTS.md and the figure benches. One JSON object per training
+//! step; replay cost (`replayed_tokens`), the retention fast path's effect
+//! (`retained_hits`/`retained_misses`/`replay_tokens_saved`), and the
+//! block economy (`kv_blocks_peak`/`prefix_tokens_shared`/`cow_copies`/
+//! `kv_frag`) are all logged so resume-affinity and kv-blocks bench deltas
+//! are auditable per step.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -69,6 +71,10 @@ impl MetricsLog {
             .int("retained_hits", rollout.retained_hits as i64)
             .int("retained_misses", rollout.retained_misses as i64)
             .int("replay_tokens_saved", rollout.replay_tokens_saved as i64)
+            .int("kv_blocks_peak", rollout.kv_blocks_peak as i64)
+            .int("prefix_tokens_shared", rollout.prefix_tokens_shared as i64)
+            .int("cow_copies", rollout.cow_copies as i64)
+            .num("kv_frag", rollout.mean_kv_frag())
             .num("t_overlap", m.t_overlap)
             .num("overlap_secs", rollout.overlap_secs)
             .int("lagged_trajs", rollout.lagged_trajectories() as i64)

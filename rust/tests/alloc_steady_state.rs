@@ -62,6 +62,7 @@ fn count_steady_state_allocs(sampling: SamplingParams, steps: usize) -> u64 {
             max_total: MAX_SEQ,
             sampling,
             retain: None,
+            prefix: None,
         })
         .unwrap();
     }

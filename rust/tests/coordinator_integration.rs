@@ -23,8 +23,8 @@ fn mock_coordinator_with(
     delay_us: u64,
 ) -> Coordinator {
     let engines = cfg.engine.engines;
-    let kv_budget = cfg.engine.kv_budget_tokens;
-    let pool = EnginePool::spawn(engines, SLOTS, kv_budget, cfg.train.seed, move |_id| {
+    let kv = cfg.engine.kv_cache_config();
+    let pool = EnginePool::spawn_kv(engines, SLOTS, kv, cfg.train.seed, move |_id| {
         Box::new(move || {
             let mut b = MockBackend::new(SLOTS, MAX_SEQ);
             b.min_len = min_len;
@@ -205,6 +205,36 @@ fn eval_fixed_sync_returns_group_per_task() {
         assert_eq!(g.task.prompt, task.prompt, "eval groups keep task order");
     }
     coord.shutdown();
+}
+
+/// Paged-KV prefix sharing end-to-end: with the default config (sharing
+/// on), a copris stage shares group prompt prefixes (the stats prove it),
+/// while a sharing-off twin of the same run shares nothing — and both
+/// deliver the identical exact batch.
+#[test]
+fn prefix_sharing_shares_group_prompts_across_the_stack() {
+    let cfg_on = base_cfg(RolloutMode::Copris, 8, 12);
+    assert!(cfg_on.engine.prefix_sharing, "sharing must default on");
+    let mut cfg_off = cfg_on.clone();
+    cfg_off.engine.prefix_sharing = false;
+
+    let mut on = mock_coordinator_with(cfg_on, 8, 12, 200);
+    let mut off = mock_coordinator_with(cfg_off, 8, 12, 200);
+    let mut ds_on = Dataset::train(12);
+    let mut ds_off = Dataset::train(12);
+    let a = on.rollout_stage(&mut ds_on).unwrap();
+    let b = off.rollout_stage(&mut ds_off).unwrap();
+    check_groups(&a, 4, 4).unwrap();
+    check_groups(&b, 4, 4).unwrap();
+    assert!(
+        a.stats.prefix_tokens_shared > 0,
+        "G=4 groups must share prompt prefixes: {:?}",
+        a.stats
+    );
+    assert!(a.stats.kv_blocks_peak > 0, "block gauge missing: {:?}", a.stats);
+    assert_eq!(b.stats.prefix_tokens_shared, 0, "sharing-off arm shared");
+    on.shutdown();
+    off.shutdown();
 }
 
 // ---------------------------------------------------------------------------

@@ -131,6 +131,7 @@ fn xla_retained_resume_matches_uninterrupted_stream() {
             max_total: cap,
             sampling,
             retain,
+            prefix: None,
         }
     };
 

@@ -27,6 +27,7 @@ fn run_engine_single_slot(
             max_total: MAX_SEQ,
             sampling,
             retain: None,
+            prefix: None,
         })
         .unwrap();
     }
@@ -122,6 +123,7 @@ fn multi_slot_runs_are_bitwise_reproducible() {
                 max_total: MAX_SEQ,
                 sampling: SamplingParams::default(),
                 retain: None,
+                prefix: None,
             })
             .unwrap();
         }

@@ -22,7 +22,12 @@
 //! - `rollout.retain_kv_across_sync`: stale-KV continuation stays on the
 //!   fast path across a sync and keeps every trajectory invariant intact;
 //! - eviction pressure (tight KV budget, retained-on vs retained-off live
-//!   drivers) degrades gracefully to replay with identical outputs.
+//!   drivers) degrades gracefully to replay with identical outputs;
+//! - paged-KV prompt-prefix sharing (`engine.prefix_sharing`, default on)
+//!   is accounting-only: token+logprob streams are bit-identical to the
+//!   sharing-off baseline across sync, copris, and retained-resume modes,
+//!   with the sharing PROVEN active (`prefix_tokens_shared > 0`) in the
+//!   live arm.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -312,6 +317,71 @@ fn retain_across_sync_continues_from_stale_kv() {
         }
     }
     coord.shutdown();
+}
+
+/// Paged-KV acceptance: with `engine.prefix_sharing` ON (the default), a
+/// group's samples hold one refcounted copy of their prompt-prefix blocks
+/// — and the harvested token + behaviour-logprob streams are BIT-IDENTICAL
+/// to a sharing-off driver across:
+/// - `sync` (all B·G upfront, groups share within the wave),
+/// - `copris` with retention on across THREE stages — so stage 2+ resumes
+///   run the retained-KV fast path and the replay path under sharing.
+/// The sharing must actually happen in the on-arm (`prefix_tokens_shared`
+/// accumulates; the off-arm stays at zero) — this is the ISSUE's
+/// acceptance criterion at coordinator level (the exact G-samples/1-copy
+/// block count is pinned by the engine unit test
+/// `group_prefix_blocks_are_shared_once`).
+#[test]
+fn prefix_sharing_is_bit_identical_across_modes() {
+    for mode in [RolloutMode::Sync, RolloutMode::Copris] {
+        let mut cfg_on = retained_cfg();
+        cfg_on.rollout.mode = mode;
+        assert!(cfg_on.engine.prefix_sharing, "prefix sharing must default on");
+        assert!(cfg_on.rollout.retain_kv, "retention stays on: resumes take the fast path");
+        let mut cfg_off = cfg_on.clone();
+        cfg_off.engine.prefix_sharing = false;
+
+        let mut on = Coordinator::new(
+            spawn_pool(1, 1, 0, cfg_on.train.seed, 4, 6, 200),
+            cfg_on.clone(),
+            MAX_SEQ,
+        );
+        let mut off = Coordinator::new(
+            spawn_pool(1, 1, 0, cfg_on.train.seed, 4, 6, 200),
+            cfg_off,
+            MAX_SEQ,
+        );
+        let mut ds_on = Dataset::train(cfg_on.train.seed);
+        let mut ds_off = Dataset::train(cfg_on.train.seed);
+        let mut shared_on = 0u64;
+        let mut shared_off = 0u64;
+        let mut hits_on = 0usize;
+        for stage in 0..3 {
+            let a = on.rollout_stage(&mut ds_on).unwrap();
+            let b = off.rollout_stage(&mut ds_off).unwrap();
+            assert_eq!(
+                fingerprint(&a),
+                fingerprint(&b),
+                "prefix sharing changed a stream: mode {mode:?} stage {stage}"
+            );
+            shared_on += a.stats.prefix_tokens_shared;
+            shared_off += b.stats.prefix_tokens_shared;
+            hits_on += a.stats.retained_hits;
+        }
+        assert!(
+            shared_on > 0,
+            "sharing-on arm never shared a prefix ({mode:?})"
+        );
+        assert_eq!(shared_off, 0, "sharing-off arm must not share");
+        if mode == RolloutMode::Copris {
+            // Over-generation leaves partials each stage; with retention
+            // on, stage 2+ resumes exercise the retained fast path UNDER
+            // prefix sharing.
+            assert!(hits_on > 0, "no retained-resume under sharing");
+        }
+        on.shutdown();
+        off.shutdown();
+    }
 }
 
 /// Eviction pressure: an eval between stages floods the single slot with

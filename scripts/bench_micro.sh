@@ -25,7 +25,16 @@ export COPRIS_BENCH_JSON="$ROOT/BENCH_micro.json"
 # The bench targets are harness=false binaries: `cargo bench --bench micro`
 # runs micro.rs::main(), which prints the table and writes the JSON fresh.
 cargo bench --manifest-path "$MANIFEST" --bench micro "$@"
-# resume_affinity APPENDS its rows to the same file (micro writes `rows`
-# last, so the bench splices before the closing bracket).
+# resume_affinity and kv_blocks MERGE their rows into the same file
+# idempotently (micro writes `rows` last, so bench::merge_bench_rows
+# splices before the closing bracket, replacing any stale rows of the same
+# bench).
 cargo bench --manifest-path "$MANIFEST" --bench resume_affinity
+cargo bench --manifest-path "$MANIFEST" --bench kv_blocks
+# The CI bench job uploads this file as an artifact; fail loudly if a
+# bench silently produced an empty rows[] so the gap can't reopen.
+if grep -q '"rows":\[\]' "$COPRIS_BENCH_JSON"; then
+  echo "bench_micro: ERROR — $COPRIS_BENCH_JSON has an empty rows[] array" >&2
+  exit 1
+fi
 echo "bench_micro: wrote $COPRIS_BENCH_JSON"

@@ -1,14 +1,17 @@
 #!/usr/bin/env bash
 # Tier-1 verification (what .github/workflows/ci.yml runs):
-#   cargo build --release --all-targets && cargo doc && cargo test -q
+#   cargo build --release --all-targets && cargo doc && cargo clippy && cargo test -q
 # --all-targets keeps benches/examples/bins compiling so they cannot rot;
 # the rustdoc step runs with warnings-as-errors so crate docs (missing_docs
 # in the documented module trees, broken intra-doc links — the anchors
-# docs/ARCHITECTURE.md points at) cannot rot either.
+# docs/ARCHITECTURE.md points at) cannot rot either; the clippy step gates
+# all targets at -D warnings (a short allow-list below silences the
+# noisiest purely-stylistic lints so the gate stays about defects).
 #
 # Modes:
-#   scripts/ci.sh            full tier-1 (build + doc + test)
+#   scripts/ci.sh            full tier-1 (build + doc + clippy + test)
 #   scripts/ci.sh --docs     rustdoc gate only (the CI `rustdoc` job)
+#   scripts/ci.sh --clippy   clippy gate only (the CI `clippy` job)
 #   scripts/ci.sh --bench    full tier-1, then refresh BENCH_micro.json
 set -euo pipefail
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -31,15 +34,36 @@ run_docs() {
   RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --manifest-path "$MANIFEST"
 }
 
+run_clippy() {
+  echo "== tier-1: cargo clippy --all-targets (-D warnings) =="
+  # Stylistic lints allowed by policy (they fire on long-standing idioms in
+  # this codebase — indexed lockstep loops over parallel slot arrays, the
+  # paper's argument-heavy experiment constructors); everything else,
+  # including every correctness/suspicious/perf lint, is an error.
+  cargo clippy --all-targets --manifest-path "$MANIFEST" -- \
+    -D warnings \
+    -A clippy::needless_range_loop \
+    -A clippy::too_many_arguments \
+    -A clippy::type_complexity \
+    -A clippy::unnecessary_map_or
+}
+
 if [ "${1:-}" = "--docs" ]; then
   run_docs
   echo "ci: docs OK"
   exit 0
 fi
 
+if [ "${1:-}" = "--clippy" ]; then
+  run_clippy
+  echo "ci: clippy OK"
+  exit 0
+fi
+
 echo "== tier-1: cargo build --release --all-targets =="
 cargo build --release --all-targets --manifest-path "$MANIFEST"
 run_docs
+run_clippy
 echo "== tier-1: cargo test -q =="
 cargo test -q --manifest-path "$MANIFEST"
 
