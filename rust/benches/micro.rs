@@ -163,6 +163,10 @@ fn main() {
         prefix_tokens_shared: 0,
         cow_copies: 0,
         preemptions: 0,
+        step_tokens: 4,
+        step_budget: 0,
+        prefill_chunks: 0,
+        prefill_stall_saved: 0.0,
     };
     let (tx, rx) = std::sync::mpsc::channel::<EngineEvent>();
     let s = time_fn(100, 2000, || {

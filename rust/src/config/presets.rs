@@ -58,10 +58,14 @@ pub fn preset(name: &str) -> Option<Config> {
             Some(c)
         }
         // CoPRIS with stage-pipelined execution: stage t+1 generates while
-        // the stage-t update computes; weights sync mid-flight.
+        // the stage-t update computes; weights sync mid-flight. Also runs
+        // the engines with continuous batching + chunked prefill (the two
+        // overlap layers compose: prompts interleave with decode inside
+        // each engine step, rollout overlaps training across steps).
         "pipelined-small" => {
             let mut c = scaled_preset("small");
             c.rollout.pipeline = true;
+            c.engine.step_token_budget = 48;
             Some(c)
         }
         _ => None,
@@ -98,6 +102,10 @@ mod tests {
         let pipe = preset("pipelined-small").unwrap();
         assert!(pipe.rollout.pipeline);
         assert_eq!(pipe.rollout.mode, RolloutMode::Copris);
+        assert!(
+            pipe.engine.step_token_budget > 0,
+            "pipelined preset runs the continuous-batching scheduler"
+        );
         assert!(preset("nope").is_none());
     }
 }

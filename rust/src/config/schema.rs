@@ -143,6 +143,17 @@ pub struct EngineConfig {
     /// Resume buffered partials via the chunked `replay` artifact instead
     /// of per-token decode (measured slower here — see EXPERIMENTS §Perf).
     pub chunked_replay: bool,
+    /// Continuous batching with chunked prefill: per-engine-step token
+    /// budget. Each step packs one decode token per running sequence plus
+    /// chunked prompt-prefill / resume-replay slices of admitted work, up
+    /// to this many tokens — long prompts interleave with decoding
+    /// instead of stalling co-resident sequences at admission. 0 (the
+    /// default) keeps legacy slot admission: whole-prompt prefill at
+    /// admission. Sensible values are ≥ slots-per-engine plus a chunk
+    /// (e.g. 32–64 on this substrate); greedy token streams are
+    /// bit-identical either way (pinned by
+    /// `rust/tests/continuous_batching.rs`).
+    pub step_token_budget: usize,
 }
 
 impl Default for EngineConfig {
@@ -155,6 +166,7 @@ impl Default for EngineConfig {
             prefix_sharing: true,
             max_new_tokens: 0,
             chunked_replay: false,
+            step_token_budget: 0,
         }
     }
 }
@@ -181,6 +193,15 @@ impl EngineConfig {
             block_size: self.kv_block_size.max(1),
             budget_blocks: self.budget_blocks(),
             prefix_sharing: self.prefix_sharing,
+        }
+    }
+
+    /// Full engine scheduling options (`EnginePool::spawn_opts`): paged-KV
+    /// config plus the continuous-batching step-token budget.
+    pub fn engine_opts(&self) -> crate::engine::EngineOpts {
+        crate::engine::EngineOpts {
+            kv: self.kv_cache_config(),
+            step_token_budget: self.step_token_budget,
         }
     }
 }
@@ -318,6 +339,7 @@ impl Config {
             ("engine", "prefix_sharing") => self.engine.prefix_sharing = parse_bool()?,
             ("engine", "max_new_tokens") => self.engine.max_new_tokens = parse_usize()?,
             ("engine", "chunked_replay") => self.engine.chunked_replay = parse_bool()?,
+            ("engine", "step_token_budget") => self.engine.step_token_budget = parse_usize()?,
             ("train", "steps") => self.train.steps = parse_usize()?,
             ("train", "lr") => self.train.lr = parse_f64()?,
             ("train", "adv_eps") => self.train.adv_eps = parse_f64()?,
@@ -400,6 +422,12 @@ impl Config {
         };
         s.push_str(&format!("| KV budget | {budget} |\n"));
         s.push_str(&format!("| Prompt prefix sharing (COW) | {} |\n", eng.prefix_sharing));
+        let packing = if eng.step_token_budget == 0 {
+            "off (slot admission)".to_string()
+        } else {
+            format!("{} tokens/step (chunked prefill)", eng.step_token_budget)
+        };
+        s.push_str(&format!("| Step token budget (continuous batching) | {packing} |\n"));
         s.push_str("| **Training Configuration** | |\n");
         s.push_str(&format!("| Global batch size | {} |\n", r.batch_prompts));
         s.push_str("| Optimizer | Adam |\n");
@@ -510,6 +538,31 @@ mod tests {
         assert!(table.contains("Prompt prefix sharing"), "{table}");
         let unlimited = Config::new("tiny").render_table();
         assert!(unlimited.contains("| KV budget | unlimited |"), "{unlimited}");
+    }
+
+    /// Continuous-batching knob: default off (slot admission), settable
+    /// via CLI/TOML, flows into `engine_opts`, and renders a Table-3 row.
+    #[test]
+    fn step_token_budget_defaults_off_and_plumbs_through() {
+        let mut c = Config::new("tiny");
+        assert_eq!(c.engine.step_token_budget, 0, "default is legacy slot admission");
+        assert_eq!(c.engine.engine_opts().step_token_budget, 0);
+        let table = c.render_table();
+        assert!(
+            table.contains("| Step token budget (continuous batching) | off (slot admission) |"),
+            "{table}"
+        );
+        c.set("engine.step_token_budget", "48").unwrap();
+        assert_eq!(c.engine.step_token_budget, 48);
+        let opts = c.engine.engine_opts();
+        assert_eq!(opts.step_token_budget, 48);
+        assert_eq!(opts.kv.block_size, c.engine.kv_block_size);
+        let table = c.render_table();
+        assert!(table.contains("48 tokens/step (chunked prefill)"), "{table}");
+        // TOML path hits the same setter.
+        let doc = "[engine]\nstep_token_budget = 32\n";
+        let c2 = Config::from_toml_str(doc).unwrap();
+        assert_eq!(c2.engine.step_token_budget, 32);
     }
 
     #[test]

@@ -10,6 +10,15 @@
 //! Sync (veRL), NaivePartial (Kimi-K1.5), CoPRIS and the fixed-prompt eval
 //! path are all parameterizations of this one driver ([`StagePolicy`]);
 //! none of them has its own event loop anymore.
+//!
+//! Note on admission timing: with continuous batching enabled
+//! (`engine.step_token_budget > 0`), an engine accepting a dispatch only
+//! reserves a slot — the prompt is ingested in budgeted chunks over later
+//! steps, so a dispatch no longer implies a same-step first token. The
+//! driver is agnostic to this (it already tolerates arbitrary delays
+//! between dispatch and the first event); only stats change:
+//! `RolloutStats` gains `prefill_chunks`, `t_prefill_stall_saved`, and
+//! `step_token_util`.
 
 use std::time::{Duration, Instant};
 

@@ -71,6 +71,17 @@ pub struct RolloutStats {
     /// side of prefix sharing: one partial-tail copy per diverging
     /// sample).
     pub cow_copies: u64,
+    /// Chunked-ingestion backend calls (prompt prefill chunks + resume
+    /// replay slices) across all engines this stage — 0 when
+    /// `engine.step_token_budget` is 0 (legacy slot admission).
+    pub prefill_chunks: u64,
+    /// Seconds of prefill/replay-chunk compute that ran in steps where
+    /// live decode lanes also progressed — the stall legacy admission
+    /// prefill would have serialized in front of those decodes.
+    pub t_prefill_stall_saved: f64,
+    /// Mean packed-step token utilization (step tokens / step budget)
+    /// across this stage's engine steps; 0.0 when the budget is off.
+    pub step_token_util: f64,
     /// Per-engine-step utilization samples.
     pub traces: Vec<StepTrace>,
     /// Response length of every trajectory completed this stage.
@@ -144,6 +155,17 @@ struct InFlight {
     version: u64,
 }
 
+/// Latest cumulative engine-lifetime gauges observed per engine (from step
+/// traces); `finish_stage` reports per-stage deltas against the
+/// `begin_stage` snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+struct EngineCounters {
+    prefix_tokens_shared: u64,
+    cow_copies: u64,
+    prefill_chunks: u64,
+    prefill_stall_saved: f64,
+}
+
 /// Where a buffered partial's KV is retained: the engine that generated it
 /// and the retention token its `Stopped` flush returned. This is the
 /// coordinator half of the retention ledger — a routing HINT, never a
@@ -182,12 +204,12 @@ pub struct Coordinator {
     /// the next weight sync. Only populated when `engine.prefix_sharing`
     /// is on.
     prefix_homes: HashMap<u64, Vec<usize>>,
-    /// Latest cumulative (prefix_tokens_shared, cow_copies) observed per
-    /// engine (from step traces)…
-    kv_seen: Vec<(u64, u64)>,
+    /// Latest cumulative engine gauges observed per engine (from step
+    /// traces)…
+    kv_seen: Vec<EngineCounters>,
     /// …and the snapshot taken at `begin_stage`, so `finish_stage` can
     /// report per-stage deltas of the engines' lifetime counters.
-    kv_base: Vec<(u64, u64)>,
+    kv_base: Vec<EngineCounters>,
     next_traj_id: u64,
     /// Current policy version (== trainer step); bumped by `sync_weights`.
     pub policy_version: u64,
@@ -212,8 +234,8 @@ impl Coordinator {
             engine_load: vec![0; engines],
             retained_at: HashMap::new(),
             prefix_homes: HashMap::new(),
-            kv_seen: vec![(0, 0); engines],
-            kv_base: vec![(0, 0); engines],
+            kv_seen: vec![EngineCounters::default(); engines],
+            kv_base: vec![EngineCounters::default(); engines],
             next_traj_id: 0,
             policy_version: 0,
             tokenizer: Tokenizer::new(),
@@ -713,19 +735,42 @@ impl Coordinator {
         let end = drv.done_at.unwrap_or_else(Instant::now);
         stats.wall = end.duration_since(drv.t0).as_secs_f64();
         stats.overlap_secs = stats.overlap_secs.min(stats.wall);
-        // Per-stage paged-KV deltas of the engines' cumulative counters.
+        // Per-stage deltas of the engines' cumulative gauges.
         stats.prefix_tokens_shared = self
             .kv_seen
             .iter()
             .zip(&self.kv_base)
-            .map(|(s, b)| s.0.saturating_sub(b.0))
+            .map(|(s, b)| s.prefix_tokens_shared.saturating_sub(b.prefix_tokens_shared))
             .sum();
         stats.cow_copies = self
             .kv_seen
             .iter()
             .zip(&self.kv_base)
-            .map(|(s, b)| s.1.saturating_sub(b.1))
+            .map(|(s, b)| s.cow_copies.saturating_sub(b.cow_copies))
             .sum();
+        stats.prefill_chunks = self
+            .kv_seen
+            .iter()
+            .zip(&self.kv_base)
+            .map(|(s, b)| s.prefill_chunks.saturating_sub(b.prefill_chunks))
+            .sum();
+        stats.t_prefill_stall_saved = self
+            .kv_seen
+            .iter()
+            .zip(&self.kv_base)
+            .map(|(s, b)| (s.prefill_stall_saved - b.prefill_stall_saved).max(0.0))
+            .sum();
+        // Mean packed-step token utilization over the stage's budgeted
+        // engine steps (0.0 when the continuous-batching budget is off).
+        let mut util_sum = 0.0f64;
+        let mut util_n = 0usize;
+        for t in &stats.traces {
+            if t.step_budget > 0 {
+                util_sum += t.step_tokens as f64 / t.step_budget as f64;
+                util_n += 1;
+            }
+        }
+        stats.step_token_util = if util_n == 0 { 0.0 } else { util_sum / util_n as f64 };
         Ok(RolloutOutput { groups, stats })
     }
 
@@ -783,12 +828,17 @@ impl Coordinator {
                 return Ok(flushed);
             }
             EngineEvent::Trace(t) => {
-                // The engine's prefix/COW counters are cumulative over its
-                // lifetime; remember the latest so finish_stage can report
-                // per-stage deltas against the begin_stage snapshot.
+                // The engine's prefix/COW/chunk counters are cumulative
+                // over its lifetime; remember the latest so finish_stage
+                // can report per-stage deltas against the begin_stage
+                // snapshot.
                 if let Some(seen) = self.kv_seen.get_mut(t.engine) {
-                    seen.0 = seen.0.max(t.prefix_tokens_shared);
-                    seen.1 = seen.1.max(t.cow_copies);
+                    seen.prefix_tokens_shared =
+                        seen.prefix_tokens_shared.max(t.prefix_tokens_shared);
+                    seen.cow_copies = seen.cow_copies.max(t.cow_copies);
+                    seen.prefill_chunks = seen.prefill_chunks.max(t.prefill_chunks);
+                    seen.prefill_stall_saved =
+                        seen.prefill_stall_saved.max(t.prefill_stall_saved);
                 }
                 let d = self.drv_mut();
                 d.stats.kv_blocks_peak = d.stats.kv_blocks_peak.max(t.kv_blocks);

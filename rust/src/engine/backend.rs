@@ -42,6 +42,31 @@ pub trait Backend {
     fn replay(&mut self, _slot: usize, _chunk: &[i32], _start: usize) -> Result<Option<Vec<f32>>> {
         Ok(None)
     }
+    /// Chunked prompt ingestion (continuous batching): feed the prompt
+    /// slice covering positions `[start, start + chunk.len())` to `slot`.
+    /// Chunks of one prompt arrive strictly in order and each is ≤ p_max
+    /// tokens; `start == 0` begins a fresh prompt, discarding any
+    /// partially staged one (a mid-prefill preemption leaves staged chunks
+    /// behind — the next occupant's first chunk resets them). With `last`,
+    /// the prompt is complete: the backend executes the prefill and
+    /// returns the next-token logits `[V]`, bit-identical to what
+    /// [`Backend::prefill`] returns for the whole prompt.
+    ///
+    /// Backends without an incremental prefill kernel stage chunks
+    /// host-side and run one prefill on the final chunk; the engine's
+    /// step-token budget (not this call) is what spreads prompt ingestion
+    /// across steps on such backends. The default errors — only backends
+    /// that opt in may be driven with `engine.step_token_budget > 0`.
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        chunk: &[i32],
+        start: usize,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let _ = (slot, chunk, start, last);
+        anyhow::bail!("backend does not support chunked prefill (engine.step_token_budget)")
+    }
     /// KV retention: keep `slot`'s resident KV valid after the sequence is
     /// flushed, so a later [`Backend::resume_retained`] can continue
     /// decoding from it with zero replay. Returns `Ok(false)` when the
@@ -106,6 +131,14 @@ pub struct XlaBackend {
     /// current slot-contiguous AOT kernel addresses KV by (slot, position)
     /// directly, so the table is tracked-but-not-yet-consumed.
     block_tables: Vec<Vec<u32>>,
+    /// Host-side packed staging for chunked prefill: per-slot prompt
+    /// chunks accumulate here and execute as ONE padded prefill launch on
+    /// the final chunk (the AOT prefill artifact has a fixed p_max layout,
+    /// so there is nothing to gain from partial launches — the engine's
+    /// step-token budget is what interleaves ingestion with decode).
+    /// Buffers are reused across prompts, so steady-state chunk staging
+    /// does not allocate once per-slot capacity has warmed up.
+    prefill_staged: Vec<Vec<i32>>,
     /// Use the chunked `replay` artifact for resumption instead of
     /// per-token decode. MEASURED SLOWER on this substrate (see
     /// EXPERIMENTS.md §Perf): per-token replay rides along in batched
@@ -128,6 +161,7 @@ impl XlaBackend {
             params: params_buf,
             engine_state,
             block_tables: vec![Vec::new(); slots],
+            prefill_staged: vec![Vec::new(); slots],
             chunked_replay: false,
         })
     }
@@ -164,9 +198,42 @@ impl Backend for XlaBackend {
     }
 
     fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+        self.prefill_staged[slot].clear();
         let (es, logits) = self.rt.prefill(&self.params, &self.engine_state, prompt, slot)?;
         self.engine_state = es;
         Ok(logits)
+    }
+
+    // Chunked prefill: stage chunks host-side in the packed per-slot
+    // layout, execute one prefill launch when the prompt completes. The
+    // returned logits are bit-identical to a whole-prompt `prefill` by
+    // construction (same artifact, same input).
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        chunk: &[i32],
+        start: usize,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        if start == 0 {
+            self.prefill_staged[slot].clear();
+        }
+        anyhow::ensure!(
+            start == self.prefill_staged[slot].len(),
+            "slot {slot}: prefill chunk starts at {start}, staged {}",
+            self.prefill_staged[slot].len()
+        );
+        self.prefill_staged[slot].extend_from_slice(chunk);
+        if !last {
+            return Ok(None);
+        }
+        let prompt = std::mem::take(&mut self.prefill_staged[slot]);
+        let (es, logits) = self.rt.prefill(&self.params, &self.engine_state, &prompt, slot)?;
+        self.engine_state = es;
+        // Hand the (now empty) buffer back so its capacity is reused.
+        self.prefill_staged[slot] = prompt;
+        self.prefill_staged[slot].clear();
+        Ok(Some(logits))
     }
 
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
@@ -241,7 +308,9 @@ pub struct MockBackend {
     slots: usize,
     vocab: usize,
     max_seq: usize,
-    p_max: usize,
+    /// Max prompt / chunk length per prefill call (default 24; benches
+    /// crank it up for long-prompt continuous-batching mixes).
+    pub p_max: usize,
     /// Per-slot: (prompt_hash, generated_count) driving the script.
     slot_script: Vec<(u64, usize)>,
     /// Retained-slot script stash: the mock's "KV" is its script cursor,
@@ -252,6 +321,23 @@ pub struct MockBackend {
     /// weight sync continues the OLD script — exactly the stale-KV
     /// semantics a real backend has.
     retained_script: std::collections::HashMap<usize, (u64, usize)>,
+    /// Chunked-prefill staging: per-slot prompt chunks accumulated so far.
+    /// Every chunk boundary is validated bit-exactly (strictly in-order
+    /// ingestion; `start == 0` resets — mid-prefill preemption semantics).
+    prefill_staged: Vec<Vec<i32>>,
+    /// Prompt length of each slot's last completed prefill (replay-slice
+    /// boundary validation: a slice must start at plen + tokens already
+    /// replayed).
+    slot_plen: Vec<usize>,
+    /// Ingestion cursor stash, keyed by slot: (prompt hash, resume tokens
+    /// replayed so far). Like `retained_script`, this exists because the
+    /// lockstep `decode_into` advances EVERY slot's live cursor each step,
+    /// so a slot whose resume is being slice-replayed across several
+    /// engine steps drifts in between slices — the stash, not the live
+    /// cursor, is the source of truth for the next slice. The final slice
+    /// (and the final prompt chunk) writes the live cursor too, so decode
+    /// picks up exactly where ingestion ended.
+    ingest: std::collections::HashMap<usize, (u64, usize)>,
     /// Per-slot installed KV block table (paged-KV enforcement state).
     blk_tables: Vec<Vec<u32>>,
     /// Resident token count the last install of each slot claimed.
@@ -273,8 +359,21 @@ pub struct MockBackend {
     pub prefill_calls: usize,
     /// Count of retained-slot resumes (fast-path assertions in tests).
     pub resume_retained_calls: usize,
+    /// Count of `prefill_chunk` calls (continuous-batching cost
+    /// accounting in tests).
+    pub prefill_chunk_calls: usize,
+    /// Count of accepted `replay` slices.
+    pub replay_calls: usize,
+    /// Accept chunked `replay` slices (mirrors `XlaBackend.chunked_replay`;
+    /// off = decline with `None`, so resumes ride per-token decode replay
+    /// exactly like the legacy path).
+    pub chunked_replay: bool,
     /// Artificial per-decode latency (tests that need slow engines).
     pub decode_delay: Option<std::time::Duration>,
+    /// Artificial per-token prefill/replay-slice latency (continuous-
+    /// batching benches: simulates the prefill compute that stalls
+    /// co-resident decodes under slot admission).
+    pub prefill_delay_per_token: Option<std::time::Duration>,
 }
 
 impl MockBackend {
@@ -287,6 +386,9 @@ impl MockBackend {
             p_max: 24,
             slot_script: vec![(0, 0); slots],
             retained_script: std::collections::HashMap::new(),
+            prefill_staged: vec![Vec::new(); slots],
+            slot_plen: vec![0; slots],
+            ingest: std::collections::HashMap::new(),
             blk_tables: vec![Vec::new(); slots],
             blk_lens: vec![0; slots],
             blk_size: 0,
@@ -297,7 +399,11 @@ impl MockBackend {
             decode_calls: 0,
             prefill_calls: 0,
             resume_retained_calls: 0,
+            prefill_chunk_calls: 0,
+            replay_calls: 0,
+            chunked_replay: false,
             decode_delay: None,
+            prefill_delay_per_token: None,
         }
     }
 
@@ -364,9 +470,93 @@ impl Backend for MockBackend {
 
     fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
         self.prefill_calls += 1;
+        if let Some(d) = self.prefill_delay_per_token {
+            std::thread::sleep(d * prompt.len() as u32);
+        }
+        self.prefill_staged[slot].clear();
         let h = Self::hash(prompt, self.params_epoch);
         self.slot_script[slot] = (h, 0);
+        self.slot_plen[slot] = prompt.len();
+        self.ingest.insert(slot, (h, 0));
         Ok(self.logits_for(h, 0, self.min_len + (h % self.spread as u64) as usize))
+    }
+
+    /// Chunked prompt ingestion with bit-exact boundary validation: chunks
+    /// must be non-empty, ≤ p_max, strictly in order (`start` == tokens
+    /// staged so far; `start == 0` resets the stage — the mid-prefill
+    /// preemption contract), and the accumulated prompt may never exceed
+    /// p_max. The final chunk computes the script hash over the FULL
+    /// staged prompt and returns exactly the logits `prefill` would.
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        chunk: &[i32],
+        start: usize,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        use anyhow::ensure;
+        ensure!(!chunk.is_empty(), "slot {slot}: empty prefill chunk");
+        ensure!(chunk.len() <= self.p_max, "slot {slot}: chunk exceeds p_max");
+        if let Some(d) = self.prefill_delay_per_token {
+            std::thread::sleep(d * chunk.len() as u32);
+        }
+        if start == 0 {
+            self.prefill_staged[slot].clear();
+        }
+        ensure!(
+            start == self.prefill_staged[slot].len(),
+            "slot {slot}: chunk starts at {start} but {} tokens are staged (boundary drift)",
+            self.prefill_staged[slot].len()
+        );
+        ensure!(
+            start + chunk.len() <= self.p_max,
+            "slot {slot}: staged prompt would exceed p_max"
+        );
+        self.prefill_staged[slot].extend_from_slice(chunk);
+        self.prefill_chunk_calls += 1;
+        if !last {
+            return Ok(None);
+        }
+        let plen = self.prefill_staged[slot].len();
+        let h = Self::hash(&self.prefill_staged[slot], self.params_epoch);
+        self.prefill_staged[slot].clear();
+        self.slot_script[slot] = (h, 0);
+        self.slot_plen[slot] = plen;
+        self.ingest.insert(slot, (h, 0));
+        Ok(Some(self.logits_for(h, 0, self.min_len + (h % self.spread as u64) as usize)))
+    }
+
+    /// Chunked resume replay (opt-in via `chunked_replay`, like the PJRT
+    /// backend). A slice must start exactly at `plen + replayed` for the
+    /// slot's in-flight ingestion — validated against the drift-immune
+    /// `ingest` stash, NOT the live cursor (see the field docs).
+    fn replay(&mut self, slot: usize, chunk: &[i32], start: usize) -> Result<Option<Vec<f32>>> {
+        use anyhow::ensure;
+        if !self.chunked_replay {
+            return Ok(None);
+        }
+        ensure!(!chunk.is_empty(), "slot {slot}: empty replay slice");
+        ensure!(chunk.len() <= self.p_max, "slot {slot}: replay slice exceeds p_max");
+        if let Some(d) = self.prefill_delay_per_token {
+            std::thread::sleep(d * chunk.len() as u32);
+        }
+        let (h, fed) = *self
+            .ingest
+            .get(&slot)
+            .ok_or_else(|| anyhow::anyhow!("slot {slot}: replay before prefill"))?;
+        ensure!(
+            start == self.slot_plen[slot] + fed,
+            "slot {slot}: replay slice starts at {start}, expected {} (plen {} + fed {fed})",
+            self.slot_plen[slot] + fed,
+            self.slot_plen[slot]
+        );
+        let fed = fed + chunk.len();
+        self.ingest.insert(slot, (h, fed));
+        // Sync the live cursor too: if this was the final slice, the
+        // slot's next decode step continues from position `fed`.
+        self.slot_script[slot] = (h, fed);
+        self.replay_calls += 1;
+        Ok(Some(self.logits_for(h, fed, self.min_len + (h % self.spread as u64) as usize)))
     }
 
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
@@ -411,6 +601,9 @@ impl Backend for MockBackend {
             .remove(&slot)
             .ok_or_else(|| anyhow::anyhow!("slot {slot} has no retained script"))?;
         self.slot_script[slot] = (h, count);
+        // Any in-flight ingestion cursor belonged to a previous occupant.
+        self.ingest.remove(&slot);
+        self.prefill_staged[slot].clear();
         self.resume_retained_calls += 1;
         Ok(())
     }
@@ -450,6 +643,11 @@ impl Backend for MockBackend {
         );
         if blocks.is_empty() {
             ensure!(len_tokens == 0, "empty table claims {len_tokens} tokens");
+            // A reset releases the slot: discard any partially staged
+            // prompt and in-flight ingestion cursor (mid-chunk preemption
+            // / flush — the next occupant starts from a clean stage).
+            self.prefill_staged[slot].clear();
+            self.ingest.remove(&slot);
         } else {
             ensure!(len_tokens > 0, "non-empty table with 0 tokens");
             let want = len_tokens.div_ceil(block_size);

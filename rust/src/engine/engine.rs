@@ -16,6 +16,25 @@
 //! incremental, maintained on admit/finish/preempt instead of O(S) slot
 //! scans per query.
 //!
+//! # Continuous batching with chunked prefill (the packed step)
+//!
+//! With `engine.step_token_budget > 0`, each engine step is assembled
+//! against a token budget instead of admitting work per slot: every
+//! caught-up sequence contributes one decode token, and whatever budget
+//! remains is spent feeding *chunked prefill* slices of newly admitted
+//! prompts ([`Backend::prefill_chunk`]) and replay slices of resumed
+//! partials ([`Backend::replay`]) — so a long prompt (or a buffered
+//! partial's replay) interleaves with decoding instead of stalling every
+//! co-resident sequence for a whole admission prefill. Admission then
+//! reserves a slot (and attaches any shared prompt prefix) but no longer
+//! implies a same-step first token; block charging follows the chunks
+//! (per-chunk, not per-admission). Chunking changes *when* tokens are
+//! computed, never *which* tokens: greedy streams are bit-identical with
+//! the budget on or off (pinned by `tests/continuous_batching.rs` against
+//! the frozen reference oracle). A budget of 0 keeps the legacy
+//! slot-admission schedule — the baseline arm
+//! `benches/continuous_batching.rs` measures against.
+//!
 //! # Paged KV (the block economy)
 //!
 //! KV residency is charged in fixed-size refcounted blocks
@@ -187,6 +206,19 @@ pub struct StepTrace {
     pub cow_copies: u64,
     /// Cumulative preemption count.
     pub preemptions: u64,
+    /// Tokens this step actually computed: one per decode lane plus every
+    /// prefill-chunk / replay-slice token the ingestion pump fed.
+    pub step_tokens: usize,
+    /// The step-token budget the step was packed against (0 = legacy slot
+    /// admission — no packing; `step_tokens` is then just the lane count).
+    pub step_budget: usize,
+    /// Cumulative chunked-ingestion backend calls (engine lifetime; the
+    /// coordinator differences per-stage deltas).
+    pub prefill_chunks: u64,
+    /// Cumulative seconds of chunk compute overlapped with live decode
+    /// lanes (engine lifetime) — the admission-prefill stall the packed
+    /// schedule avoided imposing on co-resident decodes.
+    pub prefill_stall_saved: f64,
 }
 
 /// Events flowing from engine threads back to the coordinator.
@@ -279,14 +311,40 @@ struct BusySlot {
     replayed: usize,
     /// This assignment began from a retained slot (metrics).
     resumed_from_kv: bool,
-    /// Token to feed at the next decode step, at position `pos`.
+    /// Token to feed at the next decode step, at position `pos`. During
+    /// chunked ingestion, `pos` is the backend's next WRITE position
+    /// instead (0 mid-prompt — the prefill launch rewrites `[0, plen)` —
+    /// then `plen + replay_fed` while slicing replay).
     next_token: i32,
     pos: i32,
-    /// KV block chain covering the slot's resident tokens (always exactly
-    /// `pos + 1` tokens).
+    /// KV block chain covering the slot's resident tokens: exactly
+    /// `pos + 1` tokens once decoding, the ingested span while a chunked
+    /// prefill is still in flight (per-chunk block charging).
     pages: PageTable,
     /// Admission order (LIFO preemption victim selection, like vLLM).
     admitted_seq: u64,
+    /// Prompt tokens fed to the backend so far. Legacy (unchunked)
+    /// admission ingests the whole prompt synchronously, so this equals
+    /// `prompt.len()` from the start; under continuous batching it
+    /// advances one budgeted chunk at a time.
+    prompt_fed: usize,
+    /// Resume replay is still being (or about to be) slice-fed through
+    /// `Backend::replay` by the chunked scheduler. Cleared when the
+    /// backend declines a slice (the slot then rides per-token decode
+    /// replay exactly like the legacy path) or when replay completes.
+    slice_replay: bool,
+}
+
+impl BusySlot {
+    fn plen(&self) -> usize {
+        self.item.prompt.len()
+    }
+
+    /// Still ingesting (prompt chunks or replay slices pending) — not yet
+    /// decode-eligible. Always false in legacy (unchunked) mode.
+    fn ingesting(&self) -> bool {
+        self.prompt_fed < self.item.prompt.len() || self.slice_replay
+    }
 }
 
 /// Ledger entry for a flushed slot whose KV stayed resident. Everything a
@@ -349,6 +407,20 @@ pub struct Engine<B: Backend> {
     retain_counter: u64,
     preemptions: u64,
     t0: Instant,
+    /// Per-step token budget for continuous batching: each engine step
+    /// packs one decode token per running sequence plus chunked-prefill /
+    /// replay slices of admitted work, up to this many tokens. 0 = legacy
+    /// slot admission (whole-prompt prefill at admission — the baseline
+    /// arm `benches/continuous_batching.rs` compares against).
+    step_budget: usize,
+    /// Cumulative chunked-ingestion backend calls (prompt chunks + replay
+    /// slices) — 0 in legacy mode.
+    pub prefill_chunks: u64,
+    /// Cumulative seconds of prefill/replay-chunk compute that ran while
+    /// live decode lanes also made progress this step — the stall the
+    /// legacy design would have imposed on those co-resident decodes by
+    /// prefilling whole prompts at admission.
+    pub prefill_stall_saved: f64,
     /// Cumulative decode steps (cost accounting).
     pub decode_steps: u64,
     /// Cumulative replayed (recomputed) tokens.
@@ -369,8 +441,31 @@ pub struct Engine<B: Backend> {
     // -- persistent step scratch (no per-step heap allocation) --------------
     step_tokens: Vec<i32>,
     step_pos: Vec<i32>,
+    /// Decode-lane membership snapshot for the current step (slots that
+    /// were caught up when the step was assembled; slots finishing
+    /// ingestion mid-step start decoding next step).
+    step_lane: Vec<bool>,
+    /// FIFO scratch for the ingestion pump: (admitted_seq, slot).
+    ingest_scratch: Vec<(u64, usize)>,
+    /// Reusable copy of the slot-under-pump's resume tokens, so backend
+    /// replay calls can borrow them while the slot table stays untouched
+    /// (`b.item.resume` is never moved out — an error mid-pump cannot
+    /// corrupt slot state).
+    resume_scratch: Vec<i32>,
     logits_buf: Vec<f32>,
     scratch: SamplerScratch,
+}
+
+/// Engine scheduling + KV options bundle ([`Engine::with_opts`] /
+/// `EnginePool::spawn_opts`): the paged-KV configuration plus the
+/// continuous-batching step-token budget.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOpts {
+    /// Paged-KV configuration (block size, blocks budget, prefix sharing).
+    pub kv: KvCacheConfig,
+    /// Per-step token budget for continuous batching with chunked prefill
+    /// (0 = legacy slot admission). See `EngineConfig::step_token_budget`.
+    pub step_token_budget: usize,
 }
 
 impl<B: Backend> Engine<B> {
@@ -388,8 +483,16 @@ impl<B: Backend> Engine<B> {
     }
 
     /// Build an engine with an explicit paged-KV configuration and a
-    /// per-engine-derived RNG seed.
+    /// per-engine-derived RNG seed (legacy slot admission; see
+    /// [`Engine::with_opts`] for the continuous-batching scheduler).
     pub fn with_kv(id: usize, backend: B, kv_cfg: KvCacheConfig, seed: u64) -> Engine<B> {
+        Self::with_opts(id, backend, EngineOpts { kv: kv_cfg, step_token_budget: 0 }, seed)
+    }
+
+    /// Build an engine with full scheduling options: paged-KV config plus
+    /// the continuous-batching step-token budget.
+    pub fn with_opts(id: usize, backend: B, opts: EngineOpts, seed: u64) -> Engine<B> {
+        let kv_cfg = opts.kv;
         let s = backend.slots();
         let mut slots = Vec::with_capacity(s);
         for _ in 0..s {
@@ -414,6 +517,9 @@ impl<B: Backend> Engine<B> {
             retain_counter: 0,
             preemptions: 0,
             t0: Instant::now(),
+            step_budget: opts.step_token_budget,
+            prefill_chunks: 0,
+            prefill_stall_saved: 0.0,
             decode_steps: 0,
             replayed_tokens: 0,
             retained_resumes: 0,
@@ -423,9 +529,18 @@ impl<B: Backend> Engine<B> {
             kv_resident: 0,
             step_tokens: vec![0; s],
             step_pos: vec![0; s],
+            step_lane: vec![false; s],
+            ingest_scratch: Vec::with_capacity(s),
+            resume_scratch: Vec::new(),
             logits_buf: Vec::new(),
             scratch: SamplerScratch::new(),
         }
+    }
+
+    /// The continuous-batching step-token budget (0 = legacy slot
+    /// admission).
+    pub fn step_token_budget(&self) -> usize {
+        self.step_budget
     }
 
     /// The generation backend (test inspection).
@@ -498,11 +613,17 @@ impl<B: Backend> Engine<B> {
     }
 
     /// Install `b` into slot `i`, maintaining the incremental counters.
+    /// Residency is charged from the page table: `pos + 1` tokens for a
+    /// decoding slot, the ingested span while chunked prefill is in
+    /// flight.
     fn occupy(&mut self, i: usize, b: Box<BusySlot>) {
         debug_assert!(matches!(self.slots[i], SlotState::Idle));
-        debug_assert_eq!(b.pages.tokens(), b.pos as usize + 1, "page/pos drift");
+        debug_assert!(
+            b.ingesting() || b.pages.tokens() == b.pos as usize + 1,
+            "page/pos drift"
+        );
         self.busy_count += 1;
-        self.kv_resident += b.pos as usize + 1;
+        self.kv_resident += b.pages.tokens();
         self.slots[i] = SlotState::Busy(b);
     }
 
@@ -514,7 +635,7 @@ impl<B: Backend> Engine<B> {
         match std::mem::replace(&mut self.slots[i], SlotState::Idle) {
             SlotState::Busy(b) => {
                 self.busy_count -= 1;
-                self.kv_resident -= b.pos as usize + 1;
+                self.kv_resident -= b.pages.tokens();
                 Some(b)
             }
             other => {
@@ -542,7 +663,7 @@ impl<B: Backend> Engine<B> {
             unreachable!()
         };
         self.retained_count -= 1;
-        self.kv_resident -= rs.pos as usize + 1;
+        self.kv_resident -= rs.pages.tokens();
         self.retained_evictions += 1;
         self.free_slot_kv(i, &mut rs.pages);
         let _ = self.backend.release_retained(i);
@@ -638,7 +759,7 @@ impl<B: Backend> Engine<B> {
                 // residency (tokens AND block refs) charged against the
                 // budget.
                 self.retained_count += 1;
-                self.kv_resident += rs.pos as usize + 1;
+                self.kv_resident += rs.pages.tokens();
                 let mut result = finish(*b, FinishReason::Stopped);
                 result.retained = Some(token);
                 events.push(EngineEvent::Done { engine: self.id, result });
@@ -657,8 +778,11 @@ impl<B: Backend> Engine<B> {
     }
 
     /// One scheduler iteration: admit pending work, enforce the KV budget,
-    /// run one decode step, process sampled tokens. Steady state (all slots
-    /// mid-generation) performs no heap allocation in engine/sampler code.
+    /// run one packed step — a decode token for every caught-up sequence,
+    /// plus (under a step-token budget) chunked prefill and replay slices
+    /// for mid-ingestion slots — and process sampled tokens. Steady state
+    /// (all slots mid-generation) performs no heap allocation in
+    /// engine/sampler code.
     pub fn step(&mut self, events: &mut Vec<EngineEvent>) -> Result<()> {
         self.admit(events)?;
         self.enforce_kv_budget(events);
@@ -669,15 +793,34 @@ impl<B: Backend> Engine<B> {
         let s = self.slots.len();
         let v = self.backend.vocab();
         let bs = self.kv_cfg.block_size;
+        // -- assemble the packed step: decode lanes ------------------------
+        // Lane membership is snapshotted BEFORE the ingestion pump runs: a
+        // slot whose ingestion completes this step samples its first token
+        // from the chunk logits and starts decoding NEXT step — the same
+        // step boundary legacy admission has between its prefill-time
+        // sample and the first decode feed.
+        let mut decode_lanes = 0usize;
         for (i, slot) in self.slots.iter().enumerate() {
             match slot {
-                SlotState::Busy(b) => {
+                SlotState::Busy(b) if !b.ingesting() => {
                     self.step_tokens[i] = b.next_token;
                     self.step_pos[i] = b.pos;
+                    self.step_lane[i] = true;
+                    decode_lanes += 1;
+                }
+                SlotState::Busy(b) => {
+                    // Mid-ingestion: park the lane at the backend's next
+                    // write position — the next prefill-chunk / replay
+                    // launch overwrites whatever the lockstep decode put
+                    // there before it is ever attended.
+                    self.step_tokens[i] = 0;
+                    self.step_pos[i] = b.pos;
+                    self.step_lane[i] = false;
                 }
                 SlotState::Idle => {
                     self.step_tokens[i] = 0;
                     self.step_pos[i] = 0;
+                    self.step_lane[i] = false;
                 }
                 SlotState::Retained(rs) => {
                     // Park the lane on the pending feed position: whatever
@@ -686,62 +829,86 @@ impl<B: Backend> Engine<B> {
                     // attended (see `Backend::retain_slot`'s contract).
                     self.step_tokens[i] = 0;
                     self.step_pos[i] = rs.pos;
+                    self.step_lane[i] = false;
                 }
             }
         }
 
         let t_step = Instant::now();
-        self.backend.decode_into(&self.step_tokens, &self.step_pos, &mut self.logits_buf)?;
-        let dur = t_step.elapsed().as_secs_f64();
-        self.decode_steps += 1;
+        let mut dur = 0.0;
+        if decode_lanes > 0 {
+            self.backend.decode_into(&self.step_tokens, &self.step_pos, &mut self.logits_buf)?;
+            dur = t_step.elapsed().as_secs_f64();
+            self.decode_steps += 1;
 
-        for i in 0..s {
-            let SlotState::Busy(b) = &mut self.slots[i] else { continue };
-            b.pos += 1;
-            self.kv_resident += 1;
-            // Charge the new position's block: a fresh block at a boundary,
-            // a COW copy when the tail is shared — either re-installs the
-            // backend block table; the common within-block case is free.
-            let changed = b
-                .pages
-                .append_one(&mut self.kv)
-                .expect("engine block arena is unbounded");
-            if changed {
-                self.backend.set_block_table(i, b.pages.block_ids(), b.pages.tokens(), bs)?;
-            }
-            if b.replay_fed < b.item.resume.len() {
-                // We just fed resume[replay_fed]; keep replaying.
-                b.replay_fed += 1;
-                b.replayed += 1;
-                self.replayed_tokens += 1;
-                if b.replay_fed < b.item.resume.len() {
-                    b.next_token = b.item.resume[b.replay_fed];
+            for i in 0..s {
+                if !self.step_lane[i] {
                     continue;
                 }
-                // Replay complete: this step's logits sample the first new
-                // token (fall through).
-            }
-            let row = &self.logits_buf[i * v..(i + 1) * v];
-            let (tok, lp) =
-                sample_token_with(row, &b.item.sampling, &mut self.rng, &mut self.scratch);
-            b.generated.push(tok);
-            b.logprobs.push(lp);
-            let total_len = b.item.prompt.len() + b.item.resume.len() + b.generated.len();
-            let reason = if tok == tokenizer::EOS {
-                Some(FinishReason::Eos)
-            } else if total_len >= b.item.max_total {
-                Some(FinishReason::LengthCap)
-            } else {
-                None
-            };
-            match reason {
-                Some(r) => {
-                    let mut b = self.vacate(i).expect("busy slot");
-                    self.free_slot_kv(i, &mut b.pages);
-                    events.push(EngineEvent::Done { engine: self.id, result: finish(*b, r) });
+                let SlotState::Busy(b) = &mut self.slots[i] else { continue };
+                b.pos += 1;
+                self.kv_resident += 1;
+                // Charge the new position's block: a fresh block at a
+                // boundary, a COW copy when the tail is shared — either
+                // re-installs the backend block table; the common
+                // within-block case is free.
+                let changed = b
+                    .pages
+                    .append_one(&mut self.kv)
+                    .expect("engine block arena is unbounded");
+                if changed {
+                    self.backend.set_block_table(i, b.pages.block_ids(), b.pages.tokens(), bs)?;
                 }
-                None => b.next_token = tok,
+                if b.replay_fed < b.item.resume.len() {
+                    // We just fed resume[replay_fed]; keep replaying.
+                    b.replay_fed += 1;
+                    b.replayed += 1;
+                    self.replayed_tokens += 1;
+                    if b.replay_fed < b.item.resume.len() {
+                        b.next_token = b.item.resume[b.replay_fed];
+                        continue;
+                    }
+                    // Replay complete: this step's logits sample the first
+                    // new token (fall through).
+                }
+                let row = &self.logits_buf[i * v..(i + 1) * v];
+                let (tok, lp) =
+                    sample_token_with(row, &b.item.sampling, &mut self.rng, &mut self.scratch);
+                b.generated.push(tok);
+                b.logprobs.push(lp);
+                let total_len = b.item.prompt.len() + b.item.resume.len() + b.generated.len();
+                let reason = if tok == tokenizer::EOS {
+                    Some(FinishReason::Eos)
+                } else if total_len >= b.item.max_total {
+                    Some(FinishReason::LengthCap)
+                } else {
+                    None
+                };
+                match reason {
+                    Some(r) => {
+                        let mut b = self.vacate(i).expect("busy slot");
+                        self.free_slot_kv(i, &mut b.pages);
+                        events.push(EngineEvent::Done { engine: self.id, result: finish(*b, r) });
+                    }
+                    None => b.next_token = tok,
+                }
             }
+        }
+
+        // -- chunked ingestion: spend the budget's remainder ---------------
+        // Runs AFTER the decode so a slot finishing ingestion here is not
+        // double-advanced by this step's lockstep decode (it was parked in
+        // the lane snapshot above). Decode lanes take budget priority: a
+        // running sequence always gets its token; prefill waits.
+        let mut step_tokens_done = decode_lanes;
+        if self.step_budget > 0 {
+            let mut budget_left = self.step_budget.saturating_sub(decode_lanes);
+            self.pump_ingestion(
+                &mut budget_left,
+                &mut step_tokens_done,
+                decode_lanes > 0,
+                events,
+            )?;
         }
 
         // Per-sequence block-chain total (shared blocks count per chain)
@@ -773,8 +940,297 @@ impl<B: Backend> Engine<B> {
             prefix_tokens_shared: self.prefix_tokens_shared,
             cow_copies: self.kv.cow_copies(),
             preemptions: self.preemptions,
+            step_tokens: step_tokens_done,
+            step_budget: self.step_budget,
+            prefill_chunks: self.prefill_chunks,
+            prefill_stall_saved: self.prefill_stall_saved,
         }));
         Ok(())
+    }
+
+    /// Grow slot `i`'s chain to cover `tokens` resident tokens (per-chunk
+    /// block charging), maintaining the incremental KV counter and
+    /// re-installing the backend block table when the chain changed (a
+    /// fresh block, or a COW replacement of a shared partial tail). No-op
+    /// when the chain already covers `tokens` — e.g. chunks landing inside
+    /// an attached shared prompt prefix.
+    fn charge_ingested(&mut self, i: usize, tokens: usize) -> Result<()> {
+        let bs = self.kv_cfg.block_size;
+        let SlotState::Busy(b) = &mut self.slots[i] else { return Ok(()) };
+        let before_tokens = b.pages.tokens();
+        if before_tokens >= tokens {
+            return Ok(());
+        }
+        let before_blocks = b.pages.num_blocks();
+        let before_last = b.pages.block_ids().last().copied();
+        b.pages.grow_to(tokens, &mut self.kv).expect("engine block arena is unbounded");
+        self.kv_resident += b.pages.tokens() - before_tokens;
+        let changed = b.pages.num_blocks() != before_blocks
+            || b.pages.block_ids().last().copied() != before_last;
+        if changed {
+            self.backend.set_block_table(i, b.pages.block_ids(), b.pages.tokens(), bs)?;
+        }
+        Ok(())
+    }
+
+    /// The chunked-ingestion pump: spend up to `budget_left` step-budget
+    /// tokens feeding prompt chunks ([`Backend::prefill_chunk`]) and
+    /// resume-replay slices ([`Backend::replay`]) to mid-ingestion slots,
+    /// FIFO by admission order. A slot whose prompt completes with no
+    /// resume pending samples its first token from the chunk logits (and
+    /// may finish outright on EOS / length cap); a resume whose backend
+    /// declines slicing falls back to per-token decode replay, exactly
+    /// like the legacy path. `overlapped` notes whether live decode lanes
+    /// also ran this step — chunk compute that ran alongside them is
+    /// "stall saved": work the legacy admission prefill would have
+    /// serialized in front of those decodes.
+    fn pump_ingestion(
+        &mut self,
+        budget_left: &mut usize,
+        step_tokens_done: &mut usize,
+        overlapped: bool,
+        events: &mut Vec<EngineEvent>,
+    ) -> Result<()> {
+        self.ingest_scratch.clear();
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let SlotState::Busy(b) = slot {
+                if b.ingesting() {
+                    self.ingest_scratch.push((b.admitted_seq, i));
+                }
+            }
+        }
+        if self.ingest_scratch.is_empty() {
+            return Ok(());
+        }
+        self.ingest_scratch.sort_unstable();
+        let order = std::mem::take(&mut self.ingest_scratch);
+        let pmax = self.backend.p_max();
+        let bs = self.kv_cfg.block_size;
+        for &(_, i) in &order {
+            if *budget_left == 0 {
+                break;
+            }
+            // Clone the prompt handle (Arc — cheap) and COPY the resume
+            // into the reusable scratch so backend calls can borrow them
+            // while the slot table is free. `b.item.resume` itself is
+            // never moved out: an error propagating from any backend call
+            // mid-pump leaves the slot fully intact.
+            let prompt = {
+                let SlotState::Busy(b) = &mut self.slots[i] else { continue };
+                self.resume_scratch.clear();
+                self.resume_scratch.extend_from_slice(&b.item.resume);
+                b.item.prompt.clone()
+            };
+            let resume = std::mem::take(&mut self.resume_scratch);
+            let plen = prompt.len();
+            loop {
+                if *budget_left == 0 {
+                    break;
+                }
+                let (prompt_fed, replay_fed, slice_replay) = {
+                    let SlotState::Busy(b) = &self.slots[i] else { break };
+                    (b.prompt_fed, b.replay_fed, b.slice_replay)
+                };
+                if prompt_fed < plen {
+                    // ---- prompt chunk ----------------------------------
+                    // First chunk: attach the group's registered prompt
+                    // prefix if a sibling has completed and registered it
+                    // by now (refcount bump — the whole prompt region is
+                    // then pre-charged and per-chunk charging no-ops
+                    // inside it). The prompt is still FED to the backend:
+                    // sharing is an accounting optimization on this
+                    // substrate, not a compute skip.
+                    if prompt_fed == 0 && self.kv_cfg.prefix_sharing {
+                        let key = {
+                            let SlotState::Busy(b) = &self.slots[i] else { break };
+                            if b.pages.is_empty() { b.item.prefix } else { None }
+                        };
+                        if let Some(key) = key {
+                            if let Some(e) = self.prefix_cache.get(key) {
+                                if e.tokens == plen {
+                                    let SlotState::Busy(b) = &mut self.slots[i] else {
+                                        break;
+                                    };
+                                    b.pages.attach_shared(e.blocks(), e.tokens, &mut self.kv);
+                                    self.kv_resident += plen;
+                                    self.prefix_tokens_shared += plen as u64;
+                                    self.backend.set_block_table(
+                                        i,
+                                        b.pages.block_ids(),
+                                        b.pages.tokens(),
+                                        bs,
+                                    )?;
+                                }
+                            }
+                        }
+                    }
+                    let take = pmax.min(*budget_left).min(plen - prompt_fed);
+                    let end = prompt_fed + take;
+                    let t0 = Instant::now();
+                    let logits = self.backend.prefill_chunk(
+                        i,
+                        &prompt[prompt_fed..end],
+                        prompt_fed,
+                        end == plen,
+                    )?;
+                    let dt = t0.elapsed().as_secs_f64();
+                    self.prefill_chunks += 1;
+                    if overlapped {
+                        self.prefill_stall_saved += dt;
+                    }
+                    *budget_left -= take;
+                    *step_tokens_done += take;
+                    {
+                        let SlotState::Busy(b) = &mut self.slots[i] else { break };
+                        b.prompt_fed = end;
+                    }
+                    // Per-chunk block charging for the ingested span
+                    // (no-op inside an attached shared prefix).
+                    self.charge_ingested(i, end)?;
+                    let Some(logits) = logits else { continue };
+                    // Prompt complete. Register the prompt-pure chain for
+                    // the group's remaining siblings (first completer
+                    // wins; slots that attached an existing entry skip).
+                    if self.kv_cfg.prefix_sharing {
+                        let key = {
+                            let SlotState::Busy(b) = &self.slots[i] else { break };
+                            b.item.prefix.filter(|_| b.pages.tokens() == plen)
+                        };
+                        if let Some(key) = key {
+                            if self.prefix_cache.get(key).is_none() {
+                                if let SlotState::Busy(b) = &self.slots[i] {
+                                    self.prefix_cache.insert(
+                                        key,
+                                        b.pages.block_ids(),
+                                        plen,
+                                        &mut self.kv,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    if !resume.is_empty() {
+                        // Replay slices continue below; the next backend
+                        // write lands at `plen`.
+                        let SlotState::Busy(b) = &mut self.slots[i] else { break };
+                        b.pos = plen as i32;
+                        continue;
+                    }
+                    // Cover the pending feed position, then sample the
+                    // first token from the prefill logits (the legacy
+                    // admission path, spread across steps).
+                    self.charge_ingested(i, plen + 1)?;
+                    self.sample_after_ingest(i, &logits, plen + 1, plen as i32, events);
+                    break;
+                }
+                if slice_replay && replay_fed < resume.len() {
+                    // ---- resume replay slice ---------------------------
+                    let take = pmax.min(*budget_left).min(resume.len() - replay_fed);
+                    let end = replay_fed + take;
+                    let t0 = Instant::now();
+                    match self.backend.replay(
+                        i,
+                        &resume[replay_fed..end],
+                        plen + replay_fed,
+                    )? {
+                        Some(logits) => {
+                            let dt = t0.elapsed().as_secs_f64();
+                            self.prefill_chunks += 1;
+                            if overlapped {
+                                self.prefill_stall_saved += dt;
+                            }
+                            *budget_left -= take;
+                            *step_tokens_done += take;
+                            self.replayed_tokens += take as u64;
+                            self.charge_ingested(i, plen + end)?;
+                            let done = end == resume.len();
+                            {
+                                let SlotState::Busy(b) = &mut self.slots[i] else { break };
+                                b.replay_fed = end;
+                                b.replayed = end;
+                                b.pos = (plen + end) as i32;
+                                if done {
+                                    b.slice_replay = false;
+                                }
+                            }
+                            if !done {
+                                continue;
+                            }
+                            // Replay complete: cover the pending feed and
+                            // sample the next new token from the final
+                            // slice's logits (mirrors the legacy
+                            // replay-complete admission path).
+                            self.charge_ingested(i, plen + end + 1)?;
+                            self.sample_after_ingest(
+                                i,
+                                &logits,
+                                plen + resume.len() + 1,
+                                (plen + end) as i32,
+                                events,
+                            );
+                            break;
+                        }
+                        None => {
+                            // Backend declined: ride per-token decode
+                            // replay from the next step (legacy
+                            // mechanism). Cover the pending feed position.
+                            self.charge_ingested(i, plen + replay_fed + 1)?;
+                            let SlotState::Busy(b) = &mut self.slots[i] else { break };
+                            b.slice_replay = false;
+                            b.next_token = resume[replay_fed];
+                            b.pos = (plen + replay_fed) as i32;
+                            break;
+                        }
+                    }
+                }
+                break; // nothing left to ingest for this slot
+            }
+            // Hand the scratch buffer back for the next slot / next step.
+            self.resume_scratch = resume;
+        }
+        self.ingest_scratch = order;
+        Ok(())
+    }
+
+    /// Shared tail of both ingestion-completion paths (prompt done with no
+    /// resume; final replay slice done): sample the next token for slot
+    /// `i` from `logits`, then either arm the slot for decoding from the
+    /// next step or finish it outright (EOS / length cap at `total_len` =
+    /// prompt + resume + this sample). Returns true when the slot
+    /// finished and was vacated.
+    fn sample_after_ingest(
+        &mut self,
+        i: usize,
+        logits: &[f32],
+        total_len: usize,
+        pos: i32,
+        events: &mut Vec<EngineEvent>,
+    ) -> bool {
+        let (tok, lp) = {
+            let SlotState::Busy(b) = &self.slots[i] else { return false };
+            sample_token_with(logits, &b.item.sampling, &mut self.rng, &mut self.scratch)
+        };
+        let reason = {
+            let SlotState::Busy(b) = &mut self.slots[i] else { return false };
+            b.generated.push(tok);
+            b.logprobs.push(lp);
+            b.pos = pos;
+            if tok == tokenizer::EOS {
+                Some(FinishReason::Eos)
+            } else if total_len >= b.item.max_total {
+                Some(FinishReason::LengthCap)
+            } else {
+                b.next_token = tok;
+                None
+            }
+        };
+        if let Some(r) = reason {
+            let mut b = self.vacate(i).expect("busy slot");
+            self.free_slot_kv(i, &mut b.pages);
+            events.push(EngineEvent::Done { engine: self.id, result: finish(*b, r) });
+            return true;
+        }
+        false
     }
 
     /// First retained slot matching an affinity hint exactly: same request,
@@ -822,9 +1278,9 @@ impl<B: Backend> Engine<B> {
             unreachable!("admit_from_retained on a non-retained slot");
         };
         // Release the retained charge first so the counters stay consistent
-        // on every exit path; `occupy` re-adds the identical pos+1.
+        // on every exit path; `occupy` re-adds the identical chain charge.
         self.retained_count -= 1;
-        self.kv_resident -= rs.pos as usize + 1;
+        self.kv_resident -= rs.pages.tokens();
         if let Err(e) = self.backend.resume_retained(i) {
             self.retained_evictions += 1;
             self.free_slot_kv(i, &mut rs.pages);
@@ -849,6 +1305,8 @@ impl<B: Backend> Engine<B> {
             pos: rs.pos,
             pages: std::mem::take(&mut rs.pages),
             admitted_seq: self.admission_counter,
+            prompt_fed: item.prompt.len(),
+            slice_replay: false,
             item,
         };
         self.retained_resumes += 1;
@@ -881,17 +1339,53 @@ impl<B: Backend> Engine<B> {
         untargeted.or(any).map(|(i, _)| i)
     }
 
+    /// Blocks the in-flight chunked ingestions will still charge before
+    /// they are caught up (their chains grow per chunk, so
+    /// `blocks_in_use` under-reports what admitted work has already been
+    /// promised). 0 in legacy mode — admission charges the whole span
+    /// synchronously there.
+    fn committed_ingest_blocks(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                SlotState::Busy(b) if b.ingesting() => {
+                    let plen = b.plen();
+                    let target = plen + b.item.resume.len() + 1;
+                    let mut need =
+                        self.kv.blocks_for(target).saturating_sub(b.pages.num_blocks());
+                    // A not-yet-started slot that will attach a registered
+                    // group prefix at first-chunk time only adds the
+                    // private tail past the shared full blocks — the same
+                    // discount the admission gate applies to its own
+                    // shared-hit candidate. (Once attached, the chain
+                    // itself reflects the shared blocks and the plain
+                    // subtraction above is already right.)
+                    if self.kv_cfg.prefix_sharing && b.prompt_fed == 0 && b.pages.is_empty()
+                    {
+                        if let Some(key) = b.item.prefix {
+                            if self.prefix_cache.get(key).is_some_and(|e| e.tokens == plen) {
+                                need = need.saturating_sub(plen / self.kv_cfg.block_size);
+                            }
+                        }
+                    }
+                    need
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
     /// Block-budget admission gate: make headroom for a fresh/replay
     /// admission (a `plen`-token prompt plus `resume_len` tokens to
     /// rebuild — the chain reaches `plen + resume_len + 1` tokens whether
-    /// replay is chunked at admission or per-token over later steps) by
-    /// evicting caches (prefix registry entries first — sparing the one
-    /// this admission is about to attach — then retained slots, sparing
-    /// hint-targeted ones), and report whether admission may proceed.
-    /// `false` = clean backpressure: the item stays queued until running
-    /// work frees blocks. An idle engine always admits (a single sequence
-    /// may legitimately exceed the whole budget — mirroring "the last live
-    /// slot is never preempted").
+    /// ingestion is synchronous at admission, chunked over later steps,
+    /// or per-token through decode) by evicting caches (prefix registry
+    /// entries first — sparing the one this admission is about to attach
+    /// — then retained slots, sparing hint-targeted ones), and report
+    /// whether admission may proceed. `false` = clean backpressure: the
+    /// item stays queued until running work frees blocks. An idle engine
+    /// always admits (a single sequence may legitimately exceed the whole
+    /// budget — mirroring "the last live slot is never preempted").
     fn ensure_block_headroom(
         &mut self,
         plen: usize,
@@ -903,6 +1397,11 @@ impl<B: Backend> Engine<B> {
         if budget == 0 {
             return true;
         }
+        // Blocks already promised to mid-ingestion slots (chunked mode):
+        // counted alongside blocks_in_use so two admissions in one step
+        // cannot both claim the same headroom before either has charged
+        // its chain.
+        let pending = self.committed_ingest_blocks();
         let shared_hit = self.kv_cfg.prefix_sharing
             && prefix_key
                 .and_then(|k| self.prefix_cache.get(k))
@@ -920,7 +1419,7 @@ impl<B: Backend> Engine<B> {
         } else {
             self.kv.blocks_for(total)
         };
-        if self.kv.blocks_in_use() + needed > budget {
+        if self.kv.blocks_in_use() + pending + needed > budget {
             // Feasibility pre-check before sacrificing any cache: an UPPER
             // bound on what evicting every registry entry and retained
             // slot could possibly free (refs shared with busy chains free
@@ -937,12 +1436,21 @@ impl<B: Backend> Engine<B> {
                         _ => 0,
                     })
                     .sum::<usize>();
-            if self.kv.blocks_in_use().saturating_sub(max_freeable) + needed > budget {
+            if (self.kv.blocks_in_use() + pending).saturating_sub(max_freeable) + needed
+                > budget
+            {
                 return self.busy_count == 0;
             }
         }
         loop {
-            if self.kv.blocks_in_use() + needed <= budget {
+            // Recompute the in-flight commitment every iteration: evicting
+            // a registry entry below can GROW it (a not-yet-started
+            // sibling that would have attached that entry now needs its
+            // full private chain), so a stale snapshot would let this
+            // admission proceed under-counted and push the budget into
+            // live-slot preemption instead of clean backpressure.
+            let pending = self.committed_ingest_blocks();
+            if self.kv.blocks_in_use() + pending + needed <= budget {
                 return true;
             }
             if let Some(key) = self.prefix_cache.eviction_victim(&self.kv, prefix_key) {
@@ -1028,17 +1536,42 @@ impl<B: Backend> Engine<B> {
             self.admission_counter += 1;
             let seq = self.admission_counter;
             let plen = item.prompt.len();
-            let logits = self.backend.prefill(i, &item.prompt)?;
-            // Page-table setup: attach the group's registered prompt
-            // prefix when the handle matches (refcount bump, zero fresh
-            // residency), or allocate the prompt blocks and register them
-            // for the siblings still to come. Registration happens at
-            // exactly `plen` tokens, so registry chains are prompt-pure —
-            // the owner's own first append COWs the partial tail like any
-            // other sibling.
+            // Page-table setup. Registration happens at exactly `plen`
+            // tokens in both schedules, so registry chains are
+            // prompt-pure — the owner's own first append COWs the partial
+            // tail like any other sibling.
             let bs = self.kv_cfg.block_size;
             let mut pages = PageTable::new();
             pages.reserve(self.kv.blocks_for(item.max_total) + 1);
+            // Continuous batching: admission only reserves the slot — the
+            // prompt (and any resume replay) is ingested by the packed
+            // per-step scheduler in budgeted chunks, so admission no
+            // longer implies a same-step first token. Shared-prefix
+            // attach happens at FIRST-CHUNK time instead of here: a whole
+            // group can admit in one step, before any sibling has
+            // completed its prompt and registered the chain.
+            if self.step_budget > 0 {
+                let out_cap = item.max_total.saturating_sub(plen);
+                let busy = BusySlot {
+                    generated: Vec::with_capacity(out_cap),
+                    logprobs: Vec::with_capacity(out_cap),
+                    replay_fed: 0,
+                    replayed: 0,
+                    resumed_from_kv: false,
+                    next_token: 0,
+                    pos: 0,
+                    pages,
+                    admitted_seq: seq,
+                    prompt_fed: 0,
+                    slice_replay: !item.resume.is_empty(),
+                    item,
+                };
+                self.occupy(i, Box::new(busy));
+                continue;
+            }
+            // Legacy slot admission: attach the group's registered prompt
+            // prefix when the handle matches (refcount bump, zero fresh
+            // residency), then whole-prompt prefill right now.
             let mut shared_tokens = 0usize;
             if self.kv_cfg.prefix_sharing {
                 if let Some(key) = item.prefix {
@@ -1050,6 +1583,7 @@ impl<B: Backend> Engine<B> {
                     }
                 }
             }
+            let logits = self.backend.prefill(i, &item.prompt)?;
             if shared_tokens == 0 {
                 pages
                     .grow_to(plen, &mut self.kv)
@@ -1074,6 +1608,8 @@ impl<B: Backend> Engine<B> {
                 pos: plen as i32,
                 pages,
                 admitted_seq: seq,
+                prompt_fed: plen,
+                slice_replay: false,
                 item,
             };
             if busy.item.resume.is_empty() {
@@ -1293,8 +1829,8 @@ mod tests {
             .slots
             .iter()
             .map(|s| match s {
-                SlotState::Busy(b) => b.pos as usize + 1,
-                SlotState::Retained(rs) => rs.pos as usize + 1,
+                SlotState::Busy(b) => b.pages.tokens(),
+                SlotState::Retained(rs) => rs.pages.tokens(),
                 SlotState::Idle => 0,
             })
             .sum();
@@ -2109,5 +2645,243 @@ mod tests {
         assert_eq!(eng.retained(), 0);
         assert_eq!(eng.kv_tokens(), 0);
         assert_eq!(eng.kv_blocks(), 0);
+    }
+
+    // -- continuous batching / chunked prefill ------------------------------
+
+    fn chunked_engine(slots: usize, budget: usize) -> Engine<MockBackend> {
+        let mut be = MockBackend::new(slots, 96);
+        be.min_len = 12;
+        be.spread = 6;
+        let kv = KvCacheConfig { block_size: 4, budget_blocks: 0, prefix_sharing: true };
+        Engine::with_opts(0, be, EngineOpts { kv, step_token_budget: budget }, 1)
+    }
+
+    fn streams(results: Vec<WorkResult>) -> Vec<(u64, Vec<i32>, Vec<u32>)> {
+        let mut out: Vec<(u64, Vec<i32>, Vec<u32>)> = results
+            .into_iter()
+            .map(|r| {
+                (
+                    r.request_id,
+                    r.new_tokens,
+                    r.new_logprobs.iter().map(|l| l.to_bits()).collect(),
+                )
+            })
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// The tentpole contract: a tight step-token budget spreads prompt
+    /// ingestion across steps (admission no longer implies a same-step
+    /// first token) yet every greedy stream is bit-identical to the
+    /// legacy slot-admission schedule.
+    #[test]
+    fn chunked_prefill_streams_match_slot_admission_bit_exactly() {
+        let collect = |budget: usize| -> (Vec<(u64, Vec<i32>, Vec<u32>)>, u64) {
+            let mut eng = chunked_engine(4, budget);
+            for i in 0..6u64 {
+                // Long prompts (up to p_max = 24) force multi-step chunking
+                // under budget 5.
+                let plen = 10 + (i as usize * 3) % 14;
+                let prompt: Vec<i32> = (0..plen).map(|t| 1 + ((i as i32 + t as i32) % 9)).collect();
+                eng.submit(item(i, prompt)).unwrap();
+            }
+            let res = run_to_completion(&mut eng, 800);
+            (streams(res), eng.prefill_chunks)
+        };
+        let (chunked, chunks) = collect(5);
+        let (legacy, legacy_chunks) = collect(0);
+        assert_eq!(chunked.len(), 6);
+        assert_eq!(chunked, legacy, "chunking changed a stream");
+        assert!(chunks > 6, "long prompts must split into several chunks: {chunks}");
+        assert_eq!(legacy_chunks, 0, "legacy mode must not chunk");
+    }
+
+    /// With the budget on, a freshly admitted long prompt does NOT emit its
+    /// first token in the admission step, and per-step packed tokens never
+    /// exceed the budget (given budget ≥ slots, so decode lanes fit).
+    #[test]
+    fn budget_packs_steps_and_defers_first_token() {
+        let mut eng = chunked_engine(2, 6);
+        let prompt: Vec<i32> = (0..20).map(|t| 1 + (t % 9)).collect();
+        eng.submit(item(1, prompt)).unwrap();
+        let mut ev = Vec::new();
+        eng.step(&mut ev).unwrap();
+        assert_eq!(eng.busy(), 1, "slot reserved at admission");
+        let done_early = ev.iter().any(|e| matches!(e, EngineEvent::Done { .. }));
+        assert!(!done_early);
+        {
+            let SlotState::Busy(b) = &eng.slots[0] else { panic!("busy") };
+            assert!(b.generated.is_empty(), "no same-step first token for a 20-tok prompt");
+            assert_eq!(b.prompt_fed, 6, "one budget's worth of prompt ingested");
+            assert_eq!(b.pages.tokens(), 6, "blocks charged per chunk");
+        }
+        // Drive to completion; every packed step obeys the budget.
+        ev.clear();
+        let mut max_step_tokens = 0usize;
+        for _ in 0..300 {
+            if !eng.has_work() {
+                break;
+            }
+            eng.step(&mut ev).unwrap();
+        }
+        for e in &ev {
+            if let EngineEvent::Trace(t) = e {
+                max_step_tokens = max_step_tokens.max(t.step_tokens);
+                assert_eq!(t.step_budget, 6);
+            }
+        }
+        assert!(max_step_tokens <= 6, "packed step exceeded budget: {max_step_tokens}");
+        assert!(eng.prefill_chunks >= 4, "20 tokens / 6-budget ≥ 4 chunks");
+    }
+
+    /// Chunked replay slices (mock opt-in, like the PJRT backend): a
+    /// resume is slice-fed through `Backend::replay` under the budget and
+    /// reproduces the uninterrupted oracle stream bit-exactly.
+    #[test]
+    fn chunked_resume_slices_replay_bit_identically() {
+        let prompt = vec![1, 8, 8];
+        let (want_toks, want_lps) = uninterrupted_stream(&prompt);
+
+        // Stop an uninterrupted run part-way (no retention) to get a real
+        // partial whose resume we can replay chunked.
+        let mut eng = retention_engine();
+        eng.submit(item(1, prompt.clone())).unwrap();
+        let mut ev = Vec::new();
+        for _ in 0..5 {
+            eng.step(&mut ev).unwrap();
+        }
+        ev.clear();
+        eng.stop_generation(&mut ev, false);
+        let partial = ev
+            .iter()
+            .find_map(|e| match e {
+                EngineEvent::Done { result, .. } => Some(result.clone()),
+                _ => None,
+            })
+            .expect("flushed partial");
+        assert!(partial.new_tokens.len() >= 3);
+
+        // Resume on a fresh CHUNKED engine with slice replay enabled and a
+        // budget smaller than the resume, so it takes several slices.
+        let mut be = MockBackend::new(1, 96);
+        be.min_len = 20;
+        be.spread = 1;
+        be.chunked_replay = true;
+        let kv = KvCacheConfig { block_size: 4, budget_blocks: 0, prefix_sharing: true };
+        let mut eng2 =
+            Engine::with_opts(9, be, EngineOpts { kv, step_token_budget: 2 }, 1);
+        let mut it = item(1, prompt);
+        it.resume = partial.new_tokens.clone();
+        eng2.submit(it).unwrap();
+        let results = run_to_completion(&mut eng2, 400);
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.replayed, partial.new_tokens.len(), "whole resume recomputed");
+        assert!(eng2.backend().replay_calls >= 2, "budget 2 must take several slices");
+        assert!(!r.resumed_from_kv);
+
+        let full_toks: Vec<i32> =
+            partial.new_tokens.iter().chain(r.new_tokens.iter()).copied().collect();
+        let full_lps: Vec<u32> = partial
+            .new_logprobs
+            .iter()
+            .chain(r.new_logprobs.iter())
+            .map(|l| l.to_bits())
+            .collect();
+        assert_eq!(full_toks, want_toks, "sliced replay diverged from oracle");
+        assert_eq!(full_lps, want_lps);
+    }
+
+    /// Counter exactness under chunked mode: the incremental busy/kv/block
+    /// counters agree with a from-scratch slot scan at every step of a run
+    /// that mixes mid-ingestion slots, decode lanes, flushes and resumes.
+    #[test]
+    fn chunked_counters_match_slot_scans() {
+        let mut eng = chunked_engine(4, 5);
+        for i in 0..8u64 {
+            let plen = 6 + (i as usize * 5) % 18;
+            let prompt: Vec<i32> = (0..plen).map(|t| 1 + ((i as i32 + t as i32) % 9)).collect();
+            eng.submit(item(i, prompt)).unwrap();
+        }
+        let mut ev = Vec::new();
+        for _ in 0..200 {
+            eng.step(&mut ev).unwrap();
+            let (busy, retained, kv, _blocks) = scan_counters(&eng);
+            assert_eq!(eng.busy(), busy, "busy counter drifted");
+            assert_eq!(eng.retained(), retained);
+            assert_eq!(eng.kv_tokens(), kv, "kv token counter drifted");
+            ev.clear();
+            if !eng.has_work() {
+                break;
+            }
+        }
+        assert!(!eng.has_work(), "run did not complete");
+        assert_eq!(eng.kv_tokens(), 0);
+    }
+
+    /// Mid-chunk early termination: a slot stopped while its prompt is
+    /// still ingesting flushes plainly (nothing generated → no retention,
+    /// the coordinator re-queues it as fresh work), every block is
+    /// released, and the slot admits new work cleanly afterwards — the
+    /// mock's staging reset + boundary validation would fail loudly if any
+    /// partial stage leaked across occupants.
+    #[test]
+    fn mid_chunk_stop_releases_cleanly_and_slot_is_reusable() {
+        let mut eng = chunked_engine(1, 3);
+        let prompt: Vec<i32> = (0..20).map(|t| 1 + (t % 9)).collect();
+        eng.submit(item(1, prompt)).unwrap();
+        let mut ev = Vec::new();
+        eng.step(&mut ev).unwrap(); // 3 of 20 prompt tokens ingested
+        ev.clear();
+        eng.stop_generation(&mut ev, true);
+        let partial = ev
+            .iter()
+            .find_map(|e| match e {
+                EngineEvent::Done { result, .. } => Some(result.clone()),
+                _ => None,
+            })
+            .expect("stopped slot reports");
+        assert!(partial.new_tokens.is_empty(), "nothing was generated yet");
+        assert!(partial.retained.is_none(), "mid-ingestion slots must not retain");
+        assert_eq!(eng.retained(), 0);
+        assert_eq!(eng.kv_tokens(), 0, "partial ingestion charge released");
+        assert_eq!(eng.kv_blocks(), 0);
+        // The slot takes fresh work; chunk boundary validation passes.
+        eng.submit(item(2, vec![1, 5, 6, 7, 8])).unwrap();
+        let results = run_to_completion(&mut eng, 200);
+        assert_eq!(results.len(), 1);
+        assert!(results[0].reason.is_complete());
+        assert_eq!(eng.kv_blocks(), 0);
+    }
+
+    /// Group prefix sharing still holds under chunked prefill: the first
+    /// sibling to complete its prompt registers the chain, later siblings
+    /// attach at admission, and streams match the sharing-off baseline.
+    #[test]
+    fn chunked_prefill_shares_group_prefix() {
+        let run = |sharing: bool| -> (Vec<(u64, Vec<i32>, Vec<u32>)>, u64) {
+            let mut be = MockBackend::new(4, 96);
+            be.min_len = 10;
+            be.spread = 1;
+            let kv =
+                KvCacheConfig { block_size: 4, budget_blocks: 0, prefix_sharing: sharing };
+            let mut eng =
+                Engine::with_opts(0, be, EngineOpts { kv, step_token_budget: 6 }, 1);
+            let prompt = vec![1, 7, 7, 9, 2, 3, 4, 5]; // 8 tokens = 2 blocks
+            for i in 0..4u64 {
+                let mut it = item(i, prompt.clone());
+                it.prefix = Some(42);
+                eng.submit(it).unwrap();
+            }
+            let res = run_to_completion(&mut eng, 400);
+            (streams(res), eng.prefix_tokens_shared)
+        };
+        let (on, shared_on) = run(true);
+        let (off, shared_off) = run(false);
+        assert_eq!(on, off, "sharing changed a chunked stream");
+        assert!(shared_on > 0, "later siblings must attach the registered prefix");
+        assert_eq!(shared_off, 0);
     }
 }

@@ -9,7 +9,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use super::backend::Backend;
-use super::engine::{Engine, EngineCmd, EngineEvent};
+use super::engine::{Engine, EngineCmd, EngineEvent, EngineOpts};
 use super::kvcache::{KvCacheConfig, DEFAULT_BLOCK_SIZE};
 
 /// Handle to a set of engine threads: per-engine command channels in, one
@@ -49,13 +49,37 @@ impl EnginePool {
         )
     }
 
-    /// Spawn `n` engines with an explicit paged-KV configuration.
-    /// `factory(engine_id)` runs INSIDE each engine thread and builds its
-    /// (thread-confined) backend.
+    /// Spawn `n` engines with an explicit paged-KV configuration (legacy
+    /// slot admission; use [`EnginePool::spawn_opts`] for the
+    /// continuous-batching scheduler).
     pub fn spawn_kv<B, F>(
         n: usize,
         slots_per_engine: usize,
         kv: KvCacheConfig,
+        seed: u64,
+        factory: F,
+    ) -> Result<EnginePool>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Box<dyn FnOnce() -> Result<B> + Send> + Sync,
+    {
+        Self::spawn_opts(
+            n,
+            slots_per_engine,
+            EngineOpts { kv, step_token_budget: 0 },
+            seed,
+            factory,
+        )
+    }
+
+    /// Spawn `n` engines with full scheduling options (paged-KV config +
+    /// continuous-batching step-token budget — see
+    /// `EngineConfig::engine_opts`). `factory(engine_id)` runs INSIDE each
+    /// engine thread and builds its (thread-confined) backend.
+    pub fn spawn_opts<B, F>(
+        n: usize,
+        slots_per_engine: usize,
+        opts: EngineOpts,
         seed: u64,
         factory: F,
     ) -> Result<EnginePool>
@@ -81,7 +105,7 @@ impl EnginePool {
                             return;
                         }
                     };
-                    let engine = Engine::with_kv(id, backend, kv, seed);
+                    let engine = Engine::with_opts(id, backend, opts, seed);
                     run_loop(engine, cmd_rx, tx);
                 })?;
             senders.push(cmd_tx);

@@ -64,6 +64,17 @@ pub struct RunSummary {
     pub overlap_secs: f64,
     /// Harvested trajectories spanning more than one policy version.
     pub lagged_trajectories: usize,
+    /// Buffered partials resumed across the run (prioritized resumption).
+    pub resumed: usize,
+    /// Chunked-ingestion backend calls across the run (continuous
+    /// batching; 0 with `engine.step_token_budget = 0`).
+    pub prefill_chunks: u64,
+    /// Seconds of prefill-chunk compute overlapped with live decode lanes
+    /// (stall the legacy admission prefill would have imposed).
+    pub t_prefill_stall_saved: f64,
+    /// Mean packed-step token utilization across budgeted stages (0.0
+    /// when continuous batching is off).
+    pub step_token_util: f64,
     pub reward_curve: Vec<f64>,
     pub entropy_curve: Vec<f64>,
 }
@@ -92,10 +103,10 @@ impl RlSession {
         let variant = cfg.model.clone();
         let init_params = params.clone();
         let chunked_replay = cfg.engine.chunked_replay;
-        let pool = EnginePool::spawn_kv(
+        let pool = EnginePool::spawn_opts(
             cfg.engine.engines,
             spec.slots,
-            cfg.engine.kv_cache_config(),
+            cfg.engine.engine_opts(),
             cfg.train.seed,
             move |_id| {
                 let dir = dir.clone();
@@ -244,6 +255,7 @@ impl RlSession {
         let mut summary = RunSummary { steps, ..Default::default() };
         let mut samples = 0usize;
         let mut util = Vec::new();
+        let mut step_util = Vec::new();
         for s in 0..steps {
             let (m, rs) = self.rl_step()?;
             samples += rs.completed;
@@ -258,6 +270,12 @@ impl RlSession {
             summary.cow_copies += rs.cow_copies;
             summary.overlap_secs += rs.overlap_secs;
             summary.lagged_trajectories += rs.lagged_trajectories();
+            summary.resumed += rs.resumed;
+            summary.prefill_chunks += rs.prefill_chunks;
+            summary.t_prefill_stall_saved += rs.t_prefill_stall_saved;
+            if rs.step_token_util > 0.0 {
+                step_util.push(rs.step_token_util);
+            }
             summary.reward_curve.push(m.reward_mean);
             summary.entropy_curve.push(m.entropy);
             summary.final_reward = m.reward_mean;
@@ -279,6 +297,8 @@ impl RlSession {
         summary.wall = t0.elapsed().as_secs_f64();
         summary.throughput = samples as f64 / summary.wall.max(1e-9);
         summary.mean_utilization = crate::util::stats::mean(&util);
+        summary.step_token_util =
+            if step_util.is_empty() { 0.0 } else { crate::util::stats::mean(&step_util) };
         summary.rollout_secs = self.timer.total("rollout");
         summary.cal_logprob_secs = self.timer.total("cal_logprob");
         summary.train_secs = self.timer.total("grad") + self.timer.total("update");

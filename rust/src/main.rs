@@ -50,6 +50,10 @@ fn usage() -> ! {
                                     sample)\n\
            --kv-block-size N        tokens per KV block (default 16); KV\n\
                                     budget via --set engine.kv_budget_blocks\n\
+           --step-token-budget N    continuous batching: pack each engine\n\
+                                    step with ≤ N tokens (decode lanes +\n\
+                                    chunked prefill slices); 0 = legacy\n\
+                                    slot admission (default)\n\
            --metrics <path.jsonl>   write per-step metrics\n\
            --set section.key=value  any config override (repeatable)\n\
            --preset <paper|scaled-small|scaled-tiny|sync-baseline|pipelined-small>"
@@ -100,6 +104,9 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(bs) = args.get("kv-block-size") {
         cfg.set("engine.kv_block_size", bs)?;
+    }
+    if let Some(b) = args.get("step-token-budget") {
+        cfg.set("engine.step_token_budget", b)?;
     }
     for kv in args.get_all("set") {
         let (k, v) = kv
@@ -193,6 +200,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "paged kv: peak blocks {}  prefix tokens shared {}  cow copies {}",
         summary.kv_blocks_peak, summary.prefix_tokens_shared, summary.cow_copies
+    );
+    println!(
+        "continuous batching: prefill_chunks {}  step_token_util {:.2}  prefill_stall_saved {:.2}s  resumed {}",
+        summary.prefill_chunks,
+        summary.step_token_util,
+        summary.t_prefill_stall_saved,
+        summary.resumed
     );
     if !args.flag("no-eval") {
         let report = sess.evaluate(2)?;

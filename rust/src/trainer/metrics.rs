@@ -75,6 +75,9 @@ impl MetricsLog {
             .int("prefix_tokens_shared", rollout.prefix_tokens_shared as i64)
             .int("cow_copies", rollout.cow_copies as i64)
             .num("kv_frag", rollout.mean_kv_frag())
+            .int("prefill_chunks", rollout.prefill_chunks as i64)
+            .num("t_prefill_stall_saved", rollout.t_prefill_stall_saved)
+            .num("step_token_util", rollout.step_token_util)
             .num("t_overlap", m.t_overlap)
             .num("overlap_secs", rollout.overlap_secs)
             .int("lagged_trajs", rollout.lagged_trajectories() as i64)

@@ -1,0 +1,473 @@
+//! Continuous-batching golden + property tests.
+//!
+//! The correctness bar for the token-budget scheduler with chunked prefill
+//! (`engine.step_token_budget > 0`): chunking may change *when* tokens are
+//! computed, never *which* tokens. Pinned three ways, all with greedy
+//! sampling and the determinism discipline of `rollout_golden.rs` (1
+//! engine × 1 slot for the partial modes, positional mock scripts, no
+//! mid-run weight syncs):
+//!
+//! - coordinator stages with the budget ON are bit-identical to the same
+//!   stages with the budget OFF (legacy slot admission), across sync /
+//!   copris / retained-resume;
+//! - the chunked coordinator is bit-identical to the frozen pre-refactor
+//!   `ReferenceCoordinator` oracle driving identically chunked engines;
+//! - an engine-level property sweep of prompt lengths ±1 around
+//!   `kv_block_size` and `step_token_budget` multiples (the chunk/block
+//!   boundary lattice) reproduces the unchunked stream bit-exactly, for
+//!   fresh prompts and replayed resumes alike.
+//!
+//! Plus the MockBackend chunk-boundary contract: in-order ingestion is
+//! enforced bit-exactly, `start == 0` resets a preempted stage, and a
+//! mid-chunk preemption/retention leaves the engine's page accounting
+//! coverage-exact (every later install still validates).
+
+use std::time::Duration;
+
+use copris::config::{Config, RolloutMode};
+use copris::coordinator::{Coordinator, ReferenceCoordinator, RolloutOutput};
+use copris::engine::{
+    Backend, Engine, EngineEvent, EngineOpts, EnginePool, KvCacheConfig, MockBackend,
+    SamplingParams, WorkItem, WorkResult,
+};
+use copris::tasks::Dataset;
+use copris::testkit::prop_check;
+
+const MAX_SEQ: usize = 96;
+
+fn spawn_pool(
+    engines: usize,
+    slots: usize,
+    step_budget: usize,
+    seed: u64,
+    min_len: usize,
+    spread: usize,
+    delay_us: u64,
+) -> EnginePool {
+    let opts = EngineOpts { kv: KvCacheConfig::unlimited(), step_token_budget: step_budget };
+    EnginePool::spawn_opts(engines, slots, opts, seed, move |_id| {
+        Box::new(move || {
+            let mut b = MockBackend::new(slots, MAX_SEQ);
+            b.min_len = min_len;
+            b.spread = spread;
+            if delay_us > 0 {
+                b.decode_delay = Some(Duration::from_micros(delay_us));
+            }
+            Ok(b)
+        })
+    })
+    .unwrap()
+}
+
+fn golden_cfg(mode: RolloutMode, step_budget: usize) -> Config {
+    let mut cfg = Config::new("mock");
+    cfg.rollout.mode = mode;
+    cfg.rollout.batch_prompts = 3;
+    cfg.rollout.group_size = 2;
+    cfg.rollout.concurrency = 4;
+    cfg.rollout.temperature = 0.0; // greedy → streams scripted, no RNG
+    cfg.engine.engines = 1;
+    cfg.engine.step_token_budget = step_budget;
+    cfg.train.seed = 5;
+    cfg
+}
+
+/// Canonical stage fingerprint (same shape as rollout_golden.rs).
+type Fingerprint = Vec<(String, usize, Vec<(Vec<i32>, Vec<u32>)>)>;
+
+fn fingerprint(out: &RolloutOutput) -> Fingerprint {
+    let mut groups: Vec<_> = out
+        .groups
+        .iter()
+        .map(|g| {
+            let mut streams: Vec<(Vec<i32>, Vec<u32>)> = g
+                .done
+                .iter()
+                .map(|t| {
+                    (
+                        t.tokens.clone(),
+                        t.behavior_logprobs().iter().map(|l| l.to_bits()).collect(),
+                    )
+                })
+                .collect();
+            streams.sort();
+            (g.task.prompt.clone(), g.target, streams)
+        })
+        .collect();
+    groups.sort();
+    groups
+}
+
+/// THE acceptance check, half one: chunked prefill on vs off is
+/// bit-identical across sync and copris (retained-resume included —
+/// retention is on by default, so copris stages stop, retain, and resume
+/// partials across the three stages).
+#[test]
+fn chunked_on_off_stages_are_bit_identical() {
+    for mode in [RolloutMode::Sync, RolloutMode::Copris] {
+        let mut on_c = Coordinator::new(
+            spawn_pool(1, 1, 5, 5, 4, 6, 200),
+            golden_cfg(mode, 5),
+            MAX_SEQ,
+        );
+        let mut off_c = Coordinator::new(
+            spawn_pool(1, 1, 0, 5, 4, 6, 200),
+            golden_cfg(mode, 0),
+            MAX_SEQ,
+        );
+        let mut ds_on = Dataset::train(5);
+        let mut ds_off = Dataset::train(5);
+        for stage in 0..3 {
+            let a = on_c.rollout_stage(&mut ds_on).unwrap();
+            let b = off_c.rollout_stage(&mut ds_off).unwrap();
+            assert_eq!(a.groups.len(), 3, "{mode:?} stage {stage}");
+            assert_eq!(
+                fingerprint(&a),
+                fingerprint(&b),
+                "chunked prefill changed a stream: mode {mode:?} stage {stage}"
+            );
+            if stage == 0 {
+                assert!(
+                    a.stats.prefill_chunks > 0,
+                    "{mode:?}: budgeted arm must actually chunk"
+                );
+                assert!(a.stats.step_token_util > 0.0);
+                assert_eq!(b.stats.prefill_chunks, 0, "legacy arm must not chunk");
+                assert_eq!(b.stats.step_token_util, 0.0);
+            }
+        }
+        on_c.shutdown();
+        off_c.shutdown();
+    }
+}
+
+/// THE acceptance check, half two: the chunked coordinator vs the frozen
+/// pre-refactor oracle, both driving identically chunked engines — the
+/// scheduler rewrite below the coordinator must be invisible to it.
+#[test]
+fn chunked_driver_matches_reference_oracle() {
+    for mode in [RolloutMode::Sync, RolloutMode::NaivePartial, RolloutMode::Copris] {
+        // The frozen reference never retains KV; run the live driver with
+        // retention off so the comparison isolates the scheduler change.
+        let mut cfg = golden_cfg(mode, 6);
+        cfg.rollout.retain_kv = false;
+        let mut new_c =
+            Coordinator::new(spawn_pool(1, 1, 6, 5, 4, 6, 200), cfg.clone(), MAX_SEQ);
+        let mut ref_c = ReferenceCoordinator::new(
+            spawn_pool(1, 1, 6, 5, 4, 6, 200),
+            cfg.clone(),
+            MAX_SEQ,
+        );
+        let mut ds_new = Dataset::train(cfg.train.seed);
+        let mut ds_ref = Dataset::train(cfg.train.seed);
+        for stage in 0..3 {
+            let a = new_c.rollout_stage(&mut ds_new).unwrap();
+            let b = ref_c.rollout_stage(&mut ds_ref).unwrap();
+            assert_eq!(
+                fingerprint(&a),
+                fingerprint(&b),
+                "chunked driver diverged from reference: mode {mode:?} stage {stage}"
+            );
+        }
+        new_c.shutdown();
+        ref_c.shutdown();
+    }
+}
+
+/// Retained-resume under chunking: a partial stopped with retention and
+/// resumed via the affinity fast path skips ingestion entirely (zero
+/// replay) — and the streams still match the unchunked arm bit-exactly.
+/// Long scripts + slow decode guarantee mid-generation stops.
+#[test]
+fn retained_resume_with_chunking_stays_golden() {
+    let run = |budget: usize| -> (Vec<Fingerprint>, usize, u64) {
+        let mut cfg = golden_cfg(RolloutMode::Copris, budget);
+        cfg.rollout.batch_prompts = 2;
+        cfg.rollout.concurrency = 6;
+        let mut coord =
+            Coordinator::new(spawn_pool(1, 1, budget, 5, 16, 6, 300), cfg, MAX_SEQ);
+        let mut ds = Dataset::train(5);
+        let mut prints = Vec::new();
+        let mut hits = 0usize;
+        let mut resumed = 0u64;
+        for _ in 0..4 {
+            let out = coord.rollout_stage(&mut ds).unwrap();
+            hits += out.stats.retained_hits;
+            resumed += out.stats.resumed as u64;
+            prints.push(fingerprint(&out));
+        }
+        coord.shutdown();
+        (prints, hits, resumed)
+    };
+    let (on, hits_on, resumed_on) = run(5);
+    let (off, _hits_off, _resumed_off) = run(0);
+    assert_eq!(on, off, "retained-resume streams diverged under chunking");
+    assert!(resumed_on > 0, "partial-heavy config must resume buffered partials");
+    assert!(
+        hits_on > 0,
+        "single-engine copris with retention on must hit the affinity fast path"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Chunk/block boundary property sweep (engine level)
+// ---------------------------------------------------------------------------
+
+fn greedy_item(id: u64, prompt: Vec<i32>) -> WorkItem {
+    WorkItem {
+        request_id: id,
+        prompt: prompt.into(),
+        resume: vec![],
+        max_total: MAX_SEQ,
+        sampling: SamplingParams::greedy(),
+        retain: None,
+        prefix: None,
+    }
+}
+
+fn drain(eng: &mut Engine<MockBackend>, max_steps: usize) -> Vec<WorkResult> {
+    let mut out = Vec::new();
+    for _ in 0..max_steps {
+        if !eng.has_work() {
+            break;
+        }
+        let mut ev = Vec::new();
+        eng.step(&mut ev).unwrap();
+        for e in ev {
+            if let EngineEvent::Done { result, .. } = e {
+                out.push(result);
+            }
+        }
+    }
+    out
+}
+
+fn chunked_engine(block_size: usize, budget: usize, slice_replay: bool) -> Engine<MockBackend> {
+    let mut be = MockBackend::new(1, MAX_SEQ);
+    be.min_len = 9;
+    be.spread = 5;
+    be.chunked_replay = slice_replay;
+    let kv = KvCacheConfig { block_size, budget_blocks: 0, prefix_sharing: true };
+    Engine::with_opts(0, be, EngineOpts { kv, step_token_budget: budget }, 1)
+}
+
+/// Prompt lengths sitting exactly on — and one off — every chunk/block
+/// boundary must reproduce the unchunked stream bit-exactly, for fresh
+/// prompts and for a stop→resume cycle (the resume replayed chunked via
+/// `Backend::replay` slices in half the cases, per-token in the rest).
+#[test]
+fn prop_chunk_boundaries_pin_bit_identity() {
+    let p_max = 24usize; // MockBackend default
+    prop_check(
+        "chunk-boundary-bit-identity",
+        48,
+        |rng| {
+            let block_size = 2 + rng.below(7) as usize; // 2..=8
+            let budget = 2 + rng.below(9) as usize; // 2..=10
+            // A length on the boundary lattice of whichever granularity,
+            // nudged by -1, 0, or +1.
+            let base = if rng.below(2) == 0 { block_size } else { budget };
+            let k = 1 + rng.below(3) as usize;
+            let nudge = rng.below(3) as i64 - 1;
+            let plen = ((base * k) as i64 + nudge).clamp(1, p_max as i64) as usize;
+            let sliced = rng.below(2) == 0;
+            let stop_after = 2 + rng.below(4) as usize;
+            (block_size, budget, plen, sliced, stop_after)
+        },
+        |&(block_size, budget, plen, sliced, stop_after)| {
+            let prompt: Vec<i32> = (0..plen).map(|t| 1 + (t as i32 % 9)).collect();
+
+            // Oracle: unchunked, uninterrupted.
+            let mut oracle = chunked_engine(block_size, 0, false);
+            oracle.submit(greedy_item(1, prompt.clone())).unwrap();
+            let want = drain(&mut oracle, 400);
+            if want.len() != 1 {
+                return Err(format!("oracle produced {} results", want.len()));
+            }
+            let want_toks = &want[0].new_tokens;
+            let want_lps: Vec<u32> =
+                want[0].new_logprobs.iter().map(|l| l.to_bits()).collect();
+
+            // Fresh prompt, chunked.
+            let mut eng = chunked_engine(block_size, budget, sliced);
+            eng.submit(greedy_item(1, prompt.clone())).unwrap();
+            let got = drain(&mut eng, 600);
+            if got.len() != 1 {
+                return Err(format!("chunked arm produced {} results", got.len()));
+            }
+            let got_lps: Vec<u32> =
+                got[0].new_logprobs.iter().map(|l| l.to_bits()).collect();
+            if &got[0].new_tokens != want_toks || got_lps != want_lps {
+                return Err("fresh chunked stream diverged".into());
+            }
+            if eng.kv_tokens() != 0 || eng.kv_blocks() != 0 {
+                return Err(format!(
+                    "residency leak: {} tokens {} blocks",
+                    eng.kv_tokens(),
+                    eng.kv_blocks()
+                ));
+            }
+
+            // Stop → resume cycle, chunked (no retention hint → full
+            // replay, sliced or per-token).
+            let mut eng = chunked_engine(block_size, budget, sliced);
+            eng.submit(greedy_item(1, prompt.clone())).unwrap();
+            let mut ev = Vec::new();
+            for _ in 0..stop_after {
+                eng.step(&mut ev).unwrap();
+            }
+            ev.clear();
+            eng.stop_generation(&mut ev, false);
+            let partial = ev
+                .iter()
+                .find_map(|e| match e {
+                    EngineEvent::Done { result, .. } => Some(result.clone()),
+                    _ => None,
+                })
+                .ok_or("no stopped partial")?;
+            let mut it = greedy_item(1, prompt.clone());
+            it.resume = partial.new_tokens.clone();
+            eng.submit(it).unwrap();
+            let rest = drain(&mut eng, 600);
+            if rest.len() != 1 {
+                return Err(format!("resume produced {} results", rest.len()));
+            }
+            let full_toks: Vec<i32> = partial
+                .new_tokens
+                .iter()
+                .chain(rest[0].new_tokens.iter())
+                .copied()
+                .collect();
+            let full_lps: Vec<u32> = partial
+                .new_logprobs
+                .iter()
+                .chain(rest[0].new_logprobs.iter())
+                .map(|l| l.to_bits())
+                .collect();
+            if &full_toks != want_toks || full_lps != want_lps {
+                return Err(format!(
+                    "stop/resume chunked stream diverged (partial {} toks, replayed {})",
+                    partial.new_tokens.len(),
+                    rest[0].replayed
+                ));
+            }
+            if !partial.new_tokens.is_empty() && rest[0].replayed != partial.new_tokens.len()
+            {
+                return Err("replay count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// MockBackend chunk-boundary contract
+// ---------------------------------------------------------------------------
+
+/// The mock enforces chunk boundaries bit-exactly: strictly in-order
+/// ingestion, `start == 0` resets (the mid-chunk preemption contract),
+/// out-of-order starts and oversized stages are hard errors, and replay
+/// slices must start exactly at plen + replayed.
+#[test]
+fn mock_prefill_chunk_contract() {
+    let mut be = MockBackend::new(2, MAX_SEQ);
+    be.chunked_replay = true;
+    let prompt = vec![1, 5, 6, 7, 8, 9];
+
+    // In-order ingestion; the final chunk's logits equal whole-prompt
+    // prefill's bit-exactly.
+    assert!(be.prefill_chunk(0, &prompt[0..2], 0, false).unwrap().is_none());
+    assert!(be.prefill_chunk(0, &prompt[2..4], 2, false).unwrap().is_none());
+    let chunked = be.prefill_chunk(0, &prompt[4..6], 4, true).unwrap().expect("last chunk");
+    let whole = be.prefill(1, &prompt).unwrap();
+    assert_eq!(
+        chunked.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        whole.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        "chunked prefill logits must match whole-prompt prefill"
+    );
+
+    // Boundary violations are hard errors.
+    assert!(be.prefill_chunk(0, &prompt[0..2], 1, false).is_err(), "mid-stream start");
+    assert!(be.prefill_chunk(0, &[], 0, false).is_err(), "empty chunk");
+    be.prefill_chunk(0, &prompt[0..3], 0, false).unwrap(); // start=0 resets
+    assert!(
+        be.prefill_chunk(0, &prompt[0..2], 5, false).is_err(),
+        "skip past staged length"
+    );
+
+    // A preemption reset (empty block table) discards the stage: the next
+    // occupant must start at 0, and a stale continuation errors.
+    be.prefill_chunk(0, &prompt[0..3], 0, false).unwrap();
+    be.set_block_table(0, &[], 0, 4).unwrap();
+    assert!(
+        be.prefill_chunk(0, &prompt[3..5], 3, false).is_err(),
+        "continuation across a reset must fail"
+    );
+    be.prefill_chunk(0, &prompt[0..3], 0, false).unwrap();
+
+    // Replay slices: must follow a completed prefill, in order.
+    be.prefill_chunk(1, &prompt, 0, true).unwrap().expect("prompt done");
+    assert!(be.replay(1, &[4, 4], 7).is_err(), "slice must start at plen");
+    let l1 = be.replay(1, &[4, 4], 6).unwrap().expect("chunked_replay on");
+    let _ = l1;
+    assert!(be.replay(1, &[4], 7).is_err(), "slice must start at plen + fed");
+    be.replay(1, &[4], 8).unwrap().expect("in-order slice accepted");
+}
+
+/// Mid-chunk preemption under a tight block budget leaves the page table
+/// coverage-exact: the engine keeps admitting and completing work with the
+/// mock's install validation live the whole time, and every block is
+/// accounted for at quiesce.
+#[test]
+fn mid_chunk_preemption_keeps_page_coverage_exact() {
+    let mut be = MockBackend::new(2, MAX_SEQ);
+    be.min_len = 18;
+    be.spread = 4;
+    // Tight budget: 6 blocks of 4 — long prompts must preempt/backpressure
+    // while mid-ingestion slots hold partially charged chains.
+    let kv = KvCacheConfig { block_size: 4, budget_blocks: 6, prefix_sharing: true };
+    let mut eng = Engine::with_opts(0, be, EngineOpts { kv, step_token_budget: 5 }, 3);
+    // Per-request (prompt, tokens generated so far) — the test plays the
+    // coordinator's role and re-dispatches preempted work as resumes.
+    let mut world: Vec<(Vec<i32>, Vec<i32>)> = Vec::new();
+    for i in 0..6u64 {
+        let plen = 6 + (i as usize * 7) % 17; // up to 23 ≤ p_max
+        let prompt: Vec<i32> = (0..plen).map(|t| 1 + ((t + i as usize) as i32 % 9)).collect();
+        world.push((prompt.clone(), Vec::new()));
+        eng.submit(greedy_item(i, prompt)).unwrap();
+    }
+    let mut completed = 0usize;
+    let mut preemptions = 0usize;
+    let mut ev = Vec::new();
+    for _ in 0..1500 {
+        if !eng.has_work() {
+            break;
+        }
+        // Any block-table contract violation is a hard step error.
+        eng.step(&mut ev).unwrap();
+        let mut requeue = Vec::new();
+        for e in ev.drain(..) {
+            if let EngineEvent::Done { result, .. } = e {
+                let id = result.request_id as usize;
+                world[id].1.extend_from_slice(&result.new_tokens);
+                if result.reason.is_complete() {
+                    completed += 1;
+                } else {
+                    // Preempted (possibly mid-chunk): resume everything
+                    // generated so far, like the coordinator would.
+                    preemptions += 1;
+                    let mut it = greedy_item(result.request_id, world[id].0.clone());
+                    it.resume = world[id].1.clone();
+                    requeue.push(it);
+                }
+            }
+        }
+        for it in requeue {
+            eng.submit(it).unwrap();
+        }
+    }
+    assert_eq!(completed, 6, "all work completes despite budget pressure");
+    assert!(preemptions > 0 || eng.queued() == 0, "run exercised the pressure path");
+    assert_eq!(eng.kv_tokens(), 0, "coverage-exact: no resident tokens at quiesce");
+    assert_eq!(eng.kv_blocks(), 0, "coverage-exact: no leaked blocks at quiesce");
+}

@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Bench regression guard (stdlib only).
+
+Compares a freshly generated BENCH_micro.json against the committed
+BENCH_baseline.json and fails (exit 1) when any timing regresses past the
+tolerance, or when a baseline row disappeared from the fresh run (a bench
+silently dropped is a regression too).
+
+Rules:
+  - rows are matched by their "path" field;
+  - timing fields ("mean_s", "p95_s") regress when
+        fresh > baseline * (1 + tolerance);
+    improvements are reported but never fail;
+  - deterministic counter fields listed in EXACT_FIELDS (simulated
+    utilization, unit/token counts from the mock benches — same seeds,
+    same counters on any hardware) must match the baseline exactly when
+    both sides carry them;
+  - fresh rows absent from the baseline are reported as NEW (seed them by
+    copying the CI artifact over BENCH_baseline.json);
+  - an EMPTY baseline rows[] passes with a seeding hint, so the gate can
+    land before the first CI-populated baseline is committed. Once seeded,
+    the gate is live.
+
+Usage:
+  scripts/bench_check.py [--baseline BENCH_baseline.json]
+                         [--fresh BENCH_micro.json]
+                         [--tolerance 0.30]
+"""
+
+import argparse
+import json
+import sys
+
+TIMING_FIELDS = ("mean_s", "p95_s")
+# Counter metrics that are deterministic given the benches' fixed seeds
+# (mock backends, no thread races in the counted quantities).
+EXACT_FIELDS = ("step_token_util", "units", "total_tokens")
+
+
+def load_rows(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"bench_check: {path} not found", file=sys.stderr)
+        sys.exit(1)
+    except json.JSONDecodeError as e:
+        print(f"bench_check: {path} is not valid JSON: {e}", file=sys.stderr)
+        sys.exit(1)
+    rows = doc.get("rows", [])
+    return {r["path"]: r for r in rows if "path" in r}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--fresh", default="BENCH_micro.json")
+    ap.add_argument("--tolerance", type=float, default=0.30)
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+
+    if not fresh:
+        print(f"bench_check: {args.fresh} has no rows — did the benches run?")
+        return 1
+    if not base:
+        print(
+            f"bench_check: {args.baseline} has no rows yet — PASS (seeding "
+            f"mode). Seed it by copying a CI run's {args.fresh} artifact "
+            f"over it; the ±{args.tolerance:.0%} gate goes live then."
+        )
+        return 0
+
+    failures = []
+    notes = []
+    for path, brow in sorted(base.items()):
+        frow = fresh.get(path)
+        if frow is None:
+            failures.append(f"MISSING  {path!r}: present in baseline, absent from fresh run")
+            continue
+        for field in TIMING_FIELDS:
+            if field not in brow or field not in frow:
+                continue
+            b, f = float(brow[field]), float(frow[field])
+            if b <= 0.0:
+                continue
+            ratio = f / b
+            if ratio > 1.0 + args.tolerance:
+                failures.append(
+                    f"REGRESSED  {path!r} {field}: {f:.6f}s vs baseline "
+                    f"{b:.6f}s ({ratio:.2f}x > {1 + args.tolerance:.2f}x)"
+                )
+            elif ratio < 1.0 - args.tolerance:
+                notes.append(f"improved  {path!r} {field}: {ratio:.2f}x of baseline")
+        for field in EXACT_FIELDS:
+            if field not in brow or field not in frow:
+                continue
+            if frow[field] != brow[field]:
+                failures.append(
+                    f"DRIFTED  {path!r} {field}: {frow[field]!r} vs baseline "
+                    f"{brow[field]!r} (deterministic counter must match exactly)"
+                )
+    for path in sorted(set(fresh) - set(base)):
+        notes.append(f"new row  {path!r} (not in baseline — re-seed to start gating it)")
+
+    for n in notes:
+        print(f"bench_check: {n}")
+    if failures:
+        for f in failures:
+            print(f"bench_check: {f}", file=sys.stderr)
+        print(
+            f"bench_check: FAIL — {len(failures)} regression(s) beyond "
+            f"±{args.tolerance:.0%}",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"bench_check: OK — {len(base)} baselined rows within "
+        f"±{args.tolerance:.0%} ({len(set(fresh) - set(base))} new)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

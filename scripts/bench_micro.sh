@@ -25,12 +25,13 @@ export COPRIS_BENCH_JSON="$ROOT/BENCH_micro.json"
 # The bench targets are harness=false binaries: `cargo bench --bench micro`
 # runs micro.rs::main(), which prints the table and writes the JSON fresh.
 cargo bench --manifest-path "$MANIFEST" --bench micro "$@"
-# resume_affinity and kv_blocks MERGE their rows into the same file
-# idempotently (micro writes `rows` last, so bench::merge_bench_rows
-# splices before the closing bracket, replacing any stale rows of the same
-# bench).
+# resume_affinity, kv_blocks and continuous_batching MERGE their rows into
+# the same file idempotently (micro writes `rows` last, so
+# bench::merge_bench_rows splices before the closing bracket, replacing any
+# stale rows of the same bench).
 cargo bench --manifest-path "$MANIFEST" --bench resume_affinity
 cargo bench --manifest-path "$MANIFEST" --bench kv_blocks
+cargo bench --manifest-path "$MANIFEST" --bench continuous_batching
 # The CI bench job uploads this file as an artifact; fail loudly if a
 # bench silently produced an empty rows[] so the gap can't reopen.
 if grep -q '"rows":\[\]' "$COPRIS_BENCH_JSON"; then

@@ -1,21 +1,48 @@
 #!/usr/bin/env bash
 # Tier-1 verification (what .github/workflows/ci.yml runs):
-#   cargo build --release --all-targets && cargo doc && cargo clippy && cargo test -q
+#   cargo build --release --all-targets && cargo doc && cargo clippy
+#   && cargo test -q   (+ a separate `cargo fmt --check` gate)
 # --all-targets keeps benches/examples/bins compiling so they cannot rot;
 # the rustdoc step runs with warnings-as-errors so crate docs (missing_docs
 # in the documented module trees, broken intra-doc links — the anchors
 # docs/ARCHITECTURE.md points at) cannot rot either; the clippy step gates
 # all targets at -D warnings (a short allow-list below silences the
-# noisiest purely-stylistic lints so the gate stays about defects).
+# noisiest purely-stylistic lints so the gate stays about defects); the fmt
+# step enforces rustfmt (settings in rustfmt.toml).
 #
-# Modes:
+# Modes (exactly one, optional):
 #   scripts/ci.sh            full tier-1 (build + doc + clippy + test)
+#   scripts/ci.sh --fmt      rustfmt gate only (the CI `fmt` job)
 #   scripts/ci.sh --docs     rustdoc gate only (the CI `rustdoc` job)
 #   scripts/ci.sh --clippy   clippy gate only (the CI `clippy` job)
 #   scripts/ci.sh --bench    full tier-1, then refresh BENCH_micro.json
+# Unknown flags exit 2 with this usage instead of silently running full
+# tier-1.
 set -euo pipefail
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$ROOT"
+
+usage() {
+  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--bench]" >&2
+  echo "  (no flag = full tier-1: build + doc + clippy + test)" >&2
+}
+
+# Validate the mode BEFORE touching the environment: unknown flags exit 2
+# with usage instead of silently running full tier-1.
+MODE="${1:-}"
+case "$MODE" in
+  ""|--fmt|--docs|--clippy|--bench) ;;
+  *)
+    echo "ci: unknown flag $MODE" >&2
+    usage
+    exit 2
+    ;;
+esac
+if [ "$#" -gt 1 ]; then
+  echo "ci: expected at most one mode flag, got: $*" >&2
+  usage
+  exit 2
+fi
 
 MANIFEST=""
 for c in Cargo.toml rust/Cargo.toml; do
@@ -28,6 +55,14 @@ if [ -z "$MANIFEST" ]; then
   echo "ci: no Cargo.toml found under $ROOT" >&2
   exit 1
 fi
+
+run_fmt() {
+  echo "== tier-1: cargo fmt --check =="
+  if ! cargo fmt --manifest-path "$MANIFEST" --check; then
+    echo "ci: formatting drift — run 'cargo fmt' and commit" >&2
+    exit 1
+  fi
+}
 
 run_docs() {
   echo "== tier-1: cargo doc --no-deps (rustdoc warnings are errors) =="
@@ -48,28 +83,47 @@ run_clippy() {
     -A clippy::unnecessary_map_or
 }
 
-if [ "${1:-}" = "--docs" ]; then
+run_full() {
+  # NOTE: fmt is a separate gate (scripts/ci.sh --fmt / the CI `fmt` job),
+  # not part of full tier-1 — the tree predates the fmt gate, so formatting
+  # drift must not mask build/test signal. Fold it in here once a
+  # `cargo fmt` commit has landed.
+  echo "== tier-1: cargo build --release --all-targets =="
+  cargo build --release --all-targets --manifest-path "$MANIFEST"
   run_docs
-  echo "ci: docs OK"
-  exit 0
-fi
-
-if [ "${1:-}" = "--clippy" ]; then
   run_clippy
-  echo "ci: clippy OK"
-  exit 0
-fi
+  echo "== tier-1: cargo test -q =="
+  cargo test -q --manifest-path "$MANIFEST"
+  # The release-gated allocator guard test is dead code under the debug
+  # profile `cargo test` uses; run it in release too (nearly free — the
+  # --release --all-targets build above already compiled the test targets).
+  echo "== tier-1: release-profile guard tests =="
+  cargo test --release -q --manifest-path "$MANIFEST" release_of_free_block
+}
 
-echo "== tier-1: cargo build --release --all-targets =="
-cargo build --release --all-targets --manifest-path "$MANIFEST"
-run_docs
-run_clippy
-echo "== tier-1: cargo test -q =="
-cargo test -q --manifest-path "$MANIFEST"
-
-if [ "${1:-}" = "--bench" ]; then
-  echo "== micro + resume_affinity benches → BENCH_micro.json =="
-  "$ROOT/scripts/bench_micro.sh"
-fi
-
-echo "ci: OK"
+# Single-case mode dispatch (the manifest probe above runs once for every
+# mode; no duplicated dispatch tail).
+case "$MODE" in
+  --fmt)
+    run_fmt
+    echo "ci: fmt OK"
+    ;;
+  --docs)
+    run_docs
+    echo "ci: docs OK"
+    ;;
+  --clippy)
+    run_clippy
+    echo "ci: clippy OK"
+    ;;
+  --bench)
+    run_full
+    echo "== micro + resume_affinity + kv_blocks + continuous_batching benches → BENCH_micro.json =="
+    "$ROOT/scripts/bench_micro.sh"
+    echo "ci: OK"
+    ;;
+  "")
+    run_full
+    echo "ci: OK"
+    ;;
+esac
