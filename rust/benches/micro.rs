@@ -167,6 +167,7 @@ fn main() {
         step_budget: 0,
         prefill_chunks: 0,
         prefill_stall_saved: 0.0,
+        retries: 0,
     };
     let (tx, rx) = std::sync::mpsc::channel::<EngineEvent>();
     let s = time_fn(100, 2000, || {

@@ -154,6 +154,20 @@ pub struct EngineConfig {
     /// bit-identical either way (pinned by
     /// `rust/tests/continuous_batching.rs`).
     pub step_token_budget: usize,
+    /// Transient backend errors retried in place per failing engine step
+    /// before the engine declares itself failed
+    /// (`EngineEvent::EngineFailed`). Fatal errors and panics skip the
+    /// retry budget entirely.
+    pub max_retries: usize,
+    /// Base backoff between transient retries in milliseconds, doubling
+    /// per attempt. 0 = retry immediately.
+    pub retry_backoff_ms: u64,
+    /// Coordinator stall watchdog: with work outstanding and no engine
+    /// event for this long, the engines still owing events are declared
+    /// failed and their trajectories re-dispatched (a hung pool becomes a
+    /// recoverable failure instead of a deadlock). Default matches the
+    /// pre-supervision 120 s event timeout.
+    pub stall_timeout_ms: u64,
 }
 
 impl Default for EngineConfig {
@@ -167,6 +181,9 @@ impl Default for EngineConfig {
             max_new_tokens: 0,
             chunked_replay: false,
             step_token_budget: 0,
+            max_retries: 3,
+            retry_backoff_ms: 10,
+            stall_timeout_ms: 120_000,
         }
     }
 }
@@ -202,6 +219,16 @@ impl EngineConfig {
         crate::engine::EngineOpts {
             kv: self.kv_cache_config(),
             step_token_budget: self.step_token_budget,
+        }
+    }
+
+    /// Supervision policy for the engine run loop
+    /// (`EnginePool::spawn_supervised`): the transient-retry budget and
+    /// backoff base.
+    pub fn supervisor_opts(&self) -> crate::engine::SupervisorOpts {
+        crate::engine::SupervisorOpts {
+            max_retries: self.max_retries,
+            retry_backoff_ms: self.retry_backoff_ms,
         }
     }
 }
@@ -340,6 +367,9 @@ impl Config {
             ("engine", "max_new_tokens") => self.engine.max_new_tokens = parse_usize()?,
             ("engine", "chunked_replay") => self.engine.chunked_replay = parse_bool()?,
             ("engine", "step_token_budget") => self.engine.step_token_budget = parse_usize()?,
+            ("engine", "max_retries") => self.engine.max_retries = parse_usize()?,
+            ("engine", "retry_backoff_ms") => self.engine.retry_backoff_ms = v.parse()?,
+            ("engine", "stall_timeout_ms") => self.engine.stall_timeout_ms = v.parse()?,
             ("train", "steps") => self.train.steps = parse_usize()?,
             ("train", "lr") => self.train.lr = parse_f64()?,
             ("train", "adv_eps") => self.train.adv_eps = parse_f64()?,
@@ -428,6 +458,10 @@ impl Config {
             format!("{} tokens/step (chunked prefill)", eng.step_token_budget)
         };
         s.push_str(&format!("| Step token budget (continuous batching) | {packing} |\n"));
+        s.push_str(&format!(
+            "| Engine failover (retries/backoff/stall) | {}x / {} ms / {} ms |\n",
+            eng.max_retries, eng.retry_backoff_ms, eng.stall_timeout_ms
+        ));
         s.push_str("| **Training Configuration** | |\n");
         s.push_str(&format!("| Global batch size | {} |\n", r.batch_prompts));
         s.push_str("| Optimizer | Adam |\n");
@@ -563,6 +597,38 @@ mod tests {
         let doc = "[engine]\nstep_token_budget = 32\n";
         let c2 = Config::from_toml_str(doc).unwrap();
         assert_eq!(c2.engine.step_token_budget, 32);
+    }
+
+    /// Failover knobs: paper-free defaults (3 retries, 10 ms backoff,
+    /// 120 s stall watchdog), settable via CLI/TOML, flow into
+    /// `supervisor_opts`, and render a table row.
+    #[test]
+    fn failover_knobs_default_and_plumb_through() {
+        let mut c = Config::new("tiny");
+        assert_eq!(c.engine.max_retries, 3);
+        assert_eq!(c.engine.retry_backoff_ms, 10);
+        assert_eq!(c.engine.stall_timeout_ms, 120_000, "default matches old event timeout");
+        let sup = c.engine.supervisor_opts();
+        assert_eq!(sup.max_retries, 3);
+        assert_eq!(sup.retry_backoff_ms, 10);
+        c.set("engine.max_retries", "5").unwrap();
+        c.set("engine.retry_backoff_ms", "0").unwrap();
+        c.set("engine.stall_timeout_ms", "250").unwrap();
+        let sup = c.engine.supervisor_opts();
+        assert_eq!(sup.max_retries, 5);
+        assert_eq!(sup.retry_backoff_ms, 0);
+        assert_eq!(c.engine.stall_timeout_ms, 250);
+        let table = c.render_table();
+        assert!(
+            table.contains("| Engine failover (retries/backoff/stall) | 5x / 0 ms / 250 ms |"),
+            "{table}"
+        );
+        // TOML path hits the same setters.
+        let doc = "[engine]\nmax_retries = 1\nretry_backoff_ms = 7\nstall_timeout_ms = 9000\n";
+        let c2 = Config::from_toml_str(doc).unwrap();
+        assert_eq!(c2.engine.max_retries, 1);
+        assert_eq!(c2.engine.retry_backoff_ms, 7);
+        assert_eq!(c2.engine.stall_timeout_ms, 9000);
     }
 
     #[test]

@@ -20,14 +20,18 @@
 //! `RolloutStats` gains `prefill_chunks`, `t_prefill_stall_saved`, and
 //! `step_token_util`.
 
+use std::collections::HashSet;
 use std::time::{Duration, Instant};
 
 use crate::engine::SamplingParams;
 
 use super::rollout::RolloutStats;
 
-/// Watchdog: a stage with work in flight that sees no engine event for this
-/// long is considered wedged (matches the pre-refactor 120 s recv timeout).
+/// Fallback watchdog interval (matches the pre-refactor 120 s recv
+/// timeout). The live value comes from `engine.stall_timeout_ms`; this
+/// constant is its default. A stage with work in flight that sees no
+/// engine event for this long routes the stalled engines into the
+/// failure/re-dispatch path instead of hanging.
 pub const EVENT_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// What a stage is trying to deliver.
@@ -101,8 +105,10 @@ pub struct StageDriver {
     pub stats: RolloutStats,
     /// Stage start (wall-clock accounting).
     pub t0: Instant,
-    /// Flushed markers seen while draining.
-    pub flushed: usize,
+    /// Engines whose Flushed marker arrived while draining. A drain is
+    /// complete when every engine is flushed OR dead — a set (not a
+    /// count) so failed engines can be excluded from the wait.
+    pub flushed: HashSet<usize>,
     /// NaivePartial wave allowance (None = unlimited). Decremented on
     /// every dispatch; `Some(0)` blocks refill until the next re-wave.
     pub wave_remaining: Option<usize>,
@@ -124,7 +130,7 @@ impl StageDriver {
             phase: StagePhase::Running,
             stats: RolloutStats::default(),
             t0: now,
-            flushed: 0,
+            flushed: HashSet::new(),
             wave_remaining: None,
             last_event: now,
             done_at: None,
@@ -157,7 +163,7 @@ mod tests {
         );
         assert_eq!(d.phase, StagePhase::Running);
         assert!(!d.is_done());
-        assert_eq!(d.flushed, 0);
+        assert!(d.flushed.is_empty());
         assert!(d.wave_remaining.is_none());
     }
 }

@@ -17,8 +17,10 @@
 //! a shared type grows (each behaviour-preserving, marked `API-compat`):
 //! `WorkItem::retain: None` (never uses the retention fast path),
 //! `broadcast_params(.., true)` (always invalidates retained KV — there is
-//! none), and an ignore arm for `EngineEvent::RetainedDropped` (never
-//! received: this coordinator never retains).
+//! none), and ignore arms for `EngineEvent::RetainedDropped` (never
+//! received: this coordinator never retains) and
+//! `EngineEvent::EngineFailed` (pre-refactor behaviour on engine death was
+//! the recv-timeout bail below — ignoring the richer event preserves it).
 
 #![allow(missing_docs)] // frozen pre-refactor code — not part of the doc pass
 
@@ -268,6 +270,7 @@ impl ReferenceCoordinator {
             EngineEvent::Flushed { .. } => return Ok(1),
             EngineEvent::ShutDown { .. } => {}
             EngineEvent::RetainedDropped { .. } => {} // API-compat: never retains
+            EngineEvent::EngineFailed { .. } => {} // API-compat: no supervision pre-refactor
             EngineEvent::Done { engine, result } => {
                 let Some(inf) = self.inflight.remove(&result.request_id) else {
                     bail!("unknown request {} from engine {engine}", result.request_id);

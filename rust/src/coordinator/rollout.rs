@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::buffer::PartialBuffer;
-use super::driver::{StageDriver, StageGoal, StagePhase, StagePolicy, EVENT_TIMEOUT};
+use super::driver::{StageDriver, StageGoal, StagePhase, StagePolicy};
 use super::groups::{Group, GroupBook};
 use super::trajectory::Trajectory;
 use crate::config::{Config, RolloutMode};
@@ -32,8 +32,9 @@ use crate::engine::{EngineCmd, EngineEvent, EnginePool, FinishReason, SamplingPa
 use crate::tasks::{Dataset, Task};
 use crate::tokenizer::Tokenizer;
 
-/// Deadline chunk used by the blocking wrappers; the in-driver watchdog
-/// ([`EVENT_TIMEOUT`]) catches wedged engines long before this elapses.
+/// Deadline chunk used by the blocking wrappers; the in-driver stall
+/// watchdog (`engine.stall_timeout_ms`) catches wedged engines long
+/// before this elapses.
 const PUMP_CHUNK: Duration = Duration::from_secs(3600);
 
 /// Per-stage rollout statistics (feeds Fig. 1, Table 2, Fig. 3).
@@ -82,6 +83,20 @@ pub struct RolloutStats {
     /// Mean packed-step token utilization (step tokens / step budget)
     /// across this stage's engine steps; 0.0 when the budget is off.
     pub step_token_util: f64,
+    /// Engine failures absorbed this stage: fatal backend errors, panics,
+    /// exhausted transient-retry budgets, and stall-watchdog declarations.
+    pub engine_failures: usize,
+    /// In-flight trajectories re-dispatched onto surviving engines after
+    /// an engine failure (drain-phase losses re-park as partials instead
+    /// and are not counted here).
+    pub redispatched_trajectories: usize,
+    /// Transient backend errors retried in place across all engines this
+    /// stage (`engine.max_retries` bounds the per-step budget).
+    pub retries: u64,
+    /// Backend `retain_slot` errors swallowed at flush this stage — each
+    /// one flushed its slot plainly instead of retaining KV for affinity
+    /// resume (correctness unaffected; the resume replays).
+    pub retain_errors: u64,
     /// Per-engine-step utilization samples.
     pub traces: Vec<StepTrace>,
     /// Response length of every trajectory completed this stage.
@@ -164,6 +179,7 @@ struct EngineCounters {
     cow_copies: u64,
     prefill_chunks: u64,
     prefill_stall_saved: f64,
+    retries: u64,
 }
 
 /// Where a buffered partial's KV is retained: the engine that generated it
@@ -189,6 +205,12 @@ pub struct Coordinator {
     book: GroupBook,
     inflight: HashMap<u64, InFlight>,
     engine_load: Vec<usize>,
+    /// Per-engine death flags, set by `EngineFailed` events and the stall
+    /// watchdog. Dead engines are excluded from routing and drain waits
+    /// and their late events are discarded (a stalled engine the watchdog
+    /// buried can wake up and flush). Deaths persist across stages — the
+    /// thread is gone.
+    dead: Vec<bool>,
     /// Affinity map: buffered-partial trajectory id → retained slot. An
     /// entry exists iff the partial's last `Stopped` flush retained KV and
     /// no sync/eviction/route has cleared it since.
@@ -232,6 +254,7 @@ impl Coordinator {
             book: GroupBook::new(),
             inflight: HashMap::new(),
             engine_load: vec![0; engines],
+            dead: vec![false; engines],
             retained_at: HashMap::new(),
             prefix_homes: HashMap::new(),
             kv_seen: vec![EngineCounters::default(); engines],
@@ -292,10 +315,19 @@ impl Coordinator {
         self.driver.as_mut().expect("no active rollout stage")
     }
 
+    /// Engines still alive (not declared failed).
+    fn live_engines(&self) -> usize {
+        self.dead.iter().filter(|d| !**d).count()
+    }
+
+    /// Least-loaded LIVE engine. Falls back to engine 0 only when every
+    /// engine is dead — unreachable in practice: `begin_stage` refuses a
+    /// dead pool and `fail_engine` bails degraded before re-dispatching.
     fn least_loaded_engine(&self) -> usize {
         self.engine_load
             .iter()
             .enumerate()
+            .filter(|(i, _)| !self.dead[*i])
             .min_by_key(|(_, l)| **l)
             .map(|(i, _)| i)
             .unwrap_or(0)
@@ -320,22 +352,29 @@ impl Coordinator {
         let max_imbalance = self.cfg.rollout.affinity_max_imbalance;
         if let Some(r) = self.retained_at.remove(&traj.id) {
             if self.cfg.rollout.retain_kv
+                && !self.dead[r.engine]
                 && self.engine_load[r.engine] <= self.engine_load[least] + max_imbalance
             {
                 return (r.engine, Some(r.token));
             }
             // Imbalance fallback: free the remote retained slot so it
             // stops charging that engine's KV, then fall through to the
-            // block-residency / least-loaded routes.
-            self.pool.send(
-                r.engine,
-                EngineCmd::ReleaseRetained { request_id: traj.id, token: r.token },
-            );
+            // block-residency / least-loaded routes. (Nothing to release
+            // on a dead engine — `fail_engine` already dropped its
+            // entries; this arm only covers races with a queued event.)
+            if !self.dead[r.engine] {
+                self.pool.send(
+                    r.engine,
+                    EngineCmd::ReleaseRetained { request_id: traj.id, token: r.token },
+                );
+            }
         }
         if self.cfg.engine.prefix_sharing {
             let home = self.prefix_homes.get(&traj.group_id).and_then(|h| h.first()).copied();
             if let Some(home) = home {
-                if self.engine_load[home] <= self.engine_load[least] + max_imbalance {
+                if !self.dead[home]
+                    && self.engine_load[home] <= self.engine_load[least] + max_imbalance
+                {
                     return (home, None);
                 }
             }
@@ -439,6 +478,11 @@ impl Coordinator {
     /// follow with `pump` until done, then `finish_stage`.
     pub fn begin_stage(&mut self, dataset: &mut Dataset) -> Result<()> {
         ensure!(self.driver.is_none(), "rollout stage already active");
+        ensure!(
+            self.live_engines() > 0,
+            "rollout: degraded — no live engines (all {} failed in earlier stages)",
+            self.pool.engines()
+        );
         // Paged-KV delta baseline: engine counters are cumulative, stage
         // stats report the difference from here.
         self.kv_base.clone_from(&self.kv_seen);
@@ -571,7 +615,7 @@ impl Coordinator {
                             self.pool.stop_generation_all_with(self.cfg.rollout.retain_kv);
                             let d = self.drv_mut();
                             d.phase = StagePhase::Draining;
-                            d.flushed = 0;
+                            d.flushed.clear();
                             continue;
                         }
                         let d = self.drv_mut();
@@ -606,13 +650,18 @@ impl Coordinator {
                     }
                 }
                 StagePhase::Draining => {
-                    while self.drv().flushed < self.pool.engines() {
+                    while !self.drain_complete() {
                         match self.next_event(deadline)? {
-                            Some(ev) => {
-                                let f = self.handle_event(ev, true)?;
-                                self.drv_mut().flushed += f;
+                            Some(ev) => self.handle_event(ev, true)?,
+                            None => {
+                                // Deadline reached — or the watchdog just
+                                // buried a stalled engine; re-check
+                                // completion before parking again.
+                                if self.drain_complete() {
+                                    break;
+                                }
+                                return Ok(false);
                             }
-                            None => return Ok(false),
                         }
                     }
                     // Anything still in the inflight map was queued but
@@ -638,8 +687,11 @@ impl Coordinator {
                         // restored hint is stale and falls back to replay
                         // in-engine — harmless.)
                         if let Some(token) = inf.retain {
-                            let invalidated = !self.cfg.rollout.retain_kv_across_sync
-                                && self.policy_version != inf.version;
+                            // A dead engine's retained slot died with it —
+                            // neither restorable nor releasable.
+                            let invalidated = self.dead[inf.engine]
+                                || (!self.cfg.rollout.retain_kv_across_sync
+                                    && self.policy_version != inf.version);
                             if parked && !invalidated {
                                 self.retained_at
                                     .insert(id, RetainedRef { engine: inf.engine, token });
@@ -672,26 +724,137 @@ impl Coordinator {
         }
     }
 
-    /// Next pool event: non-blocking if `deadline` has passed, otherwise
-    /// waits up to the deadline, bounded by the wedge watchdog.
-    fn next_event(&mut self, deadline: Instant) -> Result<Option<EngineEvent>> {
-        if let Some(ev) = self.pool.try_next() {
-            self.drv_mut().last_event = Instant::now();
-            return Ok(Some(ev));
+    /// Drain completion: every engine has either delivered its `Flushed`
+    /// marker or died (dead engines flush nothing).
+    fn drain_complete(&self) -> bool {
+        (0..self.pool.engines()).all(|e| self.dead[e] || self.drv().flushed.contains(&e))
+    }
+
+    /// Declare `engine` dead and recover its work. Idempotent: a late
+    /// `EngineFailed` event for an engine the watchdog already buried is
+    /// a no-op.
+    fn fail_engine(&mut self, engine: usize, error: &str) -> Result<()> {
+        if self.dead[engine] {
+            return Ok(());
         }
+        self.dead[engine] = true;
+        self.drv_mut().stats.engine_failures += 1;
+        eprintln!("coordinator: engine {engine} failed: {error}");
+        self.recover_failed(engine, error)
+    }
+
+    /// Recovery for an engine already marked dead: drop its routing state
+    /// (retained-KV affinity, prefix homes), then re-dispatch the
+    /// in-flight trajectories it took down onto survivors — resuming from
+    /// the tokens already appended, the same replay path a buffered
+    /// partial takes. During a drain the lost work stays in `inflight`
+    /// instead: the leftover loop re-parks it as partials. With no
+    /// survivors the stage fails with a structured degraded error rather
+    /// than hanging (a vacuous drain still completes: leftovers park).
+    fn recover_failed(&mut self, engine: usize, error: &str) -> Result<()> {
+        self.retained_at.retain(|_, r| r.engine != engine);
+        for homes in self.prefix_homes.values_mut() {
+            homes.retain(|e| *e != engine);
+        }
+        self.prefix_homes.retain(|_, h| !h.is_empty());
+        let draining = self.drv().phase == StagePhase::Draining;
+        if self.live_engines() == 0 && !draining {
+            bail!(
+                "rollout: degraded — all {} engines failed (last: engine {engine}: {error})",
+                self.pool.engines()
+            );
+        }
+        if draining || self.live_engines() == 0 {
+            return Ok(());
+        }
+        // The inflight map is authoritative for what the engine owed —
+        // it includes queued-but-unstarted dispatches the failure event's
+        // own in-flight list may not.
+        let mut lost: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, inf)| inf.engine == engine)
+            .map(|(id, _)| *id)
+            .collect();
+        lost.sort_unstable();
+        let sampling = self.drv().sampling;
+        for id in lost {
+            let inf = self.inflight.remove(&id).unwrap();
+            self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
+            self.drv_mut().stats.redispatched_trajectories += 1;
+            // Recovery is not new work: don't charge it against a
+            // naive-partial wave allowance.
+            let wave = self.drv().wave_remaining;
+            self.dispatch(inf.traj, sampling);
+            self.drv_mut().wave_remaining = wave;
+        }
+        Ok(())
+    }
+
+    /// Stall watchdog: no engine event for `stall` with work outstanding.
+    /// Every live engine that still owes events (in-flight load while
+    /// Running, an unflushed drain while Draining) is declared dead and
+    /// recovered; if none does, the stall is a coordinator bug and
+    /// surfaces as the legacy timeout error.
+    fn watchdog_fire(&mut self, stall: Duration) -> Result<()> {
+        let draining = self.drv().phase == StagePhase::Draining;
+        let stalled: Vec<usize> = (0..self.pool.engines())
+            .filter(|e| !self.dead[*e])
+            .filter(|e| {
+                if draining {
+                    !self.drv().flushed.contains(e)
+                } else {
+                    self.engine_load[*e] > 0
+                }
+            })
+            .collect();
+        if stalled.is_empty() {
+            bail!("rollout: engine event timeout ({:.0}s without events)", stall.as_secs_f64());
+        }
+        // Mark ALL stalled engines dead before recovering any, so
+        // re-dispatch never routes one stalled engine's work at another.
+        for &e in &stalled {
+            self.dead[e] = true;
+            self.drv_mut().stats.engine_failures += 1;
+            eprintln!(
+                "coordinator: engine {e} stalled ({:.0}s without events) — declared dead",
+                stall.as_secs_f64()
+            );
+        }
+        for &e in &stalled {
+            self.recover_failed(e, "stalled past watchdog")?;
+        }
+        Ok(())
+    }
+
+    /// Next pool event: non-blocking if `deadline` has passed, otherwise
+    /// waits up to the deadline, bounded by the stall watchdog
+    /// (`engine.stall_timeout_ms`). Returns `Ok(None)` at the deadline
+    /// AND after a watchdog firing — callers re-check their phase
+    /// condition before waiting again. A disconnected pool (every engine
+    /// thread gone) is the degraded terminal state.
+    fn next_event(&mut self, deadline: Instant) -> Result<Option<EngineEvent>> {
+        match self.pool.try_next_checked() {
+            Ok(Some(ev)) => {
+                self.drv_mut().last_event = Instant::now();
+                return Ok(Some(ev));
+            }
+            Ok(None) => {}
+            Err(_) => bail!("rollout: degraded — engine pool disconnected"),
+        }
+        let stall = Duration::from_millis(self.cfg.engine.stall_timeout_ms.max(1));
         loop {
             let now = Instant::now();
             if now >= deadline {
                 return Ok(None);
             }
             let idle = now.duration_since(self.drv().last_event);
-            if idle >= EVENT_TIMEOUT {
-                bail!(
-                    "rollout: engine event timeout ({}s without events)",
-                    EVENT_TIMEOUT.as_secs()
-                );
+            if idle >= stall {
+                self.watchdog_fire(stall)?;
+                self.drv_mut().last_event = Instant::now();
+                return Ok(None);
             }
-            let wait = (EVENT_TIMEOUT - idle).min(deadline - now);
+            let wait = (stall - idle).min(deadline - now);
             match self.pool.next_before(now + wait) {
                 Ok(ev) => {
                     self.drv_mut().last_event = Instant::now();
@@ -699,7 +862,7 @@ impl Coordinator {
                 }
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => {
-                    bail!("rollout: engine pool disconnected")
+                    bail!("rollout: degraded — engine pool disconnected")
                 }
             }
         }
@@ -760,6 +923,12 @@ impl Coordinator {
             .zip(&self.kv_base)
             .map(|(s, b)| (s.prefill_stall_saved - b.prefill_stall_saved).max(0.0))
             .sum();
+        stats.retries = self
+            .kv_seen
+            .iter()
+            .zip(&self.kv_base)
+            .map(|(s, b)| s.retries.saturating_sub(b.retries))
+            .sum();
         // Mean packed-step token utilization over the stage's budgeted
         // engine steps (0.0 when the continuous-batching budget is off).
         let mut util_sum = 0.0f64;
@@ -793,7 +962,7 @@ impl Coordinator {
                 self.pool.stop_generation_all_with(self.cfg.rollout.retain_kv);
                 let d = self.drv_mut();
                 d.phase = StagePhase::Draining;
-                d.flushed = 0;
+                d.flushed.clear();
             } else {
                 let d = self.drv_mut();
                 d.phase = StagePhase::Done;
@@ -816,16 +985,36 @@ impl Coordinator {
     /// Handle one engine event (recursing into `Batch` — engines deliver a
     /// whole step's events in one channel send). `draining` switches
     /// Stopped/Preempted handling to "buffer it" (early-termination flush).
-    /// Returns the number of `Flushed` markers seen, so the Draining phase
-    /// can count engine flushes even when they arrive inside a batch.
-    fn handle_event(&mut self, ev: EngineEvent, draining: bool) -> Result<usize> {
+    /// Flushed markers land in the driver's `flushed` set, so the Draining
+    /// phase tracks engine flushes even when they arrive inside a batch.
+    fn handle_event(&mut self, ev: EngineEvent, draining: bool) -> Result<()> {
+        if let EngineEvent::Batch(evs) = ev {
+            for e in evs {
+                self.handle_event(e, draining)?;
+            }
+            return Ok(());
+        }
+        // Late events from an engine already declared dead — a stalled
+        // engine the watchdog buried can wake up and deliver its backlog.
+        // Its work was already re-dispatched or re-parked; processing
+        // these would double-deliver (or bail on an unknown request id).
+        let from = match &ev {
+            EngineEvent::Trace(t) => Some(t.engine),
+            EngineEvent::Flushed { engine, .. }
+            | EngineEvent::ShutDown { engine }
+            | EngineEvent::RetainedDropped { engine, .. }
+            | EngineEvent::Done { engine, .. } => Some(*engine),
+            EngineEvent::EngineFailed { .. } | EngineEvent::Batch(_) => None,
+        };
+        if let Some(e) = from {
+            if self.dead[e] {
+                return Ok(());
+            }
+        }
         match ev {
-            EngineEvent::Batch(evs) => {
-                let mut flushed = 0;
-                for e in evs {
-                    flushed += self.handle_event(e, draining)?;
-                }
-                return Ok(flushed);
+            EngineEvent::Batch(_) => unreachable!("batches are unpacked above"),
+            EngineEvent::EngineFailed { engine, error, .. } => {
+                self.fail_engine(engine, &error)?;
             }
             EngineEvent::Trace(t) => {
                 // The engine's prefix/COW/chunk counters are cumulative
@@ -839,12 +1028,17 @@ impl Coordinator {
                     seen.prefill_chunks = seen.prefill_chunks.max(t.prefill_chunks);
                     seen.prefill_stall_saved =
                         seen.prefill_stall_saved.max(t.prefill_stall_saved);
+                    seen.retries = seen.retries.max(t.retries);
                 }
                 let d = self.drv_mut();
                 d.stats.kv_blocks_peak = d.stats.kv_blocks_peak.max(t.kv_blocks);
                 d.stats.traces.push(t);
             }
-            EngineEvent::Flushed { .. } => return Ok(1),
+            EngineEvent::Flushed { engine, retain_errors } => {
+                let d = self.drv_mut();
+                d.stats.retain_errors += retain_errors;
+                d.flushed.insert(engine);
+            }
             EngineEvent::ShutDown { .. } => {}
             EngineEvent::RetainedDropped { engine, request_id } => {
                 // The engine evicted/released that retained slot; stop
@@ -944,7 +1138,7 @@ impl Coordinator {
                 }
             }
         }
-        Ok(0)
+        Ok(())
     }
 
     /// Park a flushed/preempted partial in the buffer; returns false when
@@ -974,6 +1168,11 @@ impl Coordinator {
     ) -> Result<Vec<Group>> {
         ensure!(self.driver.is_none(), "run_fixed_sync with a stage active");
         ensure!(self.inflight.is_empty(), "run_fixed_sync with work in flight");
+        ensure!(
+            self.live_engines() > 0,
+            "rollout: degraded — no live engines (all {} failed in earlier stages)",
+            self.pool.engines()
+        );
         let policy = StagePolicy {
             target: None,
             continuous: false,

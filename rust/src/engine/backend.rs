@@ -8,6 +8,42 @@ use xla::PjRtBuffer;
 use crate::model::ModelRuntime;
 use crate::tokenizer;
 
+/// Classified backend failure, consumed by the engine-thread supervisor
+/// (`pool::run_loop`). Backends that can tell a recoverable hiccup (device
+/// transport timeout, transient allocation pressure) from a wedged device
+/// wrap their errors in this type; everything else — including plain
+/// `anyhow` errors — is treated as [`BackendError::Fatal`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendError {
+    /// Retryable: the supervisor retries the engine step in place with
+    /// bounded exponential backoff (`engine.max_retries` attempts,
+    /// `engine.retry_backoff_ms` base) before giving up.
+    Transient(String),
+    /// Non-retryable: the engine declares itself failed immediately
+    /// (`EngineEvent::EngineFailed`).
+    Fatal(String),
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::Transient(msg) => write!(f, "transient backend error: {msg}"),
+            BackendError::Fatal(msg) => write!(f, "fatal backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// True when `err`'s chain contains a [`BackendError::Transient`] — the
+/// supervisor's retry classification. Anything unclassified is fatal: a
+/// backend that cannot vouch for its own state must not be blindly
+/// re-driven.
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    err.chain()
+        .any(|c| matches!(c.downcast_ref::<BackendError>(), Some(BackendError::Transient(_))))
+}
+
 /// Abstracts prefill/decode so the engine loop and the whole coordinator
 /// stack are testable without PJRT (see `MockBackend`).
 pub trait Backend {
@@ -836,5 +872,18 @@ mod tests {
             .count();
         assert!(diffs > 25, "{diffs}");
         let _ = l1;
+    }
+
+    #[test]
+    fn transient_classification_survives_context_wrapping() {
+        use anyhow::Context;
+        let t: anyhow::Error = anyhow::Error::new(BackendError::Transient("hiccup".into()));
+        assert!(is_transient(&t));
+        let wrapped = Result::<(), _>::Err(t).context("during decode step").unwrap_err();
+        assert!(is_transient(&wrapped), "context wrapping must not hide the classification");
+        let f = anyhow::Error::new(BackendError::Fatal("device lost".into()));
+        assert!(!is_transient(&f));
+        let plain = anyhow::anyhow!("unclassified");
+        assert!(!is_transient(&plain), "unclassified errors are fatal");
     }
 }

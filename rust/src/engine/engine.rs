@@ -219,6 +219,10 @@ pub struct StepTrace {
     /// lanes (engine lifetime) — the admission-prefill stall the packed
     /// schedule avoided imposing on co-resident decodes.
     pub prefill_stall_saved: f64,
+    /// Cumulative transient-backend-error retries the supervisor performed
+    /// for this engine (engine lifetime; the coordinator differences
+    /// per-stage deltas).
+    pub retries: u64,
 }
 
 /// Events flowing from engine threads back to the coordinator.
@@ -237,11 +241,32 @@ pub enum EngineEvent {
     Flushed {
         /// Engine id that finished flushing.
         engine: usize,
+        /// Backend `retain_slot` errors swallowed during this flush (the
+        /// affected slots flushed plainly; the coordinator accounts them
+        /// in `RolloutStats::retain_errors`).
+        retain_errors: u64,
     },
     /// Engine thread exited.
     ShutDown {
         /// Engine id that shut down.
         engine: usize,
+    },
+    /// The engine thread failed — a backend error that survived the
+    /// transient-retry budget, a panic caught by the supervisor, or a
+    /// backend that never initialized — and is shutting down. Carries
+    /// everything the coordinator needs to recover: the request ids still
+    /// in flight on the engine (busy slots plus the unstarted admission
+    /// queue; their generation since dispatch is lost) and the ids whose
+    /// KV was retained there (their affinity hints are now stale).
+    EngineFailed {
+        /// Engine id that failed.
+        engine: usize,
+        /// Human-readable failure cause (error chain or panic payload).
+        error: String,
+        /// Request ids whose work died with the engine.
+        inflight: Vec<u64>,
+        /// Request ids whose retained KV died with the engine.
+        retained: Vec<u64>,
     },
     /// A retained slot was dropped (budget/admission eviction or explicit
     /// release) — the coordinator clears its affinity entry so future
@@ -430,6 +455,12 @@ pub struct Engine<B: Backend> {
     /// Cumulative retained-slot drops (budget/admission eviction, release,
     /// weight-sync invalidation).
     pub retained_evictions: u64,
+    /// Cumulative transient-backend-error retries (incremented by the pool
+    /// supervisor between attempts; reported through [`StepTrace`]).
+    pub retries: u64,
+    /// Cumulative backend `retain_slot` errors (each flushed its slot
+    /// plainly instead of retaining; see [`Engine::stop_generation`]).
+    pub retain_errors: u64,
     // -- incremental bookkeeping (invariants maintained by occupy/vacate) --
     /// Busy slot count (== slots.iter().filter(Busy).count()).
     busy_count: usize,
@@ -524,6 +555,8 @@ impl<B: Backend> Engine<B> {
             replayed_tokens: 0,
             retained_resumes: 0,
             retained_evictions: 0,
+            retries: 0,
+            retain_errors: 0,
             busy_count: 0,
             retained_count: 0,
             kv_resident: 0,
@@ -652,6 +685,20 @@ impl<B: Backend> Engine<B> {
         let _ = self.backend.set_block_table(i, &[], 0, self.kv_cfg.block_size);
     }
 
+    /// Un-admit after a backend error mid-admission: release whatever
+    /// blocks the aborted admission charged, clear the backend's slot
+    /// mapping, and put the item back at the queue head — a supervisor
+    /// retry (transient) or the failure snapshot (fatal) must still see
+    /// the request, never silently drop it. The admission counter is
+    /// rewound so a retried admission gets the same sequence number
+    /// (bit-exact transient recovery).
+    fn unadmit(&mut self, i: usize, mut pages: PageTable, item: WorkItem) {
+        pages.release_all(&mut self.kv);
+        let _ = self.backend.set_block_table(i, &[], 0, self.kv_cfg.block_size);
+        self.admission_counter -= 1;
+        self.pending.push_front(item);
+    }
+
     /// Drop retained slot `i` back to Idle, releasing its block refs (only
     /// refs that drop to zero actually free residency — a retained partial
     /// whose prefix is still live costs near nothing to evict) and telling
@@ -736,13 +783,30 @@ impl<B: Backend> Engine<B> {
         events: &mut Vec<EngineEvent>,
         retain: bool,
     ) -> Vec<WorkItem> {
+        let mut flush_retain_errors = 0u64;
         for i in 0..self.slots.len() {
             // All busy/kv counter maintenance goes through vacate(); the
             // retain branch re-installs the identical KV charge below.
             let Some(mut b) = self.vacate(i) else { continue };
             let caught_up = b.replay_fed >= b.item.resume.len() && !b.generated.is_empty();
-            let can_retain =
-                retain && caught_up && self.backend.retain_slot(i).unwrap_or(false);
+            // A retain_slot error is not a flush failure — the slot just
+            // loses the fast path and flushes plainly (its resume replays).
+            // But it is not silently dropped either: counted per flush and
+            // cumulatively, and warned once per occurrence.
+            let can_retain = retain
+                && caught_up
+                && match self.backend.retain_slot(i) {
+                    Ok(ok) => ok,
+                    Err(e) => {
+                        flush_retain_errors += 1;
+                        self.retain_errors += 1;
+                        eprintln!(
+                            "engine-{}: retain_slot({i}) failed, flushing plainly: {e:#}",
+                            self.id
+                        );
+                        false
+                    }
+                };
             if can_retain {
                 self.retain_counter += 1;
                 let token = self.retain_counter;
@@ -773,8 +837,42 @@ impl<B: Backend> Engine<B> {
             }
         }
         let unstarted: Vec<WorkItem> = self.pending.drain(..).collect();
-        events.push(EngineEvent::Flushed { engine: self.id });
+        events
+            .push(EngineEvent::Flushed { engine: self.id, retain_errors: flush_retain_errors });
         unstarted
+    }
+
+    /// Request ids whose work would be lost if this engine died right now:
+    /// every busy slot (including mid-ingestion) plus the unstarted
+    /// admission queue. The supervisor snapshots this into
+    /// [`EngineEvent::EngineFailed`] so the coordinator can re-dispatch.
+    pub fn inflight_request_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .slots
+            .iter()
+            .filter_map(|s| match s {
+                SlotState::Busy(b) => Some(b.item.request_id),
+                _ => None,
+            })
+            .collect();
+        ids.extend(self.pending.iter().map(|w| w.request_id));
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Request ids whose KV is retained on this engine (affinity hints the
+    /// coordinator must drop when the engine fails).
+    pub fn retained_request_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .slots
+            .iter()
+            .filter_map(|s| match s {
+                SlotState::Retained(rs) => Some(rs.request_id),
+                _ => None,
+            })
+            .collect();
+        ids.sort_unstable();
+        ids
     }
 
     /// One scheduler iteration: admit pending work, enforce the KV budget,
@@ -944,6 +1042,7 @@ impl<B: Backend> Engine<B> {
             step_budget: self.step_budget,
             prefill_chunks: self.prefill_chunks,
             prefill_stall_saved: self.prefill_stall_saved,
+            retries: self.retries,
         }));
         Ok(())
     }
@@ -1583,7 +1682,13 @@ impl<B: Backend> Engine<B> {
                     }
                 }
             }
-            let logits = self.backend.prefill(i, &item.prompt)?;
+            let logits = match self.backend.prefill(i, &item.prompt) {
+                Ok(l) => l,
+                Err(e) => {
+                    self.unadmit(i, pages, item);
+                    return Err(e);
+                }
+            };
             if shared_tokens == 0 {
                 pages
                     .grow_to(plen, &mut self.kv)
@@ -1618,12 +1723,12 @@ impl<B: Backend> Engine<B> {
                 busy.pages
                     .grow_to(plen + 1, &mut self.kv)
                     .expect("engine block arena is unbounded");
-                self.backend.set_block_table(
-                    i,
-                    busy.pages.block_ids(),
-                    busy.pages.tokens(),
-                    bs,
-                )?;
+                if let Err(e) =
+                    self.backend.set_block_table(i, busy.pages.block_ids(), busy.pages.tokens(), bs)
+                {
+                    self.unadmit(i, busy.pages, busy.item);
+                    return Err(e);
+                }
                 // Sample the first new token from the prefill logits.
                 let (tok, lp) = sample_token_with(
                     &logits,
@@ -1660,12 +1765,16 @@ impl<B: Backend> Engine<B> {
                 let mut last_logits: Option<Vec<f32>> = None;
                 while fed < resume.len() {
                     let end = (fed + pmax).min(resume.len());
-                    match self.backend.replay(i, &resume[fed..end], plen + fed)? {
-                        Some(logits) => {
+                    match self.backend.replay(i, &resume[fed..end], plen + fed) {
+                        Ok(Some(logits)) => {
                             last_logits = Some(logits);
                             fed = end;
                         }
-                        None => break,
+                        Ok(None) => break,
+                        Err(e) => {
+                            self.unadmit(i, busy.pages, busy.item);
+                            return Err(e);
+                        }
                     }
                 }
                 self.replayed_tokens += fed as u64;
@@ -1678,12 +1787,12 @@ impl<B: Backend> Engine<B> {
                 busy.pages
                     .grow_to(plen + fed + 1, &mut self.kv)
                     .expect("engine block arena is unbounded");
-                self.backend.set_block_table(
-                    i,
-                    busy.pages.block_ids(),
-                    busy.pages.tokens(),
-                    bs,
-                )?;
+                if let Err(e) =
+                    self.backend.set_block_table(i, busy.pages.block_ids(), busy.pages.tokens(), bs)
+                {
+                    self.unadmit(i, busy.pages, busy.item);
+                    return Err(e);
+                }
                 if fed == resume.len() {
                     // Replay complete: sample the next new token now.
                     let logits = last_logits.expect("non-empty resume");
@@ -1891,6 +2000,51 @@ mod tests {
         let results = run_to_completion(&mut eng, 500);
         assert_eq!(results.len(), 6);
         assert_eq!(eng.queued(), 0);
+    }
+
+    /// A backend error mid-admission must not lose the request: the item
+    /// is re-queued at the head (so a failure snapshot still reports it)
+    /// with no KV leaked, and an in-place retry — what the supervisor does
+    /// for transient errors — produces the exact fault-free stream.
+    #[test]
+    fn failed_admission_prefill_requeues_item() {
+        use crate::testkit::faulty::{FaultKind, FaultOp, FaultPlan, FaultyBackend};
+        let mut clean_eng = Engine::new(0, MockBackend::new(1, 96), 0, 1);
+        clean_eng.submit(item(1, vec![1, 5, 9])).unwrap();
+        let want: Vec<Vec<i32>> = run_to_completion(&mut clean_eng, 200)
+            .into_iter()
+            .map(|r| r.new_tokens)
+            .collect();
+
+        let be = FaultyBackend::new(
+            MockBackend::new(1, 96),
+            vec![FaultPlan {
+                op: FaultOp::Prefill,
+                at_call: 1,
+                kind: FaultKind::Transient { times: 1 },
+            }],
+        );
+        let mut eng = Engine::new(0, be, 0, 1);
+        eng.submit(item(1, vec![1, 5, 9])).unwrap();
+        let mut ev = Vec::new();
+        let err = eng.step(&mut ev).unwrap_err();
+        assert!(crate::engine::is_transient(&err));
+        assert_eq!(eng.inflight_request_ids(), vec![1], "faulted admission lost the request");
+        assert_eq!(eng.kv_blocks(), 0, "aborted admission leaked blocks");
+        let mut out = Vec::new();
+        for _ in 0..200 {
+            if !eng.has_work() {
+                break;
+            }
+            let mut ev = Vec::new();
+            eng.step(&mut ev).unwrap();
+            for e in ev {
+                if let EngineEvent::Done { result, .. } = e {
+                    out.push(result.new_tokens);
+                }
+            }
+        }
+        assert_eq!(out, want, "retry after un-admit must be bit-identical");
     }
 
     #[test]

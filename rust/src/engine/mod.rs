@@ -19,10 +19,10 @@ pub mod kvcache;
 pub mod pool;
 pub mod sampler;
 
-pub use backend::{Backend, MockBackend, XlaBackend};
+pub use backend::{is_transient, Backend, BackendError, MockBackend, XlaBackend};
 pub use engine::{
     Engine, EngineCmd, EngineEvent, EngineOpts, FinishReason, StepTrace, WorkItem, WorkResult,
 };
 pub use kvcache::{BlockAllocator, BlockId, KvCacheConfig, PageTable, PrefixCache, DEFAULT_BLOCK_SIZE};
-pub use pool::EnginePool;
+pub use pool::{EnginePool, SupervisorOpts};
 pub use sampler::{sample_token, sample_token_with, SamplerScratch, SamplingParams};

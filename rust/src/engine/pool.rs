@@ -8,9 +8,28 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use super::backend::Backend;
+use super::backend::{is_transient, Backend};
 use super::engine::{Engine, EngineCmd, EngineEvent, EngineOpts};
 use super::kvcache::{KvCacheConfig, DEFAULT_BLOCK_SIZE};
+
+/// Supervision policy for the engine run loop: how hard to retry a step
+/// that failed with a [`super::BackendError::Transient`] before the engine
+/// declares itself failed (`EngineEvent::EngineFailed`). Fatal errors and
+/// panics skip the retry budget entirely.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorOpts {
+    /// Transient retries per failing step (`engine.max_retries`).
+    pub max_retries: usize,
+    /// Base backoff between transient retries in milliseconds, doubling
+    /// per attempt (`engine.retry_backoff_ms`). 0 = no sleep.
+    pub retry_backoff_ms: u64,
+}
+
+impl Default for SupervisorOpts {
+    fn default() -> Self {
+        SupervisorOpts { max_retries: 3, retry_backoff_ms: 10 }
+    }
+}
 
 /// Handle to a set of engine threads: per-engine command channels in, one
 /// shared event channel out.
@@ -74,12 +93,33 @@ impl EnginePool {
 
     /// Spawn `n` engines with full scheduling options (paged-KV config +
     /// continuous-batching step-token budget — see
-    /// `EngineConfig::engine_opts`). `factory(engine_id)` runs INSIDE each
-    /// engine thread and builds its (thread-confined) backend.
+    /// `EngineConfig::engine_opts`) and the default supervision policy.
+    /// `factory(engine_id)` runs INSIDE each engine thread and builds its
+    /// (thread-confined) backend.
     pub fn spawn_opts<B, F>(
         n: usize,
         slots_per_engine: usize,
         opts: EngineOpts,
+        seed: u64,
+        factory: F,
+    ) -> Result<EnginePool>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Box<dyn FnOnce() -> Result<B> + Send> + Sync,
+    {
+        Self::spawn_supervised(n, slots_per_engine, opts, SupervisorOpts::default(), seed, factory)
+    }
+
+    /// Spawn `n` engines with an explicit supervision policy
+    /// (`EngineConfig::supervisor_opts`): transient backend errors retry in
+    /// place with bounded exponential backoff; fatal errors, exhausted
+    /// retries, panics, and backend-init failures convert the engine into
+    /// an `EngineEvent::EngineFailed` instead of a silent thread death.
+    pub fn spawn_supervised<B, F>(
+        n: usize,
+        slots_per_engine: usize,
+        opts: EngineOpts,
+        sup: SupervisorOpts,
         seed: u64,
         factory: F,
     ) -> Result<EnginePool>
@@ -100,13 +140,22 @@ impl EnginePool {
                     let backend = match build() {
                         Ok(b) => b,
                         Err(e) => {
+                            // An engine that never came up is a failed
+                            // engine with nothing in flight — same recovery
+                            // path as a mid-run death.
                             eprintln!("engine-{id}: backend init failed: {e:#}");
+                            let _ = tx.send(EngineEvent::EngineFailed {
+                                engine: id,
+                                error: format!("backend init failed: {e:#}"),
+                                inflight: Vec::new(),
+                                retained: Vec::new(),
+                            });
                             let _ = tx.send(EngineEvent::ShutDown { engine: id });
                             return;
                         }
                     };
                     let engine = Engine::with_opts(id, backend, opts, seed);
-                    run_loop(engine, cmd_rx, tx);
+                    run_loop(engine, cmd_rx, tx, sup);
                 })?;
             senders.push(cmd_tx);
             handles.push(handle);
@@ -122,8 +171,26 @@ impl EnginePool {
     /// Non-blocking poll: the next queued event, if one is already
     /// waiting. The stage driver's fast path — a pipelined caller drains
     /// whatever accumulated during trainer work without ever parking.
+    /// Collapses "empty" and "disconnected" into `None`; callers that must
+    /// tell those apart use [`EnginePool::try_next_checked`].
     pub fn try_next(&self) -> Option<EngineEvent> {
         self.events.try_recv().ok()
+    }
+
+    /// Non-blocking poll that distinguishes "nothing queued yet"
+    /// (`Ok(None)`) from "every engine thread is gone"
+    /// (`Err(Disconnected)`) — the coordinator routes the latter into its
+    /// degraded-mode failure path instead of spinning or panicking.
+    pub fn try_next_checked(
+        &self,
+    ) -> Result<Option<EngineEvent>, std::sync::mpsc::RecvTimeoutError> {
+        match self.events.try_recv() {
+            Ok(e) => Ok(Some(e)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected)
+            }
+        }
     }
 
     /// Bounded wait: the next event, blocking no later than `deadline`
@@ -200,11 +267,15 @@ impl EnginePool {
 }
 
 /// Engine thread main loop: drain commands, step while there is work,
-/// block on the channel when idle.
+/// block on the channel when idle. Supervised: backend errors and panics
+/// anywhere in the step or command path become a single
+/// [`EngineEvent::EngineFailed`] (after the transient-retry budget is
+/// spent) followed by `ShutDown`, never a silent thread death.
 fn run_loop<B: Backend>(
     mut engine: Engine<B>,
     cmd_rx: Receiver<EngineCmd>,
     ev_tx: Sender<EngineEvent>,
+    sup: SupervisorOpts,
 ) {
     let id = engine.id;
     let mut events: Vec<EngineEvent> = Vec::new();
@@ -212,11 +283,15 @@ fn run_loop<B: Backend>(
         // 1. Drain all queued commands without blocking.
         loop {
             match cmd_rx.try_recv() {
-                Ok(cmd) => {
-                    if handle_cmd(&mut engine, cmd, &mut events) {
+                Ok(cmd) => match supervised_cmd(&mut engine, cmd, &mut events) {
+                    Ok(true) => break 'outer,
+                    Ok(false) => {}
+                    Err(msg) => {
+                        flush(&ev_tx, &mut events);
+                        report_failure(&engine, &ev_tx, msg);
                         break 'outer;
                     }
-                }
+                },
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => break 'outer,
             }
@@ -227,8 +302,14 @@ fn run_loop<B: Backend>(
         if !engine.has_work() {
             match cmd_rx.recv() {
                 Ok(cmd) => {
-                    if handle_cmd(&mut engine, cmd, &mut events) {
-                        break 'outer;
+                    match supervised_cmd(&mut engine, cmd, &mut events) {
+                        Ok(true) => break 'outer,
+                        Ok(false) => {}
+                        Err(msg) => {
+                            flush(&ev_tx, &mut events);
+                            report_failure(&engine, &ev_tx, msg);
+                            break 'outer;
+                        }
                     }
                     flush(&ev_tx, &mut events);
                     continue;
@@ -237,14 +318,96 @@ fn run_loop<B: Backend>(
             }
         }
 
-        // 3. One decode step.
-        if let Err(e) = engine.step(&mut events) {
-            eprintln!("engine-{id}: step failed: {e:#}");
+        // 3. One decode step, under supervision.
+        if let Err(msg) = supervised_step(&mut engine, &ev_tx, &mut events, sup) {
+            flush(&ev_tx, &mut events);
+            report_failure(&engine, &ev_tx, msg);
             break 'outer;
         }
         flush(&ev_tx, &mut events);
     }
     let _ = ev_tx.send(EngineEvent::ShutDown { engine: id });
+}
+
+/// One engine step under the supervision policy. Transient backend errors
+/// ([`super::BackendError::Transient`] anywhere in the chain) retry the
+/// whole step in place with bounded exponential backoff — `Engine::step`
+/// surfaces backend errors BEFORE any per-slot state advances, so a retry
+/// re-runs the exact same step bit-for-bit. Fatal errors, exhausted
+/// retries, and panics return the failure message for `report_failure`.
+fn supervised_step<B: Backend>(
+    engine: &mut Engine<B>,
+    ev_tx: &Sender<EngineEvent>,
+    events: &mut Vec<EngineEvent>,
+    sup: SupervisorOpts,
+) -> Result<(), String> {
+    let id = engine.id;
+    let mut attempt = 0usize;
+    loop {
+        let step =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.step(events)));
+        match step {
+            Ok(Ok(())) => return Ok(()),
+            Ok(Err(e)) if is_transient(&e) && attempt < sup.max_retries => {
+                attempt += 1;
+                engine.retries += 1;
+                // Events from the failed attempt are real (vacated slots,
+                // completed admissions) — ship them before re-running so
+                // the retry starts from a clean buffer.
+                flush(ev_tx, events);
+                let backoff =
+                    sup.retry_backoff_ms.saturating_mul(1u64 << (attempt - 1).min(16));
+                eprintln!(
+                    "engine-{id}: transient step error (attempt {attempt}/{}), \
+                     retrying in {backoff} ms: {e:#}",
+                    sup.max_retries
+                );
+                if backoff > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(backoff));
+                }
+            }
+            Ok(Err(e)) => return Err(format!("step failed: {e:#}")),
+            Err(payload) => {
+                return Err(format!("step panicked: {}", panic_message(payload.as_ref())))
+            }
+        }
+    }
+}
+
+/// `handle_cmd` under `catch_unwind`: a panic in the command path (weight
+/// sync, flush, retained-KV release) is an engine failure like any other.
+/// `Ok(true)` means Shutdown was requested.
+fn supervised_cmd<B: Backend>(
+    engine: &mut Engine<B>,
+    cmd: EngineCmd,
+    events: &mut Vec<EngineEvent>,
+) -> Result<bool, String> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handle_cmd(engine, cmd, events)))
+        .map_err(|p| format!("command handler panicked: {}", panic_message(p.as_ref())))
+}
+
+/// Announce an engine death: one `EngineFailed` event carrying everything
+/// the coordinator needs to re-dispatch (the in-flight and retained
+/// request ids); `run_loop` follows up with the terminal `ShutDown`.
+fn report_failure<B: Backend>(engine: &Engine<B>, ev_tx: &Sender<EngineEvent>, error: String) {
+    eprintln!("engine-{}: FAILED: {error}", engine.id);
+    let _ = ev_tx.send(EngineEvent::EngineFailed {
+        engine: engine.id,
+        error,
+        inflight: engine.inflight_request_ids(),
+        retained: engine.retained_request_ids(),
+    });
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Returns true on Shutdown.
@@ -338,19 +501,20 @@ mod tests {
     }
 
     /// Receive the next event, transparently flattening `Batch` sends.
+    /// Returns the channel error (timeout / disconnect) instead of
+    /// panicking so each test decides how to fail.
     fn next_event(
         rx: &Receiver<EngineEvent>,
         queue: &mut VecDeque<EngineEvent>,
         timeout: Duration,
-    ) -> Option<EngineEvent> {
+    ) -> Result<EngineEvent, std::sync::mpsc::RecvTimeoutError> {
         loop {
             if let Some(e) = queue.pop_front() {
-                return Some(e);
+                return Ok(e);
             }
-            match rx.recv_timeout(timeout) {
-                Ok(EngineEvent::Batch(evs)) => queue.extend(evs),
-                Ok(e) => return Some(e),
-                Err(_) => return None,
+            match rx.recv_timeout(timeout)? {
+                EngineEvent::Batch(evs) => queue.extend(evs),
+                e => return Ok(e),
             }
         }
     }
@@ -366,12 +530,12 @@ mod tests {
         let deadline = std::time::Instant::now() + Duration::from_secs(20);
         while done < 10 && std::time::Instant::now() < deadline {
             match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
-                Some(EngineEvent::Done { result, .. }) => {
+                Ok(EngineEvent::Done { result, .. }) => {
                     assert!(result.reason.is_complete());
                     done += 1;
                 }
-                Some(_) => {}
-                None => panic!("event wait timed out"),
+                Ok(_) => {}
+                Err(_) => break, // the count assert below reports the loss
             }
         }
         assert_eq!(done, 10);
@@ -429,14 +593,14 @@ mod tests {
         let deadline = std::time::Instant::now() + Duration::from_secs(10);
         loop {
             match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
-                Some(EngineEvent::Done { result, .. }) => {
+                Ok(EngineEvent::Done { result, .. }) => {
                     if result.reason == FinishReason::Stopped {
                         partials += 1;
                     }
                 }
-                Some(EngineEvent::Flushed { .. }) => break,
-                Some(_) => {}
-                None => break,
+                Ok(EngineEvent::Flushed { .. }) => break,
+                Ok(_) => {}
+                Err(_) => break,
             }
             if std::time::Instant::now() > deadline {
                 break;
@@ -447,11 +611,13 @@ mod tests {
     }
 
     /// The stage driver's poll API: empty-channel polls return promptly,
-    /// bounded waits deliver events.
+    /// bounded waits deliver events, and a dead pool surfaces as a
+    /// `Disconnected` error the caller can route — never a panic.
     #[test]
     fn try_next_and_next_before_poll_without_blocking() {
         let pool = mock_pool(1, 2);
         assert!(pool.try_next().is_none());
+        assert!(matches!(pool.try_next_checked(), Ok(None)));
         let t0 = std::time::Instant::now();
         assert!(pool.next_before(t0).is_err()); // past deadline → non-blocking poll
         assert!(t0.elapsed() < Duration::from_millis(100), "past-deadline poll blocked");
@@ -466,10 +632,31 @@ mod tests {
                 Ok(EngineEvent::Done { .. }) => saw_done = true,
                 Ok(_) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(e) => panic!("pool died: {e}"),
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
         assert!(saw_done, "bounded wait never saw the Done event");
+        pool.shutdown();
+    }
+
+    /// Once every engine thread exits, the checked poll reports
+    /// `Disconnected` instead of masquerading as an empty channel.
+    #[test]
+    fn try_next_checked_reports_disconnect() {
+        let pool = mock_pool(1, 2);
+        pool.send(0, EngineCmd::Shutdown);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            assert!(std::time::Instant::now() < deadline, "never saw disconnect");
+            match pool.try_next_checked() {
+                Ok(Some(_)) => {} // drain the terminal ShutDown event
+                Ok(None) => std::thread::sleep(Duration::from_millis(5)),
+                Err(e) => {
+                    assert_eq!(e, std::sync::mpsc::RecvTimeoutError::Disconnected);
+                    break;
+                }
+            }
+        }
         pool.shutdown();
     }
 
@@ -496,14 +683,14 @@ mod tests {
         let deadline = std::time::Instant::now() + Duration::from_secs(10);
         while std::time::Instant::now() < deadline {
             match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
-                Some(EngineEvent::Done { result, .. })
+                Ok(EngineEvent::Done { result, .. })
                     if result.reason == FinishReason::Stopped =>
                 {
                     partial = Some(result)
                 }
-                Some(EngineEvent::Flushed { .. }) => break,
-                Some(_) => {}
-                None => break,
+                Ok(EngineEvent::Flushed { .. }) => break,
+                Ok(_) => {}
+                Err(_) => break,
             }
         }
         let partial = partial.expect("flushed partial");
@@ -517,13 +704,133 @@ mod tests {
         loop {
             assert!(std::time::Instant::now() < deadline, "resume timed out");
             match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
-                Some(EngineEvent::Done { result, .. }) if result.reason.is_complete() => {
+                Ok(EngineEvent::Done { result, .. }) if result.reason.is_complete() => {
                     assert!(result.resumed_from_kv, "hinted resume must hit retained KV");
                     assert_eq!(result.replayed, 0);
                     break;
                 }
-                Some(_) => {}
-                None => {}
+                Ok(_) => {}
+                Err(_) => {}
+            }
+        }
+        pool.shutdown();
+    }
+
+    /// A panicking backend must surface as `EngineFailed` carrying the
+    /// lost request ids, followed by the terminal `ShutDown` — not a
+    /// silent thread death.
+    #[test]
+    fn panicking_backend_reports_engine_failed() {
+        use crate::testkit::faulty::{FaultKind, FaultOp, FaultPlan, FaultyBackend};
+        let pool = EnginePool::spawn(1, 2, 0, 7, |_id| {
+            Box::new(move || {
+                let mut b = MockBackend::new(2, 96);
+                b.min_len = 500; // long script: the fault hits mid-request
+                b.spread = 1;
+                Ok(FaultyBackend::new(
+                    b,
+                    vec![FaultPlan { op: FaultOp::Decode, at_call: 3, kind: FaultKind::Panic }],
+                ))
+            })
+        })
+        .unwrap();
+        pool.send(0, EngineCmd::Assign(item(1)));
+        let mut queue = VecDeque::new();
+        let mut failed = None;
+        let mut saw_shutdown = false;
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while std::time::Instant::now() < deadline && !saw_shutdown {
+            match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
+                Ok(EngineEvent::EngineFailed { engine, error, inflight, .. }) => {
+                    failed = Some((engine, error, inflight));
+                }
+                Ok(EngineEvent::ShutDown { .. }) => saw_shutdown = true,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        let (engine, error, inflight) = failed.expect("EngineFailed event");
+        assert_eq!(engine, 0);
+        assert!(error.contains("panicked"), "unexpected error: {error}");
+        assert_eq!(inflight, vec![1], "lost request ids must travel with the failure");
+        assert!(saw_shutdown, "EngineFailed must be followed by ShutDown");
+        pool.shutdown();
+    }
+
+    /// Transient errors retry in place within the budget: the work
+    /// completes and no failure event ever surfaces.
+    #[test]
+    fn transient_errors_retry_in_place() {
+        use crate::testkit::faulty::{FaultKind, FaultOp, FaultPlan, FaultyBackend};
+        let pool = EnginePool::spawn_supervised(
+            1,
+            2,
+            EngineOpts {
+                kv: KvCacheConfig::from_token_budget(0, DEFAULT_BLOCK_SIZE),
+                step_token_budget: 0,
+            },
+            SupervisorOpts { max_retries: 3, retry_backoff_ms: 0 },
+            7,
+            |_id| {
+                Box::new(move || {
+                    Ok(FaultyBackend::new(
+                        MockBackend::new(2, 96),
+                        vec![FaultPlan {
+                            op: FaultOp::Decode,
+                            at_call: 2,
+                            kind: FaultKind::Transient { times: 2 },
+                        }],
+                    ))
+                })
+            },
+        )
+        .unwrap();
+        pool.send(0, EngineCmd::Assign(item(1)));
+        let mut queue = VecDeque::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            assert!(std::time::Instant::now() < deadline, "work never completed");
+            match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
+                Ok(EngineEvent::Done { result, .. }) => {
+                    assert!(result.reason.is_complete());
+                    break;
+                }
+                Ok(EngineEvent::EngineFailed { error, .. }) => {
+                    panic!("transient fault must not fail the engine: {error}")
+                }
+                Ok(_) => {}
+                Err(e) => panic!("pool channel: {e}"),
+            }
+        }
+        pool.shutdown();
+    }
+
+    /// A fatal backend error skips the retry budget and fails the engine
+    /// immediately.
+    #[test]
+    fn fatal_errors_skip_retry_budget() {
+        use crate::testkit::faulty::{FaultKind, FaultOp, FaultPlan, FaultyBackend};
+        let pool = EnginePool::spawn(1, 2, 0, 7, |_id| {
+            Box::new(move || {
+                Ok(FaultyBackend::new(
+                    MockBackend::new(2, 96),
+                    vec![FaultPlan { op: FaultOp::Decode, at_call: 1, kind: FaultKind::Fatal }],
+                ))
+            })
+        })
+        .unwrap();
+        pool.send(0, EngineCmd::Assign(item(4)));
+        let mut queue = VecDeque::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            assert!(std::time::Instant::now() < deadline, "never saw EngineFailed");
+            match next_event(&pool.events, &mut queue, Duration::from_secs(5)) {
+                Ok(EngineEvent::EngineFailed { error, .. }) => {
+                    assert!(error.contains("fatal"), "unexpected error: {error}");
+                    break;
+                }
+                Ok(_) => {}
+                Err(e) => panic!("pool channel: {e}"),
             }
         }
         pool.shutdown();
@@ -539,7 +846,7 @@ mod tests {
         let deadline = std::time::Instant::now() + Duration::from_secs(10);
         let mut ok = false;
         while std::time::Instant::now() < deadline {
-            if let Some(EngineEvent::Done { .. }) =
+            if let Ok(EngineEvent::Done { .. }) =
                 next_event(&pool.events, &mut queue, Duration::from_secs(5))
             {
                 ok = true;

@@ -75,6 +75,16 @@ pub struct RunSummary {
     /// Mean packed-step token utilization across budgeted stages (0.0
     /// when continuous batching is off).
     pub step_token_util: f64,
+    /// Engine failures absorbed across the run (fatal backend errors,
+    /// panics, exhausted retries, stall-watchdog declarations).
+    pub engine_failures: usize,
+    /// In-flight trajectories re-dispatched onto surviving engines after
+    /// engine failures.
+    pub redispatched_trajectories: usize,
+    /// Transient backend errors retried in place across the run.
+    pub retries: u64,
+    /// Backend `retain_slot` errors swallowed at flush across the run.
+    pub retain_errors: u64,
     pub reward_curve: Vec<f64>,
     pub entropy_curve: Vec<f64>,
 }
@@ -103,10 +113,11 @@ impl RlSession {
         let variant = cfg.model.clone();
         let init_params = params.clone();
         let chunked_replay = cfg.engine.chunked_replay;
-        let pool = EnginePool::spawn_opts(
+        let pool = EnginePool::spawn_supervised(
             cfg.engine.engines,
             spec.slots,
             cfg.engine.engine_opts(),
+            cfg.engine.supervisor_opts(),
             cfg.train.seed,
             move |_id| {
                 let dir = dir.clone();
@@ -273,6 +284,10 @@ impl RlSession {
             summary.resumed += rs.resumed;
             summary.prefill_chunks += rs.prefill_chunks;
             summary.t_prefill_stall_saved += rs.t_prefill_stall_saved;
+            summary.engine_failures += rs.engine_failures;
+            summary.redispatched_trajectories += rs.redispatched_trajectories;
+            summary.retries += rs.retries;
+            summary.retain_errors += rs.retain_errors;
             if rs.step_token_util > 0.0 {
                 step_util.push(rs.step_token_util);
             }

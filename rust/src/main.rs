@@ -208,6 +208,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         summary.t_prefill_stall_saved,
         summary.resumed
     );
+    println!(
+        "failover: engine_failures {}  redispatched {}  retries {}  retain_errors {}",
+        summary.engine_failures,
+        summary.redispatched_trajectories,
+        summary.retries,
+        summary.retain_errors
+    );
     if !args.flag("no-eval") {
         let report = sess.evaluate(2)?;
         println!("-- final eval --");

@@ -1,0 +1,261 @@
+//! Deterministic fault injection for the engine/coordinator recovery
+//! paths: [`FaultyBackend`] wraps any [`Backend`] and fires scripted
+//! faults — fatal error, transient-then-recover, panic, stall — on the
+//! Nth call of a given operation. Faults are keyed off per-op call
+//! counters (and the test's deterministic RNG chooses the script), so a
+//! failing chaos run reproduces bit-exactly.
+//!
+//! Faults fire BEFORE delegating to the inner backend, so a faulted call
+//! leaves the inner backend's state untouched — a supervisor retry of the
+//! same step re-runs against identical state and produces the identical
+//! token stream (the property the transient-retry path depends on).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::engine::{Backend, BackendError};
+
+/// Which backend operation a fault plan targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    /// `decode` / `decode_into` (the per-step hot path).
+    Decode,
+    /// `prefill` / `prefill_chunk` (admission).
+    Prefill,
+    /// `replay` (chunked resume recompute).
+    Replay,
+    /// `retain_slot` (KV retention at flush).
+    RetainSlot,
+}
+
+/// What happens when a plan fires.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultKind {
+    /// `BackendError::Fatal` — the engine fails immediately.
+    Fatal,
+    /// `BackendError::Transient` on `times` consecutive calls starting at
+    /// `at_call`, then the op succeeds — exercises the in-place retry.
+    Transient {
+        /// Consecutive faulted calls before recovery.
+        times: usize,
+    },
+    /// `panic!` — exercises the supervisor's `catch_unwind` path.
+    Panic,
+    /// Sleep this long, then proceed normally — exercises the
+    /// coordinator's stall watchdog (the engine "wakes up" later and its
+    /// late events must be discarded).
+    Stall {
+        /// Sleep duration in milliseconds.
+        ms: u64,
+    },
+}
+
+/// One scripted fault: fire `kind` on the `at_call`-th call (1-based) of
+/// `op`, counted across the backend's lifetime.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Targeted operation.
+    pub op: FaultOp,
+    /// 1-based call number of `op` on which the fault fires.
+    pub at_call: usize,
+    /// Fault behaviour.
+    pub kind: FaultKind,
+}
+
+/// A [`Backend`] wrapper that injects the scripted [`FaultPlan`]s and
+/// delegates everything else unchanged.
+pub struct FaultyBackend<B> {
+    inner: B,
+    plans: Vec<FaultPlan>,
+    /// Per-op call counters, indexed by `FaultOp as usize`.
+    counts: [usize; 4],
+    injected: Arc<AtomicUsize>,
+}
+
+impl<B: Backend> FaultyBackend<B> {
+    /// Wrap `inner` with the given fault script.
+    pub fn new(inner: B, plans: Vec<FaultPlan>) -> FaultyBackend<B> {
+        FaultyBackend { inner, plans, counts: [0; 4], injected: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    /// Shared counter of faults actually fired (stalls included) —
+    /// clone it before moving the backend into an engine thread to assert
+    /// the script really ran.
+    pub fn injected_handle(&self) -> Arc<AtomicUsize> {
+        self.injected.clone()
+    }
+
+    /// Count one call of `op` and fire any matching plan. Runs before the
+    /// delegate call so faulted calls never touch inner state.
+    fn check(&mut self, op: FaultOp) -> Result<()> {
+        let idx = op as usize;
+        self.counts[idx] += 1;
+        let n = self.counts[idx];
+        for p in &self.plans {
+            if p.op != op {
+                continue;
+            }
+            match p.kind {
+                FaultKind::Fatal if n == p.at_call => {
+                    self.injected.fetch_add(1, Ordering::SeqCst);
+                    return Err(anyhow::Error::new(BackendError::Fatal(format!(
+                        "injected fatal fault on {op:?} call {n}"
+                    ))));
+                }
+                FaultKind::Transient { times } if n >= p.at_call && n < p.at_call + times => {
+                    self.injected.fetch_add(1, Ordering::SeqCst);
+                    return Err(anyhow::Error::new(BackendError::Transient(format!(
+                        "injected transient fault on {op:?} call {n}"
+                    ))));
+                }
+                FaultKind::Panic if n == p.at_call => {
+                    self.injected.fetch_add(1, Ordering::SeqCst);
+                    panic!("injected panic on {op:?} call {n}");
+                }
+                FaultKind::Stall { ms } if n == p.at_call => {
+                    self.injected.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    fn slots(&self) -> usize {
+        self.inner.slots()
+    }
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+    fn p_max(&self) -> usize {
+        self.inner.p_max()
+    }
+
+    fn set_params(&mut self, params: &[f32]) -> Result<()> {
+        self.inner.set_params(params)
+    }
+
+    fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+        self.check(FaultOp::Prefill)?;
+        self.inner.prefill(slot, prompt)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        chunk: &[i32],
+        start: usize,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        self.check(FaultOp::Prefill)?;
+        self.inner.prefill_chunk(slot, chunk, start, last)
+    }
+
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        self.check(FaultOp::Decode)?;
+        self.inner.decode(tokens, pos)
+    }
+
+    fn decode_into(&mut self, tokens: &[i32], pos: &[i32], out: &mut Vec<f32>) -> Result<()> {
+        self.check(FaultOp::Decode)?;
+        self.inner.decode_into(tokens, pos, out)
+    }
+
+    fn replay(&mut self, slot: usize, chunk: &[i32], start: usize) -> Result<Option<Vec<f32>>> {
+        self.check(FaultOp::Replay)?;
+        self.inner.replay(slot, chunk, start)
+    }
+
+    fn retain_slot(&mut self, slot: usize) -> Result<bool> {
+        self.check(FaultOp::RetainSlot)?;
+        self.inner.retain_slot(slot)
+    }
+
+    fn resume_retained(&mut self, slot: usize) -> Result<()> {
+        self.inner.resume_retained(slot)
+    }
+
+    fn release_retained(&mut self, slot: usize) -> Result<()> {
+        self.inner.release_retained(slot)
+    }
+
+    fn set_block_table(
+        &mut self,
+        slot: usize,
+        blocks: &[u32],
+        len_tokens: usize,
+        block_size: usize,
+    ) -> Result<()> {
+        self.inner.set_block_table(slot, blocks, len_tokens, block_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::MockBackend;
+
+    #[test]
+    fn faults_fire_on_scripted_calls_only() {
+        let mut b = FaultyBackend::new(
+            MockBackend::new(2, 96),
+            vec![
+                FaultPlan { op: FaultOp::Decode, at_call: 2, kind: FaultKind::Fatal },
+                FaultPlan {
+                    op: FaultOp::Prefill,
+                    at_call: 1,
+                    kind: FaultKind::Transient { times: 2 },
+                },
+            ],
+        );
+        let injected = b.injected_handle();
+        // Prefill call 1 and 2 are transient, 3 succeeds.
+        let e1 = b.prefill(0, &[1, 5, 9]).unwrap_err();
+        assert!(crate::engine::is_transient(&e1));
+        let e2 = b.prefill(0, &[1, 5, 9]).unwrap_err();
+        assert!(crate::engine::is_transient(&e2));
+        b.prefill(0, &[1, 5, 9]).unwrap();
+        // Decode call 1 is clean, call 2 fatal, call 3 clean again.
+        let toks = vec![5i32; 2];
+        let pos = vec![3i32; 2];
+        b.decode(&toks, &pos).unwrap();
+        let e = b.decode(&toks, &pos).unwrap_err();
+        assert!(!crate::engine::is_transient(&e));
+        assert!(e.to_string().contains("fatal"), "{e:#}");
+        b.decode(&toks, &pos).unwrap();
+        assert_eq!(injected.load(Ordering::SeqCst), 3);
+    }
+
+    /// A faulted call must not advance inner backend state: the retry
+    /// after a transient decode fault yields exactly the logits the
+    /// un-faulted call would have produced.
+    #[test]
+    fn faulted_calls_leave_inner_state_untouched() {
+        let mut clean = MockBackend::new(1, 96);
+        clean.prefill(0, &[1, 5, 9]).unwrap();
+        let mut faulty = FaultyBackend::new(
+            MockBackend::new(1, 96),
+            vec![FaultPlan {
+                op: FaultOp::Decode,
+                at_call: 1,
+                kind: FaultKind::Transient { times: 1 },
+            }],
+        );
+        faulty.prefill(0, &[1, 5, 9]).unwrap();
+        let toks = vec![5i32];
+        let pos = vec![3i32];
+        let want = clean.decode(&toks, &pos).unwrap();
+        assert!(faulty.decode(&toks, &pos).is_err());
+        let got = faulty.decode(&toks, &pos).unwrap(); // the retry
+        assert_eq!(want, got, "retry after fault must be bit-identical");
+    }
+}

@@ -7,6 +7,8 @@
 
 use crate::util::Rng;
 
+pub mod faulty;
+
 /// Number of cases per property (kept modest; engines are in the loop).
 pub const DEFAULT_CASES: usize = 64;
 

@@ -81,6 +81,10 @@ impl MetricsLog {
             .num("t_overlap", m.t_overlap)
             .num("overlap_secs", rollout.overlap_secs)
             .int("lagged_trajs", rollout.lagged_trajectories() as i64)
+            .int("engine_failures", rollout.engine_failures as i64)
+            .int("redispatched", rollout.redispatched_trajectories as i64)
+            .int("retries", rollout.retries as i64)
+            .int("retain_errors", rollout.retain_errors as i64)
             .finish();
         writeln!(out, "{line}")?;
         out.flush()?;

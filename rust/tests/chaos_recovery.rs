@@ -1,0 +1,301 @@
+//! Chaos tests for the fault-tolerant engine pool: supervised engine
+//! threads + coordinator recovery, driven by the deterministic
+//! fault-injection harness (`testkit::faulty`).
+//!
+//! The golden oracle: a stage that loses an engine mid-flight (crash,
+//! panic, or stall caught by the watchdog) must recover on the survivors
+//! and produce the SAME final trajectory set as a fault-free run — same
+//! per-request token streams, modulo engine assignment. That holds
+//! because mock token streams are scripted purely by (prompt,
+//! params_epoch) and re-dispatch resumes from the coordinator-side
+//! trajectory (the same replay path a buffered partial takes), so which
+//! engine executes a request never changes its tokens.
+
+use copris::config::{Config, RolloutMode};
+use copris::coordinator::{Coordinator, RolloutOutput};
+use copris::engine::{EnginePool, MockBackend};
+use copris::tasks::Dataset;
+use copris::testkit::faulty::{FaultKind, FaultOp, FaultPlan, FaultyBackend};
+use copris::{prop_assert, prop_assert_eq};
+
+const MAX_SEQ: usize = 96;
+
+fn chaos_cfg(mode: RolloutMode) -> Config {
+    let mut cfg = Config::new("mock");
+    cfg.rollout.mode = mode;
+    cfg.rollout.batch_prompts = 3;
+    cfg.rollout.group_size = 2;
+    cfg.rollout.concurrency = 4;
+    cfg.rollout.temperature = 0.0; // greedy → streams scripted, no RNG
+    cfg.engine.engines = 2;
+    cfg.engine.retry_backoff_ms = 0;
+    cfg.train.seed = 5;
+    cfg
+}
+
+/// Pool where engine `target` runs the fault script and every other
+/// engine is clean (all wrapped in `FaultyBackend` so the backend type —
+/// and thus the fault-free baseline — is identical).
+fn spawn_faulty(
+    cfg: &Config,
+    slots: usize,
+    min_len: usize,
+    spread: usize,
+    target: usize,
+    plans: Vec<FaultPlan>,
+) -> EnginePool {
+    EnginePool::spawn_supervised(
+        cfg.engine.engines,
+        slots,
+        cfg.engine.engine_opts(),
+        cfg.engine.supervisor_opts(),
+        cfg.train.seed,
+        move |id| {
+            let plans = if id == target { plans.clone() } else { Vec::new() };
+            Box::new(move || {
+                let mut b = MockBackend::new(slots, MAX_SEQ);
+                b.min_len = min_len;
+                b.spread = spread;
+                Ok(FaultyBackend::new(b, plans))
+            })
+        },
+    )
+    .unwrap()
+}
+
+/// Canonical stage fingerprint, invariant to completion order, trajectory
+/// ids, and engine assignment: groups sorted by task prompt; per group
+/// the sorted multiset of (token stream, behaviour-logprob bits).
+type Fingerprint = Vec<(String, usize, Vec<(Vec<i32>, Vec<u32>)>)>;
+
+fn fingerprint(out: &RolloutOutput) -> Fingerprint {
+    let mut groups: Vec<_> = out
+        .groups
+        .iter()
+        .map(|g| {
+            let mut streams: Vec<(Vec<i32>, Vec<u32>)> = g
+                .done
+                .iter()
+                .map(|t| {
+                    (
+                        t.tokens.clone(),
+                        t.behavior_logprobs().iter().map(|l| l.to_bits()).collect(),
+                    )
+                })
+                .collect();
+            streams.sort();
+            (g.task.prompt.clone(), g.target, streams)
+        })
+        .collect();
+    groups.sort();
+    groups
+}
+
+fn fault_free_fingerprint(cfg: &Config, slots: usize, min_len: usize, spread: usize) -> Fingerprint {
+    let pool = spawn_faulty(cfg, slots, min_len, spread, 1, vec![]);
+    let mut base = Coordinator::new(pool, cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+    let out = base.rollout_stage(&mut ds).unwrap();
+    assert_eq!(out.stats.engine_failures, 0);
+    assert_eq!(out.stats.redispatched_trajectories, 0);
+    let fp = fingerprint(&out);
+    base.shutdown();
+    fp
+}
+
+/// THE chaos acceptance check: engine 1 dies on its 2nd decode mid-stage;
+/// the stage completes on the survivor with the exact fault-free
+/// trajectory set, and the failure/re-dispatch stats record the event.
+#[test]
+fn crashed_engine_mid_stage_same_final_trajectories() {
+    let cfg = chaos_cfg(RolloutMode::Sync);
+    let want = fault_free_fingerprint(&cfg, 2, 6, 8);
+
+    let plans = vec![FaultPlan { op: FaultOp::Decode, at_call: 2, kind: FaultKind::Fatal }];
+    let mut coord =
+        Coordinator::new(spawn_faulty(&cfg, 2, 6, 8, 1, plans), cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    assert_eq!(fingerprint(&out), want, "recovered stage diverged from fault-free run");
+    assert_eq!(out.stats.engine_failures, 1, "{:?}", out.stats);
+    assert!(out.stats.redispatched_trajectories > 0, "{:?}", out.stats);
+    coord.shutdown();
+}
+
+/// Same oracle for a panicking backend (the `catch_unwind` supervisor
+/// path): a panic mid-decode is one engine failure, not a lost stage.
+#[test]
+fn panicking_engine_mid_stage_same_final_trajectories() {
+    let cfg = chaos_cfg(RolloutMode::Sync);
+    let want = fault_free_fingerprint(&cfg, 2, 6, 8);
+
+    let plans = vec![FaultPlan { op: FaultOp::Decode, at_call: 2, kind: FaultKind::Panic }];
+    let mut coord =
+        Coordinator::new(spawn_faulty(&cfg, 2, 6, 8, 1, plans), cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    assert_eq!(fingerprint(&out), want, "recovered stage diverged from fault-free run");
+    assert_eq!(out.stats.engine_failures, 1, "{:?}", out.stats);
+    assert!(out.stats.redispatched_trajectories > 0, "{:?}", out.stats);
+    coord.shutdown();
+}
+
+/// Watchdog oracle: an engine that silently stops producing events (no
+/// crash, no event) is declared dead after `engine.stall_timeout_ms` and
+/// its work completes on the survivor — same fault-free trajectory set.
+/// The stalled engine later wakes up and delivers its backlog; the
+/// coordinator must discard those late events, not double-count them.
+#[test]
+fn stalled_engine_watchdog_same_final_trajectories() {
+    let mut cfg = chaos_cfg(RolloutMode::Sync);
+    cfg.engine.stall_timeout_ms = 300;
+    let want = fault_free_fingerprint(&cfg, 2, 6, 8);
+
+    let plans =
+        vec![FaultPlan { op: FaultOp::Decode, at_call: 2, kind: FaultKind::Stall { ms: 1500 } }];
+    let mut coord =
+        Coordinator::new(spawn_faulty(&cfg, 2, 6, 8, 1, plans), cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    assert_eq!(fingerprint(&out), want, "watchdog recovery diverged from fault-free run");
+    assert_eq!(out.stats.engine_failures, 1, "{:?}", out.stats);
+    assert!(out.stats.redispatched_trajectories > 0, "{:?}", out.stats);
+    coord.shutdown();
+}
+
+/// Degraded mode: losing EVERY engine is a structured error from
+/// `rollout_stage` — never a hang, never a panic.
+#[test]
+fn all_engines_lost_is_a_structured_error() {
+    let mut cfg = chaos_cfg(RolloutMode::Sync);
+    cfg.engine.engines = 1;
+    let plans = vec![FaultPlan { op: FaultOp::Decode, at_call: 2, kind: FaultKind::Fatal }];
+    let mut coord =
+        Coordinator::new(spawn_faulty(&cfg, 2, 6, 8, 0, plans), cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+    let err = coord.rollout_stage(&mut ds).unwrap_err();
+    assert!(format!("{err:#}").contains("degraded"), "{err:#}");
+    coord.shutdown();
+}
+
+/// Transient errors are retried in place within the supervisor budget:
+/// no engine failure, no re-dispatch, bit-identical streams, and the
+/// retry count surfaces in the stage stats.
+#[test]
+fn transient_faults_recover_in_place_bit_exact() {
+    let cfg = chaos_cfg(RolloutMode::Sync); // max_retries 3, backoff 0
+    let want = fault_free_fingerprint(&cfg, 2, 6, 8);
+
+    let plans = vec![FaultPlan {
+        op: FaultOp::Decode,
+        at_call: 2,
+        kind: FaultKind::Transient { times: 2 },
+    }];
+    let mut coord =
+        Coordinator::new(spawn_faulty(&cfg, 2, 6, 8, 1, plans), cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    assert_eq!(fingerprint(&out), want, "transient retry changed the streams");
+    assert_eq!(out.stats.engine_failures, 0, "{:?}", out.stats);
+    assert_eq!(out.stats.redispatched_trajectories, 0, "{:?}", out.stats);
+    assert!(out.stats.retries >= 2, "{:?}", out.stats);
+    coord.shutdown();
+}
+
+/// `retain_slot` failures at flush must be counted (`retain_errors`), not
+/// swallowed — and must NOT kill the engine: the partial is flushed
+/// plainly and the stage completes.
+#[test]
+fn retain_slot_errors_are_counted_not_fatal() {
+    let mut cfg = chaos_cfg(RolloutMode::Copris);
+    cfg.rollout.batch_prompts = 2;
+    cfg.rollout.concurrency = 8;
+    cfg.rollout.retain_kv = true;
+    cfg.engine.engines = 1;
+    cfg.train.seed = 7;
+    let plans = vec![FaultPlan { op: FaultOp::RetainSlot, at_call: 1, kind: FaultKind::Fatal }];
+    // Long scripts → busy slots at early termination → retain attempts.
+    let mut coord =
+        Coordinator::new(spawn_faulty(&cfg, 4, 20, 30, 0, plans), cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    assert_eq!(out.stats.engine_failures, 0, "{:?}", out.stats);
+    assert!(out.stats.retain_errors > 0, "retain failure not counted: {:?}", out.stats);
+    coord.shutdown();
+}
+
+/// Property: for a fault (fatal / panic / transient) injected at a swept
+/// call index of a swept op, in sync and CoPRIS modes (with and without
+/// KV retention), no trajectory is ever lost or duplicated — sync
+/// delivers exactly the dispatched id set; CoPRIS harvests complete
+/// groups with every done id unique across stages.
+#[test]
+fn fault_sweep_no_trajectory_lost_or_duplicated() {
+    #[derive(Debug)]
+    struct Case {
+        mode: u64,
+        op: FaultOp,
+        kind: u64,
+        at_call: usize,
+    }
+    copris::testkit::prop_check(
+        "fault-sweep",
+        10,
+        |rng| Case {
+            mode: rng.below(3),
+            op: if rng.below(2) == 0 { FaultOp::Decode } else { FaultOp::Prefill },
+            kind: rng.below(3),
+            at_call: 1 + rng.below(10) as usize,
+        },
+        |c| {
+            let mut cfg = chaos_cfg(if c.mode == 0 {
+                RolloutMode::Sync
+            } else {
+                RolloutMode::Copris
+            });
+            cfg.rollout.retain_kv = c.mode == 2;
+            let kind = match c.kind {
+                0 => FaultKind::Fatal,
+                1 => FaultKind::Panic,
+                _ => FaultKind::Transient { times: 2 },
+            };
+            let plans = vec![FaultPlan { op: c.op, at_call: c.at_call, kind }];
+            let mut coord =
+                Coordinator::new(spawn_faulty(&cfg, 2, 4, 6, 1, plans), cfg.clone(), MAX_SEQ);
+            let mut ds = Dataset::train(cfg.train.seed);
+            let stages = if c.mode == 0 { 1 } else { 2 };
+            let mut seen_ids: Vec<u64> = Vec::new();
+            for stage in 0..stages {
+                let out = coord
+                    .rollout_stage(&mut ds)
+                    .map_err(|e| format!("stage {stage} failed: {e:#}"))?;
+                prop_assert_eq!(out.groups.len(), cfg.rollout.batch_prompts);
+                for g in &out.groups {
+                    prop_assert!(
+                        g.done.len() >= cfg.rollout.group_size,
+                        "incomplete group harvested: {} < {}",
+                        g.done.len(),
+                        cfg.rollout.group_size
+                    );
+                    for t in &g.done {
+                        prop_assert!(t.complete && t.invariant_ok(), "bad trajectory {}", t.id);
+                        seen_ids.push(t.id);
+                    }
+                }
+            }
+            let n = seen_ids.len();
+            seen_ids.sort_unstable();
+            seen_ids.dedup();
+            prop_assert_eq!(seen_ids.len(), n); // no id delivered twice
+            if c.mode == 0 {
+                // Sync: exactly the B·G dispatched ids, none lost.
+                let want: Vec<u64> = (0..(cfg.rollout.batch_prompts
+                    * cfg.rollout.group_size) as u64)
+                    .collect();
+                prop_assert_eq!(seen_ids, want);
+            }
+            coord.shutdown();
+            Ok(())
+        },
+    );
+}

@@ -15,6 +15,10 @@
 #   scripts/ci.sh --fmt      rustfmt gate only (the CI `fmt` job)
 #   scripts/ci.sh --docs     rustdoc gate only (the CI `rustdoc` job)
 #   scripts/ci.sh --clippy   clippy gate only (the CI `clippy` job)
+#   scripts/ci.sh --chaos    fault-injection tests, debug + release (the
+#                            CI `chaos` job; release too — supervision
+#                            runs catch_unwind/timing paths that behave
+#                            differently without debug assertions)
 #   scripts/ci.sh --bench    full tier-1, then refresh BENCH_micro.json
 # Unknown flags exit 2 with this usage instead of silently running full
 # tier-1.
@@ -23,7 +27,7 @@ ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$ROOT"
 
 usage() {
-  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--bench]" >&2
+  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--chaos|--bench]" >&2
   echo "  (no flag = full tier-1: build + doc + clippy + test)" >&2
 }
 
@@ -31,7 +35,7 @@ usage() {
 # with usage instead of silently running full tier-1.
 MODE="${1:-}"
 case "$MODE" in
-  ""|--fmt|--docs|--clippy|--bench) ;;
+  ""|--fmt|--docs|--clippy|--chaos|--bench) ;;
   *)
     echo "ci: unknown flag $MODE" >&2
     usage
@@ -83,11 +87,21 @@ run_clippy() {
     -A clippy::unnecessary_map_or
 }
 
+run_chaos() {
+  # Fault-injection suite: engine crash / panic / stall recovery golden
+  # tests plus the fault-sweep property. Run under BOTH profiles: debug
+  # catches invariant violations via debug_assert, release exercises the
+  # real supervisor timing (backoff, stall watchdog) without them.
+  echo "== chaos: cargo test --test chaos_recovery (debug) =="
+  cargo test -q --manifest-path "$MANIFEST" --test chaos_recovery
+  echo "== chaos: cargo test --test chaos_recovery (release) =="
+  cargo test --release -q --manifest-path "$MANIFEST" --test chaos_recovery
+}
+
 run_full() {
-  # NOTE: fmt is a separate gate (scripts/ci.sh --fmt / the CI `fmt` job),
-  # not part of full tier-1 — the tree predates the fmt gate, so formatting
-  # drift must not mask build/test signal. Fold it in here once a
-  # `cargo fmt` commit has landed.
+  # NOTE: fmt stays a separate gate (scripts/ci.sh --fmt / the CI `fmt`
+  # job, blocking) rather than part of full tier-1, so formatting drift
+  # never masks build/test signal.
   echo "== tier-1: cargo build --release --all-targets =="
   cargo build --release --all-targets --manifest-path "$MANIFEST"
   run_docs
@@ -115,6 +129,10 @@ case "$MODE" in
   --clippy)
     run_clippy
     echo "ci: clippy OK"
+    ;;
+  --chaos)
+    run_chaos
+    echo "ci: chaos OK"
     ;;
   --bench)
     run_full
