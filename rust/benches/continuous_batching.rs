@@ -99,7 +99,12 @@ fn run_arm(budget: usize, items: usize, decode_us: u64, prefill_us: u64) -> ArmR
     if prefill_us > 0 {
         be.prefill_delay_per_token = Some(Duration::from_micros(prefill_us));
     }
-    let kv = KvCacheConfig { block_size: BLOCK, budget_blocks: 0, prefix_sharing: true };
+    let kv = KvCacheConfig {
+        block_size: BLOCK,
+        budget_blocks: 0,
+        prefix_sharing: true,
+        ..KvCacheConfig::default()
+    };
     let mut eng = Engine::with_opts(0, be, EngineOpts { kv, step_token_budget: budget }, 7);
 
     let work = workload(items);

@@ -16,8 +16,8 @@ use copris::coordinator::PartialBuffer;
 use copris::coordinator::Trajectory;
 use copris::engine::sampler::reference::sample_token_ref;
 use copris::engine::{
-    sample_token_with, Backend, Engine, EngineEvent, MockBackend, SamplerScratch,
-    SamplingParams, StepTrace, WorkItem,
+    sample_token_dispatched, sample_token_with, Backend, Engine, EngineEvent, MockBackend,
+    SamplerDispatch, SamplerScratch, SamplingParams, StepTrace, WorkItem,
 };
 use copris::exp::common::{artifacts_available, env_str};
 use copris::model::ModelRuntime;
@@ -87,6 +87,22 @@ fn main() {
         sample_token_with(&logits, &filtered, &mut rng, &mut scratch)
     });
     push(&mut rows, "sampler scratch (48-vocab, top-k8 top-p0.9)", s);
+
+    // Runtime-dispatched SIMD arms over the same workloads (scalar rows
+    // above are the "before"; each available arm is bit-identical to them
+    // by the fuzz oracle, so only the time differs).
+    for d in SamplerDispatch::available() {
+        let mut rng = Rng::new(1);
+        let s = time_fn(100, 2000, || {
+            sample_token_dispatched(&logits, &SamplingParams::default(), &mut rng, &mut scratch, d)
+        });
+        push(&mut rows, &format!("sampler {} (48-vocab, default)", d.name()), s);
+        let mut rng = Rng::new(1);
+        let s = time_fn(100, 2000, || {
+            sample_token_dispatched(&logits, &filtered, &mut rng, &mut scratch, d)
+        });
+        push(&mut rows, &format!("sampler {} (48-vocab, top-k8 top-p0.9)", d.name()), s);
+    }
 
     let task = Family::Countdown.generate(&mut Rng::new(2), 2);
     let mut buf = PartialBuffer::new(usize::MAX);
@@ -168,6 +184,8 @@ fn main() {
         prefill_chunks: 0,
         prefill_stall_saved: 0.0,
         retries: 0,
+        kv_bytes: 8 * 16 * 256 * 4,
+        sampler_dispatch: "scalar",
     };
     let (tx, rx) = std::sync::mpsc::channel::<EngineEvent>();
     let s = time_fn(100, 2000, || {

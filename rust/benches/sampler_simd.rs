@@ -1,0 +1,157 @@
+//! SIMD-sampler + quantized-KV bench: the two halves of the perf PR.
+//!
+//! **Sampler throughput** — one row per runtime-dispatch arm actually
+//! available on this host (scalar always; avx2/avx512 when detected) over
+//! the two hot-path workloads (default sampling and top-k+top-p
+//! filtering) at a small and a large vocab. Every arm produces
+//! bit-identical token/log-prob/RNG streams (pinned by the differential
+//! fuzz in `engine::sampler`), so the rows differ in time only; the bench
+//! re-asserts stream equality in-binary before timing so a row can never
+//! describe a divergent arm.
+//!
+//! **Quantized-KV capacity** — the block budget is denominated in
+//! f32-sized blocks, so narrower dtypes multiply the enforced block count
+//! instead of shrinking memory. Rows record, for an identical tight
+//! budget, the effective blocks and the resident sequences each dtype
+//! admits (f32 1×, f16 2×, int8 4×) plus the bytes-per-block they pay.
+//!
+//! With COPRIS_BENCH_JSON set, rows merge idempotently into
+//! BENCH_micro.json under the `sampler_simd/` prefix.
+
+use copris::bench::{fmt_secs, merge_bench_rows, render_table, time_fn};
+use copris::engine::{
+    sample_token_dispatched, Engine, KvCacheConfig, KvDtype, MockBackend, SamplerDispatch,
+    SamplerScratch, SamplingParams, WorkItem,
+};
+use copris::util::json::Obj;
+use copris::util::Rng;
+
+fn logits_row(vocab: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..vocab).map(|_| (rng.below(400) as f32 - 200.0) * 0.05).collect()
+}
+
+fn item(id: u64, prompt: Vec<i32>) -> WorkItem {
+    WorkItem {
+        request_id: id,
+        prompt: prompt.into(),
+        resume: vec![],
+        max_total: 96,
+        sampling: SamplingParams::greedy(),
+        retain: None,
+        prefix: None,
+    }
+}
+
+fn main() {
+    let mut table: Vec<Vec<String>> = Vec::new();
+    let mut entries: Vec<String> = Vec::new();
+
+    // -- sampler arms ----------------------------------------------------
+    let arms = SamplerDispatch::available();
+    let params = [
+        ("default", SamplingParams::default()),
+        ("top-k8 top-p0.9", SamplingParams { temperature: 1.0, top_p: 0.9, top_k: 8 }),
+    ];
+    let mut scratch = SamplerScratch::new();
+    for vocab in [48usize, 512] {
+        let logits = logits_row(vocab, 7);
+        for (pname, p) in &params {
+            // Bit-identity gate: all arms must agree with scalar on this
+            // exact workload before any of them gets a timing row.
+            let golden: Vec<(i32, u32)> = (0..64)
+                .map(|i| {
+                    let mut rng = Rng::new(100 + i);
+                    let (t, lp) = sample_token_dispatched(
+                        &logits,
+                        p,
+                        &mut rng,
+                        &mut scratch,
+                        SamplerDispatch::Scalar,
+                    );
+                    (t, lp.to_bits())
+                })
+                .collect();
+            for &d in &arms {
+                let got: Vec<(i32, u32)> = (0..64)
+                    .map(|i| {
+                        let mut rng = Rng::new(100 + i);
+                        let (t, lp) =
+                            sample_token_dispatched(&logits, p, &mut rng, &mut scratch, d);
+                        (t, lp.to_bits())
+                    })
+                    .collect();
+                assert_eq!(golden, got, "{} diverged from scalar on vocab {vocab}", d.name());
+
+                let mut rng = Rng::new(1);
+                let s = time_fn(200, 4000, || {
+                    sample_token_dispatched(&logits, p, &mut rng, &mut scratch, d)
+                });
+                let toks_per_s = 1.0 / s.mean.max(1e-12);
+                let name = format!("sampler_simd/{} vocab{vocab} {pname}", d.name());
+                table.push(vec![
+                    name.clone(),
+                    fmt_secs(s.mean),
+                    fmt_secs(s.p95),
+                    format!("{:.2e}", toks_per_s),
+                ]);
+                entries.push(
+                    Obj::new()
+                        .str("path", &name)
+                        .num("mean_s", s.mean)
+                        .num("p50_s", s.p50)
+                        .num("p95_s", s.p95)
+                        .int("iters", s.n as i64)
+                        .num("tokens_per_s", toks_per_s)
+                        .finish(),
+                );
+            }
+        }
+    }
+
+    // -- quantized-KV capacity -------------------------------------------
+    // Identical tight budget (4 f32 blocks) and workload per dtype; the
+    // narrower dtypes admit more resident sequences from the same bytes.
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+        let mut be = MockBackend::new(16, 96);
+        be.min_len = 60;
+        be.spread = 1; // long outputs keep admitted sequences resident
+        let kv = KvCacheConfig { budget_blocks: 4, dtype, ..KvCacheConfig::default() };
+        let block_bytes = kv.block_bytes();
+        let mut eng = Engine::with_kv(0, be, kv, 1);
+        for i in 0..16u64 {
+            eng.submit(item(i, vec![1, i as i32 % 9 + 1, 9, 9])).unwrap();
+        }
+        let mut ev = Vec::new();
+        let mut resident_peak = 0usize;
+        for _ in 0..8 {
+            eng.step(&mut ev).unwrap();
+            resident_peak = resident_peak.max(eng.busy());
+            ev.clear();
+        }
+        let name = format!("sampler_simd/kv-capacity {}", dtype.name());
+        table.push(vec![
+            name.clone(),
+            format!("{} eff blocks", eng.kv_effective_budget_blocks()),
+            format!("{} resident", resident_peak),
+            format!("{block_bytes} B/block"),
+        ]);
+        entries.push(
+            Obj::new()
+                .str("path", &name)
+                .int("budget_blocks", 4)
+                .int("effective_blocks", eng.kv_effective_budget_blocks() as i64)
+                .int("resident_peak", resident_peak as i64)
+                .int("block_bytes", block_bytes as i64)
+                .finish(),
+        );
+    }
+
+    println!("== sampler_simd: dispatch arms + quantized-KV capacity ==");
+    println!("detected arm: {}", SamplerDispatch::detect().name());
+    println!("{}", render_table(&["path", "mean / eff", "p95 / resident", "rate / bytes"], &table));
+
+    if let Ok(path) = std::env::var("COPRIS_BENCH_JSON") {
+        merge_bench_rows(&path, "sampler_simd", "sampler_simd/", &entries);
+    }
+}

@@ -138,6 +138,14 @@ pub struct EngineConfig {
     /// order (same per-trajectory distribution, like any scheduling
     /// knob).
     pub prefix_sharing: bool,
+    /// Element type KV blocks are stored at (`f32` | `f16` | `int8`,
+    /// default `f32`). The block budget stays denominated in f32-sized
+    /// blocks, so a narrower dtype multiplies the enforced block count
+    /// (f16 2×, int8 4×) instead of shrinking memory: the same bytes hold
+    /// more resident sequences. f32 streams are the goldens; f16 is
+    /// bit-identical on this substrate's logit alphabet and int8 is
+    /// deterministic with every argmax preserved (pinned engine-side).
+    pub kv_dtype: crate::engine::KvDtype,
     /// Max new tokens per response (paper: 15360; scaled by model max_seq).
     pub max_new_tokens: usize,
     /// Resume buffered partials via the chunked `replay` artifact instead
@@ -178,6 +186,7 @@ impl Default for EngineConfig {
             kv_budget_blocks: 0,
             kv_block_size: crate::engine::DEFAULT_BLOCK_SIZE,
             prefix_sharing: true,
+            kv_dtype: crate::engine::KvDtype::F32,
             max_new_tokens: 0,
             chunked_replay: false,
             step_token_budget: 0,
@@ -210,6 +219,7 @@ impl EngineConfig {
             block_size: self.kv_block_size.max(1),
             budget_blocks: self.budget_blocks(),
             prefix_sharing: self.prefix_sharing,
+            dtype: self.kv_dtype,
         }
     }
 
@@ -364,6 +374,10 @@ impl Config {
                 }
             }
             ("engine", "prefix_sharing") => self.engine.prefix_sharing = parse_bool()?,
+            ("engine", "kv_dtype") => {
+                self.engine.kv_dtype = crate::engine::KvDtype::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad {key}={v} (f32|f16|int8)"))?
+            }
             ("engine", "max_new_tokens") => self.engine.max_new_tokens = parse_usize()?,
             ("engine", "chunked_replay") => self.engine.chunked_replay = parse_bool()?,
             ("engine", "step_token_budget") => self.engine.step_token_budget = parse_usize()?,
@@ -451,6 +465,14 @@ impl Config {
             format!("{} blocks ({} tokens)", blocks, blocks * eng.kv_block_size)
         };
         s.push_str(&format!("| KV budget | {budget} |\n"));
+        // Narrow dtypes multiply the enforced block count, not the bytes.
+        let mult = eng.kv_dtype.capacity_multiplier();
+        let dtype = if mult == 1 {
+            eng.kv_dtype.name().to_string()
+        } else {
+            format!("{} ({}x effective blocks)", eng.kv_dtype.name(), mult)
+        };
+        s.push_str(&format!("| KV dtype | {dtype} |\n"));
         s.push_str(&format!("| Prompt prefix sharing (COW) | {} |\n", eng.prefix_sharing));
         let packing = if eng.step_token_budget == 0 {
             "off (slot admission)".to_string()
@@ -572,6 +594,28 @@ mod tests {
         assert!(table.contains("Prompt prefix sharing"), "{table}");
         let unlimited = Config::new("tiny").render_table();
         assert!(unlimited.contains("| KV budget | unlimited |"), "{unlimited}");
+    }
+
+    /// KV dtype knob: defaults to f32 (golden-equivalent), parses the
+    /// dtype aliases, rejects junk, flows into the paged-KV config, and
+    /// renders a Table-3 row with the effective-blocks multiplier.
+    #[test]
+    fn kv_dtype_defaults_f32_and_plumbs_through() {
+        let mut c = Config::new("tiny");
+        assert_eq!(c.engine.kv_dtype, crate::engine::KvDtype::F32);
+        assert_eq!(c.engine.kv_cache_config().dtype, crate::engine::KvDtype::F32);
+        assert!(c.render_table().contains("| KV dtype | f32 |"));
+        c.set("engine.kv_dtype", "fp16").unwrap();
+        assert_eq!(c.engine.kv_dtype, crate::engine::KvDtype::F16);
+        c.set("engine.kv_dtype", "int8").unwrap();
+        assert_eq!(c.engine.kv_cache_config().dtype, crate::engine::KvDtype::Int8);
+        let table = c.render_table();
+        assert!(table.contains("| KV dtype | int8 (4x effective blocks) |"), "{table}");
+        assert!(c.set("engine.kv_dtype", "bf17").is_err());
+        // TOML path hits the same setter.
+        let doc = "[engine]\nkv_dtype = \"f16\"\n";
+        let c2 = Config::from_toml_str(doc).unwrap();
+        assert_eq!(c2.engine.kv_dtype, crate::engine::KvDtype::F16);
     }
 
     /// Continuous-batching knob: default off (slot admission), settable

@@ -65,6 +65,14 @@ pub struct RolloutStats {
     /// paged residency the blocks-denominated budget governs; shared
     /// blocks count once).
     pub kv_blocks_peak: usize,
+    /// Peak KV bytes resident on any one engine during the stage —
+    /// `kv_blocks_peak` mapped to real memory at the configured
+    /// `engine.kv_dtype` (per-block scale metadata included for int8).
+    pub kv_bytes_peak: usize,
+    /// Sampler SIMD arm the engines ran (`scalar` | `avx2` | `avx512`,
+    /// detected once per engine; `""` until the first step trace lands).
+    /// All engines of a pool share one process, hence one arm.
+    pub sampler_dispatch: &'static str,
     /// Prompt tokens attached from a shared group prefix instead of
     /// freshly charged, across all engines this stage.
     pub prefix_tokens_shared: u64,
@@ -1032,6 +1040,8 @@ impl Coordinator {
                 }
                 let d = self.drv_mut();
                 d.stats.kv_blocks_peak = d.stats.kv_blocks_peak.max(t.kv_blocks);
+                d.stats.kv_bytes_peak = d.stats.kv_bytes_peak.max(t.kv_bytes);
+                d.stats.sampler_dispatch = t.sampler_dispatch;
                 d.stats.traces.push(t);
             }
             EngineEvent::Flushed { engine, retain_errors } => {

@@ -5,6 +5,7 @@
 use anyhow::Result;
 use xla::PjRtBuffer;
 
+use super::kvcache::{f16_bits_to_f32, f32_to_f16_bits, int8_roundtrip, int8_row_scale, KvDtype};
 use crate::model::ModelRuntime;
 use crate::tokenizer;
 
@@ -149,6 +150,15 @@ pub trait Backend {
     ) -> Result<()> {
         Ok(())
     }
+    /// Install the KV storage dtype (`engine.kv_dtype`). Called once at
+    /// engine construction, before any prefill. Infallible by design: a
+    /// backend that cannot store narrow KV simply keeps f32 behavior (the
+    /// default ignores the hint) — the *budget* arithmetic lives entirely
+    /// engine-side ([`super::kvcache::KvCacheConfig::effective_budget_blocks`]).
+    /// `MockBackend` models the lossiness deterministically
+    /// (quantize→dequantize on every emitted logit row); `XlaBackend`
+    /// stages the dtype for the device-side cache.
+    fn set_kv_dtype(&mut self, _dtype: KvDtype) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -182,6 +192,11 @@ pub struct XlaBackend {
     /// chunked artifact adds dedicated serial work. Kept for saturated
     /// regimes; off by default.
     pub chunked_replay: bool,
+    /// KV storage dtype staged for the device-side cache. The current
+    /// slot-contiguous AOT artifacts keep f32 KV, so (like the block
+    /// tables) the dtype is tracked-but-not-yet-consumed; the engine-side
+    /// budget arithmetic is what widens capacity today.
+    kv_dtype: KvDtype,
 }
 
 impl XlaBackend {
@@ -199,6 +214,7 @@ impl XlaBackend {
             block_tables: vec![Vec::new(); slots],
             prefill_staged: vec![Vec::new(); slots],
             chunked_replay: false,
+            kv_dtype: KvDtype::F32,
         })
     }
 
@@ -211,6 +227,11 @@ impl XlaBackend {
     /// (diagnostics / artifact-gated tests).
     pub fn block_table(&self, slot: usize) -> &[u32] {
         &self.block_tables[slot]
+    }
+
+    /// The KV dtype staged for the device cache (diagnostics).
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.kv_dtype
     }
 }
 
@@ -330,6 +351,10 @@ impl Backend for XlaBackend {
         t.extend_from_slice(blocks);
         Ok(())
     }
+
+    fn set_kv_dtype(&mut self, dtype: KvDtype) {
+        self.kv_dtype = dtype;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -410,6 +435,15 @@ pub struct MockBackend {
     /// batching benches: simulates the prefill compute that stalls
     /// co-resident decodes under slot admission).
     pub prefill_delay_per_token: Option<std::time::Duration>,
+    /// KV storage dtype the mock models. Lossy dtypes apply a
+    /// deterministic quantize→dequantize round-trip to every emitted
+    /// logit row — the mock's "KV" is its script cursor, so perturbing
+    /// the logits it derives from that cursor is the faithful analogue of
+    /// reading attention outputs back through a narrow cache. The mock's
+    /// logit alphabet (-20/6/10) is exactly representable in binary16, so
+    /// f16 streams are bit-identical to f32 (that IS the f16 golden);
+    /// int8 perturbs values deterministically but preserves every argmax.
+    kv_dtype: KvDtype,
 }
 
 impl MockBackend {
@@ -440,7 +474,13 @@ impl MockBackend {
             chunked_replay: false,
             decode_delay: None,
             prefill_delay_per_token: None,
+            kv_dtype: KvDtype::F32,
         }
+    }
+
+    /// The KV dtype the mock is modeling (test assertions).
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.kv_dtype
     }
 
     fn hash(xs: &[i32], epoch: u64) -> u64 {
@@ -474,6 +514,27 @@ impl MockBackend {
             row[tok] = 10.0;
             // A second mode with some mass keeps sampling non-trivial.
             row[(tok + 1) % 14] = 6.0;
+        }
+        self.apply_kv_quantization(row);
+    }
+
+    /// Model the narrow-KV read path: a deterministic quantize→dequantize
+    /// round-trip over the emitted row (no-op at f32). See the `kv_dtype`
+    /// field docs for why this is the faithful mock analogue.
+    fn apply_kv_quantization(&self, row: &mut [f32]) {
+        match self.kv_dtype {
+            KvDtype::F32 => {}
+            KvDtype::F16 => {
+                for v in row.iter_mut() {
+                    *v = f16_bits_to_f32(f32_to_f16_bits(*v));
+                }
+            }
+            KvDtype::Int8 => {
+                let scale = int8_row_scale(row);
+                for v in row.iter_mut() {
+                    *v = int8_roundtrip(*v, scale);
+                }
+            }
         }
     }
 
@@ -732,6 +793,10 @@ impl Backend for MockBackend {
         self.block_table_installs += 1;
         Ok(())
     }
+
+    fn set_kv_dtype(&mut self, dtype: KvDtype) {
+        self.kv_dtype = dtype;
+    }
 }
 
 #[cfg(test)]
@@ -852,6 +917,48 @@ mod tests {
             "full tail block is immutable (COW applies to partial tails only)"
         );
         assert!(be.set_block_table(1, &[2], 3, 4).is_err(), "table shrank");
+    }
+
+    /// The mock's f16 KV model is bit-identical to f32 (the logit alphabet
+    /// is exactly binary16-representable), while int8 perturbs rows
+    /// deterministically yet preserves every argmax — the invariants the
+    /// engine-level quantized-KV goldens build on.
+    #[test]
+    fn mock_kv_quantization_is_deterministic_and_argmax_preserving() {
+        let prompt = [1, 7, 3];
+        let mk = |dtype: KvDtype| {
+            let mut be = MockBackend::new(2, 96);
+            be.set_kv_dtype(dtype);
+            let mut rows = vec![be.prefill(0, &prompt).unwrap()];
+            for _ in 0..6 {
+                rows.push(be.decode(&[0, 0], &[0, 0]).unwrap());
+            }
+            rows
+        };
+        let f32_rows = mk(KvDtype::F32);
+        let f16_rows = mk(KvDtype::F16);
+        let int8_rows = mk(KvDtype::Int8);
+        let int8_again = mk(KvDtype::Int8);
+        for (i, (a, b)) in f32_rows.iter().zip(&f16_rows).enumerate() {
+            let (av, bv): (Vec<u32>, Vec<u32>) =
+                (a.iter().map(|v| v.to_bits()).collect(), b.iter().map(|v| v.to_bits()).collect());
+            assert_eq!(av, bv, "f16 row {i} must be bit-identical to f32");
+        }
+        let amax = |r: &[f32]| {
+            r.iter().enumerate().max_by(|x, y| x.1.partial_cmp(y.1).unwrap()).unwrap().0
+        };
+        for (i, (a, b)) in f32_rows.iter().zip(&int8_rows).enumerate() {
+            assert_eq!(amax(a), amax(b), "int8 row {i} argmax drifted");
+            assert!(a.iter().zip(b.iter()).any(|(x, y)| x != y), "int8 row {i} unperturbed");
+            // Round-trip error is bounded by half a quantization step.
+            let step = 20.0 / 127.0;
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x - y).abs() <= step / 2.0 + 1e-6, "row {i}: {x} vs {y}");
+            }
+        }
+        for (a, b) in int8_rows.iter().zip(&int8_again) {
+            assert_eq!(a, b, "int8 quantization must be deterministic");
+        }
     }
 
     #[test]

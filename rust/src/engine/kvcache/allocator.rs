@@ -27,6 +27,9 @@ pub struct BlockAllocator {
     refcounts: Vec<u32>,
     /// LIFO free list of arena slots with refcount 0.
     free: Vec<BlockId>,
+    /// Per-block dequantization scale (int8 KV; 1.0 for float dtypes and
+    /// freshly (re)allocated blocks). Parallel to `refcounts`.
+    scales: Vec<f32>,
     /// Blocks with refcount > 0.
     in_use: usize,
     /// Cumulative copy-on-write block copies (see [`super::PageTable`]).
@@ -44,6 +47,7 @@ impl BlockAllocator {
             block_size,
             refcounts: Vec::new(),
             free: Vec::new(),
+            scales: Vec::new(),
             in_use: 0,
             cow_copies: 0,
             capacity: capacity_blocks,
@@ -86,12 +90,14 @@ impl BlockAllocator {
     pub fn reserve_arena(&mut self, blocks: usize) {
         let want = self.refcounts.len() + blocks;
         self.refcounts.reserve(blocks);
+        self.scales.reserve(blocks);
         if self.free.capacity() < want {
             self.free.reserve(want - self.free.len());
         }
         while self.refcounts.len() < want {
             let id = self.refcounts.len() as BlockId;
             self.refcounts.push(0);
+            self.scales.push(1.0);
             self.free.push(id);
         }
     }
@@ -102,6 +108,7 @@ impl BlockAllocator {
         if let Some(b) = self.free.pop() {
             debug_assert_eq!(self.refcounts[b as usize], 0);
             self.refcounts[b as usize] = 1;
+            self.scales[b as usize] = 1.0; // fresh block, neutral scale
             self.in_use += 1;
             return Some(b);
         }
@@ -110,6 +117,7 @@ impl BlockAllocator {
         }
         let id = self.refcounts.len() as BlockId;
         self.refcounts.push(1);
+        self.scales.push(1.0);
         // Keep the free list's CAPACITY tracking the arena size (it can
         // hold at most one entry per arena slot), so later releases never
         // reallocate mid-decode — growth cost is paid here, on the cold
@@ -153,6 +161,19 @@ impl BlockAllocator {
         self.refcounts[b as usize]
     }
 
+    /// Dequantization scale of block `b` (1.0 for float KV dtypes).
+    pub fn scale(&self, b: BlockId) -> f32 {
+        self.scales[b as usize]
+    }
+
+    /// Set block `b`'s dequantization scale (int8 KV writes; a COW copy
+    /// carries the source block's scale — see
+    /// [`super::PageTable::append_one`]).
+    pub fn set_scale(&mut self, b: BlockId, scale: f32) {
+        debug_assert!(self.refcounts[b as usize] > 0, "scale write to a free block");
+        self.scales[b as usize] = scale;
+    }
+
     /// Record one copy-on-write block copy (called by
     /// [`super::PageTable::append_one`]).
     pub(crate) fn note_cow(&mut self) {
@@ -164,6 +185,7 @@ impl BlockAllocator {
     pub fn check_invariants(&self) {
         let live = self.refcounts.iter().filter(|&&r| r > 0).count();
         assert_eq!(live, self.in_use, "in_use counter drifted");
+        assert_eq!(self.scales.len(), self.refcounts.len(), "scales arena drifted");
         assert_eq!(
             self.free.len() + self.in_use,
             self.refcounts.len(),
@@ -252,6 +274,21 @@ mod tests {
         for _ in 0..8 {
             assert!(a.alloc().is_some());
         }
+        a.check_invariants();
+    }
+
+    #[test]
+    fn scales_default_to_neutral_and_reset_on_realloc() {
+        let mut a = BlockAllocator::new(16, 0);
+        a.reserve_arena(2);
+        let b = a.alloc().unwrap();
+        assert_eq!(a.scale(b), 1.0, "fresh block starts neutral");
+        a.set_scale(b, 0.125);
+        assert_eq!(a.scale(b), 0.125);
+        assert!(a.release(b));
+        let b2 = a.alloc().unwrap();
+        assert_eq!(b2, b, "LIFO reuse");
+        assert_eq!(a.scale(b2), 1.0, "stale scale must not leak across reuse");
         a.check_invariants();
     }
 

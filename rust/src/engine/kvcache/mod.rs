@@ -48,6 +48,179 @@ pub use pages::{PageTable, PrefixCache};
 /// Default tokens per KV block (vLLM's default; `engine.kv_block_size`).
 pub const DEFAULT_BLOCK_SIZE: usize = 16;
 
+/// Nominal KV elements (keys + values across layers/heads) charged per
+/// resident token for **byte accounting**. The substrate has no real
+/// weights, so this is a bookkeeping constant (a 2-layer × 4-head × 32-dim
+/// toy shape: 2·2·4·32 = 512 halved to keep trace numbers readable) — what
+/// matters is that `kv_bytes_peak` scales *linearly* with resident tokens
+/// and *per-dtype* with [`KvDtype::bytes_per_elem`], exactly like a real
+/// cache would.
+pub const KV_ELEMS_PER_TOKEN: usize = 256;
+
+/// Element type KV blocks are stored at (`engine.kv_dtype`). The budget is
+/// denominated in **f32-sized blocks** (`kv_budget_blocks` ×
+/// [`KvCacheConfig::block_bytes`] at f32), so narrower dtypes fit
+/// proportionally more blocks into the same bytes — see
+/// [`KvCacheConfig::effective_budget_blocks`].
+///
+/// Lossiness is modeled deterministically by the backends: `MockBackend`
+/// applies a quantize→dequantize round-trip to every logit it emits
+/// (f16 via [`f32_to_f16_bits`]/[`f16_bits_to_f32`], int8 via
+/// [`int8_roundtrip`] with a per-row scale), `XlaBackend` stages the dtype
+/// for the device-side cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvDtype {
+    /// Full-precision 32-bit floats (lossless; the default).
+    #[default]
+    F32,
+    /// IEEE binary16 half precision: 2 bytes/elem, 2× block capacity.
+    F16,
+    /// Symmetric 8-bit integers with one f32 scale per block: 1 byte/elem,
+    /// 4× block capacity.
+    Int8,
+}
+
+impl KvDtype {
+    /// Bytes per stored KV element.
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 => 2,
+            KvDtype::Int8 => 1,
+        }
+    }
+
+    /// How many blocks of this dtype fit in the bytes of one f32 block.
+    pub fn capacity_multiplier(self) -> usize {
+        match self {
+            KvDtype::F32 => 1,
+            KvDtype::F16 => 2,
+            KvDtype::Int8 => 4,
+        }
+    }
+
+    /// Per-block metadata bytes (the int8 dequantization scale).
+    pub fn block_scale_bytes(self) -> usize {
+        match self {
+            KvDtype::Int8 => 4,
+            _ => 0,
+        }
+    }
+
+    /// Canonical config/trace name: `"f32"` / `"f16"` / `"int8"`.
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    /// Parse a config value; accepts the canonical names plus the common
+    /// aliases `fp16`/`half` and `i8`. `None` for anything else.
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(KvDtype::F32),
+            "f16" | "fp16" | "half" => Some(KvDtype::F16),
+            "int8" | "i8" => Some(KvDtype::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// f32 → IEEE binary16 bit pattern, round-to-nearest-even (the hardware
+/// conversion rule). Handles normals, subnormals, overflow→inf, inf, NaN
+/// (quietized, payload truncated). No `half` crate — the repo models the
+/// conversion itself so the quantization is auditable.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: keep NaN-ness (set a mantissa bit so it stays NaN).
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Re-bias 127 → 15.
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e16 <= 0 {
+        // Subnormal (or underflow to zero): shift the implicit-1 mantissa
+        // right, round to nearest even on the dropped bits.
+        if e16 < -10 {
+            return sign; // underflows past the smallest subnormal → ±0
+        }
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e16) as u32; // bits dropped from the 24-bit mantissa
+        let halfway = 1u32 << (shift - 1);
+        let rest = m & ((1u32 << shift) - 1);
+        let mut out = (m >> shift) as u16;
+        if rest > halfway || (rest == halfway && (out & 1) != 0) {
+            out += 1; // may carry into the exponent — that is correct
+        }
+        return sign | out;
+    }
+    // Normal: round 23-bit mantissa to 10 bits, nearest even.
+    let rest = mant & 0x1fff;
+    let mut out = ((e16 as u32) << 10 | (mant >> 13)) as u16;
+    if rest > 0x1000 || (rest == 0x1000 && (out & 1) != 0) {
+        out += 1; // mantissa carry rolls into the exponent correctly
+    }
+    sign | out
+}
+
+/// IEEE binary16 bit pattern → f32 (exact — every f16 value is an f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // inf / NaN
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: normalize into an f32 normal. With the mantissa's
+            // top set bit at position 10-lead, the value is
+            // 1.f × 2^(-14-lead) → f32 biased exponent 113-lead; shifting
+            // by `lead` parks the leading 1 at bit 10, the mask drops it.
+            let lead = mant.leading_zeros() - 21; // zeros above bit 10
+            let m = (mant << lead) & 0x03ff;
+            let e = 113 - lead;
+            sign | (e << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Deterministic symmetric int8 quantize→dequantize round-trip with the
+/// given scale: `round(clamp(v/scale)) * scale`, saturating at ±127. A
+/// non-positive or non-finite scale degrades to 1.0 (the all-zero row).
+pub fn int8_roundtrip(v: f32, scale: f32) -> f32 {
+    let s = if scale.is_finite() && scale > 0.0 { scale } else { 1.0 };
+    ((v / s).round().clamp(-127.0, 127.0)) * s
+}
+
+/// The symmetric per-row int8 scale: `max|v| / 127` (1.0 for an all-zero
+/// or non-finite row so the round-trip stays well-defined).
+pub fn int8_row_scale(row: &[f32]) -> f32 {
+    let mut amax = 0.0f32;
+    for &v in row {
+        if v.is_finite() {
+            amax = amax.max(v.abs());
+        }
+    }
+    if amax > 0.0 {
+        amax / 127.0
+    } else {
+        1.0
+    }
+}
+
 /// Engine-side KV-cache configuration: how residency is paged, budgeted
 /// and shared. Assembled from [`crate::config::EngineConfig`] via
 /// `kv_cache_config()`; the token-denominated legacy budget converts with
@@ -64,6 +237,10 @@ pub struct KvCacheConfig {
     /// Honor [`super::WorkItem::prefix`] handles: share a group's prompt
     /// blocks across its samples via the [`PrefixCache`].
     pub prefix_sharing: bool,
+    /// Element type blocks are stored at (`engine.kv_dtype`). The budget
+    /// stays denominated in f32-sized blocks; see
+    /// [`KvCacheConfig::effective_budget_blocks`].
+    pub dtype: KvDtype,
 }
 
 impl Default for KvCacheConfig {
@@ -72,6 +249,7 @@ impl Default for KvCacheConfig {
             block_size: DEFAULT_BLOCK_SIZE,
             budget_blocks: 0,
             prefix_sharing: true,
+            dtype: KvDtype::F32,
         }
     }
 }
@@ -91,6 +269,7 @@ impl KvCacheConfig {
             block_size: bs,
             budget_blocks: tokens.div_ceil(bs), // 0 stays 0 (unlimited)
             prefix_sharing: true,
+            dtype: KvDtype::F32,
         }
     }
 
@@ -98,6 +277,22 @@ impl KvCacheConfig {
     /// forms" half of the Table-3 config echo.
     pub fn budget_tokens(&self) -> usize {
         self.budget_blocks * self.block_size
+    }
+
+    /// The block budget the engine actually enforces: `budget_blocks` is
+    /// denominated in f32-sized blocks (`budget_blocks × block_bytes(f32)`
+    /// real bytes), so f16 doubles and int8 quadruples the number of
+    /// resident blocks that fit. 0 (unlimited) stays 0.
+    pub fn effective_budget_blocks(&self) -> usize {
+        self.budget_blocks * self.dtype.capacity_multiplier()
+    }
+
+    /// Real bytes one resident block occupies at this config's dtype:
+    /// `block_size × KV_ELEMS_PER_TOKEN × bytes_per_elem` plus the
+    /// per-block scale metadata (int8 only).
+    pub fn block_bytes(&self) -> usize {
+        self.block_size * KV_ELEMS_PER_TOKEN * self.dtype.bytes_per_elem()
+            + self.dtype.block_scale_bytes()
     }
 }
 
@@ -123,5 +318,110 @@ mod tests {
         assert_eq!(kv.block_size, DEFAULT_BLOCK_SIZE);
         assert_eq!(kv.budget_blocks, 0);
         assert!(kv.prefix_sharing);
+        assert_eq!(kv.dtype, KvDtype::F32);
+    }
+
+    #[test]
+    fn kv_dtype_names_parse_round_trip() {
+        for d in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+            assert_eq!(KvDtype::parse(d.name()), Some(d));
+        }
+        assert_eq!(KvDtype::parse("fp16"), Some(KvDtype::F16));
+        assert_eq!(KvDtype::parse("half"), Some(KvDtype::F16));
+        assert_eq!(KvDtype::parse("i8"), Some(KvDtype::Int8));
+        assert_eq!(KvDtype::parse(" F32 "), Some(KvDtype::F32));
+        assert_eq!(KvDtype::parse("bf16"), None);
+    }
+
+    #[test]
+    fn narrower_dtypes_multiply_effective_blocks_not_raw_budget() {
+        let mut kv = KvCacheConfig { budget_blocks: 10, ..KvCacheConfig::default() };
+        assert_eq!(kv.effective_budget_blocks(), 10);
+        kv.dtype = KvDtype::F16;
+        assert_eq!(kv.effective_budget_blocks(), 20);
+        kv.dtype = KvDtype::Int8;
+        assert_eq!(kv.effective_budget_blocks(), 40);
+        assert_eq!(kv.budget_blocks, 10, "raw budget stays f32-denominated");
+        kv.budget_blocks = 0;
+        assert_eq!(kv.effective_budget_blocks(), 0, "unlimited stays unlimited");
+    }
+
+    #[test]
+    fn block_bytes_scale_with_dtype_plus_int8_scale_overhead() {
+        let mut kv = KvCacheConfig::default(); // block_size 16
+        let f32_bytes = 16 * KV_ELEMS_PER_TOKEN * 4;
+        assert_eq!(kv.block_bytes(), f32_bytes);
+        kv.dtype = KvDtype::F16;
+        assert_eq!(kv.block_bytes(), f32_bytes / 2);
+        kv.dtype = KvDtype::Int8;
+        assert_eq!(kv.block_bytes(), f32_bytes / 4 + 4);
+    }
+
+    #[test]
+    fn f16_round_trip_is_exact_on_representable_values() {
+        // The mock's logit alphabet is exactly representable in binary16 —
+        // this is what makes the f16 KV goldens bit-identical to f32.
+        for v in [-20.0f32, 10.0, 6.0, 0.0, -0.0, 1.0, -1.5, 0.25, 65504.0] {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(rt.to_bits(), v.to_bits(), "{v} not exact through f16");
+        }
+    }
+
+    #[test]
+    fn f16_conversion_rounds_overflows_and_subnormals_correctly() {
+        // Round-to-nearest-even at the 10-bit mantissa boundary.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0 + 1.0 / 2048.0)), 1.0);
+        assert_eq!(
+            f16_bits_to_f32(f32_to_f16_bits(1.0 + 3.0 / 2048.0)),
+            1.0 + 2.0 / 1024.0
+        );
+        // Overflow saturates to inf, sign preserved.
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfc00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        // Smallest f16 subnormal survives the round trip; half of it
+        // rounds to even (zero).
+        let min_sub = 2.0f32.powi(-24);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(min_sub)), min_sub);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(min_sub / 2.0)), 0.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(min_sub * 1.5)), min_sub * 2.0);
+        // Largest subnormal and the normal boundary.
+        let min_norm = 2.0f32.powi(-14);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(min_norm)), min_norm);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(min_norm - min_sub)), min_norm - min_sub);
+    }
+
+    #[test]
+    fn f16_round_trip_error_is_bounded_by_half_ulp() {
+        let mut g = crate::util::Rng::new(99);
+        for _ in 0..2000 {
+            let v = (g.next_f64() * 40.0 - 20.0) as f32;
+            let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+            // binary16 has 11 significand bits → rel. error ≤ 2^-11.
+            assert!(
+                (rt - v).abs() <= v.abs() * (1.0 / 2048.0) + 1e-7,
+                "{v} → {rt}"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_is_deterministic_and_saturating() {
+        let row = [-20.0f32, 10.0, 6.0, 0.0];
+        let s = int8_row_scale(&row);
+        assert!((s - 20.0 / 127.0).abs() < 1e-7);
+        for &v in &row {
+            let q = int8_roundtrip(v, s);
+            assert_eq!(q.to_bits(), int8_roundtrip(v, s).to_bits(), "deterministic");
+            assert!((q - v).abs() <= s / 2.0 + 1e-7, "{v} → {q} (scale {s})");
+        }
+        // max|v| maps to exactly ±127 steps.
+        assert_eq!(int8_roundtrip(-20.0, s), -127.0 * s);
+        // Values beyond the scale range saturate instead of wrapping.
+        assert_eq!(int8_roundtrip(1e6, s), 127.0 * s);
+        // Degenerate rows fall back to scale 1.0.
+        assert_eq!(int8_row_scale(&[0.0, 0.0]), 1.0);
+        assert_eq!(int8_roundtrip(0.4, 0.0), 0.0);
     }
 }

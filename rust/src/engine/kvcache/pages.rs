@@ -80,9 +80,13 @@ impl PageTable {
             if alloc.ref_count(last) > 1 {
                 // COW: the partial tail is shared (prompt-prefix attach or
                 // registry ref) — copy it before the divergent write. The
-                // shared original is never mutated.
+                // shared original is never mutated. A block copy carries
+                // the source's dequantization scale (int8 KV): the copied
+                // payload is still encoded at the donor's scale.
+                let scale = alloc.scale(last);
                 let nb = alloc.alloc()?;
                 alloc.release(last);
+                alloc.set_scale(nb, scale);
                 *self.blocks.last_mut().unwrap() = nb;
                 alloc.note_cow();
                 true
@@ -316,6 +320,31 @@ mod tests {
         sib.release_all(&mut a);
         donor.release_all(&mut a);
         assert_eq!(a.blocks_in_use(), 0);
+        a.check_invariants();
+    }
+
+    #[test]
+    fn cow_copy_carries_the_donor_blocks_quant_scale() {
+        let mut a = alloc4();
+        let mut donor = PageTable::new();
+        donor.grow_to(6, &mut a).unwrap(); // full block + partial tail
+        let donor_blocks = donor.block_ids().to_vec();
+        // Int8 KV: the tail block was written at a specific scale.
+        a.set_scale(donor_blocks[1], 0.25);
+
+        let mut sib = PageTable::new();
+        sib.attach_shared(&donor_blocks, 6, &mut a);
+        assert_eq!(sib.append_one(&mut a), Some(true), "divergent write COWs");
+        let copied = sib.block_ids()[1];
+        assert_ne!(copied, donor_blocks[1]);
+        assert_eq!(
+            a.scale(copied),
+            0.25,
+            "copied payload is still encoded at the donor's scale"
+        );
+        assert_eq!(a.scale(donor_blocks[1]), 0.25, "donor scale untouched");
+        sib.release_all(&mut a);
+        donor.release_all(&mut a);
         a.check_invariants();
     }
 

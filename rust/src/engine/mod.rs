@@ -18,11 +18,18 @@ pub mod engine;
 pub mod kvcache;
 pub mod pool;
 pub mod sampler;
+pub mod simd;
 
 pub use backend::{is_transient, Backend, BackendError, MockBackend, XlaBackend};
 pub use engine::{
     Engine, EngineCmd, EngineEvent, EngineOpts, FinishReason, StepTrace, WorkItem, WorkResult,
 };
-pub use kvcache::{BlockAllocator, BlockId, KvCacheConfig, PageTable, PrefixCache, DEFAULT_BLOCK_SIZE};
+pub use kvcache::{
+    BlockAllocator, BlockId, KvCacheConfig, KvDtype, PageTable, PrefixCache, DEFAULT_BLOCK_SIZE,
+    KV_ELEMS_PER_TOKEN,
+};
 pub use pool::{EnginePool, SupervisorOpts};
-pub use sampler::{sample_token, sample_token_with, SamplerScratch, SamplingParams};
+pub use sampler::{
+    sample_token, sample_token_dispatched, sample_token_with, SamplerScratch, SamplingParams,
+};
+pub use simd::SamplerDispatch;

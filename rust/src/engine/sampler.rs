@@ -4,14 +4,22 @@
 //! (paper Eq. 6). At the paper's defaults (temp 1.0, top-p 1.0, top-k -1)
 //! this is exactly the model distribution.
 //!
-//! The hot path (`sample_token_with`) is steady-state allocation-free: all
-//! working storage lives in a caller-owned [`SamplerScratch`] that sizes
-//! itself to the vocab on first use and is reused for every subsequent
-//! call. Top-k uses in-place partial selection (`select_nth_unstable_by`)
+//! The hot path (`sample_token_dispatched`) is steady-state allocation-free
+//! (all working storage lives in a caller-owned [`SamplerScratch`]) and
+//! runs its data-parallel pieces — max/argmax, the softmax exp argument
+//! pipeline, top-k threshold masking, the nucleus gather-divide — on the
+//! SIMD arm the engine detected at construction ([`super::simd`]:
+//! scalar / AVX2 / AVX-512). Every arm is **bit-identical** to the scalar
+//! reference for NaN-free logits: same tokens, same log-prob bits, same
+//! RNG consumption (the contract the engine goldens rely on; see the
+//! differential fuzz below and `super::simd`'s module docs).
+//!
+//! Top-k uses in-place partial selection (`select_nth_unstable_by`)
 //! instead of a full sorted clone; top-p sorts a reusable index array
 //! in-place (unstable sort with an index tiebreak — identical order to the
 //! stable sort it replaces, without the stable sort's temp buffer).
 
+use super::simd::{self, SamplerDispatch};
 use crate::util::Rng;
 
 /// Sampling hyperparameters for one generation request.
@@ -64,30 +72,35 @@ impl SamplerScratch {
     }
 }
 
-/// Sample from one logits row using caller-owned scratch storage.
-/// Returns (token, ln p(token)). Behaviour is bit-identical to the
-/// straightforward allocating implementation (`reference::sample_token_ref`)
-/// for the same `Rng` stream: identical token picks, identical log-prob
-/// bits, identical RNG consumption (one `next_f64` per non-greedy call).
-pub fn sample_token_with(
+/// Sample from one logits row on an explicit SIMD dispatch arm, using
+/// caller-owned scratch storage. Returns (token, ln p(token)).
+///
+/// Behaviour is bit-identical across every [`SamplerDispatch`] arm and to
+/// the straightforward allocating implementation
+/// (`reference::sample_token_ref`) for the same `Rng` stream: identical
+/// token picks, identical log-prob bits, identical RNG consumption (one
+/// `next_f64` per non-greedy call). Logit rows must be NaN-free (`-inf`
+/// entries are fine); the backends never produce NaN logits.
+pub fn sample_token_dispatched(
     logits: &[f32],
     params: &SamplingParams,
     rng: &mut Rng,
     scratch: &mut SamplerScratch,
+    dispatch: SamplerDispatch,
 ) -> (i32, f32) {
     debug_assert!(!logits.is_empty());
     if params.temperature <= 0.0 {
         // Greedy: probability mass collapses to the argmax.
-        let (best, _) = argmax(logits);
+        let best = simd::argmax_f32(dispatch, logits);
         return (best as i32, 0.0);
     }
     let n = logits.len();
     let inv_t = 1.0 / params.temperature;
     // Stable softmax at temperature. The subtract/multiply/exp sequence and
-    // the left-to-right total accumulation match the reference bit-for-bit.
-    let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-    scratch.probs.clear();
-    scratch.probs.extend(logits.iter().map(|&l| ((l as f64 - maxl) * inv_t).exp()));
+    // the left-to-right total accumulation match the reference bit-for-bit
+    // on every dispatch arm (the exp itself is scalar libm everywhere).
+    let maxl = simd::max_f32(dispatch, logits) as f64;
+    simd::exp_scaled(dispatch, logits, maxl, inv_t, &mut scratch.probs);
     let probs = &mut scratch.probs[..];
 
     // top-k: keep exactly the k largest (stable order among ties — the
@@ -103,18 +116,9 @@ pub fn sample_token_with(
         let thresh = *kth;
         // At most k-1 entries are strictly greater than the k-th largest;
         // fill the remaining slots from the ties in index order.
-        let greater = probs.iter().filter(|&&p| p > thresh).count();
-        let mut tie_quota = k - greater;
-        for p in probs.iter_mut() {
-            if *p > thresh {
-                continue;
-            }
-            if *p == thresh && tie_quota > 0 {
-                tie_quota -= 1;
-                continue;
-            }
-            *p = 0.0;
-        }
+        let greater = simd::count_greater(dispatch, probs, thresh);
+        let tie_quota = k - greater;
+        simd::mask_top_k(dispatch, probs, thresh, tie_quota);
     }
 
     // top-p (nucleus): keep the smallest prefix of the sorted distribution
@@ -131,15 +135,7 @@ pub fn sample_token_with(
                 .unwrap()
                 .then(a.cmp(&b))
         });
-        let mut cum = 0.0;
-        let mut cut = n;
-        for (rank, &i) in scratch.idx.iter().enumerate() {
-            cum += probs[i as usize] / total;
-            if cum >= params.top_p {
-                cut = rank + 1;
-                break;
-            }
-        }
+        let cut = simd::nucleus_cut(dispatch, probs, &scratch.idx, total, params.top_p);
         for &i in &scratch.idx[cut..] {
             probs[i as usize] = 0.0;
         }
@@ -150,8 +146,22 @@ pub fn sample_token_with(
     // sees bit-identical values.
     let total: f64 = probs.iter().sum();
     let token = pick_weighted_total(rng, probs, total);
-    let lp = (probs[token] / total).max(1e-300).ln() as f32;
+    let lp = nucleus_tail_logprob(probs[token], total);
     (token as i32, lp)
+}
+
+/// Sample from one logits row using caller-owned scratch storage, on the
+/// scalar reference arm. Returns (token, ln p(token)); see
+/// [`sample_token_dispatched`] for the bit-identity contract. Cold paths
+/// and the differential oracle use this; the engine's decode loop calls
+/// the dispatched variant with its detected arm.
+pub fn sample_token_with(
+    logits: &[f32],
+    params: &SamplingParams,
+    rng: &mut Rng,
+    scratch: &mut SamplerScratch,
+) -> (i32, f32) {
+    sample_token_dispatched(logits, params, rng, scratch, SamplerDispatch::Scalar)
 }
 
 /// Convenience wrapper for cold paths and tests: same behaviour as
@@ -159,6 +169,18 @@ pub fn sample_token_with(
 pub fn sample_token(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> (i32, f32) {
     let mut scratch = SamplerScratch::new();
     sample_token_with(logits, params, rng, &mut scratch)
+}
+
+/// Sampling log-prob of the picked token: ln of the *quotient* p/total,
+/// clamped AFTER the division so a fully-degenerate row can never emit
+/// `-inf` or NaN. `total` is a left-to-right sum of non-negatives, so
+/// `total >= p >= 0` and the quotient is in [0, 1] — or NaN on an all-NaN
+/// row (every logit `-inf`), which `f64::max` also maps to the 1e-300
+/// floor. Either way the result is finite (ln 1e-300 ≈ -690.78). Clamping
+/// the numerator instead would leave `0/total = 0 → ln = -inf` reachable.
+#[inline]
+fn nucleus_tail_logprob(p: f64, total: f64) -> f32 {
+    ((p / total).max(1e-300)).ln() as f32
 }
 
 /// `Rng::pick_weighted` with the total precomputed by the caller (the
@@ -190,8 +212,9 @@ fn argmax(xs: &[f32]) -> (usize, f32) {
 pub mod reference {
     //! The straightforward allocating sampler (pre-scratch seed code, with
     //! the sanctioned exact-k tie fix). Kept as the differential oracle for
-    //! the golden-determinism tests and the "before" rows of
-    //! `benches/micro.rs` — NOT used on any production path.
+    //! the golden-determinism tests, the scalar-vs-SIMD bit-identity fuzz,
+    //! and the "before" rows of `benches/micro.rs` — NOT used on any
+    //! production path.
 
     use super::{argmax, SamplingParams};
     use crate::util::Rng;
@@ -382,13 +405,14 @@ mod tests {
         assert_eq!(a, b);
     }
 
-    /// The tentpole contract: the scratch path is bit-identical to the
-    /// allocating reference — same tokens, same log-prob BITS, same RNG
-    /// consumption — across temperatures, top-k, top-p, and shared scratch.
+    /// The tentpole contract, promoted to a scalar-vs-SIMD bit-identity
+    /// oracle: at EVERY dispatch level this machine supports, the scratch
+    /// path is bit-identical to the allocating reference — same tokens,
+    /// same log-prob BITS, same RNG consumption — across temperatures,
+    /// top-k, top-p, and shared scratch. 500 cases per level, same case
+    /// stream at each level.
     #[test]
-    fn scratch_path_matches_reference_bitwise() {
-        let mut gen = Rng::new(77);
-        let mut scratch = SamplerScratch::new();
+    fn dispatch_arms_match_reference_bitwise() {
         let param_grid = [
             SamplingParams::default(),
             SamplingParams { temperature: 0.7, top_p: 1.0, top_k: -1 },
@@ -397,43 +421,169 @@ mod tests {
             SamplingParams { temperature: 1.3, top_p: 0.8, top_k: 12 },
             SamplingParams { temperature: 0.5, top_p: 0.95, top_k: 3 },
         ];
-        for case in 0..500 {
-            let n = 2 + (gen.below(63) as usize);
-            let logits: Vec<f32> =
-                (0..n).map(|_| (gen.next_f64() * 8.0 - 4.0) as f32).collect();
-            let params = param_grid[case % param_grid.len()];
-            let mut rng_a = Rng::new(1000 + case as u64);
+        for dispatch in SamplerDispatch::available() {
+            let mut gen = Rng::new(77);
+            let mut scratch = SamplerScratch::new();
+            for case in 0..500 {
+                let n = 2 + (gen.below(63) as usize);
+                let logits: Vec<f32> =
+                    (0..n).map(|_| (gen.next_f64() * 8.0 - 4.0) as f32).collect();
+                let params = param_grid[case % param_grid.len()];
+                let mut rng_a = Rng::new(1000 + case as u64);
+                let mut rng_b = rng_a.clone();
+                let (ta, lpa) = reference::sample_token_ref(&logits, &params, &mut rng_a);
+                let (tb, lpb) =
+                    sample_token_dispatched(&logits, &params, &mut rng_b, &mut scratch, dispatch);
+                assert_eq!(ta, tb, "{dispatch:?} case {case}: token diverged ({params:?})");
+                assert_eq!(
+                    lpa.to_bits(),
+                    lpb.to_bits(),
+                    "{dispatch:?} case {case}: logprob bits diverged ({params:?})"
+                );
+                assert_eq!(
+                    rng_a.next_u64(),
+                    rng_b.next_u64(),
+                    "{dispatch:?} case {case}: rng stream diverged"
+                );
+            }
+        }
+    }
+
+    /// Adversarial rows at every dispatch level: vocab widths straddling
+    /// the 4/8/16 SIMD lane widths (incl. vocab=1), all-ties rows,
+    /// NaN-free positive subnormals, and rows with a `-inf` head mixture —
+    /// all bit-identical to the reference oracle.
+    #[test]
+    fn adversarial_rows_match_reference_at_every_dispatch_level() {
+        let widths = [1usize, 7, 8, 9, 15, 16, 17, 31, 33];
+        let param_grid = [
+            SamplingParams::default(),
+            SamplingParams { temperature: 0.7, top_p: 0.9, top_k: -1 },
+            SamplingParams { temperature: 1.0, top_p: 1.0, top_k: 5 },
+            SamplingParams { temperature: 1.1, top_p: 0.85, top_k: 3 },
+            SamplingParams::greedy(),
+        ];
+        for dispatch in SamplerDispatch::available() {
+            let mut gen = Rng::new(4242);
+            let mut scratch = SamplerScratch::new();
+            let mut case = 0u64;
+            for &n in &widths {
+                for kind in 0..4 {
+                    let logits: Vec<f32> = match kind {
+                        // Plain random row.
+                        0 => (0..n).map(|_| (gen.next_f64() * 8.0 - 4.0) as f32).collect(),
+                        // All-ties: every mask/threshold path degenerates.
+                        1 => vec![0.25f32; n],
+                        // NaN-free positive subnormals (smallest f32s).
+                        2 => (0..n)
+                            .map(|_| f32::from_bits(1 + (gen.below(200)) as u32))
+                            .collect(),
+                        // -inf head mixture: every other entry is -inf
+                        // (probs underflow to exact 0.0), at least one
+                        // finite entry always present.
+                        _ => (0..n)
+                            .map(|i| if i % 2 == 1 { f32::NEG_INFINITY } else { 0.5 + i as f32 })
+                            .collect(),
+                    };
+                    for params in &param_grid {
+                        let mut rng_a = Rng::new(9000 + case);
+                        let mut rng_b = rng_a.clone();
+                        let (ta, lpa) = reference::sample_token_ref(&logits, params, &mut rng_a);
+                        let (tb, lpb) = sample_token_dispatched(
+                            &logits, params, &mut rng_b, &mut scratch, dispatch,
+                        );
+                        assert_eq!(
+                            ta, tb,
+                            "{dispatch:?} n={n} kind={kind} {params:?}: token diverged"
+                        );
+                        assert_eq!(
+                            lpa.to_bits(),
+                            lpb.to_bits(),
+                            "{dispatch:?} n={n} kind={kind} {params:?}: logprob bits diverged"
+                        );
+                        assert_eq!(
+                            rng_a.next_u64(),
+                            rng_b.next_u64(),
+                            "{dispatch:?} n={n} kind={kind} {params:?}: rng stream diverged"
+                        );
+                        case += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Nucleus-tail regression (the satellite fix): an all-`-inf`-except-
+    /// one row concentrates all mass on the finite token — it must be
+    /// picked with log-prob exactly 0.0 (ln 1), never -inf/NaN — at every
+    /// dispatch level.
+    #[test]
+    fn all_neg_inf_except_one_picks_finite_token_with_zero_logprob() {
+        for dispatch in SamplerDispatch::available() {
+            let mut scratch = SamplerScratch::new();
+            for n in [2usize, 9, 17, 48] {
+                let mut logits = vec![f32::NEG_INFINITY; n];
+                logits[n / 2] = 1.25;
+                for params in [
+                    SamplingParams::default(),
+                    SamplingParams { temperature: 0.7, top_p: 0.9, top_k: -1 },
+                ] {
+                    let mut rng = Rng::new(31 + n as u64);
+                    let (t, lp) =
+                        sample_token_dispatched(&logits, &params, &mut rng, &mut scratch, dispatch);
+                    assert_eq!(t as usize, n / 2, "{dispatch:?} n={n} {params:?}");
+                    assert_eq!(lp, 0.0, "{dispatch:?} n={n} {params:?}: lp must be ln(1)");
+                }
+            }
+        }
+    }
+
+    /// Fully-degenerate row (every logit `-inf` → every prob NaN): the
+    /// quotient clamp keeps the log-prob finite (ln 1e-300 ≈ -690.78) and
+    /// bit-identical to the reference, consuming exactly one RNG draw.
+    #[test]
+    fn fully_degenerate_row_yields_clamped_finite_logprob() {
+        for dispatch in SamplerDispatch::available() {
+            let mut scratch = SamplerScratch::new();
+            let logits = vec![f32::NEG_INFINITY; 13];
+            let params = SamplingParams::default();
+            let mut rng_a = Rng::new(5);
             let mut rng_b = rng_a.clone();
             let (ta, lpa) = reference::sample_token_ref(&logits, &params, &mut rng_a);
-            let (tb, lpb) = sample_token_with(&logits, &params, &mut rng_b, &mut scratch);
-            assert_eq!(ta, tb, "case {case}: token diverged ({params:?})");
-            assert_eq!(
-                lpa.to_bits(),
-                lpb.to_bits(),
-                "case {case}: logprob bits diverged ({params:?})"
+            let (tb, lpb) =
+                sample_token_dispatched(&logits, &params, &mut rng_b, &mut scratch, dispatch);
+            assert_eq!(ta, tb, "{dispatch:?}");
+            assert_eq!(lpa.to_bits(), lpb.to_bits(), "{dispatch:?}");
+            assert!(lpb.is_finite(), "{dispatch:?}: lp {lpb} must be finite");
+            assert!(
+                (lpb as f64 - 1e-300f64.ln()).abs() < 1e-3,
+                "{dispatch:?}: lp {lpb} should sit at the clamp floor"
             );
-            assert_eq!(
-                rng_a.next_u64(),
-                rng_b.next_u64(),
-                "case {case}: rng stream diverged"
-            );
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{dispatch:?}: rng diverged");
         }
     }
 
     /// Scratch capacity stabilizes after the first call at the max vocab —
-    /// later calls never regrow it (the alloc-free contract's mechanism).
+    /// later calls never regrow it (the alloc-free contract's mechanism) —
+    /// on every dispatch arm.
     #[test]
     fn scratch_capacity_is_stable_after_warmup() {
-        let mut rng = Rng::new(6);
-        let mut scratch = SamplerScratch::new();
-        let logits: Vec<f32> = (0..48).map(|i| (i % 7) as f32 * 0.4).collect();
-        let p = SamplingParams { temperature: 1.0, top_p: 0.9, top_k: 8 };
-        sample_token_with(&logits, &p, &mut rng, &mut scratch);
-        let cap = scratch.capacity();
-        assert!(cap >= 48);
-        for _ in 0..200 {
-            sample_token_with(&logits, &p, &mut rng, &mut scratch);
-            assert_eq!(scratch.capacity(), cap, "scratch regrew in steady state");
+        for dispatch in SamplerDispatch::available() {
+            let mut rng = Rng::new(6);
+            let mut scratch = SamplerScratch::new();
+            let logits: Vec<f32> = (0..48).map(|i| (i % 7) as f32 * 0.4).collect();
+            let p = SamplingParams { temperature: 1.0, top_p: 0.9, top_k: 8 };
+            sample_token_dispatched(&logits, &p, &mut rng, &mut scratch, dispatch);
+            let cap = scratch.capacity();
+            assert!(cap >= 48);
+            for _ in 0..200 {
+                sample_token_dispatched(&logits, &p, &mut rng, &mut scratch, dispatch);
+                assert_eq!(
+                    scratch.capacity(),
+                    cap,
+                    "{dispatch:?}: scratch regrew in steady state"
+                );
+            }
         }
     }
 }

@@ -1,0 +1,193 @@
+//! 256-bit AVX2 arms of the sampler kernels. Bit-identical to
+//! [`super::scalar`] for NaN-free logit rows — see the module docs in
+//! [`super`] for the reordering argument behind each kernel.
+//!
+//! Every function here is `unsafe fn` + `#[target_feature(enable =
+//! "avx2")]`: the caller ([`super`]'s dispatch wrappers) guarantees the
+//! feature is present (checked once at [`super::SamplerDispatch::detect`]
+//! time).
+
+use std::arch::x86_64::*;
+
+/// Max over the row: lane-wise running max, then a sequential `f32::max`
+/// fold over the 8 lanes and the ragged tail. Exact for NaN-free rows
+/// because `max` is associative and commutative there; a `-0.0`/`+0.0`
+/// ambiguity only ever feeds a subtraction with identical results.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn max_f32(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let mut acc = f32::NEG_INFINITY;
+    let mut i = 0;
+    if n >= 8 {
+        unsafe {
+            let mut v = _mm256_loadu_ps(xs.as_ptr());
+            i = 8;
+            while i + 8 <= n {
+                v = _mm256_max_ps(v, _mm256_loadu_ps(xs.as_ptr().add(i)));
+                i += 8;
+            }
+            let mut lanes = [0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+            for &l in &lanes {
+                acc = acc.max(l);
+            }
+        }
+    }
+    for &x in &xs[i..] {
+        acc = acc.max(x);
+    }
+    acc
+}
+
+/// First index of the maximum: vector max, then an 8-wide equality scan
+/// whose first hit is the answer — reproducing the scalar strict-`>`
+/// first-occurrence rule exactly (an all-`-inf` row matches at index 0).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn argmax_f32(xs: &[f32]) -> usize {
+    let m = unsafe { max_f32(xs) };
+    let mut i = 0;
+    unsafe {
+        let vm = _mm256_set1_ps(m);
+        while i + 8 <= xs.len() {
+            let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let eq = _mm256_cmp_ps::<_CMP_EQ_OQ>(v, vm);
+            let mask = _mm256_movemask_ps(eq);
+            if mask != 0 {
+                return i + mask.trailing_zeros() as usize;
+            }
+            i += 8;
+        }
+    }
+    for (j, &x) in xs[i..].iter().enumerate() {
+        if x == m {
+            return i + j;
+        }
+    }
+    0
+}
+
+/// Softmax numerators: the f32→f64 convert / subtract / scale argument
+/// pipeline runs 4-wide (purely elementwise IEEE ops — exact), then the
+/// `exp` runs scalar per element in place (libm bit-identity).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn exp_scaled(logits: &[f32], maxl: f64, inv_t: f64, out: &mut Vec<f64>) {
+    let n = logits.len();
+    out.clear();
+    out.reserve(n);
+    unsafe {
+        let vmax = _mm256_set1_pd(maxl);
+        let vt = _mm256_set1_pd(inv_t);
+        let p = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let f = _mm_loadu_ps(logits.as_ptr().add(i));
+            let d = _mm256_cvtps_pd(f);
+            let a = _mm256_mul_pd(_mm256_sub_pd(d, vmax), vt);
+            _mm256_storeu_pd(p.add(i), a);
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) = (*logits.get_unchecked(i) as f64 - maxl) * inv_t;
+            i += 1;
+        }
+        out.set_len(n);
+    }
+    for v in out.iter_mut() {
+        *v = v.exp();
+    }
+}
+
+/// Entries strictly greater than `thresh`: ordered-quiet GT compare +
+/// movemask popcount (NaN compares false, matching the scalar filter).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn count_greater(probs: &[f64], thresh: f64) -> usize {
+    let n = probs.len();
+    let mut count = 0usize;
+    let mut i = 0;
+    unsafe {
+        let vt = _mm256_set1_pd(thresh);
+        while i + 4 <= n {
+            let v = _mm256_loadu_pd(probs.as_ptr().add(i));
+            let gt = _mm256_cmp_pd::<_CMP_GT_OQ>(v, vt);
+            count += _mm256_movemask_pd(gt).count_ones() as usize;
+            i += 4;
+        }
+    }
+    count + probs[i..].iter().filter(|&&p| p > thresh).count()
+}
+
+/// Exact-k masking in two passes: a 4-wide GE keep-mask (`and` with the
+/// mask leaves kept bits untouched and writes `+0.0` elsewhere — the same
+/// `0.0` the scalar arm stores; NaN fails GE and is zeroed, also matching
+/// scalar), then a scalar index-order pass applying the tie quota to
+/// entries equal to the threshold. Entries zeroed by the first pass can
+/// never alias the threshold (`0.0 == thresh` only when `thresh == 0.0`,
+/// and then the first pass zeroes nothing).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn mask_top_k(probs: &mut [f64], thresh: f64, mut tie_quota: usize) {
+    let n = probs.len();
+    let mut i = 0;
+    unsafe {
+        let vt = _mm256_set1_pd(thresh);
+        while i + 4 <= n {
+            let p = probs.as_mut_ptr().add(i);
+            let v = _mm256_loadu_pd(p);
+            let keep = _mm256_cmp_pd::<_CMP_GE_OQ>(v, vt);
+            _mm256_storeu_pd(p, _mm256_and_pd(v, keep));
+            i += 4;
+        }
+    }
+    for p in probs[i..].iter_mut() {
+        if !(*p >= thresh) {
+            *p = 0.0;
+        }
+    }
+    for p in probs.iter_mut() {
+        if *p == thresh {
+            if tie_quota > 0 {
+                tie_quota -= 1;
+            } else {
+                *p = 0.0;
+            }
+        }
+    }
+}
+
+/// Nucleus cut: gather the next four ranked probabilities, divide by
+/// `total` in one vector op (elementwise, exact), then feed the running
+/// cumulative sum scalar-ordered with the same early exit as the scalar
+/// arm.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn nucleus_cut(probs: &[f64], idx: &[u32], total: f64, top_p: f64) -> usize {
+    let n = idx.len();
+    let mut cum = 0.0f64;
+    let mut rank = 0usize;
+    let mut q = [0f64; 4];
+    unsafe {
+        let vtot = _mm256_set1_pd(total);
+        while rank + 4 <= n {
+            let g = _mm256_set_pd(
+                *probs.get_unchecked(*idx.get_unchecked(rank + 3) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank + 2) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank + 1) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank) as usize),
+            );
+            let d = _mm256_div_pd(g, vtot);
+            _mm256_storeu_pd(q.as_mut_ptr(), d);
+            for (j, &qq) in q.iter().enumerate() {
+                cum += qq;
+                if cum >= top_p {
+                    return rank + j + 1;
+                }
+            }
+            rank += 4;
+        }
+    }
+    for r in rank..n {
+        cum += probs[idx[r] as usize] / total;
+        if cum >= top_p {
+            return r + 1;
+        }
+    }
+    n
+}

@@ -1,0 +1,187 @@
+//! 512-bit AVX-512F arms of the sampler kernels. Bit-identical to
+//! [`super::scalar`] for NaN-free logit rows — same reordering arguments
+//! as the AVX2 arms ([`super::avx2`]), at twice the lane width and with
+//! the compare results landing in mask registers instead of vector masks.
+//!
+//! Every function here is `unsafe fn` + `#[target_feature(enable =
+//! "avx512f")]`: the caller ([`super`]'s dispatch wrappers) guarantees
+//! the feature is present.
+
+use std::arch::x86_64::*;
+
+/// Max over the row: 16-wide running max, sequential `f32::max` fold over
+/// the lanes and the ragged tail (exact for NaN-free rows).
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn max_f32(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let mut acc = f32::NEG_INFINITY;
+    let mut i = 0;
+    if n >= 16 {
+        unsafe {
+            let mut v = _mm512_loadu_ps(xs.as_ptr());
+            i = 16;
+            while i + 16 <= n {
+                v = _mm512_max_ps(v, _mm512_loadu_ps(xs.as_ptr().add(i)));
+                i += 16;
+            }
+            let mut lanes = [0f32; 16];
+            _mm512_storeu_ps(lanes.as_mut_ptr(), v);
+            for &l in &lanes {
+                acc = acc.max(l);
+            }
+        }
+    }
+    for &x in &xs[i..] {
+        acc = acc.max(x);
+    }
+    acc
+}
+
+/// First index of the maximum via a 16-wide equality scan (first mask hit
+/// wins) — the scalar first-occurrence rule exactly.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn argmax_f32(xs: &[f32]) -> usize {
+    let m = unsafe { max_f32(xs) };
+    let mut i = 0;
+    unsafe {
+        let vm = _mm512_set1_ps(m);
+        while i + 16 <= xs.len() {
+            let v = _mm512_loadu_ps(xs.as_ptr().add(i));
+            let eq: __mmask16 = _mm512_cmp_ps_mask::<_CMP_EQ_OQ>(v, vm);
+            if eq != 0 {
+                return i + eq.trailing_zeros() as usize;
+            }
+            i += 16;
+        }
+    }
+    for (j, &x) in xs[i..].iter().enumerate() {
+        if x == m {
+            return i + j;
+        }
+    }
+    0
+}
+
+/// Softmax numerators: 8-wide f32→f64 convert / subtract / scale (exact
+/// elementwise IEEE ops), scalar libm `exp` in place.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn exp_scaled(logits: &[f32], maxl: f64, inv_t: f64, out: &mut Vec<f64>) {
+    let n = logits.len();
+    out.clear();
+    out.reserve(n);
+    unsafe {
+        let vmax = _mm512_set1_pd(maxl);
+        let vt = _mm512_set1_pd(inv_t);
+        let p = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let f = _mm256_loadu_ps(logits.as_ptr().add(i));
+            let d = _mm512_cvtps_pd(f);
+            let a = _mm512_mul_pd(_mm512_sub_pd(d, vmax), vt);
+            _mm512_storeu_pd(p.add(i), a);
+            i += 8;
+        }
+        while i < n {
+            *p.add(i) = (*logits.get_unchecked(i) as f64 - maxl) * inv_t;
+            i += 1;
+        }
+        out.set_len(n);
+    }
+    for v in out.iter_mut() {
+        *v = v.exp();
+    }
+}
+
+/// Entries strictly greater than `thresh`: GT compare into a mask
+/// register, popcount.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn count_greater(probs: &[f64], thresh: f64) -> usize {
+    let n = probs.len();
+    let mut count = 0usize;
+    let mut i = 0;
+    unsafe {
+        let vt = _mm512_set1_pd(thresh);
+        while i + 8 <= n {
+            let v = _mm512_loadu_pd(probs.as_ptr().add(i));
+            let gt: __mmask8 = _mm512_cmp_pd_mask::<_CMP_GT_OQ>(v, vt);
+            count += gt.count_ones() as usize;
+            i += 8;
+        }
+    }
+    count + probs[i..].iter().filter(|&&p| p > thresh).count()
+}
+
+/// Exact-k masking: 8-wide GE keep-mask (`maskz_mov` writes `+0.0` to
+/// dropped lanes — the scalar arm's `0.0`; NaN fails GE), then the scalar
+/// index-order tie-quota pass. See the AVX2 arm for why the two passes
+/// compose exactly.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn mask_top_k(probs: &mut [f64], thresh: f64, mut tie_quota: usize) {
+    let n = probs.len();
+    let mut i = 0;
+    unsafe {
+        let vt = _mm512_set1_pd(thresh);
+        while i + 8 <= n {
+            let p = probs.as_mut_ptr().add(i);
+            let v = _mm512_loadu_pd(p);
+            let keep: __mmask8 = _mm512_cmp_pd_mask::<_CMP_GE_OQ>(v, vt);
+            _mm512_storeu_pd(p, _mm512_maskz_mov_pd(keep, v));
+            i += 8;
+        }
+    }
+    for p in probs[i..].iter_mut() {
+        if !(*p >= thresh) {
+            *p = 0.0;
+        }
+    }
+    for p in probs.iter_mut() {
+        if *p == thresh {
+            if tie_quota > 0 {
+                tie_quota -= 1;
+            } else {
+                *p = 0.0;
+            }
+        }
+    }
+}
+
+/// Nucleus cut: 8-wide gather-divide feeding the scalar-ordered running
+/// sum with the scalar arm's early exit.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn nucleus_cut(probs: &[f64], idx: &[u32], total: f64, top_p: f64) -> usize {
+    let n = idx.len();
+    let mut cum = 0.0f64;
+    let mut rank = 0usize;
+    let mut q = [0f64; 8];
+    unsafe {
+        let vtot = _mm512_set1_pd(total);
+        while rank + 8 <= n {
+            let g = _mm512_set_pd(
+                *probs.get_unchecked(*idx.get_unchecked(rank + 7) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank + 6) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank + 5) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank + 4) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank + 3) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank + 2) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank + 1) as usize),
+                *probs.get_unchecked(*idx.get_unchecked(rank) as usize),
+            );
+            let d = _mm512_div_pd(g, vtot);
+            _mm512_storeu_pd(q.as_mut_ptr(), d);
+            for (j, &qq) in q.iter().enumerate() {
+                cum += qq;
+                if cum >= top_p {
+                    return rank + j + 1;
+                }
+            }
+            rank += 8;
+        }
+    }
+    for r in rank..n {
+        cum += probs[idx[r] as usize] / total;
+        if cum >= top_p {
+            return r + 1;
+        }
+    }
+    n
+}

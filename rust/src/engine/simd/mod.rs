@@ -1,0 +1,368 @@
+//! Runtime-dispatched SIMD kernels for the sampler hot path.
+//!
+//! The decode loop samples one token per active slot per step; at steady
+//! state the per-token cost is dominated by the softmax/top-k/top-p walk
+//! over the full vocab row ([`super::sampler`]). This module vectorizes
+//! the data-parallel pieces of that walk — the max reduction, argmax, the
+//! exp *argument* pipeline (convert / subtract / scale), top-k threshold
+//! masking, and the nucleus gather-divide — behind a ladder of arms
+//! selected once per engine at construction time:
+//!
+//! - [`SamplerDispatch::Scalar`] — the portable kernels in [`scalar`],
+//!   verbatim the pre-SIMD sampler loops. Always available; the reference
+//!   arm every other arm is differentially fuzzed against.
+//! - [`SamplerDispatch::Avx2`] — 256-bit arms (4×f64 / 8×f32).
+//! - [`SamplerDispatch::Avx512`] — 512-bit arms (8×f64 / 16×f32),
+//!   requiring `avx512f`.
+//!
+//! # Bit-identity contract
+//!
+//! Every arm produces **bit-identical** results to the scalar arm for
+//! NaN-free logit rows: same token picks, same log-prob bits, same RNG
+//! consumption. This is load-bearing — the engine goldens
+//! (`tests/golden_determinism.rs`, `tests/rollout_golden.rs`, …) pin
+//! log-prob streams, and CI runs them at whatever dispatch level the
+//! runner supports. The contract is kept by construction rather than by
+//! tolerance:
+//!
+//! - only *exactly reorderable* reductions are vectorized: `max` is
+//!   associative (±0.0 ambiguity is harmless — the max only feeds a
+//!   subtraction with identical results either way), comparisons and
+//!   masking are exact, and the f32→f64 convert / subtract / multiply
+//!   pipeline is purely elementwise IEEE arithmetic;
+//! - `f64::exp` stays scalar per element (no vector exp matches libm
+//!   bit-for-bit) — the SIMD win there is the vectorized argument
+//!   pipeline, not the transcendental;
+//! - every *sequentially rounded* chain — the two `probs` totals and the
+//!   nucleus cumulative walk — stays scalar left-to-right in all arms;
+//!   the nucleus arm vectorizes only the per-rank `probs[idx]/total`
+//!   gather-divide (elementwise, exact) feeding that walk.
+//!
+//! The contract is enforced by the 500-case differential fuzz in
+//! `sampler.rs`, which runs once per [`SamplerDispatch::available`] level,
+//! and by the `scripts/ci.sh --simd` matrix leg (native codegen and
+//! forced-scalar `COPRIS_SIMD=scalar`).
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+
+/// Instruction-set arm the sampler hot path runs on. Detected once per
+/// engine ([`SamplerDispatch::detect`]) and recorded in every
+/// [`super::StepTrace`] so bench rows and metrics know which path ran.
+///
+/// Variant order is the capability ladder (`Scalar < Avx2 < Avx512`);
+/// [`Ord`] is used to degrade an env-requested level to the best the
+/// machine actually supports. Construct values only via [`detect`],
+/// [`from_request`] or [`available`] — the vector arms assume their CPU
+/// feature is present.
+///
+/// [`detect`]: SamplerDispatch::detect
+/// [`from_request`]: SamplerDispatch::from_request
+/// [`available`]: SamplerDispatch::available
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SamplerDispatch {
+    /// Portable scalar kernels — the verbatim reference arm.
+    #[default]
+    Scalar,
+    /// 256-bit AVX2 arms.
+    Avx2,
+    /// 512-bit AVX-512F arms.
+    Avx512,
+}
+
+impl SamplerDispatch {
+    /// Stable lowercase name (`"scalar"` / `"avx2"` / `"avx512"`) — the
+    /// value carried through StepTrace → RolloutStats → JSONL.
+    pub fn name(self) -> &'static str {
+        match self {
+            SamplerDispatch::Scalar => "scalar",
+            SamplerDispatch::Avx2 => "avx2",
+            SamplerDispatch::Avx512 => "avx512",
+        }
+    }
+
+    /// The widest arm this machine supports (`is_x86_feature_detected!`;
+    /// scalar on non-x86_64 targets).
+    pub fn best_available() -> SamplerDispatch {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx512f") {
+                return SamplerDispatch::Avx512;
+            }
+            if is_x86_feature_detected!("avx2") {
+                return SamplerDispatch::Avx2;
+            }
+        }
+        SamplerDispatch::Scalar
+    }
+
+    /// Resolve an explicit request against the machine's capability.
+    /// `"scalar"` forces the reference arm; `"avx2"`/`"avx512"` request
+    /// that arm but degrade to the best actually available; anything else
+    /// (including `None`) auto-selects [`Self::best_available`]. Pure —
+    /// no env access — so tests can exercise every mapping without racy
+    /// process-wide env mutation.
+    pub fn from_request(req: Option<&str>, best: SamplerDispatch) -> SamplerDispatch {
+        match req.map(str::trim) {
+            Some("scalar") => SamplerDispatch::Scalar,
+            Some("avx2") => SamplerDispatch::Avx2.min(best),
+            Some("avx512") => SamplerDispatch::Avx512.min(best),
+            _ => best,
+        }
+    }
+
+    /// Detect the dispatch level for this process: the `COPRIS_SIMD` env
+    /// override (see [`Self::from_request`]) resolved against
+    /// [`Self::best_available`]. Called once per engine at construction.
+    pub fn detect() -> SamplerDispatch {
+        Self::from_request(
+            std::env::var("COPRIS_SIMD").ok().as_deref(),
+            Self::best_available(),
+        )
+    }
+
+    /// Every arm this machine can run, narrowest first (always contains
+    /// [`SamplerDispatch::Scalar`]) — the fuzz harness runs the
+    /// differential oracle once per entry.
+    pub fn available() -> Vec<SamplerDispatch> {
+        let best = Self::best_available();
+        [SamplerDispatch::Scalar, SamplerDispatch::Avx2, SamplerDispatch::Avx512]
+            .into_iter()
+            .filter(|&d| d <= best)
+            .collect()
+    }
+}
+
+/// Max over a NaN-free f32 row (`-inf` for an all-`-inf` row, matching the
+/// scalar fold's behaviour).
+pub fn max_f32(d: SamplerDispatch, xs: &[f32]) -> f32 {
+    match d {
+        SamplerDispatch::Scalar => scalar::max_f32(xs),
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx2 => {
+            debug_assert!(is_x86_feature_detected!("avx2"));
+            unsafe { avx2::max_f32(xs) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx512 => {
+            debug_assert!(is_x86_feature_detected!("avx512f"));
+            unsafe { avx512::max_f32(xs) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::max_f32(xs),
+    }
+}
+
+/// First index of the maximum of a NaN-free f32 row (greedy decoding);
+/// ties resolve to the lowest index, exactly like the scalar strict-`>`
+/// scan.
+pub fn argmax_f32(d: SamplerDispatch, xs: &[f32]) -> usize {
+    match d {
+        SamplerDispatch::Scalar => scalar::argmax_f32(xs),
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx2 => {
+            debug_assert!(is_x86_feature_detected!("avx2"));
+            unsafe { avx2::argmax_f32(xs) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx512 => {
+            debug_assert!(is_x86_feature_detected!("avx512f"));
+            unsafe { avx512::argmax_f32(xs) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::argmax_f32(xs),
+    }
+}
+
+/// Fill `out` with `exp((l - maxl) * inv_t)` per logit — the stable
+/// softmax numerators. Vector arms batch the convert/subtract/multiply
+/// argument pipeline; the `exp` itself is scalar libm in every arm (the
+/// bit-identity contract).
+pub fn exp_scaled(d: SamplerDispatch, logits: &[f32], maxl: f64, inv_t: f64, out: &mut Vec<f64>) {
+    match d {
+        SamplerDispatch::Scalar => scalar::exp_scaled(logits, maxl, inv_t, out),
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx2 => {
+            debug_assert!(is_x86_feature_detected!("avx2"));
+            unsafe { avx2::exp_scaled(logits, maxl, inv_t, out) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx512 => {
+            debug_assert!(is_x86_feature_detected!("avx512f"));
+            unsafe { avx512::exp_scaled(logits, maxl, inv_t, out) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::exp_scaled(logits, maxl, inv_t, out),
+    }
+}
+
+/// Count of entries strictly greater than `thresh` (top-k tie sizing).
+pub fn count_greater(d: SamplerDispatch, probs: &[f64], thresh: f64) -> usize {
+    match d {
+        SamplerDispatch::Scalar => scalar::count_greater(probs, thresh),
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx2 => {
+            debug_assert!(is_x86_feature_detected!("avx2"));
+            unsafe { avx2::count_greater(probs, thresh) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx512 => {
+            debug_assert!(is_x86_feature_detected!("avx512f"));
+            unsafe { avx512::count_greater(probs, thresh) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::count_greater(probs, thresh),
+    }
+}
+
+/// Top-k threshold masking: zero every entry below `thresh`, keep entries
+/// above it, and keep the first `tie_quota` entries equal to it (index
+/// order) — the exact-k tie rule of the scalar arm.
+pub fn mask_top_k(d: SamplerDispatch, probs: &mut [f64], thresh: f64, tie_quota: usize) {
+    match d {
+        SamplerDispatch::Scalar => scalar::mask_top_k(probs, thresh, tie_quota),
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx2 => {
+            debug_assert!(is_x86_feature_detected!("avx2"));
+            unsafe { avx2::mask_top_k(probs, thresh, tie_quota) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx512 => {
+            debug_assert!(is_x86_feature_detected!("avx512f"));
+            unsafe { avx512::mask_top_k(probs, thresh, tie_quota) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::mask_top_k(probs, thresh, tie_quota),
+    }
+}
+
+/// Nucleus cut: walk the ranked index array accumulating
+/// `probs[idx[rank]] / total` until the cumulative mass reaches `top_p`;
+/// returns the first rank count to KEEP (`idx.len()` when the mass never
+/// reaches `top_p`). Vector arms batch the gather-divide; the running sum
+/// stays scalar-ordered (bit-identity).
+pub fn nucleus_cut(d: SamplerDispatch, probs: &[f64], idx: &[u32], total: f64, top_p: f64) -> usize {
+    match d {
+        SamplerDispatch::Scalar => scalar::nucleus_cut(probs, idx, total, top_p),
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx2 => {
+            debug_assert!(is_x86_feature_detected!("avx2"));
+            unsafe { avx2::nucleus_cut(probs, idx, total, top_p) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SamplerDispatch::Avx512 => {
+            debug_assert!(is_x86_feature_detected!("avx512f"));
+            unsafe { avx512::nucleus_cut(probs, idx, total, top_p) }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::nucleus_cut(probs, idx, total, top_p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_order_and_names() {
+        assert!(SamplerDispatch::Scalar < SamplerDispatch::Avx2);
+        assert!(SamplerDispatch::Avx2 < SamplerDispatch::Avx512);
+        assert_eq!(SamplerDispatch::Scalar.name(), "scalar");
+        assert_eq!(SamplerDispatch::Avx2.name(), "avx2");
+        assert_eq!(SamplerDispatch::Avx512.name(), "avx512");
+    }
+
+    #[test]
+    fn from_request_honors_force_and_degrades() {
+        use SamplerDispatch::*;
+        // Forced scalar wins regardless of capability.
+        assert_eq!(SamplerDispatch::from_request(Some("scalar"), Avx512), Scalar);
+        assert_eq!(SamplerDispatch::from_request(Some("scalar"), Scalar), Scalar);
+        // Requests degrade to the best available, never exceed it.
+        assert_eq!(SamplerDispatch::from_request(Some("avx512"), Avx2), Avx2);
+        assert_eq!(SamplerDispatch::from_request(Some("avx512"), Avx512), Avx512);
+        assert_eq!(SamplerDispatch::from_request(Some("avx2"), Scalar), Scalar);
+        assert_eq!(SamplerDispatch::from_request(Some("avx2"), Avx512), Avx2);
+        // Whitespace tolerated; unknown / absent = auto.
+        assert_eq!(SamplerDispatch::from_request(Some(" scalar "), Avx2), Scalar);
+        assert_eq!(SamplerDispatch::from_request(Some("neon"), Avx2), Avx2);
+        assert_eq!(SamplerDispatch::from_request(None, Avx512), Avx512);
+    }
+
+    #[test]
+    fn available_always_contains_scalar_and_is_prefix_of_ladder() {
+        let avail = SamplerDispatch::available();
+        assert_eq!(avail[0], SamplerDispatch::Scalar);
+        let best = SamplerDispatch::best_available();
+        assert!(avail.iter().all(|&d| d <= best));
+        assert!(avail.contains(&best));
+        // The list is the full ladder prefix up to `best`.
+        assert_eq!(avail.len(), avail.iter().filter(|&&d| d <= best).count());
+    }
+
+    /// Every dispatched kernel agrees bitwise with the scalar arm on a
+    /// fixed golden row — the lane-reduction-order pin for the vector
+    /// arms (the full 500-case differential fuzz lives in `sampler.rs`).
+    #[test]
+    fn kernels_match_scalar_bitwise_on_golden_rows() {
+        // 19 entries: exercises full vector blocks plus ragged tails at
+        // both 4/8 (f64) and 8/16 (f32) widths.
+        let logits: Vec<f32> = (0..19)
+            .map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.37 + if i % 5 == 0 { 1.5 } else { 0.0 })
+            .collect();
+        let maxl = scalar::max_f32(&logits) as f64;
+        let mut want = Vec::new();
+        scalar::exp_scaled(&logits, maxl, 1.0 / 0.85, &mut want);
+        let thresh = {
+            let mut s = want.clone();
+            s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            s[6]
+        };
+        let mut idx: Vec<u32> = (0..want.len() as u32).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            want[b as usize].partial_cmp(&want[a as usize]).unwrap().then(a.cmp(&b))
+        });
+        let total: f64 = want.iter().sum();
+        for d in SamplerDispatch::available() {
+            assert_eq!(max_f32(d, &logits).to_bits(), (maxl as f32).to_bits(), "{d:?} max");
+            assert_eq!(argmax_f32(d, &logits), scalar::argmax_f32(&logits), "{d:?} argmax");
+            let mut got = Vec::new();
+            exp_scaled(d, &logits, maxl, 1.0 / 0.85, &mut got);
+            let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "{d:?} exp_scaled");
+            assert_eq!(
+                count_greater(d, &want, thresh),
+                scalar::count_greater(&want, thresh),
+                "{d:?} count_greater"
+            );
+            let mut a = want.clone();
+            let mut b = want.clone();
+            scalar::mask_top_k(&mut a, thresh, 1);
+            mask_top_k(d, &mut b, thresh, 1);
+            let ab: Vec<u64> = a.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u64> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "{d:?} mask_top_k");
+            for &p in &[0.1, 0.5, 0.9, 0.999, 1.5] {
+                assert_eq!(
+                    nucleus_cut(d, &want, &idx, total, p),
+                    scalar::nucleus_cut(&want, &idx, total, p),
+                    "{d:?} nucleus_cut top_p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_all_neg_inf_row_picks_index_zero() {
+        let row = [f32::NEG_INFINITY; 11];
+        for d in SamplerDispatch::available() {
+            assert_eq!(argmax_f32(d, &row), 0, "{d:?}");
+            assert_eq!(max_f32(d, &row), f32::NEG_INFINITY, "{d:?}");
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Portable scalar sampler kernels — verbatim the loops the pre-SIMD
+//! sampler ran, factored out so every vector arm has a reference to be
+//! differentially fuzzed against (and so non-x86_64 targets keep working
+//! untouched). Semantics notes live on each kernel; the bit-identity
+//! contract is documented in [`super`].
+
+/// Max over the row via the sequential `f32::max` fold the sampler always
+/// used. `-inf` for an all-`-inf` row; NaN entries are ignored (but the
+/// dispatched path requires NaN-free logits — see [`super`]).
+pub fn max_f32(xs: &[f32]) -> f32 {
+    xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// First index of the maximum: strict-`>` scan, lowest index wins ties.
+/// Index 0 for an all-`-inf` row (nothing beats the `-inf` seed).
+pub fn argmax_f32(xs: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bi = i;
+            bv = x;
+        }
+    }
+    bi
+}
+
+/// Fill `out` with the stable-softmax numerators
+/// `exp((l as f64 - maxl) * inv_t)`, clearing it first.
+pub fn exp_scaled(logits: &[f32], maxl: f64, inv_t: f64, out: &mut Vec<f64>) {
+    out.clear();
+    out.extend(logits.iter().map(|&l| ((l as f64 - maxl) * inv_t).exp()));
+}
+
+/// Entries strictly greater than `thresh` (sizes the top-k tie quota).
+pub fn count_greater(probs: &[f64], thresh: f64) -> usize {
+    probs.iter().filter(|&&p| p > thresh).count()
+}
+
+/// Exact-k top-k masking: keep entries above `thresh`, keep the first
+/// `tie_quota` entries equal to it in index order, zero everything else
+/// (including NaN entries — neither comparison matches them).
+pub fn mask_top_k(probs: &mut [f64], thresh: f64, mut tie_quota: usize) {
+    for p in probs.iter_mut() {
+        if *p > thresh {
+            continue;
+        }
+        if *p == thresh && tie_quota > 0 {
+            tie_quota -= 1;
+            continue;
+        }
+        *p = 0.0;
+    }
+}
+
+/// Nucleus cut: accumulate `probs[idx[rank]] / total` over the ranked
+/// index array until the cumulative mass reaches `top_p`; returns the
+/// number of leading ranks to keep (`idx.len()` when the mass never gets
+/// there — then nothing is cut).
+pub fn nucleus_cut(probs: &[f64], idx: &[u32], total: f64, top_p: f64) -> usize {
+    let mut cum = 0.0;
+    for (rank, &i) in idx.iter().enumerate() {
+        cum += probs[i as usize] / total;
+        if cum >= top_p {
+            return rank + 1;
+        }
+    }
+    idx.len()
+}

@@ -55,6 +55,12 @@ pub struct RunSummary {
     pub replay_tokens_saved: u64,
     /// Peak KV blocks in use on any one engine across the run (paged KV).
     pub kv_blocks_peak: usize,
+    /// Peak KV bytes resident on any one engine across the run — block
+    /// peak mapped to real memory at the configured `engine.kv_dtype`.
+    pub kv_bytes_peak: usize,
+    /// Sampler SIMD arm the engines ran (`scalar` | `avx2` | `avx512`;
+    /// `""` if no step trace was observed).
+    pub sampler_dispatch: &'static str,
     /// Prompt tokens attached from shared group prefixes instead of
     /// freshly charged (paged KV; run total).
     pub prefix_tokens_shared: u64,
@@ -277,6 +283,10 @@ impl RlSession {
             summary.retained_misses += rs.retained_misses;
             summary.replay_tokens_saved += rs.replay_tokens_saved;
             summary.kv_blocks_peak = summary.kv_blocks_peak.max(rs.kv_blocks_peak);
+            summary.kv_bytes_peak = summary.kv_bytes_peak.max(rs.kv_bytes_peak);
+            if !rs.sampler_dispatch.is_empty() {
+                summary.sampler_dispatch = rs.sampler_dispatch;
+            }
             summary.prefix_tokens_shared += rs.prefix_tokens_shared;
             summary.cow_copies += rs.cow_copies;
             summary.overlap_secs += rs.overlap_secs;

@@ -50,6 +50,9 @@ fn usage() -> ! {
                                     sample)\n\
            --kv-block-size N        tokens per KV block (default 16); KV\n\
                                     budget via --set engine.kv_budget_blocks\n\
+           --kv-dtype <f32|f16|int8> KV block storage dtype (default f32);\n\
+                                    narrower dtypes multiply the effective\n\
+                                    block budget (f16 2x, int8 4x)\n\
            --step-token-budget N    continuous batching: pack each engine\n\
                                     step with ≤ N tokens (decode lanes +\n\
                                     chunked prefill slices); 0 = legacy\n\
@@ -104,6 +107,9 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(bs) = args.get("kv-block-size") {
         cfg.set("engine.kv_block_size", bs)?;
+    }
+    if let Some(d) = args.get("kv-dtype") {
+        cfg.set("engine.kv_dtype", d)?;
     }
     if let Some(b) = args.get("step-token-budget") {
         cfg.set("engine.step_token_budget", b)?;
@@ -198,9 +204,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         summary.retained_hits, summary.retained_misses, summary.replay_tokens_saved
     );
     println!(
-        "paged kv: peak blocks {}  prefix tokens shared {}  cow copies {}",
-        summary.kv_blocks_peak, summary.prefix_tokens_shared, summary.cow_copies
+        "paged kv: peak blocks {}  peak bytes {}  prefix tokens shared {}  cow copies {}",
+        summary.kv_blocks_peak,
+        summary.kv_bytes_peak,
+        summary.prefix_tokens_shared,
+        summary.cow_copies
     );
+    if !summary.sampler_dispatch.is_empty() {
+        println!("sampler dispatch: {}", summary.sampler_dispatch);
+    }
     println!(
         "continuous batching: prefill_chunks {}  step_token_util {:.2}  prefill_stall_saved {:.2}s  resumed {}",
         summary.prefill_chunks,

@@ -72,6 +72,8 @@ impl MetricsLog {
             .int("retained_misses", rollout.retained_misses as i64)
             .int("replay_tokens_saved", rollout.replay_tokens_saved as i64)
             .int("kv_blocks_peak", rollout.kv_blocks_peak as i64)
+            .int("kv_bytes_peak", rollout.kv_bytes_peak as i64)
+            .str("sampler_dispatch", rollout.sampler_dispatch)
             .int("prefix_tokens_shared", rollout.prefix_tokens_shared as i64)
             .int("cow_copies", rollout.cow_copies as i64)
             .num("kv_frag", rollout.mean_kv_frag())

@@ -247,7 +247,12 @@ fn chunked_engine(block_size: usize, budget: usize, slice_replay: bool) -> Engin
     be.min_len = 9;
     be.spread = 5;
     be.chunked_replay = slice_replay;
-    let kv = KvCacheConfig { block_size, budget_blocks: 0, prefix_sharing: true };
+    let kv = KvCacheConfig {
+        block_size,
+        budget_blocks: 0,
+        prefix_sharing: true,
+        ..KvCacheConfig::default()
+    };
     Engine::with_opts(0, be, EngineOpts { kv, step_token_budget: budget }, 1)
 }
 
@@ -425,7 +430,12 @@ fn mid_chunk_preemption_keeps_page_coverage_exact() {
     be.spread = 4;
     // Tight budget: 6 blocks of 4 — long prompts must preempt/backpressure
     // while mid-ingestion slots hold partially charged chains.
-    let kv = KvCacheConfig { block_size: 4, budget_blocks: 6, prefix_sharing: true };
+    let kv = KvCacheConfig {
+        block_size: 4,
+        budget_blocks: 6,
+        prefix_sharing: true,
+        ..KvCacheConfig::default()
+    };
     let mut eng = Engine::with_opts(0, be, EngineOpts { kv, step_token_budget: 5 }, 3);
     // Per-request (prompt, tokens generated so far) — the test plays the
     // coordinator's role and re-dispatches preempted work as resumes.

@@ -17,9 +17,10 @@ Rules:
     both sides carry them;
   - fresh rows absent from the baseline are reported as NEW (seed them by
     copying the CI artifact over BENCH_baseline.json);
-  - an EMPTY baseline rows[] passes with a seeding hint, so the gate can
-    land before the first CI-populated baseline is committed. Once seeded,
-    the gate is live.
+  - an EMPTY baseline rows[] while the fresh run has rows FAILS (exit 1)
+    with a loud warning: an unseeded baseline gates nothing, and silently
+    passing it is how regressions land unguarded. Seed it by copying a CI
+    run's BENCH_micro artifact over BENCH_baseline.json.
 
 Usage:
   scripts/bench_check.py [--baseline BENCH_baseline.json]
@@ -65,12 +66,20 @@ def main():
         print(f"bench_check: {args.fresh} has no rows — did the benches run?")
         return 1
     if not base:
+        # One loud line on stderr: an empty baseline while the fresh run
+        # produced rows means the gate is checking nothing — that is a
+        # failure, not a seeding grace period (the old PASS here let
+        # regressions land unguarded indefinitely).
         print(
-            f"bench_check: {args.baseline} has no rows yet — PASS (seeding "
-            f"mode). Seed it by copying a CI run's {args.fresh} artifact "
-            f"over it; the ±{args.tolerance:.0%} gate goes live then."
+            f"bench_check: WARNING — {args.baseline} has no rows but "
+            f"{args.fresh} has {len(fresh)}: the regression gate is "
+            f"UNSEEDED and gating nothing; FAIL. Seed it with "
+            f"`cp {args.fresh} {args.baseline}` (or copy the CI "
+            f"BENCH_micro artifact over it) and commit to arm the "
+            f"±{args.tolerance:.0%} gate.",
+            file=sys.stderr,
         )
-        return 0
+        return 1
 
     failures = []
     notes = []

@@ -32,6 +32,7 @@ cargo bench --manifest-path "$MANIFEST" --bench micro "$@"
 cargo bench --manifest-path "$MANIFEST" --bench resume_affinity
 cargo bench --manifest-path "$MANIFEST" --bench kv_blocks
 cargo bench --manifest-path "$MANIFEST" --bench continuous_batching
+cargo bench --manifest-path "$MANIFEST" --bench sampler_simd
 # The CI bench job uploads this file as an artifact; fail loudly if a
 # bench silently produced an empty rows[] so the gap can't reopen.
 if grep -q '"rows":\[\]' "$COPRIS_BENCH_JSON"; then

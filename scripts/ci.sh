@@ -20,6 +20,14 @@
 #                            runs catch_unwind/timing paths that behave
 #                            differently without debug assertions)
 #   scripts/ci.sh --bench    full tier-1, then refresh BENCH_micro.json
+#   scripts/ci.sh --simd     sampler SIMD gate (the CI `simd` matrix job):
+#                            runs the sampler/simd differential-fuzz suite
+#                            and the engine stream goldens per SIMD_ARM —
+#                            `native` builds with -C target-cpu=native so
+#                            the avx2/avx512 arms actually dispatch,
+#                            `scalar` forces COPRIS_SIMD=scalar to prove
+#                            the forced-scalar escape hatch stays golden,
+#                            `both` (default) runs the two in sequence
 # Unknown flags exit 2 with this usage instead of silently running full
 # tier-1.
 set -euo pipefail
@@ -27,15 +35,16 @@ ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$ROOT"
 
 usage() {
-  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--chaos|--bench]" >&2
+  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--chaos|--bench|--simd]" >&2
   echo "  (no flag = full tier-1: build + doc + clippy + test)" >&2
+  echo "  --simd honors SIMD_ARM=native|scalar|both (default both)" >&2
 }
 
 # Validate the mode BEFORE touching the environment: unknown flags exit 2
 # with usage instead of silently running full tier-1.
 MODE="${1:-}"
 case "$MODE" in
-  ""|--fmt|--docs|--clippy|--chaos|--bench) ;;
+  ""|--fmt|--docs|--clippy|--chaos|--bench|--simd) ;;
   *)
     echo "ci: unknown flag $MODE" >&2
     usage
@@ -98,6 +107,43 @@ run_chaos() {
   cargo test --release -q --manifest-path "$MANIFEST" --test chaos_recovery
 }
 
+# One SIMD verification arm: the sampler + simd unit suites (the
+# scalar-vs-SIMD bit-identity fuzz oracle lives there) plus every engine
+# stream golden, which pins token/log-prob bits end to end — if a SIMD
+# kernel diverged from scalar by one bit, these fail.
+simd_test_targets() {
+  cargo test -q --manifest-path "$MANIFEST" --lib "$@" engine::sampler:: engine::simd::
+  cargo test -q --manifest-path "$MANIFEST" "$@" \
+    --test golden_determinism --test rollout_golden --test retained_golden \
+    --test continuous_batching
+}
+
+run_simd() {
+  local arm="${SIMD_ARM:-both}"
+  case "$arm" in
+    native|scalar|both) ;;
+    *)
+      echo "ci: SIMD_ARM must be native|scalar|both, got $arm" >&2
+      exit 2
+      ;;
+  esac
+  if [ "$arm" = "native" ] || [ "$arm" = "both" ]; then
+    # target-cpu=native lets is_x86_feature_detected! actually resolve to
+    # avx2/avx512 on capable runners; a separate target dir keeps the
+    # differently-flagged artifacts from thrashing the default cache.
+    echo "== simd: native arm (RUSTFLAGS=-C target-cpu=native) =="
+    RUSTFLAGS="${RUSTFLAGS:-} -C target-cpu=native" \
+      CARGO_TARGET_DIR="${CARGO_TARGET_DIR:-target}/simd-native" \
+      simd_test_targets
+  fi
+  if [ "$arm" = "scalar" ] || [ "$arm" = "both" ]; then
+    # Forced-scalar escape hatch: the same suites must stay golden when
+    # dispatch is pinned below what the host supports.
+    echo "== simd: forced-scalar arm (COPRIS_SIMD=scalar) =="
+    COPRIS_SIMD=scalar simd_test_targets
+  fi
+}
+
 run_full() {
   # NOTE: fmt stays a separate gate (scripts/ci.sh --fmt / the CI `fmt`
   # job, blocking) rather than part of full tier-1, so formatting drift
@@ -134,9 +180,13 @@ case "$MODE" in
     run_chaos
     echo "ci: chaos OK"
     ;;
+  --simd)
+    run_simd
+    echo "ci: simd OK"
+    ;;
   --bench)
     run_full
-    echo "== micro + resume_affinity + kv_blocks + continuous_batching benches → BENCH_micro.json =="
+    echo "== micro + resume_affinity + kv_blocks + continuous_batching + sampler_simd benches → BENCH_micro.json =="
     "$ROOT/scripts/bench_micro.sh"
     echo "ci: OK"
     ;;
