@@ -186,6 +186,7 @@ fn main() {
         retries: 0,
         kv_bytes: 8 * 16 * 256 * 4,
         sampler_dispatch: "scalar",
+        queued: 0,
     };
     let (tx, rx) = std::sync::mpsc::channel::<EngineEvent>();
     let s = time_fn(100, 2000, || {

@@ -6,4 +6,7 @@ pub mod schema;
 pub mod toml;
 
 pub use presets::{paper_preset, preset, scaled_preset};
-pub use schema::{Config, EngineConfig, EvalConfig, RolloutConfig, RolloutMode, TrainConfig};
+pub use schema::{
+    Config, EngineConfig, EvalConfig, RolloutConfig, RolloutMode, TrainConfig, WorkloadConfig,
+    WorkloadKind,
+};

@@ -292,6 +292,79 @@ impl Default for EvalConfig {
     }
 }
 
+/// Which open-loop arrival process the SLO harness generates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Memoryless Poisson arrivals at `rate_rps`.
+    Poisson,
+    /// Interrupted-Poisson on/off bursts preserving the long-run rate.
+    Bursty,
+}
+
+impl WorkloadKind {
+    /// Parse a CLI/TOML workload name (`poisson` | `bursty`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "poisson" => WorkloadKind::Poisson,
+            "bursty" => WorkloadKind::Bursty,
+            _ => bail!("unknown workload {s:?} (poisson|bursty)"),
+        })
+    }
+
+    /// Canonical name (round-trips through [`WorkloadKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Poisson => "poisson",
+            WorkloadKind::Bursty => "bursty",
+        }
+    }
+}
+
+/// Open-loop workload / SLO-harness configuration (`copris slo`, the
+/// `slo_harness` bench, and the chaos open-loop arm). All rates and
+/// durations are VIRTUAL — the harness runs on the `loadgen` virtual
+/// clock (1 tick = 1 µs of virtual time), so these knobs shape the
+/// schedule, not the wall-clock runtime.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Arrival process (`poisson` | `bursty`).
+    pub kind: WorkloadKind,
+    /// Mean arrival rate in requests per virtual second.
+    pub rate_rps: f64,
+    /// Total arrivals per run.
+    pub requests: usize,
+    /// Bursty ON-phase length in virtual milliseconds.
+    pub burst_on_ms: u64,
+    /// Bursty OFF-phase length in virtual milliseconds.
+    pub burst_off_ms: u64,
+    /// Fraction of requests drawn from the interactive tenant class (the
+    /// rest are bulk-rollout traffic).
+    pub interactive_share: f64,
+    /// Admission-queue capacity; arrivals beyond it are shed.
+    pub queue_cap: usize,
+    /// Virtual microseconds one engine step costs on the virtual clock.
+    pub quantum_us: u64,
+    /// Decode slots per simulated engine (the lockstep sim sizes its own
+    /// MockBackends; the threaded paths use the artifact's slot count).
+    pub slots_per_engine: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            kind: WorkloadKind::Poisson,
+            rate_rps: 400.0,
+            requests: 300,
+            burst_on_ms: 20,
+            burst_off_ms: 80,
+            interactive_share: 0.5,
+            queue_cap: 64,
+            quantum_us: 1_000,
+            slots_per_engine: 4,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
@@ -307,6 +380,8 @@ pub struct Config {
     pub train: TrainConfig,
     /// Evaluation settings.
     pub eval: EvalConfig,
+    /// Open-loop workload / SLO-harness settings.
+    pub workload: WorkloadConfig,
 }
 
 impl Config {
@@ -394,6 +469,45 @@ impl Config {
             ("eval", "temperature") => self.eval.temperature = parse_f64()?,
             ("eval", "top_p") => self.eval.top_p = parse_f64()?,
             ("eval", "prompts_per_suite") => self.eval.prompts_per_suite = parse_usize()?,
+            ("workload", "process") => self.workload.kind = WorkloadKind::parse(v)?,
+            ("workload", "rate_rps") => {
+                self.workload.rate_rps = parse_f64()?;
+                if self.workload.rate_rps <= 0.0 {
+                    bail!("workload.rate_rps must be > 0");
+                }
+            }
+            ("workload", "requests") => self.workload.requests = parse_usize()?,
+            ("workload", "burst_on_ms") => {
+                self.workload.burst_on_ms = v.parse()?;
+                if self.workload.burst_on_ms == 0 {
+                    bail!("workload.burst_on_ms must be >= 1");
+                }
+            }
+            ("workload", "burst_off_ms") => self.workload.burst_off_ms = v.parse()?,
+            ("workload", "interactive_share") => {
+                self.workload.interactive_share = parse_f64()?;
+                if !(0.0..=1.0).contains(&self.workload.interactive_share) {
+                    bail!("workload.interactive_share must be in [0, 1]");
+                }
+            }
+            ("workload", "queue_cap") => {
+                self.workload.queue_cap = parse_usize()?;
+                if self.workload.queue_cap == 0 {
+                    bail!("workload.queue_cap must be >= 1");
+                }
+            }
+            ("workload", "quantum_us") => {
+                self.workload.quantum_us = v.parse()?;
+                if self.workload.quantum_us == 0 {
+                    bail!("workload.quantum_us must be >= 1");
+                }
+            }
+            ("workload", "slots_per_engine") => {
+                self.workload.slots_per_engine = parse_usize()?;
+                if self.workload.slots_per_engine == 0 {
+                    bail!("workload.slots_per_engine must be >= 1");
+                }
+            }
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -484,6 +598,21 @@ impl Config {
             "| Engine failover (retries/backoff/stall) | {}x / {} ms / {} ms |\n",
             eng.max_retries, eng.retry_backoff_ms, eng.stall_timeout_ms
         ));
+        let w = &self.workload;
+        s.push_str("| **Open-Loop Workload / SLO** | |\n");
+        let process = match w.kind {
+            WorkloadKind::Poisson => "poisson".to_string(),
+            WorkloadKind::Bursty => {
+                format!("bursty ({} ms on / {} ms off)", w.burst_on_ms, w.burst_off_ms)
+            }
+        };
+        s.push_str(&format!("| Arrival process | {process} |\n"));
+        s.push_str(&format!("| Offered rate (req/s) | {} |\n", w.rate_rps));
+        s.push_str(&format!("| Requests per run | {} |\n", w.requests));
+        s.push_str(&format!("| Interactive tenant share | {} |\n", w.interactive_share));
+        s.push_str(&format!("| Admission queue cap | {} |\n", w.queue_cap));
+        s.push_str(&format!("| Scheduler quantum (virtual us) | {} |\n", w.quantum_us));
+        s.push_str(&format!("| Decode slots per engine | {} |\n", w.slots_per_engine));
         s.push_str("| **Training Configuration** | |\n");
         s.push_str(&format!("| Global batch size | {} |\n", r.batch_prompts));
         s.push_str("| Optimizer | Adam |\n");
@@ -715,6 +844,67 @@ mod tests {
     fn mode_roundtrip() {
         for m in [RolloutMode::Sync, RolloutMode::NaivePartial, RolloutMode::Copris] {
             assert_eq!(RolloutMode::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    /// Open-loop workload knobs: Poisson defaults, settable via CLI/TOML,
+    /// validated ranges, and a Table-3 section in the rendered table.
+    #[test]
+    fn workload_knobs_default_and_plumb_through() {
+        let mut c = Config::new("tiny");
+        assert_eq!(c.workload.kind, WorkloadKind::Poisson);
+        assert_eq!(c.workload.rate_rps, 400.0);
+        assert_eq!(c.workload.requests, 300);
+        assert_eq!(c.workload.queue_cap, 64);
+        assert_eq!(c.workload.quantum_us, 1_000);
+        assert_eq!(c.workload.slots_per_engine, 4);
+        let table = c.render_table();
+        assert!(table.contains("| **Open-Loop Workload / SLO** | |"), "{table}");
+        assert!(table.contains("| Arrival process | poisson |"), "{table}");
+        assert!(table.contains("| Offered rate (req/s) | 400 |"), "{table}");
+
+        c.set("workload.process", "bursty").unwrap();
+        c.set("workload.rate_rps", "1200").unwrap();
+        c.set("workload.requests", "64").unwrap();
+        c.set("workload.burst_on_ms", "10").unwrap();
+        c.set("workload.burst_off_ms", "40").unwrap();
+        c.set("workload.interactive_share", "0.25").unwrap();
+        c.set("workload.queue_cap", "8").unwrap();
+        c.set("workload.quantum_us", "500").unwrap();
+        c.set("workload.slots_per_engine", "2").unwrap();
+        assert_eq!(c.workload.kind, WorkloadKind::Bursty);
+        assert_eq!(c.workload.rate_rps, 1200.0);
+        assert_eq!(c.workload.requests, 64);
+        assert_eq!(c.workload.burst_on_ms, 10);
+        assert_eq!(c.workload.burst_off_ms, 40);
+        assert_eq!(c.workload.interactive_share, 0.25);
+        assert_eq!(c.workload.queue_cap, 8);
+        assert_eq!(c.workload.quantum_us, 500);
+        assert_eq!(c.workload.slots_per_engine, 2);
+        let table = c.render_table();
+        assert!(table.contains("| Arrival process | bursty (10 ms on / 40 ms off) |"), "{table}");
+
+        // Validation: out-of-range values are rejected, state unchanged.
+        assert!(c.set("workload.process", "uniform").is_err());
+        assert!(c.set("workload.rate_rps", "0").is_err());
+        assert!(c.set("workload.interactive_share", "1.5").is_err());
+        assert!(c.set("workload.queue_cap", "0").is_err());
+        assert!(c.set("workload.quantum_us", "0").is_err());
+        assert!(c.set("workload.burst_on_ms", "0").is_err());
+        assert!(c.set("workload.slots_per_engine", "0").is_err());
+
+        // TOML path hits the same setters.
+        let doc = "[workload]\nprocess = \"bursty\"\nrate_rps = 900\nrequests = 12\n";
+        let c2 = Config::from_toml_str(doc).unwrap();
+        assert_eq!(c2.workload.kind, WorkloadKind::Bursty);
+        assert_eq!(c2.workload.rate_rps, 900.0);
+        assert_eq!(c2.workload.requests, 12);
+    }
+
+    #[test]
+    fn workload_kind_roundtrip() {
+        for k in [WorkloadKind::Poisson, WorkloadKind::Bursty] {
+            assert_eq!(WorkloadKind::parse(k.name()).unwrap(), k);
         }
     }
 }

@@ -46,6 +46,12 @@ pub enum StageGoal {
     /// Owns exactly its own trajectories — never touches the shared
     /// partial buffer (`run_fixed_sync` tracks its group ids itself).
     Fixed,
+    /// Open-loop SLO stage: arrivals come from a pre-generated
+    /// virtual-clock schedule through a bounded admission queue instead
+    /// of a fixed work list; runs until every admitted request completes
+    /// (`Coordinator::run_open_loop` tracks its group ids itself, like
+    /// `Fixed`).
+    OpenLoop,
 }
 
 /// Dispatch-policy parameters. The three rollout modes and eval differ

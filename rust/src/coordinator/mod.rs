@@ -40,5 +40,5 @@ pub use buffer::PartialBuffer;
 pub use driver::{StageDriver, StageGoal, StagePhase, StagePolicy};
 pub use groups::{Group, GroupBook};
 pub use reference::ReferenceCoordinator;
-pub use rollout::{Coordinator, RolloutOutput, RolloutStats};
+pub use rollout::{Coordinator, OpenLoopOutput, OpenLoopRequest, RolloutOutput, RolloutStats};
 pub use trajectory::{Segment, Trajectory};

@@ -16,7 +16,7 @@
 //! [`StagePolicy`]). The pre-refactor blocking loop survives verbatim in
 //! [`super::reference::ReferenceCoordinator`] as the golden oracle.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::sync::mpsc::RecvTimeoutError;
 use std::time::{Duration, Instant};
@@ -29,7 +29,8 @@ use super::groups::{Group, GroupBook};
 use super::trajectory::Trajectory;
 use crate::config::{Config, RolloutMode};
 use crate::engine::{EngineCmd, EngineEvent, EnginePool, FinishReason, SamplingParams, StepTrace, WorkItem};
-use crate::tasks::{Dataset, Task};
+use crate::loadgen::{SloCollector, SloReport, TenantClass};
+use crate::tasks::{Dataset, Family, Task};
 use crate::tokenizer::Tokenizer;
 
 /// Deadline chunk used by the blocking wrappers; the in-driver stall
@@ -120,6 +121,21 @@ pub struct RolloutStats {
     /// everything resumed across one sync in bucket 1; pipelined runs
     /// surface lag > 0 from mid-flight weight syncs.
     pub version_lag_hist: [usize; 5],
+    /// Open-loop arrivals observed this stage (0 for closed-loop stages —
+    /// these SLO fields are populated only by `run_open_loop`).
+    pub requests_arrived: usize,
+    /// Open-loop arrivals shed at admission (bounded-queue tail drop —
+    /// the structured overload signal).
+    pub requests_shed: usize,
+    /// Peak open-loop admission-queue depth observed.
+    pub queue_depth_peak: usize,
+    /// End-to-end (arrival → completion) latency p50 in virtual ticks
+    /// (1 tick = 1 µs of virtual time; 0.0 for closed-loop stages).
+    pub slo_e2e_p50_ticks: f64,
+    /// End-to-end latency p99 in virtual ticks.
+    pub slo_e2e_p99_ticks: f64,
+    /// Completed requests per virtual second over the open-loop horizon.
+    pub goodput_rps: f64,
 }
 
 impl RolloutStats {
@@ -163,6 +179,38 @@ pub struct RolloutOutput {
     pub groups: Vec<Group>,
     /// Stage statistics.
     pub stats: RolloutStats,
+}
+
+/// One scheduled arrival for [`Coordinator::run_open_loop`]: the
+/// workload-generator output (`loadgen`) lowered to concrete dispatch
+/// material. Arrival ticks are virtual (the coordinator advances its
+/// virtual clock one quantum per engine step trace).
+#[derive(Clone, Debug)]
+pub struct OpenLoopRequest {
+    /// Absolute virtual arrival tick.
+    pub arrival_tick: u64,
+    /// Traffic class (SLO accounting only; does not affect scheduling).
+    pub class: TenantClass,
+    /// Prompt tokens (must respect the engines' prompt limit).
+    pub prompt: Vec<i32>,
+    /// Target output length; the dispatch caps `max_total` at
+    /// `prompt.len() + out_len` so EOS-free backends terminate exactly
+    /// there.
+    pub out_len: usize,
+}
+
+/// Output of one open-loop stage: one completed single-sample group per
+/// admitted request, the stage stats (SLO aggregates included), and the
+/// full SLO report.
+#[derive(Debug)]
+pub struct OpenLoopOutput {
+    /// Completed groups, one per admitted (non-shed) request, in
+    /// admission order.
+    pub groups: Vec<Group>,
+    /// Stage statistics with the open-loop SLO fields populated.
+    pub stats: RolloutStats,
+    /// The detailed SLO scoreboard for the run.
+    pub report: SloReport,
 }
 
 /// In-flight bookkeeping: trajectory + which engine has it + the
@@ -241,6 +289,11 @@ pub struct Coordinator {
     /// report per-stage deltas of the engines' lifetime counters.
     kv_base: Vec<EngineCounters>,
     next_traj_id: u64,
+    /// Per-trajectory total-length caps for open-loop requests, whose
+    /// sampled output lengths override the global `max_new_tokens` cap.
+    /// Consulted by `dispatch` (including preemption/failure
+    /// re-dispatches); populated and cleared by `run_open_loop`.
+    max_total_override: HashMap<u64, usize>,
     /// Current policy version (== trainer step); bumped by `sync_weights`.
     pub policy_version: u64,
     tokenizer: Tokenizer,
@@ -268,6 +321,7 @@ impl Coordinator {
             kv_seen: vec![EngineCounters::default(); engines],
             kv_base: vec![EngineCounters::default(); engines],
             next_traj_id: 0,
+            max_total_override: HashMap::new(),
             policy_version: 0,
             tokenizer: Tokenizer::new(),
             max_seq,
@@ -402,13 +456,20 @@ impl Coordinator {
                 homes.push(engine);
             }
         }
+        // Open-loop requests carry their own sampled length cap; everything
+        // else uses the global `max_new_tokens` policy.
+        let max_total = self
+            .max_total_override
+            .get(&traj.id)
+            .copied()
+            .unwrap_or_else(|| self.max_total_for(traj.prompt.len()));
         let item = WorkItem {
             request_id: traj.id,
             // Arc clone — re-dispatching a buffered partial shares the
             // prompt with the trajectory instead of deep-copying it.
             prompt: traj.prompt.clone(),
             resume: traj.tokens.clone(),
-            max_total: self.max_total_for(traj.prompt.len()),
+            max_total,
             sampling,
             retain,
             prefix,
@@ -728,7 +789,7 @@ impl Coordinator {
         }
         match &d.goal {
             StageGoal::Batch { b } => self.book.completed_count() >= *b,
-            StageGoal::Fixed => self.total_inflight() == 0,
+            StageGoal::Fixed | StageGoal::OpenLoop => self.total_inflight() == 0,
         }
     }
 
@@ -1220,6 +1281,213 @@ impl Coordinator {
             out.push(g);
         }
         Ok(out)
+    }
+
+    /// Recursive event pre-scan for the open-loop stage: advances the
+    /// virtual clock (one quantum per live engine step trace) and feeds
+    /// the SLO collector, WITHOUT consuming the event — `handle_event`
+    /// still runs afterwards. Mirrors `handle_event`'s dead-engine
+    /// discard so a buried engine's late results never double-finish a
+    /// request the pool already re-dispatched.
+    fn scan_open_loop_event(
+        ev: &EngineEvent,
+        quantum_ticks: u64,
+        dead: &[bool],
+        engine_steps: &mut [u64],
+        vnow: &mut u64,
+        idx_of_traj: &HashMap<u64, u64>,
+        collector: &mut SloCollector,
+    ) {
+        match ev {
+            EngineEvent::Batch(evs) => {
+                for e in evs {
+                    Self::scan_open_loop_event(
+                        e,
+                        quantum_ticks,
+                        dead,
+                        engine_steps,
+                        vnow,
+                        idx_of_traj,
+                        collector,
+                    );
+                }
+            }
+            EngineEvent::Trace(t) => {
+                if dead[t.engine] {
+                    return;
+                }
+                engine_steps[t.engine] += 1;
+                *vnow = (*vnow).max(engine_steps[t.engine] * quantum_ticks);
+            }
+            EngineEvent::Done { engine, result } => {
+                if dead[*engine] {
+                    return;
+                }
+                let Some(&idx) = idx_of_traj.get(&result.request_id) else { return };
+                collector.add_tokens(idx, result.new_tokens.len());
+                match result.reason {
+                    FinishReason::Eos | FinishReason::LengthCap => collector.on_finish(idx, *vnow),
+                    FinishReason::Preempted => collector.on_preempt(idx),
+                    FinishReason::Stopped => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Open-loop SLO stage over the live (threaded) engine pool: requests
+    /// from a pre-generated virtual-clock `schedule` flow through a
+    /// bounded admission queue (capacity `queue_cap`; fresh arrivals past
+    /// the bound are SHED — the structured overload signal) into normal
+    /// dispatch, capped at `rollout.concurrency` in flight. Runs as a
+    /// [`StageGoal::OpenLoop`] stage with inline preemption re-dispatch,
+    /// so preempted requests resume without touching the training buffer
+    /// and are never shed. The virtual clock advances `quantum_ticks` per
+    /// live engine step trace; arrival injection, admission, and SLO
+    /// timestamps all read it, never the wall clock.
+    ///
+    /// This arm trades the lockstep sim's bit-exact determinism
+    /// ([`crate::loadgen::sim`]) for real pool concurrency — engine
+    /// failures, supervision, and re-dispatch included — so its
+    /// guarantees are structural: every admitted request completes
+    /// exactly once, shed + completed = arrived, and the SLO report is
+    /// complete even when engines die mid-run.
+    pub fn run_open_loop(
+        &mut self,
+        schedule: &[OpenLoopRequest],
+        queue_cap: usize,
+        quantum_ticks: u64,
+        sampling: SamplingParams,
+    ) -> Result<OpenLoopOutput> {
+        ensure!(self.driver.is_none(), "run_open_loop with a stage active");
+        ensure!(self.inflight.is_empty(), "run_open_loop with work in flight");
+        ensure!(queue_cap > 0, "run_open_loop needs a non-zero queue cap");
+        ensure!(quantum_ticks > 0, "run_open_loop needs a non-zero quantum");
+        ensure!(
+            self.live_engines() > 0,
+            "rollout: degraded — no live engines (all {} failed in earlier stages)",
+            self.pool.engines()
+        );
+        ensure!(
+            schedule.windows(2).all(|w| w[0].arrival_tick <= w[1].arrival_tick),
+            "open-loop schedule must be sorted by arrival tick"
+        );
+        for r in schedule {
+            ensure!(!r.prompt.is_empty(), "open-loop request with empty prompt");
+            ensure!(r.out_len > 0, "open-loop request with zero out_len");
+        }
+        let policy = StagePolicy {
+            target: None,
+            continuous: false,
+            use_buffer: false,
+            drain: false,
+            until_idle: true,
+            inline_preempt: true,
+        };
+        self.driver = Some(StageDriver::new(StageGoal::OpenLoop, policy, sampling));
+        let t0 = Instant::now();
+        let target = self.cfg.rollout.concurrency.max(1);
+
+        let mut collector = SloCollector::new();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut idx_of_traj: HashMap<u64, u64> = HashMap::new();
+        let mut gids: Vec<u64> = Vec::new();
+        let mut engine_steps = vec![0u64; self.pool.engines()];
+        let mut vnow: u64 = 0;
+        let mut next_arr = 0usize;
+        let mut admitted = 0usize;
+
+        loop {
+            // Inject every arrival due by the virtual now; tail-drop past
+            // the queue bound.
+            while next_arr < schedule.len() && schedule[next_arr].arrival_tick <= vnow {
+                let idx = next_arr;
+                next_arr += 1;
+                let r = &schedule[idx];
+                collector.on_arrival(idx as u64, r.class, r.arrival_tick);
+                if queue.len() >= queue_cap {
+                    collector.on_shed(idx as u64);
+                } else {
+                    queue.push_back(idx);
+                }
+            }
+            collector.note_queue_depth(queue.len());
+
+            // Admit up to the concurrency target. Each admitted request is
+            // its own single-sample group; the stub task is never graded.
+            while !queue.is_empty() && self.total_inflight() < target {
+                let idx = queue.pop_front().unwrap();
+                let r = &schedule[idx];
+                let task = Task {
+                    family: Family::AddChain,
+                    level: 0,
+                    prompt: String::new(),
+                    answer: String::new(),
+                };
+                let gid = self.book.new_group(task.clone(), 1);
+                gids.push(gid);
+                self.book.note_dispatch(gid);
+                let id = self.next_traj_id;
+                self.next_traj_id += 1;
+                self.max_total_override.insert(id, (r.prompt.len() + r.out_len).min(self.max_seq));
+                idx_of_traj.insert(id, idx as u64);
+                let traj = Trajectory::new(id, gid, task, r.prompt.clone(), self.policy_version);
+                collector.on_dispatch(idx as u64, vnow);
+                self.dispatch(traj, sampling);
+                admitted += 1;
+            }
+
+            if next_arr >= schedule.len() && queue.is_empty() && self.total_inflight() == 0 {
+                break;
+            }
+            if self.total_inflight() == 0 && queue.is_empty() {
+                // Idle gap — fast-forward straight to the next arrival.
+                vnow = vnow.max(schedule[next_arr].arrival_tick);
+                continue;
+            }
+            if let Some(ev) = self.next_event(Instant::now() + PUMP_CHUNK)? {
+                Self::scan_open_loop_event(
+                    &ev,
+                    quantum_ticks,
+                    &self.dead,
+                    &mut engine_steps,
+                    &mut vnow,
+                    &idx_of_traj,
+                    &mut collector,
+                );
+                self.handle_event(ev, false)?;
+            }
+        }
+
+        let drv = self.driver.take().expect("open-loop driver active");
+        let mut stats = drv.stats;
+        stats.wall = t0.elapsed().as_secs_f64();
+        let report = collector.report(vnow.max(1));
+        stats.completed = report.completed;
+        stats.requests_arrived = report.arrived;
+        stats.requests_shed = report.shed;
+        stats.queue_depth_peak = report.queue_depth_peak;
+        stats.slo_e2e_p50_ticks = report.e2e_p50_ticks;
+        stats.slo_e2e_p99_ticks = report.e2e_p99_ticks;
+        stats.goodput_rps = report.goodput_rps;
+        self.max_total_override.clear();
+
+        // Conservation: exactly one completed group per admitted request.
+        let groups = self.book.take_groups(&gids);
+        ensure!(
+            groups.len() == admitted,
+            "open-loop run lost groups: {} of {admitted}",
+            groups.len()
+        );
+        for g in &groups {
+            ensure!(g.is_complete(), "open-loop group incomplete");
+        }
+        ensure!(
+            report.completed == admitted,
+            "open-loop completed {} != admitted {admitted}",
+            report.completed
+        );
+        Ok(OpenLoopOutput { groups, stats, report })
     }
 
     /// Buffered partial count (off-policy debt carried to the next stage).

@@ -233,6 +233,10 @@ pub struct StepTrace {
     /// The sampler SIMD arm this engine decodes with
     /// ([`super::SamplerDispatch::name`]: "scalar" / "avx2" / "avx512").
     pub sampler_dispatch: &'static str,
+    /// Work items still waiting for admission after this step — the
+    /// engine-local queue-depth gauge the open-loop SLO harness folds
+    /// into its backpressure accounting.
+    pub queued: usize,
 }
 
 /// Events flowing from engine threads back to the coordinator.
@@ -691,6 +695,21 @@ impl<B: Backend> Engine<B> {
         self.prefix_cache.len()
     }
 
+    /// Per-busy-slot generation progress: `(request_id, tokens generated
+    /// under the current assignment)`, replayed resume tokens excluded.
+    /// The lockstep SLO harness diffs consecutive snapshots to timestamp
+    /// token emission on its virtual clock (at most one new token per
+    /// decode lane per step).
+    pub fn slot_progress(&self) -> Vec<(u64, usize)> {
+        self.slots
+            .iter()
+            .filter_map(|s| match s {
+                SlotState::Busy(b) => Some((b.item.request_id, b.generated.len())),
+                _ => None,
+            })
+            .collect()
+    }
+
     /// Install `b` into slot `i`, maintaining the incremental counters.
     /// Residency is charged from the page table: `pos + 1` tokens for a
     /// decoding slot, the ingested span while chunked prefill is in
@@ -1096,6 +1115,7 @@ impl<B: Backend> Engine<B> {
             retries: self.retries,
             kv_bytes: self.kv.blocks_in_use() * self.kv_cfg.block_bytes(),
             sampler_dispatch: self.dispatch.name(),
+            queued: self.pending.len(),
         }));
         Ok(())
     }

@@ -91,6 +91,13 @@ pub struct RunSummary {
     pub retries: u64,
     /// Backend `retain_slot` errors swallowed at flush across the run.
     pub retain_errors: u64,
+    /// Open-loop arrivals observed across the run (0 for the closed-loop
+    /// training stages; populated when a stage runs under the SLO harness).
+    pub requests_arrived: usize,
+    /// Open-loop arrivals shed at the admission queue across the run.
+    pub requests_shed: usize,
+    /// Maximum admission-queue depth observed across the run.
+    pub queue_depth_peak: usize,
     pub reward_curve: Vec<f64>,
     pub entropy_curve: Vec<f64>,
 }
@@ -298,6 +305,9 @@ impl RlSession {
             summary.redispatched_trajectories += rs.redispatched_trajectories;
             summary.retries += rs.retries;
             summary.retain_errors += rs.retain_errors;
+            summary.requests_arrived += rs.requests_arrived;
+            summary.requests_shed += rs.requests_shed;
+            summary.queue_depth_peak = summary.queue_depth_peak.max(rs.queue_depth_peak);
             if rs.step_token_util > 0.0 {
                 step_util.push(rs.step_token_util);
             }

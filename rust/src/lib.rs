@@ -22,11 +22,14 @@
 //!   sync / naive-partial baselines.
 //! - [`trainer`] — GRPO with cross-stage importance-sampling correction.
 //! - [`exp`] — experiment drivers regenerating every paper table & figure.
+//! - [`loadgen`] — open-loop traffic generation (seeded Poisson/bursty
+//!   arrivals, heavy-tailed tenant mixes, virtual clock) and the SLO
+//!   scoreboard (TTFT/ITL percentiles, goodput, shed/preemption rates).
 //!
 //! `missing_docs` is enforced (warnings-as-errors under `scripts/ci.sh`'s
 //! rustdoc gate) for the module trees this repo's doc pass covers —
-//! [`coordinator`], [`engine`], [`trainer`], [`config`]; the remaining
-//! modules are explicitly allowed below until their pass lands.
+//! [`coordinator`], [`engine`], [`trainer`], [`config`], [`loadgen`]; the
+//! remaining modules are explicitly allowed below until their pass lands.
 
 #![warn(missing_docs)]
 
@@ -41,6 +44,7 @@ pub mod engine;
 pub mod eval;
 #[allow(missing_docs)]
 pub mod exp;
+pub mod loadgen;
 #[allow(missing_docs)]
 pub mod model;
 #[allow(missing_docs)]

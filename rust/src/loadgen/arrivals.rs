@@ -1,0 +1,157 @@
+//! Seeded open-loop arrival processes on the virtual clock.
+//!
+//! Open-loop means arrivals do not wait for the system: the schedule is
+//! fixed up front by the process + seed, and a slow scheduler simply
+//! builds queue depth (or sheds) instead of silently throttling the
+//! workload — the property that makes tail-latency numbers honest.
+//! Both processes are generated from the deterministic [`crate::util::Rng`]
+//! and quantized to whole ticks, so a `(process, seed)` pair replays a
+//! byte-identical schedule on every host and profile.
+
+use super::clock::TICKS_PER_SEC;
+use crate::util::Rng;
+
+/// Which arrival process generates the request schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless Poisson arrivals: exponential inter-arrival gaps with
+    /// mean `1/rate_rps` virtual seconds.
+    Poisson {
+        /// Mean arrival rate in requests per virtual second.
+        rate_rps: f64,
+    },
+    /// Interrupted-Poisson bursty arrivals: a square wave alternates ON
+    /// phases (Poisson at a peak rate) and OFF phases (silence). The peak
+    /// rate is scaled by `(on + off) / on` so the long-run average stays
+    /// `rate_rps` — bursty and Poisson runs are load-comparable.
+    Bursty {
+        /// Long-run mean arrival rate in requests per virtual second.
+        rate_rps: f64,
+        /// ON-phase length in ticks (arrivals flow).
+        on_ticks: u64,
+        /// OFF-phase length in ticks (no arrivals).
+        off_ticks: u64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Canonical lowercase name (bench row labels, CLI echo).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+        }
+    }
+}
+
+/// Seeded generator of strictly increasing absolute arrival ticks.
+#[derive(Clone, Debug)]
+pub struct ArrivalGen {
+    process: ArrivalProcess,
+    rng: Rng,
+    cursor: u64,
+}
+
+impl ArrivalGen {
+    /// New generator; an identical `(process, seed)` pair replays an
+    /// identical schedule. Rates must be positive and the bursty ON
+    /// phase non-empty.
+    pub fn new(process: ArrivalProcess, seed: u64) -> ArrivalGen {
+        match process {
+            ArrivalProcess::Poisson { rate_rps } => {
+                assert!(rate_rps > 0.0, "poisson rate_rps must be > 0");
+            }
+            ArrivalProcess::Bursty { rate_rps, on_ticks, .. } => {
+                assert!(rate_rps > 0.0, "bursty rate_rps must be > 0");
+                assert!(on_ticks > 0, "bursty on_ticks must be > 0");
+            }
+        }
+        ArrivalGen { process, rng: Rng::new(seed).fork(0xA221_7A1), cursor: 0 }
+    }
+
+    /// One exponential inter-arrival gap at `rate_rps`, quantized to a
+    /// whole number of ticks and clamped to >= 1 so the cursor strictly
+    /// increases (generation always terminates).
+    fn exp_ticks(rng: &mut Rng, rate_rps: f64) -> u64 {
+        let mean_ticks = TICKS_PER_SEC as f64 / rate_rps;
+        let u = rng.next_f64(); // [0, 1) — ln(1 - u) is finite
+        let dt = -(1.0 - u).ln() * mean_ticks;
+        (dt.round() as u64).max(1)
+    }
+
+    /// Absolute tick of the next arrival (strictly increasing).
+    pub fn next_arrival(&mut self) -> u64 {
+        match self.process {
+            ArrivalProcess::Poisson { rate_rps } => {
+                self.cursor += Self::exp_ticks(&mut self.rng, rate_rps);
+            }
+            ArrivalProcess::Bursty { rate_rps, on_ticks, off_ticks } => {
+                // Thinning for the inhomogeneous process: draw candidates
+                // at the peak ON rate everywhere and keep only those that
+                // land in an ON phase (acceptance probability 0 in OFF).
+                // Every candidate advances the cursor by >= 1 tick, so the
+                // loop cannot livelock.
+                let period = on_ticks + off_ticks;
+                let peak = rate_rps * period as f64 / on_ticks as f64;
+                loop {
+                    self.cursor += Self::exp_ticks(&mut self.rng, peak);
+                    if self.cursor % period < on_ticks {
+                        break;
+                    }
+                }
+            }
+        }
+        self.cursor
+    }
+
+    /// The next `n` arrival ticks as a schedule.
+    pub fn schedule(&mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.next_arrival()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_same_seed_replays_identically() {
+        let p = ArrivalProcess::Poisson { rate_rps: 500.0 };
+        let a = ArrivalGen::new(p, 7).schedule(2000);
+        let b = ArrivalGen::new(p, 7).schedule(2000);
+        assert_eq!(a, b);
+        let c = ArrivalGen::new(p, 8).schedule(2000);
+        assert_ne!(a, c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn poisson_is_strictly_increasing_with_sane_mean() {
+        let p = ArrivalProcess::Poisson { rate_rps: 1000.0 };
+        let ticks = ArrivalGen::new(p, 42).schedule(4000);
+        for w in ticks.windows(2) {
+            assert!(w[1] > w[0], "arrival ticks must strictly increase");
+        }
+        // Mean gap should be near 1e6/1000 = 1000 ticks (generous ±15%).
+        let mean = ticks[ticks.len() - 1] as f64 / ticks.len() as f64;
+        assert!((mean - 1000.0).abs() < 150.0, "mean gap {mean} far from 1000");
+    }
+
+    #[test]
+    fn bursty_respects_off_phases_and_long_run_rate() {
+        let p = ArrivalProcess::Bursty {
+            rate_rps: 1000.0,
+            on_ticks: 20_000,
+            off_ticks: 80_000,
+        };
+        let ticks = ArrivalGen::new(p, 3).schedule(4000);
+        for &t in &ticks {
+            assert!(t % 100_000 < 20_000, "arrival at {t} lands in an OFF phase");
+        }
+        for w in ticks.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        // Long-run average preserved: mean gap ~ 1000 ticks (±20%).
+        let mean = ticks[ticks.len() - 1] as f64 / ticks.len() as f64;
+        assert!((mean - 1000.0).abs() < 200.0, "long-run mean gap {mean} far from 1000");
+    }
+}

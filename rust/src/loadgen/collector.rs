@@ -1,0 +1,298 @@
+//! SLO metrics collection: per-request lifecycle ledger → percentile
+//! report.
+//!
+//! The collector is timestamp-agnostic: callers feed it virtual-clock
+//! ticks (the lockstep sim, which can timestamp every token) or coarser
+//! completion ticks (the threaded coordinator path, which sees tokens
+//! only at finish). All latencies are integer tick counts rendered as
+//! `f64`, so a fixed-seed run produces bit-identical percentiles — the
+//! property the `deterministic` bench rows and `scripts/ci.sh --slo`
+//! double-run diff gate on.
+
+use std::collections::HashMap;
+
+use super::clock::TICKS_PER_SEC;
+use super::tenants::TenantClass;
+use crate::util::stats;
+
+/// Lifecycle ledger for one open-loop request.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    /// Request id (harness-scoped, unique per run).
+    pub id: u64,
+    /// Traffic class.
+    pub class: TenantClass,
+    /// Arrival tick.
+    pub arrival: u64,
+    /// First-dispatch tick; `None` while queued or if shed.
+    pub dispatched: Option<u64>,
+    /// First generated-token tick (TTFT anchor).
+    pub first_token: Option<u64>,
+    /// Most recent generated-token tick (ITL anchor).
+    pub last_token: Option<u64>,
+    /// Completion tick.
+    pub finished: Option<u64>,
+    /// Generated tokens observed.
+    pub tokens: usize,
+    /// Times the request was preempted after dispatch.
+    pub preemptions: u32,
+    /// Shed at admission (bounded queue full; never dispatched).
+    pub shed: bool,
+}
+
+/// Accumulates request lifecycles and inter-token gaps for one run.
+#[derive(Clone, Debug, Default)]
+pub struct SloCollector {
+    records: Vec<RequestRecord>,
+    index: HashMap<u64, usize>,
+    itl_ticks: Vec<f64>,
+    queue_depth_peak: usize,
+}
+
+impl SloCollector {
+    /// Empty collector.
+    pub fn new() -> SloCollector {
+        SloCollector::default()
+    }
+
+    fn rec(&mut self, id: u64) -> &mut RequestRecord {
+        let i = *self.index.get(&id).expect("slo: event for unknown request id");
+        &mut self.records[i]
+    }
+
+    /// A request arrived at `tick`. Must precede every other event for
+    /// `id`.
+    pub fn on_arrival(&mut self, id: u64, class: TenantClass, tick: u64) {
+        let i = self.records.len();
+        assert!(self.index.insert(id, i).is_none(), "slo: duplicate arrival for {id}");
+        self.records.push(RequestRecord {
+            id,
+            class,
+            arrival: tick,
+            dispatched: None,
+            first_token: None,
+            last_token: None,
+            finished: None,
+            tokens: 0,
+            preemptions: 0,
+            shed: false,
+        });
+    }
+
+    /// The request was shed at admission (queue full) — the structured
+    /// overload signal.
+    pub fn on_shed(&mut self, id: u64) {
+        let r = self.rec(id);
+        assert!(r.dispatched.is_none(), "slo: shed after dispatch for {id}");
+        r.shed = true;
+    }
+
+    /// The request was handed to an engine (first dispatch only; resumes
+    /// after preemption do not reset it).
+    pub fn on_dispatch(&mut self, id: u64, tick: u64) {
+        let r = self.rec(id);
+        if r.dispatched.is_none() {
+            r.dispatched = Some(tick);
+        }
+    }
+
+    /// One newly generated token was observed at `tick`. The first call
+    /// anchors TTFT; later calls record inter-token gaps (which span
+    /// preemption stalls — that is the point).
+    pub fn on_token(&mut self, id: u64, tick: u64) {
+        let prev = {
+            let r = self.rec(id);
+            let prev = r.last_token;
+            if prev.is_none() {
+                r.first_token = Some(tick);
+            }
+            r.last_token = Some(tick);
+            r.tokens += 1;
+            prev
+        };
+        if let Some(p) = prev {
+            self.itl_ticks.push(tick.saturating_sub(p) as f64);
+        }
+    }
+
+    /// Count `n` tokens without timing (coordinator path: the token batch
+    /// is only visible at completion, so no TTFT/ITL anchors are set).
+    pub fn add_tokens(&mut self, id: u64, n: usize) {
+        self.rec(id).tokens += n;
+    }
+
+    /// The request was preempted (it will be re-queued and resumed).
+    pub fn on_preempt(&mut self, id: u64) {
+        self.rec(id).preemptions += 1;
+    }
+
+    /// The request completed at `tick`.
+    pub fn on_finish(&mut self, id: u64, tick: u64) {
+        let r = self.rec(id);
+        assert!(!r.shed, "slo: finish for shed request {id}");
+        assert!(r.finished.is_none(), "slo: duplicate finish for {id}");
+        r.finished = Some(tick);
+    }
+
+    /// Record the admission-queue depth after an injection round.
+    pub fn note_queue_depth(&mut self, depth: usize) {
+        self.queue_depth_peak = self.queue_depth_peak.max(depth);
+    }
+
+    /// All request records, in arrival order.
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// Aggregate the ledger into an [`SloReport`] over `horizon_ticks`
+    /// of virtual time (used to normalize goodput).
+    pub fn report(&self, horizon_ticks: u64) -> SloReport {
+        let pct = |xs: &[f64], q: f64| if xs.is_empty() { 0.0 } else { stats::percentile(xs, q) };
+        let ttft: Vec<f64> = self
+            .records
+            .iter()
+            .filter_map(|r| r.first_token.map(|t| (t - r.arrival) as f64))
+            .collect();
+        let e2e: Vec<f64> = self
+            .records
+            .iter()
+            .filter_map(|r| r.finished.map(|t| (t - r.arrival) as f64))
+            .collect();
+        let arrived = self.records.len();
+        let shed = self.records.iter().filter(|r| r.shed).count();
+        let completed = e2e.len();
+        let completed_interactive = self
+            .records
+            .iter()
+            .filter(|r| r.finished.is_some() && r.class == TenantClass::Interactive)
+            .count();
+        let tokens_out: usize = self.records.iter().map(|r| r.tokens).sum();
+        let preemptions: u64 = self.records.iter().map(|r| r.preemptions as u64).sum();
+        let horizon_s = horizon_ticks.max(1) as f64 / TICKS_PER_SEC as f64;
+        SloReport {
+            arrived,
+            shed,
+            completed,
+            completed_interactive,
+            completed_bulk: completed - completed_interactive,
+            tokens_out,
+            ttft_p50_ticks: pct(&ttft, 0.50),
+            ttft_p99_ticks: pct(&ttft, 0.99),
+            itl_p50_ticks: pct(&self.itl_ticks, 0.50),
+            itl_p99_ticks: pct(&self.itl_ticks, 0.99),
+            e2e_p50_ticks: pct(&e2e, 0.50),
+            e2e_p99_ticks: pct(&e2e, 0.99),
+            goodput_rps: completed as f64 / horizon_s,
+            shed_rate: if arrived == 0 { 0.0 } else { shed as f64 / arrived as f64 },
+            preemption_rate: if completed == 0 {
+                0.0
+            } else {
+                preemptions as f64 / completed as f64
+            },
+            preemptions,
+            queue_depth_peak: self.queue_depth_peak,
+            horizon_ticks,
+        }
+    }
+}
+
+/// Aggregated SLO scoreboard for one open-loop run. All percentile
+/// fields are virtual ticks (1 tick = 1 µs); zero when the underlying
+/// series is empty (e.g. ITL on the coordinator path).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloReport {
+    /// Requests that arrived.
+    pub arrived: usize,
+    /// Requests shed at admission (bounded-queue tail drop).
+    pub shed: usize,
+    /// Requests that completed.
+    pub completed: usize,
+    /// Interactive-class completions.
+    pub completed_interactive: usize,
+    /// Bulk-class completions.
+    pub completed_bulk: usize,
+    /// Generated tokens across all requests.
+    pub tokens_out: usize,
+    /// Time-to-first-token p50.
+    pub ttft_p50_ticks: f64,
+    /// Time-to-first-token p99.
+    pub ttft_p99_ticks: f64,
+    /// Inter-token latency p50.
+    pub itl_p50_ticks: f64,
+    /// Inter-token latency p99 (spans preemption stalls).
+    pub itl_p99_ticks: f64,
+    /// End-to-end (arrival → finish) latency p50.
+    pub e2e_p50_ticks: f64,
+    /// End-to-end latency p99.
+    pub e2e_p99_ticks: f64,
+    /// Completed requests per virtual second over the horizon.
+    pub goodput_rps: f64,
+    /// Shed fraction of arrivals.
+    pub shed_rate: f64,
+    /// Preemptions per completed request.
+    pub preemption_rate: f64,
+    /// Total preemption events.
+    pub preemptions: u64,
+    /// Peak admission-queue depth observed.
+    pub queue_depth_peak: usize,
+    /// Virtual horizon goodput was normalized over.
+    pub horizon_ticks: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_to_report_basic_flow() {
+        let mut c = SloCollector::new();
+        c.on_arrival(1, TenantClass::Interactive, 100);
+        c.on_dispatch(1, 150);
+        c.on_token(1, 200); // TTFT = 100
+        c.on_token(1, 260); // ITL = 60
+        c.on_token(1, 300); // ITL = 40
+        c.on_finish(1, 300);
+        c.on_arrival(2, TenantClass::Bulk, 120);
+        c.on_shed(2);
+        c.note_queue_depth(3);
+        c.note_queue_depth(1);
+        let r = c.report(TICKS_PER_SEC); // 1 virtual second
+        assert_eq!(r.arrived, 2);
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.completed_interactive, 1);
+        assert_eq!(r.completed_bulk, 0);
+        assert_eq!(r.tokens_out, 3);
+        assert_eq!(r.ttft_p50_ticks, 100.0);
+        assert_eq!(r.itl_p50_ticks, 50.0);
+        assert_eq!(r.e2e_p99_ticks, 200.0);
+        assert_eq!(r.goodput_rps, 1.0);
+        assert_eq!(r.shed_rate, 0.5);
+        assert_eq!(r.queue_depth_peak, 3);
+    }
+
+    #[test]
+    fn preemption_gap_lands_in_itl_tail() {
+        let mut c = SloCollector::new();
+        c.on_arrival(7, TenantClass::Bulk, 0);
+        c.on_dispatch(7, 0);
+        c.on_token(7, 10);
+        c.on_preempt(7);
+        c.on_token(7, 510); // 500-tick stall across the preemption
+        c.on_finish(7, 510);
+        let r = c.report(1000);
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.preemption_rate, 1.0);
+        assert_eq!(r.itl_p99_ticks, 500.0);
+    }
+
+    #[test]
+    fn empty_series_report_is_all_zeros() {
+        let r = SloCollector::new().report(1000);
+        assert_eq!(r.arrived, 0);
+        assert_eq!(r.ttft_p99_ticks, 0.0);
+        assert_eq!(r.itl_p50_ticks, 0.0);
+        assert_eq!(r.goodput_rps, 0.0);
+        assert_eq!(r.shed_rate, 0.0);
+    }
+}

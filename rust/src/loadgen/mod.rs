@@ -1,0 +1,40 @@
+//! Open-loop traffic generation and SLO accounting.
+//!
+//! Every other harness in the repo is closed-loop: a fixed batch is
+//! dispatched and drained, so the system's own speed sets the offered
+//! load and tail latency is unobservable. This module supplies the
+//! missing scoreboard — the open-loop, SLO-measured evaluation RollPacker
+//! and Laminar use and that CoPRIS's long-tail-mitigation claim is only
+//! meaningful against:
+//!
+//! - [`clock`] — the virtual clock (ticks = virtual µs) that removes
+//!   wall time entirely, making fixed-seed runs bit-deterministic;
+//! - [`arrivals`] — seeded Poisson and interrupted-Poisson (bursty)
+//!   arrival schedules;
+//! - [`lengths`] — bounded-Pareto heavy-tailed length sampling with
+//!   analytic quantiles/mean for property testing;
+//! - [`tenants`] — the interactive-eval vs bulk-rollout traffic mix;
+//! - [`collector`] — the per-request lifecycle ledger aggregated into
+//!   TTFT/ITL/e2e percentiles, goodput, shed and preemption rates;
+//! - [`sim`] — the single-threaded lockstep simulator tier-1 and
+//!   `benches/slo_harness.rs` run.
+//!
+//! The threaded counterpart lives in
+//! [`Coordinator::run_open_loop`](crate::coordinator::Coordinator::run_open_loop),
+//! which drives the real engine pool (including fault injection) off the
+//! same schedule types with structural rather than bit-exact guarantees.
+//! See docs/ARCHITECTURE.md §"Open-loop load and SLO accounting".
+
+pub mod arrivals;
+pub mod clock;
+pub mod collector;
+pub mod lengths;
+pub mod sim;
+pub mod tenants;
+
+pub use arrivals::{ArrivalGen, ArrivalProcess};
+pub use clock::{VirtualClock, TICKS_PER_SEC};
+pub use collector::{RequestRecord, SloCollector, SloReport};
+pub use lengths::BoundedPareto;
+pub use sim::{run_sim, SimConfig, SimResult};
+pub use tenants::{RequestSpec, TenantClass, TenantMix, TenantProfile};

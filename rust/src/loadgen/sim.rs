@@ -1,0 +1,394 @@
+//! Single-threaded lockstep open-loop simulation.
+//!
+//! This is the bit-deterministic arm of the harness: a pool of
+//! [`Engine`]s over [`MockBackend`]s stepped in lockstep on the
+//! [`VirtualClock`] (one round = one configured quantum), fed by a
+//! seeded arrival schedule through a bounded admission queue. Because
+//! there are no threads and no wall-clock reads, a fixed
+//! [`SimConfig`] replays the exact same token-by-token schedule — and
+//! therefore the exact same [`SloReport`] — on every run, every host,
+//! and every build profile. The threaded coordinator path
+//! (`Coordinator::run_open_loop`) trades that bit-exactness for real
+//! concurrency; tier-1 and the bench gate use this one.
+//!
+//! Output lengths are enforced exactly: the mock's scripted EOS length
+//! is pinned above every sampled output length (`min_len` past the mix
+//! maximum, `spread` 1), so each request terminates by `LengthCap` at
+//! precisely `prompt_len + out_len` tokens — including across
+//! preemptions, since the cap counts prompt + resume + new tokens.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use super::arrivals::{ArrivalGen, ArrivalProcess};
+use super::clock::VirtualClock;
+use super::collector::{SloCollector, SloReport};
+use super::tenants::{RequestSpec, TenantMix};
+use crate::engine::{
+    Engine, EngineEvent, EngineOpts, FinishReason, KvCacheConfig, MockBackend, SamplingParams,
+    WorkItem,
+};
+use crate::util::Rng;
+
+/// Configuration of one lockstep open-loop run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Engines stepped in lockstep.
+    pub engines: usize,
+    /// Decode slots per engine.
+    pub slots: usize,
+    /// Per-engine KV budget in blocks (0 = unlimited) — the pressure
+    /// source for shedding/preemption scenarios.
+    pub kv_budget_blocks: usize,
+    /// Tokens per KV block.
+    pub kv_block_size: usize,
+    /// Continuous-batching step-token budget (0 = legacy slot admission).
+    pub step_token_budget: usize,
+    /// Admission-queue capacity; fresh arrivals beyond it are shed (tail
+    /// drop). Preempted resumes re-queue at the FRONT and are never shed.
+    pub queue_cap: usize,
+    /// Virtual ticks one lockstep engine round costs.
+    pub quantum_ticks: u64,
+    /// Total arrivals to generate.
+    pub requests: usize,
+    /// Master seed (arrival schedule, tenant mix, engine RNGs).
+    pub seed: u64,
+    /// Arrival process.
+    pub process: ArrivalProcess,
+    /// Tenant mix requests are sampled from.
+    pub mix: TenantMix,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            engines: 2,
+            slots: 4,
+            kv_budget_blocks: 0,
+            kv_block_size: 16,
+            step_token_budget: 0,
+            queue_cap: 64,
+            quantum_ticks: 1_000,
+            requests: 200,
+            seed: 0,
+            process: ArrivalProcess::Poisson { rate_rps: 200.0 },
+            mix: TenantMix::default_mix(0.5),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Build a sim config from the typed [`Config`](crate::config::Config)
+    /// `[workload]` section (plus the engine-pool KV knobs), so the
+    /// `copris slo` subcommand and the bench rows share one mapping.
+    pub fn from_config(cfg: &crate::config::Config) -> SimConfig {
+        use crate::config::WorkloadKind;
+        let w = &cfg.workload;
+        let process = match w.kind {
+            WorkloadKind::Poisson => ArrivalProcess::Poisson { rate_rps: w.rate_rps },
+            WorkloadKind::Bursty => ArrivalProcess::Bursty {
+                rate_rps: w.rate_rps,
+                on_ticks: w.burst_on_ms * 1_000,
+                off_ticks: w.burst_off_ms * 1_000,
+            },
+        };
+        SimConfig {
+            engines: cfg.engine.engines.max(1),
+            slots: w.slots_per_engine,
+            kv_budget_blocks: cfg.engine.budget_blocks(),
+            kv_block_size: cfg.engine.kv_block_size,
+            step_token_budget: cfg.engine.step_token_budget,
+            queue_cap: w.queue_cap,
+            quantum_ticks: w.quantum_us,
+            requests: w.requests,
+            seed: cfg.train.seed,
+            process,
+            mix: TenantMix::default_mix(w.interactive_share),
+        }
+    }
+}
+
+/// Result of a lockstep run: the SLO scoreboard plus run-shape counters.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// The SLO report over the run's virtual horizon.
+    pub report: SloReport,
+    /// Lockstep engine rounds executed.
+    pub rounds: u64,
+    /// Final virtual tick.
+    pub end_tick: u64,
+    /// Sum of per-engine live-slot preemption counters (engine view;
+    /// should equal `report.preemptions`).
+    pub engine_preemptions: u64,
+    /// Every non-shed arrival completed before the round cap (false only
+    /// if the safety cap tripped — a livelock, which tests treat as a
+    /// failure).
+    pub completed_all: bool,
+}
+
+/// A queued (or re-queued) request waiting for an engine slot.
+struct Queued {
+    id: u64,
+    prompt: Arc<[i32]>,
+    resume: Vec<i32>,
+    max_total: usize,
+}
+
+/// Run one lockstep open-loop simulation to completion.
+pub fn run_sim(cfg: &SimConfig) -> SimResult {
+    assert!(cfg.engines > 0 && cfg.slots > 0, "sim needs engines and slots");
+    assert!(cfg.queue_cap > 0, "sim needs a non-zero admission queue");
+    assert!(cfg.quantum_ticks > 0, "sim needs a non-zero round quantum");
+
+    // Seed fan-out: independent streams for arrivals and the tenant mix
+    // so changing one knob cannot silently reshuffle the other.
+    let mut root = Rng::new(cfg.seed);
+    let mut gen = ArrivalGen::new(cfg.process, root.next_u64());
+    let mut mix_rng = root.fork(0x7E4A);
+
+    // The full arrival schedule up front — open loop means the workload
+    // never reacts to the system.
+    let schedule: Vec<(u64, RequestSpec)> =
+        (0..cfg.requests).map(|_| (gen.next_arrival(), cfg.mix.sample(&mut mix_rng))).collect();
+
+    // Engines sized so no sampled request can violate submit()'s
+    // invariants, with EOS pushed past every sampled output length so the
+    // LengthCap is the only terminator (exact output lengths).
+    let backend_max_seq = cfg.mix.max_total() + 8;
+    let mut engines: Vec<Engine<MockBackend>> = (0..cfg.engines)
+        .map(|id| {
+            let mut b = MockBackend::new(cfg.slots, backend_max_seq);
+            b.p_max = cfg.mix.max_prompt();
+            b.min_len = cfg.mix.max_output() + 1;
+            b.spread = 1;
+            let opts = EngineOpts {
+                kv: KvCacheConfig {
+                    block_size: cfg.kv_block_size,
+                    budget_blocks: cfg.kv_budget_blocks,
+                    prefix_sharing: false,
+                    ..KvCacheConfig::default()
+                },
+                step_token_budget: cfg.step_token_budget,
+            };
+            let seed = cfg.seed ^ (id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            Engine::with_opts(id, b, opts, seed)
+        })
+        .collect();
+
+    let mut clock = VirtualClock::new();
+    let mut collector = SloCollector::new();
+    let mut queue: VecDeque<Queued> = VecDeque::new();
+    // Per-assignment generated-token counts (diffed for emission ticks)
+    // and tokens accumulated across preemptions (the resume prefix).
+    let mut progress: HashMap<u64, usize> = HashMap::new();
+    let mut acc: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut meta: HashMap<u64, (Arc<[i32]>, usize)> = HashMap::new();
+
+    let mut next_arr = 0usize;
+    let mut rounds = 0u64;
+    let mut inflight = 0usize; // admitted (queued or on an engine), not yet finished
+    let round_cap = 1_000 + cfg.requests as u64 * (cfg.mix.max_total() as u64 + 8) * 4;
+    let mut events: Vec<EngineEvent> = Vec::new();
+
+    loop {
+        // 1. Inject every arrival due by now; shed past the queue bound.
+        while next_arr < schedule.len() && schedule[next_arr].0 <= clock.now() {
+            let (tick, spec) = schedule[next_arr];
+            let id = next_arr as u64;
+            next_arr += 1;
+            collector.on_arrival(id, spec.class, tick);
+            if queue.len() >= cfg.queue_cap {
+                collector.on_shed(id);
+                continue;
+            }
+            let prompt: Arc<[i32]> = (0..spec.prompt_len)
+                .map(|t| 1 + ((id as usize + t) % 40) as i32)
+                .collect::<Vec<i32>>()
+                .into();
+            let max_total = spec.prompt_len + spec.out_len;
+            meta.insert(id, (prompt.clone(), max_total));
+            queue.push_back(Queued { id, prompt, resume: Vec::new(), max_total });
+            inflight += 1;
+        }
+        collector.note_queue_depth(queue.len());
+
+        // 2. Admit: feed least-loaded engines one pending item at a time;
+        // an engine whose own admission is backpressured (queued() > 0,
+        // e.g. KV-budget headroom) is skipped, which is exactly the
+        // bounded-backpressure path.
+        while !queue.is_empty() {
+            let target = engines
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.free_slots() > 0 && e.queued() == 0)
+                .min_by_key(|(i, e)| (e.busy(), *i))
+                .map(|(i, _)| i);
+            let Some(ei) = target else { break };
+            let q = queue.pop_front().unwrap();
+            collector.on_dispatch(q.id, clock.now());
+            engines[ei]
+                .submit(WorkItem {
+                    request_id: q.id,
+                    prompt: q.prompt,
+                    resume: q.resume,
+                    max_total: q.max_total,
+                    sampling: SamplingParams::greedy(),
+                    retain: None,
+                    prefix: None,
+                })
+                .expect("sim sized the backend for every sampled request");
+        }
+
+        // 3. Idle? Fast-forward to the next arrival or finish.
+        let any_work = engines.iter().any(|e| e.has_work());
+        if !any_work && queue.is_empty() {
+            if next_arr >= schedule.len() {
+                break;
+            }
+            clock.advance_to(schedule[next_arr].0);
+            continue;
+        }
+
+        // 4. One lockstep round: the quantum elapses, every engine with
+        // work takes one step, and newly generated tokens are stamped at
+        // the round boundary.
+        clock.advance(cfg.quantum_ticks);
+        rounds += 1;
+        let now = clock.now();
+        for e in engines.iter_mut() {
+            if !e.has_work() {
+                continue;
+            }
+            events.clear();
+            e.step(&mut events).expect("mock engine step cannot fail");
+            for (rid, len) in e.slot_progress() {
+                let prev = progress.get(&rid).copied().unwrap_or(0);
+                for _ in prev..len {
+                    collector.on_token(rid, now);
+                }
+                if len > prev {
+                    progress.insert(rid, len);
+                }
+            }
+            for ev in events.drain(..) {
+                let EngineEvent::Done { result, .. } = ev else { continue };
+                let rid = result.request_id;
+                let prev = progress.remove(&rid).unwrap_or(0);
+                for _ in prev..result.new_tokens.len() {
+                    collector.on_token(rid, now);
+                }
+                let stored = acc.entry(rid).or_default();
+                stored.extend_from_slice(&result.new_tokens);
+                match result.reason {
+                    FinishReason::Eos | FinishReason::LengthCap => {
+                        let (prompt, max_total) = &meta[&rid];
+                        debug_assert_eq!(
+                            prompt.len() + acc[&rid].len(),
+                            *max_total,
+                            "LengthCap must terminate at exactly the sampled length"
+                        );
+                        collector.on_finish(rid, now);
+                        inflight -= 1;
+                    }
+                    FinishReason::Preempted => {
+                        collector.on_preempt(rid);
+                        let (prompt, max_total) = meta[&rid].clone();
+                        // Front of the queue: preempted work is never
+                        // shed and resumes before fresh arrivals.
+                        queue.push_front(Queued {
+                            id: rid,
+                            prompt,
+                            resume: acc[&rid].clone(),
+                            max_total,
+                        });
+                    }
+                    FinishReason::Stopped => {
+                        unreachable!("sim never issues StopGeneration")
+                    }
+                }
+            }
+        }
+
+        if rounds >= round_cap {
+            break; // livelock safety valve; surfaces as !completed_all
+        }
+    }
+
+    let report = collector.report(clock.now().max(1));
+    let engine_preemptions: u64 = engines.iter().map(|e| e.preemptions()).sum();
+    let completed_all = inflight == 0 && report.completed + report.shed == report.arrived;
+    SimResult { report, rounds, end_tick: clock.now(), engine_preemptions, completed_all }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unloaded_run_completes_everything_unshed() {
+        let cfg = SimConfig {
+            requests: 60,
+            process: ArrivalProcess::Poisson { rate_rps: 50.0 },
+            ..SimConfig::default()
+        };
+        let r = run_sim(&cfg);
+        assert!(r.completed_all);
+        assert_eq!(r.report.arrived, 60);
+        assert_eq!(r.report.shed, 0);
+        assert_eq!(r.report.completed, 60);
+        assert!(r.report.ttft_p50_ticks > 0.0);
+        assert!(r.report.goodput_rps > 0.0);
+    }
+
+    #[test]
+    fn same_seed_replays_bit_identically() {
+        let cfg = SimConfig { requests: 120, seed: 9, ..SimConfig::default() };
+        let a = run_sim(&cfg);
+        let b = run_sim(&cfg);
+        assert_eq!(a.report, b.report);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.end_tick, b.end_tick);
+    }
+
+    #[test]
+    fn from_config_maps_the_workload_section() {
+        let mut c = crate::config::Config::new("tiny");
+        c.set("workload.process", "bursty").unwrap();
+        c.set("workload.rate_rps", "800").unwrap();
+        c.set("workload.burst_on_ms", "5").unwrap();
+        c.set("workload.burst_off_ms", "15").unwrap();
+        c.set("workload.requests", "42").unwrap();
+        c.set("workload.queue_cap", "7").unwrap();
+        c.set("workload.quantum_us", "250").unwrap();
+        c.set("workload.slots_per_engine", "3").unwrap();
+        c.set("train.seed", "11").unwrap();
+        let s = SimConfig::from_config(&c);
+        assert_eq!(
+            s.process,
+            ArrivalProcess::Bursty { rate_rps: 800.0, on_ticks: 5_000, off_ticks: 15_000 }
+        );
+        assert_eq!(s.requests, 42);
+        assert_eq!(s.queue_cap, 7);
+        assert_eq!(s.quantum_ticks, 250);
+        assert_eq!(s.slots, 3);
+        assert_eq!(s.seed, 11);
+        assert_eq!(s.engines, c.engine.engines);
+    }
+
+    #[test]
+    fn overload_sheds_but_conserves_every_request() {
+        let cfg = SimConfig {
+            engines: 1,
+            slots: 2,
+            queue_cap: 4,
+            requests: 150,
+            process: ArrivalProcess::Poisson { rate_rps: 5_000.0 },
+            ..SimConfig::default()
+        };
+        let r = run_sim(&cfg);
+        assert!(r.completed_all, "bounded queue must not deadlock under overload");
+        assert!(r.report.shed > 0, "sustained overload over a 4-deep queue must shed");
+        assert_eq!(r.report.completed + r.report.shed, r.report.arrived);
+        assert!(r.report.queue_depth_peak <= 4);
+    }
+}

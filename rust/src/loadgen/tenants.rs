@@ -1,0 +1,166 @@
+//! Tenant classes: interactive-eval vs bulk-rollout traffic.
+//!
+//! RL post-training gateways serve two very different tenants at once —
+//! small latency-sensitive eval/interactive probes and heavy-tailed bulk
+//! rollout generation. The mix matters: bulk stragglers are what evict
+//! and preempt interactive work, which is exactly the contention the SLO
+//! harness is supposed to expose.
+
+use super::lengths::BoundedPareto;
+use crate::util::Rng;
+
+/// Traffic class a request belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TenantClass {
+    /// Latency-sensitive interactive/eval traffic: short prompts, short
+    /// bounded outputs.
+    Interactive,
+    /// Throughput-oriented bulk rollout traffic: heavier-tailed prompts
+    /// and long-tailed outputs.
+    Bulk,
+}
+
+impl TenantClass {
+    /// Canonical lowercase name (report rows, JSONL fields).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantClass::Interactive => "interactive",
+            TenantClass::Bulk => "bulk",
+        }
+    }
+}
+
+/// Per-class prompt/output length profile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantProfile {
+    /// Prompt-length distribution (tokens).
+    pub prompt: BoundedPareto,
+    /// Output-length distribution (tokens); enforced exactly through the
+    /// work item's `max_total` length cap.
+    pub output: BoundedPareto,
+}
+
+/// A fully sampled request: class plus concrete lengths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestSpec {
+    /// Traffic class the request was drawn from.
+    pub class: TenantClass,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Target output length in tokens.
+    pub out_len: usize,
+}
+
+/// The two-class tenant mix every open-loop run samples requests from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantMix {
+    /// Probability a request is [`TenantClass::Interactive`]; the rest
+    /// are [`TenantClass::Bulk`].
+    pub interactive_share: f64,
+    /// Interactive profile.
+    pub interactive: TenantProfile,
+    /// Bulk profile.
+    pub bulk: TenantProfile,
+}
+
+impl TenantMix {
+    /// The default mix the SLO harness runs, scaled to MockBackend-sized
+    /// sequences: interactive = short/nearly-uniform, bulk = heavy tail
+    /// (alpha 1.2 outputs) so stragglers actually appear at test scale.
+    pub fn default_mix(interactive_share: f64) -> TenantMix {
+        assert!(
+            (0.0..=1.0).contains(&interactive_share),
+            "interactive_share must be in [0, 1]"
+        );
+        TenantMix {
+            interactive_share,
+            interactive: TenantProfile {
+                prompt: BoundedPareto::new(4, 16, 2.5),
+                output: BoundedPareto::new(4, 24, 2.5),
+            },
+            bulk: TenantProfile {
+                prompt: BoundedPareto::new(8, 48, 1.8),
+                output: BoundedPareto::new(8, 96, 1.2),
+            },
+        }
+    }
+
+    /// Sample one request spec (class, then lengths from its profile).
+    pub fn sample(&self, rng: &mut Rng) -> RequestSpec {
+        let class = if rng.next_f64() < self.interactive_share {
+            TenantClass::Interactive
+        } else {
+            TenantClass::Bulk
+        };
+        let p = match class {
+            TenantClass::Interactive => self.interactive,
+            TenantClass::Bulk => self.bulk,
+        };
+        RequestSpec {
+            class,
+            prompt_len: p.prompt.sample(rng),
+            out_len: p.output.sample(rng),
+        }
+    }
+
+    /// Largest possible prompt length under either profile (engine
+    /// `p_max` sizing).
+    pub fn max_prompt(&self) -> usize {
+        self.interactive.prompt.hi.max(self.bulk.prompt.hi)
+    }
+
+    /// Largest possible output length under either profile (EOS
+    /// suppression sizing: the mock's scripted length must exceed this).
+    pub fn max_output(&self) -> usize {
+        self.interactive.output.hi.max(self.bulk.output.hi)
+    }
+
+    /// Largest possible total sequence (prompt + output) under either
+    /// profile (backend `max_seq` sizing).
+    pub fn max_total(&self) -> usize {
+        let i = self.interactive.prompt.hi + self.interactive.output.hi;
+        let b = self.bulk.prompt.hi + self.bulk.output.hi;
+        i.max(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_respects_profiles_and_replays() {
+        let mix = TenantMix::default_mix(0.5);
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..1000 {
+            let s = mix.sample(&mut a);
+            assert_eq!(s, mix.sample(&mut b));
+            let p = match s.class {
+                TenantClass::Interactive => mix.interactive,
+                TenantClass::Bulk => mix.bulk,
+            };
+            assert!((p.prompt.lo..=p.prompt.hi).contains(&s.prompt_len));
+            assert!((p.output.lo..=p.output.hi).contains(&s.out_len));
+        }
+    }
+
+    #[test]
+    fn extreme_shares_collapse_to_one_class() {
+        let mut rng = Rng::new(1);
+        let all_bulk = TenantMix::default_mix(0.0);
+        let all_inter = TenantMix::default_mix(1.0);
+        for _ in 0..200 {
+            assert_eq!(all_bulk.sample(&mut rng).class, TenantClass::Bulk);
+            assert_eq!(all_inter.sample(&mut rng).class, TenantClass::Interactive);
+        }
+    }
+
+    #[test]
+    fn sizing_helpers_cover_both_profiles() {
+        let mix = TenantMix::default_mix(0.5);
+        assert_eq!(mix.max_prompt(), 48);
+        assert_eq!(mix.max_output(), 96);
+        assert_eq!(mix.max_total(), 48 + 96);
+    }
+}

@@ -5,12 +5,14 @@
 //!   eval    — evaluate a checkpoint (or fresh init) on the five suites
 //!   config  — print a config preset as the paper's Table 3
 //!   trace   — one rollout stage; print the Fig-1 long-tail diagnostics
+//!   slo     — open-loop load generator + SLO scoreboard (lockstep sim)
 //!
 //! Examples:
 //!   copris train --model small --steps 40 --sft-steps 150 --mode copris
 //!   copris train --model small --mode sync --set rollout.batch_prompts=8
 //!   copris config --preset paper
 //!   copris trace --model small --mode sync
+//!   copris slo --workload poisson --rate 400 --requests 300 --seed 7
 
 use anyhow::{bail, Context, Result};
 
@@ -30,7 +32,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: copris <train|eval|config|trace> [options]\n\
+        "usage: copris <train|eval|config|trace|slo> [options]\n\
          common options:\n\
            --model <variant>        artifacts/<variant> (default small)\n\
            --artifacts <dir>        artifacts root (default artifacts)\n\
@@ -57,6 +59,10 @@ fn usage() -> ! {
                                     step with ≤ N tokens (decode lanes +\n\
                                     chunked prefill slices); 0 = legacy\n\
                                     slot admission (default)\n\
+           --workload <poisson|bursty> open-loop arrival process (slo)\n\
+           --rate R                 offered rate in req per virtual second\n\
+           --requests N             arrivals per slo run; burst shape and\n\
+                                    queue/quantum via --set workload.*\n\
            --metrics <path.jsonl>   write per-step metrics\n\
            --set section.key=value  any config override (repeatable)\n\
            --preset <paper|scaled-small|scaled-tiny|sync-baseline|pipelined-small>"
@@ -114,6 +120,15 @@ fn build_config(args: &Args) -> Result<Config> {
     if let Some(b) = args.get("step-token-budget") {
         cfg.set("engine.step_token_budget", b)?;
     }
+    if let Some(w) = args.get("workload") {
+        cfg.set("workload.process", w)?;
+    }
+    if let Some(r) = args.get("rate") {
+        cfg.set("workload.rate_rps", r)?;
+    }
+    if let Some(n) = args.get("requests") {
+        cfg.set("workload.requests", n)?;
+    }
     for kv in args.get_all("set") {
         let (k, v) = kv
             .split_once('=')
@@ -146,6 +161,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&args),
         "config" => cmd_config(&args),
         "trace" => cmd_trace(&args),
+        "slo" => cmd_slo(&args),
         _ => usage(),
     }
 }
@@ -285,6 +301,46 @@ fn cmd_trace(args: &Args) -> Result<()> {
         );
     }
     sess.shutdown();
+    Ok(())
+}
+
+fn cmd_slo(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let sim = copris::loadgen::SimConfig::from_config(&cfg);
+    println!(
+        "== copris slo: {} rate={}rps requests={} engines={}x{} queue_cap={} quantum={}us seed={} ==",
+        sim.process.name(),
+        cfg.workload.rate_rps,
+        sim.requests,
+        sim.engines,
+        sim.slots,
+        sim.queue_cap,
+        sim.quantum_ticks,
+        sim.seed
+    );
+    let r = copris::loadgen::run_sim(&sim);
+    let rep = &r.report;
+    println!("| Metric | Value |\n|---|---|");
+    println!("| Arrived / completed / shed | {} / {} / {} |", rep.arrived, rep.completed, rep.shed);
+    println!(
+        "| Completed interactive / bulk | {} / {} |",
+        rep.completed_interactive, rep.completed_bulk
+    );
+    println!("| Tokens generated | {} |", rep.tokens_out);
+    println!("| TTFT p50 / p99 (virtual us) | {:.0} / {:.0} |", rep.ttft_p50_ticks, rep.ttft_p99_ticks);
+    println!("| ITL p50 / p99 (virtual us) | {:.0} / {:.0} |", rep.itl_p50_ticks, rep.itl_p99_ticks);
+    println!("| E2E p50 / p99 (virtual us) | {:.0} / {:.0} |", rep.e2e_p50_ticks, rep.e2e_p99_ticks);
+    println!("| Goodput (req/s) | {:.2} |", rep.goodput_rps);
+    println!("| Shed rate | {:.4} |", rep.shed_rate);
+    println!("| Preemption rate | {:.4} ({} preemptions) |", rep.preemption_rate, rep.preemptions);
+    println!("| Queue depth peak | {} |", rep.queue_depth_peak);
+    println!(
+        "| Rounds / end tick | {} / {} |  (engine preemptions {}, completed_all {})",
+        r.rounds, r.end_tick, r.engine_preemptions, r.completed_all
+    );
+    if !r.completed_all {
+        bail!("lockstep sim tripped the livelock valve before draining");
+    }
     Ok(())
 }
 

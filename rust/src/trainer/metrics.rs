@@ -87,6 +87,12 @@ impl MetricsLog {
             .int("redispatched", rollout.redispatched_trajectories as i64)
             .int("retries", rollout.retries as i64)
             .int("retain_errors", rollout.retain_errors as i64)
+            .int("requests_arrived", rollout.requests_arrived as i64)
+            .int("requests_shed", rollout.requests_shed as i64)
+            .int("queue_depth_peak", rollout.queue_depth_peak as i64)
+            .num("slo_e2e_p50_ticks", rollout.slo_e2e_p50_ticks)
+            .num("slo_e2e_p99_ticks", rollout.slo_e2e_p99_ticks)
+            .num("goodput_rps", rollout.goodput_rps)
             .finish();
         writeln!(out, "{line}")?;
         out.flush()?;

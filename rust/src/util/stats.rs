@@ -51,6 +51,14 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Linear-interpolated percentile of an UNSORTED sample (copies and
+/// sorts; use `percentile_sorted` on hot paths). NaN on empty input.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, q)
+}
+
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
 }
@@ -117,6 +125,14 @@ mod tests {
         assert!((percentile_sorted(&xs, 0.95) - 95.0).abs() < 1e-9);
         assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
         assert_eq!(percentile_sorted(&xs, 1.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_sorts_unsorted_input() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert!((percentile(&xs, 0.5) - 3.0).abs() < 1e-9);
+        assert!((percentile(&xs, 1.0) - 5.0).abs() < 1e-9);
+        assert!(percentile(&[], 0.5).is_nan());
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Determinism and statistical-fidelity gate for the open-loop load
+//! generator (`copris::loadgen`).
+//!
+//! Three layers:
+//! 1. **Replay**: a `(process, seed)` pair must regenerate a
+//!    byte-identical arrival schedule, and a fixed [`SimConfig`] must
+//!    replay a bit-identical [`SloReport`] — compared between two
+//!    in-process runs, never against golden constants.
+//! 2. **Cross-profile**: with `COPRIS_LOADGEN_TRACE=<path>` set, the
+//!    canonical trace (schedules + sim reports rendered via `Debug`) is
+//!    written on first run and compared on later runs. `scripts/ci.sh
+//!    --slo` runs this test under the debug profile (writes) and then the
+//!    release profile (compares) with one shared path, proving the
+//!    generator is bit-identical across build profiles. Unset, the test
+//!    is a no-op.
+//! 3. **Fidelity**: the heavy-tailed length sampler's empirical quantiles
+//!    and mean track the bounded-Pareto closed forms, and the tenant-mix
+//!    class proportions converge to the configured share — so the
+//!    deterministic schedules are also the *right* distribution.
+
+use copris::loadgen::{
+    run_sim, ArrivalGen, ArrivalProcess, BoundedPareto, SimConfig, TenantClass, TenantMix,
+};
+use copris::util::stats::percentile;
+use copris::util::Rng;
+
+fn processes() -> Vec<(&'static str, ArrivalProcess)> {
+    vec![
+        ("poisson-400", ArrivalProcess::Poisson { rate_rps: 400.0 }),
+        ("poisson-2000", ArrivalProcess::Poisson { rate_rps: 2_000.0 }),
+        (
+            "bursty-400",
+            ArrivalProcess::Bursty { rate_rps: 400.0, on_ticks: 20_000, off_ticks: 80_000 },
+        ),
+    ]
+}
+
+fn trace_sims() -> Vec<SimConfig> {
+    vec![
+        SimConfig { requests: 120, seed: 42, ..SimConfig::default() },
+        SimConfig {
+            engines: 1,
+            slots: 2,
+            queue_cap: 6,
+            requests: 90,
+            seed: 42,
+            process: ArrivalProcess::Bursty {
+                rate_rps: 2_500.0,
+                on_ticks: 10_000,
+                off_ticks: 30_000,
+            },
+            mix: TenantMix::default_mix(0.3),
+            ..SimConfig::default()
+        },
+    ]
+}
+
+/// Canonical textual rendering of everything that must be bit-stable:
+/// integer arrival ticks plus the `Debug` form of each sim report (f64
+/// `Debug` is the shortest round-trip representation, so equal strings
+/// mean equal bits).
+fn canonical_trace() -> String {
+    let mut s = String::new();
+    for (name, p) in processes() {
+        let ticks = ArrivalGen::new(p, 42).schedule(600);
+        s.push_str(name);
+        s.push(' ');
+        for t in ticks {
+            s.push_str(&t.to_string());
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    for cfg in trace_sims() {
+        let r = run_sim(&cfg);
+        assert!(r.completed_all, "trace sim must drain");
+        s.push_str(&format!("{:?} rounds={} end={}\n", r.report, r.rounds, r.end_tick));
+    }
+    s
+}
+
+#[test]
+fn arrival_schedules_replay_byte_identically() {
+    for (name, p) in processes() {
+        for seed in [0u64, 7, 0xDEAD_BEEF] {
+            let a = ArrivalGen::new(p, seed).schedule(3_000);
+            let b = ArrivalGen::new(p, seed).schedule(3_000);
+            assert_eq!(a, b, "{name} seed {seed} must replay identically");
+            for w in a.windows(2) {
+                assert!(w[1] > w[0], "{name}: arrival ticks must strictly increase");
+            }
+        }
+        let a = ArrivalGen::new(p, 1).schedule(500);
+        let b = ArrivalGen::new(p, 2).schedule(500);
+        assert_ne!(a, b, "{name}: different seeds must diverge");
+    }
+}
+
+#[test]
+fn sim_reports_replay_bit_identically() {
+    for cfg in trace_sims() {
+        let a = run_sim(&cfg);
+        let b = run_sim(&cfg);
+        assert_eq!(a.report, b.report, "same-seed sim reports must be bit-identical");
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.end_tick, b.end_tick);
+        assert_eq!(a.engine_preemptions, b.engine_preemptions);
+    }
+}
+
+/// Cross-profile golden-file handshake (see module docs). First run with
+/// the env var set writes the trace; later runs (e.g. the release build
+/// in `ci.sh --slo`) must reproduce it byte-for-byte.
+#[test]
+fn cross_profile_trace_matches_golden_file() {
+    let Ok(path) = std::env::var("COPRIS_LOADGEN_TRACE") else { return };
+    let trace = canonical_trace();
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => assert_eq!(
+            golden, trace,
+            "loadgen trace diverged from the golden file at {path} — the \
+             generator is not bit-identical across build profiles/runs"
+        ),
+        Err(_) => std::fs::write(&path, &trace).expect("write loadgen golden trace"),
+    }
+}
+
+#[test]
+fn pareto_empirical_quantiles_track_analytic() {
+    for &(lo, hi, alpha) in &[(8usize, 96usize, 1.2f64), (4, 24, 2.5), (8, 48, 1.8)] {
+        let d = BoundedPareto::new(lo, hi, alpha);
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (0..20_000).map(|_| d.sample(&mut rng) as f64).collect();
+        for q in [0.25, 0.5, 0.9] {
+            let emp = percentile(&xs, q);
+            let ana = d.quantile(q).round().clamp(lo as f64, hi as f64);
+            let rel = (emp - ana).abs() / ana;
+            assert!(
+                rel < 0.12,
+                "BP({lo},{hi},{alpha}) q{q}: empirical {emp} vs analytic {ana} (rel {rel:.3})"
+            );
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let rel = (mean - d.mean()).abs() / d.mean();
+        assert!(
+            rel < 0.10,
+            "BP({lo},{hi},{alpha}) mean: empirical {mean} vs analytic {} (rel {rel:.3})",
+            d.mean()
+        );
+    }
+}
+
+#[test]
+fn tenant_mix_proportions_converge() {
+    let mix = TenantMix::default_mix(0.3);
+    let mut rng = Rng::new(17);
+    let n = 4_000;
+    let interactive =
+        (0..n).filter(|_| mix.sample(&mut rng).class == TenantClass::Interactive).count();
+    let share = interactive as f64 / n as f64;
+    assert!(
+        (share - 0.3).abs() < 0.03,
+        "interactive share {share:.3} drifted from configured 0.3"
+    );
+}

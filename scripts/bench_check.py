@@ -3,29 +3,39 @@
 
 Compares a freshly generated BENCH_micro.json against the committed
 BENCH_baseline.json and fails (exit 1) when any timing regresses past the
-tolerance, or when a baseline row disappeared from the fresh run (a bench
-silently dropped is a regression too).
+tolerance, when a deterministic row drifts at all, or when a baseline row
+disappeared from the fresh run (a bench silently dropped is a regression
+too).
 
-Rules:
-  - rows are matched by their "path" field;
-  - timing fields ("mean_s", "p95_s") regress when
+Row kinds (per-row "kind" field):
+  - "timing" (or kind absent — the legacy rows): hardware-dependent.
+    Timing fields ("mean_s", "p95_s") regress when
         fresh > baseline * (1 + tolerance);
-    improvements are reported but never fail;
-  - deterministic counter fields listed in EXACT_FIELDS (simulated
-    utilization, unit/token counts from the mock benches — same seeds,
-    same counters on any hardware) must match the baseline exactly when
-    both sides carry them;
-  - fresh rows absent from the baseline are reported as NEW (seed them by
-    copying the CI artifact over BENCH_baseline.json);
+    improvements are reported but never fail. The deterministic counter
+    fields in EXACT_FIELDS must still match exactly when both sides carry
+    them. These rows need a SEEDED baseline (copy a CI BENCH_micro
+    artifact over BENCH_baseline.json) before they gate anything.
+  - "deterministic": seed-pinned counters/percentiles on a virtual clock
+    (e.g. the slo_harness scenario rows). EVERY shared field except
+    "path"/"kind" must match the baseline exactly — no tolerance band.
+    Because two fresh runs of the same build must agree bit-for-bit,
+    these rows are gateable immediately via --deterministic-only: run the
+    bench twice and compare run 1 (as --baseline) against run 2, no
+    committed baseline required.
+
+Shared rules:
+  - rows are matched by their "path" field;
+  - fresh rows absent from the baseline are reported as NEW;
   - an EMPTY baseline rows[] while the fresh run has rows FAILS (exit 1)
     with a loud warning: an unseeded baseline gates nothing, and silently
-    passing it is how regressions land unguarded. Seed it by copying a CI
-    run's BENCH_micro artifact over BENCH_baseline.json.
+    passing it is how regressions land unguarded.
 
 Usage:
   scripts/bench_check.py [--baseline BENCH_baseline.json]
                          [--fresh BENCH_micro.json]
                          [--tolerance 0.30]
+                         [--deterministic-only]
+  scripts/bench_check.py --self-test
 """
 
 import argparse
@@ -34,8 +44,11 @@ import sys
 
 TIMING_FIELDS = ("mean_s", "p95_s")
 # Counter metrics that are deterministic given the benches' fixed seeds
-# (mock backends, no thread races in the counted quantities).
+# (mock backends, no thread races in the counted quantities) even inside
+# otherwise timing-kind rows.
 EXACT_FIELDS = ("step_token_util", "units", "total_tokens")
+# Row-identity fields never compared as data.
+META_FIELDS = ("path", "kind")
 
 
 def load_rows(path):
@@ -52,41 +65,44 @@ def load_rows(path):
     return {r["path"]: r for r in rows if "path" in r}
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", default="BENCH_baseline.json")
-    ap.add_argument("--fresh", default="BENCH_micro.json")
-    ap.add_argument("--tolerance", type=float, default=0.30)
-    args = ap.parse_args()
+def is_deterministic(row):
+    return row.get("kind") == "deterministic"
 
-    base = load_rows(args.baseline)
-    fresh = load_rows(args.fresh)
 
-    if not fresh:
-        print(f"bench_check: {args.fresh} has no rows — did the benches run?")
-        return 1
-    if not base:
-        # One loud line on stderr: an empty baseline while the fresh run
-        # produced rows means the gate is checking nothing — that is a
-        # failure, not a seeding grace period (the old PASS here let
-        # regressions land unguarded indefinitely).
-        print(
-            f"bench_check: WARNING — {args.baseline} has no rows but "
-            f"{args.fresh} has {len(fresh)}: the regression gate is "
-            f"UNSEEDED and gating nothing; FAIL. Seed it with "
-            f"`cp {args.fresh} {args.baseline}` (or copy the CI "
-            f"BENCH_micro artifact over it) and commit to arm the "
-            f"±{args.tolerance:.0%} gate.",
-            file=sys.stderr,
-        )
-        return 1
-
+def compare(base, fresh, tolerance, deterministic_only=False):
+    """Compare row dicts; returns (failures, notes) as string lists."""
+    if deterministic_only:
+        base = {p: r for p, r in base.items() if is_deterministic(r)}
+        fresh = {p: r for p, r in fresh.items() if is_deterministic(r)}
     failures = []
     notes = []
     for path, brow in sorted(base.items()):
         frow = fresh.get(path)
         if frow is None:
             failures.append(f"MISSING  {path!r}: present in baseline, absent from fresh run")
+            continue
+        if is_deterministic(brow) or is_deterministic(frow):
+            if brow.get("kind") != frow.get("kind"):
+                failures.append(
+                    f"KIND  {path!r}: baseline kind {brow.get('kind')!r} vs "
+                    f"fresh {frow.get('kind')!r}"
+                )
+                continue
+            # Every shared data field must match bit-for-bit; a field
+            # present on only one side is drift too (a metric silently
+            # appearing or vanishing).
+            keys = (set(brow) | set(frow)) - set(META_FIELDS)
+            for field in sorted(keys):
+                if field not in brow or field not in frow:
+                    failures.append(
+                        f"DRIFTED  {path!r} {field}: present on only one side "
+                        f"(deterministic rows must share every field)"
+                    )
+                elif frow[field] != brow[field]:
+                    failures.append(
+                        f"DRIFTED  {path!r} {field}: {frow[field]!r} vs baseline "
+                        f"{brow[field]!r} (deterministic row must match exactly)"
+                    )
             continue
         for field in TIMING_FIELDS:
             if field not in brow or field not in frow:
@@ -95,12 +111,12 @@ def main():
             if b <= 0.0:
                 continue
             ratio = f / b
-            if ratio > 1.0 + args.tolerance:
+            if ratio > 1.0 + tolerance:
                 failures.append(
                     f"REGRESSED  {path!r} {field}: {f:.6f}s vs baseline "
-                    f"{b:.6f}s ({ratio:.2f}x > {1 + args.tolerance:.2f}x)"
+                    f"{b:.6f}s ({ratio:.2f}x > {1 + tolerance:.2f}x)"
                 )
-            elif ratio < 1.0 - args.tolerance:
+            elif ratio < 1.0 - tolerance:
                 notes.append(f"improved  {path!r} {field}: {ratio:.2f}x of baseline")
         for field in EXACT_FIELDS:
             if field not in brow or field not in frow:
@@ -112,7 +128,142 @@ def main():
                 )
     for path in sorted(set(fresh) - set(base)):
         notes.append(f"new row  {path!r} (not in baseline — re-seed to start gating it)")
+    return failures, notes
 
+
+def self_test():
+    """Exercise both row kinds through compare(); exit 0 iff all pass."""
+    t_row = {"path": "micro/x", "mean_s": 1.0, "p95_s": 1.2, "units": 5}
+    d_row = {
+        "path": "slo poisson steady",
+        "kind": "deterministic",
+        "arrived": 200,
+        "goodput_rps": 123.25,
+    }
+    checks = []
+
+    def check(name, failures, want_fail_substr=None):
+        if want_fail_substr is None:
+            ok = not failures
+            detail = failures
+        else:
+            ok = any(want_fail_substr in f for f in failures)
+            detail = failures or ["<no failures>"]
+        checks.append((name, ok, detail))
+
+    base = {r["path"]: r for r in (t_row, d_row)}
+
+    # Identical documents pass in both modes.
+    f0, _ = compare(base, json.loads(json.dumps(base)), 0.30)
+    check("identical docs pass", f0)
+    f0, _ = compare(base, json.loads(json.dumps(base)), 0.0, deterministic_only=True)
+    check("identical docs pass (deterministic-only)", f0)
+
+    # Timing within the band passes; beyond it fails; improvements pass.
+    fresh = json.loads(json.dumps(base))
+    fresh["micro/x"]["mean_s"] = 1.25
+    f1, _ = compare(base, fresh, 0.30)
+    check("timing within band passes", f1)
+    fresh["micro/x"]["mean_s"] = 1.5
+    f2, _ = compare(base, fresh, 0.30)
+    check("timing beyond band fails", f2, "REGRESSED")
+    fresh["micro/x"]["mean_s"] = 0.4
+    f3, notes3 = compare(base, fresh, 0.30)
+    check("timing improvement passes", f3)
+    checks.append(("improvement is noted", any("improved" in n for n in notes3), notes3))
+
+    # Exact counter inside a timing row must not drift.
+    fresh = json.loads(json.dumps(base))
+    fresh["micro/x"]["units"] = 6
+    f4, _ = compare(base, fresh, 0.30)
+    check("timing-row exact counter drift fails", f4, "DRIFTED")
+
+    # Deterministic rows: ANY field change fails, even a tiny float one
+    # that a timing band would wave through.
+    fresh = json.loads(json.dumps(base))
+    fresh["slo poisson steady"]["goodput_rps"] = 123.26
+    f5, _ = compare(base, fresh, 0.30)
+    check("deterministic float drift fails", f5, "DRIFTED")
+    f5d, _ = compare(base, fresh, 0.30, deterministic_only=True)
+    check("deterministic drift fails in deterministic-only mode", f5d, "DRIFTED")
+
+    # Deterministic rows: a vanishing or appearing field is drift.
+    fresh = json.loads(json.dumps(base))
+    del fresh["slo poisson steady"]["arrived"]
+    f6, _ = compare(base, fresh, 0.30)
+    check("deterministic missing field fails", f6, "only one side")
+
+    # deterministic-only ignores timing rows entirely.
+    fresh = json.loads(json.dumps(base))
+    fresh["micro/x"]["mean_s"] = 99.0
+    f7, _ = compare(base, fresh, 0.0, deterministic_only=True)
+    check("deterministic-only ignores timing regressions", f7)
+
+    # A missing baseline row fails in both modes.
+    fresh = json.loads(json.dumps(base))
+    del fresh["slo poisson steady"]
+    f8, _ = compare(base, fresh, 0.30)
+    check("missing row fails", f8, "MISSING")
+    f8d, _ = compare(base, fresh, 0.30, deterministic_only=True)
+    check("missing deterministic row fails in deterministic-only mode", f8d, "MISSING")
+
+    bad = [(n, d) for n, ok, d in checks if not ok]
+    for name, ok, _ in checks:
+        print(f"bench_check self-test: {'ok  ' if ok else 'FAIL'} {name}")
+    if bad:
+        for name, detail in bad:
+            print(f"bench_check self-test: FAILED {name}: {detail}", file=sys.stderr)
+        return 1
+    print(f"bench_check self-test: OK — {len(checks)} checks")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--fresh", default="BENCH_micro.json")
+    ap.add_argument("--tolerance", type=float, default=0.30)
+    ap.add_argument(
+        "--deterministic-only",
+        action="store_true",
+        help="compare only kind=deterministic rows (two-fresh-run gating; "
+        "no committed baseline needed)",
+    )
+    ap.add_argument("--self-test", action="store_true", help="run the built-in fixture checks")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    if args.deterministic_only:
+        base = {p: r for p, r in base.items() if is_deterministic(r)}
+        fresh = {p: r for p, r in fresh.items() if is_deterministic(r)}
+        label = "deterministic rows"
+    else:
+        label = "rows"
+
+    if not fresh:
+        print(f"bench_check: {args.fresh} has no {label} — did the benches run?")
+        return 1
+    if not base:
+        # One loud line on stderr: an empty baseline while the fresh run
+        # produced rows means the gate is checking nothing — that is a
+        # failure, not a seeding grace period (the old PASS here let
+        # regressions land unguarded indefinitely).
+        print(
+            f"bench_check: WARNING — {args.baseline} has no {label} but "
+            f"{args.fresh} has {len(fresh)}: the regression gate is "
+            f"UNSEEDED and gating nothing; FAIL. Seed it with "
+            f"`cp {args.fresh} {args.baseline}` (or copy the CI "
+            f"BENCH_micro artifact over it) and commit to arm the "
+            f"±{args.tolerance:.0%} gate.",
+            file=sys.stderr,
+        )
+        return 1
+
+    failures, notes = compare(base, fresh, args.tolerance)
     for n in notes:
         print(f"bench_check: {n}")
     if failures:
@@ -120,13 +271,15 @@ def main():
             print(f"bench_check: {f}", file=sys.stderr)
         print(
             f"bench_check: FAIL — {len(failures)} regression(s) beyond "
-            f"±{args.tolerance:.0%}",
+            f"±{args.tolerance:.0%} (deterministic rows: exact)",
             file=sys.stderr,
         )
         return 1
+    n_det = sum(1 for r in base.values() if is_deterministic(r))
     print(
-        f"bench_check: OK — {len(base)} baselined rows within "
-        f"±{args.tolerance:.0%} ({len(set(fresh) - set(base))} new)"
+        f"bench_check: OK — {len(base)} baselined {label} within "
+        f"±{args.tolerance:.0%} ({n_det} deterministic, exact; "
+        f"{len(set(fresh) - set(base))} new)"
     )
     return 0
 

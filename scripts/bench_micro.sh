@@ -33,6 +33,10 @@ cargo bench --manifest-path "$MANIFEST" --bench resume_affinity
 cargo bench --manifest-path "$MANIFEST" --bench kv_blocks
 cargo bench --manifest-path "$MANIFEST" --bench continuous_batching
 cargo bench --manifest-path "$MANIFEST" --bench sampler_simd
+# slo_harness contributes the open-loop SLO scoreboard rows (three
+# "kind":"deterministic" scenario rows gated exactly by
+# scripts/bench_check.py, plus one timing row under the legacy ±band).
+cargo bench --manifest-path "$MANIFEST" --bench slo_harness
 # The CI bench job uploads this file as an artifact; fail loudly if a
 # bench silently produced an empty rows[] so the gap can't reopen.
 if grep -q '"rows":\[\]' "$COPRIS_BENCH_JSON"; then

@@ -20,6 +20,14 @@
 #                            runs catch_unwind/timing paths that behave
 #                            differently without debug assertions)
 #   scripts/ci.sh --bench    full tier-1, then refresh BENCH_micro.json
+#   scripts/ci.sh --slo      open-loop loadgen + SLO harness gate (the CI
+#                            `slo` job): bench_check.py self-test, the
+#                            loadgen determinism suite under debug AND
+#                            release sharing one golden trace file (the
+#                            cross-profile bit-identity handshake), then
+#                            the slo_harness bench run twice with
+#                            bench_check.py --deterministic-only diffing
+#                            run 1 against run 2 at zero tolerance
 #   scripts/ci.sh --simd     sampler SIMD gate (the CI `simd` matrix job):
 #                            runs the sampler/simd differential-fuzz suite
 #                            and the engine stream goldens per SIMD_ARM —
@@ -35,7 +43,7 @@ ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$ROOT"
 
 usage() {
-  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--chaos|--bench|--simd]" >&2
+  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd]" >&2
   echo "  (no flag = full tier-1: build + doc + clippy + test)" >&2
   echo "  --simd honors SIMD_ARM=native|scalar|both (default both)" >&2
 }
@@ -44,7 +52,7 @@ usage() {
 # with usage instead of silently running full tier-1.
 MODE="${1:-}"
 case "$MODE" in
-  ""|--fmt|--docs|--clippy|--chaos|--bench|--simd) ;;
+  ""|--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd) ;;
   *)
     echo "ci: unknown flag $MODE" >&2
     usage
@@ -105,6 +113,46 @@ run_chaos() {
   cargo test -q --manifest-path "$MANIFEST" --test chaos_recovery
   echo "== chaos: cargo test --test chaos_recovery (release) =="
   cargo test --release -q --manifest-path "$MANIFEST" --test chaos_recovery
+}
+
+run_slo() {
+  # Open-loop loadgen + SLO harness gate, three layers:
+  # 1. bench_check.py fixture self-test — the gate that gates must itself
+  #    be gated.
+  # 2. loadgen determinism suite twice sharing ONE golden trace file:
+  #    the debug run writes the canonical trace (arrival schedules + sim
+  #    report Debug renderings), the release run must reproduce it
+  #    byte-for-byte — bit-identity across build profiles, not just
+  #    within one.
+  # 3. slo_harness bench twice into two fresh JSON files, then
+  #    bench_check.py --deterministic-only diffs run 1 (as baseline)
+  #    against run 2 at zero tolerance: every "kind":"deterministic"
+  #    scenario row must agree bit-for-bit, no committed baseline needed.
+  echo "== slo: bench_check.py --self-test =="
+  python3 scripts/bench_check.py --self-test
+
+  local trace
+  trace="$(mktemp -t copris_loadgen_trace.XXXXXX)"
+  # The test writes the golden on first run (file absent), compares after.
+  rm -f "$trace"
+  echo "== slo: loadgen_determinism (debug — writes golden trace) =="
+  COPRIS_LOADGEN_TRACE="$trace" \
+    cargo test -q --manifest-path "$MANIFEST" --test loadgen_determinism
+  echo "== slo: loadgen_determinism (release — must match debug trace) =="
+  COPRIS_LOADGEN_TRACE="$trace" \
+    cargo test --release -q --manifest-path "$MANIFEST" --test loadgen_determinism
+  rm -f "$trace"
+
+  local run1 run2
+  run1="$(mktemp -t copris_slo_run1.XXXXXX)"
+  run2="$(mktemp -t copris_slo_run2.XXXXXX)"
+  rm -f "$run1" "$run2"
+  echo "== slo: slo_harness double run → exact deterministic-row diff =="
+  COPRIS_BENCH_JSON="$run1" cargo bench --manifest-path "$MANIFEST" --bench slo_harness
+  COPRIS_BENCH_JSON="$run2" cargo bench --manifest-path "$MANIFEST" --bench slo_harness
+  python3 scripts/bench_check.py --deterministic-only --tolerance 0 \
+    --baseline "$run1" --fresh "$run2"
+  rm -f "$run1" "$run2"
 }
 
 # One SIMD verification arm: the sampler + simd unit suites (the
@@ -186,9 +234,13 @@ case "$MODE" in
     ;;
   --bench)
     run_full
-    echo "== micro + resume_affinity + kv_blocks + continuous_batching + sampler_simd benches → BENCH_micro.json =="
+    echo "== micro + resume_affinity + kv_blocks + continuous_batching + sampler_simd + slo_harness benches → BENCH_micro.json =="
     "$ROOT/scripts/bench_micro.sh"
     echo "ci: OK"
+    ;;
+  --slo)
+    run_slo
+    echo "ci: slo OK"
     ;;
   "")
     run_full
