@@ -365,6 +365,80 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// Which transport carries engine commands and events.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process engine threads over mpsc channels (the default; zero
+    /// overhead, and the transport every golden test pins).
+    #[default]
+    Local,
+    /// Framed TCP to `copris engine-host` processes (see `crate::net`).
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a CLI/TOML transport name (`local` | `tcp`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "local" => TransportKind::Local,
+            "tcp" => TransportKind::Tcp,
+            _ => bail!("unknown transport {s:?} (local|tcp)"),
+        })
+    }
+
+    /// Canonical name (round-trips through [`TransportKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Router / transport-tier configuration (`[router]`). Only consulted
+/// when `transport = "tcp"`; the `local` default leaves every existing
+/// path byte-for-byte unchanged.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Transport (`local` | `tcp`).
+    pub transport: TransportKind,
+    /// Comma-separated `host:port` list of engine-hosts, dialed in order
+    /// (the TOML subset is scalar-only, hence a string not an array).
+    /// Each host's engines get the next contiguous global-id range.
+    pub hosts: String,
+    /// Heartbeat ping period in milliseconds (0 disables heartbeats —
+    /// link errors still fail the host).
+    pub heartbeat_ms: u64,
+    /// Consecutive missed heartbeats before a host is declared dead and
+    /// its replicas fail over.
+    pub heartbeat_misses: u32,
+    /// Connect + handshake timeout per host, in milliseconds.
+    pub connect_timeout_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            transport: TransportKind::Local,
+            hosts: String::new(),
+            heartbeat_ms: 2_000,
+            heartbeat_misses: 3,
+            connect_timeout_ms: 5_000,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// The `hosts` string split into trimmed, non-empty addresses.
+    pub fn host_list(&self) -> Vec<String> {
+        self.hosts
+            .split(',')
+            .map(|h| h.trim().to_string())
+            .filter(|h| !h.is_empty())
+            .collect()
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
@@ -382,6 +456,8 @@ pub struct Config {
     pub eval: EvalConfig,
     /// Open-loop workload / SLO-harness settings.
     pub workload: WorkloadConfig,
+    /// Router / transport-tier settings.
+    pub router: RouterConfig,
 }
 
 impl Config {
@@ -508,6 +584,31 @@ impl Config {
                     bail!("workload.slots_per_engine must be >= 1");
                 }
             }
+            ("router", "transport") => {
+                self.router.transport = TransportKind::parse(v)?;
+                if self.router.transport == TransportKind::Tcp
+                    && self.router.host_list().is_empty()
+                {
+                    eprintln!(
+                        "config: router.transport=tcp needs router.hosts before the fleet \
+                         can connect"
+                    );
+                }
+            }
+            ("router", "hosts") => self.router.hosts = v.into(),
+            ("router", "heartbeat_ms") => self.router.heartbeat_ms = v.parse()?,
+            ("router", "heartbeat_misses") => {
+                self.router.heartbeat_misses = v.parse()?;
+                if self.router.heartbeat_misses == 0 {
+                    bail!("router.heartbeat_misses must be >= 1");
+                }
+            }
+            ("router", "connect_timeout_ms") => {
+                self.router.connect_timeout_ms = v.parse()?;
+                if self.router.connect_timeout_ms == 0 {
+                    bail!("router.connect_timeout_ms must be >= 1");
+                }
+            }
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -598,6 +699,22 @@ impl Config {
             "| Engine failover (retries/backoff/stall) | {}x / {} ms / {} ms |\n",
             eng.max_retries, eng.retry_backoff_ms, eng.stall_timeout_ms
         ));
+        let rt = &self.router;
+        s.push_str("| **Router / Transport** | |\n");
+        let transport = match rt.transport {
+            TransportKind::Local => "local (in-process)".to_string(),
+            TransportKind::Tcp => {
+                let hosts = rt.host_list();
+                format!("tcp ({} host{})", hosts.len(), if hosts.len() == 1 { "" } else { "s" })
+            }
+        };
+        s.push_str(&format!("| Transport | {transport} |\n"));
+        let hb = if rt.heartbeat_ms == 0 {
+            "off".to_string()
+        } else {
+            format!("{} ms x {} misses", rt.heartbeat_ms, rt.heartbeat_misses)
+        };
+        s.push_str(&format!("| Host heartbeat | {hb} |\n"));
         let w = &self.workload;
         s.push_str("| **Open-Loop Workload / SLO** | |\n");
         let process = match w.kind {
@@ -905,6 +1022,60 @@ mod tests {
     fn workload_kind_roundtrip() {
         for k in [WorkloadKind::Poisson, WorkloadKind::Bursty] {
             assert_eq!(WorkloadKind::parse(k.name()).unwrap(), k);
+        }
+    }
+
+    /// Router knobs: local-transport defaults (golden-equivalent),
+    /// settable via CLI/TOML, host-list parsing, validated ranges, and a
+    /// Table-3 section in the rendered table.
+    #[test]
+    fn router_knobs_default_and_plumb_through() {
+        let mut c = Config::new("tiny");
+        assert_eq!(c.router.transport, TransportKind::Local);
+        assert!(c.router.host_list().is_empty());
+        assert_eq!(c.router.heartbeat_ms, 2_000);
+        assert_eq!(c.router.heartbeat_misses, 3);
+        assert_eq!(c.router.connect_timeout_ms, 5_000);
+        let table = c.render_table();
+        assert!(table.contains("| **Router / Transport** | |"), "{table}");
+        assert!(table.contains("| Transport | local (in-process) |"), "{table}");
+        assert!(table.contains("| Host heartbeat | 2000 ms x 3 misses |"), "{table}");
+
+        c.set("router.hosts", "127.0.0.1:7101, 127.0.0.1:7102 ,").unwrap();
+        c.set("router.transport", "tcp").unwrap();
+        c.set("router.heartbeat_ms", "250").unwrap();
+        c.set("router.heartbeat_misses", "2").unwrap();
+        c.set("router.connect_timeout_ms", "800").unwrap();
+        assert_eq!(c.router.transport, TransportKind::Tcp);
+        assert_eq!(c.router.host_list(), vec!["127.0.0.1:7101", "127.0.0.1:7102"]);
+        assert_eq!(c.router.heartbeat_ms, 250);
+        assert_eq!(c.router.heartbeat_misses, 2);
+        assert_eq!(c.router.connect_timeout_ms, 800);
+        let table = c.render_table();
+        assert!(table.contains("| Transport | tcp (2 hosts) |"), "{table}");
+        assert!(table.contains("| Host heartbeat | 250 ms x 2 misses |"), "{table}");
+        c.set("router.heartbeat_ms", "0").unwrap();
+        assert!(c.render_table().contains("| Host heartbeat | off |"));
+
+        // Validation: junk transports and zero guards are rejected.
+        assert!(c.set("router.transport", "udp").is_err());
+        assert!(c.set("router.heartbeat_misses", "0").is_err());
+        assert!(c.set("router.connect_timeout_ms", "0").is_err());
+
+        // TOML path hits the same setters (hosts stay a scalar string —
+        // the TOML subset has no arrays).
+        let doc =
+            "[router]\ntransport = \"tcp\"\nhosts = \"a:1,b:2\"\nheartbeat_ms = 100\n";
+        let c2 = Config::from_toml_str(doc).unwrap();
+        assert_eq!(c2.router.transport, TransportKind::Tcp);
+        assert_eq!(c2.router.host_list(), vec!["a:1", "b:2"]);
+        assert_eq!(c2.router.heartbeat_ms, 100);
+    }
+
+    #[test]
+    fn transport_kind_roundtrip() {
+        for t in [TransportKind::Local, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(t.name()).unwrap(), t);
         }
     }
 }

@@ -28,7 +28,8 @@ use super::driver::{StageDriver, StageGoal, StagePhase, StagePolicy};
 use super::groups::{Group, GroupBook};
 use super::trajectory::Trajectory;
 use crate::config::{Config, RolloutMode};
-use crate::engine::{EngineCmd, EngineEvent, EnginePool, FinishReason, SamplingParams, StepTrace, WorkItem};
+use crate::engine::{EngineCmd, EngineEvent, FinishReason, SamplingParams, StepTrace, WorkItem};
+use crate::router::{ReplicaHealth, RetainedRef, RouterPool, RoutingTable};
 use crate::loadgen::{SloCollector, SloReport, TenantClass};
 use crate::tasks::{Dataset, Family, Task};
 use crate::tokenizer::Tokenizer;
@@ -238,21 +239,13 @@ struct EngineCounters {
     retries: u64,
 }
 
-/// Where a buffered partial's KV is retained: the engine that generated it
-/// and the retention token its `Stopped` flush returned. This is the
-/// coordinator half of the retention ledger — a routing HINT, never a
-/// correctness dependency (stale hints fall back to replay in-engine).
-#[derive(Clone, Copy, Debug)]
-struct RetainedRef {
-    engine: usize,
-    token: u64,
-}
-
 /// The CoPRIS coordinator (also drives the sync / naive-partial baselines
 /// and fixed-prompt eval, all through the one [`StageDriver`]).
 pub struct Coordinator {
-    /// The engine pool this coordinator dispatches to.
-    pub pool: EnginePool,
+    /// The engine fleet this coordinator dispatches to — in-process
+    /// threads (`local` transport) or `copris engine-host` processes
+    /// (`tcp`), behind the same poll/cmd API either way.
+    pub pool: RouterPool,
     /// Full run configuration (rollout policy knobs live under
     /// `cfg.rollout`).
     pub cfg: Config,
@@ -260,28 +253,14 @@ pub struct Coordinator {
     pub buffer: PartialBuffer,
     book: GroupBook,
     inflight: HashMap<u64, InFlight>,
-    engine_load: Vec<usize>,
-    /// Per-engine death flags, set by `EngineFailed` events and the stall
-    /// watchdog. Dead engines are excluded from routing and drain waits
-    /// and their late events are discarded (a stalled engine the watchdog
-    /// buried can wake up and flush). Deaths persist across stages — the
-    /// thread is gone.
-    dead: Vec<bool>,
-    /// Affinity map: buffered-partial trajectory id → retained slot. An
-    /// entry exists iff the partial's last `Stopped` flush retained KV and
-    /// no sync/eviction/route has cleared it since.
-    retained_at: HashMap<u64, RetainedRef>,
-    /// Engines that received dispatches for a group, in first-dispatch
-    /// order — `[0]` is the group's HOME engine, where its prompt blocks
-    /// were first registered; later samples (and resumed partials of the
-    /// group) prefer it so the prefix refcount actually shares —
-    /// block-residency routing, with the same imbalance guard as
-    /// retained-KV affinity. Usually one entry; more under imbalance
-    /// spill. On group completion every listed engine gets
-    /// `EngineCmd::ReleasePrefix` so registry entries don't linger until
-    /// the next weight sync. Only populated when `engine.prefix_sharing`
-    /// is on.
-    prefix_homes: HashMap<u64, Vec<usize>>,
+    /// Per-replica routing state — load, health/drain ladder, retained-KV
+    /// affinity, prefix homes (see [`RoutingTable`]). Deaths persist
+    /// across stages (the replica is gone) and dead replicas' late events
+    /// are discarded (a stalled engine the watchdog buried can wake up
+    /// and flush). On group completion every engine listed in the group's
+    /// prefix homes gets `EngineCmd::ReleasePrefix` so registry entries
+    /// don't linger until the next weight sync.
+    table: RoutingTable,
     /// Latest cumulative engine gauges observed per engine (from step
     /// traces)…
     kv_seen: Vec<EngineCounters>,
@@ -305,7 +284,11 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// `max_seq` is the engines' decode horizon (manifest.max_seq).
-    pub fn new(pool: EnginePool, cfg: Config, max_seq: usize) -> Coordinator {
+    /// Accepts an [`EnginePool`](crate::engine::EnginePool) directly (the
+    /// `local` transport, what every existing call site passes) or a
+    /// pre-built [`RouterPool`] (the `tcp` transport).
+    pub fn new(pool: impl Into<RouterPool>, cfg: Config, max_seq: usize) -> Coordinator {
+        let pool = pool.into();
         let engines = pool.engines();
         let buffer = PartialBuffer::new(cfg.rollout.max_stage_lag);
         Coordinator {
@@ -314,10 +297,7 @@ impl Coordinator {
             buffer,
             book: GroupBook::new(),
             inflight: HashMap::new(),
-            engine_load: vec![0; engines],
-            dead: vec![false; engines],
-            retained_at: HashMap::new(),
-            prefix_homes: HashMap::new(),
+            table: RoutingTable::new(engines),
             kv_seen: vec![EngineCounters::default(); engines],
             kv_base: vec![EngineCounters::default(); engines],
             next_traj_id: 0,
@@ -358,7 +338,7 @@ impl Coordinator {
         self.policy_version = version;
         let invalidate = !self.cfg.rollout.retain_kv_across_sync;
         if invalidate {
-            self.retained_at.clear();
+            self.table.retained_at.clear();
         }
         self.pool.broadcast_params(version, params, invalidate);
     }
@@ -377,71 +357,33 @@ impl Coordinator {
         self.driver.as_mut().expect("no active rollout stage")
     }
 
-    /// Engines still alive (not declared failed).
+    /// Engines still alive (not declared failed; draining counts).
     fn live_engines(&self) -> usize {
-        self.dead.iter().filter(|d| !**d).count()
+        self.table.live()
     }
 
-    /// Least-loaded LIVE engine. Falls back to engine 0 only when every
-    /// engine is dead — unreachable in practice: `begin_stage` refuses a
-    /// dead pool and `fail_engine` bails degraded before re-dispatching.
-    fn least_loaded_engine(&self) -> usize {
-        self.engine_load
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| !self.dead[*i])
-            .min_by_key(|(_, l)| **l)
-            .map(|(i, _)| i)
-            .unwrap_or(0)
-    }
-
-    /// Residency-aware routing, best residency first:
-    /// 1. a trajectory whose KV is retained on its home engine goes back
-    ///    there (with the retention token as the resume hint) — zero
-    ///    replay;
-    /// 2. otherwise a trajectory whose GROUP has prompt blocks registered
-    ///    on a home engine goes there, so the prompt prefix actually
-    ///    shares (block-residency routing — resumes route by where blocks
-    ///    live, not only by whole-slot retention);
-    /// 3. otherwise least-loaded.
-    /// Both residency routes yield when the target engine's load exceeds
-    /// the least-loaded engine's by more than
-    /// `rollout.affinity_max_imbalance`; an abandoned retained slot is
-    /// released remotely so it stops charging that engine's KV.
+    /// Residency-aware routing — the placement decision lives in
+    /// [`RoutingTable::route`] (retained-KV affinity, then prefix home,
+    /// then least loaded, each residency route behind the
+    /// `rollout.affinity_max_imbalance` guard). This wrapper applies the
+    /// decision's side effect: an abandoned retained slot is released
+    /// remotely so it stops charging that engine's KV.
     /// Returns `(engine, retain_hint)`.
     fn route(&mut self, traj: &Trajectory) -> (usize, Option<u64>) {
-        let least = self.least_loaded_engine();
-        let max_imbalance = self.cfg.rollout.affinity_max_imbalance;
-        if let Some(r) = self.retained_at.remove(&traj.id) {
-            if self.cfg.rollout.retain_kv
-                && !self.dead[r.engine]
-                && self.engine_load[r.engine] <= self.engine_load[least] + max_imbalance
-            {
-                return (r.engine, Some(r.token));
-            }
-            // Imbalance fallback: free the remote retained slot so it
-            // stops charging that engine's KV, then fall through to the
-            // block-residency / least-loaded routes. (Nothing to release
-            // on a dead engine — `fail_engine` already dropped its
-            // entries; this arm only covers races with a queued event.)
-            if !self.dead[r.engine] {
-                self.pool.send(
-                    r.engine,
-                    EngineCmd::ReleaseRetained { request_id: traj.id, token: r.token },
-                );
-            }
+        let d = self.table.route(
+            traj.id,
+            traj.group_id,
+            self.cfg.rollout.retain_kv,
+            self.cfg.engine.prefix_sharing,
+            self.cfg.rollout.affinity_max_imbalance,
+        );
+        if let Some(r) = d.release {
+            self.pool.send(
+                r.engine,
+                EngineCmd::ReleaseRetained { request_id: traj.id, token: r.token },
+            );
         }
-        if self.cfg.engine.prefix_sharing {
-            let home = self.prefix_homes.get(&traj.group_id).and_then(|h| h.first()).copied();
-            if let Some(home) = home {
-                if !self.dead[home]
-                    && self.engine_load[home] <= self.engine_load[least] + max_imbalance
-                {
-                    return (home, None);
-                }
-            }
-        }
-        (least, None)
+        (d.engine, d.retain)
     }
 
     fn dispatch(&mut self, traj: Trajectory, sampling: SamplingParams) {
@@ -450,11 +392,8 @@ impl Coordinator {
         // id, so the engine charges the prompt blocks once per group.
         let prefix = if self.cfg.engine.prefix_sharing { Some(traj.group_id) } else { None };
         if prefix.is_some() {
-            // First entry == the group's home engine (route() reads [0]).
-            let homes = self.prefix_homes.entry(traj.group_id).or_default();
-            if !homes.contains(&engine) {
-                homes.push(engine);
-            }
+            // First recorder == the group's home engine (route() reads [0]).
+            self.table.note_prefix_home(traj.group_id, engine);
         }
         // Open-loop requests carry their own sampled length cap; everything
         // else uses the global `max_new_tokens` policy.
@@ -474,7 +413,7 @@ impl Coordinator {
             retain,
             prefix,
         };
-        self.engine_load[engine] += 1;
+        self.table.load[engine] += 1;
         let version = self.policy_version;
         self.inflight.insert(traj.id, InFlight { traj, engine, retain, version });
         self.pool.send(engine, EngineCmd::Assign(item));
@@ -565,7 +504,7 @@ impl Coordinator {
         // Staleness guard (off by default, matching the paper). Evicted
         // partials will never resume — free their retained slots too.
         for stale in self.buffer.evict_stale(self.policy_version) {
-            if let Some(r) = self.retained_at.remove(&stale.id) {
+            if let Some(r) = self.table.retained_at.remove(&stale.id) {
                 self.pool.send(
                     r.engine,
                     EngineCmd::ReleaseRetained { request_id: stale.id, token: r.token },
@@ -740,8 +679,8 @@ impl Coordinator {
                     leftovers.sort_unstable();
                     for id in leftovers {
                         let inf = self.inflight.remove(&id).unwrap();
-                        self.engine_load[inf.engine] =
-                            self.engine_load[inf.engine].saturating_sub(1);
+                        self.table.load[inf.engine] =
+                            self.table.load[inf.engine].saturating_sub(1);
                         let parked = self.park_partial(inf.traj);
                         // A hinted dispatch dropped unstarted still has its
                         // retained slot resident (only BUSY slots flush on
@@ -758,11 +697,12 @@ impl Coordinator {
                         if let Some(token) = inf.retain {
                             // A dead engine's retained slot died with it —
                             // neither restorable nor releasable.
-                            let invalidated = self.dead[inf.engine]
+                            let invalidated = self.table.dead[inf.engine]
                                 || (!self.cfg.rollout.retain_kv_across_sync
                                     && self.policy_version != inf.version);
                             if parked && !invalidated {
-                                self.retained_at
+                                self.table
+                                    .retained_at
                                     .insert(id, RetainedRef { engine: inf.engine, token });
                             } else if !invalidated {
                                 self.pool.send(
@@ -796,17 +736,17 @@ impl Coordinator {
     /// Drain completion: every engine has either delivered its `Flushed`
     /// marker or died (dead engines flush nothing).
     fn drain_complete(&self) -> bool {
-        (0..self.pool.engines()).all(|e| self.dead[e] || self.drv().flushed.contains(&e))
+        (0..self.pool.engines()).all(|e| self.table.dead[e] || self.drv().flushed.contains(&e))
     }
 
     /// Declare `engine` dead and recover its work. Idempotent: a late
     /// `EngineFailed` event for an engine the watchdog already buried is
     /// a no-op.
     fn fail_engine(&mut self, engine: usize, error: &str) -> Result<()> {
-        if self.dead[engine] {
+        if self.table.dead[engine] {
             return Ok(());
         }
-        self.dead[engine] = true;
+        self.table.dead[engine] = true;
         self.drv_mut().stats.engine_failures += 1;
         eprintln!("coordinator: engine {engine} failed: {error}");
         self.recover_failed(engine, error)
@@ -821,11 +761,7 @@ impl Coordinator {
     /// survivors the stage fails with a structured degraded error rather
     /// than hanging (a vacuous drain still completes: leftovers park).
     fn recover_failed(&mut self, engine: usize, error: &str) -> Result<()> {
-        self.retained_at.retain(|_, r| r.engine != engine);
-        for homes in self.prefix_homes.values_mut() {
-            homes.retain(|e| *e != engine);
-        }
-        self.prefix_homes.retain(|_, h| !h.is_empty());
+        self.table.drop_replica_routes(engine);
         let draining = self.drv().phase == StagePhase::Draining;
         if self.live_engines() == 0 && !draining {
             bail!(
@@ -849,7 +785,7 @@ impl Coordinator {
         let sampling = self.drv().sampling;
         for id in lost {
             let inf = self.inflight.remove(&id).unwrap();
-            self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
+            self.table.load[inf.engine] = self.table.load[inf.engine].saturating_sub(1);
             self.drv_mut().stats.redispatched_trajectories += 1;
             // Recovery is not new work: don't charge it against a
             // naive-partial wave allowance.
@@ -868,12 +804,12 @@ impl Coordinator {
     fn watchdog_fire(&mut self, stall: Duration) -> Result<()> {
         let draining = self.drv().phase == StagePhase::Draining;
         let stalled: Vec<usize> = (0..self.pool.engines())
-            .filter(|e| !self.dead[*e])
+            .filter(|e| !self.table.dead[*e])
             .filter(|e| {
                 if draining {
                     !self.drv().flushed.contains(e)
                 } else {
-                    self.engine_load[*e] > 0
+                    self.table.load[*e] > 0
                 }
             })
             .collect();
@@ -883,7 +819,7 @@ impl Coordinator {
         // Mark ALL stalled engines dead before recovering any, so
         // re-dispatch never routes one stalled engine's work at another.
         for &e in &stalled {
-            self.dead[e] = true;
+            self.table.dead[e] = true;
             self.drv_mut().stats.engine_failures += 1;
             eprintln!(
                 "coordinator: engine {e} stalled ({:.0}s without events) — declared dead",
@@ -1076,7 +1012,7 @@ impl Coordinator {
             EngineEvent::EngineFailed { .. } | EngineEvent::Batch(_) => None,
         };
         if let Some(e) = from {
-            if self.dead[e] {
+            if self.table.dead[e] {
                 return Ok(());
             }
         }
@@ -1090,6 +1026,11 @@ impl Coordinator {
                 // over its lifetime; remember the latest so finish_stage
                 // can report per-stage deltas against the begin_stage
                 // snapshot.
+                // Latest KV-block residency per replica — the routing
+                // table's observability gauge (never a routing input).
+                if let Some(g) = self.table.kv_blocks.get_mut(t.engine) {
+                    *g = t.kv_blocks;
+                }
                 if let Some(seen) = self.kv_seen.get_mut(t.engine) {
                     seen.prefix_tokens_shared =
                         seen.prefix_tokens_shared.max(t.prefix_tokens_shared);
@@ -1122,15 +1063,15 @@ impl Coordinator {
                 // drop is always processed before any later retention it
                 // grants for the same request. (Entries already gone —
                 // coordinator-initiated releases — are a harmless no-op.)
-                if self.retained_at.get(&request_id).is_some_and(|r| r.engine == engine) {
-                    self.retained_at.remove(&request_id);
+                if self.table.retained_at.get(&request_id).is_some_and(|r| r.engine == engine) {
+                    self.table.retained_at.remove(&request_id);
                 }
             }
             EngineEvent::Done { engine, result } => {
                 let Some(inf) = self.inflight.remove(&result.request_id) else {
                     bail!("unknown request {} from engine {engine}", result.request_id);
                 };
-                self.engine_load[inf.engine] = self.engine_load[inf.engine].saturating_sub(1);
+                self.table.load[inf.engine] = self.table.load[inf.engine].saturating_sub(1);
                 let mut traj = inf.traj;
                 // Resume length BEFORE this assignment's tokens append —
                 // exactly what a replay would have recomputed.
@@ -1163,7 +1104,7 @@ impl Coordinator {
                             // (engines that never saw the group — or
                             // already pressure-evicted the entry — ignore
                             // the command).
-                            if let Some(homes) = self.prefix_homes.remove(&gid) {
+                            if let Some(homes) = self.table.prefix_homes.remove(&gid) {
                                 for e in homes {
                                     self.pool.send(e, EngineCmd::ReleasePrefix { key: gid });
                                 }
@@ -1192,8 +1133,7 @@ impl Coordinator {
                             if parked {
                                 // Remember where the KV lives so the next
                                 // dispatch can route the resume home.
-                                self.retained_at
-                                    .insert(id, RetainedRef { engine, token });
+                                self.table.retained_at.insert(id, RetainedRef { engine, token });
                             } else {
                                 // Abandoned (empty) partial — the engine
                                 // retained for nothing; free the slot.
@@ -1449,7 +1389,7 @@ impl Coordinator {
                 Self::scan_open_loop_event(
                     &ev,
                     quantum_ticks,
-                    &self.dead,
+                    &self.table.dead,
                     &mut engine_steps,
                     &mut vnow,
                     &idx_of_traj,
@@ -1498,7 +1438,27 @@ impl Coordinator {
     /// Buffered partials whose KV is still retained on some engine (test /
     /// diagnostics: the affinity map size).
     pub fn retained_partials(&self) -> usize {
-        self.retained_at.len()
+        self.table.retained_at.len()
+    }
+
+    /// Start draining a replica: it keeps its in-flight work but receives
+    /// no new dispatches until [`Coordinator::undrain_engine`]. Advisory —
+    /// when every live replica drains, routing overrides the flags (work
+    /// must land somewhere). Returns false for a dead replica.
+    pub fn drain_engine(&mut self, engine: usize) -> bool {
+        self.table.set_draining(engine, true)
+    }
+
+    /// Return a draining replica to full routing rotation. Returns false
+    /// for a dead replica (death is terminal).
+    pub fn undrain_engine(&mut self, engine: usize) -> bool {
+        self.table.set_draining(engine, false);
+        !self.table.dead[engine]
+    }
+
+    /// Health/drain snapshot across the fleet (Healthy | Draining | Dead).
+    pub fn replica_health(&self) -> Vec<ReplicaHealth> {
+        self.table.health()
     }
 
     /// Shut the engine pool down (joins every engine thread).

@@ -127,10 +127,33 @@ impl EnginePool {
         B: Backend + 'static,
         F: Fn(usize) -> Box<dyn FnOnce() -> Result<B> + Send> + Sync,
     {
+        Self::spawn_supervised_at(0, n, slots_per_engine, opts, sup, seed, factory)
+    }
+
+    /// [`EnginePool::spawn_supervised`] with an explicit engine-id base:
+    /// the `n` engines get ids `id_base .. id_base + n`, and every event
+    /// they emit carries those ids. The engine-host process mode uses this
+    /// so a host's engines are born with their POOL-GLOBAL replica ids —
+    /// events cross the wire untranslated, and the per-engine RNG stream
+    /// (`seed ^ id`-derived) matches what a single local pool of the same
+    /// total size would produce. `factory` still receives the global id.
+    pub fn spawn_supervised_at<B, F>(
+        id_base: usize,
+        n: usize,
+        slots_per_engine: usize,
+        opts: EngineOpts,
+        sup: SupervisorOpts,
+        seed: u64,
+        factory: F,
+    ) -> Result<EnginePool>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Box<dyn FnOnce() -> Result<B> + Send> + Sync,
+    {
         let (ev_tx, ev_rx) = channel::<EngineEvent>();
         let mut senders = Vec::new();
         let mut handles = Vec::new();
-        for id in 0..n {
+        for id in id_base..id_base + n {
             let (cmd_tx, cmd_rx) = channel::<EngineCmd>();
             let tx = ev_tx.clone();
             let build = factory(id);
@@ -166,6 +189,16 @@ impl EnginePool {
     /// Number of engine threads.
     pub fn engines(&self) -> usize {
         self.senders.len()
+    }
+
+    /// Detach the event receiver, replacing it with a permanently-empty
+    /// stand-in. The engine-host socket loop uses this to pump events from
+    /// a dedicated thread while the pool (command senders) stays on the
+    /// read thread; after the swap `try_next`/`next_before` on the pool
+    /// itself report Disconnected.
+    pub fn take_events(&mut self) -> Receiver<EngineEvent> {
+        let (_dead_tx, dead_rx) = channel::<EngineEvent>();
+        std::mem::replace(&mut self.events, dead_rx)
     }
 
     /// Non-blocking poll: the next queued event, if one is already

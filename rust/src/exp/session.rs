@@ -13,11 +13,12 @@
 //! across the step boundary; the next step (or an eval's `abort_stage`)
 //! picks it up.
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
-use crate::config::Config;
+use crate::config::{Config, TransportKind};
 use crate::coordinator::{Coordinator, RolloutOutput, RolloutStats};
 use crate::engine::{EnginePool, XlaBackend};
+use crate::router::RouterPool;
 use crate::eval::{eval_all, EvalReport};
 use crate::tasks::Dataset;
 use crate::trainer::{MetricsLog, SftTrainer, StepMetrics, Trainer};
@@ -122,28 +123,55 @@ impl RlSession {
         };
         let params = trainer.params()?;
         let spec = trainer.rt.spec.clone();
-        let dir = cfg.artifacts_dir.clone();
-        let variant = cfg.model.clone();
-        let init_params = params.clone();
-        let chunked_replay = cfg.engine.chunked_replay;
-        let pool = EnginePool::spawn_supervised(
-            cfg.engine.engines,
-            spec.slots,
-            cfg.engine.engine_opts(),
-            cfg.engine.supervisor_opts(),
-            cfg.train.seed,
-            move |_id| {
-                let dir = dir.clone();
-                let variant = variant.clone();
-                let p = init_params.clone();
-                Box::new(move || {
-                    let mut b = XlaBackend::open(&dir, &variant, &p)?;
-                    b.chunked_replay = chunked_replay;
-                    Ok(b)
-                })
-            },
-        )?;
-        let mut coord = Coordinator::new(pool, cfg.clone(), spec.max_seq);
+        let mut coord = match cfg.router.transport {
+            TransportKind::Local => {
+                let dir = cfg.artifacts_dir.clone();
+                let variant = cfg.model.clone();
+                let init_params = params.clone();
+                let chunked_replay = cfg.engine.chunked_replay;
+                let pool = EnginePool::spawn_supervised(
+                    cfg.engine.engines,
+                    spec.slots,
+                    cfg.engine.engine_opts(),
+                    cfg.engine.supervisor_opts(),
+                    cfg.train.seed,
+                    move |_id| {
+                        let dir = dir.clone();
+                        let variant = variant.clone();
+                        let p = init_params.clone();
+                        Box::new(move || {
+                            let mut b = XlaBackend::open(&dir, &variant, &p)?;
+                            b.chunked_replay = chunked_replay;
+                            Ok(b)
+                        })
+                    },
+                )?;
+                Coordinator::new(pool, cfg.clone(), spec.max_seq)
+            }
+            TransportKind::Tcp => {
+                let pool = RouterPool::connect(&cfg.router, cfg.train.seed)
+                    .context("connecting engine-host fleet")?;
+                ensure!(
+                    pool.slots_per_engine == spec.slots,
+                    "engine-hosts run {} slots/engine but the model artifact has {}",
+                    pool.slots_per_engine,
+                    spec.slots
+                );
+                eprintln!(
+                    "router: tcp transport up — {} engines x {} slots across {} host(s)",
+                    pool.engines(),
+                    pool.slots_per_engine,
+                    cfg.router.host_list().len()
+                );
+                let mut coord = Coordinator::new(pool, cfg.clone(), spec.max_seq);
+                // Remote engines booted with their own init params; push the
+                // trainer's actual weights before anything is in flight (the
+                // local path skips this — its factories embed the params —
+                // and a pre-dispatch broadcast cannot shift any golden).
+                coord.sync_weights(trainer.step() as u64, params.clone());
+                coord
+            }
+        };
         coord.policy_version = trainer.step() as u64;
         let dataset = Dataset::train(cfg.train.seed);
         Ok(RlSession {

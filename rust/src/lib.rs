@@ -20,6 +20,10 @@
 //!   early termination, the partial-trajectory buffer with stage-tagged
 //!   log-probs, prioritized resumption with affinity-aware resume routing;
 //!   sync / naive-partial baselines.
+//! - [`net`], [`router`] — the transport tier: framed std-only wire
+//!   protocol, `copris engine-host` process mode, and the `RouterPool` +
+//!   routing table that let the rollout fleet span processes with health
+//!   checks, draining, and failover (local in-process transport default).
 //! - [`trainer`] — GRPO with cross-stage importance-sampling correction.
 //! - [`exp`] — experiment drivers regenerating every paper table & figure.
 //! - [`loadgen`] — open-loop traffic generation (seeded Poisson/bursty
@@ -47,6 +51,8 @@ pub mod exp;
 pub mod loadgen;
 #[allow(missing_docs)]
 pub mod model;
+pub mod net;
+pub mod router;
 #[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]

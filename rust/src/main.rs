@@ -1,11 +1,13 @@
 //! `copris` — CLI for the CoPRIS reproduction.
 //!
 //! Subcommands:
-//!   train   — SFT warmup + GRPO RL training (rollout mode per --set)
-//!   eval    — evaluate a checkpoint (or fresh init) on the five suites
-//!   config  — print a config preset as the paper's Table 3
-//!   trace   — one rollout stage; print the Fig-1 long-tail diagnostics
-//!   slo     — open-loop load generator + SLO scoreboard (lockstep sim)
+//!   train       — SFT warmup + GRPO RL training (rollout mode per --set)
+//!   eval        — evaluate a checkpoint (or fresh init) on the five suites
+//!   config      — print a config preset as the paper's Table 3
+//!   trace       — one rollout stage; print the Fig-1 long-tail diagnostics
+//!   slo         — open-loop load generator + SLO scoreboard (lockstep sim)
+//!   engine-host — serve rollout engines over TCP for a `transport = "tcp"`
+//!                 router (multi-process fleet)
 //!
 //! Examples:
 //!   copris train --model small --steps 40 --sft-steps 150 --mode copris
@@ -13,6 +15,7 @@
 //!   copris config --preset paper
 //!   copris trace --model small --mode sync
 //!   copris slo --workload poisson --rate 400 --requests 300 --seed 7
+//!   copris engine-host --listen 127.0.0.1:7101 --engines 2 --backend mock
 
 use anyhow::{bail, Context, Result};
 
@@ -32,7 +35,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: copris <train|eval|config|trace|slo> [options]\n\
+        "usage: copris <train|eval|config|trace|slo|engine-host> [options]\n\
          common options:\n\
            --model <variant>        artifacts/<variant> (default small)\n\
            --artifacts <dir>        artifacts root (default artifacts)\n\
@@ -65,6 +68,19 @@ fn usage() -> ! {
                                     queue/quantum via --set workload.*\n\
            --metrics <path.jsonl>   write per-step metrics\n\
            --set section.key=value  any config override (repeatable)\n\
+         engine-host options (multi-process fleet; router side sets\n\
+         router.transport=tcp and router.hosts=h1:p1,h2:p2):\n\
+           --listen <addr:port>     bind address (default 127.0.0.1:0;\n\
+                                    the bound address is printed on stdout)\n\
+           --engines N              engines this host serves (default 1)\n\
+           --slots N                decode slots per engine (mock backend;\n\
+                                    xla uses the artifact's slot count)\n\
+           --backend <mock|xla>     backend per engine (default mock)\n\
+           --mock-min-len N  --mock-spread N  --mock-decode-delay-us N\n\
+           --mock-max-seq N         mock script knobs (defaults 2/12/0/96)\n\
+           --once                   exit after the first router disconnects\n\
+           --crash-after-events N   chaos: kill the process (exit 9) after\n\
+                                    forwarding exactly N event frames\n\
            --preset <paper|scaled-small|scaled-tiny|sync-baseline|pipelined-small>"
     );
     std::process::exit(2);
@@ -153,6 +169,7 @@ fn run() -> Result<()> {
             "no-retain-kv",
             "retain-kv-across-sync",
             "no-prefix-sharing",
+            "once",
         ],
     )?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("");
@@ -162,6 +179,7 @@ fn run() -> Result<()> {
         "config" => cmd_config(&args),
         "trace" => cmd_trace(&args),
         "slo" => cmd_slo(&args),
+        "engine-host" => cmd_engine_host(&args),
         _ => usage(),
     }
 }
@@ -171,7 +189,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let sft_steps = args.get_usize("sft-steps", 100)?;
     let steps = cfg.train.steps;
     println!(
-        "== copris train: model={} mode={} N'={} B={} G={} IS={} pipeline={} steps={steps} ==",
+        "== copris train: model={} mode={} N'={} B={} G={} IS={} pipeline={} transport={} steps={steps} ==",
         cfg.model,
         cfg.rollout.mode.name(),
         cfg.rollout.concurrency,
@@ -179,6 +197,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.rollout.group_size,
         cfg.rollout.importance_sampling,
         cfg.rollout.pipeline,
+        cfg.router.transport.name(),
     );
     let mut sess = RlSession::build(cfg)?;
     sess.verbose = args.flag("verbose");
@@ -342,6 +361,71 @@ fn cmd_slo(args: &Args) -> Result<()> {
         bail!("lockstep sim tripped the livelock valve before draining");
     }
     Ok(())
+}
+
+fn cmd_engine_host(args: &Args) -> Result<()> {
+    use copris::net::host::{serve, HostBackend, HostConfig};
+    let cfg = build_config(args)?;
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let engines = args.get_usize("engines", 1)?;
+    if engines == 0 {
+        bail!("engine-host needs --engines >= 1");
+    }
+    let crash_after = match args.get("crash-after-events") {
+        Some(s) => Some(s.parse::<u64>().with_context(|| format!("--crash-after-events {s}"))?),
+        None => None,
+    };
+    let (backend, slots) = match args.get("backend").unwrap_or("mock") {
+        // Mock knob defaults mirror MockBackend::new so an unconfigured
+        // host scripts identically to an in-process pool.
+        "mock" => {
+            let slots = args.get_usize("slots", 4)?;
+            let backend = HostBackend::Mock {
+                min_len: args.get_usize("mock-min-len", 2)?,
+                spread: args.get_usize("mock-spread", 12)?,
+                decode_delay_us: args.get_u64("mock-decode-delay-us", 0)?,
+                max_seq: args.get_usize("mock-max-seq", 96)?,
+            };
+            (backend, slots)
+        }
+        "xla" => {
+            // The artifact fixes the slot count; trainer init supplies
+            // placeholder params (the router broadcasts the real weights
+            // right after connecting, before anything is in flight).
+            let trainer = copris::trainer::Trainer::new(cfg.clone(), cfg.train.seed as i32)
+                .context("building trainer for engine-host init params")?;
+            let spec = trainer.rt.spec.clone();
+            let backend = HostBackend::Xla {
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                model: cfg.model.clone(),
+                chunked_replay: cfg.engine.chunked_replay,
+                init_params: trainer.params()?,
+            };
+            (backend, spec.slots)
+        }
+        other => bail!("unknown engine-host backend {other:?} (mock|xla)"),
+    };
+    if slots == 0 {
+        bail!("engine-host needs --slots >= 1");
+    }
+    let hc = HostConfig {
+        engines,
+        slots,
+        engine_opts: cfg.engine.engine_opts(),
+        sup: cfg.engine.supervisor_opts(),
+        backend,
+        crash_after_events: crash_after,
+        crash_exit: crash_after.is_some(),
+    };
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding engine-host on {listen}"))?;
+    let addr = listener.local_addr().context("reading bound address")?;
+    // Stdout, flushed: launchers (tests, scripts) parse this line to learn
+    // the port when --listen ends in :0.
+    println!("engine-host listening on {addr}");
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    serve(listener, hc, args.flag("once"))
 }
 
 fn print_eval(report: &copris::eval::EvalReport) {

@@ -1,0 +1,271 @@
+//! Engine-host process mode: an [`EnginePool`] behind a socket.
+//!
+//! `copris engine-host --listen ADDR` runs [`serve`]: accept a router
+//! connection, handshake, spawn the engines, then pump frames both ways
+//! until the router says goodbye (or the link drops). The host is
+//! deliberately dumb — ALL scheduling intelligence (routing, retention
+//! affinity, failure recovery) stays router-side; the host only
+//! translates frames to channel sends and back:
+//!
+//! * `Hello { engine_base, seed }` → engines are spawned via
+//!   [`EnginePool::spawn_supervised_at`] with POOL-GLOBAL ids
+//!   `engine_base..engine_base+n` and the ROUTER's seed, so every event
+//!   crosses the wire untranslated and each engine's RNG stream is
+//!   bit-identical to the one a single local pool would give that id.
+//!   This is the mechanism behind the local-vs-tcp golden pin.
+//! * `Cmd { engine, cmd }` → `pool.send(engine - engine_base, cmd)`
+//!   (the pool's sender array is locally indexed).
+//! * pool events → `Event` frames, in channel order, over one writer.
+//! * `Ping` → `Pong` (router heartbeats); `Goodbye`/EOF → orderly
+//!   teardown (engines joined, socket closed).
+//!
+//! Chaos hooks: `crash_after_events` severs the link (and, with
+//! `crash_exit`, kills the process with exit code 9) after forwarding
+//! exactly N event frames — a deterministic "host died mid-stage" for
+//! the chaos suite and CI.
+
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::engine::{EngineOpts, EnginePool, MockBackend, SupervisorOpts, XlaBackend};
+use crate::net::wire::{self, WireMsg, PROTO_VERSION};
+
+/// Which backend the host builds inside each engine thread.
+#[derive(Clone)]
+pub enum HostBackend {
+    /// Deterministic scripted mock (tests, goldens, chaos, benches).
+    Mock {
+        /// Scripted minimum response length.
+        min_len: usize,
+        /// Scripted response-length spread (length = min + hash % spread).
+        spread: usize,
+        /// Artificial per-decode-call delay in microseconds (0 = none);
+        /// lets loopback benches model nontrivial step times.
+        decode_delay_us: u64,
+        /// Mock sequence horizon (slot capacity per sequence).
+        max_seq: usize,
+    },
+    /// Real AOT-compiled model artifacts (see [`XlaBackend::open`]).
+    Xla {
+        /// Artifacts directory holding compiled model variants.
+        artifacts_dir: String,
+        /// Model variant name under the artifacts dir.
+        model: String,
+        /// Chunked-prefill replay flag (mirrors `engine.chunked_replay`).
+        chunked_replay: bool,
+        /// Initial parameter vector uploaded at engine build.
+        init_params: Arc<Vec<f32>>,
+    },
+}
+
+/// Everything a host needs to serve one router connection.
+#[derive(Clone)]
+pub struct HostConfig {
+    /// Engines this host contributes to the fleet.
+    pub engines: usize,
+    /// Decode slots per engine (must match the rest of the fleet).
+    pub slots: usize,
+    /// Paged-KV + step-budget options for each engine.
+    pub engine_opts: EngineOpts,
+    /// Supervision policy (retry budget, backoff, stall watchdog).
+    pub sup: SupervisorOpts,
+    /// Backend each engine thread builds.
+    pub backend: HostBackend,
+    /// Chaos hook: sever the link after forwarding exactly N event
+    /// frames (`None` = never).
+    pub crash_after_events: Option<u64>,
+    /// With `crash_after_events`: kill the whole process (exit code 9)
+    /// instead of just severing — the subprocess-kill chaos test.
+    pub crash_exit: bool,
+}
+
+/// Accept router connections and serve them sequentially (one at a
+/// time — a host belongs to one router). With `once`, return after the
+/// first connection ends; otherwise keep accepting until accept fails.
+pub fn serve(listener: TcpListener, hc: HostConfig, once: bool) -> Result<()> {
+    loop {
+        let (stream, peer) = listener.accept().context("accepting router connection")?;
+        eprintln!("engine-host: router connected from {peer}");
+        match serve_connection(stream, hc.clone()) {
+            Ok(()) => eprintln!("engine-host: router {peer} disconnected"),
+            Err(e) => eprintln!("engine-host: connection from {peer} failed: {e:#}"),
+        }
+        if once {
+            return Ok(());
+        }
+    }
+}
+
+/// Serve one router connection end-to-end: handshake, spawn the pool,
+/// pump frames until Goodbye/EOF, tear down.
+pub fn serve_connection(stream: TcpStream, hc: HostConfig) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut rd = BufReader::new(stream.try_clone().context("cloning host reader")?);
+
+    // 1. Handshake: the router tells us our global id base and the seed.
+    let hello = wire::read_msg(&mut rd).context("awaiting Hello")?;
+    let WireMsg::Hello { proto, engine_base, seed } = hello else {
+        bail!("expected Hello as the first frame");
+    };
+    ensure!(
+        proto == PROTO_VERSION,
+        "router speaks protocol v{proto}, this host speaks v{PROTO_VERSION}"
+    );
+    let base = usize::try_from(engine_base).context("engine base")?;
+
+    // 2. Spawn the engines with their pool-global ids (see module docs).
+    let mut pool = spawn_pool(&hc, base, seed)?;
+    let ev_rx = pool.take_events();
+
+    // 3. Ack with our capacity; the router sizes its routing table off
+    //    this.
+    let ack = WireMsg::HelloAck {
+        proto: PROTO_VERSION,
+        engines: hc.engines as u64,
+        slots: hc.slots as u64,
+    };
+    {
+        let mut w = stream.try_clone().context("cloning ack writer")?;
+        wire::write_msg(&mut w, &ack).context("sending HelloAck")?;
+    }
+
+    // 4. Single writer thread owns the socket's write half; the event
+    //    pump and the reader (for Pongs) both feed it pre-encoded frames
+    //    through a channel, so frames never interleave.
+    let (out_tx, out_rx) = channel::<Vec<u8>>();
+    let writer = {
+        let mut w = stream.try_clone().context("cloning frame writer")?;
+        std::thread::Builder::new()
+            .name("host-writer".into())
+            .spawn(move || {
+                while let Ok(frame) = out_rx.recv() {
+                    // On a dead link keep draining silently so senders
+                    // never observe an error (channel is unbounded).
+                    let _ = w.write_all(&frame);
+                }
+            })
+            .context("spawning host writer")?
+    };
+
+    // 5. Event pump: pool events → Event frames, in channel order.
+    let pump = {
+        let out_tx = out_tx.clone();
+        let sever = stream.try_clone().context("cloning chaos stream")?;
+        let crash_after = hc.crash_after_events;
+        let crash_exit = hc.crash_exit;
+        std::thread::Builder::new()
+            .name("host-pump".into())
+            .spawn(move || {
+                let mut sent = 0u64;
+                while let Ok(ev) = ev_rx.recv() {
+                    if let Some(n) = crash_after {
+                        if sent >= n {
+                            // Deterministic chaos: exactly n event frames
+                            // made it out, then the host "dies".
+                            let _ = sever.shutdown(Shutdown::Both);
+                            if crash_exit {
+                                std::process::exit(9);
+                            }
+                            return;
+                        }
+                    }
+                    let frame = wire::encode(&WireMsg::Event(ev));
+                    sent += 1;
+                    if out_tx.send(frame).is_err() {
+                        return;
+                    }
+                }
+            })
+            .context("spawning host event pump")?
+    };
+
+    // 6. Reader loop on this thread: commands in, pongs out.
+    let n = hc.engines;
+    loop {
+        match wire::read_msg(&mut rd) {
+            Ok(WireMsg::Cmd { engine, cmd }) => {
+                let e = usize::try_from(engine).unwrap_or(usize::MAX);
+                if e < base || e >= base + n {
+                    eprintln!("engine-host: cmd for engine {e} outside [{base}, {})", base + n);
+                    continue;
+                }
+                pool.send(e - base, cmd);
+            }
+            Ok(WireMsg::Ping { seq }) => {
+                let _ = out_tx.send(wire::encode(&WireMsg::Pong { seq }));
+            }
+            Ok(WireMsg::Goodbye) => break,
+            Ok(_) => {
+                eprintln!("engine-host: unexpected frame from router; closing");
+                break;
+            }
+            Err(_) => break, // EOF or link error — either way, tear down
+        }
+    }
+
+    // 7. Teardown: joining the pool drops the engines' event senders,
+    //    which ends the pump; dropping our out_tx (after the pump's
+    //    clone dies) ends the writer.
+    drop(out_tx);
+    pool.shutdown();
+    let _ = pump.join();
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+    Ok(())
+}
+
+/// Spawn this host's engine pool at the router-assigned id base.
+fn spawn_pool(hc: &HostConfig, base: usize, seed: u64) -> Result<EnginePool> {
+    match &hc.backend {
+        HostBackend::Mock { min_len, spread, decode_delay_us, max_seq } => {
+            let (min_len, spread, delay, max_seq) = (*min_len, *spread, *decode_delay_us, *max_seq);
+            let slots = hc.slots;
+            EnginePool::spawn_supervised_at(
+                base,
+                hc.engines,
+                hc.slots,
+                hc.engine_opts,
+                hc.sup,
+                seed,
+                move |_id| {
+                    Box::new(move || {
+                        let mut b = MockBackend::new(slots, max_seq);
+                        b.min_len = min_len;
+                        b.spread = spread.max(1);
+                        if delay > 0 {
+                            b.decode_delay = Some(std::time::Duration::from_micros(delay));
+                        }
+                        Ok(b)
+                    })
+                },
+            )
+        }
+        HostBackend::Xla { artifacts_dir, model, chunked_replay, init_params } => {
+            let (dir, variant) = (artifacts_dir.clone(), model.clone());
+            let p = init_params.clone();
+            let chunked = *chunked_replay;
+            EnginePool::spawn_supervised_at(
+                base,
+                hc.engines,
+                hc.slots,
+                hc.engine_opts,
+                hc.sup,
+                seed,
+                move |_id| {
+                    let dir = dir.clone();
+                    let variant = variant.clone();
+                    let p = p.clone();
+                    Box::new(move || {
+                        let mut b = XlaBackend::open(&dir, &variant, &p)?;
+                        b.chunked_replay = chunked;
+                        Ok(b)
+                    })
+                },
+            )
+        }
+    }
+}

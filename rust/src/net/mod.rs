@@ -1,0 +1,8 @@
+//! Transport tier: the framed wire protocol ([`wire`]) and the
+//! engine-host process mode ([`host`]) that together let the rollout
+//! fleet span processes and machines. The router side lives in
+//! [`crate::router`]; this module is everything below it — bytes on a
+//! socket and the process that answers them.
+
+pub mod host;
+pub mod wire;

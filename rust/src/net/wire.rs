@@ -1,0 +1,938 @@
+//! Length-prefixed framed wire protocol for the router ↔ engine-host link.
+//!
+//! Hand-rolled, std-only serialization (no serde in the vendored crate
+//! set): every frame is a little-endian `u32` payload length followed by
+//! the payload, whose first byte is the message tag. Integers are
+//! fixed-width little-endian; floats are carried as their IEEE-754 bit
+//! patterns (`to_bits`/`from_bits`), which is what makes the local and
+//! multi-process transports **bit-identical** — a logprob that crosses the
+//! wire decodes to the exact same `f32` the engine sampled.
+//!
+//! The message set mirrors the in-process channel types verbatim:
+//! [`EngineCmd`] frames flow router → host, [`EngineEvent`] frames host →
+//! router, plus a tiny session layer (`Hello`/`HelloAck` handshake,
+//! `Ping`/`Pong` heartbeats, `Goodbye` for orderly close). `Batch` events
+//! nest recursively, so one engine step's events arrive in one frame and
+//! unpack in the same order the in-process channel would deliver them.
+//!
+//! Decoding is defensive: every read is bounds-checked, frames are capped
+//! at [`MAX_FRAME_LEN`], and unknown tags are errors — a corrupt or
+//! foreign byte stream fails fast instead of desynchronizing the link.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::{
+    EngineCmd, EngineEvent, FinishReason, SamplingParams, StepTrace, WorkItem, WorkResult,
+};
+
+/// Protocol version carried in the `Hello`/`HelloAck` handshake; bump on
+/// any wire-format change so mismatched binaries refuse to pair instead of
+/// mis-decoding each other.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Upper bound on a single frame's payload (1 GiB). Big enough for a full
+/// `SetParams` weight broadcast; small enough that a corrupt length prefix
+/// fails immediately instead of attempting a absurd allocation.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// One framed message on the router ↔ engine-host link.
+pub enum WireMsg {
+    /// Router → host greeting, sent once per session before anything else.
+    /// Assigns the host's engines their GLOBAL replica-id range (the host
+    /// spawns engines `engine_base .. engine_base + n`, so every event it
+    /// emits already carries pool-global engine ids) and the engine RNG
+    /// seed, which must match the local-transport spawn for bit-identical
+    /// sampled streams.
+    Hello {
+        /// Must equal [`PROTO_VERSION`] on both sides.
+        proto: u32,
+        /// First global engine id of this host's replica range.
+        engine_base: u64,
+        /// Engine RNG seed (same value `EnginePool::spawn*` takes).
+        seed: u64,
+    },
+    /// Host → router handshake reply describing the replica range the host
+    /// actually spawned.
+    HelloAck {
+        /// Must equal [`PROTO_VERSION`] on both sides.
+        proto: u32,
+        /// Number of engines this host runs.
+        engines: u64,
+        /// Decode slots per engine (must be uniform across the fleet).
+        slots: u64,
+    },
+    /// Router → host: one engine command, addressed by GLOBAL engine id
+    /// (the host subtracts its `engine_base`).
+    Cmd {
+        /// Global engine id the command targets.
+        engine: u64,
+        /// The command, exactly as the in-process pool would send it.
+        cmd: EngineCmd,
+    },
+    /// Host → router: one engine event, engine ids already pool-global.
+    Event(EngineEvent),
+    /// Router → host heartbeat probe.
+    Ping {
+        /// Echo token; the matching `Pong` returns it.
+        seq: u64,
+    },
+    /// Host → router heartbeat reply.
+    Pong {
+        /// The `Ping`'s echo token.
+        seq: u64,
+    },
+    /// Orderly session close (either side). The router sends it after the
+    /// final `Shutdown` commands; the host exits its serve loop on it.
+    Goodbye,
+}
+
+// ---------------------------------------------------------------------------
+// Primitive writers/readers
+// ---------------------------------------------------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(buf: &mut Vec<u8>, v: i64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    put_u32(buf, v.to_bits());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    put_u8(buf, v as u8);
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_vec_i32(buf: &mut Vec<u8>, v: &[i32]) {
+    put_u32(buf, v.len() as u32);
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_vec_f32(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u32(buf, v.len() as u32);
+    for x in v {
+        put_f32(buf, *x);
+    }
+}
+
+fn put_vec_u64(buf: &mut Vec<u8>, v: &[u64]) {
+    put_u32(buf, v.len() as u32);
+    for x in v {
+        put_u64(buf, *x);
+    }
+}
+
+fn put_opt_u64(buf: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            put_u8(buf, 1);
+            put_u64(buf, x);
+        }
+        None => put_u8(buf, 0),
+    }
+}
+
+/// Bounds-checked cursor over one frame's payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).context("wire: length overflow")?;
+        if end > self.buf.len() {
+            bail!("wire: truncated frame ({} bytes needed at offset {})", n, self.pos);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn boolean(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("wire: bad bool byte {b}"),
+        }
+    }
+
+    fn usize_(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).context("wire: u64 does not fit usize")
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("wire: invalid utf-8 string")
+    }
+
+    fn vec_i32(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).context("wire: vec len overflow")?)?;
+        Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).context("wire: vec len overflow")?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(8).context("wire: vec len overflow")?)?;
+        Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.u64()?),
+        })
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("wire: {} trailing bytes after message", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Message tags
+// ---------------------------------------------------------------------------
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_CMD: u8 = 3;
+const TAG_EVENT: u8 = 4;
+const TAG_PING: u8 = 5;
+const TAG_PONG: u8 = 6;
+const TAG_GOODBYE: u8 = 7;
+
+const CMD_ASSIGN: u8 = 0;
+const CMD_SET_PARAMS: u8 = 1;
+const CMD_STOP_GENERATION: u8 = 2;
+const CMD_RELEASE_RETAINED: u8 = 3;
+const CMD_RELEASE_PREFIX: u8 = 4;
+const CMD_SHUTDOWN: u8 = 5;
+
+const EV_DONE: u8 = 0;
+const EV_TRACE: u8 = 1;
+const EV_FLUSHED: u8 = 2;
+const EV_SHUTDOWN: u8 = 3;
+const EV_ENGINE_FAILED: u8 = 4;
+const EV_RETAINED_DROPPED: u8 = 5;
+const EV_BATCH: u8 = 6;
+
+const REASON_EOS: u8 = 0;
+const REASON_LENGTH_CAP: u8 = 1;
+const REASON_PREEMPTED: u8 = 2;
+const REASON_STOPPED: u8 = 3;
+
+/// `Batch` events nest; in practice one level deep (`pool::flush` never
+/// nests), so a small cap suffices to keep a hostile stream from blowing
+/// the decode stack.
+const MAX_BATCH_DEPTH: u32 = 4;
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_sampling(buf: &mut Vec<u8>, s: &SamplingParams) {
+    put_f64(buf, s.temperature);
+    put_f64(buf, s.top_p);
+    put_i64(buf, s.top_k);
+}
+
+fn put_work_item(buf: &mut Vec<u8>, w: &WorkItem) {
+    put_u64(buf, w.request_id);
+    put_vec_i32(buf, &w.prompt);
+    put_vec_i32(buf, &w.resume);
+    put_u64(buf, w.max_total as u64);
+    put_sampling(buf, &w.sampling);
+    put_opt_u64(buf, w.retain);
+    put_opt_u64(buf, w.prefix);
+}
+
+fn reason_tag(r: FinishReason) -> u8 {
+    match r {
+        FinishReason::Eos => REASON_EOS,
+        FinishReason::LengthCap => REASON_LENGTH_CAP,
+        FinishReason::Preempted => REASON_PREEMPTED,
+        FinishReason::Stopped => REASON_STOPPED,
+    }
+}
+
+fn put_work_result(buf: &mut Vec<u8>, r: &WorkResult) {
+    put_u64(buf, r.request_id);
+    put_vec_i32(buf, &r.new_tokens);
+    put_vec_f32(buf, &r.new_logprobs);
+    put_u8(buf, reason_tag(r.reason));
+    put_u64(buf, r.replayed as u64);
+    put_opt_u64(buf, r.retained);
+    put_bool(buf, r.resumed_from_kv);
+}
+
+fn put_trace(buf: &mut Vec<u8>, t: &StepTrace) {
+    put_u64(buf, t.engine as u64);
+    put_f64(buf, t.t_wall);
+    put_f64(buf, t.dur);
+    put_u64(buf, t.active as u64);
+    put_u64(buf, t.slots as u64);
+    put_u64(buf, t.kv_tokens as u64);
+    put_u64(buf, t.kv_blocks as u64);
+    put_f64(buf, t.kv_frag);
+    put_u64(buf, t.prefix_tokens_shared);
+    put_u64(buf, t.cow_copies);
+    put_u64(buf, t.preemptions);
+    put_u64(buf, t.step_tokens as u64);
+    put_u64(buf, t.step_budget as u64);
+    put_u64(buf, t.prefill_chunks);
+    put_f64(buf, t.prefill_stall_saved);
+    put_u64(buf, t.retries);
+    put_u64(buf, t.kv_bytes as u64);
+    put_str(buf, t.sampler_dispatch);
+    put_u64(buf, t.queued as u64);
+}
+
+fn put_cmd(buf: &mut Vec<u8>, cmd: &EngineCmd) {
+    match cmd {
+        EngineCmd::Assign(item) => {
+            put_u8(buf, CMD_ASSIGN);
+            put_work_item(buf, item);
+        }
+        EngineCmd::SetParams { version, params, invalidate_retained } => {
+            put_u8(buf, CMD_SET_PARAMS);
+            put_u64(buf, *version);
+            put_vec_f32(buf, params);
+            put_bool(buf, *invalidate_retained);
+        }
+        EngineCmd::StopGeneration { retain } => {
+            put_u8(buf, CMD_STOP_GENERATION);
+            put_bool(buf, *retain);
+        }
+        EngineCmd::ReleaseRetained { request_id, token } => {
+            put_u8(buf, CMD_RELEASE_RETAINED);
+            put_u64(buf, *request_id);
+            put_u64(buf, *token);
+        }
+        EngineCmd::ReleasePrefix { key } => {
+            put_u8(buf, CMD_RELEASE_PREFIX);
+            put_u64(buf, *key);
+        }
+        EngineCmd::Shutdown => put_u8(buf, CMD_SHUTDOWN),
+    }
+}
+
+fn put_event(buf: &mut Vec<u8>, ev: &EngineEvent) {
+    match ev {
+        EngineEvent::Done { engine, result } => {
+            put_u8(buf, EV_DONE);
+            put_u64(buf, *engine as u64);
+            put_work_result(buf, result);
+        }
+        EngineEvent::Trace(t) => {
+            put_u8(buf, EV_TRACE);
+            put_trace(buf, t);
+        }
+        EngineEvent::Flushed { engine, retain_errors } => {
+            put_u8(buf, EV_FLUSHED);
+            put_u64(buf, *engine as u64);
+            put_u64(buf, *retain_errors);
+        }
+        EngineEvent::ShutDown { engine } => {
+            put_u8(buf, EV_SHUTDOWN);
+            put_u64(buf, *engine as u64);
+        }
+        EngineEvent::EngineFailed { engine, error, inflight, retained } => {
+            put_u8(buf, EV_ENGINE_FAILED);
+            put_u64(buf, *engine as u64);
+            put_str(buf, error);
+            put_vec_u64(buf, inflight);
+            put_vec_u64(buf, retained);
+        }
+        EngineEvent::RetainedDropped { engine, request_id } => {
+            put_u8(buf, EV_RETAINED_DROPPED);
+            put_u64(buf, *engine as u64);
+            put_u64(buf, *request_id);
+        }
+        EngineEvent::Batch(evs) => {
+            put_u8(buf, EV_BATCH);
+            put_u32(buf, evs.len() as u32);
+            for e in evs {
+                put_event(buf, e);
+            }
+        }
+    }
+}
+
+/// Encode one message as a complete frame (length prefix included), ready
+/// for a single `write_all`.
+pub fn encode(msg: &WireMsg) -> Vec<u8> {
+    let mut buf = vec![0u8; 4]; // length prefix back-patched below
+    match msg {
+        WireMsg::Hello { proto, engine_base, seed } => {
+            put_u8(&mut buf, TAG_HELLO);
+            put_u32(&mut buf, *proto);
+            put_u64(&mut buf, *engine_base);
+            put_u64(&mut buf, *seed);
+        }
+        WireMsg::HelloAck { proto, engines, slots } => {
+            put_u8(&mut buf, TAG_HELLO_ACK);
+            put_u32(&mut buf, *proto);
+            put_u64(&mut buf, *engines);
+            put_u64(&mut buf, *slots);
+        }
+        WireMsg::Cmd { engine, cmd } => {
+            put_u8(&mut buf, TAG_CMD);
+            put_u64(&mut buf, *engine);
+            put_cmd(&mut buf, cmd);
+        }
+        WireMsg::Event(ev) => {
+            put_u8(&mut buf, TAG_EVENT);
+            put_event(&mut buf, ev);
+        }
+        WireMsg::Ping { seq } => {
+            put_u8(&mut buf, TAG_PING);
+            put_u64(&mut buf, *seq);
+        }
+        WireMsg::Pong { seq } => {
+            put_u8(&mut buf, TAG_PONG);
+            put_u64(&mut buf, *seq);
+        }
+        WireMsg::Goodbye => put_u8(&mut buf, TAG_GOODBYE),
+    }
+    let len = (buf.len() - 4) as u32;
+    buf[..4].copy_from_slice(&len.to_le_bytes());
+    buf
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+fn get_sampling(r: &mut Reader) -> Result<SamplingParams> {
+    Ok(SamplingParams { temperature: r.f64()?, top_p: r.f64()?, top_k: r.i64()? })
+}
+
+fn get_work_item(r: &mut Reader) -> Result<WorkItem> {
+    Ok(WorkItem {
+        request_id: r.u64()?,
+        prompt: Arc::from(r.vec_i32()?.into_boxed_slice()),
+        resume: r.vec_i32()?,
+        max_total: {
+            let v = r.u64()?;
+            usize::try_from(v).context("wire: max_total does not fit usize")?
+        },
+        sampling: get_sampling(r)?,
+        retain: r.opt_u64()?,
+        prefix: r.opt_u64()?,
+    })
+}
+
+fn get_reason(r: &mut Reader) -> Result<FinishReason> {
+    Ok(match r.u8()? {
+        REASON_EOS => FinishReason::Eos,
+        REASON_LENGTH_CAP => FinishReason::LengthCap,
+        REASON_PREEMPTED => FinishReason::Preempted,
+        REASON_STOPPED => FinishReason::Stopped,
+        t => bail!("wire: unknown finish reason tag {t}"),
+    })
+}
+
+fn get_work_result(r: &mut Reader) -> Result<WorkResult> {
+    Ok(WorkResult {
+        request_id: r.u64()?,
+        new_tokens: r.vec_i32()?,
+        new_logprobs: r.vec_f32()?,
+        reason: get_reason(r)?,
+        replayed: r.usize_()?,
+        retained: r.opt_u64()?,
+        resumed_from_kv: r.boolean()?,
+    })
+}
+
+/// `StepTrace::sampler_dispatch` is `&'static str`; the dispatch-arm name
+/// set is closed, so decoding interns into it (unknown names degrade to
+/// `""`, the "no trace observed" value — never an error, the field is
+/// diagnostic).
+fn intern_dispatch(s: &str) -> &'static str {
+    match s {
+        "scalar" => "scalar",
+        "avx2" => "avx2",
+        "avx512" => "avx512",
+        _ => "",
+    }
+}
+
+fn get_trace(r: &mut Reader) -> Result<StepTrace> {
+    Ok(StepTrace {
+        engine: r.usize_()?,
+        t_wall: r.f64()?,
+        dur: r.f64()?,
+        active: r.usize_()?,
+        slots: r.usize_()?,
+        kv_tokens: r.usize_()?,
+        kv_blocks: r.usize_()?,
+        kv_frag: r.f64()?,
+        prefix_tokens_shared: r.u64()?,
+        cow_copies: r.u64()?,
+        preemptions: r.u64()?,
+        step_tokens: r.usize_()?,
+        step_budget: r.usize_()?,
+        prefill_chunks: r.u64()?,
+        prefill_stall_saved: r.f64()?,
+        retries: r.u64()?,
+        kv_bytes: r.usize_()?,
+        sampler_dispatch: intern_dispatch(&r.string()?),
+        queued: r.usize_()?,
+    })
+}
+
+fn get_cmd(r: &mut Reader) -> Result<EngineCmd> {
+    Ok(match r.u8()? {
+        CMD_ASSIGN => EngineCmd::Assign(get_work_item(r)?),
+        CMD_SET_PARAMS => EngineCmd::SetParams {
+            version: r.u64()?,
+            params: Arc::new(r.vec_f32()?),
+            invalidate_retained: r.boolean()?,
+        },
+        CMD_STOP_GENERATION => EngineCmd::StopGeneration { retain: r.boolean()? },
+        CMD_RELEASE_RETAINED => {
+            EngineCmd::ReleaseRetained { request_id: r.u64()?, token: r.u64()? }
+        }
+        CMD_RELEASE_PREFIX => EngineCmd::ReleasePrefix { key: r.u64()? },
+        CMD_SHUTDOWN => EngineCmd::Shutdown,
+        t => bail!("wire: unknown command tag {t}"),
+    })
+}
+
+fn get_event(r: &mut Reader, depth: u32) -> Result<EngineEvent> {
+    Ok(match r.u8()? {
+        EV_DONE => EngineEvent::Done { engine: r.usize_()?, result: get_work_result(r)? },
+        EV_TRACE => EngineEvent::Trace(get_trace(r)?),
+        EV_FLUSHED => EngineEvent::Flushed { engine: r.usize_()?, retain_errors: r.u64()? },
+        EV_SHUTDOWN => EngineEvent::ShutDown { engine: r.usize_()? },
+        EV_ENGINE_FAILED => EngineEvent::EngineFailed {
+            engine: r.usize_()?,
+            error: r.string()?,
+            inflight: r.vec_u64()?,
+            retained: r.vec_u64()?,
+        },
+        EV_RETAINED_DROPPED => {
+            EngineEvent::RetainedDropped { engine: r.usize_()?, request_id: r.u64()? }
+        }
+        EV_BATCH => {
+            if depth >= MAX_BATCH_DEPTH {
+                bail!("wire: Batch nesting exceeds {MAX_BATCH_DEPTH}");
+            }
+            let n = r.u32()? as usize;
+            // Order is load-bearing: the coordinator unpacks batches
+            // front-to-back, and the wire must deliver exactly the
+            // in-process channel order.
+            let mut evs = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                evs.push(get_event(r, depth + 1)?);
+            }
+            EngineEvent::Batch(evs)
+        }
+        t => bail!("wire: unknown event tag {t}"),
+    })
+}
+
+/// Decode one frame payload (everything after the length prefix) into a
+/// message, rejecting trailing bytes.
+pub fn decode(payload: &[u8]) -> Result<WireMsg> {
+    let mut r = Reader::new(payload);
+    let msg = match r.u8()? {
+        TAG_HELLO => {
+            WireMsg::Hello { proto: r.u32()?, engine_base: r.u64()?, seed: r.u64()? }
+        }
+        TAG_HELLO_ACK => {
+            WireMsg::HelloAck { proto: r.u32()?, engines: r.u64()?, slots: r.u64()? }
+        }
+        TAG_CMD => WireMsg::Cmd { engine: r.u64()?, cmd: get_cmd(&mut r)? },
+        TAG_EVENT => WireMsg::Event(get_event(&mut r, 0)?),
+        TAG_PING => WireMsg::Ping { seq: r.u64()? },
+        TAG_PONG => WireMsg::Pong { seq: r.u64()? },
+        TAG_GOODBYE => WireMsg::Goodbye,
+        t => bail!("wire: unknown message tag {t}"),
+    };
+    r.done()?;
+    Ok(msg)
+}
+
+/// Write one message as a single frame. One `write_all` per frame, so
+/// concurrent writers serialized by a mutex never interleave partial
+/// frames.
+pub fn write_msg(w: &mut impl Write, msg: &WireMsg) -> std::io::Result<()> {
+    w.write_all(&encode(msg))
+}
+
+/// Read one complete frame (blocking) and decode it. `Err` on EOF,
+/// oversized frames, or malformed payloads — the caller treats any error
+/// as a dead link.
+pub fn read_msg(r: &mut impl Read) -> Result<WireMsg> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).context("wire: reading frame length")?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME_LEN {
+        bail!("wire: frame length {len} exceeds cap {MAX_FRAME_LEN}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("wire: reading frame payload")?;
+    decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop_check;
+    use crate::util::Rng;
+
+    /// The round-trip oracle: `encode(decode(encode(x))) == encode(x)`.
+    /// Byte-equality proves the codec is lossless without needing
+    /// `PartialEq` on the engine types (floats compare by bit pattern,
+    /// exactly the property the bit-identity goldens rely on). Operates
+    /// on the encoded frame so the property inputs are `Debug`-printable
+    /// (`EngineCmd` deliberately derives nothing).
+    fn reencodes_identically(bytes: &[u8]) -> Result<(), String> {
+        let decoded = decode(&bytes[4..]).map_err(|e| format!("decode failed: {e:#}"))?;
+        let re = encode(&decoded);
+        if re != bytes {
+            return Err(format!("re-encode differs: {} vs {} bytes", re.len(), bytes.len()));
+        }
+        Ok(())
+    }
+
+    fn gen_sampling(rng: &mut Rng) -> SamplingParams {
+        SamplingParams {
+            temperature: rng.next_f64() * 2.0,
+            top_p: rng.next_f64(),
+            top_k: (rng.next_u64() % 64) as i64 - 1,
+        }
+    }
+
+    fn gen_work_item(rng: &mut Rng) -> WorkItem {
+        let p_len = (rng.next_u64() % 24) as usize;
+        let prompt: Vec<i32> = (0..p_len).map(|_| (rng.next_u64() % 4096) as i32).collect();
+        let r_len = (rng.next_u64() % 16) as usize;
+        WorkItem {
+            request_id: rng.next_u64(),
+            prompt: Arc::from(prompt.into_boxed_slice()),
+            resume: (0..r_len).map(|_| (rng.next_u64() % 4096) as i32).collect(),
+            max_total: (rng.next_u64() % 512) as usize,
+            sampling: gen_sampling(rng),
+            retain: if rng.next_f64() < 0.5 { Some(rng.next_u64()) } else { None },
+            prefix: if rng.next_f64() < 0.5 { Some(rng.next_u64()) } else { None },
+        }
+    }
+
+    fn gen_work_result(rng: &mut Rng) -> WorkResult {
+        let n = (rng.next_u64() % 32) as usize;
+        WorkResult {
+            request_id: rng.next_u64(),
+            new_tokens: (0..n).map(|_| (rng.next_u64() % 4096) as i32).collect(),
+            new_logprobs: (0..n).map(|_| -rng.next_f32()).collect(),
+            reason: match rng.next_u64() % 4 {
+                0 => FinishReason::Eos,
+                1 => FinishReason::LengthCap,
+                2 => FinishReason::Preempted,
+                _ => FinishReason::Stopped,
+            },
+            replayed: (rng.next_u64() % 64) as usize,
+            retained: if rng.next_f64() < 0.5 { Some(rng.next_u64()) } else { None },
+            resumed_from_kv: rng.next_f64() < 0.5,
+        }
+    }
+
+    fn gen_trace(rng: &mut Rng) -> StepTrace {
+        StepTrace {
+            engine: (rng.next_u64() % 16) as usize,
+            t_wall: rng.next_f64() * 100.0,
+            dur: rng.next_f64(),
+            active: (rng.next_u64() % 8) as usize,
+            slots: 8,
+            kv_tokens: (rng.next_u64() % 4096) as usize,
+            kv_blocks: (rng.next_u64() % 256) as usize,
+            kv_frag: rng.next_f64(),
+            prefix_tokens_shared: rng.next_u64() % 1024,
+            cow_copies: rng.next_u64() % 64,
+            preemptions: rng.next_u64() % 16,
+            step_tokens: (rng.next_u64() % 256) as usize,
+            step_budget: (rng.next_u64() % 512) as usize,
+            prefill_chunks: rng.next_u64() % 64,
+            prefill_stall_saved: rng.next_f64(),
+            retries: rng.next_u64() % 8,
+            kv_bytes: (rng.next_u64() % (1 << 20)) as usize,
+            sampler_dispatch: ["scalar", "avx2", "avx512", ""][(rng.next_u64() % 4) as usize],
+            queued: (rng.next_u64() % 32) as usize,
+        }
+    }
+
+    fn gen_event(rng: &mut Rng, allow_batch: bool) -> EngineEvent {
+        let arms = if allow_batch { 7 } else { 6 };
+        match rng.next_u64() % arms {
+            0 => EngineEvent::Done {
+                engine: (rng.next_u64() % 8) as usize,
+                result: gen_work_result(rng),
+            },
+            1 => EngineEvent::Trace(gen_trace(rng)),
+            2 => EngineEvent::Flushed {
+                engine: (rng.next_u64() % 8) as usize,
+                retain_errors: rng.next_u64() % 8,
+            },
+            3 => EngineEvent::ShutDown { engine: (rng.next_u64() % 8) as usize },
+            4 => EngineEvent::EngineFailed {
+                engine: (rng.next_u64() % 8) as usize,
+                error: format!("injected failure #{}", rng.next_u64() % 1000),
+                inflight: (0..(rng.next_u64() % 8)).map(|_| rng.next_u64()).collect(),
+                retained: (0..(rng.next_u64() % 8)).map(|_| rng.next_u64()).collect(),
+            },
+            5 => EngineEvent::RetainedDropped {
+                engine: (rng.next_u64() % 8) as usize,
+                request_id: rng.next_u64(),
+            },
+            _ => {
+                let n = (rng.next_u64() % 6) as usize;
+                EngineEvent::Batch((0..n).map(|_| gen_event(rng, false)).collect())
+            }
+        }
+    }
+
+    fn gen_cmd(rng: &mut Rng) -> EngineCmd {
+        match rng.next_u64() % 6 {
+            0 => EngineCmd::Assign(gen_work_item(rng)),
+            1 => EngineCmd::SetParams {
+                version: rng.next_u64(),
+                params: Arc::new((0..(rng.next_u64() % 64)).map(|_| rng.next_f32()).collect()),
+                invalidate_retained: rng.next_f64() < 0.5,
+            },
+            2 => EngineCmd::StopGeneration { retain: rng.next_f64() < 0.5 },
+            3 => EngineCmd::ReleaseRetained { request_id: rng.next_u64(), token: rng.next_u64() },
+            4 => EngineCmd::ReleasePrefix { key: rng.next_u64() },
+            _ => EngineCmd::Shutdown,
+        }
+    }
+
+    #[test]
+    fn prop_cmd_frames_round_trip() {
+        prop_check(
+            "cmd frames re-encode identically",
+            128,
+            |rng| encode(&WireMsg::Cmd { engine: rng.next_u64() % 64, cmd: gen_cmd(rng) }),
+            |bytes| reencodes_identically(bytes),
+        );
+    }
+
+    #[test]
+    fn prop_event_frames_round_trip() {
+        prop_check(
+            "event frames (incl. Batch) re-encode identically",
+            128,
+            |rng| encode(&WireMsg::Event(gen_event(rng, true))),
+            |bytes| reencodes_identically(bytes),
+        );
+    }
+
+    #[test]
+    fn session_frames_round_trip() {
+        for msg in [
+            WireMsg::Hello { proto: PROTO_VERSION, engine_base: 3, seed: 42 },
+            WireMsg::HelloAck { proto: PROTO_VERSION, engines: 2, slots: 4 },
+            WireMsg::Ping { seq: 7 },
+            WireMsg::Pong { seq: 7 },
+            WireMsg::Goodbye,
+        ] {
+            reencodes_identically(&encode(&msg)).unwrap();
+        }
+    }
+
+    /// Arc<[i32]> prompts survive the wire with exact contents and the
+    /// retain/prefix hints intact (the fields the affinity router depends
+    /// on).
+    #[test]
+    fn work_item_fields_survive() {
+        let item = WorkItem {
+            request_id: 99,
+            prompt: Arc::from(vec![1, 2, 3, -7].into_boxed_slice()),
+            resume: vec![10, 11],
+            max_total: 64,
+            sampling: SamplingParams::greedy(),
+            retain: Some(0xDEAD),
+            prefix: Some(0xBEEF),
+        };
+        let bytes = encode(&WireMsg::Cmd { engine: 5, cmd: EngineCmd::Assign(item) });
+        let WireMsg::Cmd { engine, cmd: EngineCmd::Assign(got) } = decode(&bytes[4..]).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!(engine, 5);
+        assert_eq!(got.request_id, 99);
+        assert_eq!(&got.prompt[..], &[1, 2, 3, -7]);
+        assert_eq!(got.resume, vec![10, 11]);
+        assert_eq!(got.max_total, 64);
+        assert_eq!(got.retain, Some(0xDEAD));
+        assert_eq!(got.prefix, Some(0xBEEF));
+    }
+
+    /// EngineFailed carries its full recovery payload across the wire.
+    #[test]
+    fn engine_failed_payload_survives() {
+        let ev = EngineEvent::EngineFailed {
+            engine: 3,
+            error: "backend exploded".into(),
+            inflight: vec![1, 2, 3],
+            retained: vec![9, 8],
+        };
+        let bytes = encode(&WireMsg::Event(ev));
+        let WireMsg::Event(EngineEvent::EngineFailed { engine, error, inflight, retained }) =
+            decode(&bytes[4..]).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!(engine, 3);
+        assert_eq!(error, "backend exploded");
+        assert_eq!(inflight, vec![1, 2, 3]);
+        assert_eq!(retained, vec![9, 8]);
+    }
+
+    /// Batch ordering is preserved over the wire: delivery order after
+    /// decode matches in-process channel order (the coordinator's unpack
+    /// loop depends on it — Done-before-Flushed within a step).
+    #[test]
+    fn prop_batch_order_preserved() {
+        prop_check(
+            "Batch event order survives the wire",
+            64,
+            |rng| {
+                let n = 1 + (rng.next_u64() % 8) as usize;
+                let ids: Vec<u64> = (0..n as u64).map(|i| rng.next_u64() ^ i).collect();
+                let evs: Vec<EngineEvent> = ids
+                    .iter()
+                    .map(|&id| EngineEvent::RetainedDropped { engine: 0, request_id: id })
+                    .collect();
+                (ids, evs)
+            },
+            |(ids, evs)| {
+                let bytes = encode(&WireMsg::Event(EngineEvent::Batch(evs.clone())));
+                let WireMsg::Event(EngineEvent::Batch(got)) =
+                    decode(&bytes[4..]).map_err(|e| e.to_string())?
+                else {
+                    return Err("wrong variant".into());
+                };
+                let got_ids: Vec<u64> = got
+                    .iter()
+                    .map(|e| match e {
+                        EngineEvent::RetainedDropped { request_id, .. } => *request_id,
+                        _ => u64::MAX,
+                    })
+                    .collect();
+                if &got_ids != ids {
+                    return Err(format!("order changed: {ids:?} -> {got_ids:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Logprob f32 bits cross the wire unchanged — the bit-identity pin.
+    #[test]
+    fn float_bits_exact() {
+        let vals = [0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, -1234.5678, f32::MAX];
+        let ev = EngineEvent::Done {
+            engine: 0,
+            result: WorkResult {
+                request_id: 1,
+                new_tokens: vec![0; vals.len()],
+                new_logprobs: vals.to_vec(),
+                reason: FinishReason::Eos,
+                replayed: 0,
+                retained: None,
+                resumed_from_kv: false,
+            },
+        };
+        let bytes = encode(&WireMsg::Event(ev));
+        let WireMsg::Event(EngineEvent::Done { result, .. }) = decode(&bytes[4..]).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        for (a, b) in vals.iter().zip(&result.new_logprobs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// A truncated or garbage stream errors instead of desynchronizing.
+    #[test]
+    fn malformed_frames_rejected() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[200]).is_err()); // unknown tag
+        let mut bytes = encode(&WireMsg::Ping { seq: 1 });
+        bytes.truncate(bytes.len() - 2); // truncated payload
+        assert!(decode(&bytes[4..]).is_err());
+        // Oversized declared length fails in read_msg before allocating.
+        let mut huge = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0; 8]);
+        assert!(read_msg(&mut huge.as_slice()).is_err());
+    }
+}

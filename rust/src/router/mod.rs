@@ -1,0 +1,565 @@
+//! Router tier: one poll/dispatch surface over N rollout replicas, local
+//! or multi-process.
+//!
+//! [`RouterPool`] presents the exact API [`EnginePool`] exposes —
+//! `try_next_checked` / `next_before` / `send` / `broadcast_params` /
+//! `stop_generation_all_with` / `shutdown` — so `Coordinator`,
+//! `StageDriver`, and `run_open_loop` run unchanged on top of either
+//! transport:
+//!
+//! * **local** (default): wraps an in-process [`EnginePool`] with zero
+//!   added indirection — commands and events keep flowing over the same
+//!   mpsc channels, which is why tier-1 and every golden test are
+//!   untouched by this tier existing.
+//! * **tcp**: connects to `copris engine-host` processes over the framed
+//!   wire protocol ([`crate::net::wire`]). Each host serves a contiguous
+//!   range of pool-global engine ids; events arrive already carrying
+//!   global ids, so the event loop upstairs cannot tell the transports
+//!   apart — the correctness pin is bit-identical greedy streams across
+//!   both.
+//!
+//! Failure taxonomy is UNIFIED with the in-process pool: a lost host —
+//! heartbeat timeout, socket error, EOF — synthesizes one
+//! `EngineEvent::EngineFailed { inflight: [], retained: [] }` per replica
+//! it carried (plus `ShutDown`), which lands in the same coordinator
+//! recovery path a supervised engine crash takes. The empty in-flight
+//! snapshot is safe by design: the coordinator's own in-flight ledger is
+//! authoritative for what a dead replica owed (it includes
+//! queued-but-unstarted dispatches no failure event could know about),
+//! so recovery re-dispatches everything regardless of the payload. No
+//! second "remote-dead" code path exists in the rollout loop.
+//!
+//! The placement half of the router — the routing table generalizing
+//! retained-KV affinity, prefix homes, per-replica load, and the
+//! health/drain ladder — lives in [`table`]; the coordinator owns one and
+//! consults it on every dispatch.
+
+pub mod table;
+
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::RouterConfig;
+use crate::engine::{EngineCmd, EngineEvent, EnginePool};
+use crate::net::wire::{self, WireMsg, PROTO_VERSION};
+
+pub use table::{ReplicaHealth, RetainedRef, RouteDecision, RoutingTable};
+
+/// Sleep slice for heartbeat/stop-flag polling (keeps shutdown latency
+/// bounded without a condvar).
+const HB_POLL: Duration = Duration::from_millis(20);
+
+/// One engine-fleet handle with the `EnginePool` poll API, over either
+/// transport (see module docs).
+pub struct RouterPool {
+    inner: Inner,
+    /// Decode slots per engine (capacity accounting; uniform fleet-wide).
+    pub slots_per_engine: usize,
+}
+
+enum Inner {
+    Local(EnginePool),
+    Remote(RemotePool),
+}
+
+impl From<EnginePool> for RouterPool {
+    /// Wrap an in-process pool as the `local` transport. This is the
+    /// conversion every existing `Coordinator::new(pool, ..)` call site
+    /// goes through implicitly.
+    fn from(pool: EnginePool) -> RouterPool {
+        RouterPool { slots_per_engine: pool.slots_per_engine, inner: Inner::Local(pool) }
+    }
+}
+
+impl RouterPool {
+    /// Connect the `tcp` transport: dial every host in `cfg.hosts` (in
+    /// order), handshake, and assign each a contiguous global engine-id
+    /// range. Fails fast on unreachable hosts, protocol-version mismatch,
+    /// or a non-uniform slots-per-engine fleet.
+    pub fn connect(cfg: &RouterConfig, seed: u64) -> Result<RouterPool> {
+        let remote = RemotePool::connect(cfg, seed)?;
+        let slots = remote.slots_per_engine;
+        Ok(RouterPool { inner: Inner::Remote(remote), slots_per_engine: slots })
+    }
+
+    /// Transport name for logs/stats (`"local"` | `"tcp"`).
+    pub fn transport_name(&self) -> &'static str {
+        match &self.inner {
+            Inner::Local(_) => "local",
+            Inner::Remote(_) => "tcp",
+        }
+    }
+
+    /// Number of replicas across the fleet.
+    pub fn engines(&self) -> usize {
+        match &self.inner {
+            Inner::Local(p) => p.engines(),
+            Inner::Remote(p) => p.total_engines,
+        }
+    }
+
+    /// Total decode slots across the fleet.
+    pub fn total_slots(&self) -> usize {
+        self.engines() * self.slots_per_engine
+    }
+
+    /// Per-replica liveness from the TRANSPORT's view (local engines are
+    /// always "alive" here — their deaths surface as events; remote
+    /// replicas flip false when their host's link is declared lost).
+    pub fn link_alive(&self) -> Vec<bool> {
+        match &self.inner {
+            Inner::Local(p) => vec![true; p.engines()],
+            Inner::Remote(p) => {
+                let mut v = Vec::with_capacity(p.total_engines);
+                for l in &p.links {
+                    let a = l.alive.load(Ordering::SeqCst);
+                    for _ in 0..l.engines {
+                        v.push(a);
+                    }
+                }
+                v
+            }
+        }
+    }
+
+    /// Non-blocking poll; collapses "empty" and "disconnected" into
+    /// `None` (see [`EnginePool::try_next`]).
+    pub fn try_next(&self) -> Option<EngineEvent> {
+        match &self.inner {
+            Inner::Local(p) => p.try_next(),
+            Inner::Remote(p) => p.events.try_recv().ok(),
+        }
+    }
+
+    /// Non-blocking poll distinguishing "nothing queued" from "every
+    /// replica gone" (see [`EnginePool::try_next_checked`]).
+    pub fn try_next_checked(&self) -> Result<Option<EngineEvent>, RecvTimeoutError> {
+        match &self.inner {
+            Inner::Local(p) => p.try_next_checked(),
+            Inner::Remote(p) => match p.events.try_recv() {
+                Ok(e) => Ok(Some(e)),
+                Err(TryRecvError::Empty) => Ok(None),
+                Err(TryRecvError::Disconnected) => Err(RecvTimeoutError::Disconnected),
+            },
+        }
+    }
+
+    /// Bounded wait for the next event (see [`EnginePool::next_before`]).
+    pub fn next_before(&self, deadline: Instant) -> Result<EngineEvent, RecvTimeoutError> {
+        match &self.inner {
+            Inner::Local(p) => p.next_before(deadline),
+            Inner::Remote(p) => {
+                let now = Instant::now();
+                if deadline <= now {
+                    return p.events.try_recv().map_err(|e| match e {
+                        TryRecvError::Empty => RecvTimeoutError::Timeout,
+                        TryRecvError::Disconnected => RecvTimeoutError::Disconnected,
+                    });
+                }
+                p.events.recv_timeout(deadline - now)
+            }
+        }
+    }
+
+    /// Send one command to one replica (global engine id). Like the
+    /// in-process pool, delivery to a dead replica is silently dropped —
+    /// its absence surfaces through events.
+    pub fn send(&self, engine: usize, cmd: EngineCmd) {
+        match &self.inner {
+            Inner::Local(p) => p.send(engine, cmd),
+            Inner::Remote(p) => p.send(engine, cmd),
+        }
+    }
+
+    /// Weight sync to every replica (see [`EnginePool::broadcast_params`]).
+    pub fn broadcast_params(
+        &self,
+        version: u64,
+        params: Arc<Vec<f32>>,
+        invalidate_retained: bool,
+    ) {
+        match &self.inner {
+            Inner::Local(p) => p.broadcast_params(version, params, invalidate_retained),
+            Inner::Remote(p) => {
+                for e in 0..p.total_engines {
+                    p.send(
+                        e,
+                        EngineCmd::SetParams {
+                            version,
+                            params: params.clone(),
+                            invalidate_retained,
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    /// Early-terminate every replica without retaining KV.
+    pub fn stop_generation_all(&self) {
+        self.stop_generation_all_with(false);
+    }
+
+    /// Early-terminate every replica; with `retain`, flushed slots keep
+    /// their KV resident for affinity resume.
+    pub fn stop_generation_all_with(&self, retain: bool) {
+        match &self.inner {
+            Inner::Local(p) => p.stop_generation_all_with(retain),
+            Inner::Remote(p) => {
+                for e in 0..p.total_engines {
+                    p.send(e, EngineCmd::StopGeneration { retain });
+                }
+            }
+        }
+    }
+
+    /// Orderly teardown: local joins engine threads; tcp sends every
+    /// replica `Shutdown` plus a `Goodbye`, severs the sockets, and joins
+    /// the link threads.
+    pub fn shutdown(self) {
+        match self.inner {
+            Inner::Local(p) => p.shutdown(),
+            Inner::Remote(p) => p.shutdown(),
+        }
+    }
+}
+
+/// One connected engine-host: the socket, its global engine-id range, and
+/// the reader/heartbeat threads watching it.
+struct HostLink {
+    addr: String,
+    base: usize,
+    engines: usize,
+    stream: TcpStream,
+    /// Write half, shared by the dispatch path and the heartbeat thread;
+    /// frames are single `write_all`s under this lock so they never
+    /// interleave.
+    writer: Arc<Mutex<TcpStream>>,
+    /// Flips false exactly once, when the link is declared lost.
+    alive: Arc<AtomicBool>,
+    /// Set by `shutdown()` so link threads exit without synthesizing
+    /// failures for an orderly close.
+    closing: Arc<AtomicBool>,
+    reader: Option<JoinHandle<()>>,
+    heartbeat: Option<JoinHandle<()>>,
+}
+
+/// The `tcp` transport: N host links multiplexed into one event channel.
+struct RemotePool {
+    links: Vec<HostLink>,
+    events: Receiver<EngineEvent>,
+    total_engines: usize,
+    slots_per_engine: usize,
+}
+
+/// Declare a host's replicas failed (idempotent): one `EngineFailed` with
+/// an EMPTY in-flight snapshot per replica, then `ShutDown`. Safe because
+/// the coordinator's own in-flight ledger is authoritative during
+/// recovery (module docs) — this is the satellite that keeps remote death
+/// on the exact same code path as an in-process engine crash.
+fn fail_link(
+    ev_tx: &Sender<EngineEvent>,
+    alive: &AtomicBool,
+    base: usize,
+    engines: usize,
+    addr: &str,
+    reason: &str,
+) {
+    if !alive.swap(false, Ordering::SeqCst) {
+        return; // already declared (reader and heartbeat can race here)
+    }
+    eprintln!("router: host {addr} lost — {reason}");
+    for e in base..base + engines {
+        let _ = ev_tx.send(EngineEvent::EngineFailed {
+            engine: e,
+            error: format!("engine-host {addr} lost: {reason}"),
+            inflight: Vec::new(),
+            retained: Vec::new(),
+        });
+        let _ = ev_tx.send(EngineEvent::ShutDown { engine: e });
+    }
+}
+
+/// Do all engine ids inside `ev` fall into `[base, base+n)`? A host that
+/// reports ids outside its assigned range is a protocol violation (it
+/// would corrupt another host's routing state upstairs).
+fn event_engines_in_range(ev: &EngineEvent, base: usize, n: usize) -> bool {
+    let ok = |e: usize| e >= base && e < base + n;
+    match ev {
+        EngineEvent::Done { engine, .. }
+        | EngineEvent::Flushed { engine, .. }
+        | EngineEvent::ShutDown { engine }
+        | EngineEvent::EngineFailed { engine, .. }
+        | EngineEvent::RetainedDropped { engine, .. } => ok(*engine),
+        EngineEvent::Trace(t) => ok(t.engine),
+        EngineEvent::Batch(evs) => evs.iter().all(|e| event_engines_in_range(e, base, n)),
+    }
+}
+
+/// Sever every link's socket and join its threads. `closing` is set first
+/// so the readers treat the resulting errors as an orderly close, not a
+/// host death. Used by `shutdown` and by `connect`'s error path — a failed
+/// fleet bring-up must not leak link threads or socket clones (a leaked
+/// reader clone would keep the host's socket open and its serve loop
+/// blocked forever).
+fn sever_and_join(links: &mut [HostLink]) {
+    for l in links.iter() {
+        l.closing.store(true, Ordering::SeqCst);
+        let _ = l.stream.shutdown(Shutdown::Both);
+    }
+    for l in links.iter_mut() {
+        if let Some(h) = l.reader.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = l.heartbeat.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl RemotePool {
+    fn connect(cfg: &RouterConfig, seed: u64) -> Result<RemotePool> {
+        let hosts = cfg.host_list();
+        ensure!(!hosts.is_empty(), "router.transport=tcp requires router.hosts");
+        let (ev_tx, ev_rx) = channel::<EngineEvent>();
+        let mut links: Vec<HostLink> = Vec::new();
+        let mut base = 0usize;
+        let mut slots_per_engine = 0usize;
+        for addr in &hosts {
+            match connect_host(cfg, addr, base, seed, &ev_tx, &mut slots_per_engine) {
+                Ok(link) => {
+                    base += link.engines;
+                    links.push(link);
+                }
+                Err(e) => {
+                    sever_and_join(&mut links);
+                    return Err(e);
+                }
+            }
+        }
+        drop(ev_tx); // receivers disconnect exactly when every link thread exits
+        Ok(RemotePool { links, events: ev_rx, total_engines: base, slots_per_engine })
+    }
+
+    fn link_for(&self, engine: usize) -> Option<&HostLink> {
+        self.links.iter().find(|l| engine >= l.base && engine < l.base + l.engines)
+    }
+
+    fn send(&self, engine: usize, cmd: EngineCmd) {
+        let Some(link) = self.link_for(engine) else { return };
+        if !link.alive.load(Ordering::SeqCst) {
+            return; // dead host: drop silently, like the in-process pool
+        }
+        let frame = wire::encode(&WireMsg::Cmd { engine: engine as u64, cmd });
+        let mut w = link.writer.lock().unwrap();
+        use std::io::Write;
+        let _ = w.write_all(&frame);
+    }
+
+    fn shutdown(mut self) {
+        for l in &self.links {
+            l.closing.store(true, Ordering::SeqCst);
+        }
+        for l in &self.links {
+            if l.alive.load(Ordering::SeqCst) {
+                for e in l.base..l.base + l.engines {
+                    self.send(e, EngineCmd::Shutdown);
+                }
+                let mut w = l.writer.lock().unwrap();
+                let _ = wire::write_msg(&mut *w, &WireMsg::Goodbye);
+            }
+        }
+        // Severing after the farewells still delivers everything already
+        // queued (FIN follows data); our blocked readers unblock at once.
+        sever_and_join(&mut self.links);
+    }
+}
+
+/// Dial, handshake, and watch one engine-host: returns the link with its
+/// reader (and, if enabled, heartbeat) thread already running.
+/// `slots_per_engine` carries the fleet-uniformity check across calls
+/// (0 = first host sets it).
+fn connect_host(
+    cfg: &RouterConfig,
+    addr: &str,
+    base: usize,
+    seed: u64,
+    ev_tx: &Sender<EngineEvent>,
+    slots_per_engine: &mut usize,
+) -> Result<HostLink> {
+    let connect_timeout = Duration::from_millis(cfg.connect_timeout_ms.max(1));
+    let sock_addr: SocketAddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving engine-host {addr}"))?
+        .next()
+        .with_context(|| format!("engine-host {addr} resolved to no address"))?;
+    let stream = TcpStream::connect_timeout(&sock_addr, connect_timeout)
+        .with_context(|| format!("connecting engine-host {addr}"))?;
+    stream.set_nodelay(true).ok();
+    // Bound writes too: a wedged host must surface as a link
+    // error (and then a heartbeat death), never block dispatch.
+    stream.set_write_timeout(Some(connect_timeout)).ok();
+    let mut handshake = stream.try_clone().context("cloning host stream")?;
+    wire::write_msg(
+        &mut handshake,
+        &WireMsg::Hello { proto: PROTO_VERSION, engine_base: base as u64, seed },
+    )
+    .with_context(|| format!("greeting engine-host {addr}"))?;
+    // The handshake is the one read on this thread: bound it so a
+    // hung host fails the connect instead of wedging the caller.
+    stream.set_read_timeout(Some(connect_timeout)).ok();
+    let ack = wire::read_msg(&mut handshake)
+        .with_context(|| format!("awaiting HelloAck from {addr}"))?;
+    stream.set_read_timeout(None).ok();
+    let WireMsg::HelloAck { proto, engines, slots } = ack else {
+        bail!("engine-host {addr}: expected HelloAck");
+    };
+    ensure!(
+        proto == PROTO_VERSION,
+        "engine-host {addr}: protocol v{proto}, this router speaks v{PROTO_VERSION}"
+    );
+    let engines = usize::try_from(engines).context("host engine count")?;
+    let slots = usize::try_from(slots).context("host slot count")?;
+    ensure!(engines >= 1, "engine-host {addr} reports zero engines");
+    ensure!(slots >= 1, "engine-host {addr} reports zero slots");
+    if *slots_per_engine == 0 {
+        *slots_per_engine = slots;
+    } else {
+        ensure!(
+            slots == *slots_per_engine,
+            "engine-host {addr} runs {slots} slots/engine, fleet runs {slots_per_engine} \
+             — slots must be uniform"
+        );
+    }
+    let alive = Arc::new(AtomicBool::new(true));
+    let closing = Arc::new(AtomicBool::new(false));
+    let last_pong = Arc::new(Mutex::new(Instant::now()));
+    let writer = Arc::new(Mutex::new(stream.try_clone().context("cloning writer")?));
+
+    let reader = {
+        let rd = stream.try_clone().context("cloning reader")?;
+        let ev_tx = ev_tx.clone();
+        let (alive, closing, last_pong) = (alive.clone(), closing.clone(), last_pong.clone());
+        let (addr, n) = (addr.to_string(), engines);
+        std::thread::Builder::new()
+            .name(format!("router-read-{base}"))
+            .spawn(move || {
+                let mut rd = BufReader::new(rd);
+                loop {
+                    match wire::read_msg(&mut rd) {
+                        Ok(WireMsg::Event(ev)) => {
+                            if !event_engines_in_range(&ev, base, n) {
+                                fail_link(
+                                    &ev_tx,
+                                    &alive,
+                                    base,
+                                    n,
+                                    &addr,
+                                    "event outside assigned engine range",
+                                );
+                                return;
+                            }
+                            if ev_tx.send(ev).is_err() {
+                                return; // router side torn down
+                            }
+                        }
+                        Ok(WireMsg::Pong { .. }) => {
+                            *last_pong.lock().unwrap() = Instant::now();
+                        }
+                        Ok(_) => {
+                            fail_link(&ev_tx, &alive, base, n, &addr, "unexpected frame from host");
+                            return;
+                        }
+                        Err(e) => {
+                            if !closing.load(Ordering::SeqCst) {
+                                fail_link(
+                                    &ev_tx,
+                                    &alive,
+                                    base,
+                                    n,
+                                    &addr,
+                                    &format!("link error: {e:#}"),
+                                );
+                            }
+                            return;
+                        }
+                    }
+                }
+            })
+            .context("spawning router reader")?
+    };
+
+    let heartbeat = if cfg.heartbeat_ms > 0 {
+        let ev_tx = ev_tx.clone();
+        let (alive, closing, last_pong) = (alive.clone(), closing.clone(), last_pong.clone());
+        let writer = writer.clone();
+        let hb_stream = stream.try_clone().context("cloning heartbeat stream")?;
+        let (addr, n) = (addr.to_string(), engines);
+        let period = Duration::from_millis(cfg.heartbeat_ms);
+        let deadline = period * cfg.heartbeat_misses.max(1);
+        Some(
+            std::thread::Builder::new()
+                .name(format!("router-hb-{base}"))
+                .spawn(move || {
+                    let mut seq = 0u64;
+                    loop {
+                        // Sleep one period in small slices so
+                        // shutdown never waits a full beat.
+                        let mut slept = Duration::ZERO;
+                        while slept < period {
+                            if closing.load(Ordering::SeqCst) || !alive.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            let step = HB_POLL.min(period - slept);
+                            std::thread::sleep(step);
+                            slept += step;
+                        }
+                        seq += 1;
+                        {
+                            let mut w = writer.lock().unwrap();
+                            let _ = wire::write_msg(&mut *w, &WireMsg::Ping { seq });
+                        }
+                        let age = last_pong.lock().unwrap().elapsed();
+                        if age > deadline {
+                            fail_link(
+                                &ev_tx,
+                                &alive,
+                                base,
+                                n,
+                                &addr,
+                                &format!(
+                                    "heartbeat timeout ({}ms without a pong)",
+                                    age.as_millis()
+                                ),
+                            );
+                            // Sever so the reader unblocks too.
+                            let _ = hb_stream.shutdown(Shutdown::Both);
+                            return;
+                        }
+                    }
+                })
+                .context("spawning router heartbeat")?,
+        )
+    } else {
+        None
+    };
+
+    Ok(HostLink {
+        addr: addr.to_string(),
+        base,
+        engines,
+        stream,
+        writer,
+        alive,
+        closing,
+        reader: Some(reader),
+        heartbeat,
+    })
+}

@@ -1,0 +1,326 @@
+//! The routing table: per-replica placement state the coordinator consults
+//! on every dispatch.
+//!
+//! Generalizes what used to be four loose fields on `Coordinator`
+//! (`engine_load`, `dead`, `retained_at`, `prefix_homes`) into one
+//! structure, and adds the health/drain state machine the multi-process
+//! transport needs. Replica state is a one-way ladder:
+//!
+//! ```text
+//!   Healthy ⇄ Draining        (set_draining — reversible, operator-driven)
+//!      \         /
+//!       v       v
+//!         Dead                (mark_dead — terminal; EngineFailed or the
+//!                              stall watchdog/heartbeat declared it)
+//! ```
+//!
+//! Routing policy (unchanged from the pre-router coordinator, which is
+//! what keeps the rollout goldens bit-identical): best residency first —
+//! retained-KV affinity, then the group's prefix-home engine, then least
+//! loaded — with every residency route yielding when the target's load
+//! exceeds the least-loaded replica's by more than the imbalance guard.
+//! Draining replicas are simply excluded from all three routes (they
+//! finish what they have and receive nothing new); dead replicas are
+//! excluded and their residency entries dropped. KV-block residency per
+//! replica is tracked as an observability gauge (fed from step traces),
+//! deliberately NOT as a routing input — load stays the balance criterion
+//! so adding the gauge cannot shift golden-pinned decisions.
+
+use std::collections::HashMap;
+
+/// Where a buffered partial's KV is retained: the replica that generated
+/// it and the retention token its `Stopped` flush returned. The
+/// coordinator half of the retention ledger — a routing HINT, never a
+/// correctness dependency (stale hints fall back to replay in-engine).
+#[derive(Clone, Copy, Debug)]
+pub struct RetainedRef {
+    /// Replica (pool-global engine id) holding the retained KV.
+    pub engine: usize,
+    /// Retention token the engine's flush returned.
+    pub token: u64,
+}
+
+/// One replica's position in the health/drain state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Routable: receives new dispatches.
+    Healthy,
+    /// Alive but excluded from new dispatches; in-flight work finishes
+    /// normally. Reversible.
+    Draining,
+    /// Declared failed (EngineFailed event, stall watchdog, or remote
+    /// heartbeat loss). Terminal; late events are discarded upstream.
+    Dead,
+}
+
+/// The decision `route` returns: where to dispatch, with which retained-KV
+/// resume hint, and which abandoned retained slot (if any) the caller must
+/// release remotely so it stops charging that replica's KV budget.
+#[derive(Clone, Copy, Debug)]
+pub struct RouteDecision {
+    /// Target replica (pool-global engine id).
+    pub engine: usize,
+    /// Retention token to pass as the work item's resume hint.
+    pub retain: Option<u64>,
+    /// A retained slot the route abandoned (imbalance fallback on a live
+    /// replica): the caller sends `ReleaseRetained` for it.
+    pub release: Option<RetainedRef>,
+}
+
+/// Per-replica routing state (see module docs). Fields are public to the
+/// coordinator, which updates load/death inline with its event loop; the
+/// placement *decision* lives here in [`RoutingTable::route`].
+#[derive(Debug, Default)]
+pub struct RoutingTable {
+    /// In-flight dispatch count per replica (the balance criterion).
+    pub load: Vec<usize>,
+    /// Terminal death flags (EngineFailed / watchdog / heartbeat).
+    pub dead: Vec<bool>,
+    /// Reversible drain flags (operator-driven; excluded from routing).
+    pub draining: Vec<bool>,
+    /// KV blocks resident per replica, from the latest step trace — an
+    /// observability gauge, not a routing input (see module docs).
+    pub kv_blocks: Vec<usize>,
+    /// Affinity map: buffered-partial trajectory id → retained slot. An
+    /// entry exists iff the partial's last `Stopped` flush retained KV
+    /// and no sync/eviction/route has cleared it since.
+    pub retained_at: HashMap<u64, RetainedRef>,
+    /// Replicas that received dispatches for a group, in first-dispatch
+    /// order — `[0]` is the group's HOME, where its prompt blocks were
+    /// first registered; later samples (and resumed partials) prefer it
+    /// so the prefix refcount actually shares. Usually one entry; more
+    /// under imbalance spill.
+    pub prefix_homes: HashMap<u64, Vec<usize>>,
+}
+
+impl RoutingTable {
+    /// Fresh table for `n` replicas, all healthy and idle.
+    pub fn new(n: usize) -> RoutingTable {
+        RoutingTable {
+            load: vec![0; n],
+            dead: vec![false; n],
+            draining: vec![false; n],
+            kv_blocks: vec![0; n],
+            retained_at: HashMap::new(),
+            prefix_homes: HashMap::new(),
+        }
+    }
+
+    /// Number of replicas the table tracks.
+    pub fn replicas(&self) -> usize {
+        self.load.len()
+    }
+
+    /// Replicas still alive (not declared failed). Draining replicas
+    /// count — they are alive, just not routable.
+    pub fn live(&self) -> usize {
+        self.dead.iter().filter(|d| !**d).count()
+    }
+
+    /// One replica's health state.
+    pub fn health_of(&self, e: usize) -> ReplicaHealth {
+        if self.dead[e] {
+            ReplicaHealth::Dead
+        } else if self.draining[e] {
+            ReplicaHealth::Draining
+        } else {
+            ReplicaHealth::Healthy
+        }
+    }
+
+    /// Health snapshot across the fleet.
+    pub fn health(&self) -> Vec<ReplicaHealth> {
+        (0..self.replicas()).map(|e| self.health_of(e)).collect()
+    }
+
+    /// Set or clear a replica's drain flag. No-op on a dead replica (a
+    /// death is terminal). Returns whether the flag now holds.
+    pub fn set_draining(&mut self, e: usize, draining: bool) -> bool {
+        if self.dead[e] {
+            return false;
+        }
+        self.draining[e] = draining;
+        draining
+    }
+
+    /// Is `e` routable (alive and not draining)?
+    fn routable(&self, e: usize) -> bool {
+        !self.dead[e] && !self.draining[e]
+    }
+
+    /// Least-loaded routable replica. When EVERY live replica is
+    /// draining, drains are overridden (work must land somewhere and
+    /// draining is advisory); falls back to replica 0 only when all are
+    /// dead — unreachable in practice, the coordinator bails degraded
+    /// first.
+    pub fn least_loaded(&self) -> usize {
+        let pick = |accept: &dyn Fn(usize) -> bool| {
+            self.load
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| accept(*i))
+                .min_by_key(|(_, l)| **l)
+                .map(|(i, _)| i)
+        };
+        pick(&|i| self.routable(i)).or_else(|| pick(&|i| !self.dead[i])).unwrap_or(0)
+    }
+
+    /// Residency-aware placement, best residency first (module docs):
+    /// retained-KV affinity, then group prefix home, then least loaded —
+    /// each residency route guarded by `max_imbalance` against the
+    /// least-loaded replica. Consumes the trajectory's `retained_at`
+    /// entry either way (an abandoned slot comes back in
+    /// [`RouteDecision::release`] for the caller to free remotely).
+    pub fn route(
+        &mut self,
+        traj_id: u64,
+        group_id: u64,
+        retain_kv: bool,
+        prefix_sharing: bool,
+        max_imbalance: usize,
+    ) -> RouteDecision {
+        let least = self.least_loaded();
+        let mut release = None;
+        if let Some(r) = self.retained_at.remove(&traj_id) {
+            if retain_kv
+                && self.routable(r.engine)
+                && self.load[r.engine] <= self.load[least] + max_imbalance
+            {
+                return RouteDecision { engine: r.engine, retain: Some(r.token), release: None };
+            }
+            // Imbalance/drain fallback: the abandoned retained slot must
+            // be released remotely so it stops charging that replica's KV
+            // — unless the replica is dead (its entries died with it;
+            // this arm only covers races with a queued event).
+            if !self.dead[r.engine] {
+                release = Some(r);
+            }
+        }
+        if prefix_sharing {
+            let home = self.prefix_homes.get(&group_id).and_then(|h| h.first()).copied();
+            if let Some(home) = home {
+                if self.routable(home) && self.load[home] <= self.load[least] + max_imbalance {
+                    return RouteDecision { engine: home, retain: None, release };
+                }
+            }
+        }
+        RouteDecision { engine: least, retain: None, release }
+    }
+
+    /// Record that `engine` served a dispatch for `group_id` (prefix-home
+    /// bookkeeping; first recorder becomes the group's home).
+    pub fn note_prefix_home(&mut self, group_id: u64, engine: usize) {
+        let homes = self.prefix_homes.entry(group_id).or_default();
+        if !homes.contains(&engine) {
+            homes.push(engine);
+        }
+    }
+
+    /// Drop every routing entry pointing at a dead replica: retained-KV
+    /// affinity hints and prefix-home listings. Load for the replica is
+    /// NOT cleared here — the coordinator reconciles it against its own
+    /// in-flight ledger during recovery.
+    pub fn drop_replica_routes(&mut self, engine: usize) {
+        self.retained_at.retain(|_, r| r.engine != engine);
+        for homes in self.prefix_homes.values_mut() {
+            homes.retain(|e| *e != engine);
+        }
+        self.prefix_homes.retain(|_, h| !h.is_empty());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_with_load(load: &[usize]) -> RoutingTable {
+        let mut t = RoutingTable::new(load.len());
+        t.load = load.to_vec();
+        t
+    }
+
+    #[test]
+    fn least_loaded_skips_dead_and_draining() {
+        let mut t = table_with_load(&[0, 0, 5]);
+        t.dead[0] = true;
+        assert_eq!(t.least_loaded(), 1);
+        t.set_draining(1, true);
+        // Only replica 2 is routable despite its load.
+        assert_eq!(t.least_loaded(), 2);
+    }
+
+    #[test]
+    fn all_live_draining_overrides_drain() {
+        let mut t = table_with_load(&[3, 1]);
+        t.set_draining(0, true);
+        t.set_draining(1, true);
+        // Advisory drain yields: work still lands on the least loaded.
+        assert_eq!(t.least_loaded(), 1);
+    }
+
+    #[test]
+    fn retained_affinity_wins_within_imbalance() {
+        let mut t = table_with_load(&[2, 0]);
+        t.retained_at.insert(7, RetainedRef { engine: 0, token: 99 });
+        let d = t.route(7, 1, true, false, 4);
+        assert_eq!(d.engine, 0);
+        assert_eq!(d.retain, Some(99));
+        assert!(d.release.is_none());
+        // Entry consumed.
+        assert!(t.retained_at.is_empty());
+    }
+
+    #[test]
+    fn imbalance_fallback_releases_remote_slot() {
+        let mut t = table_with_load(&[9, 0]);
+        t.retained_at.insert(7, RetainedRef { engine: 0, token: 99 });
+        let d = t.route(7, 1, true, false, 2);
+        assert_eq!(d.engine, 1);
+        assert_eq!(d.retain, None);
+        let rel = d.release.expect("abandoned slot must be released");
+        assert_eq!((rel.engine, rel.token), (0, 99));
+    }
+
+    #[test]
+    fn draining_home_is_skipped() {
+        let mut t = table_with_load(&[0, 3]);
+        t.retained_at.insert(7, RetainedRef { engine: 0, token: 1 });
+        t.note_prefix_home(5, 0);
+        t.set_draining(0, true);
+        // Retained affinity on a draining replica yields (and releases)…
+        let d = t.route(7, 5, true, true, 8);
+        assert_eq!(d.engine, 1);
+        assert!(d.release.is_some());
+        // …and so does the prefix home.
+        let d2 = t.route(8, 5, true, true, 8);
+        assert_eq!(d2.engine, 1);
+    }
+
+    #[test]
+    fn prefix_home_routes_group_within_imbalance() {
+        let mut t = table_with_load(&[1, 0]);
+        t.note_prefix_home(5, 0);
+        assert_eq!(t.route(42, 5, true, true, 4).engine, 0);
+        // Guard trips when the gap exceeds the imbalance cap.
+        t.load[0] = 6;
+        assert_eq!(t.route(43, 5, true, true, 4).engine, 1);
+    }
+
+    #[test]
+    fn dead_replica_routes_dropped() {
+        let mut t = RoutingTable::new(2);
+        t.retained_at.insert(1, RetainedRef { engine: 0, token: 5 });
+        t.retained_at.insert(2, RetainedRef { engine: 1, token: 6 });
+        t.note_prefix_home(9, 0);
+        t.note_prefix_home(9, 1);
+        t.dead[0] = true;
+        t.drop_replica_routes(0);
+        assert!(!t.retained_at.contains_key(&1));
+        assert!(t.retained_at.contains_key(&2));
+        assert_eq!(t.prefix_homes.get(&9).unwrap(), &vec![1]);
+        // A dead replica cannot be drained and stays Dead.
+        assert!(!t.set_draining(0, true));
+        assert_eq!(t.health_of(0), ReplicaHealth::Dead);
+        assert_eq!(t.health(), vec![ReplicaHealth::Dead, ReplicaHealth::Healthy]);
+    }
+}

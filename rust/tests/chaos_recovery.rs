@@ -11,10 +11,16 @@
 //! trajectory (the same replay path a buffered partial takes), so which
 //! engine executes a request never changes its tokens.
 
-use copris::config::{Config, RolloutMode};
+use std::io::{BufRead, BufReader};
+use std::net::TcpListener;
+use std::process::{Command, Stdio};
+
+use copris::config::{Config, RolloutMode, TransportKind};
 use copris::coordinator::{Coordinator, OpenLoopRequest, RolloutOutput};
 use copris::engine::{EnginePool, MockBackend, SamplingParams};
 use copris::loadgen::{ArrivalGen, ArrivalProcess, TenantMix};
+use copris::net::host::{serve, HostBackend, HostConfig};
+use copris::router::RouterPool;
 use copris::tasks::Dataset;
 use copris::testkit::faulty::{FaultKind, FaultOp, FaultPlan, FaultyBackend};
 use copris::util::Rng;
@@ -395,4 +401,190 @@ fn fault_sweep_no_trajectory_lost_or_duplicated() {
             Ok(())
         },
     );
+}
+
+// ---------------------------------------------------------------------------
+// Engine-host (multi-process transport) chaos: a killed HOST must land in
+// the exact same `EngineFailed` → re-dispatch recovery path an in-process
+// engine crash takes, with the same fault-free golden oracle.
+// ---------------------------------------------------------------------------
+
+/// In-test engine-host thread serving one router connection on loopback,
+/// mock knobs matching `spawn_faulty`'s. With `crash_after`, the host
+/// severs its socket after forwarding exactly that many event frames —
+/// the deterministic "host died mid-stage".
+fn spawn_crash_host(
+    cfg: &Config,
+    slots: usize,
+    min_len: usize,
+    spread: usize,
+    crash_after: Option<u64>,
+) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let hc = HostConfig {
+        engines: 1,
+        slots,
+        engine_opts: cfg.engine.engine_opts(),
+        sup: cfg.engine.supervisor_opts(),
+        backend: HostBackend::Mock {
+            min_len,
+            spread,
+            decode_delay_us: 0,
+            max_seq: MAX_SEQ,
+        },
+        crash_after_events: crash_after,
+        crash_exit: false,
+    };
+    let thread = std::thread::spawn(move || {
+        let _ = serve(listener, hc, true);
+    });
+    (addr, thread)
+}
+
+/// Build a 2-host tcp-transport coordinator: host 0 healthy, host 1
+/// (replica id 1, matching the in-process chaos target) optionally rigged
+/// to die after `crash_after` event frames.
+fn two_host_coordinator(
+    cfg: &Config,
+    slots: usize,
+    min_len: usize,
+    spread: usize,
+    crash_after: Option<u64>,
+) -> (Coordinator, Vec<std::thread::JoinHandle<()>>) {
+    let (a_addr, a_thread) = spawn_crash_host(cfg, slots, min_len, spread, None);
+    let (b_addr, b_thread) = spawn_crash_host(cfg, slots, min_len, spread, crash_after);
+    let mut cfg = cfg.clone();
+    cfg.router.transport = TransportKind::Tcp;
+    cfg.router.hosts = format!("{a_addr},{b_addr}");
+    let pool = RouterPool::connect(&cfg.router, cfg.train.seed).unwrap();
+    assert_eq!(pool.engines(), 2);
+    (Coordinator::new(pool, cfg, MAX_SEQ), vec![a_thread, b_thread])
+}
+
+/// The killed-host analogue of `crashed_engine_mid_stage...`: the host
+/// carrying replica 1 severs its link after 2 event frames mid-stage; the
+/// link loss synthesizes `EngineFailed`, recovery completes the stage on
+/// the surviving host, and the trajectory set matches the fault-free
+/// in-process golden bit-for-bit.
+#[test]
+fn killed_engine_host_mid_stage_same_final_trajectories() {
+    let cfg = chaos_cfg(RolloutMode::Sync);
+    let want = fault_free_fingerprint(&cfg, 2, 6, 8);
+
+    let (mut coord, hosts) = two_host_coordinator(&cfg, 2, 6, 8, Some(2));
+    let mut ds = Dataset::train(cfg.train.seed);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    assert_eq!(fingerprint(&out), want, "host-kill recovery diverged from fault-free run");
+    assert!(out.stats.engine_failures >= 1, "{:?}", out.stats);
+    assert!(out.stats.redispatched_trajectories > 0, "{:?}", out.stats);
+    coord.shutdown();
+    for h in hosts {
+        h.join().unwrap();
+    }
+}
+
+/// Killed host × open loop: a host dies under seeded Poisson overload
+/// through `run_open_loop` over the tcp transport. Every arrival is
+/// conserved (completed + shed = arrived), the failure is absorbed via
+/// re-dispatch, the bounded queue keeps shedding, and the SLO row is
+/// complete — the same contract `engine_crash_under_open_loop...` pins
+/// for the in-process pool.
+#[test]
+fn killed_engine_host_mid_open_loop_conserves_and_reports() {
+    let mut cfg = chaos_cfg(RolloutMode::Sync);
+    cfg.rollout.concurrency = 6;
+    let (mut coord, hosts) = two_host_coordinator(&cfg, 2, 6, 8, Some(3));
+    let schedule = poisson_schedule(40, 2_000.0, 11);
+    let out = coord.run_open_loop(&schedule, 4, 1_000, SamplingParams::greedy()).unwrap();
+
+    assert!(out.stats.engine_failures >= 1, "{:?}", out.stats);
+    assert!(out.stats.redispatched_trajectories > 0, "{:?}", out.stats);
+    assert_eq!(out.report.arrived, 40);
+    assert_eq!(
+        out.report.completed + out.report.shed,
+        out.report.arrived,
+        "arrivals lost under host failure: {:?}",
+        out.report
+    );
+    assert!(out.report.queue_depth_peak <= 4, "queue bound violated: {:?}", out.report);
+    assert_eq!(out.groups.len(), out.report.completed);
+    let mut ids: Vec<u64> = out.groups.iter().flat_map(|g| g.done.iter().map(|t| t.id)).collect();
+    let n = ids.len();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "a trajectory was delivered twice");
+    assert!(
+        out.report.e2e_p50_ticks.is_finite() && out.report.e2e_p50_ticks > 0.0,
+        "{:?}",
+        out.report
+    );
+    coord.shutdown();
+    for h in hosts {
+        h.join().unwrap();
+    }
+}
+
+/// Full-fidelity host kill: a REAL `copris engine-host` subprocess rigged
+/// with `--crash-after-events` dies (exit code 9) mid-stage; the stage
+/// recovers onto a surviving host with the fault-free trajectory set.
+/// Runs only under `cargo test` (needs the binary); self-skips otherwise.
+#[test]
+fn killed_engine_host_subprocess_same_final_trajectories() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_copris") else {
+        eprintln!("skipping: copris binary path not provided by cargo");
+        return;
+    };
+    let cfg = chaos_cfg(RolloutMode::Sync);
+    let want = fault_free_fingerprint(&cfg, 2, 6, 8);
+
+    let mut child = Command::new(bin)
+        .args([
+            "engine-host",
+            "--listen",
+            "127.0.0.1:0",
+            "--engines",
+            "1",
+            "--slots",
+            "2",
+            "--backend",
+            "mock",
+            "--mock-min-len",
+            "6",
+            "--mock-spread",
+            "8",
+            "--crash-after-events",
+            "2",
+            "--once",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning copris engine-host");
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().unwrap()).read_line(&mut line).unwrap();
+    let Some(child_addr) = line.trim().strip_prefix("engine-host listening on ") else {
+        let _ = child.kill();
+        panic!("engine-host did not announce its address: {line:?}");
+    };
+
+    // Healthy thread-host first → replica 0 survives; subprocess is
+    // replica 1 and dies after 2 event frames.
+    let (a_addr, a_thread) = spawn_crash_host(&cfg, 2, 6, 8, None);
+    let mut cfg = cfg.clone();
+    cfg.router.transport = TransportKind::Tcp;
+    cfg.router.hosts = format!("{a_addr},{child_addr}");
+    let pool = RouterPool::connect(&cfg.router, cfg.train.seed).unwrap();
+    let mut coord = Coordinator::new(pool, cfg.clone(), MAX_SEQ);
+
+    let mut ds = Dataset::train(cfg.train.seed);
+    let out = coord.rollout_stage(&mut ds).unwrap();
+    assert_eq!(fingerprint(&out), want, "subprocess-kill recovery diverged");
+    assert!(out.stats.engine_failures >= 1, "{:?}", out.stats);
+    assert!(out.stats.redispatched_trajectories > 0, "{:?}", out.stats);
+
+    let status = child.wait().expect("waiting for killed engine-host");
+    assert_eq!(status.code(), Some(9), "crash_exit must exit with code 9: {status:?}");
+    coord.shutdown();
+    a_thread.join().unwrap();
 }

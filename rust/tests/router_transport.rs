@@ -1,0 +1,369 @@
+//! Local-vs-multi-process transport goldens for the router tier.
+//!
+//! THE correctness pin for the router/transport subsystem: a rollout run
+//! over `transport = "tcp"` (engine-host processes behind the framed wire
+//! protocol — here in-test threads serving real loopback sockets, which
+//! exercises the identical codec/link code the subprocess mode runs) must
+//! produce BIT-IDENTICAL greedy trajectory streams to the same run over
+//! the in-process `local` transport. That holds by construction — hosts
+//! spawn their engines at router-assigned POOL-GLOBAL ids with the
+//! router's seed, so events cross the wire untranslated and the
+//! coordinator cannot tell the transports apart — and these tests pin it.
+//!
+//! Comparison regimes mirror the proven-deterministic goldens:
+//! 1 engine × 1 slot for the partial modes (single-file processing, see
+//! `rollout_golden.rs` module docs), multi-engine/multi-slot for sync
+//! (set-deterministic; `chaos_recovery.rs` relies on the same property).
+//! Plus: drain/health, heartbeat death of a wedged host, and fleet
+//! validation at connect.
+
+use std::io::Read as _;
+use std::net::TcpListener;
+use std::thread::JoinHandle;
+
+use copris::config::{Config, RolloutMode, TransportKind};
+use copris::coordinator::{Coordinator, RolloutOutput};
+use copris::engine::{EnginePool, MockBackend};
+use copris::net::host::{serve, HostBackend, HostConfig};
+use copris::net::wire::{self, WireMsg, PROTO_VERSION};
+use copris::router::{ReplicaHealth, RouterPool};
+use copris::tasks::Dataset;
+
+const MAX_SEQ: usize = 96;
+
+/// Mock-script knobs shared verbatim by both sides of a comparison.
+#[derive(Clone, Copy)]
+struct Knobs {
+    slots: usize,
+    min_len: usize,
+    spread: usize,
+    delay_us: u64,
+}
+
+/// Local-transport pool built EXACTLY like the hosts build theirs
+/// (supervised, same engine/supervisor opts, raw `MockBackend`).
+fn local_pool(cfg: &Config, engines: usize, k: Knobs) -> EnginePool {
+    EnginePool::spawn_supervised(
+        engines,
+        k.slots,
+        cfg.engine.engine_opts(),
+        cfg.engine.supervisor_opts(),
+        cfg.train.seed,
+        move |_id| {
+            Box::new(move || {
+                let mut b = MockBackend::new(k.slots, MAX_SEQ);
+                b.min_len = k.min_len;
+                b.spread = k.spread;
+                if k.delay_us > 0 {
+                    b.decode_delay = Some(std::time::Duration::from_micros(k.delay_us));
+                }
+                Ok(b)
+            })
+        },
+    )
+    .unwrap()
+}
+
+/// Start one in-test engine-host serving a bound loopback listener on its
+/// own thread (`once` — the thread exits when the router disconnects).
+fn spawn_host(cfg: &Config, engines: usize, k: Knobs, crash_after: Option<u64>) -> Host {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let hc = HostConfig {
+        engines,
+        slots: k.slots,
+        engine_opts: cfg.engine.engine_opts(),
+        sup: cfg.engine.supervisor_opts(),
+        backend: HostBackend::Mock {
+            min_len: k.min_len,
+            spread: k.spread,
+            decode_delay_us: k.delay_us,
+            max_seq: MAX_SEQ,
+        },
+        crash_after_events: crash_after,
+        crash_exit: false,
+    };
+    let thread = std::thread::spawn(move || {
+        let _ = serve(listener, hc, true);
+    });
+    Host { addr, thread }
+}
+
+struct Host {
+    addr: String,
+    thread: JoinHandle<()>,
+}
+
+/// Dial a fleet of already-listening hosts over the tcp transport.
+fn connect_fleet(cfg: &mut Config, hosts: &[Host]) -> RouterPool {
+    cfg.router.transport = TransportKind::Tcp;
+    cfg.router.hosts = hosts.iter().map(|h| h.addr.clone()).collect::<Vec<_>>().join(",");
+    RouterPool::connect(&cfg.router, cfg.train.seed).unwrap()
+}
+
+/// Canonical stage fingerprint (see `rollout_golden.rs`): groups sorted by
+/// task prompt; per group the sorted multiset of (tokens, logprob bits).
+type Fingerprint = Vec<(String, usize, Vec<(Vec<i32>, Vec<u32>)>)>;
+
+fn fingerprint(out: &RolloutOutput) -> Fingerprint {
+    let mut groups: Vec<_> = out
+        .groups
+        .iter()
+        .map(|g| {
+            let mut streams: Vec<(Vec<i32>, Vec<u32>)> = g
+                .done
+                .iter()
+                .map(|t| {
+                    (
+                        t.tokens.clone(),
+                        t.behavior_logprobs().iter().map(|l| l.to_bits()).collect(),
+                    )
+                })
+                .collect();
+            streams.sort();
+            (g.task.prompt.clone(), g.target, streams)
+        })
+        .collect();
+    groups.sort();
+    groups
+}
+
+fn golden_cfg(mode: RolloutMode) -> Config {
+    let mut cfg = Config::new("mock");
+    cfg.rollout.mode = mode;
+    cfg.rollout.batch_prompts = 3;
+    cfg.rollout.group_size = 2;
+    cfg.rollout.concurrency = 4;
+    cfg.rollout.temperature = 0.0; // greedy → streams scripted, no RNG
+    cfg.engine.retry_backoff_ms = 0;
+    cfg.train.seed = 5;
+    cfg
+}
+
+/// Run `stages` rollout stages and return per-stage fingerprints.
+fn run_stages(coord: &mut Coordinator, seed: u64, stages: usize) -> Vec<Fingerprint> {
+    let mut ds = Dataset::train(seed);
+    (0..stages).map(|_| fingerprint(&coord.rollout_stage(&mut ds).unwrap())).collect()
+}
+
+/// THE acceptance pin, partial-mode arm: all three rollout modes over one
+/// remote host (1 engine × 1 slot — the proven-deterministic regime) are
+/// bit-identical to the local transport across three stages, including
+/// partial buffering and resumption crossing the wire.
+#[test]
+fn tcp_single_host_matches_local_all_modes() {
+    let k = Knobs { slots: 1, min_len: 4, spread: 6, delay_us: 200 };
+    for mode in [RolloutMode::Sync, RolloutMode::NaivePartial, RolloutMode::Copris] {
+        let mut cfg = golden_cfg(mode);
+        cfg.engine.engines = 1;
+
+        let mut local = Coordinator::new(local_pool(&cfg, 1, k), cfg.clone(), MAX_SEQ);
+        let want = run_stages(&mut local, cfg.train.seed, 3);
+        local.shutdown();
+
+        let host = spawn_host(&cfg, 1, k, None);
+        let pool = connect_fleet(&mut cfg, std::slice::from_ref(&host));
+        let mut remote = Coordinator::new(pool, cfg.clone(), MAX_SEQ);
+        assert_eq!(remote.pool.transport_name(), "tcp");
+        assert_eq!(remote.pool.engines(), 1);
+        let got = run_stages(&mut remote, cfg.train.seed, 3);
+        remote.shutdown();
+        host.thread.join().unwrap();
+
+        assert_eq!(got, want, "tcp transport diverged from local in mode {mode:?}");
+    }
+}
+
+/// THE acceptance pin, multi-host arm: a 2-host fleet (1 engine × 4 slots
+/// each, global ids 0 and 1) runs the sync golden bit-identically to one
+/// local 2-engine pool. The second host's engine id base is nonzero, so
+/// this also pins the global-id assignment across the wire.
+#[test]
+fn tcp_two_hosts_match_local_sync_golden() {
+    let k = Knobs { slots: 4, min_len: 3, spread: 8, delay_us: 100 };
+    let mut cfg = golden_cfg(RolloutMode::Sync);
+    cfg.engine.engines = 2;
+
+    let mut local = Coordinator::new(local_pool(&cfg, 2, k), cfg.clone(), MAX_SEQ);
+    let want = run_stages(&mut local, cfg.train.seed, 2);
+    local.shutdown();
+
+    let hosts = [spawn_host(&cfg, 1, k, None), spawn_host(&cfg, 1, k, None)];
+    let pool = connect_fleet(&mut cfg, &hosts);
+    assert_eq!(pool.engines(), 2);
+    assert_eq!(pool.total_slots(), 8);
+    assert_eq!(pool.link_alive(), vec![true, true]);
+    let mut remote = Coordinator::new(pool, cfg.clone(), MAX_SEQ);
+    let got = run_stages(&mut remote, cfg.train.seed, 2);
+    remote.shutdown();
+    for h in hosts {
+        h.thread.join().unwrap();
+    }
+
+    assert_eq!(got, want, "2-host fleet diverged from local 2-engine pool");
+}
+
+/// Retained-KV affinity over the wire: a copris run with `retain_kv` must
+/// keep its streams bit-identical to local AND actually hit the retained
+/// fast path remotely (`StopGeneration{retain}` → `Flushed{retained}` →
+/// affinity-routed `Assign{use_retained}` all crossing the socket).
+#[test]
+fn tcp_retained_resume_matches_local_and_hits() {
+    let k = Knobs { slots: 1, min_len: 20, spread: 30, delay_us: 100 };
+    let mut cfg = golden_cfg(RolloutMode::Copris);
+    cfg.rollout.batch_prompts = 2;
+    cfg.rollout.concurrency = 4;
+    cfg.rollout.retain_kv = true;
+    cfg.engine.engines = 1;
+    cfg.train.seed = 7;
+
+    let mut local = Coordinator::new(local_pool(&cfg, 1, k), cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+    let mut want = Vec::new();
+    let mut local_hits = 0usize;
+    for _ in 0..3 {
+        let out = local.rollout_stage(&mut ds).unwrap();
+        local_hits += out.stats.retained_hits;
+        want.push(fingerprint(&out));
+    }
+    local.shutdown();
+    assert!(local_hits > 0, "workload must exercise retained resume locally");
+
+    let host = spawn_host(&cfg, 1, k, None);
+    let pool = connect_fleet(&mut cfg, std::slice::from_ref(&host));
+    let mut remote = Coordinator::new(pool, cfg.clone(), MAX_SEQ);
+    let mut ds = Dataset::train(cfg.train.seed);
+    let mut got = Vec::new();
+    let mut remote_hits = 0usize;
+    for _ in 0..3 {
+        let out = remote.rollout_stage(&mut ds).unwrap();
+        remote_hits += out.stats.retained_hits;
+        got.push(fingerprint(&out));
+    }
+    remote.shutdown();
+    host.thread.join().unwrap();
+
+    assert_eq!(got, want, "retained-resume streams diverged across transports");
+    assert_eq!(remote_hits, local_hits, "retained fast path differs across transports");
+}
+
+/// Draining: a draining replica stops receiving new work but the stage
+/// still delivers the exact fault-free trajectory set (streams are
+/// engine-invariant); undraining restores it to rotation. One host with
+/// TWO engines, so per-host engine fan-out is covered too.
+#[test]
+fn draining_replica_routes_around_and_restores() {
+    let k = Knobs { slots: 2, min_len: 6, spread: 8, delay_us: 0 };
+    let mut cfg = golden_cfg(RolloutMode::Sync);
+    cfg.engine.engines = 2;
+
+    let mut local = Coordinator::new(local_pool(&cfg, 2, k), cfg.clone(), MAX_SEQ);
+    let want = run_stages(&mut local, cfg.train.seed, 1);
+    local.shutdown();
+
+    let host = spawn_host(&cfg, 2, k, None);
+    let pool = connect_fleet(&mut cfg, std::slice::from_ref(&host));
+    assert_eq!(pool.engines(), 2);
+    let mut remote = Coordinator::new(pool, cfg.clone(), MAX_SEQ);
+
+    assert!(remote.drain_engine(1), "draining a healthy replica must succeed");
+    assert_eq!(
+        remote.replica_health(),
+        vec![ReplicaHealth::Healthy, ReplicaHealth::Draining]
+    );
+    let got = run_stages(&mut remote, cfg.train.seed, 1);
+    assert_eq!(got, want, "drained run changed the delivered trajectory set");
+    assert!(remote.undrain_engine(1), "undraining a live replica must succeed");
+    assert_eq!(
+        remote.replica_health(),
+        vec![ReplicaHealth::Healthy, ReplicaHealth::Healthy]
+    );
+    remote.shutdown();
+    host.thread.join().unwrap();
+}
+
+/// A wedged host — socket open, never answers pings, never emits events —
+/// is declared dead by the HEARTBEAT (not a socket error), its replica
+/// funnels into the standard `EngineFailed` recovery path, and the stage
+/// completes on the surviving host with the fault-free trajectory set.
+#[test]
+fn heartbeat_declares_wedged_host_dead_and_stage_recovers() {
+    let k = Knobs { slots: 2, min_len: 6, spread: 8, delay_us: 0 };
+    let mut cfg = golden_cfg(RolloutMode::Sync);
+    cfg.engine.engines = 2;
+
+    let mut local = Coordinator::new(local_pool(&cfg, 2, k), cfg.clone(), MAX_SEQ);
+    let want = run_stages(&mut local, cfg.train.seed, 1);
+    local.shutdown();
+
+    // Wedge: handshakes like a 1-engine host, then reads-and-discards
+    // forever — no pongs, no events. Only the heartbeat can catch this.
+    let wedge_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let wedge_addr = wedge_listener.local_addr().unwrap().to_string();
+    let wedge_slots = k.slots as u64;
+    let wedge = std::thread::spawn(move || {
+        let (mut s, _) = wedge_listener.accept().unwrap();
+        let hello = wire::read_msg(&mut s).unwrap();
+        assert!(matches!(hello, WireMsg::Hello { proto: PROTO_VERSION, .. }));
+        wire::write_msg(
+            &mut s,
+            &WireMsg::HelloAck { proto: PROTO_VERSION, engines: 1, slots: wedge_slots },
+        )
+        .unwrap();
+        let mut sink = [0u8; 4096];
+        while matches!(s.read(&mut sink), Ok(n) if n > 0) {}
+    });
+
+    let real = spawn_host(&cfg, 1, k, None);
+    cfg.router.transport = TransportKind::Tcp;
+    cfg.router.hosts = format!("{},{}", real.addr, wedge_addr);
+    cfg.router.heartbeat_ms = 50;
+    cfg.router.heartbeat_misses = 2;
+    let pool = RouterPool::connect(&cfg.router, cfg.train.seed).unwrap();
+    assert_eq!(pool.engines(), 2);
+    let mut remote = Coordinator::new(pool, cfg.clone(), MAX_SEQ);
+
+    let mut ds = Dataset::train(cfg.train.seed);
+    let out = remote.rollout_stage(&mut ds).unwrap();
+    assert_eq!(fingerprint(&out), want[0], "recovery diverged from fault-free streams");
+    assert!(out.stats.engine_failures >= 1, "{:?}", out.stats);
+    assert!(out.stats.redispatched_trajectories > 0, "{:?}", out.stats);
+    assert_eq!(remote.pool.link_alive(), vec![true, false]);
+    assert_eq!(remote.replica_health()[1], ReplicaHealth::Dead);
+
+    remote.shutdown();
+    real.thread.join().unwrap();
+    wedge.join().unwrap();
+}
+
+/// Connect-time fleet validation: a host advertising a different
+/// slots-per-engine than the rest of the fleet is rejected outright (slot
+/// accounting upstairs assumes uniformity).
+#[test]
+fn connect_rejects_mixed_slot_fleet() {
+    let cfg = golden_cfg(RolloutMode::Sync);
+    let a = spawn_host(&cfg, 1, Knobs { slots: 2, min_len: 4, spread: 6, delay_us: 0 }, None);
+    let b = spawn_host(&cfg, 1, Knobs { slots: 3, min_len: 4, spread: 6, delay_us: 0 }, None);
+
+    let mut rcfg = cfg.router.clone();
+    rcfg.transport = TransportKind::Tcp;
+    rcfg.hosts = format!("{},{}", a.addr, b.addr);
+    let err = RouterPool::connect(&rcfg, cfg.train.seed).unwrap_err();
+    assert!(format!("{err:#}").contains("uniform"), "{err:#}");
+
+    // A failed bring-up severs the already-connected host A and drops the
+    // half-shaken host B socket, so both `once` serve loops return.
+    a.thread.join().unwrap();
+    b.thread.join().unwrap();
+}
+
+/// `transport = "tcp"` with no hosts is a structured config error, not a
+/// hang or a panic.
+#[test]
+fn connect_requires_hosts() {
+    let mut rcfg = golden_cfg(RolloutMode::Sync).router.clone();
+    rcfg.transport = TransportKind::Tcp;
+    rcfg.hosts = String::new();
+    let err = RouterPool::connect(&rcfg, 5).unwrap_err();
+    assert!(format!("{err:#}").contains("router.hosts"), "{err:#}");
+}

@@ -256,8 +256,9 @@ def main():
             f"bench_check: WARNING — {args.baseline} has no {label} but "
             f"{args.fresh} has {len(fresh)}: the regression gate is "
             f"UNSEEDED and gating nothing; FAIL. Seed it with "
-            f"`cp {args.fresh} {args.baseline}` (or copy the CI "
-            f"BENCH_micro artifact over it) and commit to arm the "
+            f"`python3 scripts/seed_baseline.py --artifact {args.fresh}` "
+            f"(validates the rows and records provenance; use a trusted CI "
+            f"BENCH_micro artifact) and commit to arm the "
             f"±{args.tolerance:.0%} gate.",
             file=sys.stderr,
         )

@@ -36,6 +36,13 @@
 #                            `scalar` forces COPRIS_SIMD=scalar to prove
 #                            the forced-scalar escape hatch stays golden,
 #                            `both` (default) runs the two in sequence
+#   scripts/ci.sh --net      router/transport gate (the CI `net` job):
+#                            local-vs-multi-process bit-identity goldens
+#                            over real loopback sockets plus the
+#                            killed-engine-host chaos tests, each run under
+#                            a HARD `timeout` so a wedged socket or leaked
+#                            link thread fails the gate instead of hanging
+#                            it
 # Unknown flags exit 2 with this usage instead of silently running full
 # tier-1.
 set -euo pipefail
@@ -43,7 +50,7 @@ ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$ROOT"
 
 usage() {
-  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd]" >&2
+  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd|--net]" >&2
   echo "  (no flag = full tier-1: build + doc + clippy + test)" >&2
   echo "  --simd honors SIMD_ARM=native|scalar|both (default both)" >&2
 }
@@ -52,7 +59,7 @@ usage() {
 # with usage instead of silently running full tier-1.
 MODE="${1:-}"
 case "$MODE" in
-  ""|--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd) ;;
+  ""|--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd|--net) ;;
   *)
     echo "ci: unknown flag $MODE" >&2
     usage
@@ -192,6 +199,25 @@ run_simd() {
   fi
 }
 
+run_net() {
+  # Router/transport gate: the local-vs-tcp bit-identity goldens
+  # (rust/tests/router_transport.rs — the tcp transport runs against real
+  # engine-hosts over loopback, threads and a `copris engine-host`
+  # subprocess) plus the killed-engine-host chaos tests. Compile first
+  # WITHOUT the timeout (a cold build may legitimately take minutes), then
+  # hard-cap each test binary run: networked tests must fail loudly on a
+  # wedged socket or leaked link thread, never hang the pipeline.
+  echo "== net: compiling test targets (uncapped) =="
+  cargo test -q --no-run --manifest-path "$MANIFEST" \
+    --test router_transport --test chaos_recovery
+  echo "== net: router_transport — local vs multi-process bit-identity (10 min cap) =="
+  timeout -k 10 600 \
+    cargo test -q --manifest-path "$MANIFEST" --test router_transport
+  echo "== net: chaos_recovery killed_engine_host (10 min cap) =="
+  timeout -k 10 600 \
+    cargo test -q --manifest-path "$MANIFEST" --test chaos_recovery killed_engine_host
+}
+
 run_full() {
   # NOTE: fmt stays a separate gate (scripts/ci.sh --fmt / the CI `fmt`
   # job, blocking) rather than part of full tier-1, so formatting drift
@@ -241,6 +267,10 @@ case "$MODE" in
   --slo)
     run_slo
     echo "ci: slo OK"
+    ;;
+  --net)
+    run_net
+    echo "ci: net OK"
     ;;
   "")
     run_full

@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Seed BENCH_baseline.json from a CI bench artifact (stdlib only).
+
+The bench-regression gate (scripts/bench_check.py) compares fresh
+BENCH_micro.json runs against the committed BENCH_baseline.json and FAILS
+LOUDLY while the baseline is unseeded (rows[] empty). This script is the
+seeding step: it validates a trusted run's BENCH_micro artifact — rows
+present, every row carrying the "path" identity bench_check matches on —
+and writes it over the baseline with provenance recorded, ready to commit.
+
+Flow (documented in .github/workflows/ci.yml next to the bench-micro job):
+  1. download the `BENCH_micro` artifact from a trusted bench-micro run on
+     CI hardware (timings from laptops or busy containers make the ±30%
+     band meaningless);
+  2. python3 scripts/seed_baseline.py --artifact BENCH_micro.json
+     (add --force when a previously seeded baseline is being re-seeded,
+     e.g. after CI hardware changed or a new bench row landed);
+  3. commit the updated BENCH_baseline.json — the gate is armed from the
+     next CI run on.
+
+An already-ARMED baseline (non-empty rows) is never overwritten without
+--force: re-seeding resets the regression reference, which should be a
+deliberate, reviewed act, not a side effect.
+
+Usage:
+  scripts/seed_baseline.py [--artifact BENCH_micro.json]
+                           [--baseline BENCH_baseline.json]
+                           [--force]
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"seed_baseline: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_doc(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} not found")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+
+def validate_artifact(doc, path):
+    """The artifact must hold gateable rows: a non-empty rows[] where every
+    row is an object with the "path" identity field bench_check.py keys on.
+    Seeding an empty or malformed artifact would disarm the gate while
+    looking like it armed it — the exact failure mode the loud unseeded
+    check exists to prevent."""
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        fail(
+            f"{path} has no rows — seed from a POPULATED BENCH_micro "
+            f"artifact produced by scripts/bench_micro.sh on CI hardware, "
+            f"not the placeholder committed in-tree"
+        )
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict) or not isinstance(row.get("path"), str) or not row["path"]:
+            fail(f"{path} rows[{i}] has no string 'path' field: {row!r}")
+    paths = [r["path"] for r in rows]
+    dupes = sorted({p for p in paths if paths.count(p) > 1})
+    if dupes:
+        fail(f"{path} has duplicate row paths {dupes} — rows are matched by path")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifact", default="BENCH_micro.json", help="CI bench artifact to seed from")
+    ap.add_argument("--baseline", default="BENCH_baseline.json", help="baseline file to write")
+    ap.add_argument(
+        "--force",
+        action="store_true",
+        help="overwrite a baseline that already has rows (re-seeding)",
+    )
+    args = ap.parse_args()
+
+    artifact = load_doc(args.artifact)
+    rows = validate_artifact(artifact, args.artifact)
+
+    try:
+        with open(args.baseline, encoding="utf-8") as f:
+            existing = json.load(f)
+    except FileNotFoundError:
+        existing = None
+    except json.JSONDecodeError:
+        existing = None  # corrupt baseline: overwriting it is an upgrade
+    if existing is not None and existing.get("rows") and not args.force:
+        fail(
+            f"{args.baseline} is already seeded with {len(existing['rows'])} "
+            f"row(s); re-seeding resets the regression reference — pass "
+            f"--force if that is intended"
+        )
+
+    n_det = sum(1 for r in rows if r.get("kind") == "deterministic")
+    doc = {
+        "bench": "baseline",
+        "generated_by": "scripts/seed_baseline.py",
+        "seeded_from": args.artifact,
+        # Carry the artifact's own provenance fields through so a committed
+        # baseline says which bench run produced it.
+        "source_generated_by": artifact.get("generated_by"),
+        "source_status": artifact.get("status"),
+        "rows": rows,
+    }
+    with open(args.baseline, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(
+        f"seed_baseline: wrote {args.baseline} with {len(rows)} row(s) "
+        f"({n_det} deterministic) from {args.artifact} — commit it to arm "
+        f"the bench-regression gate"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
