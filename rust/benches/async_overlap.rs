@@ -1,0 +1,101 @@
+//! Serial vs stage-pipelined vs fully-async CoPRIS, end-to-end wall clock
+//! at equal batch count on the mock backend. The mock's per-step decode
+//! delay stands in for GPU decode time; the simulated trainer window
+//! stands in for cal-logprob → grad → update. The async arm never
+//! quiesces the stream: batch boundaries cost a `take` + bounded-staleness
+//! cut instead of a full drain + cold refill, so its wall clock should sit
+//! at or below the pipelined arm's, with the staleness/active cut counts
+//! showing the protocol at work.
+//!
+//! Scale via COPRIS_BENCH_STEPS / COPRIS_BENCH_TRAIN_MS /
+//! COPRIS_BENCH_DECODE_US / COPRIS_BENCH_STALENESS. With
+//! COPRIS_BENCH_JSON set, rows are merged into the existing
+//! BENCH_micro.json (scripts/bench_micro.sh runs micro first, then this).
+
+use std::time::Duration;
+
+use copris::bench::{merge_bench_rows, render_table};
+use copris::config::ExecMode;
+use copris::exp::common::env_usize;
+use copris::exp::pipesim::{run_mode, PipeSimOpts, PipeSimSummary};
+use copris::util::json::Obj;
+
+fn main() {
+    let mut opts = PipeSimOpts::default();
+    opts.steps = env_usize("COPRIS_BENCH_STEPS", 8);
+    opts.train_secs = env_usize("COPRIS_BENCH_TRAIN_MS", 60) as f64 / 1e3;
+    opts.decode_delay =
+        Duration::from_micros(env_usize("COPRIS_BENCH_DECODE_US", 1000) as u64);
+    opts.cfg.rollout.max_staleness = env_usize("COPRIS_BENCH_STALENESS", 1);
+    opts.cfg.rollout.execution = ExecMode::Async;
+
+    println!(
+        "== async_overlap: serial vs pipelined vs fully-async CoPRIS (mock backend) ==\n\
+         {} steps, B={} G={} N'={}, decode {:?}/step, simulated train {:.0}ms/step, S={}\n",
+        opts.steps,
+        opts.cfg.rollout.batch_prompts,
+        opts.cfg.rollout.group_size,
+        opts.cfg.rollout.concurrency,
+        opts.decode_delay,
+        opts.train_secs * 1e3,
+        opts.cfg.rollout.max_staleness,
+    );
+
+    let (serial, _) = run_mode(&opts, ExecMode::Serial).expect("serial arm");
+    let (piped, _) = run_mode(&opts, ExecMode::Pipelined).expect("pipelined arm");
+    let (asynch, _) = run_mode(&opts, ExecMode::Async).expect("async arm");
+
+    let headers = [
+        "Arm", "Wall s", "Groups", "Samples", "Overlap s", "Lagged trajs",
+        "Stale cuts", "Active cuts", "Speedup",
+    ];
+    let row = |name: &str, s: &PipeSimSummary, speedup: f64| {
+        vec![
+            name.to_string(),
+            format!("{:.2}", s.wall),
+            s.groups.to_string(),
+            s.samples.to_string(),
+            format!("{:.2}", s.overlap_secs),
+            s.lagged_trajectories.to_string(),
+            s.staleness_terminations.to_string(),
+            s.active_terminations.to_string(),
+            if speedup > 0.0 { format!("{speedup:.2}x") } else { "-".into() },
+        ]
+    };
+    let rows = vec![
+        row("serial copris", &serial, 0.0),
+        row("pipelined copris", &piped, serial.wall / piped.wall.max(1e-9)),
+        row("async copris", &asynch, serial.wall / asynch.wall.max(1e-9)),
+    ];
+    println!("{}", render_table(&headers, &rows));
+    println!(
+        "\nexpected shape: async wall ≤ pipelined wall ≤ serial wall at equal batches;\n\
+         async batch boundaries cut only over-staleness work (stale/active cuts > 0\n\
+         at small S) instead of draining the whole stream."
+    );
+
+    // Machine-readable rows merged into BENCH_micro.json.
+    if let Ok(path) = std::env::var("COPRIS_BENCH_JSON") {
+        let entries: Vec<String> = [
+            ("serial", &serial),
+            ("pipelined", &piped),
+            ("async", &asynch),
+        ]
+        .iter()
+        .map(|(name, s)| {
+            Obj::new()
+                .str("path", &format!("async_overlap {name} (run wall)"))
+                .num("mean_s", s.wall / opts.steps.max(1) as f64)
+                .num("p50_s", s.wall / opts.steps.max(1) as f64)
+                .num("p95_s", s.wall / opts.steps.max(1) as f64)
+                .int("iters", opts.steps as i64)
+                .num("overlap_s", s.overlap_secs)
+                .int("lagged_trajs", s.lagged_trajectories as i64)
+                .int("staleness_terminations", s.staleness_terminations as i64)
+                .int("active_terminations", s.active_terminations as i64)
+                .finish()
+        })
+        .collect();
+        merge_bench_rows(&path, "async_overlap", "async_overlap", &entries);
+    }
+}

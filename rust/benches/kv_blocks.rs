@@ -7,9 +7,11 @@
 //! Arms (greedy sampling — token streams are bit-identical across arms,
 //! pinned by tests/retained_golden.rs; only scheduling/residency differ):
 //!
-//!   flat-token            budget via the DEPRECATED engine.kv_budget_tokens
-//!                         field (converted blocks = ceil(tokens/block)),
-//!                         sharing off — the pre-subsystem baseline.
+//!   flat-token            budget stated in tokens and converted via
+//!                         KvCacheConfig::from_token_budget (blocks =
+//!                         ceil(tokens/block)), sharing off — the
+//!                         pre-subsystem baseline. (The config-level
+//!                         engine.kv_budget_tokens knob was removed.)
 //!   paged-private         same budget stated in blocks, sharing off —
 //!                         must behave identically to flat-token (the
 //!                         conversion sanity row).
@@ -51,7 +53,7 @@ struct ArmResult {
 }
 
 struct ArmOpts {
-    /// Budget in blocks; stated through the deprecated token field when
+    /// Budget in blocks; stated in tokens and converted when
     /// `legacy_tokens` is set (exercises the conversion path).
     budget_blocks: usize,
     legacy_tokens: bool,
@@ -71,8 +73,13 @@ fn run_arm(o: &ArmOpts) -> ArmResult {
     cfg.engine.kv_block_size = BLOCK_SIZE;
     cfg.engine.prefix_sharing = o.sharing;
     if o.legacy_tokens {
-        // Deprecated denomination: ceil(tokens / block) == budget_blocks.
-        cfg.engine.kv_budget_tokens = o.budget_blocks * BLOCK_SIZE;
+        // Token-denominated statement of the same budget, converted via
+        // KvCacheConfig::from_token_budget — the config-level
+        // kv_budget_tokens knob was removed, so the conversion sanity row
+        // states the tokens here and converts explicitly.
+        cfg.engine.kv_budget_blocks =
+            copris::engine::KvCacheConfig::from_token_budget(o.budget_blocks * BLOCK_SIZE, BLOCK_SIZE)
+                .budget_blocks;
     } else {
         cfg.engine.kv_budget_blocks = o.budget_blocks;
     }

@@ -7,6 +7,6 @@ pub mod toml;
 
 pub use presets::{paper_preset, preset, scaled_preset};
 pub use schema::{
-    Config, EngineConfig, EvalConfig, RolloutConfig, RolloutMode, RouterConfig, TrainConfig,
-    TransportKind, WorkloadConfig, WorkloadKind,
+    Config, EngineConfig, EvalConfig, ExecMode, RolloutConfig, RolloutMode, RouterConfig,
+    TrainConfig, TransportKind, WorkloadConfig, WorkloadKind,
 };

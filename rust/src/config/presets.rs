@@ -3,7 +3,7 @@
 //! settings onto this CPU substrate, preserving the ratios that matter:
 //! concurrency N' >> B·G, eval temperature 0.6, clip (0.2, 0.28), GRPO G=8.
 
-use super::schema::{Config, RolloutMode};
+use super::schema::{Config, ExecMode, RolloutMode};
 
 /// The paper's Table 3, verbatim. Not runnable on this substrate (batch 64
 /// × 8 rollouts × 15360 tokens) — it documents the source configuration.
@@ -68,6 +68,19 @@ pub fn preset(name: &str) -> Option<Config> {
             c.engine.step_token_budget = 48;
             Some(c)
         }
+        // Fully-async CoPRIS: the trajectory stream never quiesces — the
+        // trainer consumes a batch whenever B groups are staged and syncs
+        // weights mid-flight under the bounded-staleness protocol
+        // (max_staleness syncs per assignment; APRIL-style active cuts for
+        // at-risk stragglers).
+        "async-small" => {
+            let mut c = scaled_preset("small");
+            c.rollout.execution = ExecMode::Async;
+            c.rollout.max_staleness = 1;
+            c.rollout.active_termination = true;
+            c.engine.step_token_budget = 48;
+            Some(c)
+        }
         _ => None,
     }
 }
@@ -106,6 +119,11 @@ mod tests {
             pipe.engine.step_token_budget > 0,
             "pipelined preset runs the continuous-batching scheduler"
         );
+        let asy = preset("async-small").unwrap();
+        assert_eq!(asy.rollout.exec_mode(), ExecMode::Async);
+        assert_eq!(asy.rollout.mode, RolloutMode::Copris);
+        assert_eq!(asy.rollout.max_staleness, 1);
+        assert!(asy.rollout.active_termination);
         assert!(preset("nope").is_none());
     }
 }

@@ -38,6 +38,44 @@ impl RolloutMode {
     }
 }
 
+/// How rollout and training interleave — the execution axis, orthogonal to
+/// [`RolloutMode`] (which picks the scheduling policy WITHIN a stage).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Serial rollout → train → sync (the paper's baseline loop).
+    #[default]
+    Serial,
+    /// Stage-pipelined: stage t+1's rollout overlaps the stage-t update,
+    /// weights sync mid-flight (one step of lookahead).
+    Pipelined,
+    /// Fully async: one open-ended rollout stream; the trainer consumes a
+    /// batch whenever B groups are complete and weight sync is a background
+    /// broadcast bounded by `rollout.max_staleness`.
+    Async,
+}
+
+impl ExecMode {
+    /// Parse a CLI/TOML execution-mode name (`serial` | `pipelined` |
+    /// `async`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "serial" => ExecMode::Serial,
+            "pipelined" | "pipeline" => ExecMode::Pipelined,
+            "async" => ExecMode::Async,
+            _ => bail!("unknown execution mode {s:?} (serial|pipelined|async)"),
+        })
+    }
+
+    /// Canonical name (round-trips through [`ExecMode::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Serial => "serial",
+            ExecMode::Pipelined => "pipelined",
+            ExecMode::Async => "async",
+        }
+    }
+}
+
 /// Rollout-stage configuration (paper Table 3, "Rollout Configuration").
 #[derive(Clone, Debug)]
 pub struct RolloutConfig {
@@ -65,8 +103,28 @@ pub struct RolloutConfig {
     /// stage-t update and pump it between trainer microbatches, syncing
     /// weights mid-flight (in-flight trajectories gain another version
     /// segment — handled by the cross-stage IS machinery). Off = serial
-    /// rollout → train → sync, matching the paper.
+    /// rollout → train → sync, matching the paper. Legacy alias for
+    /// `execution = "pipelined"`; [`RolloutConfig::exec_mode`] resolves the
+    /// two (an explicit non-serial `execution` wins).
     pub pipeline: bool,
+    /// Execution axis (`serial` | `pipelined` | `async`); also settable as
+    /// `rollout.mode = pipelined|async` sugar (which picks CoPRIS
+    /// scheduling plus this execution mode). See [`ExecMode`].
+    pub execution: ExecMode,
+    /// Async execution only: how many weight syncs one engine assignment
+    /// may span before it is early-terminated into the partial buffer (its
+    /// resume re-dispatches under the fresh policy; cross-stage IS corrects
+    /// the spliced segments). 0 = every sync cuts all in-flight work, which
+    /// is exactly stage-pipelined execution (pinned bit-identical by
+    /// `tests/rollout_golden.rs`).
+    pub max_staleness: usize,
+    /// Async execution only: APRIL-style active partial rollout. At each
+    /// sync, trajectories on their LAST allowed staleness window whose
+    /// predicted remaining length (per-group EMA of observed decode
+    /// lengths) exceeds the observed per-window decode progress are cut
+    /// proactively, longest-predicted-remaining first, instead of being
+    /// left to trip the mandatory bound a whole window later.
+    pub active_termination: bool,
     /// KV retention + affinity resume routing (on by default): partials
     /// flushed at early termination / `abort_stage` keep their KV resident
     /// in the engine, and their resumption is routed back to that engine to
@@ -100,9 +158,27 @@ impl Default for RolloutConfig {
             importance_sampling: true,
             max_stage_lag: usize::MAX,
             pipeline: false,
+            execution: ExecMode::Serial,
+            max_staleness: 1,
+            active_termination: true,
             retain_kv: true,
             retain_kv_across_sync: false,
             affinity_max_imbalance: 4,
+        }
+    }
+}
+
+impl RolloutConfig {
+    /// The effective execution mode: an explicit non-serial `execution`
+    /// wins; otherwise the legacy `pipeline` bool maps to
+    /// [`ExecMode::Pipelined`].
+    pub fn exec_mode(&self) -> ExecMode {
+        if self.execution != ExecMode::Serial {
+            self.execution
+        } else if self.pipeline {
+            ExecMode::Pipelined
+        } else {
+            ExecMode::Serial
         }
     }
 }
@@ -112,15 +188,9 @@ impl Default for RolloutConfig {
 pub struct EngineConfig {
     /// Number of engine threads ("GPUs").
     pub engines: usize,
-    /// DEPRECATED: token-denominated KV budget per engine. Since the paged
-    /// KV-cache subsystem the budget is blocks-denominated
-    /// (`kv_budget_blocks`); a non-zero value here is converted with
-    /// ceil(tokens / kv_block_size) when `kv_budget_blocks` is 0, so old
-    /// TOML/CLI configs keep working (a one-line warning is printed when
-    /// set through `Config::set`). 0 = unlimited.
-    pub kv_budget_tokens: usize,
     /// KV budget per engine in blocks of `kv_block_size` tokens
-    /// (0 = unlimited, or fall back to the deprecated `kv_budget_tokens`).
+    /// (0 = unlimited). The token-denominated `kv_budget_tokens` knob was
+    /// removed — `Config::set` and TOML reject it with a migration hint.
     /// Exceeding it sheds residency cheapest-first: shared-prefix registry
     /// entries, retained slots, then live preemption + re-prefill (the
     /// paper's recomputation overhead); fresh admission backpressures.
@@ -182,7 +252,6 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             engines: 2,
-            kv_budget_tokens: 0,
             kv_budget_blocks: 0,
             kv_block_size: crate::engine::DEFAULT_BLOCK_SIZE,
             prefix_sharing: true,
@@ -198,18 +267,11 @@ impl Default for EngineConfig {
 }
 
 impl EngineConfig {
-    /// The effective blocks-denominated budget: `kv_budget_blocks` when
-    /// set, else the deprecated `kv_budget_tokens` converted with
-    /// ceil(tokens / kv_block_size) — resolved lazily so TOML/CLI key
-    /// order cannot change the result. 0 = unlimited.
+    /// The blocks-denominated budget (`kv_budget_blocks`; 0 = unlimited).
+    /// The legacy token-denominated fallback is gone along with the
+    /// `kv_budget_tokens` knob.
     pub fn budget_blocks(&self) -> usize {
-        if self.kv_budget_blocks > 0 {
-            self.kv_budget_blocks
-        } else if self.kv_budget_tokens > 0 {
-            self.kv_budget_tokens.div_ceil(self.kv_block_size.max(1))
-        } else {
-            0
-        }
+        self.kv_budget_blocks
     }
 
     /// The paged-KV configuration the engine pool runs with
@@ -485,7 +547,21 @@ impl Config {
         match (section, field) {
             ("model", "") | ("", "model") => self.model = v.into(),
             ("artifacts_dir", "") => self.artifacts_dir = v.into(),
-            ("rollout", "mode") => self.rollout.mode = RolloutMode::parse(v)?,
+            ("rollout", "mode") => match v {
+                // Sugar: the mode names of the execution axis select CoPRIS
+                // scheduling under that execution mode in one knob
+                // (`rollout.mode = pipelined|async` — the Table-3 row).
+                "pipelined" | "async" => {
+                    self.rollout.mode = RolloutMode::Copris;
+                    self.rollout.execution = ExecMode::parse(v)?;
+                }
+                _ => self.rollout.mode = RolloutMode::parse(v)?,
+            },
+            ("rollout", "execution") => self.rollout.execution = ExecMode::parse(v)?,
+            ("rollout", "max_staleness") => self.rollout.max_staleness = parse_usize()?,
+            ("rollout", "active_termination") => {
+                self.rollout.active_termination = parse_bool()?
+            }
             ("rollout", "batch_prompts") => self.rollout.batch_prompts = parse_usize()?,
             ("rollout", "group_size") => self.rollout.group_size = parse_usize()?,
             ("rollout", "concurrency") => self.rollout.concurrency = parse_usize()?,
@@ -506,16 +582,18 @@ impl Config {
             }
             ("engine", "engines") => self.engine.engines = parse_usize()?,
             ("engine", "kv_budget_tokens") => {
-                self.engine.kv_budget_tokens = parse_usize()?;
-                if self.engine.kv_budget_tokens > 0 {
-                    eprintln!(
-                        "config: engine.kv_budget_tokens is deprecated — the KV budget is \
-                         blocks-denominated now; {} tokens will run as \
-                         ceil(tokens / engine.kv_block_size) blocks (set \
-                         engine.kv_budget_blocks to silence this)",
-                        self.engine.kv_budget_tokens
-                    );
-                }
+                // Removed knob (deprecated since the paged-KV subsystem).
+                // Reject with a migration hint instead of silently
+                // converting so stale configs surface loudly.
+                let tokens = parse_usize()?;
+                bail!(
+                    "engine.kv_budget_tokens was removed — the KV budget is \
+                     blocks-denominated; set engine.kv_budget_blocks = \
+                     ceil(tokens / engine.kv_block_size) instead (here: \
+                     {tokens} tokens / {} tokens-per-block = {} blocks)",
+                    self.engine.kv_block_size.max(1),
+                    tokens.div_ceil(self.engine.kv_block_size.max(1)),
+                );
             }
             ("engine", "kv_budget_blocks") => self.engine.kv_budget_blocks = parse_usize()?,
             ("engine", "kv_block_size") => {
@@ -665,14 +743,16 @@ impl Config {
         s.push_str(&format!("| Concurrency pool size (N') | {} |\n", r.concurrency));
         s.push_str(&format!("| Importance sampling | {} |\n", r.importance_sampling));
         s.push_str(&format!("| Stage pipelining | {} |\n", r.pipeline));
+        s.push_str(&format!("| Execution mode | {} |\n", r.exec_mode().name()));
+        s.push_str(&format!("| Max staleness (syncs per assignment) | {} |\n", r.max_staleness));
+        s.push_str(&format!("| Active termination (APRIL) | {} |\n", r.active_termination));
         s.push_str(&format!("| KV retention (affinity resume) | {} |\n", r.retain_kv));
         s.push_str(&format!("| Retain KV across sync | {} |\n", r.retain_kv_across_sync));
         let eng = &self.engine;
         s.push_str("| **Engine / Paged KV Cache** | |\n");
         s.push_str(&format!("| Engines | {} |\n", eng.engines));
         s.push_str(&format!("| KV block size (tokens) | {} |\n", eng.kv_block_size));
-        // Both denominations, so legacy token-budget configs can audit the
-        // conversion (blocks = ceil(tokens / block size)).
+        // Both denominations, so block budgets stay auditable in tokens.
         let blocks = eng.budget_blocks();
         let budget = if blocks == 0 {
             "unlimited".to_string()
@@ -815,31 +895,85 @@ mod tests {
         assert!(c.set("engine.kv_block_size", "0").is_err());
     }
 
-    /// Back-compat: old token-denominated budgets parse and convert with
-    /// ceil(tokens / block size), regardless of key order, and the Table-3
-    /// echo prints both denominations.
+    /// The removed token-denominated budget is rejected with a migration
+    /// hint (including the converted block count), via both `set` and
+    /// TOML; the blocks knob still renders both denominations.
     #[test]
-    fn legacy_token_budget_converts_to_blocks() {
+    fn legacy_token_budget_rejected_with_migration_hint() {
         let mut c = Config::new("tiny");
-        c.set("engine.kv_budget_tokens", "100").unwrap();
-        assert_eq!(c.engine.budget_blocks(), 7, "ceil(100/16)");
-        // Block size set AFTER the token budget still applies (lazy
-        // resolution).
+        let err = c.set("engine.kv_budget_tokens", "100").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("kv_budget_blocks"), "hint names the new knob: {msg}");
+        assert!(msg.contains("7 blocks"), "hint shows ceil(100/16): {msg}");
+        assert_eq!(c.engine.budget_blocks(), 0, "rejected set leaves state unchanged");
+        // The conversion hint respects an already-set block size.
         c.set("engine.kv_block_size", "32").unwrap();
-        assert_eq!(c.engine.budget_blocks(), 4, "ceil(100/32)");
-        // An explicit blocks budget wins over the legacy tokens value.
-        c.set("engine.kv_budget_blocks", "9").unwrap();
-        assert_eq!(c.engine.budget_blocks(), 9);
-        // TOML path hits the same setters.
-        let doc = "[engine]\nkv_budget_tokens = 48\n";
-        let c2 = Config::from_toml_str(doc).unwrap();
-        assert_eq!(c2.engine.budget_blocks(), 3);
+        let msg = format!("{:#}", c.set("engine.kv_budget_tokens", "100").unwrap_err());
+        assert!(msg.contains("4 blocks"), "ceil(100/32): {msg}");
+        // TOML path rejects the key too.
+        assert!(Config::from_toml_str("[engine]\nkv_budget_tokens = 48\n").is_err());
+        // The blocks knob renders both denominations.
+        let mut c2 = Config::new("tiny");
+        c2.set("engine.kv_budget_blocks", "3").unwrap();
         let table = c2.render_table();
         assert!(table.contains("3 blocks (48 tokens)"), "{table}");
         assert!(table.contains("KV block size"), "{table}");
         assert!(table.contains("Prompt prefix sharing"), "{table}");
         let unlimited = Config::new("tiny").render_table();
         assert!(unlimited.contains("| KV budget | unlimited |"), "{unlimited}");
+    }
+
+    /// Async-execution knobs: serial default, `rollout.mode` sugar, the
+    /// legacy `pipeline` bool as a pipelined alias, staleness/active-
+    /// termination plumbing, and Table-3 rows.
+    #[test]
+    fn execution_mode_knobs_default_and_plumb_through() {
+        let mut c = Config::new("tiny");
+        assert_eq!(c.rollout.execution, ExecMode::Serial);
+        assert_eq!(c.rollout.exec_mode(), ExecMode::Serial);
+        assert_eq!(c.rollout.max_staleness, 1);
+        assert!(c.rollout.active_termination);
+        let table = c.render_table();
+        assert!(table.contains("| Execution mode | serial |"), "{table}");
+        assert!(table.contains("| Max staleness (syncs per assignment) | 1 |"), "{table}");
+        assert!(table.contains("| Active termination (APRIL) | true |"), "{table}");
+
+        // Legacy bool maps to pipelined via exec_mode().
+        c.set("rollout.pipeline", "true").unwrap();
+        assert_eq!(c.rollout.exec_mode(), ExecMode::Pipelined);
+        // An explicit execution knob wins over the bool.
+        c.set("rollout.execution", "async").unwrap();
+        assert_eq!(c.rollout.exec_mode(), ExecMode::Async);
+        assert!(c.render_table().contains("| Execution mode | async |"));
+
+        // `rollout.mode` sugar: pipelined/async pick CoPRIS + execution.
+        let mut c2 = Config::new("tiny");
+        c2.set("rollout.mode", "async").unwrap();
+        assert_eq!(c2.rollout.mode, RolloutMode::Copris);
+        assert_eq!(c2.rollout.exec_mode(), ExecMode::Async);
+        c2.set("rollout.mode", "pipelined").unwrap();
+        assert_eq!(c2.rollout.exec_mode(), ExecMode::Pipelined);
+        c2.set("rollout.mode", "sync").unwrap();
+        assert_eq!(c2.rollout.mode, RolloutMode::Sync);
+
+        c2.set("rollout.max_staleness", "0").unwrap();
+        c2.set("rollout.active_termination", "off").unwrap();
+        assert_eq!(c2.rollout.max_staleness, 0);
+        assert!(!c2.rollout.active_termination);
+        assert!(c2.set("rollout.execution", "warp").is_err());
+
+        // TOML path hits the same setters.
+        let doc = "[rollout]\nexecution = \"async\"\nmax_staleness = 3\n";
+        let c3 = Config::from_toml_str(doc).unwrap();
+        assert_eq!(c3.rollout.exec_mode(), ExecMode::Async);
+        assert_eq!(c3.rollout.max_staleness, 3);
+    }
+
+    #[test]
+    fn exec_mode_roundtrip() {
+        for m in [ExecMode::Serial, ExecMode::Pipelined, ExecMode::Async] {
+            assert_eq!(ExecMode::parse(m.name()).unwrap(), m);
+        }
     }
 
     /// KV dtype knob: defaults to f32 (golden-equivalent), parses the

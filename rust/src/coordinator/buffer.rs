@@ -1,10 +1,68 @@
 //! The partial-trajectory buffer B (Eq. 7) with prioritized resumption:
 //! unfinished trajectories wait here between stages, oldest policy first,
 //! and are re-dispatched before any fresh prompt in the next rollout stage.
+//! Also home to the [`LenPredictor`] the fully-async mode's active
+//! partial-rollout policy consults when choosing which at-risk in-flight
+//! trajectories to early-terminate.
 
+use std::collections::HashMap;
 use std::collections::VecDeque;
 
 use super::trajectory::Trajectory;
+
+/// Response-length predictor for APRIL-style active partial rollout:
+/// per-group EMAs of completed response lengths with a global fallback, so
+/// the async coordinator can estimate how much decoding an in-flight
+/// trajectory still owes (predicted group length minus tokens generated)
+/// before deciding to early-terminate it at a staleness boundary. Samples
+/// of one GRPO group share a prompt, making the group EMA the natural
+/// granularity; a group with no completions yet falls back to the global
+/// EMA, and a cold predictor (no completions at all) predicts 0 — the
+/// active policy then never fires, degrading gracefully to the mandatory
+/// staleness cut alone.
+#[derive(Debug, Default)]
+pub struct LenPredictor {
+    groups: HashMap<u64, f64>,
+    global: Option<f64>,
+    /// EMA smoothing factor in (0, 1]; higher = faster adaptation.
+    alpha: f64,
+}
+
+impl LenPredictor {
+    /// Fresh predictor with the given EMA smoothing factor (clamped into
+    /// (0, 1]; 0.3 is a reasonable default for per-stage batch sizes).
+    pub fn new(alpha: f64) -> Self {
+        LenPredictor {
+            groups: HashMap::new(),
+            global: None,
+            alpha: alpha.clamp(f64::MIN_POSITIVE, 1.0),
+        }
+    }
+
+    /// Record a completed trajectory's response length for its group.
+    pub fn observe(&mut self, group_id: u64, len: usize) {
+        let x = len as f64;
+        let g = self.groups.entry(group_id).or_insert(x);
+        *g += self.alpha * (x - *g);
+        let gl = self.global.get_or_insert(x);
+        *gl += self.alpha * (x - *gl);
+    }
+
+    /// Predicted total response length for a trajectory of `group_id`
+    /// (group EMA, else global EMA, else 0.0 when cold).
+    pub fn predict(&self, group_id: u64) -> f64 {
+        self.groups
+            .get(&group_id)
+            .copied()
+            .or(self.global)
+            .unwrap_or(0.0)
+    }
+
+    /// Drop a finished group's EMA (its prompt will not recur).
+    pub fn forget_group(&mut self, group_id: u64) {
+        self.groups.remove(&group_id);
+    }
+}
 
 /// The buffer B of unfinished trajectories, ordered oldest-policy-first.
 ///
@@ -131,6 +189,19 @@ mod tests {
         assert_eq!(evicted.len(), 1);
         assert_eq!(evicted[0].id, 1);
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn len_predictor_group_then_global_fallback() {
+        let mut p = LenPredictor::new(0.5);
+        assert_eq!(p.predict(1), 0.0, "cold predictor predicts 0");
+        p.observe(1, 10);
+        assert!((p.predict(1) - 10.0).abs() < 1e-9);
+        assert!((p.predict(99) - 10.0).abs() < 1e-9, "global fallback");
+        p.observe(1, 20); // EMA: 10 + 0.5 * (20 - 10) = 15
+        assert!((p.predict(1) - 15.0).abs() < 1e-9);
+        p.forget_group(1);
+        assert!(p.predict(1) > 0.0, "forgotten group falls back to global");
     }
 
     #[test]

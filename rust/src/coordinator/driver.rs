@@ -52,6 +52,13 @@ pub enum StageGoal {
     /// (`Coordinator::run_open_loop` tracks its group ids itself, like
     /// `Fixed`).
     OpenLoop,
+    /// Fully-async streaming: no terminal goal — trajectories accumulate
+    /// in the group book continuously and the trainer harvests batches
+    /// with `Coordinator::take_async_batch` whenever enough groups are
+    /// ready. The stage never reaches `Done` through `goal_met`; it ends
+    /// only via `abort_stage` (which drains in-flight work into the
+    /// partial buffer like any early termination).
+    Stream,
 }
 
 /// Dispatch-policy parameters. The three rollout modes and eval differ
@@ -123,6 +130,10 @@ pub struct StageDriver {
     /// When the stage reached `Done` (wall-clock + overlap accounting:
     /// time between Done and `finish_stage` is idle, not stage work).
     pub done_at: Option<Instant>,
+    /// Refill suspended (fully-async mode: set by `prepare_sync` so no
+    /// dispatch can race the in-progress weight broadcast, cleared by
+    /// `resume_refill` once the new params are installed).
+    pub refill_paused: bool,
 }
 
 impl StageDriver {
@@ -140,6 +151,7 @@ impl StageDriver {
             wave_remaining: None,
             last_event: now,
             done_at: None,
+            refill_paused: false,
         }
     }
 

@@ -32,13 +32,15 @@
 pub mod buffer;
 pub mod driver;
 pub mod groups;
+pub mod plan;
 pub mod reference;
 pub mod rollout;
 pub mod trajectory;
 
-pub use buffer::PartialBuffer;
+pub use buffer::{LenPredictor, PartialBuffer};
 pub use driver::{StageDriver, StageGoal, StagePhase, StagePolicy};
 pub use groups::{Group, GroupBook};
+pub use plan::{StageOutcome, StagePlan};
 pub use reference::ReferenceCoordinator;
 pub use rollout::{Coordinator, OpenLoopOutput, OpenLoopRequest, RolloutOutput, RolloutStats};
 pub use trajectory::{Segment, Trajectory};

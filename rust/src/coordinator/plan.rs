@@ -1,0 +1,211 @@
+//! The unified session API: a [`StagePlan`] declares what one coordinator
+//! stage should deliver — a training batch (serial or detached for
+//! pipelined pumping), the fully-async trajectory stream, a fixed-prompt
+//! eval set, or an open-loop SLO run — and [`Coordinator::run`] executes
+//! it, returning a [`StageOutcome`] arm matching the plan.
+//!
+//! This collapses the historical entry-point zoo (`rollout_stage`,
+//! `run_fixed_sync`, `run_open_loop`, raw `begin_stage`/`pump`/
+//! `finish_stage` sequencing, `begin_async`) into one declarative path;
+//! the old names survive as thin shims over `run` so existing callers and
+//! the frozen reference goldens compile unchanged.
+
+use anyhow::{Context, Result};
+
+use super::groups::Group;
+use super::rollout::{Coordinator, OpenLoopOutput, OpenLoopRequest, RolloutOutput};
+use crate::engine::{PoolApi, SamplingParams};
+use crate::tasks::{Dataset, Task};
+
+/// Declarative description of one coordinator stage. Build with the
+/// constructors ([`training`](StagePlan::training),
+/// [`async_stream`](StagePlan::async_stream), [`eval`](StagePlan::eval),
+/// [`open_loop`](StagePlan::open_loop)), refine with the builder methods,
+/// execute with [`Coordinator::run`].
+#[derive(Debug)]
+pub struct StagePlan {
+    kind: PlanKind,
+    /// Start the stage and return [`StageOutcome::Started`] instead of
+    /// pumping to completion — the caller drives `pump`/`finish_stage`
+    /// (or the async harvest/sync API) itself.
+    detach: bool,
+}
+
+#[derive(Debug)]
+enum PlanKind {
+    /// One training stage in the configured `rollout.mode`
+    /// (sync / naive-partial / copris): B completed groups.
+    Training,
+    /// The fully-async trajectory stream (`rollout.execution = async`);
+    /// always detached — batches are harvested with `take_async_batch`.
+    AsyncStream,
+    /// Fixed-prompt eval: `samples` rollouts per task, until idle.
+    Eval {
+        tasks: Vec<Task>,
+        samples: usize,
+        sampling: SamplingParams,
+    },
+    /// Open-loop SLO stage over a virtual-clock arrival schedule.
+    OpenLoop {
+        schedule: Vec<OpenLoopRequest>,
+        queue_cap: usize,
+        quantum_ticks: u64,
+        sampling: SamplingParams,
+    },
+}
+
+impl StagePlan {
+    /// A training stage run to completion (pair with
+    /// [`detached`](Self::detached) for pipelined callers that pump
+    /// between trainer microbatches).
+    pub fn training() -> StagePlan {
+        StagePlan { kind: PlanKind::Training, detach: false }
+    }
+
+    /// The fully-async trajectory stream. Always detached: `run` starts
+    /// the stream and returns [`StageOutcome::Started`]; harvest with
+    /// `take_async_batch`, sync mid-stream with `prepare_sync` /
+    /// `sync_weights` / `resume_refill`, end with `abort_stage`.
+    pub fn async_stream() -> StagePlan {
+        StagePlan { kind: PlanKind::AsyncStream, detach: true }
+    }
+
+    /// A fixed-prompt eval stage: `samples` rollouts per task (greedy
+    /// defaults; override with [`sampling`](Self::sampling)).
+    pub fn eval(tasks: &[Task], samples: usize) -> StagePlan {
+        StagePlan {
+            kind: PlanKind::Eval {
+                tasks: tasks.to_vec(),
+                samples,
+                sampling: SamplingParams::default(),
+            },
+            detach: false,
+        }
+    }
+
+    /// An open-loop SLO stage over `schedule` (sorted by arrival tick).
+    /// Defaults: unbounded admission queue, 1000 virtual ticks per engine
+    /// step; override with [`queue_cap`](Self::queue_cap) and
+    /// [`quantum_ticks`](Self::quantum_ticks).
+    pub fn open_loop(schedule: Vec<OpenLoopRequest>) -> StagePlan {
+        StagePlan {
+            kind: PlanKind::OpenLoop {
+                schedule,
+                queue_cap: usize::MAX,
+                quantum_ticks: 1_000,
+                sampling: SamplingParams::greedy(),
+            },
+            detach: false,
+        }
+    }
+
+    /// Return [`StageOutcome::Started`] right after stage begin instead of
+    /// pumping to completion (training plans; async streams always are).
+    pub fn detached(mut self) -> StagePlan {
+        self.detach = true;
+        self
+    }
+
+    /// Sampling parameters for eval / open-loop plans (training stages
+    /// sample per `cfg.rollout`; this is a no-op for them).
+    pub fn sampling(mut self, s: SamplingParams) -> StagePlan {
+        match &mut self.kind {
+            PlanKind::Eval { sampling, .. } | PlanKind::OpenLoop { sampling, .. } => *sampling = s,
+            PlanKind::Training | PlanKind::AsyncStream => {}
+        }
+        self
+    }
+
+    /// Admission-queue bound for open-loop plans (arrivals past it are
+    /// shed); no-op for other plans.
+    pub fn queue_cap(mut self, cap: usize) -> StagePlan {
+        if let PlanKind::OpenLoop { queue_cap, .. } = &mut self.kind {
+            *queue_cap = cap;
+        }
+        self
+    }
+
+    /// Virtual ticks the open-loop clock advances per live engine step;
+    /// no-op for other plans.
+    pub fn quantum_ticks(mut self, ticks: u64) -> StagePlan {
+        if let PlanKind::OpenLoop { quantum_ticks, .. } = &mut self.kind {
+            *quantum_ticks = ticks;
+        }
+        self
+    }
+}
+
+/// What [`Coordinator::run`] delivered — one arm per plan kind.
+#[derive(Debug)]
+pub enum StageOutcome {
+    /// Training plan run to completion: B completed groups + stats.
+    Batch(RolloutOutput),
+    /// Eval plan: one completed group per task, in task order.
+    Eval(Vec<Group>),
+    /// Open-loop plan: groups, stats and the SLO report.
+    OpenLoop(OpenLoopOutput),
+    /// Detached training stage or async stream started — drive it through
+    /// the stage/stream API and harvest yourself.
+    Started,
+}
+
+impl<P: PoolApi> Coordinator<P> {
+    /// Execute one [`StagePlan`] — the unified session entry point. Plans
+    /// that generate from the dataset (training, async stream) need
+    /// `dataset`; eval and open-loop plans carry their own work lists and
+    /// accept `None`.
+    pub fn run(
+        &mut self,
+        plan: StagePlan,
+        dataset: Option<&mut Dataset>,
+    ) -> Result<StageOutcome> {
+        match plan.kind {
+            PlanKind::Training => {
+                let ds = dataset.context("training plan needs a dataset")?;
+                self.begin_stage(ds)?;
+                if plan.detach {
+                    return Ok(StageOutcome::Started);
+                }
+                Ok(StageOutcome::Batch(self.run_stage_to_completion(ds)?))
+            }
+            PlanKind::AsyncStream => {
+                let ds = dataset.context("async-stream plan needs a dataset")?;
+                self.begin_async(ds)?;
+                Ok(StageOutcome::Started)
+            }
+            PlanKind::Eval { tasks, samples, sampling } => {
+                Ok(StageOutcome::Eval(self.fixed_stage(&tasks, samples, sampling)?))
+            }
+            PlanKind::OpenLoop { schedule, queue_cap, quantum_ticks, sampling } => {
+                Ok(StageOutcome::OpenLoop(self.open_loop_stage(
+                    &schedule,
+                    queue_cap,
+                    quantum_ticks,
+                    sampling,
+                )?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_refinements_land_on_the_right_plans() {
+        let p = StagePlan::open_loop(vec![]).queue_cap(7).quantum_ticks(42);
+        let PlanKind::OpenLoop { queue_cap, quantum_ticks, .. } = &p.kind else {
+            panic!("open_loop plan expected");
+        };
+        assert_eq!(*queue_cap, 7);
+        assert_eq!(*quantum_ticks, 42);
+
+        // Cross-kind refinements are explicit no-ops, not panics.
+        let t = StagePlan::training().queue_cap(9).sampling(SamplingParams::greedy());
+        assert!(matches!(t.kind, PlanKind::Training));
+        assert!(!t.detach);
+        assert!(t.detached().detach);
+        assert!(StagePlan::async_stream().detach, "async streams start detached");
+    }
+}

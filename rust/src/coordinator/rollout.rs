@@ -23,12 +23,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use super::buffer::PartialBuffer;
+use super::buffer::{LenPredictor, PartialBuffer};
 use super::driver::{StageDriver, StageGoal, StagePhase, StagePolicy};
 use super::groups::{Group, GroupBook};
 use super::trajectory::Trajectory;
 use crate::config::{Config, RolloutMode};
-use crate::engine::{EngineCmd, EngineEvent, FinishReason, SamplingParams, StepTrace, WorkItem};
+use crate::engine::{
+    EngineCmd, EngineEvent, FinishReason, PoolApi, SamplingParams, StepTrace, WorkItem,
+};
 use crate::router::{ReplicaHealth, RetainedRef, RouterPool, RoutingTable};
 use crate::loadgen::{SloCollector, SloReport, TenantClass};
 use crate::tasks::{Dataset, Family, Task};
@@ -122,6 +124,18 @@ pub struct RolloutStats {
     /// everything resumed across one sync in bucket 1; pipelined runs
     /// surface lag > 0 from mid-flight weight syncs.
     pub version_lag_hist: [usize; 5],
+    /// In-flight trajectories force-cut at a weight sync because their
+    /// assignment had exceeded `rollout.max_staleness` syncs (fully-async
+    /// mode; the cut partial lands in the buffer for IS-corrected resume).
+    pub staleness_terminations: usize,
+    /// At-risk in-flight trajectories (exactly at the staleness bound)
+    /// early-terminated by the active partial-rollout policy because their
+    /// predicted remaining decode exceeded the per-sync-window decode
+    /// budget (fully-async mode with `rollout.active_termination`).
+    pub active_terminations: usize,
+    /// Peak completed-but-unharvested groups observed in the staging book
+    /// between async harvests (buffer-occupancy gauge; 0 outside async).
+    pub staging_occupancy_peak: usize,
     /// Open-loop arrivals observed this stage (0 for closed-loop stages —
     /// these SLO fields are populated only by `run_open_loop`).
     pub requests_arrived: usize,
@@ -239,13 +253,31 @@ struct EngineCounters {
     retries: u64,
 }
 
-/// The CoPRIS coordinator (also drives the sync / naive-partial baselines
-/// and fixed-prompt eval, all through the one [`StageDriver`]).
-pub struct Coordinator {
+/// Fold harvested groups into the version-lag histogram (last segment's
+/// policy version − born version; bucket 4 is "4+").
+fn note_version_lags(groups: &[Group], stats: &mut RolloutStats) {
+    for g in groups {
+        for t in &g.done {
+            let lag = t
+                .segments
+                .last()
+                .map(|s| s.policy_version.saturating_sub(t.born_version))
+                .unwrap_or(0) as usize;
+            stats.version_lag_hist[lag.min(stats.version_lag_hist.len() - 1)] += 1;
+        }
+    }
+}
+
+/// The CoPRIS coordinator (also drives the sync / naive-partial baselines,
+/// the fully-async stream, and fixed-prompt eval, all through the one
+/// [`StageDriver`]). Generic over the pool poll/cmd surface ([`PoolApi`]);
+/// the default parameter keeps every existing `Coordinator` mention
+/// meaning "coordinator over a [`RouterPool`]".
+pub struct Coordinator<P: PoolApi = RouterPool> {
     /// The engine fleet this coordinator dispatches to — in-process
     /// threads (`local` transport) or `copris engine-host` processes
     /// (`tcp`), behind the same poll/cmd API either way.
-    pub pool: RouterPool,
+    pub pool: P,
     /// Full run configuration (rollout policy knobs live under
     /// `cfg.rollout`).
     pub cfg: Config,
@@ -280,6 +312,16 @@ pub struct Coordinator {
     max_seq: usize,
     /// Active stage control block (None between stages).
     driver: Option<StageDriver>,
+    /// Response-length EMAs feeding the active partial-rollout policy
+    /// (fully-async mode); observed on every completion in every mode.
+    len_pred: LenPredictor,
+    /// New tokens harvested since the last `prepare_sync` (per-window
+    /// decode throughput numerator for the active policy).
+    window_tokens: u64,
+    /// EMA of per-in-flight-slot tokens decoded per sync window — the
+    /// decode budget an at-risk trajectory's predicted remaining length is
+    /// weighed against.
+    window_decode_ema: f64,
 }
 
 impl Coordinator {
@@ -288,7 +330,15 @@ impl Coordinator {
     /// `local` transport, what every existing call site passes) or a
     /// pre-built [`RouterPool`] (the `tcp` transport).
     pub fn new(pool: impl Into<RouterPool>, cfg: Config, max_seq: usize) -> Coordinator {
-        let pool = pool.into();
+        Coordinator::from_pool(pool.into(), cfg, max_seq)
+    }
+}
+
+impl<P: PoolApi> Coordinator<P> {
+    /// Generic constructor over any [`PoolApi`] implementation — what
+    /// `Coordinator::new` lowers to after wrapping its argument in a
+    /// [`RouterPool`].
+    pub fn from_pool(pool: P, cfg: Config, max_seq: usize) -> Coordinator<P> {
         let engines = pool.engines();
         let buffer = PartialBuffer::new(cfg.rollout.max_stage_lag);
         Coordinator {
@@ -306,6 +356,9 @@ impl Coordinator {
             tokenizer: Tokenizer::new(),
             max_seq,
             driver: None,
+            len_pred: LenPredictor::new(0.3),
+            window_tokens: 0,
+            window_decode_ema: 0.0,
         }
     }
 
@@ -437,6 +490,9 @@ impl Coordinator {
     /// Dispatch policy for one refill opportunity. Returns false when
     /// nothing can/should be dispatched right now.
     fn refill_one(&mut self, dataset: Option<&mut Dataset>, sampling: SamplingParams) -> bool {
+        if self.drv().refill_paused {
+            return false; // async weight broadcast in progress — no refill
+        }
         if let Some(0) = self.drv().wave_remaining {
             return false; // naive-partial wave exhausted — no refill
         }
@@ -615,6 +671,12 @@ impl Coordinator {
             match self.drv().phase {
                 StagePhase::Done => return Ok(true),
                 StagePhase::Running => {
+                    // Fully-async stream: hand control back as soon as a
+                    // full batch is staged (the stream itself never
+                    // completes — Ok(true) here means "batch ready").
+                    if matches!(self.drv().goal, StageGoal::Stream) && self.async_batch_ready() {
+                        return Ok(true);
+                    }
                     if self.goal_met() {
                         if self.drv().policy.drain && self.total_inflight() > 0 {
                             // Early termination: halt engines (retaining
@@ -730,6 +792,9 @@ impl Coordinator {
         match &d.goal {
             StageGoal::Batch { b } => self.book.completed_count() >= *b,
             StageGoal::Fixed | StageGoal::OpenLoop => self.total_inflight() == 0,
+            // The async stream has no terminal goal — it ends only via
+            // `abort_stage` (which forces the drain path directly).
+            StageGoal::Stream => false,
         }
     }
 
@@ -882,28 +947,27 @@ impl Coordinator {
         );
         let drv = self.driver.take().unwrap();
         let StageGoal::Batch { b } = drv.goal else {
-            bail!("finish_stage on a fixed (eval) stage");
+            bail!("finish_stage on a fixed (eval) or streaming stage");
         };
         let mut stats = drv.stats;
         let groups = self.book.take_completed(b);
         stats.completed = groups.iter().map(|g| g.done.len()).sum();
-        for g in &groups {
-            for t in &g.done {
-                let lag = t
-                    .segments
-                    .last()
-                    .map(|s| s.policy_version.saturating_sub(t.born_version))
-                    .unwrap_or(0) as usize;
-                stats.version_lag_hist[lag.min(stats.version_lag_hist.len() - 1)] += 1;
-            }
-        }
+        note_version_lags(&groups, &mut stats);
         // Wall ends when the stage quiesced, not when the (possibly later)
         // harvest happens — a pipelined stage sits Done-but-unharvested
         // until the next step picks it up.
         let end = drv.done_at.unwrap_or_else(Instant::now);
         stats.wall = end.duration_since(drv.t0).as_secs_f64();
         stats.overlap_secs = stats.overlap_secs.min(stats.wall);
-        // Per-stage deltas of the engines' cumulative gauges.
+        self.harvest_engine_deltas(&mut stats);
+        Ok(RolloutOutput { groups, stats })
+    }
+
+    /// Fold per-stage/per-window deltas of the engines' cumulative gauges
+    /// into `stats` (paged-KV sharing, chunked prefill, retries) plus the
+    /// mean packed-step token utilization, then re-baseline `kv_base` so
+    /// the next async window reports fresh deltas.
+    fn harvest_engine_deltas(&mut self, stats: &mut RolloutStats) {
         stats.prefix_tokens_shared = self
             .kv_seen
             .iter()
@@ -945,7 +1009,7 @@ impl Coordinator {
             }
         }
         stats.step_token_util = if util_n == 0 { 0.0 } else { util_sum / util_n as f64 };
-        Ok(RolloutOutput { groups, stats })
+        self.kv_base.clone_from(&self.kv_seen);
     }
 
     /// Pump the active stage to completion and harvest it (blocking).
@@ -985,6 +1049,256 @@ impl Coordinator {
     pub fn rollout_stage(&mut self, dataset: &mut Dataset) -> Result<RolloutOutput> {
         self.begin_stage(dataset)?;
         self.run_stage_to_completion(dataset)
+    }
+
+    /// Deprecated shim over the unified session API — prefer
+    /// [`Coordinator::run`] with
+    /// [`StagePlan::eval`](super::plan::StagePlan::eval). Kept so existing
+    /// callers and the frozen reference goldens compile unchanged.
+    pub fn run_fixed_sync(
+        &mut self,
+        tasks: &[Task],
+        samples: usize,
+        sampling: SamplingParams,
+    ) -> Result<Vec<Group>> {
+        self.fixed_stage(tasks, samples, sampling)
+    }
+
+    /// Deprecated shim over the unified session API — prefer
+    /// [`Coordinator::run`] with
+    /// [`StagePlan::open_loop`](super::plan::StagePlan::open_loop).
+    pub fn run_open_loop(
+        &mut self,
+        schedule: &[OpenLoopRequest],
+        queue_cap: usize,
+        quantum_ticks: u64,
+        sampling: SamplingParams,
+    ) -> Result<OpenLoopOutput> {
+        self.open_loop_stage(schedule, queue_cap, quantum_ticks, sampling)
+    }
+
+    // -- fully-async streaming ---------------------------------------------
+
+    /// Begin the fully-async trajectory stream (`rollout.execution =
+    /// async`): a [`StageGoal::Stream`] stage with CoPRIS dispatch policy
+    /// that never completes — trajectories accumulate in the group book and
+    /// the trainer harvests with [`take_async_batch`](Self::take_async_batch)
+    /// whenever [`async_batch_ready`](Self::async_batch_ready). Weight syncs
+    /// happen mid-stream through [`prepare_sync`](Self::prepare_sync) /
+    /// `sync_weights` / [`resume_refill`](Self::resume_refill). End the
+    /// stream with `abort_stage` (drains in-flight work into the partial
+    /// buffer).
+    pub fn begin_async(&mut self, dataset: &mut Dataset) -> Result<()> {
+        ensure!(self.driver.is_none(), "rollout stage already active");
+        ensure!(
+            self.cfg.rollout.mode == RolloutMode::Copris,
+            "rollout.execution=async requires rollout.mode=copris (got {:?})",
+            self.cfg.rollout.mode
+        );
+        ensure!(
+            self.live_engines() > 0,
+            "rollout: degraded — no live engines (all {} failed in earlier stages)",
+            self.pool.engines()
+        );
+        self.kv_base.clone_from(&self.kv_seen);
+        self.window_tokens = 0;
+        self.window_decode_ema = 0.0;
+        let cfg = self.cfg.rollout.clone();
+        let sampling = SamplingParams {
+            temperature: cfg.temperature,
+            top_p: cfg.top_p,
+            top_k: cfg.top_k,
+        };
+        for stale in self.buffer.evict_stale(self.policy_version) {
+            if let Some(r) = self.table.retained_at.remove(&stale.id) {
+                self.pool.send(
+                    r.engine,
+                    EngineCmd::ReleaseRetained { request_id: stale.id, token: r.token },
+                );
+            }
+            self.book.note_abandoned(stale.group_id);
+        }
+        let policy = StagePolicy {
+            target: Some(cfg.concurrency),
+            continuous: true,
+            use_buffer: true,
+            drain: true,
+            until_idle: false,
+            inline_preempt: false,
+        };
+        self.driver = Some(StageDriver::new(StageGoal::Stream, policy, sampling));
+        let mut ds = Some(dataset);
+        self.fill_to_target(&mut ds, sampling, cfg.concurrency);
+        Ok(())
+    }
+
+    /// Is the fully-async stream active?
+    pub fn async_active(&self) -> bool {
+        matches!(self.driver.as_ref().map(|d| &d.goal), Some(StageGoal::Stream))
+    }
+
+    /// Does the staging book hold a full training batch (B completed
+    /// groups) ready for [`take_async_batch`](Self::take_async_batch)?
+    pub fn async_batch_ready(&self) -> bool {
+        self.book.completed_count() >= self.cfg.rollout.batch_prompts
+    }
+
+    /// Advance the async stream without blocking past `deadline`. Returns
+    /// Ok(true) as soon as a full batch is staged (possibly without
+    /// touching the pool); Ok(false) at the deadline.
+    pub fn pump_async(&mut self, dataset: &mut Dataset, deadline: Instant) -> Result<bool> {
+        ensure!(self.async_active(), "pump_async without an async stream");
+        self.pump_inner(Some(dataset), deadline)
+    }
+
+    /// Harvest B completed groups from the staging book WITHOUT ending the
+    /// stream: in-flight trajectories keep decoding. Stats cover the
+    /// window since the previous harvest (or stream begin) — wall,
+    /// engine-gauge deltas and the version-lag histogram all re-baseline
+    /// here.
+    pub fn take_async_batch(&mut self) -> Result<RolloutOutput> {
+        ensure!(self.async_active(), "take_async_batch without an async stream");
+        let b = self.cfg.rollout.batch_prompts;
+        ensure!(
+            self.book.completed_count() >= b,
+            "take_async_batch before a full batch is staged ({} of {b} groups ready)",
+            self.book.completed_count()
+        );
+        let groups = self.book.take_completed(b);
+        let now = Instant::now();
+        let d = self.drv_mut();
+        let mut stats = std::mem::take(&mut d.stats);
+        stats.wall = now.duration_since(d.t0).as_secs_f64();
+        d.t0 = now;
+        stats.completed = groups.iter().map(|g| g.done.len()).sum();
+        stats.overlap_secs = stats.overlap_secs.min(stats.wall);
+        note_version_lags(&groups, &mut stats);
+        self.harvest_engine_deltas(&mut stats);
+        Ok(RolloutOutput { groups, stats })
+    }
+
+    /// Staleness enforcement ahead of a mid-stream weight sync to
+    /// `next_version`, with `S = rollout.max_staleness`:
+    ///
+    /// - **mandatory cut** — any in-flight assignment whose dispatch
+    ///   version would lag `next_version` by MORE than S is early-
+    ///   terminated now (its partial lands in the buffer for IS-corrected
+    ///   resume under the new policy);
+    /// - **active cut** (APRIL-style, `rollout.active_termination`) — an
+    ///   assignment exactly AT the bound is also terminated when its
+    ///   predicted remaining decode (group length EMA minus tokens held)
+    ///   exceeds the per-window decode EMA: it would not finish before the
+    ///   next sync forces it out anyway, so cutting it now frees the slot
+    ///   for work that can.
+    ///
+    /// With S = 0 every in-flight assignment is cut, through the same
+    /// broadcast-flush drain the pipelined mode uses at stage end — which
+    /// is why staleness-0 async is bit-identical to pipelined execution.
+    /// Refill pauses until [`resume_refill`](Self::resume_refill) so no
+    /// dispatch races the weight broadcast; call this, then
+    /// `sync_weights(next_version, …)`, then `resume_refill`.
+    pub fn prepare_sync(&mut self, next_version: u64) -> Result<()> {
+        ensure!(self.async_active(), "prepare_sync without an async stream");
+        self.drv_mut().refill_paused = true;
+        let s = self.cfg.rollout.max_staleness as u64;
+
+        // Per-window decode EMA: tokens harvested since the last sync,
+        // normalized per in-flight slot — what an average slot manages to
+        // decode between consecutive syncs.
+        let per_slot = self.window_tokens as f64 / self.inflight.len().max(1) as f64;
+        self.window_decode_ema = if self.window_decode_ema == 0.0 {
+            per_slot
+        } else {
+            self.window_decode_ema + 0.3 * (per_slot - self.window_decode_ema)
+        };
+        self.window_tokens = 0;
+
+        let mut cut: Vec<u64> = Vec::new();
+        let mut mandatory = 0usize;
+        let mut active = 0usize;
+        for (id, inf) in &self.inflight {
+            let lag = next_version.saturating_sub(inf.version);
+            if lag > s {
+                cut.push(*id);
+                mandatory += 1;
+            } else if self.cfg.rollout.active_termination && lag == s && s > 0 {
+                let predicted = self.len_pred.predict(inf.traj.group_id);
+                let remaining = predicted - inf.traj.len() as f64;
+                if predicted > 0.0
+                    && self.window_decode_ema > 0.0
+                    && remaining > self.window_decode_ema
+                {
+                    cut.push(*id);
+                    active += 1;
+                }
+            }
+        }
+        cut.sort_unstable();
+        {
+            let d = self.drv_mut();
+            d.stats.staleness_terminations += mandatory;
+            d.stats.active_terminations += active;
+        }
+        if cut.is_empty() {
+            return Ok(());
+        }
+        let retain = self.cfg.rollout.retain_kv;
+        if cut.len() == self.inflight.len() {
+            // Cutting everything (always the case at S = 0): reuse the
+            // broadcast-flush drain machinery — the exact path the
+            // pipelined mode quiesces through, which keeps staleness-0
+            // async bit-identical to it. The stream resumes Running
+            // afterwards instead of finishing.
+            self.pool.stop_generation_all_with(retain);
+            let d = self.drv_mut();
+            d.phase = StagePhase::Draining;
+            d.flushed.clear();
+            while !self.pump_inner(None, Instant::now() + PUMP_CHUNK)? {}
+            let d = self.drv_mut();
+            d.phase = StagePhase::Running;
+            d.done_at = None;
+        } else {
+            // Targeted per-request stops. Track which engine each stop was
+            // sent to: failure recovery may re-dispatch a cut trajectory
+            // onto a survivor, in which case the stop is re-issued there.
+            let mut sent: HashMap<u64, usize> = HashMap::new();
+            loop {
+                let pending: Vec<u64> = cut
+                    .iter()
+                    .copied()
+                    .filter(|id| self.inflight.contains_key(id))
+                    .collect();
+                if pending.is_empty() {
+                    break;
+                }
+                for id in pending {
+                    let engine = self.inflight[&id].engine;
+                    if sent.insert(id, engine) != Some(engine) {
+                        self.pool
+                            .send(engine, EngineCmd::StopRequest { request_id: id, retain });
+                    }
+                }
+                match self.next_event(Instant::now() + PUMP_CHUNK)? {
+                    Some(ev) => self.handle_event(ev, false)?,
+                    // Watchdog fired — loop re-checks survivors.
+                    None => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-enable dispatch after a mid-stream weight sync and refill to the
+    /// concurrency target — cut partials resume first (prioritized
+    /// resumption), now under the new policy version.
+    pub fn resume_refill(&mut self, dataset: &mut Dataset) -> Result<()> {
+        ensure!(self.async_active(), "resume_refill without an async stream");
+        self.drv_mut().refill_paused = false;
+        let sampling = self.drv().sampling;
+        let target = self.drv().policy.target.unwrap_or(self.cfg.rollout.concurrency);
+        let mut ds = Some(dataset);
+        self.fill_to_target(&mut ds, sampling, target);
+        Ok(())
     }
 
     /// Handle one engine event (recursing into `Batch` — engines deliver a
@@ -1076,7 +1390,17 @@ impl Coordinator {
                 // Resume length BEFORE this assignment's tokens append —
                 // exactly what a replay would have recomputed.
                 let resumed_len = traj.len() as u64;
-                traj.append_stage(&result.new_tokens, &result.new_logprobs, self.policy_version);
+                // The segment spans dispatch → now: it remembers the policy
+                // version its assignment was dispatched under (staleness
+                // accounting) alongside the version it was harvested under
+                // (IS correction).
+                traj.append_stage_spanning(
+                    &result.new_tokens,
+                    &result.new_logprobs,
+                    inf.version,
+                    self.policy_version,
+                );
+                self.window_tokens += result.new_tokens.len() as u64;
                 self.drv_mut().stats.replayed_tokens += result.replayed as u64;
                 if inf.retain.is_some() {
                     let d = self.drv_mut();
@@ -1096,9 +1420,11 @@ impl Coordinator {
                     FinishReason::Eos | FinishReason::LengthCap => {
                         traj.complete = true;
                         let gid = traj.group_id;
+                        self.len_pred.observe(gid, traj.len());
                         self.drv_mut().stats.response_lengths.push(traj.len());
                         let group_complete = self.book.record_complete(traj)?;
                         if group_complete {
+                            self.len_pred.forget_group(gid);
                             // No more samples will attach this group's
                             // prompt blocks: release its registry entries
                             // (engines that never saw the group — or
@@ -1109,6 +1435,14 @@ impl Coordinator {
                                     self.pool.send(e, EngineCmd::ReleasePrefix { key: gid });
                                 }
                             }
+                        }
+                        // Async staging-occupancy gauge: how far ahead of
+                        // the trainer the stream has run.
+                        if matches!(self.drv().goal, StageGoal::Stream) {
+                            let n = self.book.completed_count();
+                            let d = self.drv_mut();
+                            d.stats.staging_occupancy_peak =
+                                d.stats.staging_occupancy_peak.max(n);
                         }
                     }
                     FinishReason::Preempted => {
@@ -1170,8 +1504,9 @@ impl Coordinator {
     /// rollouts per task at `sampling`; returns one completed group per
     /// task, in task order. Runs as a `StageGoal::Fixed` stage on the same
     /// driver, with inline preemption re-dispatch so buffered TRAINING
-    /// partials are never generated under eval.
-    pub fn run_fixed_sync(
+    /// partials are never generated under eval. (Implementation of the
+    /// eval arm of [`Coordinator::run`]; `run_fixed_sync` is its shim.)
+    pub(crate) fn fixed_stage(
         &mut self,
         tasks: &[Task],
         samples: usize,
@@ -1292,7 +1627,7 @@ impl Coordinator {
     /// guarantees are structural: every admitted request completes
     /// exactly once, shed + completed = arrived, and the SLO report is
     /// complete even when engines die mid-run.
-    pub fn run_open_loop(
+    pub(crate) fn open_loop_stage(
         &mut self,
         schedule: &[OpenLoopRequest],
         queue_cap: usize,

@@ -9,8 +9,25 @@ use crate::tasks::Task;
 pub struct Segment {
     /// Policy version (trainer step) the tokens were sampled under.
     pub policy_version: u64,
+    /// Policy version current when the generating assignment was
+    /// *dispatched*. Under synchronous/pipelined rollout this always
+    /// equals `policy_version`; under fully-async rollout an assignment
+    /// may survive weight syncs, so `policy_version - dispatch_version`
+    /// counts the syncs this segment's assignment outlived — bounded by
+    /// `rollout.max_staleness` (the driver force-terminates exceeders
+    /// into the partial buffer before they can generate under a staler
+    /// gap).
+    pub dispatch_version: u64,
     /// Behaviour log-prob of each token in this segment.
     pub logprobs: Vec<f32>,
+}
+
+impl Segment {
+    /// Syncs the generating assignment survived before these tokens were
+    /// harvested (0 under sync/pipelined execution).
+    pub fn staleness(&self) -> u64 {
+        self.policy_version.saturating_sub(self.dispatch_version)
+    }
 }
 
 /// One rollout trajectory: a prompt plus tokens accumulated across one or
@@ -52,22 +69,47 @@ impl Trajectory {
     }
 
     /// Append one stage's generation (paper: buffer stores log-probs under
-    /// the policy that generated each subsequence).
+    /// the policy that generated each subsequence). Dispatch version ==
+    /// policy version: the sync/pipelined case where every harvest happens
+    /// under the version that dispatched it.
     pub fn append_stage(&mut self, tokens: &[i32], logprobs: &[f32], version: u64) {
+        self.append_stage_spanning(tokens, logprobs, version, version);
+    }
+
+    /// Append one stage's generation where the assignment was dispatched
+    /// under `dispatch_version` but harvested under `policy_version`
+    /// (fully-async rollout: the assignment survived
+    /// `policy_version - dispatch_version` weight syncs).
+    pub fn append_stage_spanning(
+        &mut self,
+        tokens: &[i32],
+        logprobs: &[f32],
+        dispatch_version: u64,
+        policy_version: u64,
+    ) {
         assert_eq!(tokens.len(), logprobs.len(), "token/logprob length mismatch");
         if tokens.is_empty() {
             return;
         }
         self.tokens.extend_from_slice(tokens);
-        // Merge into the last segment if the version matches (same stage
-        // can touch a trajectory twice via preemption + re-admission).
+        // Merge into the last segment if the policy version matches (same
+        // stage can touch a trajectory twice via preemption + re-admission).
+        // The merged segment keeps its ORIGINAL (oldest) dispatch version —
+        // conservative for the staleness bound: the kept gap is ≥ the new
+        // tokens' true gap, and it already passed the bound when first
+        // appended, so `policy_version - dispatch_version ≤ max_staleness`
+        // still holds for the merged segment.
         if let Some(last) = self.segments.last_mut() {
-            if last.policy_version == version {
+            if last.policy_version == policy_version {
                 last.logprobs.extend_from_slice(logprobs);
                 return;
             }
         }
-        self.segments.push(Segment { policy_version: version, logprobs: logprobs.to_vec() });
+        self.segments.push(Segment {
+            policy_version,
+            dispatch_version,
+            logprobs: logprobs.to_vec(),
+        });
     }
 
     /// Eq. 6: the concatenated behaviour log-probs L_i.
@@ -140,6 +182,28 @@ mod tests {
         t.append_stage(&[5], &[-0.2], 3); // preempt + re-admit same stage
         assert_eq!(t.n_stages(), 1);
         assert_eq!(t.behavior_logprobs(), vec![-0.1, -0.2]);
+    }
+
+    #[test]
+    fn spanning_append_tracks_staleness() {
+        let mut t = traj();
+        // Dispatched under v3, harvested under v3: on-policy segment.
+        t.append_stage_spanning(&[4], &[-0.1], 3, 3);
+        // Same assignment survived one sync: harvested under v4 — a new
+        // segment with a staleness gap of 1.
+        t.append_stage_spanning(&[5], &[-0.2], 3, 4);
+        assert_eq!(t.n_stages(), 2);
+        assert_eq!(
+            t.segments.iter().map(Segment::staleness).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        // Re-dispatch at v4 harvested under v4: merges on policy version,
+        // keeping the segment's original (oldest) dispatch version.
+        t.append_stage_spanning(&[6], &[-0.3], 4, 4);
+        assert_eq!(t.n_stages(), 2);
+        assert_eq!(t.segments.last().unwrap().dispatch_version, 3);
+        assert_eq!(t.behavior_logprobs(), vec![-0.1, -0.2, -0.3]);
+        assert!(t.invariant_ok());
     }
 
     #[test]

@@ -319,6 +319,18 @@ pub enum EngineCmd {
         /// Retain flushed slots' KV (see [`Engine::stop_generation`]).
         retain: bool,
     },
+    /// Early-terminate ONE in-flight request as a partial, leaving every
+    /// other slot decoding (fully-async staleness enforcement / active
+    /// partial rollout — see [`Engine::stop_request`]). Unknown ids are
+    /// ignored: the request may have finished (its `Done` is already in
+    /// flight toward the coordinator) or died with a failed engine.
+    StopRequest {
+        /// The [`WorkItem::request_id`] to flush.
+        request_id: u64,
+        /// Retain the flushed slot's KV (same semantics as
+        /// [`EngineCmd::StopGeneration`]).
+        retain: bool,
+    },
     /// Drop one retained slot (the coordinator decided the partial will
     /// resume elsewhere, or never).
     ReleaseRetained {
@@ -905,6 +917,94 @@ impl<B: Backend> Engine<B> {
         events
             .push(EngineEvent::Flushed { engine: self.id, retain_errors: flush_retain_errors });
         unstarted
+    }
+
+    /// Early-terminate ONE request (fully-async staleness enforcement and
+    /// APRIL-style active partial rollout pick individual victims while the
+    /// rest of the batch keeps decoding — the surgical sibling of
+    /// [`Engine::stop_generation`]).
+    ///
+    /// Three cases, all closed by exactly one `Done` per known id:
+    /// * busy slot → flushed as a `Stopped` partial, with the same
+    ///   retain-if-caught-up rule as a full flush;
+    /// * still queued (never admitted) → removed from the admission queue
+    ///   and answered with an EMPTY `Stopped` result, so the coordinator's
+    ///   wait-for-cut loop terminates without special-casing unstarted
+    ///   work (an empty partial re-buffers as a zero-progress resume);
+    /// * unknown → no-op (the request raced its own completion or failure
+    ///   recovery moved it to another engine).
+    ///
+    /// No `Flushed` event is emitted: that event means "every slot on this
+    /// engine is now idle", which a single-request stop does not establish.
+    pub fn stop_request(
+        &mut self,
+        events: &mut Vec<EngineEvent>,
+        request_id: u64,
+        retain: bool,
+    ) {
+        let busy = self.slots.iter().position(|s| {
+            matches!(s, SlotState::Busy(b) if b.item.request_id == request_id)
+        });
+        if let Some(i) = busy {
+            let Some(mut b) = self.vacate(i) else { return };
+            let caught_up = b.replay_fed >= b.item.resume.len() && !b.generated.is_empty();
+            let can_retain = retain
+                && caught_up
+                && match self.backend.retain_slot(i) {
+                    Ok(ok) => ok,
+                    Err(e) => {
+                        self.retain_errors += 1;
+                        eprintln!(
+                            "engine-{}: retain_slot({i}) failed, flushing plainly: {e:#}",
+                            self.id
+                        );
+                        false
+                    }
+                };
+            if can_retain {
+                self.retain_counter += 1;
+                let token = self.retain_counter;
+                let rs = RetainedSlot {
+                    request_id: b.item.request_id,
+                    token,
+                    pos: b.pos,
+                    next_token: b.next_token,
+                    generated_len: b.item.resume.len() + b.generated.len(),
+                    pages: std::mem::take(&mut b.pages),
+                    admitted_seq: b.admitted_seq,
+                };
+                self.retained_count += 1;
+                self.kv_resident += rs.pages.tokens();
+                let mut result = finish(*b, FinishReason::Stopped);
+                result.retained = Some(token);
+                events.push(EngineEvent::Done { engine: self.id, result });
+                self.slots[i] = SlotState::Retained(rs);
+            } else {
+                self.free_slot_kv(i, &mut b.pages);
+                events.push(EngineEvent::Done {
+                    engine: self.id,
+                    result: finish(*b, FinishReason::Stopped),
+                });
+            }
+            return;
+        }
+        // Never admitted: drop from the queue and answer with an empty
+        // Stopped result so the coordinator's cut bookkeeping closes.
+        if let Some(qi) = self.pending.iter().position(|w| w.request_id == request_id) {
+            let item = self.pending.remove(qi).expect("position just found");
+            events.push(EngineEvent::Done {
+                engine: self.id,
+                result: WorkResult {
+                    request_id: item.request_id,
+                    new_tokens: Vec::new(),
+                    new_logprobs: Vec::new(),
+                    reason: FinishReason::Stopped,
+                    replayed: 0,
+                    retained: None,
+                    resumed_from_kv: false,
+                },
+            });
+        }
     }
 
     /// Request ids whose work would be lost if this engine died right now:

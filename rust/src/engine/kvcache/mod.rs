@@ -260,9 +260,10 @@ impl KvCacheConfig {
         Self::default()
     }
 
-    /// Back-compat conversion from the old token-denominated budget
-    /// (`engine.kv_budget_tokens`): ceil(tokens / block_size) blocks, so a
-    /// legacy budget never becomes *tighter* than it was.
+    /// Conversion from a token-denominated budget (the removed
+    /// `engine.kv_budget_tokens` knob's semantics, kept for call sites
+    /// that state budgets in tokens): ceil(tokens / block_size) blocks, so
+    /// a token budget never becomes *tighter* than it was.
     pub fn from_token_budget(tokens: usize, block_size: usize) -> Self {
         let bs = block_size.max(1);
         KvCacheConfig {

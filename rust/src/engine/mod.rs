@@ -28,7 +28,7 @@ pub use kvcache::{
     BlockAllocator, BlockId, KvCacheConfig, KvDtype, PageTable, PrefixCache, DEFAULT_BLOCK_SIZE,
     KV_ELEMS_PER_TOKEN,
 };
-pub use pool::{EnginePool, SupervisorOpts};
+pub use pool::{EnginePool, PoolApi, SupervisorOpts};
 pub use sampler::{
     sample_token, sample_token_dispatched, sample_token_with, SamplerScratch, SamplingParams,
 };

@@ -31,6 +31,90 @@ impl Default for SupervisorOpts {
     }
 }
 
+/// The poll/command surface every engine-fleet handle exposes — the
+/// in-process [`EnginePool`] and the transport-spanning
+/// [`RouterPool`](crate::router::RouterPool) implement it identically, so
+/// the coordinator (and any other driver) can be written once, generic
+/// over where the engines actually run. Inherent methods remain on both
+/// types; the trait simply names the shared surface instead of relying on
+/// the two poll APIs staying duplicated by convention.
+pub trait PoolApi {
+    /// Number of engines (replicas) behind this handle.
+    fn engines(&self) -> usize;
+    /// Total decode slots across the fleet.
+    fn total_slots(&self) -> usize;
+    /// Send one command to one engine (global id). Delivery to a dead
+    /// engine is silently dropped — its absence surfaces through events.
+    fn send(&self, engine: usize, cmd: EngineCmd);
+    /// Non-blocking poll; collapses "empty" and "disconnected" into `None`.
+    fn try_next(&self) -> Option<EngineEvent>;
+    /// Non-blocking poll distinguishing "nothing queued yet" (`Ok(None)`)
+    /// from "every engine gone" (`Err(Disconnected)`).
+    fn try_next_checked(
+        &self,
+    ) -> Result<Option<EngineEvent>, std::sync::mpsc::RecvTimeoutError>;
+    /// Bounded wait: the next event, blocking no later than `deadline`.
+    fn next_before(
+        &self,
+        deadline: std::time::Instant,
+    ) -> Result<EngineEvent, std::sync::mpsc::RecvTimeoutError>;
+    /// Weight sync to every engine; `invalidate_retained` drops retained
+    /// KV first (the default policy).
+    fn broadcast_params(
+        &self,
+        version: u64,
+        params: std::sync::Arc<Vec<f32>>,
+        invalidate_retained: bool,
+    );
+    /// Early-terminate every engine; with `retain`, flushed slots keep
+    /// their KV resident for affinity resume.
+    fn stop_generation_all_with(&self, retain: bool);
+    /// Orderly teardown (joins engine threads / link threads).
+    fn shutdown(self)
+    where
+        Self: Sized;
+}
+
+impl PoolApi for EnginePool {
+    fn engines(&self) -> usize {
+        EnginePool::engines(self)
+    }
+    fn total_slots(&self) -> usize {
+        EnginePool::total_slots(self)
+    }
+    fn send(&self, engine: usize, cmd: EngineCmd) {
+        EnginePool::send(self, engine, cmd)
+    }
+    fn try_next(&self) -> Option<EngineEvent> {
+        EnginePool::try_next(self)
+    }
+    fn try_next_checked(
+        &self,
+    ) -> Result<Option<EngineEvent>, std::sync::mpsc::RecvTimeoutError> {
+        EnginePool::try_next_checked(self)
+    }
+    fn next_before(
+        &self,
+        deadline: std::time::Instant,
+    ) -> Result<EngineEvent, std::sync::mpsc::RecvTimeoutError> {
+        EnginePool::next_before(self, deadline)
+    }
+    fn broadcast_params(
+        &self,
+        version: u64,
+        params: std::sync::Arc<Vec<f32>>,
+        invalidate_retained: bool,
+    ) {
+        EnginePool::broadcast_params(self, version, params, invalidate_retained)
+    }
+    fn stop_generation_all_with(&self, retain: bool) {
+        EnginePool::stop_generation_all_with(self, retain)
+    }
+    fn shutdown(self) {
+        EnginePool::shutdown(self)
+    }
+}
+
 /// Handle to a set of engine threads: per-engine command channels in, one
 /// shared event channel out.
 pub struct EnginePool {
@@ -474,6 +558,10 @@ fn handle_cmd<B: Backend>(
             // the coordinator tracks its own dispatch list and simply
             // re-queues anything not seen in a Done event after Flushed.
             let _unstarted = engine.stop_generation(events, retain);
+            false
+        }
+        EngineCmd::StopRequest { request_id, retain } => {
+            engine.stop_request(events, request_id, retain);
             false
         }
         EngineCmd::ReleaseRetained { request_id, token } => {

@@ -1,18 +1,19 @@
-//! Serial vs stage-pipelined CoPRIS on the mock backend: isolates the
-//! coordinator-level overlap win from trainer math (no artifacts, no PJRT).
-//! The "trainer" is a simulated compute window (sleep + weight sync) so the
-//! comparison measures exactly what the pipeline changes: whether the
-//! engines generate through the update or sit idle.
+//! Serial vs stage-pipelined vs fully-async CoPRIS on the mock backend:
+//! isolates the coordinator-level overlap win from trainer math (no
+//! artifacts, no PJRT). The "trainer" is a simulated compute window (sleep
+//! + weight sync) so the comparison measures exactly what the execution
+//! mode changes: whether the engines generate through the update or sit
+//! idle, and (async) whether batch boundaries still quiesce the stream.
 //!
-//! Shared by the `pipeline_overlap` bench target and the pipelined-mode
-//! integration tests.
+//! Shared by the `pipeline_overlap` / `async_overlap` bench targets and
+//! the pipelined/async integration tests.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::Config;
+use crate::config::{Config, ExecMode};
 use crate::coordinator::{Coordinator, RolloutOutput};
 use crate::engine::{EnginePool, MockBackend};
 use crate::tasks::Dataset;
@@ -84,6 +85,10 @@ pub struct PipeSimSummary {
     pub retained_misses: usize,
     /// Resume tokens never recomputed thanks to retained-KV hits.
     pub replay_tokens_saved: u64,
+    /// Async: mandatory staleness-bound cuts across all sync windows.
+    pub staleness_terminations: usize,
+    /// Async: APRIL-style active cuts across all sync windows.
+    pub active_terminations: usize,
 }
 
 fn spawn_coordinator(o: &PipeSimOpts) -> Result<Coordinator> {
@@ -109,7 +114,17 @@ fn spawn_coordinator(o: &PipeSimOpts) -> Result<Coordinator> {
 
 /// Run `o.steps` simulated RL steps, serial or stage-pipelined, and return
 /// the summary plus every harvested stage output (for invariant checks).
+/// Shim over [`run_mode`] kept for the pre-async callers.
 pub fn run(o: &PipeSimOpts, pipeline: bool) -> Result<(PipeSimSummary, Vec<RolloutOutput>)> {
+    run_mode(o, if pipeline { ExecMode::Pipelined } else { ExecMode::Serial })
+}
+
+/// Run `o.steps` simulated RL steps under the given execution mode and
+/// return the summary plus every harvested batch (for invariant checks).
+/// The async arm drives the full session protocol: one never-quiescing
+/// stream, `take_async_batch` per step, `prepare_sync` under the
+/// `o.cfg.rollout.max_staleness` bound, pump-through-the-train-window.
+pub fn run_mode(o: &PipeSimOpts, mode: ExecMode) -> Result<(PipeSimSummary, Vec<RolloutOutput>)> {
     let mut coord = spawn_coordinator(o)?;
     let mut ds = Dataset::train(o.cfg.train.seed);
     let mut outs: Vec<RolloutOutput> = Vec::new();
@@ -124,9 +139,11 @@ pub fn run(o: &PipeSimOpts, pipeline: bool) -> Result<(PipeSimSummary, Vec<Rollo
      -> Result<()> {
         let t0 = Instant::now();
         if pumped {
-            // Pipelined: pump the in-flight stage between "microbatches".
+            // Pipelined/async: pump in-flight work between "microbatches".
             while t0.elapsed().as_secs_f64() < o.train_secs {
-                if coord.stage_active() {
+                if coord.async_active() {
+                    coord.pump_async(ds, Instant::now())?;
+                } else if coord.stage_active() {
                     coord.pump(ds, Instant::now())?;
                 }
                 std::thread::sleep(Duration::from_millis(2));
@@ -135,35 +152,61 @@ pub fn run(o: &PipeSimOpts, pipeline: bool) -> Result<(PipeSimSummary, Vec<Rollo
             std::thread::sleep(Duration::from_secs_f64(o.train_secs));
         }
         version += 1;
-        coord.sync_weights(version, Arc::new(vec![version as f32 * 0.5 + 1.0]));
+        if coord.async_active() {
+            // Bounded-staleness protocol: cut over-staleness work, then
+            // broadcast, then resume the paused refill under the new
+            // version.
+            coord.prepare_sync(version)?;
+            coord.sync_weights(version, Arc::new(vec![version as f32 * 0.5 + 1.0]));
+            coord.resume_refill(ds)?;
+        } else {
+            coord.sync_weights(version, Arc::new(vec![version as f32 * 0.5 + 1.0]));
+        }
         Ok(())
     };
 
-    if pipeline {
-        for _ in 0..o.steps {
-            // Harvest the stage left in flight by the previous iteration
-            // (first iteration: serial rollout).
-            let out = if coord.stage_active() {
-                coord.run_stage_to_completion(&mut ds)?
-            } else {
-                coord.rollout_stage(&mut ds)?
-            };
-            // Begin the next stage, then "train" while it generates; it
-            // stays in flight across the loop boundary (mirrors
-            // RlSession::rl_step_pipelined). The final begun stage is
-            // abandoned at shutdown — only its dispatches are wasted, so
-            // the serial-vs-pipelined comparison stays N stages vs N.
-            coord.begin_stage(&mut ds)?;
-            let t_train = Instant::now();
-            train_and_sync(&mut coord, &mut ds, true)?;
-            coord.note_overlap(t_train.elapsed().as_secs_f64());
-            outs.push(out);
+    match mode {
+        ExecMode::Async => {
+            coord.begin_async(&mut ds)?;
+            for _ in 0..o.steps {
+                while !coord.pump_async(&mut ds, Instant::now() + Duration::from_secs(60))? {}
+                let out = coord.take_async_batch()?;
+                let t_train = Instant::now();
+                train_and_sync(&mut coord, &mut ds, true)?;
+                coord.note_overlap(t_train.elapsed().as_secs_f64());
+                outs.push(out);
+            }
+            // The still-streaming tail is abandoned, mirroring the
+            // pipelined arm's final begun stage.
+            coord.abort_stage()?;
         }
-    } else {
-        for _ in 0..o.steps {
-            let out = coord.rollout_stage(&mut ds)?;
-            train_and_sync(&mut coord, &mut ds, false)?;
-            outs.push(out);
+        ExecMode::Pipelined => {
+            for _ in 0..o.steps {
+                // Harvest the stage left in flight by the previous
+                // iteration (first iteration: serial rollout).
+                let out = if coord.stage_active() {
+                    coord.run_stage_to_completion(&mut ds)?
+                } else {
+                    coord.rollout_stage(&mut ds)?
+                };
+                // Begin the next stage, then "train" while it generates; it
+                // stays in flight across the loop boundary (mirrors
+                // RlSession::rl_step_pipelined). The final begun stage is
+                // abandoned at shutdown — only its dispatches are wasted, so
+                // the serial-vs-pipelined comparison stays N stages vs N.
+                coord.begin_stage(&mut ds)?;
+                let t_train = Instant::now();
+                train_and_sync(&mut coord, &mut ds, true)?;
+                coord.note_overlap(t_train.elapsed().as_secs_f64());
+                outs.push(out);
+            }
+        }
+        ExecMode::Serial => {
+            for _ in 0..o.steps {
+                let out = coord.rollout_stage(&mut ds)?;
+                train_and_sync(&mut coord, &mut ds, false)?;
+                outs.push(out);
+            }
         }
     }
 
@@ -180,6 +223,8 @@ pub fn run(o: &PipeSimOpts, pipeline: bool) -> Result<(PipeSimSummary, Vec<Rollo
         s.retained_hits += out.stats.retained_hits;
         s.retained_misses += out.stats.retained_misses;
         s.replay_tokens_saved += out.stats.replay_tokens_saved;
+        s.staleness_terminations += out.stats.staleness_terminations;
+        s.active_terminations += out.stats.active_terminations;
     }
     coord.shutdown();
     Ok((s, outs))

@@ -15,7 +15,7 @@
 
 use anyhow::{ensure, Context, Result};
 
-use crate::config::{Config, TransportKind};
+use crate::config::{Config, ExecMode, TransportKind};
 use crate::coordinator::{Coordinator, RolloutOutput, RolloutStats};
 use crate::engine::{EnginePool, XlaBackend};
 use crate::router::RouterPool;
@@ -99,6 +99,15 @@ pub struct RunSummary {
     pub requests_shed: usize,
     /// Maximum admission-queue depth observed across the run.
     pub queue_depth_peak: usize,
+    /// In-flight assignments force-cut at async weight syncs for
+    /// exceeding `rollout.max_staleness` (0 outside async execution).
+    pub staleness_terminations: usize,
+    /// At-risk in-flight assignments cut by the active partial-rollout
+    /// policy at async weight syncs.
+    pub active_terminations: usize,
+    /// Peak completed-but-unharvested groups staged ahead of the trainer
+    /// (async execution's buffer-occupancy gauge).
+    pub staging_occupancy_peak: usize,
     pub reward_curve: Vec<f64>,
     pub entropy_curve: Vec<f64>,
 }
@@ -207,14 +216,17 @@ impl RlSession {
         Ok(last_loss)
     }
 
-    /// One full RL step. Serial: rollout stage → GRPO update → weight
-    /// sync. Pipelined (`rollout.pipeline`): train on the already-rolled
-    /// batch while the next stage generates.
+    /// One full RL step, on the configured execution axis
+    /// (`rollout.execution`, with the legacy `rollout.pipeline` bool
+    /// mapping to pipelined). Serial: rollout stage → GRPO update → weight
+    /// sync. Pipelined: train on the already-rolled batch while the next
+    /// stage generates. Async: harvest from the continuous trajectory
+    /// stream and sync under the bounded-staleness protocol.
     pub fn rl_step(&mut self) -> Result<(StepMetrics, RolloutStats)> {
-        if self.trainer.cfg.rollout.pipeline {
-            self.rl_step_pipelined()
-        } else {
-            self.rl_step_serial()
+        match self.trainer.cfg.rollout.exec_mode() {
+            ExecMode::Async => self.rl_step_async(),
+            ExecMode::Pipelined => self.rl_step_pipelined(),
+            ExecMode::Serial => self.rl_step_serial(),
         }
     }
 
@@ -301,6 +313,63 @@ impl RlSession {
         Ok((metrics, out.stats))
     }
 
+    /// Fully-async step (`rollout.execution = async`): the trajectory
+    /// stream runs continuously across steps. This step (re)starts the
+    /// stream if needed (first step, or after an eval aborted it), pumps
+    /// until B groups are staged, harvests them WITHOUT quiescing the
+    /// engines, trains while the stream keeps decoding, then performs the
+    /// bounded-staleness weight sync: `prepare_sync` cuts in-flight
+    /// assignments that would exceed `rollout.max_staleness` (plus the
+    /// active policy's at-risk cuts), `sync_weights` broadcasts, and
+    /// `resume_refill` re-enables dispatch under the new version — cut
+    /// partials resume first and gain another IS segment.
+    fn rl_step_async(&mut self) -> Result<(StepMetrics, RolloutStats)> {
+        let t_all = std::time::Instant::now();
+        let chunk = std::time::Duration::from_secs(3600);
+
+        if !self.coord.async_active() {
+            ensure!(
+                !self.coord.stage_active(),
+                "async step with a non-stream stage active"
+            );
+            self.coord.begin_async(&mut self.dataset)?;
+        }
+
+        // 1. Consume-when-ready: wait only until B groups are staged (the
+        //    stream keeps every engine slot busy the whole time).
+        let t0 = std::time::Instant::now();
+        while !self.coord.pump_async(&mut self.dataset, std::time::Instant::now() + chunk)? {}
+        let out = self.coord.take_async_batch()?;
+        self.timer.add("rollout", t0.elapsed().as_secs_f64());
+
+        // 2. Train while the stream decodes on, pumping between device
+        //    microbatches (refill + event service).
+        let t_train = std::time::Instant::now();
+        let mut metrics = {
+            let coord = &mut self.coord;
+            let dataset = &mut self.dataset;
+            let mut pump = || -> Result<()> {
+                coord.pump_async(dataset, std::time::Instant::now())?;
+                Ok(())
+            };
+            self.trainer.train_step_hooked(&out.groups, &mut self.timer, &mut pump)?
+        };
+
+        // 3. Bounded-staleness sync protocol.
+        let t0 = std::time::Instant::now();
+        let params = self.trainer.params()?;
+        let version = self.trainer.step() as u64;
+        self.coord.prepare_sync(version)?;
+        self.coord.sync_weights(version, params);
+        self.coord.resume_refill(&mut self.dataset)?;
+        self.timer.add("sync", t0.elapsed().as_secs_f64());
+
+        metrics.t_overlap = self.coord.note_overlap(t_train.elapsed().as_secs_f64());
+
+        self.log.log_step(&metrics, &out.stats, t_all.elapsed().as_secs_f64())?;
+        Ok((metrics, out.stats))
+    }
+
     /// Run `steps` RL steps, returning the run summary.
     pub fn train(&mut self, steps: usize) -> Result<RunSummary> {
         let t0 = std::time::Instant::now();
@@ -336,6 +405,10 @@ impl RlSession {
             summary.requests_arrived += rs.requests_arrived;
             summary.requests_shed += rs.requests_shed;
             summary.queue_depth_peak = summary.queue_depth_peak.max(rs.queue_depth_peak);
+            summary.staleness_terminations += rs.staleness_terminations;
+            summary.active_terminations += rs.active_terminations;
+            summary.staging_occupancy_peak =
+                summary.staging_occupancy_peak.max(rs.staging_occupancy_peak);
             if rs.step_token_util > 0.0 {
                 step_util.push(rs.step_token_util);
             }

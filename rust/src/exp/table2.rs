@@ -35,12 +35,13 @@ fn run_one(
     cfg.rollout.concurrency = concurrency;
     // KV budget at 70% of per-engine capacity → high N' pays the paper's
     // memory-pressure preemption + re-prefill recomputation. Stated in
-    // tokens on purpose: this arm exercises the deprecated-field
-    // conversion path (blocks = ceil(tokens / engine.kv_block_size)).
+    // blocks (the token-denominated knob was removed): ceil(tokens /
+    // engine.kv_block_size).
     let manifest = crate::runtime::Manifest::load(
         std::path::Path::new(&cfg.artifacts_dir).join(model).as_path(),
     )?;
-    cfg.engine.kv_budget_tokens = manifest.slots * manifest.max_seq * 7 / 10;
+    let budget_tokens = manifest.slots * manifest.max_seq * 7 / 10;
+    cfg.engine.kv_budget_blocks = budget_tokens.div_ceil(cfg.engine.kv_block_size.max(1));
     let mut sess = warmed_session(cfg, sft_steps, false)?;
     let summary = sess.train(rl_steps)?;
     let report = sess.evaluate(2)?;

@@ -45,6 +45,12 @@ fn usage() -> ! {
            --no-is                  disable cross-stage IS correction\n\
            --pipeline               stage-pipelined execution (overlap\n\
                                     next rollout with the update)\n\
+           --async                  fully-async execution: continuous\n\
+                                    trajectory stream, consume-when-ready\n\
+                                    batches, mid-flight weight sync\n\
+           --max-staleness N        async only: weight syncs one engine\n\
+                                    assignment may survive (0 = pipelined-\n\
+                                    equivalent cut-all-at-sync)\n\
            --no-retain-kv           disable KV retention + affinity resume\n\
                                     routing (always re-prefill resumes)\n\
            --retain-kv-across-sync  keep retained KV valid across weight\n\
@@ -81,7 +87,7 @@ fn usage() -> ! {
            --once                   exit after the first router disconnects\n\
            --crash-after-events N   chaos: kill the process (exit 9) after\n\
                                     forwarding exactly N event frames\n\
-           --preset <paper|scaled-small|scaled-tiny|sync-baseline|pipelined-small>"
+           --preset <paper|scaled-small|scaled-tiny|sync-baseline|pipelined-small|async-small>"
     );
     std::process::exit(2);
 }
@@ -117,6 +123,12 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if args.flag("pipeline") {
         cfg.rollout.pipeline = true;
+    }
+    if args.flag("async") {
+        cfg.set("rollout.execution", "async")?;
+    }
+    if let Some(s) = args.get("max-staleness") {
+        cfg.set("rollout.max_staleness", s)?;
     }
     if args.flag("no-retain-kv") {
         cfg.rollout.retain_kv = false;
@@ -166,6 +178,7 @@ fn run() -> Result<()> {
             "no-is",
             "no-eval",
             "pipeline",
+            "async",
             "no-retain-kv",
             "retain-kv-across-sync",
             "no-prefix-sharing",
@@ -189,14 +202,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let sft_steps = args.get_usize("sft-steps", 100)?;
     let steps = cfg.train.steps;
     println!(
-        "== copris train: model={} mode={} N'={} B={} G={} IS={} pipeline={} transport={} steps={steps} ==",
+        "== copris train: model={} mode={} N'={} B={} G={} IS={} exec={} transport={} steps={steps} ==",
         cfg.model,
         cfg.rollout.mode.name(),
         cfg.rollout.concurrency,
         cfg.rollout.batch_prompts,
         cfg.rollout.group_size,
         cfg.rollout.importance_sampling,
-        cfg.rollout.pipeline,
+        cfg.rollout.exec_mode().name(),
         cfg.router.transport.name(),
     );
     let mut sess = RlSession::build(cfg)?;

@@ -31,7 +31,7 @@ use crate::engine::{
 /// Protocol version carried in the `Hello`/`HelloAck` handshake; bump on
 /// any wire-format change so mismatched binaries refuse to pair instead of
 /// mis-decoding each other.
-pub const PROTO_VERSION: u32 = 1;
+pub const PROTO_VERSION: u32 = 2;
 
 /// Upper bound on a single frame's payload (1 GiB). Big enough for a full
 /// `SetParams` weight broadcast; small enough that a corrupt length prefix
@@ -275,6 +275,7 @@ const CMD_STOP_GENERATION: u8 = 2;
 const CMD_RELEASE_RETAINED: u8 = 3;
 const CMD_RELEASE_PREFIX: u8 = 4;
 const CMD_SHUTDOWN: u8 = 5;
+const CMD_STOP_REQUEST: u8 = 6;
 
 const EV_DONE: u8 = 0;
 const EV_TRACE: u8 = 1;
@@ -381,6 +382,11 @@ fn put_cmd(buf: &mut Vec<u8>, cmd: &EngineCmd) {
             put_u64(buf, *key);
         }
         EngineCmd::Shutdown => put_u8(buf, CMD_SHUTDOWN),
+        EngineCmd::StopRequest { request_id, retain } => {
+            put_u8(buf, CMD_STOP_REQUEST);
+            put_u64(buf, *request_id);
+            put_bool(buf, *retain);
+        }
     }
 }
 
@@ -563,6 +569,9 @@ fn get_cmd(r: &mut Reader) -> Result<EngineCmd> {
         }
         CMD_RELEASE_PREFIX => EngineCmd::ReleasePrefix { key: r.u64()? },
         CMD_SHUTDOWN => EngineCmd::Shutdown,
+        CMD_STOP_REQUEST => {
+            EngineCmd::StopRequest { request_id: r.u64()?, retain: r.boolean()? }
+        }
         t => bail!("wire: unknown command tag {t}"),
     })
 }
@@ -761,12 +770,16 @@ mod tests {
     }
 
     fn gen_cmd(rng: &mut Rng) -> EngineCmd {
-        match rng.next_u64() % 6 {
+        match rng.next_u64() % 7 {
             0 => EngineCmd::Assign(gen_work_item(rng)),
             1 => EngineCmd::SetParams {
                 version: rng.next_u64(),
                 params: Arc::new((0..(rng.next_u64() % 64)).map(|_| rng.next_f32()).collect()),
                 invalidate_retained: rng.next_f64() < 0.5,
+            },
+            6 => EngineCmd::StopRequest {
+                request_id: rng.next_u64(),
+                retain: rng.next_f64() < 0.5,
             },
             2 => EngineCmd::StopGeneration { retain: rng.next_f64() < 0.5 },
             3 => EngineCmd::ReleaseRetained { request_id: rng.next_u64(), token: rng.next_u64() },

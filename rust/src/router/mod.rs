@@ -47,7 +47,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::RouterConfig;
-use crate::engine::{EngineCmd, EngineEvent, EnginePool};
+use crate::engine::{EngineCmd, EngineEvent, EnginePool, PoolApi};
 use crate::net::wire::{self, WireMsg, PROTO_VERSION};
 
 pub use table::{ReplicaHealth, RetainedRef, RouteDecision, RoutingTable};
@@ -228,6 +228,36 @@ impl RouterPool {
             Inner::Local(p) => p.shutdown(),
             Inner::Remote(p) => p.shutdown(),
         }
+    }
+}
+
+impl PoolApi for RouterPool {
+    fn engines(&self) -> usize {
+        RouterPool::engines(self)
+    }
+    fn total_slots(&self) -> usize {
+        RouterPool::total_slots(self)
+    }
+    fn send(&self, engine: usize, cmd: EngineCmd) {
+        RouterPool::send(self, engine, cmd)
+    }
+    fn try_next(&self) -> Option<EngineEvent> {
+        RouterPool::try_next(self)
+    }
+    fn try_next_checked(&self) -> Result<Option<EngineEvent>, RecvTimeoutError> {
+        RouterPool::try_next_checked(self)
+    }
+    fn next_before(&self, deadline: Instant) -> Result<EngineEvent, RecvTimeoutError> {
+        RouterPool::next_before(self, deadline)
+    }
+    fn broadcast_params(&self, version: u64, params: Arc<Vec<f32>>, invalidate_retained: bool) {
+        RouterPool::broadcast_params(self, version, params, invalidate_retained)
+    }
+    fn stop_generation_all_with(&self, retain: bool) {
+        RouterPool::stop_generation_all_with(self, retain)
+    }
+    fn shutdown(self) {
+        RouterPool::shutdown(self)
     }
 }
 

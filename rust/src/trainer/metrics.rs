@@ -90,6 +90,9 @@ impl MetricsLog {
             .int("requests_arrived", rollout.requests_arrived as i64)
             .int("requests_shed", rollout.requests_shed as i64)
             .int("queue_depth_peak", rollout.queue_depth_peak as i64)
+            .int("staleness_terminations", rollout.staleness_terminations as i64)
+            .int("active_terminations", rollout.active_terminations as i64)
+            .int("staging_occupancy_peak", rollout.staging_occupancy_peak as i64)
             .num("slo_e2e_p50_ticks", rollout.slo_e2e_p50_ticks)
             .num("slo_e2e_p99_ticks", rollout.slo_e2e_p99_ticks)
             .num("goodput_rps", rollout.goodput_rps)

@@ -14,8 +14,10 @@
 use std::io::{BufRead, BufReader};
 use std::net::TcpListener;
 use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use copris::config::{Config, RolloutMode, TransportKind};
+use copris::config::{Config, ExecMode, RolloutMode, TransportKind};
 use copris::coordinator::{Coordinator, OpenLoopRequest, RolloutOutput};
 use copris::engine::{EnginePool, MockBackend, SamplingParams};
 use copris::loadgen::{ArrivalGen, ArrivalProcess, TenantMix};
@@ -401,6 +403,60 @@ fn fault_sweep_no_trajectory_lost_or_duplicated() {
             Ok(())
         },
     );
+}
+
+/// Fully-async stream chaos (tentpole acceptance): an engine dies mid-
+/// stream. The stream must keep delivering exact-B batches of complete
+/// groups on the survivor with no trajectory lost or duplicated (every
+/// done id and group id unique across the whole stream), the failure
+/// recorded in the window stats, and the bounded-staleness invariant
+/// intact throughout the recovery.
+#[test]
+fn crashed_engine_mid_async_stream_conserves_trajectories() {
+    let mut cfg = chaos_cfg(RolloutMode::Copris);
+    cfg.rollout.execution = ExecMode::Async;
+    cfg.rollout.max_staleness = 1;
+    let plans = vec![FaultPlan { op: FaultOp::Decode, at_call: 6, kind: FaultKind::Fatal }];
+    let mut coord = Coordinator::new(spawn_faulty(&cfg, 2, 6, 8, 1, plans), cfg.clone(), MAX_SEQ);
+    coord.sync_weights(1, Arc::new(vec![1.0f32]));
+    let mut ds = Dataset::train(cfg.train.seed);
+    coord.begin_async(&mut ds).unwrap();
+    let (b, g) = (cfg.rollout.batch_prompts, cfg.rollout.group_size);
+    let mut seen_groups: Vec<u64> = Vec::new();
+    let mut seen_ids: Vec<u64> = Vec::new();
+    let mut failures = 0usize;
+    for version in 2..6u64 {
+        while !coord
+            .pump_async(&mut ds, Instant::now() + Duration::from_secs(60))
+            .unwrap()
+        {}
+        let out = coord.take_async_batch().unwrap();
+        assert_eq!(out.groups.len(), b, "exact-B delivery under chaos");
+        for grp in &out.groups {
+            assert!(grp.done.len() >= g, "incomplete group harvested");
+            seen_groups.push(grp.group_id);
+            for t in &grp.done {
+                assert!(t.complete && t.invariant_ok(), "bad trajectory {}", t.id);
+                for seg in &t.segments {
+                    assert!(seg.staleness() <= 1, "staleness bound violated under chaos");
+                }
+                seen_ids.push(t.id);
+            }
+        }
+        failures += out.stats.engine_failures;
+        coord.prepare_sync(version).unwrap();
+        coord.sync_weights(version, Arc::new(vec![1.0f32]));
+        coord.resume_refill(&mut ds).unwrap();
+    }
+    assert!(failures >= 1, "injected fault never fired");
+    for ids in [&mut seen_groups, &mut seen_ids] {
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "a group or trajectory was delivered twice");
+    }
+    coord.abort_stage().unwrap();
+    coord.shutdown();
 }
 
 // ---------------------------------------------------------------------------

@@ -316,7 +316,7 @@ fn prop_kv_budget_preemption_preserves_correctness() {
         |rng: &mut Rng| (30 + rng.below(60) as usize, rng.next_u64() % 997),
         |&(kv_budget, seed)| {
             let mut cfg = base_cfg(RolloutMode::Copris, 8, seed);
-            cfg.engine.kv_budget_tokens = kv_budget;
+            cfg.engine.kv_budget_blocks = kv_budget.div_ceil(cfg.engine.kv_block_size.max(1));
             let mut coord = mock_coordinator(cfg, 10, 20);
             let mut ds = Dataset::train(seed);
             let out = coord

@@ -20,13 +20,16 @@
 //!   comparison without revisiting that bound.
 //!
 //! Plus: the eval-isolation fix (training partials never stolen by
-//! `run_fixed_sync`), the `RolloutStats::resumed` fix, and the pipelined
+//! `run_fixed_sync`), the `RolloutStats::resumed` fix, the pipelined
 //! mode's exact-B delivery / multi-segment behaviour-logprob / wall-clock
-//! overlap win.
+//! overlap win, and the fully-async stream's correctness pins: staleness-0
+//! async ≡ the pipelined stage sequence bit-for-bit, and the bounded-
+//! staleness invariant (no segment spans more than `max_staleness` syncs).
 
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use copris::config::{Config, RolloutMode};
+use copris::config::{Config, ExecMode, RolloutMode};
 use copris::coordinator::{Coordinator, ReferenceCoordinator, RolloutOutput};
 use copris::engine::{EnginePool, MockBackend, SamplingParams};
 use copris::exp::pipesim::{run as pipesim, PipeSimOpts};
@@ -339,4 +342,142 @@ fn pipelined_version_lag_trajectories_carry_multi_segment_behav_lp() {
     assert!(summary.lagged_trajectories >= multi_segment);
     assert!(summary.partials_buffered > 0);
     assert!(summary.resumed > 0);
+}
+
+// ------------------------------------------------------- fully-async stream
+
+fn async_cfg(max_staleness: usize) -> Config {
+    let mut cfg = golden_cfg(RolloutMode::Copris);
+    cfg.rollout.execution = ExecMode::Async;
+    cfg.rollout.max_staleness = max_staleness;
+    cfg
+}
+
+/// Tentpole acceptance pin: **staleness-0 async is bit-identical to the
+/// pipelined stage sequence.** At S = 0 every `prepare_sync` cuts ALL
+/// in-flight work through the same stop-and-drain machinery that stage
+/// early-termination uses, so the async schedule (pump → take → cut →
+/// sync → refill) collapses to exactly the pipelined schedule with the
+/// sync landing between stages — i.e. the serial CoPRIS stage sequence,
+/// which the pipelined driver reproduces per the goldens above.
+///
+/// Unlike the driver-vs-reference goldens, weight syncs DO happen between
+/// batches here. The determinism trick is constant params: every sync
+/// broadcasts the same value, so the mock backend's `params_epoch` never
+/// changes and token scripts stay purely prompt-determined — a cut landing
+/// at a timing-dependent position resumes to the same final stream, and
+/// 1 engine × 1 slot keeps completion order equal to dispatch order.
+#[test]
+fn async_staleness_zero_bit_identical_to_pipelined() {
+    const STEPS: usize = 4;
+    let params = Arc::new(vec![1.0f32]);
+
+    // Pipelined-equivalent arm: stage → sync → stage, constant params.
+    let cfg = golden_cfg(RolloutMode::Copris);
+    let mut pip = Coordinator::new(
+        spawn_pool(1, 1, cfg.train.seed, 4, 6, 200),
+        cfg.clone(),
+        MAX_SEQ,
+    );
+    pip.sync_weights(1, params.clone());
+    let mut ds_p = Dataset::train(cfg.train.seed);
+    let mut want = Vec::new();
+    for version in 2..2 + STEPS as u64 {
+        let out = pip.rollout_stage(&mut ds_p).unwrap();
+        want.push(fingerprint(&out));
+        pip.sync_weights(version, params.clone());
+    }
+    pip.shutdown();
+
+    // Async arm at S = 0: one never-quiescing stream; after each taken
+    // batch, a full staleness cut + sync + refill.
+    let acfg = async_cfg(0);
+    let mut asy = Coordinator::new(
+        spawn_pool(1, 1, acfg.train.seed, 4, 6, 200),
+        acfg.clone(),
+        MAX_SEQ,
+    );
+    asy.sync_weights(1, params.clone());
+    let mut ds_a = Dataset::train(acfg.train.seed);
+    asy.begin_async(&mut ds_a).unwrap();
+    let mut cut_total = 0usize;
+    for (step, version) in (2..2 + STEPS as u64).enumerate() {
+        while !asy
+            .pump_async(&mut ds_a, Instant::now() + Duration::from_secs(60))
+            .unwrap()
+        {}
+        let out = asy.take_async_batch().unwrap();
+        assert_eq!(out.groups.len(), acfg.rollout.batch_prompts, "exact-B delivery");
+        assert_eq!(
+            fingerprint(&out),
+            want[step],
+            "async S=0 diverged from the pipelined stage sequence at batch {step}"
+        );
+        if step == 0 {
+            // Batch-ready fired at B staged groups — the occupancy gauge
+            // must have seen them.
+            assert!(
+                out.stats.staging_occupancy_peak >= acfg.rollout.batch_prompts,
+                "{:?}",
+                out.stats
+            );
+        }
+        cut_total += out.stats.staleness_terminations;
+        asy.prepare_sync(version).unwrap();
+        asy.sync_weights(version, params.clone());
+        asy.resume_refill(&mut ds_a).unwrap();
+    }
+    // Cut counts land in the window AFTER the take (stats travel with the
+    // batch); with N' = 4 kept full, every S=0 sync cuts in-flight work.
+    assert!(cut_total > 0, "S=0 syncs recorded no staleness terminations");
+    asy.abort_stage().unwrap();
+    asy.shutdown();
+}
+
+/// Bounded-staleness property: with `rollout.max_staleness = S`, no
+/// harvested segment may span more than S syncs — every segment of every
+/// trajectory satisfies `policy_version − dispatch_version ≤ S`, under
+/// multi-slot timing races, long scripts spanning windows, *varying*
+/// params (real weight updates), and the active (APRIL) cut policy.
+#[test]
+fn async_bounded_staleness_property() {
+    for s in [0usize, 1, 2] {
+        let mut cfg = async_cfg(s);
+        cfg.rollout.active_termination = true;
+        // Multi-slot + long scripts → work genuinely spans sync windows.
+        let mut coord = Coordinator::new(spawn_pool(1, 4, 9, 15, 20, 200), cfg.clone(), MAX_SEQ);
+        coord.sync_weights(1, Arc::new(vec![1.0f32]));
+        let mut ds = Dataset::train(9);
+        coord.begin_async(&mut ds).unwrap();
+        let mut cuts = 0usize;
+        for version in 2..6u64 {
+            while !coord
+                .pump_async(&mut ds, Instant::now() + Duration::from_secs(60))
+                .unwrap()
+            {}
+            let out = coord.take_async_batch().unwrap();
+            assert_eq!(out.groups.len(), cfg.rollout.batch_prompts);
+            for grp in &out.groups {
+                for t in &grp.done {
+                    assert!(t.complete && t.invariant_ok());
+                    for seg in &t.segments {
+                        assert!(
+                            seg.staleness() <= s as u64,
+                            "segment spans {} syncs > bound {s}",
+                            seg.staleness()
+                        );
+                    }
+                }
+            }
+            cuts += out.stats.staleness_terminations + out.stats.active_terminations;
+            coord.prepare_sync(version).unwrap();
+            coord.sync_weights(version, Arc::new(vec![version as f32]));
+            coord.resume_refill(&mut ds).unwrap();
+        }
+        if s == 0 {
+            assert!(cuts > 0, "S=0 stream never cut anything");
+        }
+        coord.abort_stage().unwrap();
+        coord.shutdown();
+    }
 }

@@ -33,6 +33,9 @@ cargo bench --manifest-path "$MANIFEST" --bench resume_affinity
 cargo bench --manifest-path "$MANIFEST" --bench kv_blocks
 cargo bench --manifest-path "$MANIFEST" --bench continuous_batching
 cargo bench --manifest-path "$MANIFEST" --bench sampler_simd
+# async_overlap contributes the serial / pipelined / fully-async wall-clock
+# comparison rows (per-step wall + staleness/active cut counters).
+cargo bench --manifest-path "$MANIFEST" --bench async_overlap
 # slo_harness contributes the open-loop SLO scoreboard rows (three
 # "kind":"deterministic" scenario rows gated exactly by
 # scripts/bench_check.py, plus one timing row under the legacy ±band).

@@ -43,6 +43,13 @@
 #                            a HARD `timeout` so a wedged socket or leaked
 #                            link thread fails the gate instead of hanging
 #                            it
+#   scripts/ci.sh --async    fully-async stream gate (the CI `async` job):
+#                            the staleness-0 bit-identity golden, the
+#                            bounded-staleness property, and the async
+#                            chaos conservation test, debug + release,
+#                            under a HARD `timeout` so a stuck stream
+#                            (lost batch-ready edge, refill deadlock)
+#                            fails the gate instead of hanging it
 # Unknown flags exit 2 with this usage instead of silently running full
 # tier-1.
 set -euo pipefail
@@ -50,7 +57,7 @@ ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 cd "$ROOT"
 
 usage() {
-  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd|--net]" >&2
+  echo "usage: scripts/ci.sh [--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd|--net|--async]" >&2
   echo "  (no flag = full tier-1: build + doc + clippy + test)" >&2
   echo "  --simd honors SIMD_ARM=native|scalar|both (default both)" >&2
 }
@@ -59,7 +66,7 @@ usage() {
 # with usage instead of silently running full tier-1.
 MODE="${1:-}"
 case "$MODE" in
-  ""|--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd|--net) ;;
+  ""|--fmt|--docs|--clippy|--chaos|--bench|--slo|--simd|--net|--async) ;;
   *)
     echo "ci: unknown flag $MODE" >&2
     usage
@@ -218,6 +225,32 @@ run_net() {
     cargo test -q --manifest-path "$MANIFEST" --test chaos_recovery killed_engine_host
 }
 
+run_async() {
+  # Fully-async stream gate: staleness-0 bit-identity vs the pipelined
+  # stage sequence, the bounded-staleness segment property, and trajectory
+  # conservation when an engine dies mid-stream. Both profiles (debug for
+  # the coordinator's debug_asserts, release for real drain/cut timing),
+  # each under a HARD cap — a lost batch-ready edge or a refill deadlock
+  # must fail loudly, never hang the pipeline.
+  echo "== async: compiling test targets (uncapped) =="
+  cargo test -q --no-run --manifest-path "$MANIFEST" \
+    --test rollout_golden --test chaos_recovery
+  cargo test --release -q --no-run --manifest-path "$MANIFEST" \
+    --test rollout_golden --test chaos_recovery
+  echo "== async: rollout_golden async_ goldens (debug, 10 min cap) =="
+  timeout -k 10 600 \
+    cargo test -q --manifest-path "$MANIFEST" --test rollout_golden async_
+  echo "== async: chaos_recovery async-stream conservation (debug, 10 min cap) =="
+  timeout -k 10 600 \
+    cargo test -q --manifest-path "$MANIFEST" --test chaos_recovery async_stream
+  echo "== async: rollout_golden async_ goldens (release, 10 min cap) =="
+  timeout -k 10 600 \
+    cargo test --release -q --manifest-path "$MANIFEST" --test rollout_golden async_
+  echo "== async: chaos_recovery async-stream conservation (release, 10 min cap) =="
+  timeout -k 10 600 \
+    cargo test --release -q --manifest-path "$MANIFEST" --test chaos_recovery async_stream
+}
+
 run_full() {
   # NOTE: fmt stays a separate gate (scripts/ci.sh --fmt / the CI `fmt`
   # job, blocking) rather than part of full tier-1, so formatting drift
@@ -260,7 +293,7 @@ case "$MODE" in
     ;;
   --bench)
     run_full
-    echo "== micro + resume_affinity + kv_blocks + continuous_batching + sampler_simd + slo_harness benches → BENCH_micro.json =="
+    echo "== micro + resume_affinity + kv_blocks + continuous_batching + sampler_simd + async_overlap + slo_harness benches → BENCH_micro.json =="
     "$ROOT/scripts/bench_micro.sh"
     echo "ci: OK"
     ;;
@@ -271,6 +304,10 @@ case "$MODE" in
   --net)
     run_net
     echo "ci: net OK"
+    ;;
+  --async)
+    run_async
+    echo "ci: async OK"
     ;;
   "")
     run_full
